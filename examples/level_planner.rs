@@ -1,0 +1,49 @@
+//! Regenerate the paper's Table 6 from the level planner, and demonstrate
+//! Observation 1/2: level savings shrink every operator's cost, and only
+//! *structural* linearization actually saves levels.
+//!
+//! Run: cargo run --release --example level_planner
+
+use lingcn::he_infer::level_plan::paper_table6;
+use lingcn::linearize::LinearizationPlan;
+use lingcn::util::ascii_table;
+
+fn main() {
+    let rows: Vec<Vec<String>> = paper_table6()
+        .into_iter()
+        .map(|(name, p)| {
+            vec![
+                name,
+                p.n.to_string(),
+                p.log_q.to_string(),
+                p.scale_bits.to_string(),
+                p.q0_bits.to_string(),
+                p.levels.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "Paper Table 6 (recomputed)\n{}",
+        ascii_table(&["Model", "N", "Q", "p", "q0", "Mult Level"], &rows)
+    );
+
+    println!("\nObservation 2 (Fig. 3): per-node act-level budget");
+    let mut rng = lingcn::util::Rng::seed_from_u64(7);
+    for (name, plan) in [
+        ("full (6 acts)", LinearizationPlan::full(3, 25)),
+        ("layer-wise, 3 kept", LinearizationPlan::layer_wise(3, 25, 3)),
+        ("structural mixed, 3 kept", LinearizationPlan::structural_mixed(3, 25, 3)),
+        (
+            "unstructured 50%",
+            LinearizationPlan::unstructured_random(3, 25, 0.5, &mut rng),
+        ),
+    ] {
+        println!(
+            "  {:26} level budget = {}   mean compute/node = {:.2}   structural = {}",
+            name,
+            plan.act_level_budget(),
+            plan.mean_act_count(),
+            plan.is_structural()
+        );
+    }
+}

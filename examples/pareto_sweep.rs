@@ -1,0 +1,52 @@
+//! Figure 1 on *our* trained artifacts: the accuracy/latency Pareto
+//! frontier of the synthetic-surrogate students (accuracy measured by
+//! `make artifacts`), with encrypted latency predicted by the cost model
+//! at the paper-scale HE parameters. Also prints the router's frontier
+//! selections across latency budgets.
+//!
+//! Run: cargo run --release --example pareto_sweep
+
+use lingcn::costmodel::OpCostModel;
+use lingcn::util::ascii_table;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(dir.join("metrics.json").exists(), "run `make artifacts` first");
+    let cost = OpCostModel::reference();
+    let (router, _exec) = lingcn::coordinator::from_artifacts(dir, &cost)?;
+
+    let rows: Vec<Vec<String>> = router
+        .variants()
+        .iter()
+        .map(|v| {
+            vec![
+                v.name.clone(),
+                v.nl.to_string(),
+                format!("{:.3}", v.accuracy),
+                format!("{:.0}", v.latency_s),
+            ]
+        })
+        .collect();
+    println!(
+        "Trained variants (synthetic surrogate accuracy, paper-scale predicted latency)\n{}",
+        ascii_table(&["variant", "NL", "test acc", "pred latency (s)"], &rows)
+    );
+
+    let frontier: Vec<String> = router
+        .pareto_frontier()
+        .iter()
+        .map(|v| v.name.clone())
+        .collect();
+    println!("\nPareto frontier: {frontier:?}");
+
+    println!("\nrouter selections by latency budget:");
+    for budget in [1500.0, 2500.0, 3500.0, 5000.0] {
+        let v = router.select(Some(budget));
+        println!(
+            "  budget {budget:6.0}s → {} (acc {:.3}, {:.0}s)",
+            v.name, v.accuracy, v.latency_s
+        );
+    }
+    Ok(())
+}

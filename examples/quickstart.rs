@@ -1,0 +1,83 @@
+//! Quickstart: end-to-end private inference on a trained LinGCN artifact.
+//!
+//!   1. load a structurally-linearized polynomial student model
+//!      (`make artifacts` trains it with Algorithm 2);
+//!   2. client encrypts a skeleton clip under CKKS (AMA packing);
+//!   3. server runs the encrypted STGCN forward (fused node-wise
+//!      polynomial activations, BSGS rotations) without ever decrypting;
+//!   4. client decrypts the logits and compares with the plaintext path.
+//!
+//! Toy HE parameters (N=2^11, insecure) keep this interactive; the level
+//! chain is exactly what the paper's Table 6 policy dictates for the model.
+//!
+//! Run: cargo run --release --example quickstart
+
+use lingcn::ckks::CkksParams;
+use lingcn::graph::Graph;
+use lingcn::he_infer::PrivateInferenceSession;
+use lingcn::stgcn::StgcnModel;
+use lingcn::util::tensorio::TensorFile;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(dir.join("metrics.json").exists(), "run `make artifacts` first");
+
+    let model = StgcnModel::load(&dir.join("model_nl2.lgt"), Graph::ntu_rgbd())?;
+    let nl = model.effective_nonlinear_layers()?;
+    println!(
+        "model: {} layers, {} effective non-linear layers, {} params-ish",
+        model.layers.len(),
+        nl,
+        model.layers.len() * model.c_max() * model.c_max()
+    );
+
+    let levels = 2 * model.layers.len() + 2 + nl;
+    let params = CkksParams {
+        n: 1 << 11,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true, // toy ring degree for interactivity
+    };
+    println!("CKKS: N=2^11, levels={levels} (Table 6 policy), scale=2^33");
+
+    let t0 = Instant::now();
+    let sess = PrivateInferenceSession::new(&model, params, 2024)?;
+    println!("keygen + galois keys: {:?}", t0.elapsed());
+
+    let ex = TensorFile::load(&dir.join("example_input.lgt"))?;
+    let x = &ex.get("x")?.data;
+    let label = ex.get("label")?.data[0] as usize;
+
+    let t1 = Instant::now();
+    let input = sess.encrypt_input(&model, x)?;
+    println!("client encrypt ({} ciphertexts): {:?}", input.len(), t1.elapsed());
+
+    let t2 = Instant::now();
+    let out = sess.infer(&model, &input)?;
+    let he_time = t2.elapsed();
+    let counts = sess.engine.eval.counters.snapshot();
+    println!(
+        "server encrypted forward: {:?}  (Rot={} PMult={} CMult={} Add={})",
+        he_time, counts.rot, counts.pmult, counts.cmult, counts.add
+    );
+
+    let got = sess.decrypt_logits(&model, &out);
+    let want = model.forward(x)?;
+    let argmax = |v: &[f64]| {
+        v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    };
+    println!("\nencrypted logits: {:?}", &got[..4.min(got.len())]);
+    println!("plaintext logits: {:?}", &want[..4.min(want.len())]);
+    println!(
+        "predicted class: encrypted={} plaintext={} (true label {label})",
+        argmax(&got),
+        argmax(&want)
+    );
+    anyhow::ensure!(argmax(&got) == argmax(&want), "decision mismatch!");
+    println!("OK: encrypted inference matches the plaintext decision.");
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""Ablation studies (paper Section 4.3, Figure 6), run as
+``python -m compile.ablation --study {sequence,layerwise,eta,phi,all}``.
+
+* ``sequence``  — Fig. 6a: linearize→replace (LinGCN order) vs
+                  replace→linearize (inverted order);
+* ``layerwise`` — Fig. 6b: node-wise structural vs layer-wise linearization;
+* ``eta``       — Fig. 6c: KL-distillation weight sweep;
+* ``phi``       — Fig. 6d: feature-map-penalty weight sweep.
+
+Results land in ``artifacts/ablations.json`` (EXPERIMENTS.md records the
+shape comparison against the paper's findings).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as Dt
+from . import linearize as L
+from . import model as M
+from . import train as T
+
+CHANNELS = [8, 8]
+CLASSES = 8
+K = 3
+T_FRAMES = 16
+C_IN = 4
+
+
+def setup(n_clips=320, seed=0):
+    a_hat = jnp.array(Dt.normalized_adjacency(Dt.NTU_V, Dt.NTU_EDGES), jnp.float32)
+    xs, ys = Dt.make_skeleton_dataset(n_clips, t=T_FRAMES, c=C_IN, classes=CLASSES, seed=seed)
+    data = Dt.train_test_split(jnp.array(xs), np.array(ys))
+    teacher, tstats = T.train_teacher(
+        a_hat, data[0], data[1], data[2], data[3], CHANNELS, CLASSES, K, epochs=20
+    )
+    return a_hat, data, teacher, tstats
+
+
+def study_sequence(a_hat, data, teacher, nls=(3, 2, 1), epochs=10):
+    """Fig. 6a: replacement order matters."""
+    xtr, ytr, xte, yte = data
+    out = {}
+    for nl in nls:
+        # LinGCN order: linearize (on ReLU model) → replace+distill
+        w_lin, h, _ = T.linearize(a_hat, xtr, ytr, xte, yte, teacher, nl, epochs=4)
+        _, s1 = T.replace_and_distill(
+            a_hat, xtr, ytr, xte, yte, w_lin, teacher, h, epochs=epochs
+        )
+        # inverted order: replace+distill the FULL model first, then
+        # linearize the polynomial model directly (no second distill)
+        h_full = M.full_indicators(len(CHANNELS), Dt.NTU_V)
+        poly_full, _ = T.replace_and_distill(
+            a_hat, xtr, ytr, xte, yte, teacher, teacher, jnp.array(h_full), epochs=epochs
+        )
+        _, h2, _ = T.linearize(a_hat, xtr, ytr, xte, yte, poly_full, nl, epochs=4)
+        acc_inverted = float(M.accuracy(poly_full, a_hat, xte, yte, jnp.array(h2), "poly"))
+        out[nl] = {"lingcn_order": s1["test_acc"], "inverted_order": acc_inverted}
+    return out
+
+
+def study_layerwise(a_hat, data, teacher, nls=(4, 3, 2), epochs=10):
+    """Fig. 6b: node-wise structural vs layer-wise linearization."""
+    xtr, ytr, xte, yte = data
+    out = {}
+    for nl in nls:
+        w_lin, h_node, _ = T.linearize(a_hat, xtr, ytr, xte, yte, teacher, nl, epochs=4)
+        _, s_node = T.replace_and_distill(
+            a_hat, xtr, ytr, xte, yte, w_lin, teacher, h_node, epochs=epochs
+        )
+        # layer-wise: whole activation layers kept in network order
+        h_layer = np.zeros((len(CHANNELS), 2, Dt.NTU_V), np.float32)
+        budget = nl
+        for li in range(len(CHANNELS)):
+            for pos in range(2):
+                if budget > 0:
+                    h_layer[li, pos] = 1.0
+                    budget -= 1
+        _, s_layer = T.replace_and_distill(
+            a_hat, xtr, ytr, xte, yte, teacher, teacher, jnp.array(h_layer), epochs=epochs
+        )
+        out[nl] = {"node_wise": s_node["test_acc"], "layer_wise": s_layer["test_acc"]}
+    return out
+
+
+def study_hyper(a_hat, data, teacher, param: str, values, epochs=10):
+    """Fig. 6c/6d: η and φ sweeps on the full-polynomial student."""
+    xtr, ytr, xte, yte = data
+    h_full = M.full_indicators(len(CHANNELS), Dt.NTU_V)
+    out = {}
+    for v in values:
+        kwargs = {"eta": 0.2, "phi": 200.0, param: v}
+        _, stats = T.replace_and_distill(
+            a_hat, xtr, ytr, xte, yte, teacher, teacher, jnp.array(h_full),
+            epochs=epochs, **kwargs,
+        )
+        out[str(v)] = stats["test_acc"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--study", default="all",
+                    choices=["sequence", "layerwise", "eta", "phi", "all"])
+    ap.add_argument("--out", default="../artifacts/ablations.json")
+    ap.add_argument("--epochs", type=int, default=10)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    a_hat, data, teacher, tstats = setup()
+    print(f"teacher acc {tstats['test_acc']:.3f}")
+    path = Path(args.out)
+    results = json.loads(path.read_text()) if path.exists() else {}
+    results["teacher_acc"] = tstats["test_acc"]
+
+    if args.study in ("sequence", "all"):
+        results["sequence"] = study_sequence(a_hat, data, teacher, epochs=args.epochs)
+        print("sequence:", results["sequence"])
+    if args.study in ("layerwise", "all"):
+        results["layerwise"] = study_layerwise(a_hat, data, teacher, epochs=args.epochs)
+        print("layerwise:", results["layerwise"])
+    if args.study in ("eta", "all"):
+        results["eta"] = study_hyper(a_hat, data, teacher, "eta",
+                                     [0.1, 0.2, 0.3, 0.4, 0.5], epochs=args.epochs)
+        print("eta:", results["eta"])
+    if args.study in ("phi", "all"):
+        results["phi"] = study_hyper(a_hat, data, teacher, "phi",
+                                     [100.0, 200.0, 300.0, 400.0, 500.0], epochs=args.epochs)
+        print("phi:", results["phi"])
+
+    results["wallclock_s"] = time.time() - t0
+    path.parent.mkdir(exist_ok=True)
+    path.write_text(json.dumps(results, indent=1))
+    print(f"wrote {path} in {results['wallclock_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

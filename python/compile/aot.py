@@ -1,0 +1,180 @@
+"""AOT build entrypoint: `make artifacts` ⇒ `python -m compile.aot`.
+
+Runs the full LinGCN pipeline (Algorithm 2) on the synthetic skeleton
+dataset, then emits into `artifacts/`:
+
+* `model_nl{K}.lgt`   — student weights + linearization plan per non-linear
+                         budget (tensor-text, for the rust HE engine);
+* `teacher.lgt`        — the all-ReLU teacher (plaintext reference only);
+* `model.hlo.txt`      — the *student* forward pass (Pallas kernels inlined,
+                         interpret mode) lowered to HLO text for the rust
+                         PJRT runtime — the plaintext serving path;
+* `metrics.json`       — accuracies + training curves (Tables 1-4 accuracy
+                         columns, Figs. 7/8 curves);
+* `example_input.lgt`  — one test clip + its label + reference logits, so
+                         rust integration tests can replay it.
+
+HLO *text* (not serialized proto) is the interchange format — jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as Dt
+from . import export as E
+from . import model as M
+from . import train as T
+
+# ------------------------------------------------------- toy configuration
+# Scaled NTU surrogate (DESIGN.md substitution #4): same 25-joint graph,
+# fewer frames/channels so the full pipeline runs on one CPU core.
+T_FRAMES = 16
+C_IN = 4  # (x, y, z) + zero pad to a power of two for AMA alignment
+CHANNELS = [8, 8]
+CLASSES = 8
+KERNEL = 3
+N_CLIPS = 400
+TARGET_NLS = [4, 3, 2, 1]
+TEACHER_EPOCHS = 30
+LIN_EPOCHS = 8
+POLY_EPOCHS = 20
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides weight tensors as `{...}`,
+    # which the xla_extension 0.5.1 text parser silently mis-parses.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_student_forward(params, a_hat, h, v, c_in, t):
+    """Lower the polynomial student forward (single clip) with the Pallas
+    kernels on the hot path."""
+
+    def fwd(x):
+        return (M.forward_single(params, a_hat, x, h, mode="poly", use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((v, c_in, t), jnp.float32)
+    return jax.jit(fwd).lower(spec)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI")
+    args = ap.parse_args()
+    out_hlo = Path(args.out)
+    art = out_hlo.parent
+    art.mkdir(parents=True, exist_ok=True)
+
+    teacher_epochs, poly_epochs, lin_epochs, n_clips = (
+        (6, 6, 3, 160) if args.quick else (TEACHER_EPOCHS, POLY_EPOCHS, LIN_EPOCHS, N_CLIPS)
+    )
+
+    t0 = time.time()
+    a_hat = jnp.array(Dt.normalized_adjacency(Dt.NTU_V, Dt.NTU_EDGES), jnp.float32)
+    xs, ys = Dt.make_skeleton_dataset(n_clips, t=T_FRAMES, c=C_IN, classes=CLASSES, seed=0)
+    data = Dt.train_test_split(jnp.array(xs), np.array(ys))
+    xtr, ytr, xte, yte = data
+
+    teacher, tstats, students = T.lingcn_pipeline(
+        a_hat,
+        data,
+        CHANNELS,
+        CLASSES,
+        KERNEL,
+        TARGET_NLS,
+        teacher_epochs=teacher_epochs,
+        lin_epochs=lin_epochs,
+        poly_epochs=poly_epochs,
+    )
+
+    # ---- export weights ------------------------------------------------
+    h_full = M.full_indicators(len(CHANNELS), Dt.NTU_V)
+    E.export_student(
+        art / "teacher.lgt",
+        teacher,
+        np.array(h_full),
+        T_FRAMES,
+        C_IN,
+        KERNEL,
+        tstats["test_acc"],
+        "teacher-relu",
+    )
+    metrics = {
+        "dataset": {
+            "kind": "synthetic-ntu-surrogate",
+            "clips": n_clips,
+            "t": T_FRAMES,
+            "c_in": C_IN,
+            "classes": CLASSES,
+            "v": Dt.NTU_V,
+        },
+        "teacher": {"test_acc": tstats["test_acc"], "curve": tstats["curve"]},
+        "students": {},
+    }
+    for nl, s in students.items():
+        E.export_student(
+            art / f"model_nl{nl}.lgt",
+            s["params"],
+            s["h"],
+            T_FRAMES,
+            C_IN,
+            KERNEL,
+            s["distill"]["test_acc"],
+            f"lingcn-nl{nl}",
+        )
+        metrics["students"][str(nl)] = {
+            "test_acc": s["distill"]["test_acc"],
+            "linearize_curve": s["linearize"]["curve"],
+            "distill_curve": s["distill"]["curve"],
+            "h_per_layer": (np.array(s["h"]).sum(axis=2) / Dt.NTU_V).tolist(),
+        }
+
+    # ---- AOT-lower the best student (plaintext serving path) -----------
+    best_nl = max(students, key=lambda nl: students[nl]["distill"]["test_acc"])
+    best = students[best_nl]
+    lowered = lower_student_forward(
+        best["params"], a_hat, jnp.array(best["h"]), Dt.NTU_V, C_IN, T_FRAMES
+    )
+    hlo = to_hlo_text(lowered)
+    out_hlo.write_text(hlo)
+    metrics["aot"] = {"student_nl": best_nl, "hlo_chars": len(hlo)}
+
+    # ---- example clip + reference logits for rust tests ----------------
+    x0 = xte[0]
+    logits = np.array(
+        M.forward_single(best["params"], a_hat, x0, jnp.array(best["h"]), "poly")
+    )
+    E.write_tensorfile(
+        art / "example_input.lgt",
+        {"x": np.array(x0), "logits": logits, "label": np.array([float(yte[0])])},
+        {"nl": best_nl, "t": T_FRAMES, "c_in": C_IN},
+    )
+
+    metrics["wallclock_s"] = time.time() - t0
+    (art / "metrics.json").write_text(json.dumps(metrics, indent=1))
+    print(
+        f"artifacts written to {art} in {metrics['wallclock_s']:.0f}s "
+        f"(teacher {tstats['test_acc']:.3f}, best student nl={best_nl} "
+        f"{best['distill']['test_acc']:.3f})"
+    )
+
+
+if __name__ == "__main__":
+    main()

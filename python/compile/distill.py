@@ -1,0 +1,56 @@
+"""Two-level distillation for polynomial replacement (paper Eq. 5):
+
+L_p = (1-η)·CE(student, y)
+    + η·KL(student || teacher)
+    + (φ/2)·Σ_layers MSE(normalized student feature map,
+                         normalized teacher feature map)
+
+The KL term transfers the teacher's output distribution; the peer-wise
+normalized feature-map penalty (attention-transfer style, [52]) keeps the
+student's intermediate representations on the teacher's manifold — the
+paper's fix for the polynomial model's overfitting/divergence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+
+def kl_divergence(student_logits, teacher_logits):
+    """KL(teacher || student) batch mean (Hinton-style distillation)."""
+    pt = jax.nn.softmax(teacher_logits)
+    log_ps = jax.nn.log_softmax(student_logits)
+    log_pt = jax.nn.log_softmax(teacher_logits)
+    return (pt * (log_pt - log_ps)).sum(axis=1).mean()
+
+
+def feature_map_penalty(student_feats, teacher_feats):
+    """Σ_i MSE(F_s / ||F_s||₂, F_t / ||F_t||₂) over layers (batched)."""
+    total = 0.0
+    for fs, ft in zip(student_feats, teacher_feats):
+        ns = fs / (jnp.linalg.norm(fs.reshape(fs.shape[0], -1), axis=1)[:, None, None, None] + 1e-8)
+        nt = ft / (jnp.linalg.norm(ft.reshape(ft.shape[0], -1), axis=1)[:, None, None, None] + 1e-8)
+        total = total + ((ns - nt) ** 2).mean()
+    return total
+
+
+def distillation_loss(
+    student_params,
+    a_hat,
+    xs,
+    ys,
+    h,
+    teacher_logits,
+    teacher_feats,
+    eta: float,
+    phi: float,
+):
+    """Eq. 5. Teacher quantities are precomputed (frozen teacher)."""
+    logits, feats = M.forward_batch_with_features(student_params, a_hat, xs, h, mode="poly")
+    ce = M.cross_entropy(logits, ys)
+    kl = kl_divergence(logits, teacher_logits)
+    fm = feature_map_penalty(feats, teacher_feats)
+    return (1.0 - eta) * ce + eta * kl + 0.5 * phi * fm, (ce, kl, fm)

@@ -1,0 +1,66 @@
+"""Export trained models to the tensor-text interchange format consumed by
+the rust runtime (`rust/src/util/tensorio.rs` / `stgcn::StgcnModel::load`).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from . import model as M
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.17e}"
+
+
+def write_tensorfile(path: Path, tensors: dict, meta: dict) -> None:
+    lines = ["#lingcn-tensors v1"]
+    for k, v in sorted(meta.items()):
+        lines.append(f"meta {k} {v}")
+    for name, arr in sorted(tensors.items()):
+        arr = np.asarray(arr, dtype=np.float64)
+        dims = " ".join(str(d) for d in arr.shape)
+        lines.append(f"tensor {name} {arr.ndim} {dims}")
+        lines.append(" ".join(_fmt(v) for v in arr.ravel()))
+    Path(path).write_text("\n".join(lines) + "\n")
+
+
+def export_student(
+    path: Path,
+    params,
+    h,
+    t: int,
+    c_in: int,
+    k: int,
+    test_acc: float,
+    name: str,
+) -> None:
+    """Write a polynomial student model + its linearization plan."""
+    h = np.asarray(h)
+    tensors = {}
+    for li, lp in enumerate(params["layers"]):
+        tensors[f"layer{li}.gcn_w"] = lp["gcn_w"]
+        tensors[f"layer{li}.gcn_b"] = lp["gcn_b"]
+        tensors[f"layer{li}.tconv_w"] = lp["tconv_w"]
+        tensors[f"layer{li}.tconv_b"] = lp["tconv_b"]
+        for pos in (1, 2):
+            act = lp[f"act{pos}"]
+            tensors[f"layer{li}.h{pos}"] = h[li, pos - 1]
+            tensors[f"layer{li}.act{pos}_w2"] = act["w2"]
+            tensors[f"layer{li}.act{pos}_w1"] = act["w1"]
+            tensors[f"layer{li}.act{pos}_b"] = act["b"]
+    tensors["fc_w"] = params["fc_w"]
+    tensors["fc_b"] = params["fc_b"]
+    meta = {
+        "name": name,
+        "layers": len(params["layers"]),
+        "t": t,
+        "c_in": c_in,
+        "k": k,
+        "act_c": M.ACT_C,
+        "test_acc": f"{test_acc:.6f}",
+        "nl": int(round(float(h.sum() / h.shape[2]))),
+    }
+    write_tensorfile(path, tensors, meta)

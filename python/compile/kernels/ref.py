@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Each function is the mathematical definition with no tiling/layout tricks;
+`python/tests/test_kernels.py` asserts the Pallas implementations match
+these across hypothesis-swept shapes and dtypes, and the JAX model calls
+the Pallas versions so the same numerics flow into the AOT artifact.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gcn_spatial_ref(x, a_hat, w, b):
+    """Fused GCNConv: Â · (1×1-conv(x)) + bias.
+
+    x: [V, C_in, T], a_hat: [V, V], w: [C_out, C_in], b: [C_out]
+    returns [V, C_out, T]
+    """
+    conv = jnp.einsum("oc,vct->vot", w, x) + b[None, :, None]
+    return jnp.einsum("uv,vot->uot", a_hat, conv)
+
+
+def temporal_conv_ref(x, w, b):
+    """1×K temporal convolution, zero padded (same length).
+
+    x: [V, C_in, T], w: [C_out, C_in, K], b: [C_out]
+    returns [V, C_out, T]
+    """
+    k = w.shape[2]
+    half = k // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (half, half)))
+    t = x.shape[2]
+    out = jnp.zeros((x.shape[0], w.shape[0], t), dtype=x.dtype)
+    for kk in range(k):
+        out = out + jnp.einsum("oc,vct->vot", w[:, :, kk], xp[:, :, kk : kk + t])
+    return out + b[None, :, None]
+
+
+def poly_act_ref(x, w2, w1, b, h, c):
+    """Node-wise trainable polynomial activation with indicator (Eq. 4):
+
+    y[v] = h[v]·(c·w2[v]·x² + w1[v]·x + b[v]) + (1-h[v])·x
+
+    x: [V, C, T]; w2, w1, b, h: [V]; c: python float
+    """
+    poly = (
+        c * w2[:, None, None] * x * x
+        + w1[:, None, None] * x
+        + b[:, None, None]
+    )
+    return h[:, None, None] * poly + (1.0 - h[:, None, None]) * x
+
+
+def relu_or_identity_ref(x, h):
+    """Teacher-side masked ReLU: h·relu(x) + (1-h)·x (linearized slots)."""
+    return h[:, None, None] * jnp.maximum(x, 0.0) + (1.0 - h[:, None, None]) * x

@@ -1,0 +1,164 @@
+"""Layer-1 Pallas kernels for the STGCN hot spots.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's server
+side is CPU-bound HE, but its *model* compute (training/plaintext path) is
+dense linear algebra. We kernelize the three hot spots for TPU:
+
+* ``gcn_spatial`` — the fused Â·(X·Wᵀ) GCNConv. Two MXU-shaped matmuls per
+  grid step; the grid runs over T-tiles so each step's working set
+  (V×C_in×T_TILE block of X + V×V adjacency + C_out×C_in weight) fits VMEM.
+  BlockSpec expresses the HBM↔VMEM schedule the CUDA version would do with
+  threadblocks.
+* ``temporal_conv`` — 1×K sliding window, expressed as K shifted
+  MXU matmuls accumulated in VMEM; grid over T-tiles with a halo of K/2
+  frames on each side (materialized by padding the input once).
+* ``poly_act`` — the paper's node-wise second-order polynomial (Eq. 4), a
+  pure VPU elementwise kernel; grid over nodes so the per-node (w2, w1, b,
+  h) scalars are broadcast from SMEM-like prefetch.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and this path guarantees the lowered HLO is portable
+(see /opt/xla-example/README.md). Correctness is pinned to ``ref.py`` by
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM-friendly default tile over the frame axis. 128 matches the MXU lane
+# width; for toy T < 128 the tile collapses to T.
+T_TILE = 128
+
+
+def _t_tile(t: int) -> int:
+    """Largest divisor of t not exceeding T_TILE (so the grid tiles t
+    exactly; interpret-mode padding of partial blocks is not portable)."""
+    for cand in range(min(T_TILE, t), 0, -1):
+        if t % cand == 0:
+            return cand
+    return 1
+
+
+def gcn_spatial(x, a_hat, w, b):
+    """Fused GCNConv: Â · (1×1 conv (x)) + bias. Shapes as in ref."""
+    v, c_in, t = x.shape
+    c_out = w.shape[0]
+    tt = _t_tile(t)
+    grid = (t // tt,)
+
+    def kernel(x_ref, a_ref, w_ref, b_ref, o_ref):
+        xb = x_ref[...]  # [V, C_in, TT]
+        a = a_ref[...]  # [V, V]
+        ww = w_ref[...]  # [C_out, C_in]
+        bb = b_ref[...]  # [C_out]
+        # matmul 1 (MXU): channels — (V·TT, C_in) @ (C_in, C_out)
+        xt = xb.transpose(0, 2, 1).reshape(v * xb.shape[2], c_in)
+        conv = (xt @ ww.T).reshape(v, xb.shape[2], c_out) + bb[None, None, :]
+        # matmul 2 (MXU): node aggregation — (V, V) @ (V, TT·C_out)
+        agg = (a @ conv.reshape(v, -1)).reshape(v, xb.shape[2], c_out)
+        o_ref[...] = agg.transpose(0, 2, 1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, c_in, tt), lambda i: (0, 0, i)),
+            pl.BlockSpec((v, v), lambda i: (0, 0)),
+            pl.BlockSpec((c_out, c_in), lambda i: (0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((v, c_out, tt), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((v, c_out, t), x.dtype),
+        interpret=True,
+    )(x, a_hat, w, b)
+
+
+def temporal_conv(x, w, b):
+    """1×K temporal conv, zero padded. x: [V, C_in, T] → [V, C_out, T].
+
+    The input is padded once in HBM; each grid step loads a T-tile plus a
+    K-1 halo and accumulates K shifted matmuls in VMEM.
+    """
+    v, c_in, t = x.shape
+    c_out, _, k = w.shape
+    half = k // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (half, half)))
+    tt = _t_tile(t)
+    assert t % tt == 0, "frame count must be a multiple of the tile"
+    grid = (t // tt,)
+
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        # halo load: blocks overlap by K-1 frames, so the tile is sliced
+        # dynamically from the padded input (kept whole in "HBM"; on real
+        # TPU the compiler double-buffers the overlapping DMA windows)
+        i = pl.program_id(0)
+        xb = pl.load(
+            x_ref,
+            (slice(None), slice(None), pl.dslice(i * tt, tt + k - 1)),
+        )  # [V, C_in, TT + K - 1]
+        ww = w_ref[...]
+        bb = b_ref[...]
+        acc = jnp.zeros((v, c_out, tt), dtype=x.dtype)
+        for kk in range(k):
+            window = xb[:, :, kk : kk + tt]  # [V, C_in, TT]
+            xt = window.transpose(0, 2, 1).reshape(v * tt, c_in)
+            acc = acc + (xt @ ww[:, :, kk].T).reshape(v, tt, c_out).transpose(0, 2, 1)
+        o_ref[...] = acc + bb[None, :, None]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, c_in, t + k - 1), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c_out, c_in, k), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((v, c_out, tt), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((v, c_out, t), x.dtype),
+        interpret=True,
+    )(xp, w, b)
+
+
+def poly_act(x, w2, w1, b, h, c: float):
+    """Node-wise polynomial activation with indicator (Eq. 4). VPU kernel;
+    grid over nodes so per-node scalars broadcast once per step."""
+    v, ch, t = x.shape
+
+    def kernel(x_ref, w2_ref, w1_ref, b_ref, h_ref, o_ref):
+        xb = x_ref[...]  # [1, C, T]
+        w2v = w2_ref[0]
+        w1v = w1_ref[0]
+        bv = b_ref[0]
+        hv = h_ref[0]
+        poly = c * w2v * xb * xb + w1v * xb + bv
+        o_ref[...] = hv * poly + (1.0 - hv) * xb
+
+    return pl.pallas_call(
+        kernel,
+        grid=(v,),
+        in_specs=[
+            pl.BlockSpec((1, ch, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, ch, t), x.dtype),
+        interpret=True,
+    )(x, w2, w1, b, h)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_footprint_bytes(v: int, c_in: int, c_out: int, k: int, t: int, dtype_bytes: int = 4):
+    """Estimated per-step VMEM working set of the fused layer kernels —
+    the §Perf L1 metric (target ≤ 16 MiB for TPU v4)."""
+    tt = _t_tile(t)
+    gcn = (v * c_in * tt + v * v + c_out * c_in + 2 * v * c_out * tt) * dtype_bytes
+    tconv = (v * c_in * (tt + k - 1) + c_out * c_in * k + 2 * v * c_out * tt) * dtype_bytes
+    return max(gcn, tconv)

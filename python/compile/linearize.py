@@ -1,0 +1,68 @@
+"""Differentiable structural linearization (paper Section 3.2).
+
+`structural_polarization` is Algorithm 1, vectorized to O(V) per layer:
+for every node the two per-layer activation slots are ranked; the layer's
+summed higher-rank and lower-rank auxiliary masses decide — via a threshold
+check — whether the *whole layer* keeps two, one or zero activation slots
+per node, while each node independently chooses *which* position its
+surviving slot occupies. This enforces the Eq. 2 constraint
+`h_{2i,j} + h_{2i+1,j}` constant across nodes exactly.
+
+Gradients flow to the auxiliary parameter `h_w` through the Softplus
+straight-through estimator of Eq. 3 (`∂h/∂h_w = softplus(h_w)`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def structural_polarization(h_w: jnp.ndarray) -> jnp.ndarray:
+    """Algorithm 1. h_w: [L, 2, V] auxiliary params → h: [L, 2, V] ∈ {0,1}."""
+    hw1, hw2 = h_w[:, 0, :], h_w[:, 1, :]  # [L, V]
+    hi = jnp.maximum(hw1, hw2)
+    lo = jnp.minimum(hw1, hw2)
+    s_h = hi.sum(axis=1, keepdims=True)  # [L, 1]
+    s_l = lo.sum(axis=1, keepdims=True)
+    keep_hi = (s_h > 0).astype(h_w.dtype)  # layer keeps its higher slot set
+    keep_lo = (s_l > 0).astype(h_w.dtype)
+    first_is_hi = (hw1 >= hw2).astype(h_w.dtype)
+    h1 = first_is_hi * keep_hi + (1.0 - first_is_hi) * keep_lo
+    h2 = first_is_hi * keep_lo + (1.0 - first_is_hi) * keep_hi
+    return jnp.stack([h1, h2], axis=1)
+
+
+@jax.custom_vjp
+def indicator(h_w: jnp.ndarray) -> jnp.ndarray:
+    """Polarized indicator with Softplus STE gradients (Eq. 3)."""
+    return structural_polarization(h_w)
+
+
+def _indicator_fwd(h_w):
+    return structural_polarization(h_w), h_w
+
+
+def _indicator_bwd(h_w, g):
+    return (g * jax.nn.softplus(h_w),)
+
+
+indicator.defvjp(_indicator_fwd, _indicator_bwd)
+
+
+def l0_penalty(h: jnp.ndarray) -> jnp.ndarray:
+    """μ-weighted term of Eq. 2: the count of surviving non-linear ops.
+    Normalized per node so μ's scale is independent of V."""
+    return h.sum() / h.shape[2]
+
+
+def effective_nonlinear_layers(h: jnp.ndarray) -> int:
+    """The paper's reporting metric: Σ over layers of per-node slot count
+    (identical across nodes by construction)."""
+    return int(round(float(h.sum() / h.shape[2])))
+
+
+def init_h_w(num_layers: int, v: int, seed: int = 0, scale: float = 0.1) -> jnp.ndarray:
+    """Positive-mean init so training starts from the all-kept model."""
+    key = jax.random.PRNGKey(seed)
+    return scale * (1.0 + 0.1 * jax.random.normal(key, (num_layers, 2, v)))

@@ -1,0 +1,284 @@
+"""The LinGCN training workflow (paper Algorithm 2), scaled to this
+machine (DESIGN.md substitution #4):
+
+1. train an all-ReLU teacher;
+2. structural linearization: co-train weights W and auxiliary h_w with the
+   Eq. 2 objective (CE + μ·L0 via the Softplus-STE indicator) until the
+   target effective-non-linear-layer count is reached;
+3. freeze h, replace ReLU with node-wise second-order polynomials
+   (w2=0, w1=1, b=0 start) and train with the Eq. 5 two-level distillation
+   loss from the teacher.
+
+Optimizer: hand-rolled SGD with momentum (offline environment — no optax);
+the paper's settings (momentum 0.9, step decay) are kept.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import time
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import distill as D
+from . import linearize as L
+from . import model as M
+
+
+# ---------------------------------------------------------------- optimizer
+
+def sgd_init(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd_step(params, grads, vel, lr, momentum=0.9, weight_decay=1e-4, clip=5.0):
+    p_flat, tree = jax.tree_util.tree_flatten(params)
+    g_flat = jax.tree_util.tree_leaves(grads)
+    v_flat = jax.tree_util.tree_leaves(vel)
+    # global-norm gradient clipping (stabilizes the all-polynomial phase —
+    # the paper reports the same instability, Figs. 7/8)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in g_flat))
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-12))
+    g_flat = [g * scale for g in g_flat]
+    new_p, new_v = [], []
+    for p, g, v in zip(p_flat, g_flat, v_flat):
+        v2 = momentum * v + g + weight_decay * p
+        new_v.append(v2)
+        new_p.append(p - lr * v2)
+    return (
+        jax.tree_util.tree_unflatten(tree, new_p),
+        jax.tree_util.tree_unflatten(tree, new_v),
+    )
+
+
+def batches(n, bs, rng):
+    idx = rng.permutation(n)
+    for s in range(0, n - bs + 1, bs):
+        yield idx[s : s + bs]
+
+
+# ------------------------------------------------------------ teacher phase
+
+def train_teacher(
+    a_hat,
+    xs,
+    ys,
+    xs_te,
+    ys_te,
+    channels: List[int],
+    classes: int,
+    k: int,
+    epochs: int = 20,
+    lr: float = 0.05,
+    bs: int = 16,
+    seed: int = 0,
+) -> Tuple[Dict[str, Any], dict]:
+    v, c_in = xs.shape[1], xs.shape[2]
+    params = M.init_params(seed, v, c_in, channels, classes, k)
+    h_full = M.full_indicators(len(channels), v)
+    vel = sgd_init(params)
+    curve = []
+
+    @jax.jit
+    def loss_fn(p, xb, yb):
+        return M.cross_entropy(M.forward_batch(p, a_hat, xb, h_full, "relu"), yb)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        cur_lr = lr * (0.1 ** (ep // max(1, int(epochs * 0.6))))
+        losses = []
+        for bi in batches(len(xs), bs, rng):
+            lo, g = grad_fn(params, xs[bi], ys[bi])
+            params, vel = sgd_step(params, g, vel, cur_lr)
+            losses.append(float(lo))
+        acc = float(M.accuracy(params, a_hat, xs_te, ys_te, h_full, "relu"))
+        curve.append({"epoch": ep, "loss": float(np.mean(losses)), "test_acc": acc})
+    return params, {"curve": curve, "test_acc": curve[-1]["test_acc"]}
+
+
+# ------------------------------------------------- structural linearization
+
+def linearize(
+    a_hat,
+    xs,
+    ys,
+    xs_te,
+    ys_te,
+    teacher_params,
+    target_nl: int,
+    epochs: int = 10,
+    lr: float = 0.01,
+    bs: int = 16,
+    mu_init: float = 0.1,
+    seed: int = 1,
+):
+    """Phase 2 of Algorithm 2. μ is escalated geometrically until the
+    polarized plan reaches `target_nl` effective non-linear layers (the
+    paper sweeps μ ∈ [0.1, 10] per desired count)."""
+    params = jax.tree_util.tree_map(lambda x: x, teacher_params)  # copy
+    num_layers = len(params["layers"])
+    v = xs.shape[1]
+    h_w = L.init_h_w(num_layers, v, seed)
+    vel_p = sgd_init(params)
+    vel_h = jnp.zeros_like(h_w)
+    curve = []
+
+    def loss_fn(p, hw, xb, yb, mu):
+        h = L.indicator(hw)
+        ce = M.cross_entropy(M.forward_batch(p, a_hat, xb, h, "relu"), yb)
+        return ce + mu * L.l0_penalty(h)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, argnums=(0, 1)))
+    rng = np.random.default_rng(seed)
+    mu = mu_init
+    for ep in range(epochs):
+        for bi in batches(len(xs), bs, rng):
+            lo, (gp, gh) = grad_fn(params, h_w, xs[bi], ys[bi], mu)
+            params, vel_p = sgd_step(params, gp, vel_p, lr)
+            vel_h = 0.9 * vel_h + gh
+            h_w = h_w - lr * vel_h
+        nl = L.effective_nonlinear_layers(L.structural_polarization(h_w))
+        curve.append({"epoch": ep, "nl": nl, "mu": mu})
+        if nl > target_nl:
+            mu *= 2.0  # escalate the L0 pressure
+        elif nl < target_nl:
+            mu *= 0.5
+            h_w = h_w + 0.05  # relax back toward keeping slots
+    # final plan: clamp to the target by ranking layer slot masses
+    h = np.array(L.structural_polarization(h_w))
+    nl = L.effective_nonlinear_layers(jnp.array(h))
+    h = _force_target(h_w, target_nl)
+    return params, jnp.array(h), {"curve": curve, "reached_nl": nl}
+
+
+def _force_target(h_w, target_nl: int) -> np.ndarray:
+    """Deterministically project the learned h_w onto exactly `target_nl`
+    effective layers: rank the 2L per-layer slot sets by auxiliary mass and
+    keep the top `target_nl`, preserving each node's learned position choice
+    when a layer keeps one slot."""
+    hw = np.array(h_w)
+    num_layers, _, v = hw.shape
+    hi = np.maximum(hw[:, 0], hw[:, 1]).sum(axis=1)  # [L]
+    lo = np.minimum(hw[:, 0], hw[:, 1]).sum(axis=1)
+    # candidate slot-sets: (mass, layer, which) — 'hi' must be kept before
+    # 'lo' within a layer (keeping only the lower-ranked set is dominated)
+    cands = sorted(
+        [(hi[i], i, "hi") for i in range(num_layers)]
+        + [(lo[i], i, "lo") for i in range(num_layers)],
+        reverse=True,
+    )
+    keep_hi = np.zeros(num_layers, bool)
+    keep_lo = np.zeros(num_layers, bool)
+    kept = 0
+    for _, i, which in cands:
+        if kept == target_nl:
+            break
+        if which == "hi" and not keep_hi[i]:
+            keep_hi[i] = True
+            kept += 1
+        elif which == "lo" and keep_hi[i] and not keep_lo[i]:
+            keep_lo[i] = True
+            kept += 1
+    h = np.zeros_like(hw)
+    first_is_hi = hw[:, 0] >= hw[:, 1]
+    for i in range(num_layers):
+        h[i, 0] = np.where(first_is_hi[i], keep_hi[i], keep_lo[i])
+        h[i, 1] = np.where(first_is_hi[i], keep_lo[i], keep_hi[i])
+    return h
+
+
+# --------------------------------------------- polynomial replacement phase
+
+def replace_and_distill(
+    a_hat,
+    xs,
+    ys,
+    xs_te,
+    ys_te,
+    student_params,
+    teacher_params,
+    h,
+    epochs: int = 20,
+    lr: float = 0.01,
+    bs: int = 16,
+    eta: float = 0.2,
+    phi: float = 200.0,
+    seed: int = 2,
+):
+    """Phase 3 of Algorithm 2: ReLU → node-wise polynomial + Eq. 5 loss."""
+    params = jax.tree_util.tree_map(lambda x: x, student_params)
+    h_full = M.full_indicators(len(params["layers"]), xs.shape[1])
+    vel = sgd_init(params)
+    curve = []
+
+    @jax.jit
+    def teacher_out(xb):
+        return M.forward_batch_with_features(teacher_params, a_hat, xb, h_full, "relu")
+
+    def loss_fn(p, xb, yb, tl, tf):
+        return D.distillation_loss(p, a_hat, xb, yb, h, tl, tf, eta, phi)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        cur_lr = lr * (0.1 ** (ep // max(1, int(epochs * 0.5))))
+        stats = []
+        for bi in batches(len(xs), bs, rng):
+            tl, tf = teacher_out(xs[bi])
+            (lo, aux), g = grad_fn(params, xs[bi], ys[bi], tl, tf)
+            params, vel = sgd_step(params, g, vel, cur_lr)
+            stats.append(float(lo))
+        acc = float(M.accuracy(params, a_hat, xs_te, ys_te, h, "poly"))
+        curve.append({"epoch": ep, "loss": float(np.mean(stats)), "test_acc": acc})
+    return params, {"curve": curve, "test_acc": curve[-1]["test_acc"]}
+
+
+# -------------------------------------------------------------- full recipe
+
+def lingcn_pipeline(
+    a_hat,
+    data,
+    channels,
+    classes,
+    k,
+    target_nls,
+    teacher_epochs=20,
+    lin_epochs=8,
+    poly_epochs=16,
+    seed=0,
+    log=print,
+):
+    """Algorithm 2 end-to-end for several target non-linear budgets.
+    Returns the teacher, and per-target (params, h, metrics)."""
+    xs, ys, xs_te, ys_te = data
+    t0 = time.time()
+    teacher, tstats = train_teacher(
+        a_hat, xs, ys, xs_te, ys_te, channels, classes, k, epochs=teacher_epochs, seed=seed
+    )
+    log(f"[teacher] acc={tstats['test_acc']:.4f} ({time.time()-t0:.0f}s)")
+    students = {}
+    for nl in target_nls:
+        t1 = time.time()
+        w_lin, h, lstats = linearize(
+            a_hat, xs, ys, xs_te, ys_te, teacher, nl, epochs=lin_epochs, seed=seed + nl
+        )
+        s_params, pstats = replace_and_distill(
+            a_hat, xs, ys, xs_te, ys_te, w_lin, teacher, h,
+            epochs=poly_epochs, seed=seed + 100 + nl,
+        )
+        log(
+            f"[student nl={nl}] acc={pstats['test_acc']:.4f} "
+            f"({time.time()-t1:.0f}s)"
+        )
+        students[nl] = {
+            "params": s_params,
+            "h": h,
+            "linearize": lstats,
+            "distill": pstats,
+        }
+    return teacher, tstats, students

@@ -1,0 +1,114 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, hypothesis-swept
+over shapes and dtypes (the CORE kernel correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+from compile.kernels import stgcn_kernels as K
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, shape, dtype):
+    return jnp.array(rng.normal(0, 1, size=shape), dtype)
+
+
+dims = st.tuples(
+    st.integers(2, 9),  # V
+    st.integers(1, 6),  # C_in
+    st.integers(1, 6),  # C_out
+    st.sampled_from([4, 8, 16, 130]),  # T (incl. > T_TILE)
+)
+
+
+@given(dims=dims, seed=st.integers(0, 2**16), dtype=st.sampled_from([jnp.float32]))
+def test_gcn_spatial_matches_ref(dims, seed, dtype):
+    v, ci, co, t = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (v, ci, t), dtype)
+    a = rand(rng, (v, v), dtype)
+    w = rand(rng, (co, ci), dtype)
+    b = rand(rng, (co,), dtype)
+    got = K.gcn_spatial(x, a, w, b)
+    want = R.gcn_spatial_ref(x, a, w, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    dims=dims,
+    k=st.sampled_from([1, 3, 5, 9]),
+    seed=st.integers(0, 2**16),
+)
+def test_temporal_conv_matches_ref(dims, k, seed):
+    v, ci, co, t = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (v, ci, t), jnp.float32)
+    w = rand(rng, (co, ci, k), jnp.float32)
+    b = rand(rng, (co,), jnp.float32)
+    got = K.temporal_conv(x, w, b)
+    want = R.temporal_conv_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    v=st.integers(1, 12),
+    c=st.integers(1, 8),
+    t=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**16),
+    act_c=st.sampled_from([0.01, 0.25, 1.0]),
+)
+def test_poly_act_matches_ref(v, c, t, seed, act_c):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (v, c, t), jnp.float32)
+    w2 = rand(rng, (v,), jnp.float32)
+    w1 = rand(rng, (v,), jnp.float32)
+    b = rand(rng, (v,), jnp.float32)
+    h = jnp.array(rng.integers(0, 2, size=(v,)), jnp.float32)
+    got = K.poly_act(x, w2, w1, b, h, act_c)
+    want = R.poly_act_ref(x, w2, w1, b, h, act_c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_poly_act_identity_nodes_passthrough():
+    # h = 0 nodes must be exactly x regardless of the polynomial params
+    rng = np.random.default_rng(0)
+    x = rand(rng, (4, 3, 8), jnp.float32)
+    w2 = jnp.full((4,), 100.0)
+    w1 = jnp.full((4,), -5.0)
+    b = jnp.full((4,), 3.0)
+    h = jnp.array([0.0, 1.0, 0.0, 1.0])
+    y = K.poly_act(x, w2, w1, b, h, 0.01)
+    np.testing.assert_allclose(y[0], x[0], rtol=1e-6)
+    np.testing.assert_allclose(y[2], x[2], rtol=1e-6)
+    assert not np.allclose(y[1], x[1])
+
+
+def test_temporal_conv_zero_padding_semantics():
+    # an impulse at the boundary must not wrap around
+    v, c, t, k = 1, 1, 8, 3
+    x = jnp.zeros((v, c, t)).at[0, 0, 0].set(1.0)
+    w = jnp.ones((1, 1, k))
+    b = jnp.zeros((1,))
+    y = np.array(K.temporal_conv(x, w, b))[0, 0]
+    assert y[0] == 1.0 and y[1] == 1.0 and y[2] == 0.0
+    assert y[-1] == 0.0, "no wraparound"
+
+
+def test_gcn_spatial_identity_adjacency():
+    rng = np.random.default_rng(1)
+    x = rand(rng, (5, 3, 8), jnp.float32)
+    w = jnp.eye(3)
+    b = jnp.zeros((3,))
+    a = jnp.eye(5)
+    y = K.gcn_spatial(x, a, w, b)
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+def test_vmem_footprint_estimate():
+    # §Perf L1: the paper-scale layer tiles must fit a 16 MiB VMEM budget
+    fp = K.vmem_footprint_bytes(25, 256, 256, 9, 256)
+    assert fp <= 16 * 1024 * 1024, f"VMEM estimate {fp/2**20:.1f} MiB"

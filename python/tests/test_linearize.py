@@ -1,0 +1,84 @@
+"""Structural linearization (Algorithm 1 + Eq. 3 STE) properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import linearize as L
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@given(
+    layers=st.integers(1, 5),
+    v=st.integers(1, 30),
+    seed=st.integers(0, 2**16),
+)
+def test_polarization_satisfies_structural_constraint(layers, v, seed):
+    # Eq. 2 constraint: h_{2i,j} + h_{2i+1,j} identical over nodes j
+    rng = np.random.default_rng(seed)
+    h_w = jnp.array(rng.normal(0, 1, size=(layers, 2, v)), jnp.float32)
+    h = np.array(L.structural_polarization(h_w))
+    assert set(np.unique(h)) <= {0.0, 1.0}
+    counts = h.sum(axis=1)  # [L, V]
+    for li in range(layers):
+        assert len(np.unique(counts[li])) == 1, f"layer {li} desynchronized"
+
+
+@given(v=st.integers(2, 20), seed=st.integers(0, 2**16))
+def test_polarization_respects_node_position_choice(v, seed):
+    # when a layer keeps exactly one slot per node, each node's kept slot is
+    # its higher-auxiliary one (Algorithm 1 lines 4-9)
+    rng = np.random.default_rng(seed)
+    hw1 = rng.uniform(0.5, 1.0, size=v)
+    hw2 = rng.uniform(-2.0, -0.5, size=v)
+    swap = rng.integers(0, 2, size=v).astype(bool)
+    a = np.where(swap, hw2, hw1)
+    b = np.where(swap, hw1, hw2)
+    h_w = jnp.array(np.stack([a, b])[None], jnp.float32)  # [1, 2, V]
+    h = np.array(L.structural_polarization(h_w))[0]
+    # s_h > 0 (all ~0.75·V), s_l < 0 → exactly one slot per node
+    assert (h.sum(axis=0) == 1).all()
+    for j in range(v):
+        kept = 0 if h[0, j] == 1 else 1
+        higher = 0 if (a[j] >= b[j]) else 1
+        assert kept == higher, f"node {j} kept the lower-ranked slot"
+
+
+def test_all_positive_keeps_everything():
+    h_w = jnp.ones((3, 2, 10))
+    h = np.array(L.structural_polarization(h_w))
+    assert h.sum() == 60
+    assert L.effective_nonlinear_layers(jnp.array(h)) == 6
+
+
+def test_all_negative_drops_everything():
+    h_w = -jnp.ones((3, 2, 10))
+    h = np.array(L.structural_polarization(h_w))
+    assert h.sum() == 0
+
+
+def test_ste_gradient_is_softplus():
+    # Eq. 3: ∂h/∂h_w = softplus(h_w) through the custom VJP
+    h_w = jnp.array([[[0.3, -1.2], [2.0, 0.0]]])
+    g = jax.grad(lambda hw: L.indicator(hw).sum())(h_w)
+    np.testing.assert_allclose(g, jax.nn.softplus(h_w), rtol=1e-6)
+
+
+def test_l0_penalty_counts_per_node():
+    h = jnp.ones((2, 2, 5))
+    assert float(L.l0_penalty(h)) == 4.0  # 4 slots kept per node
+
+
+def test_effective_layers_reporting():
+    h_w = jnp.array(
+        [
+            [[1.0, 1.0], [1.0, 1.0]],  # keep both
+            [[1.0, -3.0], [-3.0, 1.0]],  # keep one (mixed positions)
+            [[-1.0, -1.0], [-1.0, -1.0]],  # keep none
+        ]
+    )
+    h = L.structural_polarization(h_w)
+    assert L.effective_nonlinear_layers(h) == 3

@@ -1,0 +1,124 @@
+"""L2 model + training pipeline tests: forward semantics, pallas/ref
+equivalence at the model level, distillation loss, and pipeline smoke."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as Dt
+from compile import distill as D
+from compile import linearize as L
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def setup():
+    a_hat = jnp.array(Dt.normalized_adjacency(Dt.NTU_V, Dt.NTU_EDGES), jnp.float32)
+    xs, ys = Dt.make_skeleton_dataset(96, t=16, c=4, classes=4, seed=1)
+    return a_hat, jnp.array(xs), np.array(ys)
+
+
+def test_dataset_properties():
+    xs, ys = Dt.make_skeleton_dataset(64, t=8, c=3, classes=8, seed=0)
+    assert xs.shape == (64, 25, 3, 8)
+    assert set(np.unique(ys)) <= set(range(8))
+    assert len(np.unique(ys)) >= 6, "classes should be roughly covered"
+    assert np.isfinite(xs).all()
+
+
+def test_adjacency_matches_rust_semantics():
+    a = Dt.normalized_adjacency(Dt.NTU_V, Dt.NTU_EDGES)
+    np.testing.assert_allclose(a, a.T, atol=1e-12)
+    assert a.shape == (25, 25)
+    # self loops present, all entries in [0, 1]
+    assert (np.diag(a) > 0).all()
+    assert (a >= 0).all() and (a <= 1).all()
+    # nnz = V + 2·E
+    assert (a != 0).sum() == 25 + 2 * len(Dt.NTU_EDGES)
+
+
+def test_forward_shapes_and_pallas_equivalence(setup):
+    a_hat, xs, ys = setup
+    params = M.init_params(0, 25, 4, [8, 8], 4, 3)
+    h = M.full_indicators(2, 25)
+    ref = M.forward_single(params, a_hat, xs[0], h, "poly", use_pallas=False)
+    pal = M.forward_single(params, a_hat, xs[0], h, "poly", use_pallas=True)
+    assert ref.shape == (4,)
+    np.testing.assert_allclose(ref, pal, rtol=1e-4, atol=1e-5)
+
+
+def test_poly_init_is_identity_activation(setup):
+    # (w2=0, w1=1, b=0) polynomial == identity: poly mode with fresh params
+    # must equal all-identity forward (paper's replacement init)
+    a_hat, xs, ys = setup
+    params = M.init_params(0, 25, 4, [8, 8], 4, 3)
+    h = M.full_indicators(2, 25)
+    h_zero = jnp.zeros_like(h)
+    y_poly = M.forward_single(params, a_hat, xs[0], h, "poly")
+    y_lin = M.forward_single(params, a_hat, xs[0], h_zero, "poly")
+    np.testing.assert_allclose(y_poly, y_lin, rtol=1e-5, atol=1e-6)
+
+
+def test_relu_mode_differs_from_identity(setup):
+    a_hat, xs, ys = setup
+    params = M.init_params(0, 25, 4, [8, 8], 4, 3)
+    h = M.full_indicators(2, 25)
+    y_relu = M.forward_single(params, a_hat, xs[0], h, "relu")
+    y_lin = M.forward_single(params, a_hat, xs[0], jnp.zeros_like(h), "relu")
+    assert not np.allclose(y_relu, y_lin)
+
+
+def test_kl_divergence_zero_for_identical_logits():
+    logits = jnp.array([[1.0, 2.0, 3.0], [0.0, 0.5, -1.0]])
+    assert float(D.kl_divergence(logits, logits)) < 1e-6
+    other = logits + jnp.array([[1.0, -1.0, 0.0]])
+    assert float(D.kl_divergence(other, logits)) > 0.0
+
+
+def test_feature_penalty_scale_invariant():
+    f = [jnp.ones((2, 3, 4, 5))]
+    f2 = [2.0 * jnp.ones((2, 3, 4, 5))]
+    # normalized maps: scaling a feature map must not change the penalty
+    assert float(D.feature_map_penalty(f, f2)) < 1e-10
+
+
+def test_sgd_momentum_descends_quadratic():
+    p = {"w": jnp.array([5.0])}
+    v = T.sgd_init(p)
+    for _ in range(200):
+        g = {"w": 2.0 * p["w"]}
+        p, v = T.sgd_step(p, g, v, lr=0.05, weight_decay=0.0)
+    assert abs(float(p["w"][0])) < 0.05
+
+
+def test_teacher_learns_above_chance(setup):
+    a_hat, xs, ys = setup
+    xtr, ytr, xte, yte = Dt.train_test_split(xs, ys, seed=0)
+    params, stats = T.train_teacher(
+        a_hat, xtr, ytr, xte, yte, [8, 8], 4, 3, epochs=15, lr=0.05, bs=16, seed=0
+    )
+    assert stats["test_acc"] > 0.4, f"acc {stats['test_acc']} not above chance (0.25)"
+
+
+def test_linearize_hits_target(setup):
+    a_hat, xs, ys = setup
+    xtr, ytr, xte, yte = Dt.train_test_split(xs, ys, seed=0)
+    teacher = M.init_params(0, 25, 4, [8, 8], 4, 3)
+    for target in [3, 1]:
+        _, h, stats = T.linearize(
+            a_hat, xtr, ytr, xte, yte, teacher, target, epochs=3, seed=1
+        )
+        assert L.effective_nonlinear_layers(h) == target
+        # structural constraint holds
+        counts = np.array(h).sum(axis=1)
+        assert all(len(np.unique(c)) == 1 for c in counts)
+
+
+def test_flickr_surrogate_properties():
+    feats, labels, edges = Dt.make_flickr_surrogate(n_nodes=120, classes=4, seed=2)
+    assert feats.shape == (120, 32)
+    assert len(edges) > 100
+    # homophily: same-class edges dominate
+    same = sum(1 for i, j in edges if labels[i] == labels[j])
+    assert same / len(edges) > 0.4, "planted communities must be visible"

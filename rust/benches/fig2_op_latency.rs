@@ -1,0 +1,48 @@
+//! Figure 2 (bottom): HE operator latency vs polynomial degree N.
+//! Measures N = 2^11..2^13 directly and extrapolates 2^14..2^16 with the
+//! fitted cost model (keygen at 2^15+ with deep chains exceeds this
+//! machine; the extrapolation rule is the documented n·log n·limbs^k law).
+
+use lingcn::ckks::OpCounts;
+use lingcn::costmodel::{measure_point, OpCostModel};
+use lingcn::util::ascii_table;
+
+fn main() {
+    let mut points = Vec::new();
+    for (log_n, levels) in [(11u32, 4usize), (12, 6), (13, 8)] {
+        points.push(measure_point(1 << log_n, levels).expect("measure"));
+    }
+    let fit = OpCostModel::fit(&points);
+    let mut rows = Vec::new();
+    for p in &points {
+        rows.push(vec![
+            format!("2^{}", (p.n as f64).log2() as u32),
+            "measured".into(),
+            format!("{:.2}", p.rot_s * 1e3),
+            format!("{:.2}", p.cmult_s * 1e3),
+            format!("{:.2}", p.pmult_s * 1e3),
+        ]);
+    }
+    for (log_n, limbs) in [(14u32, 12usize), (15, 15), (16, 28)] {
+        let n = 1usize << log_n;
+        let one = |c: u64, l: usize| OpCounts {
+            rot: c, rot_limbs: c * l as u64, rot_limbs_sq: c * (l * l) as u64,
+            cmult: c, cmult_limbs: c * l as u64, cmult_limbs_sq: c * (l * l) as u64,
+            pmult: c, pmult_limbs: c * l as u64,
+            ..Default::default()
+        };
+        let b = fit.estimate(n, &one(1, limbs), 1);
+        rows.push(vec![
+            format!("2^{log_n}"),
+            "extrapolated".into(),
+            format!("{:.2}", b.rot_s * 1e3),
+            format!("{:.2}", b.cmult_s * 1e3),
+            format!("{:.2}", b.pmult_s * 1e3),
+        ]);
+    }
+    println!("Figure 2: op latency vs N (ms/op)\n{}",
+        ascii_table(&["N", "source", "Rot", "CMult", "PMult"], &rows));
+    // the figure's claim: latency strictly grows with N
+    println!("\nshape check: Rot(2^13) / Rot(2^11) = {:.1}x (paper: >2x)",
+        points[2].rot_s / points[0].rot_s);
+}

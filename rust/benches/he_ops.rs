@@ -1,0 +1,43 @@
+//! Real CKKS operation micro-benchmarks (paper Fig. 2 bottom: op latency
+//! grows with polynomial degree N) and cost-model calibration.
+//! Run: cargo bench --bench he_ops  [-- --recalibrate]
+
+use lingcn::costmodel::{measure_point, OpCostModel};
+use lingcn::util::ascii_table;
+
+fn main() {
+    let recal = std::env::args().any(|a| a == "--recalibrate");
+    let mut rows = Vec::new();
+    let mut points = Vec::new();
+    for (log_n, levels) in [(11u32, 4usize), (12, 6), (13, 8)] {
+        let p = measure_point(1 << log_n, levels).expect("measure");
+        rows.push(vec![
+            format!("2^{log_n}"),
+            (levels + 1).to_string(),
+            format!("{:.3}", p.rot_s * 1e3),
+            format!("{:.3}", p.cmult_s * 1e3),
+            format!("{:.3}", p.pmult_s * 1e3),
+            format!("{:.3}", p.add_s * 1e3),
+            format!("{:.3}", p.rescale_s * 1e3),
+        ]);
+        points.push(p);
+    }
+    println!(
+        "{}",
+        ascii_table(
+            &["N", "limbs", "Rot ms", "CMult ms", "PMult ms", "Add ms", "Rescale ms"],
+            &rows
+        )
+    );
+    let fit = OpCostModel::fit(&points);
+    println!("\nfitted coefficients (use in OpCostModel::reference):");
+    println!("  rot_a: {:.3e}, cmult_a: {:.3e}, pmult_a: {:.3e}, add_a: {:.3e}, rescale_a: {:.3e}",
+        fit.rot_a, fit.cmult_a, fit.pmult_a, fit.add_a, fit.rescale_a);
+    if recal {
+        println!("(paste into rust/src/costmodel/mod.rs::reference)");
+    }
+    // sanity: the paper's qualitative claim — Rot and CMult dominate,
+    // and everything grows with N
+    assert!(points[2].rot_s > points[0].rot_s, "Rot must grow with N");
+    assert!(points[2].rot_s > points[2].add_s * 5.0, "Rot >> Add");
+}

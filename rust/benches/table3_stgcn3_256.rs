@@ -1,0 +1,28 @@
+//! Paper Table 3: predicted encrypted-inference latency per variant,
+//! ours (instrumented engine op counts × calibrated cost model at the
+//! Table 6 HE parameters) vs the paper's reported values.
+//! Pass --calibrate to re-measure op costs on this machine first.
+
+use lingcn::costmodel::report::{render_table, table_rows};
+use lingcn::costmodel::OpCostModel;
+
+fn main() {
+    let cost = if std::env::args().any(|a| a == "--calibrate") {
+        OpCostModel::calibrate().expect("calibration")
+    } else {
+        OpCostModel::reference()
+    };
+    let rows = table_rows(3, &cost).expect("prediction");
+    println!("{}", render_table(&rows, "Paper Table 3 reproduction"));
+    let lin: Vec<&_> = rows.iter().filter(|r| r.method == "LinGCN").collect();
+    println!("\nshape checks:");
+    println!("  LinGCN latency monotone in NL: {}",
+        lin.windows(2).all(|w| w[0].ours.total_s > w[1].ours.total_s));
+    if rows.iter().any(|r| r.method == "CryptoGCN") {
+        let l6 = lin[0];
+        let c6 = rows.iter().find(|r| r.method == "CryptoGCN").unwrap();
+        println!("  CryptoGCN/LinGCN at max NL: ours {:.2}x, paper {:.2}x",
+            c6.ours.total_s / l6.ours.total_s,
+            c6.paper_latency_s / l6.paper_latency_s);
+    }
+}

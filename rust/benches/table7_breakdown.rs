@@ -1,0 +1,52 @@
+//! Paper Table 7: per-HE-operator latency breakdown (Rot / PMult / Add /
+//! CMult) for the unreduced vs 2-NL variants of each family, plus the
+//! non-linear-reduction speedup. Shape target: Rot dominates everywhere,
+//! and the speedup factors land near the paper's 2.50 / 2.16 / 3.88.
+
+use lingcn::costmodel::predict::{predict, PaperVariant};
+use lingcn::costmodel::report::PAPER_TABLE7;
+use lingcn::costmodel::OpCostModel;
+use lingcn::he_infer::Method;
+use lingcn::util::ascii_table;
+
+fn main() {
+    let cost = if std::env::args().any(|a| a == "--calibrate") {
+        OpCostModel::calibrate().expect("calibration")
+    } else {
+        OpCostModel::reference()
+    };
+    let variants = [
+        ("6-STGCN-3-128", PaperVariant::stgcn_3_128(6, Method::LinGcn)),
+        ("2-STGCN-3-128", PaperVariant::stgcn_3_128(2, Method::LinGcn)),
+        ("6-STGCN-3-256", PaperVariant::stgcn_3_256(6, Method::LinGcn)),
+        ("2-STGCN-3-256", PaperVariant::stgcn_3_256(2, Method::LinGcn)),
+        ("12-STGCN-6-256", PaperVariant::stgcn_6_256(12, Method::LinGcn)),
+        ("2-STGCN-6-256", PaperVariant::stgcn_6_256(2, Method::LinGcn)),
+    ];
+    let mut rows = Vec::new();
+    let mut totals = Vec::new();
+    for (name, v) in &variants {
+        let r = predict(v, &cost).expect("prediction");
+        let b = r.breakdown;
+        let paper = PAPER_TABLE7.iter().find(|p| p.0 == *name).unwrap();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.0}", b.rot_s),
+            format!("{:.0}", b.pmult_s),
+            format!("{:.0}", b.add_s),
+            format!("{:.0}", b.cmult_s),
+            format!("{:.0}", r.total_s),
+            format!("{:.0}", paper.5),
+        ]);
+        totals.push(r.total_s);
+        assert!(b.rot_s >= b.pmult_s && b.rot_s >= b.cmult_s,
+            "{name}: Rot must dominate (paper's key finding)");
+    }
+    println!("Paper Table 7 reproduction (seconds)\n{}",
+        ascii_table(&["Model", "Rot", "PMult", "Add", "CMult", "total", "paper total"], &rows));
+    println!("\nnon-linear-reduction speedups (ours vs paper):");
+    for (i, paper_speedup) in [(0usize, 2.50), (2, 2.16), (4, 3.88)] {
+        println!("  {}: ours {:.2}x, paper {paper_speedup:.2}x",
+            variants[i].0, totals[i] / totals[i + 1]);
+    }
+}

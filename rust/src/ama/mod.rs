@@ -1,0 +1,268 @@
+//! Adjacency-Matrix-Aware (AMA) ciphertext packing (paper Appendix A.1).
+//!
+//! Each graph node gets its own ciphertext whose slots hold the node's
+//! `C × T` feature map, channel-major (`slot = c·T + t`), padded to a fixed
+//! block period `C_max·T` and **replicated periodically through the whole
+//! slot vector** (the block must divide N/2 — at the paper's scale
+//! 128·256 = N/2 exactly, i.e. one copy). Periodic replication makes every
+//! cyclic rotation used by the diagonal-method convolutions close over the
+//! data: rotating by `d·T` maps channel `c` to `(c+d) mod C_max` in *every*
+//! copy, so the layout invariant survives arbitrarily many conv layers
+//! (a truncated window would corrupt its tail copy after one conv).
+//! With per-node ciphertexts the
+//! adjacency multiply is pure `PMult`/`Add` (Eq. 7) and every temporal /
+//! channel-mixing op is node-local — exactly what makes the paper's
+//! *node-wise* structural linearization representable in HE.
+
+use crate::ckks::{Ciphertext, CkksEngine};
+use anyhow::{ensure, Result};
+
+/// Geometry of the packed layout, fixed for a whole network.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AmaLayout {
+    /// Frames per clip.
+    pub t: usize,
+    /// Channel capacity (max channels over all layers).
+    pub c_max: usize,
+    /// Slot count of the ciphertext (N/2).
+    pub slots: usize,
+}
+
+impl AmaLayout {
+    pub fn new(t: usize, c_max: usize, slots: usize) -> Result<Self> {
+        let layout = AmaLayout { t, c_max, slots };
+        ensure!(
+            layout.block() <= slots && slots % layout.block() == 0,
+            "AMA layout needs C_max·T = {} to divide the slot count {slots} \
+             (raise N or pad the model dims)",
+            layout.block()
+        );
+        Ok(layout)
+    }
+
+    /// One data block: C_max·T slots.
+    pub fn block(&self) -> usize {
+        self.c_max * self.t
+    }
+
+    /// Slot index of (channel, frame) in the first copy.
+    pub fn slot(&self, c: usize, t: usize) -> usize {
+        debug_assert!(c < self.c_max && t < self.t);
+        c * self.t + t
+    }
+
+    /// Number of periodic copies of the block in the slot vector.
+    pub fn copies(&self) -> usize {
+        self.slots / self.block()
+    }
+
+    /// Pack one node's [C, T] feature map (row-major, `c` rows) into a
+    /// periodically replicated slot vector ready for encryption.
+    pub fn pack(&self, feat: &[f64], c: usize) -> Vec<f64> {
+        assert_eq!(feat.len(), c * self.t);
+        assert!(c <= self.c_max);
+        let b = self.block();
+        let mut v = vec![0.0; self.slots];
+        for copy in 0..self.copies() {
+            for ci in 0..c {
+                for ti in 0..self.t {
+                    v[copy * b + self.slot(ci, ti)] = feat[ci * self.t + ti];
+                }
+            }
+        }
+        v
+    }
+
+    /// Unpack the first copy back to a [C, T] feature map.
+    pub fn unpack(&self, slots: &[f64], c: usize) -> Vec<f64> {
+        assert!(c <= self.c_max);
+        let mut out = vec![0.0; c * self.t];
+        for ci in 0..c {
+            for ti in 0..self.t {
+                out[ci * self.t + ti] = slots[self.slot(ci, ti)];
+            }
+        }
+        out
+    }
+
+    /// Build a full-slot mask vector from a per-block closure
+    /// `f(channel, frame) -> value`, replicated into every periodic copy.
+    /// Used for all diagonal-method plaintext masks.
+    pub fn mask<F: Fn(usize, usize) -> f64>(&self, f: F) -> Vec<f64> {
+        let b = self.block();
+        let mut v = vec![0.0; self.slots];
+        for ci in 0..self.c_max {
+            for ti in 0..self.t {
+                let val = f(ci, ti);
+                for copy in 0..self.copies() {
+                    v[copy * b + self.slot(ci, ti)] = val;
+                }
+            }
+        }
+        v
+    }
+
+    /// The rotation steps (left) required by the HE engine for this layout:
+    /// channel diagonals `d·T`, temporal taps `±k` (as left rotations),
+    /// pooling/FC tree strides. `k` is the temporal kernel width.
+    pub fn rotation_steps(&self, k: usize) -> Vec<usize> {
+        let mut steps = std::collections::BTreeSet::new();
+        let slots = self.slots;
+        for d in 1..self.c_max {
+            steps.insert(d * self.t);
+        }
+        for tap in 1..=(k / 2) {
+            steps.insert(tap); // left by tap
+            steps.insert(slots - tap); // right by tap
+        }
+        // pooling: sum over T within a block (powers of two), then over
+        // channel blocks (powers of two × T)
+        let mut s = 1;
+        while s < self.t {
+            steps.insert(s);
+            s <<= 1;
+        }
+        let mut s = self.t;
+        while s < self.block() {
+            steps.insert(s);
+            s <<= 1;
+        }
+        steps.into_iter().collect()
+    }
+}
+
+/// A packed encrypted clip: one ciphertext per graph node.
+pub struct PackedInput {
+    pub layout: AmaLayout,
+    /// Channels actually occupied.
+    pub c: usize,
+    pub cts: Vec<Ciphertext>,
+}
+
+/// Encrypt a [V, C, T] clip into per-node ciphertexts at limb count `nq`.
+pub fn encrypt_clip(
+    engine: &CkksEngine,
+    layout: &AmaLayout,
+    x: &[f64],
+    v: usize,
+    c: usize,
+    nq: usize,
+) -> Result<PackedInput> {
+    ensure!(x.len() == v * c * layout.t, "clip shape mismatch");
+    let per = c * layout.t;
+    let cts = (0..v)
+        .map(|vi| {
+            let packed = layout.pack(&x[vi * per..(vi + 1) * per], c);
+            engine.encrypt_at(&packed, nq)
+        })
+        .collect();
+    Ok(PackedInput {
+        layout: *layout,
+        c,
+        cts,
+    })
+}
+
+/// Decrypt per-node ciphertexts back to a [V, C, T] clip.
+pub fn decrypt_clip(
+    engine: &CkksEngine,
+    layout: &AmaLayout,
+    packed: &[Ciphertext],
+    c: usize,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(packed.len() * c * layout.t);
+    for ct in packed {
+        let slots = engine.decrypt(ct);
+        out.extend(layout.unpack(&slots, c));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::CkksParams;
+
+    #[test]
+    fn test_layout_geometry() {
+        let l = AmaLayout::new(8, 4, 512).unwrap();
+        assert_eq!(l.block(), 32);
+        assert_eq!(l.copies(), 16);
+        assert_eq!(l.slot(2, 5), 21);
+        assert!(AmaLayout::new(128, 8, 512).is_err(), "C·T > slots must fail");
+        assert!(AmaLayout::new(3, 5, 512).is_err(), "non-dividing block must fail");
+        // exact fill (the paper's 128·256 = N/2 case) is one copy
+        assert_eq!(AmaLayout::new(8, 64, 512).unwrap().copies(), 1);
+    }
+
+    #[test]
+    fn test_pack_unpack_roundtrip_and_replication() {
+        let l = AmaLayout::new(4, 4, 64).unwrap();
+        let feat: Vec<f64> = (0..2 * 4).map(|i| i as f64).collect(); // C=2
+        let packed = l.pack(&feat, 2);
+        assert_eq!(l.unpack(&packed, 2), feat);
+        // every periodic copy holds the data
+        for copy in 0..l.copies() {
+            for ci in 0..2 {
+                for ti in 0..4 {
+                    assert_eq!(packed[copy * l.block() + l.slot(ci, ti)], feat[ci * 4 + ti]);
+                }
+            }
+        }
+        // unused channel slots zero
+        assert_eq!(packed[l.slot(2, 0)], 0.0);
+    }
+
+    #[test]
+    fn test_rotation_invariance_of_periodic_packing() {
+        // rotating left by d·T maps channel c to (c+d) mod C_max in EVERY
+        // slot, so the layout invariant is closed under rotation — the
+        // property the diagonal method relies on across multiple layers
+        let l = AmaLayout::new(4, 4, 64).unwrap();
+        let feat: Vec<f64> = (0..4 * 4).map(|i| (i * i) as f64).collect();
+        let packed = l.pack(&feat, 4);
+        for d in 0..4usize {
+            let shift = d * l.t;
+            for s in 0..packed.len() {
+                let rotated_val = packed[(s + shift) % packed.len()];
+                let in_block = s % l.block();
+                let (ci, ti) = (in_block / l.t, in_block % l.t);
+                let want = feat[((ci + d) % 4) * 4 + ti];
+                assert_eq!(rotated_val, want, "d={d} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_rotation_steps_cover_needs() {
+        let l = AmaLayout::new(8, 4, 512).unwrap();
+        let steps = l.rotation_steps(3);
+        // channel diagonals
+        for d in 1..4 {
+            assert!(steps.contains(&(d * 8)));
+        }
+        // taps ±1
+        assert!(steps.contains(&1));
+        assert!(steps.contains(&511));
+        // pooling strides
+        assert!(steps.contains(&2) && steps.contains(&4));
+        assert!(steps.contains(&16));
+    }
+
+    #[test]
+    fn test_encrypt_decrypt_clip() {
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 9; // slots 256
+        let engine = CkksEngine::new(p, &[], 7).unwrap();
+        let layout = AmaLayout::new(4, 4, engine.ctx.slots()).unwrap();
+        let v = 3;
+        let c = 2;
+        let x: Vec<f64> = (0..v * c * 4).map(|i| (i as f64 / 10.0).sin()).collect();
+        let packed = encrypt_clip(&engine, &layout, &x, v, c, 3).unwrap();
+        assert_eq!(packed.cts.len(), v);
+        let back = decrypt_clip(&engine, &layout, &packed.cts, c);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! CKKS canonical-embedding encoder.
+//!
+//! Packs `N/2` complex (here: real) slots into one plaintext polynomial via
+//! the special FFT over the 5-power rotation group (the HEAAN/SEAL layout):
+//! slot `i` is the evaluation of the polynomial at `ζ^{5^i}` where `ζ` is a
+//! primitive 2N-th root of unity. This layout makes the Galois automorphism
+//! `x → x^{5^k}` act as a cyclic rotation of the slot vector — the `Rot(ct,k)`
+//! operation the paper's AMA format relies on.
+
+use super::params::CkksContext;
+use super::poly::RnsPoly;
+
+/// Minimal complex number (avoids an external dependency).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+/// A plaintext: an encoded polynomial (NTT form) plus scale and level shape.
+#[derive(Clone, Debug)]
+pub struct Plaintext {
+    pub poly: RnsPoly,
+    pub scale: f64,
+}
+
+/// Encoder precomputations for one ring degree.
+pub struct Encoder {
+    n: usize,
+    /// 2N-th roots of unity e^{2πi j / 2N}, j in 0..2N.
+    ksi: Vec<C64>,
+    /// rot_group[i] = 5^i mod 2N, i in 0..N/2.
+    rot_group: Vec<usize>,
+}
+
+fn bit_reverse_array(v: &mut [C64]) {
+    let n = v.len();
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = i.reverse_bits() >> (usize::BITS - bits);
+        if i < j {
+            v.swap(i, j);
+        }
+    }
+}
+
+impl Encoder {
+    pub fn new(n: usize) -> Self {
+        let m = 2 * n;
+        let ksi: Vec<C64> = (0..m)
+            .map(|j| {
+                let theta = 2.0 * std::f64::consts::PI * j as f64 / m as f64;
+                C64::new(theta.cos(), theta.sin())
+            })
+            .collect();
+        let mut rot_group = Vec::with_capacity(n / 2);
+        let mut g = 1usize;
+        for _ in 0..n / 2 {
+            rot_group.push(g);
+            g = (g * 5) % m;
+        }
+        Encoder { n, ksi, rot_group }
+    }
+
+    /// Forward special FFT: polynomial "unpacked halves" -> slot values.
+    fn fft_special(&self, vals: &mut [C64]) {
+        let size = vals.len();
+        let m = 2 * self.n;
+        bit_reverse_array(vals);
+        let mut len = 2;
+        while len <= size {
+            let lenh = len >> 1;
+            let lenq = len << 2;
+            let mut i = 0;
+            while i < size {
+                for j in 0..lenh {
+                    let idx = (self.rot_group[j] % lenq) * (m / lenq);
+                    let u = vals[i + j];
+                    let v = vals[i + j + lenh].mul(self.ksi[idx]);
+                    vals[i + j] = u.add(v);
+                    vals[i + j + lenh] = u.sub(v);
+                }
+                i += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// Inverse special FFT: slot values -> polynomial "unpacked halves".
+    fn fft_special_inv(&self, vals: &mut [C64]) {
+        let size = vals.len();
+        let m = 2 * self.n;
+        let mut len = size;
+        while len >= 2 {
+            let lenh = len >> 1;
+            let lenq = len << 2;
+            let mut i = 0;
+            while i < size {
+                for j in 0..lenh {
+                    let idx = (lenq - (self.rot_group[j] % lenq)) * (m / lenq);
+                    let u = vals[i + j].add(vals[i + j + lenh]);
+                    let v = vals[i + j].sub(vals[i + j + lenh]).mul(self.ksi[idx]);
+                    vals[i + j] = u;
+                    vals[i + j + lenh] = v;
+                }
+                i += len;
+            }
+            len >>= 1;
+        }
+        bit_reverse_array(vals);
+        let inv = 1.0 / size as f64;
+        for v in vals.iter_mut() {
+            v.re *= inv;
+            v.im *= inv;
+        }
+    }
+
+    /// Encode complex slots (length N/2) at `scale` into a plaintext with
+    /// `nq` RNS limbs. Output polynomial is in NTT form, ready for PMult.
+    pub fn encode_complex(
+        &self,
+        ctx: &CkksContext,
+        slots: &[C64],
+        scale: f64,
+        nq: usize,
+    ) -> Plaintext {
+        let half = self.n / 2;
+        assert!(slots.len() <= half, "too many slots");
+        let mut vals = vec![C64::default(); half];
+        vals[..slots.len()].copy_from_slice(slots);
+        self.fft_special_inv(&mut vals);
+        let mut coeffs = vec![0i128; self.n];
+        for i in 0..half {
+            coeffs[i] = (vals[i].re * scale).round() as i128;
+            coeffs[i + half] = (vals[i].im * scale).round() as i128;
+        }
+        let mut poly = RnsPoly::from_signed_coeffs_i128(ctx, &coeffs, nq);
+        poly.ntt_forward(ctx);
+        Plaintext { poly, scale }
+    }
+
+    /// Encode real slots at `scale`.
+    pub fn encode(&self, ctx: &CkksContext, slots: &[f64], scale: f64, nq: usize) -> Plaintext {
+        let c: Vec<C64> = slots.iter().map(|&x| C64::new(x, 0.0)).collect();
+        self.encode_complex(ctx, &c, scale, nq)
+    }
+
+    /// Decode a plaintext polynomial (any form) back to complex slots.
+    pub fn decode_complex(&self, ctx: &CkksContext, pt: &Plaintext) -> Vec<C64> {
+        let mut poly = pt.poly.clone();
+        if poly.is_ntt {
+            poly.ntt_inverse(ctx);
+        }
+        let coeffs = poly.to_signed_coeffs_i128(ctx);
+        let half = self.n / 2;
+        let inv_scale = 1.0 / pt.scale;
+        let mut vals: Vec<C64> = (0..half)
+            .map(|i| {
+                C64::new(
+                    coeffs[i] as f64 * inv_scale,
+                    coeffs[i + half] as f64 * inv_scale,
+                )
+            })
+            .collect();
+        self.fft_special(&mut vals);
+        vals
+    }
+
+    /// Decode real slots (imaginary parts discarded).
+    pub fn decode(&self, ctx: &CkksContext, pt: &Plaintext) -> Vec<f64> {
+        self.decode_complex(ctx, pt).into_iter().map(|c| c.re).collect()
+    }
+
+    /// Galois element g = 5^k mod 2N whose automorphism rotates the slot
+    /// vector left by `k` positions.
+    pub fn rotation_galois_element(&self, k: usize) -> usize {
+        let m = 2 * self.n;
+        let half = self.n / 2;
+        let k = k % half;
+        // 5^k mod 2N
+        let mut g = 1usize;
+        for _ in 0..k {
+            g = (g * 5) % m;
+        }
+        g
+    }
+
+    /// Galois element for complex conjugation of all slots.
+    pub fn conjugation_galois_element(&self) -> usize {
+        2 * self.n - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    fn setup() -> (std::sync::Arc<crate::ckks::params::CkksContext>, Encoder) {
+        let mut p = CkksParams::toy(3);
+        p.n = 1 << 8;
+        let ctx = p.build().unwrap();
+        let enc = Encoder::new(ctx.n);
+        (ctx, enc)
+    }
+
+    #[test]
+    fn test_encode_decode_roundtrip() {
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let slots: Vec<f64> = (0..half).map(|i| (i as f64 / half as f64) * 2.0 - 1.0).collect();
+        let pt = enc.encode(&ctx, &slots, ctx.scale, 4);
+        let back = enc.decode(&ctx, &pt);
+        for (a, b) in slots.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn test_encode_decode_complex_roundtrip() {
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let slots: Vec<C64> = (0..half)
+            .map(|i| C64::new((i as f64).sin(), (i as f64).cos()))
+            .collect();
+        let pt = enc.encode_complex(&ctx, &slots, ctx.scale, 2);
+        let back = enc.decode_complex(&ctx, &pt);
+        for (a, b) in slots.iter().zip(&back) {
+            assert!((a.re - b.re).abs() < 1e-6 && (a.im - b.im).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn test_poly_mult_is_slotwise_product() {
+        // the defining homomorphism: negacyclic poly product == slot product
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| ((i * 7 % 13) as f64 - 6.0) / 6.0).collect();
+        let b: Vec<f64> = (0..half).map(|i| ((i * 5 % 11) as f64 - 5.0) / 5.0).collect();
+        let pa = enc.encode(&ctx, &a, ctx.scale, 3);
+        let pb = enc.encode(&ctx, &b, ctx.scale, 3);
+        let prod = Plaintext {
+            poly: pa.poly.mul(&ctx, &pb.poly),
+            scale: pa.scale * pb.scale,
+        };
+        let got = enc.decode(&ctx, &prod);
+        for i in 0..half {
+            assert!(
+                (got[i] - a[i] * b[i]).abs() < 1e-5,
+                "slot {i}: {} vs {}",
+                got[i],
+                a[i] * b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn test_automorphism_rotates_slots() {
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let slots: Vec<f64> = (0..half).map(|i| i as f64).collect();
+        let pt = enc.encode(&ctx, &slots, ctx.scale, 2);
+        for k in [1usize, 2, 7, half - 1] {
+            let g = enc.rotation_galois_element(k);
+            let mut poly = pt.poly.clone();
+            poly.ntt_inverse(&ctx);
+            let rotated = poly.automorphism(&ctx, g);
+            let rpt = Plaintext {
+                poly: rotated,
+                scale: pt.scale,
+            };
+            let got = enc.decode(&ctx, &rpt);
+            for i in 0..half {
+                let want = slots[(i + k) % half];
+                assert!(
+                    (got[i] - want).abs() < 1e-5,
+                    "k={k} slot {i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_conjugation_element() {
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let slots: Vec<C64> = (0..half).map(|i| C64::new(i as f64, (i as f64) * 0.5)).collect();
+        let pt = enc.encode_complex(&ctx, &slots, ctx.scale, 2);
+        let mut poly = pt.poly.clone();
+        poly.ntt_inverse(&ctx);
+        let conj = poly.automorphism(&ctx, enc.conjugation_galois_element());
+        let got = enc.decode_complex(
+            &ctx,
+            &Plaintext {
+                poly: conj,
+                scale: pt.scale,
+            },
+        );
+        for i in 0..half {
+            assert!((got[i].re - slots[i].re).abs() < 1e-5);
+            assert!((got[i].im + slots[i].im).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn test_scale_drift_tolerance() {
+        // encoding at a non-power-of-two scale (as after rescale) still works
+        let (ctx, enc) = setup();
+        let half = ctx.slots();
+        let slots: Vec<f64> = (0..half).map(|i| (i % 10) as f64 / 10.0).collect();
+        let odd_scale = ctx.scale * 1.0173; // mimics Δ²/q_l drift
+        let pt = enc.encode(&ctx, &slots, odd_scale, 2);
+        let back = enc.decode(&ctx, &pt);
+        for (a, b) in slots.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

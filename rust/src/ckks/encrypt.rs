@@ -1,0 +1,127 @@
+//! Encryption and decryption.
+//!
+//! Ciphertexts are pairs `(c0, c1)` with `c0 + c1·s ≈ Δ·m + e (mod Q_ℓ)`.
+//! Both components are stored in NTT form; the `level` is `nq - 1` (the
+//! number of Rescale operations still available).
+
+use super::encoding::Plaintext;
+use super::keys::{PublicKey, SecretKey};
+use super::params::CkksContext;
+use super::poly::RnsPoly;
+use crate::util::Rng;
+
+/// A CKKS ciphertext.
+#[derive(Clone, Debug)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    /// Current encoding scale (drifts slightly away from Δ across rescales).
+    pub scale: f64,
+}
+
+impl Ciphertext {
+    /// Remaining multiplicative level (number of rescales available).
+    pub fn level(&self) -> usize {
+        self.c0.nq - 1
+    }
+
+    pub fn nq(&self) -> usize {
+        self.c0.nq
+    }
+}
+
+/// Public-key encryption of an encoded plaintext.
+pub fn encrypt(
+    ctx: &CkksContext,
+    pk: &PublicKey,
+    pt: &Plaintext,
+    rng: &mut Rng,
+) -> Ciphertext {
+    let nq = pt.poly.nq;
+    assert!(pt.poly.is_ntt, "plaintext must be in NTT form");
+    let mut v = RnsPoly::sample_ternary(ctx, nq, false, rng);
+    v.ntt_forward(ctx);
+    let mut e0 = RnsPoly::sample_gaussian(ctx, nq, false, rng);
+    e0.ntt_forward(ctx);
+    let mut e1 = RnsPoly::sample_gaussian(ctx, nq, false, rng);
+    e1.ntt_forward(ctx);
+
+    let pk_b = pk.b.subset(nq, false);
+    let pk_a = pk.a.subset(nq, false);
+    let mut c0 = v.mul(ctx, &pk_b);
+    c0.add_assign(ctx, &e0);
+    c0.add_assign(ctx, &pt.poly);
+    let mut c1 = v.mul(ctx, &pk_a);
+    c1.add_assign(ctx, &e1);
+
+    Ciphertext {
+        c0,
+        c1,
+        scale: pt.scale,
+    }
+}
+
+/// Decryption: `m ≈ c0 + c1·s`.
+pub fn decrypt(ctx: &CkksContext, sk: &SecretKey, ct: &Ciphertext) -> Plaintext {
+    let nq = ct.c0.nq;
+    let s_q = sk.s.subset(nq, false);
+    let mut m = ct.c1.mul(ctx, &s_q);
+    m.add_assign(ctx, &ct.c0);
+    Plaintext {
+        poly: m,
+        scale: ct.scale,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::keys::{keygen_public, keygen_secret};
+    use crate::ckks::params::CkksParams;
+
+    #[test]
+    fn test_encrypt_decrypt_roundtrip() {
+        let mut p = CkksParams::toy(3);
+        p.n = 1 << 9;
+        let ctx = p.build().unwrap();
+        let enc = Encoder::new(ctx.n);
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        let sk = keygen_secret(&ctx, &mut rng);
+        let pk = keygen_public(&ctx, &sk, &mut rng);
+
+        let half = ctx.slots();
+        let vals: Vec<f64> = (0..half).map(|i| ((i % 17) as f64 - 8.0) / 8.0).collect();
+        let pt = enc.encode(&ctx, &vals, ctx.scale, 4);
+        let ct = encrypt(&ctx, &pk, &pt, &mut rng);
+        assert_eq!(ct.level(), 3);
+        let dec = decrypt(&ctx, &sk, &ct);
+        let back = enc.decode(&ctx, &dec);
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn test_additive_homomorphism() {
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 8;
+        let ctx = p.build().unwrap();
+        let enc = Encoder::new(ctx.n);
+        let mut rng = crate::util::Rng::seed_from_u64(13);
+        let sk = keygen_secret(&ctx, &mut rng);
+        let pk = keygen_public(&ctx, &sk, &mut rng);
+        let half = ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..half).map(|i| (i as f64).cos()).collect();
+        let cta = encrypt(&ctx, &pk, &enc.encode(&ctx, &a, ctx.scale, 3), &mut rng);
+        let ctb = encrypt(&ctx, &pk, &enc.encode(&ctx, &b, ctx.scale, 3), &mut rng);
+        let mut sum = cta.clone();
+        sum.c0.add_assign(&ctx, &ctb.c0);
+        sum.c1.add_assign(&ctx, &ctb.c1);
+        let back = enc.decode(&ctx, &decrypt(&ctx, &sk, &sum));
+        for i in 0..half {
+            assert!((back[i] - (a[i] + b[i])).abs() < 1e-4);
+        }
+    }
+}

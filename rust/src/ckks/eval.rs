@@ -1,0 +1,650 @@
+//! The homomorphic evaluator: Add, CMult(+relin), PMult, Rot, Rescale,
+//! conjugation and level management — the exact operation algebra of the
+//! paper's Section 2, with per-op counters feeding the cost model
+//! (DESIGN.md S12) so every paper table can be regenerated from real
+//! operation counts.
+
+use super::encoding::{Encoder, Plaintext};
+use super::encrypt::Ciphertext;
+use super::keys::{EvalKeys, KeySwitchKey};
+use super::params::CkksContext;
+use super::poly::RnsPoly;
+use super::zq;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Homomorphic-op counters, keyed the way the paper's Table 7 reports them.
+#[derive(Default, Debug)]
+pub struct OpCounters {
+    pub add: AtomicU64,
+    pub pmult: AtomicU64,
+    pub cmult: AtomicU64,
+    pub rot: AtomicU64,
+    pub rescale: AtomicU64,
+    /// Σ over ops of the RNS limb count at which the op ran (cost ∝ limbs).
+    pub add_limbs: AtomicU64,
+    pub pmult_limbs: AtomicU64,
+    pub cmult_limbs: AtomicU64,
+    pub rot_limbs: AtomicU64,
+    pub rescale_limbs: AtomicU64,
+    /// Σ limbs² for the key-switching ops (their cost is quadratic in the
+    /// limb count: digits × extended-basis NTT work).
+    pub cmult_limbs_sq: AtomicU64,
+    pub rot_limbs_sq: AtomicU64,
+}
+
+/// A plain-old-data snapshot of the counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCounts {
+    pub add: u64,
+    pub pmult: u64,
+    pub cmult: u64,
+    pub rot: u64,
+    pub rescale: u64,
+    pub add_limbs: u64,
+    pub pmult_limbs: u64,
+    pub cmult_limbs: u64,
+    pub rot_limbs: u64,
+    pub rescale_limbs: u64,
+    pub cmult_limbs_sq: u64,
+    pub rot_limbs_sq: u64,
+}
+
+impl OpCounters {
+    pub fn snapshot(&self) -> OpCounts {
+        OpCounts {
+            add: self.add.load(Ordering::Relaxed),
+            pmult: self.pmult.load(Ordering::Relaxed),
+            cmult: self.cmult.load(Ordering::Relaxed),
+            rot: self.rot.load(Ordering::Relaxed),
+            rescale: self.rescale.load(Ordering::Relaxed),
+            add_limbs: self.add_limbs.load(Ordering::Relaxed),
+            pmult_limbs: self.pmult_limbs.load(Ordering::Relaxed),
+            cmult_limbs: self.cmult_limbs.load(Ordering::Relaxed),
+            rot_limbs: self.rot_limbs.load(Ordering::Relaxed),
+            rescale_limbs: self.rescale_limbs.load(Ordering::Relaxed),
+            cmult_limbs_sq: self.cmult_limbs_sq.load(Ordering::Relaxed),
+            rot_limbs_sq: self.rot_limbs_sq.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        for c in [
+            &self.add,
+            &self.pmult,
+            &self.cmult,
+            &self.rot,
+            &self.rescale,
+            &self.add_limbs,
+            &self.pmult_limbs,
+            &self.cmult_limbs,
+            &self.rot_limbs,
+            &self.rescale_limbs,
+            &self.cmult_limbs_sq,
+            &self.rot_limbs_sq,
+        ] {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl OpCounts {
+    pub fn total_ops(&self) -> u64 {
+        self.add + self.pmult + self.cmult + self.rot
+    }
+}
+
+/// The evaluator. `Clone`-cheap via `Arc`s; thread-safe counters.
+pub struct Evaluator {
+    pub ctx: Arc<CkksContext>,
+    pub keys: Arc<EvalKeys>,
+    pub counters: OpCounters,
+    /// Relative scale mismatch tolerated by `add` before erroring.
+    pub scale_rtol: f64,
+    /// Cached NTT-domain automorphism permutations per Galois element.
+    auto_perms: Mutex<HashMap<usize, Arc<Vec<usize>>>>,
+}
+
+impl Evaluator {
+    pub fn new(ctx: Arc<CkksContext>, keys: Arc<EvalKeys>) -> Self {
+        Evaluator {
+            ctx,
+            keys,
+            counters: OpCounters::default(),
+            scale_rtol: 1e-3,
+            auto_perms: Mutex::new(HashMap::new()),
+        }
+    }
+
+    // ---------------------------------------------------------------- add
+
+    /// Homomorphic addition. Levels are aligned by dropping limbs; scales
+    /// must agree to within `scale_rtol`.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        assert!(
+            (a.scale - b.scale).abs() / a.scale < self.scale_rtol,
+            "scale mismatch in add: {} vs {}",
+            a.scale,
+            b.scale
+        );
+        let mut out = a.clone();
+        out.c0.add_assign(&self.ctx, &b.c0);
+        out.c1.add_assign(&self.ctx, &b.c1);
+        self.counters.add.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .add_limbs
+            .fetch_add(out.c0.nq as u64, Ordering::Relaxed);
+        out
+    }
+
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        let mut out = a.clone();
+        out.c0.sub_assign(&self.ctx, &b.c0);
+        out.c1.sub_assign(&self.ctx, &b.c1);
+        self.counters.add.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .add_limbs
+            .fetch_add(out.c0.nq as u64, Ordering::Relaxed);
+        out
+    }
+
+    pub fn negate(&self, a: &Ciphertext) -> Ciphertext {
+        let mut out = a.clone();
+        out.c0.neg_assign(&self.ctx);
+        out.c1.neg_assign(&self.ctx);
+        out
+    }
+
+    /// ct + pt (plaintext must share scale and level shape).
+    pub fn add_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let mut out = a.clone();
+        let p = if pt.poly.nq == out.c0.nq {
+            pt.poly.clone()
+        } else {
+            let mut p = pt.poly.clone();
+            assert!(p.nq >= out.c0.nq, "plaintext encoded at too low a level");
+            p.truncate_to(out.c0.nq);
+            p
+        };
+        assert!(
+            (a.scale - pt.scale).abs() / a.scale < self.scale_rtol,
+            "scale mismatch in add_plain"
+        );
+        out.c0.add_assign(&self.ctx, &p);
+        self.counters.add.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .add_limbs
+            .fetch_add(out.c0.nq as u64, Ordering::Relaxed);
+        out
+    }
+
+    // -------------------------------------------------------------- pmult
+
+    /// Plaintext multiplication (no relinearization, no key material).
+    /// Result scale = ct.scale * pt.scale; caller typically rescales.
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &Plaintext) -> Ciphertext {
+        let nq = a.c0.nq;
+        let p = if pt.poly.nq == nq {
+            pt.poly.clone()
+        } else {
+            let mut p = pt.poly.clone();
+            assert!(p.nq >= nq);
+            p.truncate_to(nq);
+            p
+        };
+        let mut out = a.clone();
+        out.c0.mul_assign(&self.ctx, &p);
+        out.c1.mul_assign(&self.ctx, &p);
+        out.scale = a.scale * pt.scale;
+        self.counters.pmult.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .pmult_limbs
+            .fetch_add(nq as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Multiply by a scalar constant, encoded on the fly at scale Δ.
+    pub fn mul_scalar(&self, enc: &Encoder, a: &Ciphertext, v: f64) -> Ciphertext {
+        let slots = vec![v; self.ctx.slots()];
+        let pt = enc.encode(&self.ctx, &slots, self.ctx.scale, a.c0.nq);
+        self.mul_plain(a, &pt)
+    }
+
+    // -------------------------------------------------------------- cmult
+
+    /// Ciphertext-ciphertext multiplication with relinearization.
+    /// Result scale is the product; caller typically rescales.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        let ctx = &self.ctx;
+        let d0 = a.c0.mul(ctx, &b.c0);
+        let mut d1 = a.c0.mul(ctx, &b.c1);
+        d1.add_assign(ctx, &a.c1.mul(ctx, &b.c0));
+        let d2 = a.c1.mul(ctx, &b.c1);
+
+        // relinearize d2: key-switch from s² to s
+        let (u0, u1) = self.key_switch(&d2, &self.keys.relin);
+        let mut c0 = d0;
+        c0.add_assign(ctx, &u0);
+        let mut c1 = d1;
+        c1.add_assign(ctx, &u1);
+
+        self.counters.cmult.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .cmult_limbs
+            .fetch_add(c0.nq as u64, Ordering::Relaxed);
+        self.counters
+            .cmult_limbs_sq
+            .fetch_add((c0.nq * c0.nq) as u64, Ordering::Relaxed);
+        Ciphertext {
+            c0,
+            c1,
+            scale: a.scale * b.scale,
+        }
+    }
+
+    /// Homomorphic square (same cost shape as `mul`).
+    pub fn square(&self, a: &Ciphertext) -> Ciphertext {
+        self.mul(a, a)
+    }
+
+    // ---------------------------------------------------------------- rot
+
+    /// Rotate slot vector left by `k` (paper's `Rot(ct, k)`), via the Galois
+    /// automorphism x → x^{5^k} followed by a key switch.
+    pub fn rotate(&self, enc: &Encoder, a: &Ciphertext, k: usize) -> Ciphertext {
+        let half = self.ctx.slots();
+        let k = k % half;
+        if k == 0 {
+            return a.clone();
+        }
+        let g = enc.rotation_galois_element(k);
+        self.apply_galois(a, g)
+    }
+
+    /// Complex-conjugate every slot.
+    pub fn conjugate(&self, enc: &Encoder, a: &Ciphertext) -> Ciphertext {
+        self.apply_galois(a, enc.conjugation_galois_element())
+    }
+
+    fn apply_galois(&self, a: &Ciphertext, g: usize) -> Ciphertext {
+        let ctx = &self.ctx;
+        let key = self
+            .keys
+            .galois
+            .get(&g)
+            .unwrap_or_else(|| panic!("no galois key for element {g}"));
+        // c0: permute directly in NTT domain (no NTT round-trip, §Perf)
+        let perm = {
+            let mut cache = self.auto_perms.lock().unwrap();
+            cache
+                .entry(g)
+                .or_insert_with(|| {
+                    Arc::new(super::poly::ntt_automorphism_permutation(ctx.n, g))
+                })
+                .clone()
+        };
+        let tc0 = a.c0.automorphism_ntt(&perm);
+        // c1: key switching needs coefficient-form digits
+        let mut c1 = a.c1.clone();
+        c1.ntt_inverse(ctx);
+        let tc1 = c1.automorphism(ctx, g);
+        let (u0, u1) = self.key_switch_coeff(&tc1, key);
+        let mut r0 = tc0;
+        r0.add_assign(ctx, &u0);
+        self.counters.rot.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .rot_limbs
+            .fetch_add(r0.nq as u64, Ordering::Relaxed);
+        self.counters
+            .rot_limbs_sq
+            .fetch_add((r0.nq * r0.nq) as u64, Ordering::Relaxed);
+        Ciphertext {
+            c0: r0,
+            c1: u1,
+            scale: a.scale,
+        }
+    }
+
+    // ------------------------------------------------------------ rescale
+
+    /// CKKS Rescale: divide by the last chain prime, dropping one level.
+    pub fn rescale(&self, a: &Ciphertext) -> Ciphertext {
+        let ctx = &self.ctx;
+        assert!(a.c0.nq > 1, "no levels left to rescale");
+        let q_last = ctx.moduli[a.c0.nq - 1] as f64;
+        let mut c0 = a.c0.clone();
+        let mut c1 = a.c1.clone();
+        c0.ntt_inverse(ctx);
+        c1.ntt_inverse(ctx);
+        c0.rescale_last(ctx);
+        c1.rescale_last(ctx);
+        c0.ntt_forward(ctx);
+        c1.ntt_forward(ctx);
+        self.counters.rescale.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .rescale_limbs
+            .fetch_add(c0.nq as u64, Ordering::Relaxed);
+        Ciphertext {
+            c0,
+            c1,
+            scale: a.scale / q_last,
+        }
+    }
+
+    /// Drop limbs without rescaling (modulus switch), aligning to `level`.
+    pub fn mod_drop_to_level(&self, a: &Ciphertext, level: usize) -> Ciphertext {
+        let target_nq = level + 1;
+        assert!(target_nq <= a.c0.nq, "cannot raise level");
+        if target_nq == a.c0.nq {
+            return a.clone();
+        }
+        let mut out = a.clone();
+        out.c0.truncate_to(target_nq);
+        out.c1.truncate_to(target_nq);
+        out
+    }
+
+    fn align(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
+        if a.c0.nq == b.c0.nq {
+            (a.clone(), b.clone())
+        } else if a.c0.nq > b.c0.nq {
+            (self.mod_drop_to_level(a, b.level()), b.clone())
+        } else {
+            (a.clone(), self.mod_drop_to_level(b, a.level()))
+        }
+    }
+
+    // --------------------------------------------------------- key switch
+
+    /// Hybrid key switch of an NTT-form degree-2 component.
+    fn key_switch(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
+        let mut dc = d.clone();
+        dc.ntt_inverse(&self.ctx);
+        self.key_switch_coeff(&dc, key)
+    }
+
+    /// Hybrid key switch, coefficient-form input. Returns NTT-form pair
+    /// over the same Q limbs as the input.
+    fn key_switch_coeff(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
+        let ctx = &self.ctx;
+        assert!(!d.is_ntt && !d.has_special);
+        let nq = d.nq;
+        let n = ctx.n;
+        let mut acc0 = RnsPoly::zero(ctx, nq, true, true);
+        let mut acc1 = RnsPoly::zero(ctx, nq, true, true);
+        for i in 0..nq {
+            // digit i: the integer residues [d]_{q_i}, spread over Q_ℓ ∪ {P}
+            let src = &d.limbs[i];
+            let mut digit = RnsPoly::zero(ctx, nq, true, false);
+            for j in 0..=nq {
+                let dst = &mut digit.limbs[j];
+                if j == i {
+                    dst.copy_from_slice(src);
+                } else {
+                    let br = if j < nq {
+                        ctx.barrett_for(j)
+                    } else {
+                        ctx.barrett_for(ctx.moduli.len())
+                    };
+                    for t in 0..n {
+                        dst[t] = br.reduce_u64(src[t]);
+                    }
+                }
+            }
+            digit.ntt_forward(ctx);
+            let kb = key.digits[i].b.subset(nq, true);
+            let ka = key.digits[i].a.subset(nq, true);
+            acc0.mul_acc(ctx, &digit, &kb);
+            acc1.mul_acc(ctx, &digit, &ka);
+        }
+        // ModDown by P (divide by the special prime, rounding)
+        acc0.ntt_inverse(ctx);
+        acc1.ntt_inverse(ctx);
+        let mut u0 = self.mod_down(&acc0);
+        let mut u1 = self.mod_down(&acc1);
+        u0.ntt_forward(ctx);
+        u1.ntt_forward(ctx);
+        (u0, u1)
+    }
+
+    /// Exact division by the special prime with centered rounding.
+    fn mod_down(&self, u: &RnsPoly) -> RnsPoly {
+        let ctx = &self.ctx;
+        assert!(!u.is_ntt && u.has_special);
+        let nq = u.nq;
+        let sp = &u.limbs[nq]; // residues mod P
+        let p = ctx.special;
+        let half = p / 2;
+        let mut out = RnsPoly::zero(ctx, nq, false, false);
+        for j in 0..nq {
+            let q_j = ctx.moduli[j];
+            let p_mod = ctx.p_mod[j];
+            let p_inv = zq::ShoupMul::new(ctx.p_inv[j], q_j);
+            let br = ctx.barrett_for(j);
+            let dst = &mut out.limbs[j];
+            let src = &u.limbs[j];
+            for t in 0..ctx.n {
+                let r = sp[t];
+                let mut v = zq::sub_mod(src[t], br.reduce_u64(r), q_j);
+                if r > half {
+                    v = zq::add_mod(v, p_mod, q_j);
+                }
+                dst[t] = p_inv.mul(v, q_j);
+            }
+        }
+        out
+    }
+}
+
+/// Generate all evaluation keys for a set of rotation steps.
+pub fn build_eval_keys(
+    ctx: &Arc<CkksContext>,
+    enc: &Encoder,
+    sk: &super::keys::SecretKey,
+    rotation_steps: &[usize],
+    with_conjugation: bool,
+    rng: &mut crate::util::Rng,
+) -> EvalKeys {
+    let relin = super::keys::keygen_relin(ctx, sk, rng);
+    let mut galois = HashMap::new();
+    for &k in rotation_steps {
+        let g = enc.rotation_galois_element(k);
+        galois
+            .entry(g)
+            .or_insert_with(|| super::keys::keygen_galois(ctx, sk, g, rng));
+    }
+    if with_conjugation {
+        let g = enc.conjugation_galois_element();
+        galois
+            .entry(g)
+            .or_insert_with(|| super::keys::keygen_galois(ctx, sk, g, rng));
+    }
+    EvalKeys { relin, galois }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Encoder;
+    use crate::ckks::encrypt::{decrypt, encrypt};
+    use crate::ckks::keys::{keygen_public, keygen_secret};
+    use crate::ckks::params::CkksParams;
+
+    struct Fixture {
+        ctx: Arc<CkksContext>,
+        enc: Encoder,
+        sk: crate::ckks::keys::SecretKey,
+        pk: crate::ckks::keys::PublicKey,
+        ev: Evaluator,
+        rng: crate::util::Rng,
+    }
+
+    fn fixture(levels: usize, log_n: u32, rots: &[usize]) -> Fixture {
+        let mut p = CkksParams::toy(levels);
+        p.n = 1 << log_n;
+        let ctx = p.build().unwrap();
+        let enc = Encoder::new(ctx.n);
+        let mut rng = crate::util::Rng::seed_from_u64(99);
+        let sk = keygen_secret(&ctx, &mut rng);
+        let pk = keygen_public(&ctx, &sk, &mut rng);
+        let keys = Arc::new(build_eval_keys(&ctx, &enc, &sk, rots, false, &mut rng));
+        let ev = Evaluator::new(ctx.clone(), keys);
+        Fixture {
+            ctx,
+            enc,
+            sk,
+            pk,
+            ev,
+            rng,
+        }
+    }
+
+    fn enc_vec(f: &mut Fixture, v: &[f64]) -> Ciphertext {
+        let pt = f.enc.encode(&f.ctx, v, f.ctx.scale, f.ctx.max_level() + 1);
+        encrypt(&f.ctx, &f.pk, &pt, &mut f.rng)
+    }
+
+    fn dec_vec(f: &Fixture, ct: &Ciphertext) -> Vec<f64> {
+        f.enc.decode(&f.ctx, &decrypt(&f.ctx, &f.sk, ct))
+    }
+
+    #[test]
+    fn test_cmult_relin_rescale() {
+        let mut f = fixture(3, 9, &[]);
+        let half = f.ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| ((i % 7) as f64 - 3.0) / 3.0).collect();
+        let b: Vec<f64> = (0..half).map(|i| ((i % 5) as f64 - 2.0) / 2.0).collect();
+        let (ca, cb) = (enc_vec(&mut f, &a), enc_vec(&mut f, &b));
+        let prod = f.ev.rescale(&f.ev.mul(&ca, &cb));
+        assert_eq!(prod.level(), 2);
+        let got = dec_vec(&f, &prod);
+        for i in 0..half {
+            assert!(
+                (got[i] - a[i] * b[i]).abs() < 1e-3,
+                "slot {i}: {} vs {}",
+                got[i],
+                a[i] * b[i]
+            );
+        }
+        let c = f.ev.counters.snapshot();
+        assert_eq!(c.cmult, 1);
+        assert_eq!(c.rescale, 1);
+    }
+
+    #[test]
+    fn test_full_depth_chain() {
+        // consume every level with successive squarings: x^(2^L)
+        let mut f = fixture(3, 9, &[]);
+        let half = f.ctx.slots();
+        let x = 0.9f64;
+        let v = vec![x; half];
+        let mut ct = enc_vec(&mut f, &v);
+        let mut want = x;
+        for _ in 0..3 {
+            ct = f.ev.rescale(&f.ev.square(&ct));
+            want = want * want;
+        }
+        assert_eq!(ct.level(), 0);
+        let got = dec_vec(&f, &ct);
+        assert!((got[0] - want).abs() < 2e-2, "{} vs {want}", got[0]);
+    }
+
+    #[test]
+    fn test_pmult_and_rescale() {
+        let mut f = fixture(2, 9, &[]);
+        let half = f.ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| (i % 9) as f64 / 9.0).collect();
+        let w: Vec<f64> = (0..half).map(|i| ((i % 4) as f64 - 1.5) / 1.5).collect();
+        let ca = enc_vec(&mut f, &a);
+        let pw = f.enc.encode(&f.ctx, &w, f.ctx.scale, ca.nq());
+        let r = f.ev.rescale(&f.ev.mul_plain(&ca, &pw));
+        let got = dec_vec(&f, &r);
+        for i in 0..half {
+            assert!((got[i] - a[i] * w[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn test_rotation() {
+        let mut f = fixture(2, 9, &[1, 3, 64]);
+        let half = f.ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| i as f64 / half as f64).collect();
+        let ca = enc_vec(&mut f, &a);
+        for k in [1usize, 3, 64] {
+            let r = f.ev.rotate(&f.enc, &ca, k);
+            let got = dec_vec(&f, &r);
+            for i in 0..half {
+                let want = a[(i + k) % half];
+                assert!((got[i] - want).abs() < 1e-3, "k={k} i={i}");
+            }
+        }
+        assert_eq!(f.ev.counters.snapshot().rot, 3);
+    }
+
+    #[test]
+    fn test_rotation_by_zero_is_free() {
+        let mut f = fixture(1, 8, &[]);
+        let a = vec![0.5; f.ctx.slots()];
+        let ca = enc_vec(&mut f, &a);
+        let r = f.ev.rotate(&f.enc, &ca, 0);
+        assert_eq!(f.ev.counters.snapshot().rot, 0);
+        let got = dec_vec(&f, &r);
+        assert!((got[0] - 0.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn test_add_aligns_levels() {
+        let mut f = fixture(2, 8, &[]);
+        let half = f.ctx.slots();
+        let a = vec![0.25; half];
+        let ca = enc_vec(&mut f, &a);
+        let cb = enc_vec(&mut f, &a);
+        // drop cb one level, then add: result at the lower level
+        let cb_low = f.ev.mod_drop_to_level(&cb, 1);
+        let s = f.ev.add(&ca, &cb_low);
+        assert_eq!(s.level(), 1);
+        let got = dec_vec(&f, &s);
+        assert!((got[0] - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn test_poly_activation_pattern() {
+        // the paper's fused node-wise activation: y = (αx)² + w1·x + b
+        // evaluated as CMult(x̃,x̃) + PMult(x, w1) + b — one level consumed.
+        let mut f = fixture(2, 9, &[]);
+        let half = f.ctx.slots();
+        let xs: Vec<f64> = (0..half).map(|i| ((i % 11) as f64 - 5.0) / 5.0).collect();
+        let (alpha, w1, b) = (0.6f64, 0.8f64, 0.1f64);
+        let ct = enc_vec(&mut f, &xs);
+        // x̃ = αx arrives pre-scaled from the previous fused conv: simulate
+        let xt = f.ev.rescale(&f.ev.mul_scalar(&f.enc, &ct, alpha));
+        let sq = f.ev.mul(&xt, &xt); // scale²
+        let lin = f.ev.mul_scalar(&f.enc, &f.ev.mod_drop_to_level(&ct, xt.level()), w1);
+        // align scales: sq at xt.scale², lin at ct.scale*Δ — rescale both
+        let sq = f.ev.rescale(&sq);
+        let lin = f.ev.rescale(&lin);
+        let mut y = f.ev.add(&sq, &lin);
+        let bias = f.enc.encode(&f.ctx, &vec![b; half], y.scale, y.nq());
+        y = f.ev.add_plain(&y, &bias);
+        let got = dec_vec(&f, &y);
+        for i in 0..half {
+            let want = (alpha * xs[i]).powi(2) + w1 * xs[i] + b;
+            assert!((got[i] - want).abs() < 2e-2, "slot {i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn test_counters_reset() {
+        let mut f = fixture(1, 8, &[]);
+        let a = vec![0.1; f.ctx.slots()];
+        let ca = enc_vec(&mut f, &a);
+        let _ = f.ev.add(&ca, &ca);
+        assert!(f.ev.counters.snapshot().add > 0);
+        f.ev.counters.reset();
+        assert_eq!(f.ev.counters.snapshot(), OpCounts::default());
+    }
+}

@@ -1,0 +1,188 @@
+//! Key material: secret key, public key, and key-switching keys
+//! (relinearization + Galois) in the hybrid (special-prime) variant.
+//!
+//! A key-switching key from key `t` to secret `s` consists of one
+//! RLWE pair per RNS digit: `ksk_i = (b_i, a_i)` over the extended basis
+//! `Q·P` with `b_i = -a_i·s + e_i + P·g_i·t`, where `g_i` is the CRT basis
+//! element of `q_i` in `Q` (so `g_i ≡ δ_ij (mod q_j)` — which makes the same
+//! key valid at *every* level, the property the level-reduction story of the
+//! paper depends on).
+
+use super::params::CkksContext;
+use super::poly::RnsPoly;
+use super::zq;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Secret key: ternary polynomial, cached in NTT form over the full
+/// `Q ∪ {P}` basis so any level's limbs can be sliced out.
+pub struct SecretKey {
+    /// NTT form, nq = all Q primes, has_special = true.
+    pub s: RnsPoly,
+}
+
+/// Public encryption key `(b, a)` with `b = -a·s + e` over the full Q basis.
+pub struct PublicKey {
+    pub b: RnsPoly,
+    pub a: RnsPoly,
+}
+
+/// One digit of a key-switching key.
+#[derive(Clone)]
+pub struct KskDigit {
+    pub b: RnsPoly,
+    pub a: RnsPoly,
+}
+
+/// Key-switching key: one digit pair per RNS prime of Q.
+#[derive(Clone)]
+pub struct KeySwitchKey {
+    pub digits: Vec<KskDigit>,
+}
+
+/// All evaluation keys an `Evaluator` needs.
+pub struct EvalKeys {
+    pub relin: KeySwitchKey,
+    /// Galois element -> key (for rotations and conjugation).
+    pub galois: HashMap<usize, KeySwitchKey>,
+}
+
+impl RnsPoly {
+    /// Slice the first `nq` Q limbs plus (optionally) the special limb.
+    /// `self` must carry a special limb if `with_special` is requested.
+    pub fn subset(&self, nq: usize, with_special: bool) -> RnsPoly {
+        assert!(nq <= self.nq);
+        assert!(!with_special || self.has_special);
+        let mut limbs: Vec<Vec<u64>> = self.limbs[..nq].to_vec();
+        if with_special {
+            limbs.push(self.limbs[self.nq].clone());
+        }
+        RnsPoly {
+            limbs,
+            nq,
+            has_special: with_special,
+            is_ntt: self.is_ntt,
+        }
+    }
+}
+
+/// Generate a ternary secret key.
+pub fn keygen_secret(ctx: &CkksContext, rng: &mut Rng) -> SecretKey {
+    let k = ctx.moduli.len();
+    let mut s = RnsPoly::sample_ternary(ctx, k, true, rng);
+    s.ntt_forward(ctx);
+    SecretKey { s }
+}
+
+/// Generate the public key from the secret key (full Q basis, no special).
+pub fn keygen_public(ctx: &CkksContext, sk: &SecretKey, rng: &mut Rng) -> PublicKey {
+    let k = ctx.moduli.len();
+    let mut a = RnsPoly::sample_uniform(ctx, k, false, rng);
+    a.is_ntt = true; // uniform is uniform in either domain
+    let mut e = RnsPoly::sample_gaussian(ctx, k, false, rng);
+    e.ntt_forward(ctx);
+    // b = -a*s + e
+    let s_q = sk.s.subset(k, false);
+    let mut b = a.mul(ctx, &s_q);
+    b.neg_assign(ctx);
+    b.add_assign(ctx, &e);
+    PublicKey { b, a }
+}
+
+/// Generate a key-switching key from target key `t` (NTT form over Q∪{P})
+/// to the secret `s`.
+pub fn keygen_kswitch(
+    ctx: &CkksContext,
+    sk: &SecretKey,
+    t: &RnsPoly,
+    rng: &mut Rng,
+) -> KeySwitchKey {
+    let k = ctx.moduli.len();
+    assert!(t.is_ntt && t.nq == k && t.has_special);
+    let mut digits = Vec::with_capacity(k);
+    for i in 0..k {
+        let mut a = RnsPoly::sample_uniform(ctx, k, true, rng);
+        a.is_ntt = true;
+        let mut e = RnsPoly::sample_gaussian(ctx, k, true, rng);
+        e.ntt_forward(ctx);
+        // b = -a*s + e  over Q∪{P}
+        let mut b = a.mul(ctx, &sk.s);
+        b.neg_assign(ctx);
+        b.add_assign(ctx, &e);
+        // += P * g_i * t : only limb i of the Q part gets (P mod q_i) * t_i
+        let q_i = ctx.moduli[i];
+        let p_mod_qi = ctx.special % q_i;
+        for (slot, &tv) in b.limbs[i]
+            .iter_mut()
+            .zip(t.limbs[i].iter())
+            .map(|(s, t)| (s, t))
+        {
+            *slot = zq::add_mod(*slot, zq::mul_mod(p_mod_qi, tv, q_i), q_i);
+        }
+        digits.push(KskDigit { b, a });
+    }
+    KeySwitchKey { digits }
+}
+
+/// Relinearization key: key-switch from s² to s.
+pub fn keygen_relin(ctx: &CkksContext, sk: &SecretKey, rng: &mut Rng) -> KeySwitchKey {
+    let s2 = sk.s.mul(ctx, &sk.s);
+    keygen_kswitch(ctx, sk, &s2, rng)
+}
+
+/// Galois key for element `g`: key-switch from τ_g(s) to s.
+pub fn keygen_galois(
+    ctx: &CkksContext,
+    sk: &SecretKey,
+    g: usize,
+    rng: &mut Rng,
+) -> KeySwitchKey {
+    let mut s_coeff = sk.s.clone();
+    s_coeff.ntt_inverse(ctx);
+    let mut ts = s_coeff.automorphism(ctx, g);
+    ts.ntt_forward(ctx);
+    keygen_kswitch(ctx, sk, &ts, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    #[test]
+    fn test_public_key_is_rlwe_sample() {
+        // b + a*s must be small (the error) — check it decodes to ~0.
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 7;
+        let ctx = p.build().unwrap();
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        let sk = keygen_secret(&ctx, &mut rng);
+        let pk = keygen_public(&ctx, &sk, &mut rng);
+        let k = ctx.moduli.len();
+        let s_q = sk.s.subset(k, false);
+        let mut t = pk.a.mul(&ctx, &s_q);
+        t.add_assign(&ctx, &pk.b);
+        t.ntt_inverse(&ctx);
+        let coeffs = t.to_signed_coeffs_i128(&ctx);
+        for c in coeffs {
+            assert!(c.unsigned_abs() < 64, "error coefficient too large: {c}");
+        }
+    }
+
+    #[test]
+    fn test_subset_shapes() {
+        let mut p = CkksParams::toy(3);
+        p.n = 1 << 6;
+        let ctx = p.build().unwrap();
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let sk = keygen_secret(&ctx, &mut rng);
+        let sub = sk.s.subset(2, false);
+        assert_eq!(sub.nq, 2);
+        assert!(!sub.has_special);
+        assert_eq!(sub.limbs.len(), 2);
+        let sub2 = sk.s.subset(2, true);
+        assert_eq!(sub2.limbs.len(), 3);
+        // special limb must be the original's special limb
+        assert_eq!(sub2.limbs[2], sk.s.limbs[sk.s.nq]);
+    }
+}

@@ -1,0 +1,122 @@
+//! A from-scratch RNS-CKKS leveled homomorphic encryption scheme — the
+//! substrate the paper evaluates on (Microsoft SEAL in the original; see
+//! DESIGN.md substitution #1).
+//!
+//! Provides the full operation algebra of Section 2 of the paper:
+//! `Add`, `CMult` (+relinearization), `PMult`, `Rot`, `Rescale`, with
+//! leveled modulus chains, hybrid key switching, the canonical-embedding
+//! encoder, and the HE-standard security table.
+//!
+//! ```no_run
+//! use lingcn::ckks::{CkksEngine, CkksParams};
+//! let engine = CkksEngine::new(CkksParams::toy(3), &[1, 2], 42).unwrap();
+//! let ct = engine.encrypt(&[1.0, 2.0, 3.0]);
+//! let ct2 = engine.eval.rescale(&engine.eval.square(&ct));
+//! let out = engine.decrypt(&ct2);
+//! assert!((out[1] - 4.0).abs() < 1e-2);
+//! ```
+
+pub mod encoding;
+pub mod encrypt;
+pub mod eval;
+pub mod keys;
+pub mod ntt;
+pub mod params;
+pub mod poly;
+pub mod security;
+pub mod zq;
+
+pub use encoding::{Encoder, Plaintext, C64};
+pub use encrypt::Ciphertext;
+pub use eval::{build_eval_keys, Evaluator, OpCounters, OpCounts};
+pub use keys::{EvalKeys, PublicKey, SecretKey};
+pub use params::{CkksContext, CkksParams};
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// Convenience bundle: context + encoder + keys + evaluator + RNG.
+/// This is what the HE inference engine and the examples hold.
+pub struct CkksEngine {
+    pub ctx: Arc<CkksContext>,
+    pub encoder: Encoder,
+    pub sk: SecretKey,
+    pub pk: PublicKey,
+    pub eval: Evaluator,
+    rng: Mutex<crate::util::Rng>,
+    /// Content-addressed plaintext cache shared across requests (§Perf:
+    /// mask re-encoding dominates serving-path PMult otherwise).
+    pub plaintext_cache: Mutex<std::collections::HashMap<(u64, usize, u64), Plaintext>>,
+}
+
+impl CkksEngine {
+    /// Build a full engine with Galois keys for `rotation_steps`.
+    pub fn new(params: CkksParams, rotation_steps: &[usize], seed: u64) -> anyhow::Result<Self> {
+        let ctx = params.build()?;
+        let encoder = Encoder::new(ctx.n);
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let sk = keys::keygen_secret(&ctx, &mut rng);
+        let pk = keys::keygen_public(&ctx, &sk, &mut rng);
+        let ek = Arc::new(build_eval_keys(
+            &ctx,
+            &encoder,
+            &sk,
+            rotation_steps,
+            false,
+            &mut rng,
+        ));
+        let eval = Evaluator::new(ctx.clone(), ek);
+        Ok(CkksEngine {
+            ctx,
+            encoder,
+            sk,
+            pk,
+            eval,
+            rng: Mutex::new(rng),
+            plaintext_cache: Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    /// Encode + encrypt a real vector at top level, default scale.
+    pub fn encrypt(&self, values: &[f64]) -> Ciphertext {
+        let pt = self
+            .encoder
+            .encode(&self.ctx, values, self.ctx.scale, self.ctx.max_level() + 1);
+        let mut rng = self.rng.lock().unwrap();
+        encrypt::encrypt(&self.ctx, &self.pk, &pt, &mut *rng)
+    }
+
+    /// Encrypt at a given level/limb count (for pre-leveled inputs).
+    pub fn encrypt_at(&self, values: &[f64], nq: usize) -> Ciphertext {
+        let pt = self.encoder.encode(&self.ctx, values, self.ctx.scale, nq);
+        let mut rng = self.rng.lock().unwrap();
+        encrypt::encrypt(&self.ctx, &self.pk, &pt, &mut *rng)
+    }
+
+    /// Decrypt + decode to a real vector.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<f64> {
+        let pt = encrypt::decrypt(&self.ctx, &self.sk, ct);
+        self.encoder.decode(&self.ctx, &pt)
+    }
+
+    /// Encode a plaintext at a ciphertext's level and scale (for PMult).
+    pub fn encode_for(&self, values: &[f64], ct: &Ciphertext) -> Plaintext {
+        self.encoder.encode(&self.ctx, values, self.ctx.scale, ct.nq())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_engine_doc_example() {
+        let engine = CkksEngine::new(CkksParams::toy(3), &[1, 2], 42).unwrap();
+        let ct = engine.encrypt(&[1.0, 2.0, 3.0]);
+        let ct2 = engine.eval.rescale(&engine.eval.square(&ct));
+        let out = engine.decrypt(&ct2);
+        assert!((out[0] - 1.0).abs() < 1e-2);
+        assert!((out[1] - 4.0).abs() < 1e-2);
+        assert!((out[2] - 9.0).abs() < 1e-2);
+    }
+}

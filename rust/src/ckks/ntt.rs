@@ -1,0 +1,243 @@
+//! Negacyclic number-theoretic transform over `Z_q[x]/(x^n + 1)`.
+//!
+//! Forward transform is the Cooley-Tukey decimation-in-time variant with the
+//! 2n-th root powers stored in bit-reversed order; the inverse is
+//! Gentleman-Sande. Multiplying two transformed polynomials pointwise and
+//! inverting yields the negacyclic product — the core primitive behind every
+//! CKKS ciphertext operation. Butterflies use Shoup multiplication with lazy
+//! reduction (values kept in [0, 2q) inside the loop) — see §Perf in
+//! DESIGN.md.
+
+use super::zq::{self, ShoupMul};
+
+/// Precomputed NTT tables for one (prime, degree) pair.
+pub struct NttTable {
+    pub n: usize,
+    pub q: u64,
+    /// psi^bitrev(i) for CT forward butterflies.
+    roots: Vec<ShoupMul>,
+    /// psi^{-bitrev(i)} for GS inverse butterflies.
+    inv_roots: Vec<ShoupMul>,
+    /// n^{-1} mod q for the final inverse scaling.
+    n_inv: ShoupMul,
+}
+
+fn bit_reverse(x: usize, bits: u32) -> usize {
+    x.reverse_bits() >> (usize::BITS - bits)
+}
+
+impl NttTable {
+    pub fn new(n: usize, q: u64) -> Self {
+        assert!(n.is_power_of_two(), "degree must be a power of two");
+        let psi = zq::primitive_2nth_root(n, q);
+        let psi_inv = zq::inv_mod(psi, q);
+        let bits = n.trailing_zeros();
+        let mut roots = Vec::with_capacity(n);
+        let mut inv_roots = Vec::with_capacity(n);
+        // powers in bit-reversed order
+        let mut pow_f = vec![0u64; n];
+        let mut pow_i = vec![0u64; n];
+        pow_f[0] = 1;
+        pow_i[0] = 1;
+        for i in 1..n {
+            pow_f[i] = zq::mul_mod(pow_f[i - 1], psi, q);
+            pow_i[i] = zq::mul_mod(pow_i[i - 1], psi_inv, q);
+        }
+        for i in 0..n {
+            let r = bit_reverse(i, bits);
+            roots.push(ShoupMul::new(pow_f[r], q));
+            inv_roots.push(ShoupMul::new(pow_i[r], q));
+        }
+        let n_inv = ShoupMul::new(zq::inv_mod(n as u64, q), q);
+        NttTable {
+            n,
+            q,
+            roots,
+            inv_roots,
+            n_inv,
+        }
+    }
+
+    /// In-place forward negacyclic NTT (coefficient -> evaluation order).
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let n = self.n;
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = n;
+        let mut m = 1;
+        while m < n {
+            t >>= 1;
+            for i in 0..m {
+                let j1 = 2 * i * t;
+                let s = self.roots[m + i];
+                for j in j1..j1 + t {
+                    // lazy CT butterfly: inputs < 2q, outputs < 2q
+                    let mut u = a[j];
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    let v = s.mul_lazy(a[j + t], q);
+                    a[j] = u + v;
+                    a[j + t] = u + two_q - v;
+                }
+            }
+            m <<= 1;
+        }
+        // final full reduction to [0, q)
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = v;
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (evaluation -> coefficient order).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let n = self.n;
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = 1;
+        let mut m = n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0;
+            for i in 0..h {
+                let s = self.inv_roots[h + i];
+                for j in j1..j1 + t {
+                    // lazy GS butterfly
+                    let u = a[j];
+                    let v = a[j + t];
+                    let mut s_uv = u + v;
+                    if s_uv >= two_q {
+                        s_uv -= two_q;
+                    }
+                    a[j] = s_uv;
+                    a[j + t] = s.mul_lazy(u + two_q - v, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            let mut v = *x;
+            if v >= two_q {
+                v -= two_q;
+            }
+            if v >= q {
+                v -= q;
+            }
+            *x = self.n_inv.mul(v, q);
+        }
+    }
+}
+
+/// Schoolbook negacyclic product, used only as a test oracle.
+#[cfg(test)]
+pub fn negacyclic_mul_naive(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+    let n = a.len();
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        for j in 0..n {
+            let p = zq::mul_mod(a[i], b[j], q);
+            let k = i + j;
+            if k < n {
+                out[k] = zq::add_mod(out[k], p, q);
+            } else {
+                out[k - n] = zq::sub_mod(out[k - n], p, q);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_poly(n: usize, q: u64, seed: u64) -> Vec<u64> {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        (0..n).map(|_| rng.gen_below(q)).collect()
+    }
+
+    #[test]
+    fn test_forward_inverse_roundtrip() {
+        for n in [8usize, 64, 1024] {
+            let q = zq::gen_ntt_primes(45, n, 1, &[])[0];
+            let tbl = NttTable::new(n, q);
+            let a = rand_poly(n, q, 7);
+            let mut b = a.clone();
+            tbl.forward(&mut b);
+            tbl.inverse(&mut b);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn test_ntt_mul_matches_naive() {
+        for n in [8usize, 32, 128] {
+            let q = zq::gen_ntt_primes(40, n, 1, &[])[0];
+            let tbl = NttTable::new(n, q);
+            let a = rand_poly(n, q, 1);
+            let b = rand_poly(n, q, 2);
+            let want = negacyclic_mul_naive(&a, &b, q);
+            let mut fa = a.clone();
+            let mut fb = b.clone();
+            tbl.forward(&mut fa);
+            tbl.forward(&mut fb);
+            let mut fc: Vec<u64> = fa
+                .iter()
+                .zip(&fb)
+                .map(|(&x, &y)| zq::mul_mod(x, y, q))
+                .collect();
+            tbl.inverse(&mut fc);
+            assert_eq!(fc, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn test_negacyclic_wraparound_sign() {
+        // x^{n-1} * x = x^n = -1 mod (x^n+1)
+        let n = 16;
+        let q = zq::gen_ntt_primes(40, n, 1, &[])[0];
+        let tbl = NttTable::new(n, q);
+        let mut a = vec![0u64; n];
+        a[n - 1] = 1;
+        let mut b = vec![0u64; n];
+        b[1] = 1;
+        tbl.forward(&mut a);
+        tbl.forward(&mut b);
+        let mut c: Vec<u64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| zq::mul_mod(x, y, q))
+            .collect();
+        tbl.inverse(&mut c);
+        assert_eq!(c[0], q - 1); // -1
+        assert!(c[1..].iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn test_linearity() {
+        let n = 64;
+        let q = zq::gen_ntt_primes(40, n, 1, &[])[0];
+        let tbl = NttTable::new(n, q);
+        let a = rand_poly(n, q, 3);
+        let b = rand_poly(n, q, 4);
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| zq::add_mod(x, y, q)).collect();
+        let (mut fa, mut fb, mut fs) = (a, b, sum);
+        tbl.forward(&mut fa);
+        tbl.forward(&mut fb);
+        tbl.forward(&mut fs);
+        for i in 0..n {
+            assert_eq!(fs[i], zq::add_mod(fa[i], fb[i], q));
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! CKKS parameter sets and the shared precomputation context.
+//!
+//! A parameter set fixes the ring degree `N`, the RNS modulus chain
+//! `q_0, q_1, ..., q_L` (one ~`scale_bits`-bit prime per multiplicative
+//! level plus a larger base prime `q_0`), and one special prime `P` used
+//! exclusively for hybrid key switching. The paper's Table 6 settings map
+//! onto this directly: `L` = mult level, `p` = scale_bits, `q0` = q0_bits.
+
+use super::ntt::NttTable;
+use super::zq;
+use std::sync::Arc;
+
+/// Builder-style description of a CKKS parameter set.
+#[derive(Clone, Debug)]
+pub struct CkksParams {
+    /// Ring degree N (power of two). Slot count is N/2.
+    pub n: usize,
+    /// Bits of the base prime q0 (holds the final message + noise).
+    pub q0_bits: u32,
+    /// Bits of each scaling prime (the paper uses p = 33).
+    pub scale_bits: u32,
+    /// Multiplicative depth L: number of scaling primes.
+    pub levels: usize,
+    /// Bits of the special key-switching prime P.
+    pub special_bits: u32,
+    /// Allow parameter sets below 128-bit security (for tests/toy runs).
+    pub allow_insecure: bool,
+}
+
+impl CkksParams {
+    /// A small insecure parameter set for unit tests (fast keygen/ops).
+    pub fn toy(levels: usize) -> Self {
+        CkksParams {
+            n: 1 << 11,
+            q0_bits: 50,
+            scale_bits: 33,
+            levels,
+            special_bits: 55,
+            allow_insecure: true,
+        }
+    }
+
+    /// Total log2 of the ciphertext modulus Q (excluding the special prime),
+    /// which is the quantity the paper's Table 6 reports as `Q`.
+    pub fn log_q(&self) -> u32 {
+        self.q0_bits + self.scale_bits * self.levels as u32
+    }
+
+    /// Build the full precomputation context (primes, NTT tables, CRT data).
+    pub fn build(&self) -> anyhow::Result<Arc<CkksContext>> {
+        CkksContext::new(self.clone()).map(Arc::new)
+    }
+}
+
+/// Shared, immutable context: primes, NTT tables, and CRT precomputations.
+pub struct CkksContext {
+    pub params: CkksParams,
+    pub n: usize,
+    /// q_0, q_1, ..., q_L  (q_0 first; rescale drops from the back).
+    pub moduli: Vec<u64>,
+    /// Special prime P for hybrid key switching.
+    pub special: u64,
+    /// NTT tables, one per modulus, same order as `moduli`.
+    pub ntt: Vec<NttTable>,
+    /// NTT table for the special prime.
+    pub ntt_special: NttTable,
+    /// Default encoding scale Δ = 2^scale_bits.
+    pub scale: f64,
+    /// inv_last[m][j] = q_m^{-1} mod q_j, for j < m (rescale).
+    pub inv_last: Vec<Vec<u64>>,
+    /// q_m mod q_j, for j < m (rescale centering correction).
+    pub mod_last: Vec<Vec<u64>>,
+    /// P^{-1} mod q_j (hybrid key-switch ModDown).
+    pub p_inv: Vec<u64>,
+    /// P mod q_j.
+    pub p_mod: Vec<u64>,
+    /// Barrett reduction contexts, index-aligned with `moduli` plus the
+    /// special prime as the last entry (§Perf: removes 128-bit division
+    /// from every pointwise product and key-switch digit).
+    pub barrett: Vec<zq::Barrett>,
+}
+
+impl CkksContext {
+    fn new(params: CkksParams) -> anyhow::Result<Self> {
+        let n = params.n;
+        anyhow::ensure!(n.is_power_of_two() && n >= 8, "N must be a power of two >= 8");
+        anyhow::ensure!(params.levels >= 1, "need at least one level");
+        if !params.allow_insecure {
+            let total = params.log_q() + params.special_bits;
+            anyhow::ensure!(
+                super::security::is_secure_128(n, total),
+                "params (N={n}, logQP={total}) below 128-bit security; \
+                 set allow_insecure for toy runs"
+            );
+        }
+        // distinct primes: q0, then `levels` scaling primes, then special.
+        let q0 = zq::gen_ntt_primes(params.q0_bits, n, 1, &[])[0];
+        let mut exclude = vec![q0];
+        let scaling = zq::gen_ntt_primes(params.scale_bits, n, params.levels, &exclude);
+        exclude.extend_from_slice(&scaling);
+        let special = zq::gen_ntt_primes(params.special_bits, n, 1, &exclude)[0];
+
+        let mut moduli = vec![q0];
+        moduli.extend_from_slice(&scaling);
+
+        let ntt: Vec<NttTable> = moduli.iter().map(|&q| NttTable::new(n, q)).collect();
+        let ntt_special = NttTable::new(n, special);
+
+        let k = moduli.len();
+        let mut inv_last = vec![Vec::new(); k];
+        let mut mod_last = vec![Vec::new(); k];
+        for m in 0..k {
+            for j in 0..m {
+                inv_last[m].push(zq::inv_mod(moduli[m] % moduli[j], moduli[j]));
+                mod_last[m].push(moduli[m] % moduli[j]);
+            }
+        }
+        let p_inv = moduli.iter().map(|&q| zq::inv_mod(special % q, q)).collect();
+        let p_mod = moduli.iter().map(|&q| special % q).collect();
+        let mut barrett: Vec<zq::Barrett> = moduli.iter().map(|&q| zq::Barrett::new(q)).collect();
+        barrett.push(zq::Barrett::new(special));
+
+        Ok(CkksContext {
+            scale: 2f64.powi(params.scale_bits as i32),
+            n,
+            moduli,
+            special,
+            ntt,
+            ntt_special,
+            inv_last,
+            mod_last,
+            p_inv,
+            p_mod,
+            barrett,
+            params,
+        })
+    }
+
+    /// Number of slots (N/2).
+    pub fn slots(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Max level index (a fresh ciphertext has `levels` rescales available,
+    /// i.e. `levels + 1` RNS limbs).
+    pub fn max_level(&self) -> usize {
+        self.params.levels
+    }
+
+    /// NTT table for modulus index `j` (counting the special prime as the
+    /// virtual index `self.moduli.len()`).
+    pub fn ntt_for(&self, j: usize) -> &NttTable {
+        if j < self.moduli.len() {
+            &self.ntt[j]
+        } else {
+            &self.ntt_special
+        }
+    }
+
+    /// Barrett context at modulus index `j` (special prime as last index).
+    pub fn barrett_for(&self, j: usize) -> &zq::Barrett {
+        &self.barrett[j.min(self.moduli.len())]
+    }
+
+    /// Modulus value at index `j` (special prime as the last virtual index).
+    pub fn modulus(&self, j: usize) -> u64 {
+        if j < self.moduli.len() {
+            self.moduli[j]
+        } else {
+            self.special
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_toy_context_builds() {
+        let ctx = CkksParams::toy(4).build().unwrap();
+        assert_eq!(ctx.moduli.len(), 5);
+        assert_eq!(ctx.slots(), 1024);
+        // all primes distinct and NTT-friendly
+        let mut all = ctx.moduli.clone();
+        all.push(ctx.special);
+        for &q in &all {
+            assert!(zq::is_prime(q));
+            assert_eq!(q % (2 * ctx.n as u64), 1);
+        }
+        let mut d = all.clone();
+        d.sort();
+        d.dedup();
+        assert_eq!(d.len(), all.len());
+    }
+
+    #[test]
+    fn test_insecure_params_rejected() {
+        let p = CkksParams {
+            allow_insecure: false,
+            ..CkksParams::toy(8)
+        };
+        assert!(p.build().is_err(), "N=2^11 with 8 levels must fail 128-bit check");
+    }
+
+    #[test]
+    fn test_log_q_matches_table6_row() {
+        // paper row 6-STGCN-3: q0=47, p=33, L=14 -> Q=509
+        let p = CkksParams {
+            n: 1 << 15,
+            q0_bits: 47,
+            scale_bits: 33,
+            levels: 14,
+            special_bits: 60,
+            allow_insecure: true,
+        };
+        assert_eq!(p.log_q(), 509);
+    }
+}

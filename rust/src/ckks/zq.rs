@@ -1,0 +1,359 @@
+//! Modular arithmetic over word-sized prime fields `Z_q` (q < 2^62).
+//!
+//! Every CKKS polynomial coefficient lives in one of these fields (one per
+//! RNS prime). The hot path is `mul_mod`, which gets a Shoup-precomputed
+//! variant (`ShoupMul`) used by the NTT butterflies and pointwise products.
+
+/// `(a + b) mod q`, assuming `a, b < q < 2^63`.
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, q: u64) -> u64 {
+    let s = a + b;
+    if s >= q {
+        s - q
+    } else {
+        s
+    }
+}
+
+/// `(a - b) mod q`, assuming `a, b < q`.
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, q: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + q - b
+    }
+}
+
+/// `(a * b) mod q` via 128-bit widening.
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, q: u64) -> u64 {
+    ((a as u128 * b as u128) % q as u128) as u64
+}
+
+/// `(-a) mod q`.
+#[inline(always)]
+pub fn neg_mod(a: u64, q: u64) -> u64 {
+    if a == 0 {
+        0
+    } else {
+        q - a
+    }
+}
+
+/// `a^e mod q` by square-and-multiply.
+pub fn pow_mod(mut a: u64, mut e: u64, q: u64) -> u64 {
+    let mut r: u64 = 1;
+    a %= q;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = mul_mod(r, a, q);
+        }
+        a = mul_mod(a, a, q);
+        e >>= 1;
+    }
+    r
+}
+
+/// Modular inverse of `a` modulo prime `q` (Fermat). Panics if `a == 0`.
+pub fn inv_mod(a: u64, q: u64) -> u64 {
+    assert!(a % q != 0, "inverse of zero mod {q}");
+    pow_mod(a, q - 2, q)
+}
+
+/// Shoup-precomputed multiplication by a fixed constant `w < q`:
+/// one 64x64->128 mul and one subtraction instead of a 128-bit division.
+/// This is the classic Harvey/Shoup trick that dominates NTT performance.
+#[derive(Clone, Copy, Debug)]
+pub struct ShoupMul {
+    pub w: u64,
+    /// floor(w * 2^64 / q)
+    pub w_shoup: u64,
+}
+
+impl ShoupMul {
+    #[inline]
+    pub fn new(w: u64, q: u64) -> Self {
+        debug_assert!(w < q);
+        let w_shoup = ((w as u128) << 64) / q as u128;
+        ShoupMul {
+            w,
+            w_shoup: w_shoup as u64,
+        }
+    }
+
+    /// `(a * w) mod q` in [0, 2q); caller may keep values lazy.
+    #[inline(always)]
+    pub fn mul_lazy(&self, a: u64, q: u64) -> u64 {
+        let hi = ((self.w_shoup as u128 * a as u128) >> 64) as u64;
+        self.w
+            .wrapping_mul(a)
+            .wrapping_sub(hi.wrapping_mul(q))
+    }
+
+    /// `(a * w) mod q`, fully reduced.
+    #[inline(always)]
+    pub fn mul(&self, a: u64, q: u64) -> u64 {
+        let r = self.mul_lazy(a, q);
+        if r >= q {
+            r - q
+        } else {
+            r
+        }
+    }
+}
+
+/// Deterministic Miller-Rabin for u64 (the standard 12-witness set is
+/// sufficient for all 64-bit integers).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut r = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        r += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..r - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate `count` distinct NTT-friendly primes (`p ≡ 1 mod 2n`) of
+/// roughly `bits` bits, scanning downward from `2^bits`. `n` is the ring
+/// degree, so the negacyclic NTT of size `n` exists mod each returned prime.
+pub fn gen_ntt_primes(bits: u32, n: usize, count: usize, exclude: &[u64]) -> Vec<u64> {
+    assert!(bits >= 20 && bits <= 61, "prime bits {bits} out of range");
+    let step = 2 * n as u64;
+    let mut primes = Vec::with_capacity(count);
+    // start at the largest candidate ≡ 1 mod 2n below 2^bits
+    let top = 1u64 << bits;
+    let mut cand = top - (top % step) + 1;
+    while cand >= top {
+        cand -= step;
+    }
+    while primes.len() < count {
+        assert!(cand > (1u64 << (bits - 1)), "ran out of {bits}-bit NTT primes");
+        if is_prime(cand) && !exclude.contains(&cand) && !primes.contains(&cand) {
+            primes.push(cand);
+        }
+        cand -= step;
+    }
+    primes
+}
+
+/// Find a primitive 2n-th root of unity mod prime `q` (requires
+/// `q ≡ 1 mod 2n`). Returns `psi` with `psi^n ≡ -1 (mod q)`.
+pub fn primitive_2nth_root(n: usize, q: u64) -> u64 {
+    let order = 2 * n as u64;
+    assert_eq!((q - 1) % order, 0, "q-1 not divisible by 2n");
+    let cofactor = (q - 1) / order;
+    // try small candidates deterministically
+    for x in 2u64.. {
+        let psi = pow_mod(x, cofactor, q);
+        // psi has order dividing 2n; primitive iff psi^n == -1
+        if pow_mod(psi, n as u64, q) == q - 1 {
+            return psi;
+        }
+        if x > 10_000 {
+            panic!("no primitive 2n-th root found mod {q}");
+        }
+    }
+    unreachable!()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_add_sub_neg() {
+        let q = 97;
+        assert_eq!(add_mod(90, 10, q), 3);
+        assert_eq!(sub_mod(3, 10, q), 90);
+        assert_eq!(neg_mod(0, q), 0);
+        assert_eq!(neg_mod(5, q), 92);
+    }
+
+    #[test]
+    fn test_mul_pow_inv() {
+        let q = (1u64 << 61) - 1; // Mersenne prime
+        let a = 123456789012345678 % q;
+        let b = 987654321098765432 % q;
+        let ab = mul_mod(a, b, q);
+        assert_eq!(mul_mod(ab, inv_mod(b, q), q), a);
+        assert_eq!(pow_mod(a, q - 1, q), 1); // Fermat
+    }
+
+    #[test]
+    fn test_shoup_matches_mul_mod() {
+        let q = gen_ntt_primes(50, 1024, 1, &[])[0];
+        let w = 0x1234_5678_9abc % q;
+        let sm = ShoupMul::new(w, q);
+        for a in [0u64, 1, q - 1, q / 2, 42, 0xdead_beef % q] {
+            assert_eq!(sm.mul(a, q), mul_mod(a, w, q), "a={a}");
+        }
+    }
+
+    #[test]
+    fn test_is_prime_smoke() {
+        assert!(is_prime(2));
+        assert!(is_prime(1_000_000_007));
+        assert!(!is_prime(1));
+        assert!(!is_prime(561)); // Carmichael
+        assert!(is_prime((1u64 << 61) - 1));
+    }
+
+    #[test]
+    fn test_gen_ntt_primes_properties() {
+        let n = 4096;
+        let ps = gen_ntt_primes(45, n, 4, &[]);
+        assert_eq!(ps.len(), 4);
+        for &p in &ps {
+            assert!(is_prime(p));
+            assert_eq!(p % (2 * n as u64), 1);
+            assert!(p < (1u64 << 45) && p > (1u64 << 44));
+        }
+        // distinct
+        let mut sorted = ps.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        // exclusion respected
+        let more = gen_ntt_primes(45, n, 2, &ps);
+        assert!(more.iter().all(|p| !ps.contains(p)));
+    }
+
+    #[test]
+    fn test_primitive_root() {
+        for n in [8usize, 1024] {
+            let q = gen_ntt_primes(40, n, 1, &[])[0];
+            let psi = primitive_2nth_root(n, q);
+            assert_eq!(pow_mod(psi, n as u64, q), q - 1);
+            assert_eq!(pow_mod(psi, 2 * n as u64, q), 1);
+        }
+    }
+}
+
+/// Barrett reduction context for a fixed modulus `q < 2^62`: reduces any
+/// 128-bit value mod q with two 64×64 multiplies instead of a (software)
+/// 128-bit division — the §Perf optimization that removes `__umodti3`
+/// from every pointwise product and key-switch digit.
+#[derive(Clone, Copy, Debug)]
+pub struct Barrett {
+    pub q: u64,
+    /// floor(2^128 / q), as (hi, lo) 64-bit words.
+    ratio_hi: u64,
+    ratio_lo: u64,
+}
+
+impl Barrett {
+    pub fn new(q: u64) -> Self {
+        debug_assert!(q > 1);
+        // floor(2^128 / q) = floor((2^128 - 1) / q) unless q | 2^128
+        let max = u128::MAX;
+        let mut ratio = max / q as u128;
+        if max % q as u128 == (q - 1) as u128 {
+            ratio += 1;
+        }
+        Barrett {
+            q,
+            ratio_hi: (ratio >> 64) as u64,
+            ratio_lo: ratio as u64,
+        }
+    }
+
+    /// Reduce a 128-bit value mod q (SEAL-style two-round Barrett).
+    #[inline(always)]
+    pub fn reduce_u128(&self, z: u128) -> u64 {
+        let z_lo = z as u64;
+        let z_hi = (z >> 64) as u64;
+        // round 1: carry = hi64(z_lo * ratio_lo)
+        let carry = ((z_lo as u128 * self.ratio_lo as u128) >> 64) as u64;
+        let tmp2 = z_lo as u128 * self.ratio_hi as u128;
+        let tmp1 = (tmp2 as u64).wrapping_add(carry);
+        let tmp3 = ((tmp2 >> 64) as u64).wrapping_add((tmp1 < carry) as u64);
+        // round 2
+        let tmp2b = z_hi as u128 * self.ratio_lo as u128;
+        let tmp1b = tmp1.wrapping_add(tmp2b as u64);
+        let carry2 = ((tmp2b >> 64) as u64).wrapping_add((tmp1b < tmp2b as u64) as u64);
+        let quot = z_hi
+            .wrapping_mul(self.ratio_hi)
+            .wrapping_add(tmp3)
+            .wrapping_add(carry2);
+        let mut r = z_lo.wrapping_sub(quot.wrapping_mul(self.q));
+        if r >= self.q {
+            r -= self.q;
+        }
+        r
+    }
+
+    /// `(a*b) mod q`.
+    #[inline(always)]
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        self.reduce_u128(a as u128 * b as u128)
+    }
+
+    /// Reduce a 64-bit value mod q.
+    #[inline(always)]
+    pub fn reduce_u64(&self, a: u64) -> u64 {
+        self.reduce_u128(a as u128)
+    }
+}
+
+#[cfg(test)]
+mod barrett_tests {
+    use super::*;
+
+    #[test]
+    fn test_barrett_matches_division() {
+        for &q in &[
+            3u64,
+            97,
+            (1u64 << 33) - 9,
+            gen_ntt_primes(50, 1024, 1, &[])[0],
+            gen_ntt_primes(60, 1024, 1, &[])[0],
+        ] {
+            let b = Barrett::new(q);
+            let samples: Vec<u128> = vec![
+                0,
+                1,
+                q as u128 - 1,
+                q as u128,
+                q as u128 + 1,
+                u64::MAX as u128,
+                (q as u128) * (q as u128) - 1,
+                u128::MAX / 3,
+                0xdead_beef_cafe_1234_5678_9abc_def0_1111u128 % ((q as u128) * (q as u128)),
+            ];
+            for z in samples {
+                assert_eq!(b.reduce_u128(z), (z % q as u128) as u64, "q={q} z={z}");
+            }
+            // randomized products
+            let mut x = 0x12345u64;
+            for _ in 0..200 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let a = x % q;
+                let c = x.rotate_left(17) % q;
+                assert_eq!(b.mul(a, c), mul_mod(a, c, q));
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Dynamic batcher: groups queued requests per model variant, dispatching
+//! when a batch fills or its oldest member exceeds the wait deadline.
+//! HE inference amortizes nothing *within* one ciphertext here (each
+//! request is its own ciphertext set), but batching amortizes per-variant
+//! executor setup and keeps workers saturated — the standard serving shape.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A queued unit of work.
+#[derive(Clone, Debug)]
+pub struct Pending<T> {
+    pub id: u64,
+    pub enqueued: Instant,
+    pub payload: T,
+}
+
+/// Per-variant FIFO queues with deadline-or-size dispatch.
+pub struct Batcher<T> {
+    queues: HashMap<String, Vec<Pending<T>>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Batcher {
+            queues: HashMap::new(),
+            max_batch,
+            max_wait,
+        }
+    }
+
+    pub fn push(&mut self, variant: &str, item: Pending<T>) {
+        self.queues.entry(variant.to_string()).or_default().push(item);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(Vec::len).sum()
+    }
+
+    /// Pop the next dispatchable batch: any queue at `max_batch`, or whose
+    /// head has waited past `max_wait`. FIFO within a variant.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<Pending<T>>)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .find(|(_, q)| {
+                q.len() >= self.max_batch
+                    || now.duration_since(q[0].enqueued) >= self.max_wait
+            })
+            .map(|(k, _)| k.clone())?;
+        let q = self.queues.get_mut(&key).unwrap();
+        let take = q.len().min(self.max_batch);
+        let batch: Vec<Pending<T>> = q.drain(..take).collect();
+        Some((key, batch))
+    }
+
+    /// Drain everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<(String, Vec<Pending<T>>)> {
+        let mut out = Vec::new();
+        for (k, q) in self.queues.iter_mut() {
+            if !q.is_empty() {
+                out.push((k.clone(), q.drain(..).collect()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(id: u64, at: Instant) -> Pending<u64> {
+        Pending {
+            id,
+            enqueued: at,
+            payload: id,
+        }
+    }
+
+    #[test]
+    fn test_dispatch_on_full_batch() {
+        let mut b = Batcher::new(3, Duration::from_secs(100));
+        let now = Instant::now();
+        b.push("a", p(1, now));
+        b.push("a", p(2, now));
+        assert!(b.pop_ready(now).is_none(), "not full, not timed out");
+        b.push("a", p(3, now));
+        let (v, batch) = b.pop_ready(now).unwrap();
+        assert_eq!(v, "a");
+        assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn test_dispatch_on_deadline() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push("a", p(1, t0));
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let (_, batch) = b.pop_ready(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn test_fifo_order_and_cap() {
+        let mut b = Batcher::new(2, Duration::from_secs(0));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push("a", p(i, now));
+        }
+        let (_, first) = b.pop_ready(now).unwrap();
+        assert_eq!(first.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1]);
+        let (_, second) = b.pop_ready(now).unwrap();
+        assert_eq!(second.iter().map(|x| x.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn test_variants_isolated() {
+        let mut b = Batcher::new(2, Duration::from_secs(100));
+        let now = Instant::now();
+        b.push("a", p(1, now));
+        b.push("b", p(2, now));
+        b.push("b", p(3, now));
+        let (v, batch) = b.pop_ready(now).unwrap();
+        assert_eq!(v, "b");
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn test_drain_all() {
+        let mut b = Batcher::new(10, Duration::from_secs(100));
+        let now = Instant::now();
+        b.push("a", p(1, now));
+        b.push("b", p(2, now));
+        let drained = b.drain_all();
+        assert_eq!(drained.iter().map(|(_, q)| q.len()).sum::<usize>(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+}

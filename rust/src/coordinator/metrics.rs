@@ -1,0 +1,93 @@
+//! Serving metrics: counters + latency histogram (log-spaced buckets).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+const BUCKET_COUNT: usize = 24;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub degraded: AtomicU64,
+    /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
+    latency_buckets: [AtomicU64; BUCKET_COUNT],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn observe_latency(&self, d: Duration) {
+        let secs = d.as_secs_f64().max(1e-9);
+        let idx = ((secs.log2() + 10.0).floor().max(0.0) as usize).min(BUCKET_COUNT - 1);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us
+            .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.completed.load(Ordering::Relaxed).max(1);
+        Duration::from_micros(self.latency_sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Approximate quantile from the histogram.
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let total: u64 = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_secs_f64(2f64.powi(i as i32 - 9));
+            }
+        }
+        Duration::from_secs_f64(2f64.powi(BUCKET_COUNT as i32 - 9))
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} degraded={} mean={:?} p50≤{:?} p99≤{:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.degraded.load(Ordering::Relaxed),
+            self.mean_latency(),
+            self.latency_quantile(0.5),
+            self.latency_quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_histogram_quantiles_ordered() {
+        let m = Metrics::default();
+        for ms in [1u64, 2, 4, 8, 100, 1000] {
+            m.observe_latency(Duration::from_millis(ms));
+            m.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 >= Duration::from_millis(500));
+        assert!(m.mean_latency() > Duration::from_millis(100));
+    }
+
+    #[test]
+    fn test_empty_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_quantile(0.5), Duration::ZERO);
+        let _ = m.summary();
+    }
+}

@@ -1,0 +1,56 @@
+//! L3 serving coordinator (DESIGN.md S13) — the vLLM-router-shaped layer:
+//! request intake, SLA-aware routing along the LinGCN accuracy/latency
+//! Pareto frontier, per-variant dynamic batching, a worker pool, and
+//! metrics. The executor tier is pluggable: plaintext PJRT, encrypted
+//! CKKS, or mocks.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batcher, Pending};
+pub use metrics::Metrics;
+pub use router::{ModelVariant, Router};
+pub use service::{Coordinator, InferenceExecutor, PlaintextExecutor, Request, Response};
+
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+
+/// Build a router + plaintext executor from the artifacts directory
+/// (trained variants + cost-model latency predictions at paper scale).
+pub fn from_artifacts(
+    dir: &Path,
+    cost: &crate::costmodel::OpCostModel,
+) -> Result<(Router, PlaintextExecutor)> {
+    let mut acc_by_nl = BTreeMap::new();
+    let mut models = HashMap::new();
+    for nl in 1..=12usize {
+        let path = dir.join(format!("model_nl{nl}.lgt"));
+        if !path.exists() {
+            continue;
+        }
+        let model = crate::stgcn::StgcnModel::load(&path, crate::graph::Graph::ntu_rgbd())
+            .with_context(|| format!("loading {}", path.display()))?;
+        let tf = crate::util::tensorio::TensorFile::load(&path)?;
+        let acc = tf.meta_f64("test_acc").unwrap_or(0.0);
+        acc_by_nl.insert(nl, acc);
+        models.insert(format!("lingcn-nl{nl}"), model);
+    }
+    anyhow::ensure!(!models.is_empty(), "no model_nl*.lgt found in {dir:?}");
+    // predicted encrypted latency at paper scale per nl (3-layer family)
+    let cost = *cost;
+    let latency = move |nl: usize| {
+        crate::costmodel::predict::predict(
+            &crate::costmodel::predict::PaperVariant::stgcn_3_128(
+                nl,
+                crate::he_infer::Method::LinGcn,
+            ),
+            &cost,
+        )
+        .map(|r| r.total_s)
+        .unwrap_or(f64::INFINITY)
+    };
+    Ok((Router::from_metrics(&acc_by_nl, latency), PlaintextExecutor { models }))
+}

@@ -1,0 +1,142 @@
+//! SLA-aware model-variant router.
+//!
+//! LinGCN's structural linearization produces a *family* of model variants
+//! along an accuracy/latency Pareto frontier (paper Fig. 1). The router
+//! holds that frontier and, per request, picks the highest-accuracy variant
+//! whose predicted latency fits the client's budget — falling back to the
+//! fastest variant when nothing fits (explicit-degrade policy).
+
+use std::collections::BTreeMap;
+
+/// One deployable model variant (a point on the Pareto frontier).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelVariant {
+    pub name: String,
+    /// Effective non-linear layers (the paper's knob).
+    pub nl: usize,
+    /// Predicted end-to-end encrypted latency (cost model, seconds).
+    pub latency_s: f64,
+    /// Measured test accuracy (from artifacts/metrics.json).
+    pub accuracy: f64,
+}
+
+/// The router over a variant family.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    variants: Vec<ModelVariant>,
+}
+
+impl Router {
+    pub fn new(mut variants: Vec<ModelVariant>) -> Self {
+        assert!(!variants.is_empty(), "router needs at least one variant");
+        variants.sort_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap());
+        Router { variants }
+    }
+
+    pub fn variants(&self) -> &[ModelVariant] {
+        &self.variants
+    }
+
+    /// The Pareto-optimal subset (no variant dominated in both accuracy
+    /// and latency) — what Fig. 1 plots.
+    pub fn pareto_frontier(&self) -> Vec<&ModelVariant> {
+        let mut out: Vec<&ModelVariant> = Vec::new();
+        let mut best_acc = f64::NEG_INFINITY;
+        for v in &self.variants {
+            if v.accuracy > best_acc {
+                out.push(v);
+                best_acc = v.accuracy;
+            }
+        }
+        out
+    }
+
+    /// Highest-accuracy variant within the latency budget; `None` budget
+    /// means "best accuracy regardless of latency". Falls back to the
+    /// fastest variant when the budget is infeasible.
+    pub fn select(&self, latency_budget_s: Option<f64>) -> &ModelVariant {
+        match latency_budget_s {
+            None => self
+                .variants
+                .iter()
+                .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                .unwrap(),
+            Some(budget) => self
+                .variants
+                .iter()
+                .filter(|v| v.latency_s <= budget)
+                .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                .unwrap_or(&self.variants[0]),
+        }
+    }
+
+    /// Per-variant name lookup.
+    pub fn get(&self, name: &str) -> Option<&ModelVariant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Build from (nl → accuracy) metrics plus a latency predictor.
+    pub fn from_metrics(
+        acc_by_nl: &BTreeMap<usize, f64>,
+        latency: impl Fn(usize) -> f64,
+    ) -> Self {
+        let variants = acc_by_nl
+            .iter()
+            .map(|(&nl, &accuracy)| ModelVariant {
+                name: format!("lingcn-nl{nl}"),
+                nl,
+                latency_s: latency(nl),
+                accuracy,
+            })
+            .collect();
+        Router::new(variants)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![
+            ModelVariant { name: "nl1".into(), nl: 1, latency_s: 1.0, accuracy: 0.70 },
+            ModelVariant { name: "nl2".into(), nl: 2, latency_s: 2.0, accuracy: 0.75 },
+            ModelVariant { name: "nl4".into(), nl: 4, latency_s: 4.0, accuracy: 0.74 },
+            ModelVariant { name: "nl6".into(), nl: 6, latency_s: 6.0, accuracy: 0.78 },
+        ])
+    }
+
+    #[test]
+    fn test_select_respects_budget() {
+        let r = router();
+        assert_eq!(r.select(Some(2.5)).name, "nl2");
+        assert_eq!(r.select(Some(10.0)).name, "nl6");
+        assert_eq!(r.select(None).name, "nl6");
+    }
+
+    #[test]
+    fn test_infeasible_budget_degrades_to_fastest() {
+        let r = router();
+        assert_eq!(r.select(Some(0.1)).name, "nl1");
+    }
+
+    #[test]
+    fn test_pareto_excludes_dominated() {
+        let r = router();
+        let p: Vec<&str> = r.pareto_frontier().iter().map(|v| v.name.as_str()).collect();
+        // nl4 is dominated by nl2 (slower and less accurate)
+        assert_eq!(p, vec!["nl1", "nl2", "nl6"]);
+    }
+
+    #[test]
+    fn test_select_is_pareto_member() {
+        // property: any budget selection lies on the Pareto frontier
+        let r = router();
+        let pareto: Vec<String> =
+            r.pareto_frontier().iter().map(|v| v.name.clone()).collect();
+        for budget in [0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0, 6.0, 99.0] {
+            let s = r.select(Some(budget));
+            assert!(pareto.contains(&s.name), "budget {budget} chose {}", s.name);
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! The private-inference serving service: leader thread (intake → routing →
+//! batching) plus a worker pool executing batches. Thread-based (the
+//! offline environment has no tokio); HE work is CPU-bound anyway, so
+//! threads are the right shape.
+
+use super::batcher::{Batcher, Pending};
+use super::metrics::Metrics;
+use super::router::Router;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Pluggable inference execution (plaintext PJRT tier, encrypted CKKS
+/// tier, or a mock for tests).
+pub trait InferenceExecutor: Send + Sync + 'static {
+    fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>>;
+}
+
+/// Plaintext executor over loaded STGCN models (one per variant).
+pub struct PlaintextExecutor {
+    pub models: HashMap<String, crate::stgcn::StgcnModel>,
+}
+
+impl InferenceExecutor for PlaintextExecutor {
+    fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
+        let model = self
+            .models
+            .get(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant}"))?;
+        model.forward(clip)
+    }
+}
+
+/// A client request.
+pub struct Request {
+    pub clip: Vec<f64>,
+    /// Latency SLA; `None` = best accuracy.
+    pub latency_budget_s: Option<f64>,
+    pub resp: SyncSender<Response>,
+}
+
+/// The reply.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub variant: String,
+    pub logits: Vec<f64>,
+    pub queue: Duration,
+    pub exec: Duration,
+    pub error: Option<String>,
+}
+
+struct Work {
+    id: u64,
+    clip: Vec<f64>,
+    enqueued: Instant,
+    resp: SyncSender<Response>,
+}
+
+/// The running service.
+pub struct Coordinator {
+    submit_tx: Sender<Request>,
+    leader: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub router: Arc<Router>,
+}
+
+impl Coordinator {
+    /// Spawn leader + `n_workers` workers.
+    pub fn start(
+        router: Router,
+        executor: Arc<dyn InferenceExecutor>,
+        n_workers: usize,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Self {
+        let router = Arc::new(router);
+        let metrics = Arc::new(Metrics::default());
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let (dispatch_tx, dispatch_rx) = mpsc::channel::<(String, Vec<Pending<Work>>)>();
+        let dispatch_rx = Arc::new(Mutex::new(dispatch_rx));
+
+        let leader = {
+            let router = router.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                leader_loop(submit_rx, dispatch_tx, router, metrics, max_batch, max_wait)
+            })
+        };
+
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let rx = dispatch_rx.clone();
+                let ex = executor.clone();
+                let metrics = metrics.clone();
+                std::thread::spawn(move || worker_loop(rx, ex, metrics))
+            })
+            .collect();
+
+        Coordinator {
+            submit_tx,
+            leader: Some(leader),
+            workers,
+            metrics,
+            router,
+        }
+    }
+
+    /// Submit a request; the response arrives on `req.resp`.
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submit_tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(
+        &self,
+        clip: Vec<f64>,
+        latency_budget_s: Option<f64>,
+    ) -> Result<Response> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.submit(Request {
+            clip,
+            latency_budget_s,
+            resp: tx,
+        })?;
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: stop intake, drain queues, join threads.
+    pub fn shutdown(mut self) {
+        drop(self.submit_tx);
+        if let Some(l) = self.leader.take() {
+            let _ = l.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn leader_loop(
+    submit_rx: Receiver<Request>,
+    dispatch_tx: Sender<(String, Vec<Pending<Work>>)>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let mut batcher: Batcher<Work> = Batcher::new(max_batch, max_wait);
+    let next_id = AtomicU64::new(0);
+    let tick = max_wait.max(Duration::from_millis(1)) / 2;
+    loop {
+        match submit_rx.recv_timeout(tick) {
+            Ok(req) => {
+                let variant = router.select(req.latency_budget_s);
+                if let Some(budget) = req.latency_budget_s {
+                    if variant.latency_s > budget {
+                        metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let id = next_id.fetch_add(1, Ordering::Relaxed);
+                batcher.push(
+                    &variant.name,
+                    Pending {
+                        id,
+                        enqueued: Instant::now(),
+                        payload: Work {
+                            id,
+                            clip: req.clip,
+                            enqueued: Instant::now(),
+                            resp: req.resp,
+                        },
+                    },
+                );
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // drain everything and stop
+                for batch in batcher.drain_all() {
+                    let _ = dispatch_tx.send(batch);
+                }
+                break;
+            }
+        }
+        while let Some(batch) = batcher.pop_ready(Instant::now()) {
+            let _ = dispatch_tx.send(batch);
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<(String, Vec<Pending<Work>>)>>>,
+    executor: Arc<dyn InferenceExecutor>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok((variant, batch)) = msg else { break };
+        for item in batch {
+            let work = item.payload;
+            let queue = work.enqueued.elapsed();
+            let t0 = Instant::now();
+            let result = executor.infer(&variant, &work.clip);
+            let exec = t0.elapsed();
+            let resp = match result {
+                Ok(logits) => {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.observe_latency(queue + exec);
+                    Response {
+                        id: work.id,
+                        variant: variant.clone(),
+                        logits,
+                        queue,
+                        exec,
+                        error: None,
+                    }
+                }
+                Err(e) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    Response {
+                        id: work.id,
+                        variant: variant.clone(),
+                        logits: vec![],
+                        queue,
+                        exec,
+                        error: Some(e.to_string()),
+                    }
+                }
+            };
+            let _ = work.resp.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ModelVariant;
+
+    struct MockExec;
+    impl InferenceExecutor for MockExec {
+        fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
+            if variant == "broken" {
+                anyhow::bail!("injected failure");
+            }
+            Ok(vec![clip.iter().sum::<f64>(), variant.len() as f64])
+        }
+    }
+
+    fn test_router() -> Router {
+        Router::new(vec![
+            ModelVariant { name: "fast".into(), nl: 1, latency_s: 0.5, accuracy: 0.7 },
+            ModelVariant { name: "slow".into(), nl: 6, latency_s: 5.0, accuracy: 0.9 },
+        ])
+    }
+
+    #[test]
+    fn test_end_to_end_blocking() {
+        let c = Coordinator::start(
+            test_router(),
+            Arc::new(MockExec),
+            2,
+            4,
+            Duration::from_millis(2),
+        );
+        let resp = c.infer_blocking(vec![1.0, 2.0, 3.0], Some(1.0)).unwrap();
+        assert_eq!(resp.variant, "fast");
+        assert_eq!(resp.logits[0], 6.0);
+        assert!(resp.error.is_none());
+        let resp2 = c.infer_blocking(vec![1.0], None).unwrap();
+        assert_eq!(resp2.variant, "slow");
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_all_requests_complete_under_load() {
+        let c = Coordinator::start(
+            test_router(),
+            Arc::new(MockExec),
+            3,
+            8,
+            Duration::from_millis(1),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..50 {
+            let (tx, rx) = mpsc::sync_channel(1);
+            c.submit(Request {
+                clip: vec![i as f64],
+                latency_budget_s: Some(if i % 2 == 0 { 1.0 } else { 100.0 }),
+                resp: tx,
+            })
+            .unwrap();
+            rxs.push(rx);
+        }
+        let mut got = 0;
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none());
+            got += 1;
+        }
+        assert_eq!(got, 50);
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 50);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_failed_request_reports_error() {
+        let router = Router::new(vec![ModelVariant {
+            name: "broken".into(),
+            nl: 1,
+            latency_s: 0.1,
+            accuracy: 0.5,
+        }]);
+        let c = Coordinator::start(router, Arc::new(MockExec), 1, 1, Duration::from_millis(1));
+        let r = c.infer_blocking(vec![1.0], None).unwrap();
+        assert!(r.error.is_some());
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_shutdown_drains_pending() {
+        let c = Coordinator::start(
+            test_router(),
+            Arc::new(MockExec),
+            1,
+            100,                        // huge batch → nothing dispatches by size
+            Duration::from_secs(3600),  // huge wait → nothing by deadline
+        );
+        let (tx, rx) = mpsc::sync_channel(1);
+        c.submit(Request {
+            clip: vec![2.0],
+            latency_budget_s: None,
+            resp: tx,
+        })
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        c.shutdown(); // must drain the stuck queue
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.error.is_none());
+    }
+}

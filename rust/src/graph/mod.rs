@@ -1,0 +1,197 @@
+//! Graph substrate: skeleton topology, normalized adjacency, and the
+//! sparse split used by the AMA HE execution (paper Eq. 1 and Eq. 7).
+//!
+//! The spatial graph convolution computes
+//! `X_out = D^{-1/2} (A + I) D^{-1/2} · X · W`; under the AMA packing the
+//! dense multiply by `Â` becomes, per output node `k`, a short sum of
+//! `PMult(ct_i, â_{ki})` over the neighbours `i` of `k` — no rotations.
+
+pub mod skeleton;
+
+pub use skeleton::ntu_rgbd_25_edges;
+
+/// An undirected graph with a normalized adjacency matrix.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Number of nodes V.
+    pub v: usize,
+    /// Undirected edge list (i, j), i != j, no duplicates.
+    pub edges: Vec<(usize, usize)>,
+    /// Â = D^{-1/2} (A + I) D^{-1/2}, row-major V×V.
+    pub norm_adj: Vec<f64>,
+}
+
+impl Graph {
+    /// Build from an edge list; self-loops are added during normalization.
+    pub fn new(v: usize, edges: Vec<(usize, usize)>) -> Self {
+        for &(a, b) in &edges {
+            assert!(a < v && b < v && a != b, "bad edge ({a},{b}) for V={v}");
+        }
+        let mut adj = vec![0.0f64; v * v];
+        for i in 0..v {
+            adj[i * v + i] = 1.0; // + I
+        }
+        for &(a, b) in &edges {
+            adj[a * v + b] = 1.0;
+            adj[b * v + a] = 1.0;
+        }
+        // degree of (A + I)
+        let deg: Vec<f64> = (0..v)
+            .map(|i| (0..v).map(|j| adj[i * v + j]).sum())
+            .collect();
+        let dinv: Vec<f64> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+        let mut norm_adj = vec![0.0f64; v * v];
+        for i in 0..v {
+            for j in 0..v {
+                norm_adj[i * v + j] = dinv[i] * adj[i * v + j] * dinv[j];
+            }
+        }
+        Graph { v, edges, norm_adj }
+    }
+
+    /// The NTU-RGB+D 25-joint human skeleton (the paper's graph).
+    pub fn ntu_rgbd() -> Self {
+        Graph::new(25, ntu_rgbd_25_edges())
+    }
+
+    /// Â entry (row `i` = output node, column `j` = input node).
+    pub fn a_hat(&self, i: usize, j: usize) -> f64 {
+        self.norm_adj[i * self.v + j]
+    }
+
+    /// Neighbour list (including self) of output node `k` with the Â weight:
+    /// exactly the sparse factors `A_i` of the paper's Eq. 7 — each HE
+    /// GCNConv output ciphertext is Σ PMult over this list.
+    pub fn in_neighbors(&self, k: usize) -> Vec<(usize, f64)> {
+        (0..self.v)
+            .filter(|&j| self.a_hat(k, j) != 0.0)
+            .map(|j| (j, self.a_hat(k, j)))
+            .collect()
+    }
+
+    /// Total non-zeros of Â — the PMult count of one aggregation pass.
+    pub fn nnz(&self) -> usize {
+        self.norm_adj.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Dense multiply `Y = Â · X` where `X` is V×F row-major. Test oracle
+    /// and plaintext-path implementation.
+    pub fn aggregate(&self, x: &[f64], f: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.v * f);
+        let mut y = vec![0.0; self.v * f];
+        for i in 0..self.v {
+            for j in 0..self.v {
+                let a = self.a_hat(i, j);
+                if a != 0.0 {
+                    for c in 0..f {
+                        y[i * f + c] += a * x[j * f + c];
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// A ring graph (used by synthetic workloads and tests).
+    pub fn ring(v: usize) -> Self {
+        let edges = (0..v).map(|i| (i, (i + 1) % v)).collect();
+        Graph::new(v, edges)
+    }
+
+    /// Erdős–Rényi-style random graph with expected degree `deg`
+    /// (the Flickr-surrogate topology generator).
+    pub fn random(v: usize, deg: f64, rng: &mut crate::util::Rng) -> Self {
+        let p = deg / v as f64;
+        let mut edges = Vec::new();
+        for i in 0..v {
+            for j in i + 1..v {
+                if rng.gen_f64() < p {
+                    edges.push((i, j));
+                }
+            }
+        }
+        Graph::new(v, edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ntu_skeleton_shape() {
+        let g = Graph::ntu_rgbd();
+        assert_eq!(g.v, 25);
+        assert_eq!(g.edges.len(), 24); // tree over 25 joints
+        // connected: BFS from node 0 reaches all
+        let mut seen = vec![false; g.v];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            for &(a, b) in &g.edges {
+                for (x, y) in [(a, b), (b, a)] {
+                    if x == i && !seen[y] {
+                        seen[y] = true;
+                        stack.push(y);
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "skeleton must be connected");
+    }
+
+    #[test]
+    fn test_normalization_symmetric() {
+        let g = Graph::ntu_rgbd();
+        for i in 0..g.v {
+            for j in 0..g.v {
+                assert!((g.a_hat(i, j) - g.a_hat(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn test_norm_adj_rows_bounded() {
+        // rows of D^{-1/2}(A+I)D^{-1/2} applied to the all-ones vector give
+        // values <= 1 (equality for regular graphs)
+        let g = Graph::ring(8);
+        let ones = vec![1.0; 8];
+        let y = g.aggregate(&ones, 1);
+        for v in y {
+            assert!((v - 1.0).abs() < 1e-12, "ring is 2-regular: Â·1 = 1");
+        }
+    }
+
+    #[test]
+    fn test_aggregate_matches_manual() {
+        let g = Graph::new(3, vec![(0, 1)]);
+        // degrees (A+I): d0=2, d1=2, d2=1
+        let x = vec![1.0, 2.0, 3.0]; // V×1
+        let y = g.aggregate(&x, 1);
+        let want0 = 1.0 / 2.0 * 1.0 + 1.0 / 2.0 * 2.0;
+        let want1 = 1.0 / 2.0 * 1.0 + 1.0 / 2.0 * 2.0;
+        let want2 = 3.0;
+        assert!((y[0] - want0).abs() < 1e-12);
+        assert!((y[1] - want1).abs() < 1e-12);
+        assert!((y[2] - want2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_in_neighbors_match_nnz() {
+        let g = Graph::ntu_rgbd();
+        let total: usize = (0..g.v).map(|k| g.in_neighbors(k).len()).sum();
+        assert_eq!(total, g.nnz());
+        // every node has itself as a neighbour
+        for k in 0..g.v {
+            assert!(g.in_neighbors(k).iter().any(|&(j, _)| j == k));
+        }
+    }
+
+    #[test]
+    fn test_random_graph_degree() {
+        let mut rng = crate::util::Rng::seed_from_u64(5);
+        let g = Graph::random(200, 10.0, &mut rng);
+        let avg_deg = 2.0 * g.edges.len() as f64 / g.v as f64;
+        assert!(avg_deg > 7.0 && avg_deg < 13.0, "avg degree {avg_deg}");
+    }
+}

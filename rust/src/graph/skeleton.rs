@@ -1,0 +1,95 @@
+//! The NTU-RGB+D 25-joint skeleton topology (Shahroudy et al., CVPR 2016),
+//! as used by ST-GCN (Yan et al., AAAI 2018) and the paper.
+//!
+//! Joint indices (0-based):
+//! 0 spine-base, 1 spine-mid, 2 neck, 3 head, 4 L-shoulder, 5 L-elbow,
+//! 6 L-wrist, 7 L-hand, 8 R-shoulder, 9 R-elbow, 10 R-wrist, 11 R-hand,
+//! 12 L-hip, 13 L-knee, 14 L-ankle, 15 L-foot, 16 R-hip, 17 R-knee,
+//! 18 R-ankle, 19 R-foot, 20 spine-shoulder, 21 L-hand-tip, 22 L-thumb,
+//! 23 R-hand-tip, 24 R-thumb.
+
+/// The 24 bone edges of the NTU 25-joint skeleton (0-based indices).
+pub fn ntu_rgbd_25_edges() -> Vec<(usize, usize)> {
+    // canonical 1-based pairs from the NTU-RGB+D release, shifted to 0-based
+    const ONE_BASED: [(usize, usize); 24] = [
+        (1, 2),
+        (2, 21),
+        (3, 21),
+        (4, 3),
+        (5, 21),
+        (6, 5),
+        (7, 6),
+        (8, 7),
+        (9, 21),
+        (10, 9),
+        (11, 10),
+        (12, 11),
+        (13, 1),
+        (14, 13),
+        (15, 14),
+        (16, 15),
+        (17, 1),
+        (18, 17),
+        (19, 18),
+        (20, 19),
+        (22, 23),
+        (23, 8),
+        (24, 25),
+        (25, 12),
+    ];
+    ONE_BASED.iter().map(|&(a, b)| (a - 1, b - 1)).collect()
+}
+
+/// Canonical joint names, index-aligned with the edge list.
+pub const JOINT_NAMES: [&str; 25] = [
+    "spine_base",
+    "spine_mid",
+    "neck",
+    "head",
+    "shoulder_l",
+    "elbow_l",
+    "wrist_l",
+    "hand_l",
+    "shoulder_r",
+    "elbow_r",
+    "wrist_r",
+    "hand_r",
+    "hip_l",
+    "knee_l",
+    "ankle_l",
+    "foot_l",
+    "hip_r",
+    "knee_r",
+    "ankle_r",
+    "foot_r",
+    "spine_shoulder",
+    "handtip_l",
+    "thumb_l",
+    "handtip_r",
+    "thumb_r",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_edges_valid() {
+        let e = ntu_rgbd_25_edges();
+        assert_eq!(e.len(), 24);
+        for &(a, b) in &e {
+            assert!(a < 25 && b < 25 && a != b);
+        }
+        // no duplicate edges in either direction
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b) in &e {
+            let key = (a.min(b), a.max(b));
+            assert!(seen.insert(key), "duplicate edge {key:?}");
+        }
+    }
+
+    #[test]
+    fn test_joint_names_count() {
+        assert_eq!(JOINT_NAMES.len(), 25);
+    }
+}

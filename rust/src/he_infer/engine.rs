@@ -1,0 +1,524 @@
+//! The encrypted STGCN inference engine — the paper's HE execution plan.
+//!
+//! Key design points, mirroring Sections 3.3–3.4 and Appendix A.3/A.4:
+//! * **AMA per-node ciphertexts**: adjacency aggregation is `PMult`/`Add`
+//!   only; `â_kj`, folded BN and the node-wise polynomial scale
+//!   `α_k = sqrt(c·|w₂ₖ|)` are all fused into the GCNConv / temporal-conv
+//!   plaintext masks, so a full fused activation costs exactly one level.
+//! * **Hoisted + BSGS rotations**: GCNConv channel-diagonal rotations are
+//!   hoisted across output nodes; the temporal conv uses baby-step (taps) /
+//!   giant-step (channel diagonals) decomposition with plaintext-pre-rotated
+//!   masks. `use_bsgs = false` falls back to one rotation per (diagonal,
+//!   tap) pair — the ablation of `benches/ablation_fusion.rs`.
+//! * **Exact scale management**: every PMult encodes its mask at
+//!   `p_scale = Δ·q_ℓ / scale(ct)` so post-rescale scales renormalize to Δ;
+//!   the polynomial's linear branch is encoded at `scale(ct)` so it lands
+//!   exactly on the square's scale (no approximate-scale adds).
+
+use super::backend::HeBackend;
+use crate::ama::AmaLayout;
+use crate::stgcn::{Activation, StgcnLayer, StgcnModel};
+use anyhow::{bail, ensure, Result};
+
+/// Compiled encrypted-inference engine for one model + layout.
+pub struct HeStgcn<'m> {
+    pub model: &'m StgcnModel,
+    pub layout: AmaLayout,
+    /// Baby-step/giant-step temporal conv (true) vs naive per-(d,tap)
+    /// rotations (false) — the rotation-count ablation.
+    pub use_bsgs: bool,
+    /// Node-wise operator fusion (true, LinGCN) vs unfused activations
+    /// costing an extra level each (false, CryptoGCN-style baseline).
+    pub fuse_activations: bool,
+}
+
+/// Cyclically rotate a plaintext slot vector right by `k` (mask
+/// pre-rotation for BSGS).
+fn rot_right_vec(v: &[f64], k: usize) -> Vec<f64> {
+    let n = v.len();
+    let k = k % n;
+    let mut out = vec![0.0; n];
+    for (i, &x) in v.iter().enumerate() {
+        out[(i + k) % n] = x;
+    }
+    out
+}
+
+impl<'m> HeStgcn<'m> {
+    pub fn new(model: &'m StgcnModel, layout: AmaLayout) -> Result<Self> {
+        ensure!(layout.t == model.t, "layout/model frame mismatch");
+        ensure!(
+            layout.c_max >= model.c_max(),
+            "layout channel capacity below model's"
+        );
+        ensure!(model.t.is_power_of_two(), "pooling requires power-of-two T");
+        ensure!(
+            model.num_classes() <= layout.c_max,
+            "classes must fit channel blocks for the FC diagonal method"
+        );
+        model.effective_nonlinear_layers()?; // validates structural constraint
+        Ok(HeStgcn {
+            model,
+            layout,
+            use_bsgs: true,
+            fuse_activations: true,
+        })
+    }
+
+    /// Rotation steps whose Galois keys the CKKS engine must hold.
+    pub fn required_rotations(&self) -> Vec<usize> {
+        self.layout.rotation_steps(self.model.k)
+    }
+
+    /// Multiplicative depth this engine consumes (must be ≤ params levels).
+    pub fn levels_needed(&self) -> Result<usize> {
+        let act_cost = if self.fuse_activations { 1 } else { 2 };
+        let nl = self.model.effective_nonlinear_layers()?;
+        Ok(2 * self.model.layers.len() + 2 + act_cost * nl)
+    }
+
+    /// The fused pre-scale α for a node's activation (1.0 when no fusion
+    /// applies), and the sign of the quadratic term.
+    fn alpha_sign(&self, act: &Activation) -> (f64, f64) {
+        match *act {
+            Activation::Poly { w2, c, .. } if self.fuse_activations => {
+                let a2 = (c * w2.abs()).sqrt();
+                (if a2 == 0.0 { 1.0 } else { a2 }, w2.signum())
+            }
+            _ => (1.0, 1.0),
+        }
+    }
+
+    /// Full encrypted forward: per-node input ciphertexts → one logits
+    /// ciphertext (logit for class `m` at slot `m·T`).
+    pub fn forward<B: HeBackend>(&self, be: &B, input: &[B::Ct]) -> Result<B::Ct> {
+        let v = self.model.v();
+        ensure!(input.len() == v, "need one ciphertext per node");
+        let need = self.levels_needed()?;
+        ensure!(
+            be.level(&input[0]) >= need,
+            "input level {} below required depth {need}",
+            be.level(&input[0])
+        );
+        let mut cts: Vec<B::Ct> = input.to_vec();
+        let mut c_cur = self.model.c_in;
+        for layer in &self.model.layers {
+            ensure!(layer.c_in == c_cur);
+            cts = self.gcn_conv(be, layer, &cts)?;
+            cts = self.activation(be, &layer.act1, &cts)?;
+            cts = self.temporal_conv(be, layer, &cts)?;
+            cts = self.activation(be, &layer.act2, &cts)?;
+            c_cur = layer.c_out;
+        }
+        self.pool_fc(be, &cts, c_cur)
+    }
+
+    /// GCNConv: hoisted channel-diagonal rotations per input node, then per
+    /// output node Σ over neighbours and diagonals of PMults whose masks
+    /// fuse `w · â_kj · α_k` (+ folded BN bias, also α-scaled).
+    fn gcn_conv<B: HeBackend>(
+        &self,
+        be: &B,
+        layer: &StgcnLayer,
+        cts: &[B::Ct],
+    ) -> Result<Vec<B::Ct>> {
+        let (ci, co) = (layer.c_in, layer.c_out);
+        let cm = self.layout.c_max;
+        let t = self.layout.t;
+        let graph = &self.model.graph;
+
+        // channel diagonals that touch any (o, i) weight
+        let used_d: Vec<usize> = (0..cm)
+            .filter(|&d| (0..co).any(|o| (o + d) % cm < ci))
+            .collect();
+
+        // hoisted rotations: every input node rotated once per diagonal
+        let rotated: Vec<Vec<B::Ct>> = cts
+            .iter()
+            .map(|ct| {
+                used_d
+                    .iter()
+                    .map(|&d| be.rotate(ct, d * t))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+
+        let mut out = Vec::with_capacity(graph.v);
+        for k in 0..graph.v {
+            let (alpha, _sign) = self.alpha_sign(&layer.act1[k]);
+            let mut acc: Option<B::Ct> = None;
+            for (j, a_kj) in graph.in_neighbors(k) {
+                for (di, &d) in used_d.iter().enumerate() {
+                    let src = &rotated[j][di];
+                    let p_scale = be.delta() * be.q_at(be.level(src)) / be.scale(src);
+                    let layout = self.layout;
+                    let w = &layer.gcn_w;
+                    let thunk = move || {
+                        layout.mask(|o, _tt| {
+                            let i = (o + d) % cm;
+                            if o < co && i < ci {
+                                a_kj * alpha * w.get(&[o, i])
+                            } else {
+                                0.0
+                            }
+                        })
+                    };
+                    let term = be.mul_plain(src, &thunk, p_scale);
+                    acc = Some(match acc {
+                        Some(a) => be.add(&a, &term),
+                        None => term,
+                    });
+                }
+            }
+            let mut y = be.rescale(&acc.expect("node with no neighbours"));
+            // bias (BN folded), scaled by the fused α
+            let layout = self.layout;
+            let b = &layer.gcn_b;
+            let bias_thunk =
+                move || layout.mask(|o, _| if o < co { alpha * b.data[o] } else { 0.0 });
+            y = be.add_plain(&y, &bias_thunk);
+            out.push(y);
+        }
+        Ok(out)
+    }
+
+    /// Node-wise activation. For fused mode the input is x̃ = α·u, so
+    /// `y = sign·x̃² + (w1/α)·x̃ + b` — one level. Unfused mode evaluates
+    /// `c·w2·u² + w1·u + b` with an explicit scale PMult — two levels.
+    fn activation<B: HeBackend>(
+        &self,
+        be: &B,
+        acts: &[Activation],
+        cts: &[B::Ct],
+    ) -> Result<Vec<B::Ct>> {
+        let mut out = Vec::with_capacity(cts.len());
+        for (k, ct) in cts.iter().enumerate() {
+            match acts[k] {
+                Activation::Identity => out.push(ct.clone()),
+                Activation::Relu => bail!("ReLU cannot run under HE; export a polynomial model"),
+                Activation::Poly { w2, w1, b, c } => {
+                    let layout = self.layout;
+                    if self.fuse_activations {
+                        let (alpha, sign) = self.alpha_sign(&acts[k]);
+                        let sq = be.rescale(&be.mul(ct, ct));
+                        let lin_thunk = move || layout.mask(|_, _| w1 / alpha);
+                        let lin = be.rescale(&be.mul_plain(ct, &lin_thunk, be.scale(ct)));
+                        let y = if sign >= 0.0 {
+                            be.add(&sq, &lin)
+                        } else {
+                            be.sub(&lin, &sq)
+                        };
+                        let bias_thunk = move || layout.mask(|_, _| b);
+                        out.push(be.add_plain(&y, &bias_thunk));
+                    } else {
+                        // CryptoGCN-style: square, then an explicit c·w2
+                        // plaintext multiplication — an extra level.
+                        let sq = be.rescale(&be.mul(ct, ct));
+                        let scale_thunk = move || layout.mask(|_, _| c * w2);
+                        let p_scale = be.delta() * be.q_at(be.level(&sq)) / be.scale(&sq);
+                        let sq_scaled = be.rescale(&be.mul_plain(&sq, &scale_thunk, p_scale));
+                        // linear branch: two PMult+rescale hops to land on
+                        // the same level and scale Δ as the quadratic branch
+                        let lin_thunk = move || layout.mask(|_, _| w1);
+                        let p1 = be.delta() * be.q_at(be.level(ct)) / be.scale(ct);
+                        let lin1 = be.rescale(&be.mul_plain(ct, &lin_thunk, p1));
+                        let one_thunk = move || layout.mask(|_, _| 1.0);
+                        let p2 = be.delta() * be.q_at(be.level(&lin1)) / be.scale(&lin1);
+                        let lin = be.rescale(&be.mul_plain(&lin1, &one_thunk, p2));
+                        let y = be.add(&sq_scaled, &lin);
+                        let bias_thunk = move || layout.mask(|_, _| b);
+                        out.push(be.add_plain(&y, &bias_thunk));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Temporal 1×K convolution per node (node-wise separable), with the
+    /// *next* activation's α fused into the masks. BSGS: K baby rotations
+    /// (taps), then one giant rotation per channel diagonal.
+    fn temporal_conv<B: HeBackend>(
+        &self,
+        be: &B,
+        layer: &StgcnLayer,
+        cts: &[B::Ct],
+    ) -> Result<Vec<B::Ct>> {
+        let co = layer.c_out;
+        let cm = self.layout.c_max;
+        let t = self.layout.t;
+        let kk = self.model.k;
+        let half = kk / 2;
+        let slots = self.layout.slots;
+
+        let used_d: Vec<usize> = (0..cm)
+            .filter(|&d| (0..co).any(|o| (o + d) % cm < co))
+            .collect();
+
+        let mut out = Vec::with_capacity(cts.len());
+        for (node, ct) in cts.iter().enumerate() {
+            let (alpha, _) = self.alpha_sign(&layer.act2[node]);
+            let p_scale = be.delta() * be.q_at(be.level(ct)) / be.scale(ct);
+            let mask_for = |d: usize, tap: isize| {
+                let layout = self.layout;
+                let w = &layer.tconv_w;
+                move || {
+                    layout.mask(|o, tt| {
+                        let i = (o + d) % cm;
+                        let src_t = tt as isize + tap;
+                        if o < co && i < co && src_t >= 0 && (src_t as usize) < layout.t {
+                            alpha * w.get(&[o, i, (tap + half as isize) as usize])
+                        } else {
+                            0.0
+                        }
+                    })
+                }
+            };
+
+            let acc = if self.use_bsgs {
+                // baby steps: rotate once per tap, shared across diagonals
+                let baby: Vec<(isize, B::Ct)> = (-(half as isize)..=half as isize)
+                    .map(|tap| {
+                        let rot = if tap == 0 {
+                            ct.clone()
+                        } else if tap > 0 {
+                            be.rotate(ct, tap as usize)
+                        } else {
+                            be.rotate(ct, slots - tap.unsigned_abs())
+                        };
+                        (tap, rot)
+                    })
+                    .collect();
+                let mut acc: Option<B::Ct> = None;
+                for &d in &used_d {
+                    // inner_d = Σ_tap baby_tap ⊙ rot_right(mask(d,tap), d·T)
+                    let mut inner: Option<B::Ct> = None;
+                    for (tap, bct) in &baby {
+                        let m = mask_for(d, *tap);
+                        let thunk = move || rot_right_vec(&m(), d * t);
+                        let term = be.mul_plain(bct, &thunk, p_scale);
+                        inner = Some(match inner {
+                            Some(a) => be.add(&a, &term),
+                            None => term,
+                        });
+                    }
+                    let giant = be.rotate(&inner.unwrap(), d * t);
+                    acc = Some(match acc {
+                        Some(a) => be.add(&a, &giant),
+                        None => giant,
+                    });
+                }
+                acc.unwrap()
+            } else {
+                // naive: one rotation per (diagonal, tap) pair
+                let mut acc: Option<B::Ct> = None;
+                for &d in &used_d {
+                    for tap in -(half as isize)..=half as isize {
+                        let amt = (d * t) as isize + tap;
+                        let amt = amt.rem_euclid(slots as isize) as usize;
+                        let rot = be.rotate(ct, amt);
+                        let thunk = mask_for(d, tap);
+                        let term = be.mul_plain(&rot, &thunk, p_scale);
+                        acc = Some(match acc {
+                            Some(a) => be.add(&a, &term),
+                            None => term,
+                        });
+                    }
+                }
+                acc.unwrap()
+            };
+
+            let mut y = be.rescale(&acc);
+            let layout = self.layout;
+            let bvec = &layer.tconv_b;
+            let bias_thunk =
+                move || layout.mask(|o, _| if o < co { alpha * bvec.data[o] } else { 0.0 });
+            y = be.add_plain(&y, &bias_thunk);
+            out.push(y);
+        }
+        Ok(out)
+    }
+
+    /// Global average pooling over (V, T) followed by the FC head via the
+    /// channel-diagonal method. Output: logit for class m at slot m·T.
+    fn pool_fc<B: HeBackend>(&self, be: &B, cts: &[B::Ct], c_last: usize) -> Result<B::Ct> {
+        let t = self.layout.t;
+        let cm = self.layout.c_max;
+        let v = self.model.v();
+        let classes = self.model.num_classes();
+
+        // Σ over nodes
+        let mut s = cts[0].clone();
+        for ct in &cts[1..] {
+            s = be.add(&s, ct);
+        }
+        // Σ over frames inside each channel block (rotate-add tree)
+        let mut step = 1;
+        while step < t {
+            let r = be.rotate(&s, step);
+            s = be.add(&s, &r);
+            step <<= 1;
+        }
+        // pool mask: keep slot (c, 0) with factor 1/(V·T)
+        let layout = self.layout;
+        let inv = 1.0 / (v * t) as f64;
+        let pool_thunk =
+            move || layout.mask(|o, tt| if tt == 0 && o < c_last { inv } else { 0.0 });
+        let p_scale = be.delta() * be.q_at(be.level(&s)) / be.scale(&s);
+        let pooled = be.rescale(&be.mul_plain(&s, &pool_thunk, p_scale));
+
+        // FC diagonals
+        let used_d: Vec<usize> = (0..cm)
+            .filter(|&d| (0..classes).any(|o| (o + d) % cm < c_last))
+            .collect();
+        let p_scale = be.delta() * be.q_at(be.level(&pooled)) / be.scale(&pooled);
+        let mut acc: Option<B::Ct> = None;
+        for &d in &used_d {
+            let rot = be.rotate(&pooled, d * t);
+            let fw = &self.model.fc_w;
+            let thunk = move || {
+                layout.mask(|o, tt| {
+                    let c = (o + d) % cm;
+                    if tt == 0 && o < classes && c < c_last {
+                        fw.get(&[o, c])
+                    } else {
+                        0.0
+                    }
+                })
+            };
+            let term = be.mul_plain(&rot, &thunk, p_scale);
+            acc = Some(match acc {
+                Some(a) => be.add(&a, &term),
+                None => term,
+            });
+        }
+        let mut y = be.rescale(&acc.unwrap());
+        let fb = &self.model.fc_b;
+        let bias_thunk = move || {
+            layout.mask(|o, tt| if tt == 0 && o < classes { fb.data[o] } else { 0.0 })
+        };
+        y = be.add_plain(&y, &bias_thunk);
+        Ok(y)
+    }
+
+    /// Read the class logits out of a decrypted logits-slot vector.
+    pub fn extract_logits(&self, slots: &[f64]) -> Vec<f64> {
+        (0..self.model.num_classes())
+            .map(|m| slots[m * self.layout.t])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::he_infer::backend::CountingBackend;
+
+    fn tiny() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
+    }
+
+    #[test]
+    fn test_rot_right_vec() {
+        assert_eq!(rot_right_vec(&[1.0, 2.0, 3.0, 4.0], 1), vec![4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(rot_right_vec(&[1.0, 2.0], 2), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn test_counting_forward_consumes_exact_levels() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let need = he.levels_needed().unwrap();
+        assert_eq!(need, 2 * 2 + 2 + 4); // 2 layers, 4 acts → 10
+        let be = CountingBackend::new(need, 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let out = he.forward(&be, &input).unwrap();
+        assert_eq!(be.level(&out), 0, "must land exactly at level 0");
+    }
+
+    #[test]
+    fn test_linearized_model_needs_fewer_levels() {
+        let mut m = tiny();
+        let plan = crate::linearize::LinearizationPlan::structural_mixed(2, 5, 2);
+        plan.apply(&mut m).unwrap();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        assert_eq!(he.levels_needed().unwrap(), 2 * 2 + 2 + 2);
+        let be = CountingBackend::new(he.levels_needed().unwrap(), 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let out = he.forward(&be, &input).unwrap();
+        assert_eq!(be.level(&out), 0);
+    }
+
+    #[test]
+    fn test_unfused_needs_extra_levels() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let mut he = HeStgcn::new(&m, layout).unwrap();
+        he.fuse_activations = false;
+        assert_eq!(he.levels_needed().unwrap(), 2 * 2 + 2 + 2 * 4);
+        let be = CountingBackend::new(he.levels_needed().unwrap(), 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let out = he.forward(&be, &input).unwrap();
+        assert_eq!(be.level(&out), 0);
+    }
+
+    #[test]
+    fn test_bsgs_reduces_rotations() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let mut he = HeStgcn::new(&m, layout).unwrap();
+
+        let be = CountingBackend::new(he.levels_needed().unwrap(), 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let _ = he.forward(&be, &input).unwrap();
+        let bsgs_rots = be.op_counts().rot;
+
+        he.use_bsgs = false;
+        let be2 = CountingBackend::new(he.levels_needed().unwrap(), 33);
+        let _ = he.forward(&be2, &input).unwrap();
+        let naive_rots = be2.op_counts().rot;
+        assert!(
+            bsgs_rots < naive_rots,
+            "BSGS {bsgs_rots} must beat naive {naive_rots}"
+        );
+    }
+
+    #[test]
+    fn test_relu_model_rejected() {
+        let mut m = tiny();
+        for l in m.layers.iter_mut() {
+            for a in l.act1.iter_mut() {
+                *a = Activation::Relu;
+            }
+        }
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let be = CountingBackend::new(12, 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        assert!(he.forward(&be, &input).is_err());
+    }
+
+    #[test]
+    fn test_rotation_count_scales_with_channels() {
+        // Observation for the cost model: rotations grow ~linearly in C
+        let layout8 = AmaLayout::new(8, 8, 1024).unwrap();
+        let m8 = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[8, 8], 3, 9);
+        let he8 = HeStgcn::new(&m8, layout8).unwrap();
+        let be8 = CountingBackend::new(he8.levels_needed().unwrap(), 33);
+        let input: Vec<_> = (0..5).map(|_| be8.fresh()).collect();
+        let _ = he8.forward(&be8, &input).unwrap();
+
+        let layout4 = AmaLayout::new(8, 4, 1024).unwrap();
+        let m4 = tiny();
+        let he4 = HeStgcn::new(&m4, layout4).unwrap();
+        let be4 = CountingBackend::new(he4.levels_needed().unwrap(), 33);
+        let _ = he4.forward(&be4, &input).unwrap();
+
+        let (r8, r4) = (be8.op_counts().rot, be4.op_counts().rot);
+        assert!(r8 > r4, "more channels → more rotations ({r8} vs {r4})");
+        assert!((r8 as f64) < 3.0 * r4 as f64, "growth should be ~linear");
+    }
+}

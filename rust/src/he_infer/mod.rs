@@ -1,0 +1,78 @@
+//! Homomorphically-encrypted STGCN inference (the paper's Section 3.4 +
+//! Appendix A): level planning (Table 6), the AMA execution engine with
+//! node-wise operator fusion, and the backend abstraction that lets the
+//! same engine run on real CKKS ciphertexts or as a symbolic op counter.
+
+pub mod backend;
+pub mod engine;
+pub mod level_plan;
+
+pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
+pub use engine::HeStgcn;
+pub use level_plan::{HePlanParams, Method, VariantShape};
+
+use crate::ama::{encrypt_clip, AmaLayout};
+use crate::ckks::{CkksEngine, CkksParams};
+use crate::stgcn::StgcnModel;
+use anyhow::Result;
+
+/// End-to-end private inference service state for one model variant:
+/// CKKS engine (keys for exactly the rotations the plan needs) + compiled
+/// HE executor. This is what the coordinator's workers hold.
+pub struct PrivateInferenceSession {
+    pub engine: CkksEngine,
+    pub layout: AmaLayout,
+    pub levels: usize,
+}
+
+impl PrivateInferenceSession {
+    /// Build keys and layout for `model` under `params`.
+    pub fn new(model: &StgcnModel, params: CkksParams, seed: u64) -> Result<Self> {
+        let slots = params.n / 2;
+        let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), slots)?;
+        let he = HeStgcn::new(model, layout)?;
+        let rotations = he.required_rotations();
+        let levels = params.levels;
+        let engine = CkksEngine::new(params, &rotations, seed)?;
+        Ok(PrivateInferenceSession {
+            engine,
+            layout,
+            levels,
+        })
+    }
+
+    /// Client side: encrypt a [V, C_in, T] clip.
+    pub fn encrypt_input(
+        &self,
+        model: &StgcnModel,
+        x: &[f64],
+    ) -> Result<Vec<crate::ckks::Ciphertext>> {
+        Ok(encrypt_clip(
+            &self.engine,
+            &self.layout,
+            x,
+            model.v(),
+            model.c_in,
+            self.levels + 1,
+        )?
+        .cts)
+    }
+
+    /// Server side: run the encrypted forward.
+    pub fn infer(
+        &self,
+        model: &StgcnModel,
+        input: &[crate::ckks::Ciphertext],
+    ) -> Result<crate::ckks::Ciphertext> {
+        let he = HeStgcn::new(model, self.layout)?;
+        let be = CkksBackend::new(&self.engine);
+        he.forward(&be, input)
+    }
+
+    /// Client side: decrypt the logits ciphertext.
+    pub fn decrypt_logits(&self, model: &StgcnModel, ct: &crate::ckks::Ciphertext) -> Vec<f64> {
+        let slots = self.engine.decrypt(ct);
+        let he = HeStgcn::new(model, self.layout).expect("layout validated at build");
+        he.extract_logits(&slots)
+    }
+}

@@ -1,0 +1,23 @@
+//! LinGCN: Structural Linearized Graph Convolutional Network for
+//! Homomorphically Encrypted Inference (NeurIPS 2023) — full-system
+//! reproduction.
+//!
+//! Three-layer architecture:
+//! - **L3 (this crate)**: CKKS leveled-HE substrate, AMA-packed encrypted
+//!   STGCN inference engine, level planner, serving coordinator.
+//! - **L2 (python/compile)**: JAX STGCN model + LinGCN training pipeline
+//!   (structural linearization, polynomial replacement, distillation),
+//!   AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels)**: Pallas kernels for the compute
+//!   hot-spots, validated against pure-jnp oracles.
+
+pub mod ckks;
+pub mod graph;
+pub mod stgcn;
+pub mod ama;
+pub mod he_infer;
+pub mod linearize;
+pub mod costmodel;
+pub mod coordinator;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,241 @@
+//! Linearization plans: which node-wise non-linear operators survive.
+//!
+//! This is the rust-side representation of the output of the python
+//! structural-linearization training (Algorithm 1); it also implements the
+//! paper's two baselines for the ablations:
+//! * **layer-wise** pruning (CryptoGCN-style): an activation layer is
+//!   dropped for *all* nodes or none (Fig. 6b),
+//! * **unstructured** pruning (SNL/DELPHI-style): arbitrary per-node bits,
+//!   which the level planner shows saves *nothing* under CKKS (Fig. 3).
+
+use crate::stgcn::{Activation, StgcnModel};
+use anyhow::{ensure, Result};
+
+/// Per-layer, per-position, per-node indicator bits (`h` in paper Eq. 2).
+/// `true` = keep the non-linearity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinearizationPlan {
+    /// plan[layer] = (h1 over nodes, h2 over nodes).
+    pub layers: Vec<(Vec<bool>, Vec<bool>)>,
+}
+
+impl LinearizationPlan {
+    /// All activations kept (the un-pruned model).
+    pub fn full(num_layers: usize, v: usize) -> Self {
+        LinearizationPlan {
+            layers: vec![(vec![true; v], vec![true; v]); num_layers],
+        }
+    }
+
+    /// Per-node activation-count vector for one layer.
+    fn counts(h1: &[bool], h2: &[bool]) -> Vec<usize> {
+        h1.iter()
+            .zip(h2)
+            .map(|(&a, &b)| a as usize + b as usize)
+            .collect()
+    }
+
+    /// Does the plan satisfy the structural constraint of Eq. 2
+    /// (synchronized per-node counts within each layer)?
+    pub fn is_structural(&self) -> bool {
+        self.layers.iter().all(|(h1, h2)| {
+            let c = Self::counts(h1, h2);
+            c.iter().all(|&x| x == c[0])
+        })
+    }
+
+    /// Effective non-linear layer count (paper's "Non-linear layers"
+    /// column): Σ over layers of the synchronized per-node count.
+    /// Errors when the plan is unstructured.
+    pub fn effective_nonlinear_layers(&self) -> Result<usize> {
+        ensure!(self.is_structural(), "plan violates structural constraint");
+        Ok(self
+            .layers
+            .iter()
+            .map(|(h1, h2)| Self::counts(h1, h2)[0])
+            .sum())
+    }
+
+    /// Per-node total level consumption of the activation part — what the
+    /// CKKS chain must budget. For a structural plan all entries are equal;
+    /// for an unstructured one the *max* governs (Fig. 3's point).
+    pub fn per_node_act_levels(&self) -> Vec<usize> {
+        let v = self.layers[0].0.len();
+        let mut totals = vec![0usize; v];
+        for (h1, h2) in &self.layers {
+            for (i, c) in Self::counts(h1, h2).iter().enumerate() {
+                totals[i] += c;
+            }
+        }
+        totals
+    }
+
+    /// Level budget the activations force: max over nodes (synchronized
+    /// aggregation inputs must meet the deepest node).
+    pub fn act_level_budget(&self) -> usize {
+        self.per_node_act_levels().into_iter().max().unwrap_or(0)
+    }
+
+    /// Mean per-node non-linear count — the *compute* saved by a plan,
+    /// distinct from the *level* budget. Unstructured plans reduce this
+    /// without reducing `act_level_budget` — the paper's Observation 2.
+    pub fn mean_act_count(&self) -> f64 {
+        let t = self.per_node_act_levels();
+        t.iter().sum::<usize>() as f64 / t.len() as f64
+    }
+
+    /// Layer-wise plan (CryptoGCN baseline): keep the first
+    /// `kept_act_layers` activation positions (in network order), drop the
+    /// rest for every node.
+    pub fn layer_wise(num_layers: usize, v: usize, kept_act_layers: usize) -> Self {
+        let mut plan = Vec::new();
+        let mut budget = kept_act_layers;
+        for _ in 0..num_layers {
+            let h1 = vec![budget > 0; v];
+            if budget > 0 {
+                budget -= 1;
+            }
+            let h2 = vec![budget > 0; v];
+            if budget > 0 {
+                budget -= 1;
+            }
+            plan.push((h1, h2));
+        }
+        LinearizationPlan { layers: plan }
+    }
+
+    /// Structural plan with `kept` effective non-linear layers where nodes
+    /// pick *different positions* (even nodes pos-1, odd nodes pos-2 when a
+    /// layer keeps one) — exercising the paper's node-level freedom.
+    pub fn structural_mixed(num_layers: usize, v: usize, kept: usize) -> Self {
+        let mut plan = Vec::new();
+        let mut budget = kept;
+        for _ in 0..num_layers {
+            let per_layer = budget.min(2);
+            budget -= per_layer;
+            let (h1, h2) = match per_layer {
+                2 => (vec![true; v], vec![true; v]),
+                1 => {
+                    let h1: Vec<bool> = (0..v).map(|i| i % 2 == 0).collect();
+                    let h2: Vec<bool> = (0..v).map(|i| i % 2 == 1).collect();
+                    (h1, h2)
+                }
+                _ => (vec![false; v], vec![false; v]),
+            };
+            plan.push((h1, h2));
+        }
+        LinearizationPlan { layers: plan }
+    }
+
+    /// Unstructured plan: random per-node bits at a keep-probability —
+    /// the strawman of Fig. 3(b).
+    pub fn unstructured_random(
+        num_layers: usize,
+        v: usize,
+        keep_prob: f64,
+        rng: &mut crate::util::Rng,
+    ) -> Self {
+        let mk = |rng: &mut crate::util::Rng| -> Vec<bool> {
+            (0..v).map(|_| rng.gen_f64() < keep_prob).collect()
+        };
+        LinearizationPlan {
+            layers: (0..num_layers).map(|_| (mk(rng), mk(rng))).collect(),
+        }
+    }
+
+    /// Apply to a model: pruned positions become `Identity`.
+    pub fn apply(&self, model: &mut StgcnModel) -> Result<()> {
+        ensure!(self.layers.len() == model.layers.len(), "layer count mismatch");
+        for ((h1, h2), layer) in self.layers.iter().zip(model.layers.iter_mut()) {
+            ensure!(h1.len() == layer.act1.len(), "node count mismatch");
+            for (keep, act) in h1.iter().zip(layer.act1.iter_mut()) {
+                if !keep {
+                    *act = Activation::Identity;
+                }
+            }
+            for (keep, act) in h2.iter().zip(layer.act2.iter_mut()) {
+                if !keep {
+                    *act = Activation::Identity;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the plan already embedded in a model's activations.
+    pub fn from_model(model: &StgcnModel) -> Self {
+        LinearizationPlan {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| {
+                    (
+                        l.act1.iter().map(|a| a.consumes_level()).collect(),
+                        l.act2.iter().map(|a| a.consumes_level()).collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    #[test]
+    fn test_full_plan() {
+        let p = LinearizationPlan::full(3, 25);
+        assert!(p.is_structural());
+        assert_eq!(p.effective_nonlinear_layers().unwrap(), 6);
+        assert_eq!(p.act_level_budget(), 6);
+    }
+
+    #[test]
+    fn test_layer_wise_counts() {
+        for kept in 0..=6 {
+            let p = LinearizationPlan::layer_wise(3, 25, kept);
+            assert!(p.is_structural());
+            assert_eq!(p.effective_nonlinear_layers().unwrap(), kept, "kept={kept}");
+        }
+    }
+
+    #[test]
+    fn test_structural_mixed_counts_and_positions() {
+        let p = LinearizationPlan::structural_mixed(3, 25, 3);
+        assert!(p.is_structural());
+        assert_eq!(p.effective_nonlinear_layers().unwrap(), 3);
+        // second layer keeps 1 act/node at mixed positions
+        let (h1, h2) = &p.layers[1];
+        assert!(h1.iter().any(|&x| x) && !h1.iter().all(|&x| x));
+        assert!(h2.iter().any(|&x| x) && !h2.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn test_unstructured_saves_no_levels() {
+        // the Fig. 3 claim: unstructured pruning at 50% leaves the max
+        // per-node depth at (or near) the full budget while halving compute
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let p = LinearizationPlan::unstructured_random(3, 25, 0.5, &mut rng);
+        assert!(!p.is_structural());
+        assert!(p.effective_nonlinear_layers().is_err());
+        let full_budget = 6;
+        assert!(
+            p.act_level_budget() >= full_budget - 1,
+            "unstructured budget {} unexpectedly low",
+            p.act_level_budget()
+        );
+        assert!(p.mean_act_count() < 4.0, "compute did drop");
+    }
+
+    #[test]
+    fn test_apply_and_extract_roundtrip() {
+        let mut m = StgcnModel::synthetic(Graph::ring(6), 8, 2, 3, &[4, 4, 4], 3, 2);
+        let p = LinearizationPlan::structural_mixed(3, 6, 2);
+        p.apply(&mut m).unwrap();
+        assert_eq!(m.effective_nonlinear_layers().unwrap(), 2);
+        let back = LinearizationPlan::from_model(&m);
+        assert_eq!(back, p);
+    }
+}

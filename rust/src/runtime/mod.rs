@@ -1,0 +1,57 @@
+//! PJRT runtime: loads the AOT-compiled student forward pass
+//! (`artifacts/model.hlo.txt`, produced once by `python/compile/aot.py`
+//! with the Pallas kernels inlined) and executes it on the XLA CPU client.
+//!
+//! This is the *plaintext* serving path — used for reference checks,
+//! accuracy evaluation, and as the cleartext fall-back tier of the
+//! coordinator. Python is never on the request path: the HLO text is
+//! parsed, compiled and executed natively (see /opt/xla-example/load_hlo).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled plaintext model executable.
+pub struct PjrtModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Input shape [V, C_in, T].
+    pub v: usize,
+    pub c_in: usize,
+    pub t: usize,
+}
+
+impl PjrtModel {
+    /// Load HLO text and compile on the CPU PJRT client.
+    pub fn load(path: &Path, v: usize, c_in: usize, t: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO")?;
+        Ok(PjrtModel { exe, v, c_in, t })
+    }
+
+    /// Run one clip [V, C_in, T] (row-major f64, converted to f32) and
+    /// return the logits.
+    pub fn infer(&self, x: &[f64]) -> Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.v * self.c_in * self.t, "input shape mismatch");
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let lit = xla::Literal::vec1(&xf).reshape(&[
+            self.v as i64,
+            self.c_in as i64,
+            self.t as i64,
+        ])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        let logits_f32 = out.to_vec::<f32>()?;
+        Ok(logits_f32.into_iter().map(|v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/artifacts_pipeline.rs —
+    // they need `make artifacts` to have run.
+}

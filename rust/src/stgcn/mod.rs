@@ -1,0 +1,465 @@
+//! Plaintext STGCN model: configuration, weights, and the reference forward
+//! pass the encrypted engine is validated against.
+//!
+//! One STGCN layer = GCNConv (1×1 channel conv + Â aggregation + folded BN)
+//! → node-wise activation σ₁ → temporal conv (1×K over frames) → node-wise
+//! activation σ₂ (paper Figure 4). Activations are either ReLU (teacher),
+//! a node-wise second-order polynomial `c·w₂x² + w₁x + b` (Eq. 4), or
+//! identity (structurally linearized, Eq. 2). The network ends with global
+//! average pooling over (V, T) and a fully connected classifier.
+
+use crate::graph::Graph;
+use crate::util::tensorio::{Tensor, TensorFile};
+use anyhow::{ensure, Context, Result};
+
+/// Activation applied at one of the two per-layer positions, for one node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Activation {
+    /// Teacher model non-linearity.
+    Relu,
+    /// Node-wise trainable polynomial `c·w2·x² + w1·x + b` (paper Eq. 4).
+    Poly { w2: f64, w1: f64, b: f64, c: f64 },
+    /// Structurally linearized: f(x) = x.
+    Identity,
+}
+
+impl Activation {
+    pub fn apply(&self, x: f64) -> f64 {
+        match *self {
+            Activation::Relu => x.max(0.0),
+            Activation::Poly { w2, w1, b, c } => c * w2 * x * x + w1 * x + b,
+            Activation::Identity => x,
+        }
+    }
+
+    /// Does this activation consume a multiplicative level under HE?
+    pub fn consumes_level(&self) -> bool {
+        !matches!(self, Activation::Identity)
+    }
+}
+
+/// One STGCN layer's weights.
+#[derive(Clone, Debug)]
+pub struct StgcnLayer {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// 1×1 conv kernel [c_out, c_in] (BN pre-folded by the exporter).
+    pub gcn_w: Tensor,
+    /// GCNConv bias [c_out].
+    pub gcn_b: Tensor,
+    /// Temporal conv kernel [c_out, c_out, k].
+    pub tconv_w: Tensor,
+    /// Temporal conv bias [c_out].
+    pub tconv_b: Tensor,
+    /// Per-node activation at position 1 (after GCNConv), length V.
+    pub act1: Vec<Activation>,
+    /// Per-node activation at position 2 (after temporal conv), length V.
+    pub act2: Vec<Activation>,
+}
+
+impl StgcnLayer {
+    /// Paper Eq. 2 structural constraint: every node must consume the same
+    /// number of activation levels in this layer.
+    pub fn acts_per_node(&self) -> Result<usize> {
+        let counts: Vec<usize> = self
+            .act1
+            .iter()
+            .zip(&self.act2)
+            .map(|(a, b)| a.consumes_level() as usize + b.consumes_level() as usize)
+            .collect();
+        let first = counts[0];
+        ensure!(
+            counts.iter().all(|&c| c == first),
+            "unsynchronized per-node activation counts {counts:?} violate the \
+             structural-linearization constraint (paper Eq. 2 / Fig. 3)"
+        );
+        Ok(first)
+    }
+}
+
+/// A full STGCN model.
+#[derive(Clone, Debug)]
+pub struct StgcnModel {
+    pub graph: Graph,
+    /// Frames per clip.
+    pub t: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Temporal kernel width K (odd; the paper uses 9).
+    pub k: usize,
+    pub layers: Vec<StgcnLayer>,
+    /// Classifier weight [classes, c_last] and bias [classes].
+    pub fc_w: Tensor,
+    pub fc_b: Tensor,
+}
+
+impl StgcnModel {
+    pub fn v(&self) -> usize {
+        self.graph.v
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.fc_w.shape[0]
+    }
+
+    pub fn c_max(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.c_in.max(l.c_out))
+            .max()
+            .unwrap_or(self.c_in)
+    }
+
+    /// Count of *effective non-linear layers* in the paper's sense:
+    /// Σ over layers of acts-per-node.
+    pub fn effective_nonlinear_layers(&self) -> Result<usize> {
+        self.layers.iter().map(|l| l.acts_per_node()).sum()
+    }
+
+    /// Plaintext forward pass. Input `x` is [V, C_in, T] row-major;
+    /// returns class logits.
+    pub fn forward(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let v = self.v();
+        let t = self.t;
+        ensure!(x.len() == v * self.c_in * t, "input shape mismatch");
+        let mut cur = x.to_vec();
+        let mut c_cur = self.c_in;
+        for layer in &self.layers {
+            ensure!(layer.c_in == c_cur, "layer channel mismatch");
+            cur = self.forward_layer(layer, &cur)?;
+            c_cur = layer.c_out;
+        }
+        // global average pool over (V, T)
+        let mut pooled = vec![0.0; c_cur];
+        for vi in 0..v {
+            for c in 0..c_cur {
+                for ti in 0..t {
+                    pooled[c] += cur[(vi * c_cur + c) * t + ti];
+                }
+            }
+        }
+        let scale = 1.0 / (v * t) as f64;
+        for p in pooled.iter_mut() {
+            *p *= scale;
+        }
+        // fully connected
+        let classes = self.num_classes();
+        let mut logits = vec![0.0; classes];
+        for m in 0..classes {
+            let mut acc = self.fc_b.data[m];
+            for c in 0..c_cur {
+                acc += self.fc_w.get(&[m, c]) * pooled[c];
+            }
+            logits[m] = acc;
+        }
+        Ok(logits)
+    }
+
+    /// One layer: GCNConv → act1 → temporal conv → act2.
+    /// `x` is [V, c_in, T]; returns [V, c_out, T].
+    pub fn forward_layer(&self, layer: &StgcnLayer, x: &[f64]) -> Result<Vec<f64>> {
+        let v = self.v();
+        let t = self.t;
+        let (ci, co) = (layer.c_in, layer.c_out);
+        // 1×1 conv: y[v, co, t] = Σ_ci w[co,ci]·x[v,ci,t] + b[co]
+        let mut conv = vec![0.0; v * co * t];
+        for vi in 0..v {
+            for o in 0..co {
+                for ti in 0..t {
+                    let mut acc = layer.gcn_b.data[o];
+                    for i in 0..ci {
+                        acc += layer.gcn_w.get(&[o, i]) * x[(vi * ci + i) * t + ti];
+                    }
+                    conv[(vi * co + o) * t + ti] = acc;
+                }
+            }
+        }
+        // Â aggregation over nodes
+        let agg = self.graph.aggregate(&conv, co * t);
+        // act1 (node-wise)
+        let mut a1 = agg;
+        for vi in 0..v {
+            let act = layer.act1[vi];
+            for s in a1[vi * co * t..(vi + 1) * co * t].iter_mut() {
+                *s = act.apply(*s);
+            }
+        }
+        // temporal conv 1×K, zero padded
+        let half = self.k / 2;
+        let mut tc = vec![0.0; v * co * t];
+        for vi in 0..v {
+            for o in 0..co {
+                for ti in 0..t {
+                    let mut acc = layer.tconv_b.data[o];
+                    for i in 0..co {
+                        for kk in 0..self.k {
+                            let src = ti as isize + kk as isize - half as isize;
+                            if src >= 0 && (src as usize) < t {
+                                acc += layer.tconv_w.get(&[o, i, kk])
+                                    * a1[(vi * co + i) * t + src as usize];
+                            }
+                        }
+                    }
+                    tc[(vi * co + o) * t + ti] = acc;
+                }
+            }
+        }
+        // act2 (node-wise)
+        for vi in 0..v {
+            let act = layer.act2[vi];
+            for s in tc[vi * co * t..(vi + 1) * co * t].iter_mut() {
+                *s = act.apply(*s);
+            }
+        }
+        Ok(tc)
+    }
+
+    /// Deterministic synthetic model for tests/benches: polynomial
+    /// activations everywhere, small random-ish weights.
+    pub fn synthetic(
+        graph: Graph,
+        t: usize,
+        c_in: usize,
+        k: usize,
+        channels: &[usize],
+        classes: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let v = graph.v;
+        let mut layers = Vec::new();
+        let mut ci = c_in;
+        for &co in channels {
+            let gw: Vec<f64> = (0..co * ci)
+                .map(|_| rng.gen_range_f64(-0.5, 0.5) / (ci as f64).sqrt())
+                .collect();
+            let gb: Vec<f64> = (0..co).map(|_| rng.gen_range_f64(-0.05, 0.05)).collect();
+            let tw: Vec<f64> = (0..co * co * k)
+                .map(|_| rng.gen_range_f64(-0.5, 0.5) / ((co * k) as f64).sqrt())
+                .collect();
+            let tb: Vec<f64> = (0..co).map(|_| rng.gen_range_f64(-0.05, 0.05)).collect();
+            let mk_acts = |rng: &mut crate::util::Rng| -> Vec<Activation> {
+                (0..v)
+                    .map(|_| Activation::Poly {
+                        w2: rng.gen_range_f64(0.5, 1.5),
+                        w1: rng.gen_range_f64(0.5, 1.0),
+                        b: rng.gen_range_f64(-0.05, 0.05),
+                        c: 0.25,
+                    })
+                    .collect()
+            };
+            layers.push(StgcnLayer {
+                c_in: ci,
+                c_out: co,
+                gcn_w: Tensor::new(vec![co, ci], gw),
+                gcn_b: Tensor::new(vec![co], gb),
+                tconv_w: Tensor::new(vec![co, co, k], tw),
+                tconv_b: Tensor::new(vec![co], tb),
+                act1: mk_acts(&mut rng),
+                act2: mk_acts(&mut rng),
+            });
+            ci = co;
+        }
+        let fw: Vec<f64> = (0..classes * ci)
+            .map(|_| rng.gen_range_f64(-0.5, 0.5) / (ci as f64).sqrt())
+            .collect();
+        let fb: Vec<f64> = (0..classes).map(|_| rng.gen_range_f64(-0.05, 0.05)).collect();
+        StgcnModel {
+            graph,
+            t,
+            c_in,
+            k,
+            layers,
+            fc_w: Tensor::new(vec![classes, ci], fw),
+            fc_b: Tensor::new(vec![classes], fb),
+        }
+    }
+
+    /// Load a model exported by `python/compile/aot.py` (tensor text format).
+    /// See `python/compile/export.py` for the writer.
+    pub fn load(path: &std::path::Path, graph: Graph) -> Result<Self> {
+        let tf = TensorFile::load(path)?;
+        Self::from_tensorfile(&tf, graph)
+    }
+
+    pub fn from_tensorfile(tf: &TensorFile, graph: Graph) -> Result<Self> {
+        let n_layers = tf.meta_usize("layers")?;
+        let t = tf.meta_usize("t")?;
+        let c_in = tf.meta_usize("c_in")?;
+        let k = tf.meta_usize("k")?;
+        let c_act = tf.meta_f64("act_c").unwrap_or(0.01);
+        let v = graph.v;
+        let mut layers = Vec::new();
+        for li in 0..n_layers {
+            let gcn_w = tf.get(&format!("layer{li}.gcn_w"))?.clone();
+            let gcn_b = tf.get(&format!("layer{li}.gcn_b"))?.clone();
+            let tconv_w = tf.get(&format!("layer{li}.tconv_w"))?.clone();
+            let tconv_b = tf.get(&format!("layer{li}.tconv_b"))?.clone();
+            ensure!(gcn_w.ndim() == 2 && tconv_w.ndim() == 3, "bad weight ranks");
+            let (co, ci) = (gcn_w.shape[0], gcn_w.shape[1]);
+            let mut acts = [Vec::new(), Vec::new()];
+            for (pos, acc) in acts.iter_mut().enumerate() {
+                let h = tf.get(&format!("layer{li}.h{}", pos + 1))?;
+                let w2 = tf.get(&format!("layer{li}.act{}_w2", pos + 1))?;
+                let w1 = tf.get(&format!("layer{li}.act{}_w1", pos + 1))?;
+                let b = tf.get(&format!("layer{li}.act{}_b", pos + 1))?;
+                ensure!(h.data.len() == v, "indicator length != V");
+                for vi in 0..v {
+                    acc.push(if h.data[vi] > 0.5 {
+                        Activation::Poly {
+                            w2: w2.data[vi],
+                            w1: w1.data[vi],
+                            b: b.data[vi],
+                            c: c_act,
+                        }
+                    } else {
+                        Activation::Identity
+                    });
+                }
+            }
+            let [act1, act2] = acts;
+            layers.push(StgcnLayer {
+                c_in: ci,
+                c_out: co,
+                gcn_w,
+                gcn_b,
+                tconv_w,
+                tconv_b,
+                act1,
+                act2,
+            });
+        }
+        let fc_w = tf.get("fc_w")?.clone();
+        let fc_b = tf.get("fc_b")?.clone();
+        let model = StgcnModel {
+            graph,
+            t,
+            c_in,
+            k,
+            layers,
+            fc_w,
+            fc_b,
+        };
+        model
+            .effective_nonlinear_layers()
+            .context("loaded model violates structural constraint")?;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 1)
+    }
+
+    #[test]
+    fn test_forward_shapes_and_determinism() {
+        let m = tiny_model();
+        let n_in = m.v() * m.c_in * m.t;
+        let x: Vec<f64> = (0..n_in).map(|i| ((i % 13) as f64 - 6.0) / 6.0).collect();
+        let y1 = m.forward(&x).unwrap();
+        let y2 = m.forward(&x).unwrap();
+        assert_eq!(y1.len(), 3);
+        assert_eq!(y1, y2);
+        assert!(y1.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_effective_nonlinear_count() {
+        let mut m = tiny_model();
+        assert_eq!(m.effective_nonlinear_layers().unwrap(), 4); // 2 layers × 2
+        // linearize act1 of layer 0 for all nodes → 3
+        for a in m.layers[0].act1.iter_mut() {
+            *a = Activation::Identity;
+        }
+        assert_eq!(m.effective_nonlinear_layers().unwrap(), 3);
+    }
+
+    #[test]
+    fn test_structural_constraint_violation_detected() {
+        let mut m = tiny_model();
+        m.layers[0].act1[0] = Activation::Identity; // only node 0 → desync
+        assert!(m.effective_nonlinear_layers().is_err());
+    }
+
+    #[test]
+    fn test_mixed_positions_satisfy_constraint() {
+        // node A act at pos1, node B at pos2 — synchronized count of 1
+        let mut m = tiny_model();
+        let v = m.v();
+        for vi in 0..v {
+            if vi % 2 == 0 {
+                m.layers[0].act1[vi] = Activation::Identity;
+            } else {
+                m.layers[0].act2[vi] = Activation::Identity;
+            }
+        }
+        assert_eq!(m.layers[0].acts_per_node().unwrap(), 1);
+    }
+
+    #[test]
+    fn test_identity_activation_is_linear_map() {
+        // with all-identity activations the whole net is linear:
+        // f(ax) = a f(x) when biases are zeroed
+        let mut m = tiny_model();
+        for l in m.layers.iter_mut() {
+            for a in l.act1.iter_mut() {
+                *a = Activation::Identity;
+            }
+            for a in l.act2.iter_mut() {
+                *a = Activation::Identity;
+            }
+            for b in l.gcn_b.data.iter_mut() {
+                *b = 0.0;
+            }
+            for b in l.tconv_b.data.iter_mut() {
+                *b = 0.0;
+            }
+        }
+        for b in m.fc_b.data.iter_mut() {
+            *b = 0.0;
+        }
+        let n_in = m.v() * m.c_in * m.t;
+        let x: Vec<f64> = (0..n_in).map(|i| (i as f64).sin()).collect();
+        let x2: Vec<f64> = x.iter().map(|v| v * 2.0).collect();
+        let y = m.forward(&x).unwrap();
+        let y2 = m.forward(&x2).unwrap();
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((b - 2.0 * a).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn test_relu_teacher_forward() {
+        let mut m = tiny_model();
+        for l in m.layers.iter_mut() {
+            for a in l.act1.iter_mut().chain(l.act2.iter_mut()) {
+                *a = Activation::Relu;
+            }
+        }
+        let n_in = m.v() * m.c_in * m.t;
+        let x: Vec<f64> = (0..n_in).map(|i| (i * 7 % 11) as f64 - 5.0).collect();
+        let y = m.forward(&x).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_activation_semantics() {
+        assert_eq!(Activation::Relu.apply(-2.0), 0.0);
+        assert_eq!(Activation::Relu.apply(3.0), 3.0);
+        let p = Activation::Poly {
+            w2: 2.0,
+            w1: 0.5,
+            b: 0.1,
+            c: 0.01,
+        };
+        let x = 1.5;
+        assert!((p.apply(x) - (0.01 * 2.0 * x * x + 0.5 * x + 0.1)).abs() < 1e-12);
+        assert_eq!(Activation::Identity.apply(-7.0), -7.0);
+        assert!(!Activation::Identity.consumes_level());
+        assert!(p.consumes_level());
+    }
+}

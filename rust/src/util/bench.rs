@@ -1,0 +1,76 @@
+//! Minimal micro-bench harness (criterion is unavailable offline).
+//!
+//! `time_op` runs warmups, then samples until a time budget or sample count
+//! is reached and reports median/mean/min. Used by every `cargo bench`
+//! target to measure real CKKS op latencies feeding the cost model.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:?}  mean {:?}  min {:?}  max {:?}  (n={})",
+            self.median, self.mean, self.min, self.max, self.samples
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then sample until either
+/// `max_samples` or `budget` is exhausted (at least 3 samples).
+pub fn time_op<F: FnMut()>(warmup: usize, max_samples: usize, budget: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while times.len() < 3 || (times.len() < max_samples && start.elapsed() < budget) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let n = times.len();
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        samples: n,
+        median: times[n / 2],
+        mean,
+        min: times[0],
+        max: times[n - 1],
+    }
+}
+
+/// Convenience wrapper with defaults suitable for ms-scale HE ops.
+pub fn quick<F: FnMut()>(f: F) -> BenchStats {
+    time_op(1, 20, Duration::from_secs(2), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_time_op_counts_runs() {
+        let mut n = 0usize;
+        let stats = time_op(2, 5, Duration::from_secs(10), || n += 1);
+        assert_eq!(n, 2 + stats.samples);
+        assert!(stats.samples >= 3 && stats.samples <= 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+    }
+}

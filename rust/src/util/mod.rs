@@ -1,0 +1,71 @@
+//! In-tree utility substrate (this environment is offline; see Cargo.toml):
+//! PRNG, micro-bench harness, tensor text I/O, and a tiny JSON writer.
+
+pub mod bench;
+pub mod rng;
+pub mod tensorio;
+
+pub use rng::Rng;
+
+/// Format a float with fixed decimals for table output.
+pub fn fmt_f(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Render an ASCII table (used by the bench harnesses to print the paper's
+/// table rows).
+pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep = |c: char| {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&c.to_string().repeat(w + 2));
+            s.push('+');
+        }
+        s
+    };
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, w) in widths.iter().enumerate() {
+            let cell = cells.get(i).map(String::as_str).unwrap_or("");
+            s.push_str(&format!(" {cell:>w$} |", w = w));
+        }
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep('-'));
+    out.push('\n');
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&sep('='));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out.push_str(&sep('-'));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_ascii_table_shape() {
+        let t = super::ascii_table(
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 6);
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w), "ragged table:\n{t}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Text-based tensor interchange between the python build path and the rust
+//! runtime (the offline environment has no serde/npz; the format below is
+//! trivial to emit from numpy and to parse here).
+//!
+//! ```text
+//! #lingcn-tensors v1
+//! meta <key> <value...>
+//! tensor <name> <ndim> <d0> <d1> ...
+//! <v0> <v1> ... <v_{prod-1}>          # one line, space separated
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// A named dense f64 tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major flat index for a multi-index.
+    pub fn idx(&self, index: &[usize]) -> usize {
+        debug_assert_eq!(index.len(), self.shape.len());
+        let mut flat = 0;
+        for (i, (&ix, &dim)) in index.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bound {dim} at dim {i}");
+            flat = flat * dim + ix;
+        }
+        flat
+    }
+
+    pub fn get(&self, index: &[usize]) -> f64 {
+        self.data[self.idx(index)]
+    }
+
+    pub fn set(&mut self, index: &[usize], v: f64) {
+        let i = self.idx(index);
+        self.data[i] = v;
+    }
+}
+
+/// A bundle of named tensors plus string metadata.
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl TensorFile {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("meta '{key}' missing"))?
+            .parse::<f64>()
+            .with_context(|| format!("meta '{key}' not a number"))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.meta_f64(key)? as usize)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty tensor file")?;
+        if !header.starts_with("#lingcn-tensors") {
+            bail!("bad header: {header}");
+        }
+        let mut out = TensorFile::default();
+        while let Some(line) = lines.next() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("meta") => {
+                    let key = parts.next().context("meta without key")?.to_string();
+                    let val = parts.collect::<Vec<_>>().join(" ");
+                    out.meta.insert(key, val);
+                }
+                Some("tensor") => {
+                    let name = parts.next().context("tensor without name")?.to_string();
+                    let ndim: usize = parts.next().context("tensor without ndim")?.parse()?;
+                    let shape: Vec<usize> = (0..ndim)
+                        .map(|_| -> Result<usize> {
+                            Ok(parts.next().context("missing dim")?.parse()?)
+                        })
+                        .collect::<Result<_>>()?;
+                    let count: usize = shape.iter().product();
+                    let data_line = lines.next().context("tensor missing data line")?;
+                    let data: Vec<f64> = data_line
+                        .split_whitespace()
+                        .map(|t| t.parse::<f64>().map_err(Into::into))
+                        .collect::<Result<_>>()?;
+                    if data.len() != count {
+                        bail!(
+                            "tensor {name}: expected {count} values, got {}",
+                            data.len()
+                        );
+                    }
+                    out.tensors.insert(name, Tensor { shape, data });
+                }
+                Some(other) => bail!("unknown record '{other}'"),
+                None => {}
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "#lingcn-tensors v1")?;
+        for (k, v) in &self.meta {
+            writeln!(f, "meta {k} {v}")?;
+        }
+        for (name, t) in &self.tensors {
+            write!(f, "tensor {name} {}", t.shape.len())?;
+            for d in &t.shape {
+                write!(f, " {d}")?;
+            }
+            writeln!(f)?;
+            let mut first = true;
+            for v in &t.data {
+                if !first {
+                    write!(f, " ")?;
+                }
+                write!(f, "{v:.17e}")?;
+                first = false;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Minimal JSON value writer (output only — bench harnesses emit JSON for
+/// EXPERIMENTS.md tooling; nothing in rust needs to *parse* JSON).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.meta.insert("model".into(), "stgcn-3-8 toy".into());
+        tf.meta.insert("acc".into(), "0.8125".into());
+        tf.tensors.insert(
+            "w1".into(),
+            Tensor::new(vec![2, 3], vec![1.0, -2.5, 3.25, 0.0, 1e-9, -7.75]),
+        );
+        let dir = std::env::temp_dir().join("lingcn_test_tensorio");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.lgt");
+        tf.save(&p).unwrap();
+        let back = TensorFile::load(&p).unwrap();
+        assert_eq!(back.tensors["w1"], tf.tensors["w1"]);
+        assert_eq!(back.meta["model"], "stgcn-3-8 toy");
+        assert!((back.meta_f64("acc").unwrap() - 0.8125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn test_indexing() {
+        let mut t = Tensor::zeros(vec![2, 3, 4]);
+        t.set(&[1, 2, 3], 9.0);
+        assert_eq!(t.get(&[1, 2, 3]), 9.0);
+        assert_eq!(t.idx(&[1, 2, 3]), 23);
+        assert_eq!(t.idx(&[0, 0, 1]), 1);
+    }
+
+    #[test]
+    fn test_parse_errors() {
+        assert!(TensorFile::parse("nope").is_err());
+        assert!(TensorFile::parse("#lingcn-tensors v1\ntensor a 1 3\n1 2").is_err());
+        assert!(TensorFile::parse("#lingcn-tensors v1\nbogus x").is_err());
+    }
+
+    #[test]
+    fn test_json_escape() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,107 @@
+//! Cross-language integration: the python-trained, AOT-exported artifacts
+//! must load into the rust runtime and reproduce the python-side numbers.
+//!
+//! Skipped gracefully (not failed) when `make artifacts` hasn't run — CI
+//! runs `make test` which builds artifacts first.
+
+use lingcn::graph::Graph;
+use lingcn::runtime::PjrtModel;
+use lingcn::stgcn::StgcnModel;
+use lingcn::util::tensorio::TensorFile;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn need_artifacts() -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join("metrics.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn test_exported_weights_load_and_respect_structure() {
+    let Some(dir) = need_artifacts() else { return };
+    for nl in [1usize, 2, 3, 4] {
+        let path = dir.join(format!("model_nl{nl}.lgt"));
+        let model = StgcnModel::load(&path, Graph::ntu_rgbd()).unwrap();
+        assert_eq!(
+            model.effective_nonlinear_layers().unwrap(),
+            nl,
+            "plan in {path:?} must match its filename"
+        );
+        assert_eq!(model.v(), 25);
+    }
+}
+
+#[test]
+fn test_rust_plaintext_forward_matches_python_logits() {
+    // the exported example clip's logits (computed in JAX) must match the
+    // rust plaintext engine on the loaded weights
+    let Some(dir) = need_artifacts() else { return };
+    let ex = TensorFile::load(&dir.join("example_input.lgt")).unwrap();
+    let nl = ex.meta_usize("nl").unwrap();
+    let model =
+        StgcnModel::load(&dir.join(format!("model_nl{nl}.lgt")), Graph::ntu_rgbd()).unwrap();
+    let x = &ex.get("x").unwrap().data;
+    let want = &ex.get("logits").unwrap().data;
+    let got = model.forward(x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "logit {i}: rust {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn test_pjrt_runtime_matches_python_logits() {
+    // the AOT HLO artifact (Pallas kernels inlined) must reproduce the
+    // same logits through the PJRT CPU client
+    let Some(dir) = need_artifacts() else { return };
+    let ex = TensorFile::load(&dir.join("example_input.lgt")).unwrap();
+    let t = ex.meta_usize("t").unwrap();
+    let c_in = ex.meta_usize("c_in").unwrap();
+    let x = &ex.get("x").unwrap().data;
+    let want = &ex.get("logits").unwrap().data;
+    let model = PjrtModel::load(&dir.join("model.hlo.txt"), 25, c_in, t).unwrap();
+    let got = model.infer(x).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "logit {i}: pjrt {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn test_encrypted_inference_on_trained_artifact() {
+    // end-to-end: trained weights → encrypted forward ≈ plaintext forward
+    let Some(dir) = need_artifacts() else { return };
+    let model = StgcnModel::load(&dir.join("model_nl2.lgt"), Graph::ntu_rgbd()).unwrap();
+    let ex = TensorFile::load(&dir.join("example_input.lgt")).unwrap();
+    let x = &ex.get("x").unwrap().data;
+
+    let params = lingcn::ckks::CkksParams {
+        n: 1 << 11,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels: 2 * model.layers.len() + 2 + 2,
+        special_bits: 55,
+        allow_insecure: true,
+    };
+    let sess = lingcn::he_infer::PrivateInferenceSession::new(&model, params, 7).unwrap();
+    let want = model.forward(x).unwrap();
+    let input = sess.encrypt_input(&model, x).unwrap();
+    let out = sess.infer(&model, &input).unwrap();
+    let got = sess.decrypt_logits(&model, &out);
+    let argmax = |v: &[f64]| {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmax(&got), argmax(&want), "{got:?} vs {want:?}");
+}

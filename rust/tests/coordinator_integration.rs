@@ -1,0 +1,80 @@
+//! Coordinator integration over real artifacts: routing on the trained
+//! Pareto frontier, plaintext executor correctness, batching under load.
+
+use lingcn::coordinator::{Coordinator, Request};
+use lingcn::costmodel::OpCostModel;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("metrics.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn test_router_built_from_artifacts_is_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let cost = OpCostModel::reference();
+    let (router, exec) = lingcn::coordinator::from_artifacts(&dir, &cost).unwrap();
+    assert!(router.variants().len() >= 3);
+    // latencies sorted ascending and increase with nl
+    let v = router.variants();
+    for w in v.windows(2) {
+        assert!(w[0].latency_s <= w[1].latency_s);
+        assert!(w[0].nl <= w[1].nl, "latency order must follow nl order");
+    }
+    // every variant must be servable by the executor
+    let ex = lingcn::util::tensorio::TensorFile::load(&dir.join("example_input.lgt")).unwrap();
+    let clip = &ex.get("x").unwrap().data;
+    for var in v {
+        let logits = lingcn::coordinator::InferenceExecutor::infer(&exec, &var.name, clip).unwrap();
+        assert_eq!(logits.len(), 8);
+    }
+}
+
+#[test]
+fn test_serving_under_load_all_complete_and_route_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let cost = OpCostModel::reference();
+    let (router, exec) = lingcn::coordinator::from_artifacts(&dir, &cost).unwrap();
+    let fastest = router.variants()[0].clone();
+    let best = router.select(None).clone();
+    let coord = Coordinator::start(router, Arc::new(exec), 2, 4, Duration::from_millis(1));
+    let ex = lingcn::util::tensorio::TensorFile::load(&dir.join("example_input.lgt")).unwrap();
+    let clip = ex.get("x").unwrap().data.clone();
+
+    let mut rxs = Vec::new();
+    let n = 40;
+    for i in 0..n {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let budget = if i % 2 == 0 { Some(fastest.latency_s) } else { None };
+        coord
+            .submit(Request {
+                clip: clip.clone(),
+                latency_budget_s: budget,
+                resp: tx,
+            })
+            .unwrap();
+        rxs.push((i, rx));
+    }
+    for (i, rx) in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.error.is_none(), "request {i} failed: {:?}", r.error);
+        if i % 2 == 0 {
+            assert_eq!(r.variant, fastest.name, "tight budget must pick fastest");
+        } else {
+            assert_eq!(r.variant, best.name, "no budget must pick best accuracy");
+        }
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), n);
+    assert_eq!(coord.metrics.failed.load(Ordering::Relaxed), 0);
+    coord.shutdown();
+}

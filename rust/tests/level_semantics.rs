@@ -1,0 +1,90 @@
+//! Level-semantics integration tests (paper Observations 1 & 2, Fig. 3/4,
+//! Table 6): the planner, the engine's actual consumption, and the
+//! structural-constraint enforcement must all agree.
+
+use lingcn::ama::AmaLayout;
+use lingcn::graph::Graph;
+use lingcn::he_infer::level_plan::{Method, VariantShape};
+use lingcn::he_infer::{CountingBackend, HeBackend, HeStgcn};
+use lingcn::linearize::LinearizationPlan;
+use lingcn::stgcn::StgcnModel;
+
+/// The engine's real consumption equals the planner's formula for every
+/// 3-layer (nl, fused) combination.
+#[test]
+fn test_engine_consumption_matches_planner() {
+    for nl in 0..=6usize {
+        let mut model = StgcnModel::synthetic(Graph::ntu_rgbd(), 8, 4, 3, &[8, 8, 8], 8, 1);
+        LinearizationPlan::structural_mixed(3, 25, nl)
+            .apply(&mut model)
+            .unwrap();
+        let layout = AmaLayout::new(8, 8, 64).unwrap();
+        let he = HeStgcn::new(&model, layout).unwrap();
+        let planner = VariantShape {
+            layers: 3,
+            nonlinear_layers: nl,
+            method: Method::LinGcn,
+        };
+        assert_eq!(he.levels_needed().unwrap(), planner.levels(), "nl={nl}");
+        // and the engine really consumes exactly that
+        let be = CountingBackend::new(planner.levels(), 33);
+        let input: Vec<_> = (0..25).map(|_| be.fresh()).collect();
+        let out = he.forward(&be, &input).unwrap();
+        assert_eq!(be.level(&out), 0, "nl={nl}");
+    }
+}
+
+/// Fig. 4: fusion saves exactly one level per activation.
+#[test]
+fn test_fusion_saves_one_level_per_activation() {
+    for nl in 1..=6usize {
+        let fused = VariantShape { layers: 3, nonlinear_layers: nl, method: Method::LinGcn };
+        let unfused = VariantShape { layers: 3, nonlinear_layers: nl, method: Method::CryptoGcn };
+        assert_eq!(unfused.levels() - fused.levels(), nl);
+    }
+}
+
+/// Observation 1: fewer levels → smaller N at the table boundaries →
+/// strictly cheaper ops (checked through the cost model features).
+#[test]
+fn test_level_reduction_shrinks_parameters() {
+    let mut prev_q = u32::MAX;
+    for nl in (1..=6usize).rev() {
+        let p = VariantShape { layers: 3, nonlinear_layers: nl, method: Method::LinGcn }
+            .plan()
+            .unwrap();
+        assert!(p.log_q < prev_q, "Q must shrink with nl");
+        prev_q = p.log_q;
+    }
+}
+
+/// Fig. 3: an unstructured plan cannot be executed by the engine (the
+/// model validator rejects it), while any structural plan runs.
+#[test]
+fn test_unstructured_plan_rejected_by_engine() {
+    let mut rng = lingcn::util::Rng::seed_from_u64(3);
+    let mut model = StgcnModel::synthetic(Graph::ntu_rgbd(), 8, 4, 3, &[8, 8], 8, 2);
+    // force a genuinely unsynchronized plan
+    let plan = loop {
+        let p = LinearizationPlan::unstructured_random(2, 25, 0.5, &mut rng);
+        if !p.is_structural() {
+            break p;
+        }
+    };
+    plan.apply(&mut model).unwrap();
+    let layout = AmaLayout::new(8, 8, 64).unwrap();
+    assert!(
+        HeStgcn::new(&model, layout).is_err(),
+        "engine must reject unsynchronized plans (Eq. 2 constraint)"
+    );
+}
+
+/// Six-layer planner rows include the strided-residual extra level
+/// (Table 6's 27 = 12 + 2 + 12 + 1).
+#[test]
+fn test_six_layer_budget() {
+    let p = VariantShape { layers: 6, nonlinear_layers: 12, method: Method::LinGcn };
+    assert_eq!(p.levels(), 27);
+    let p1 = VariantShape { layers: 6, nonlinear_layers: 1, method: Method::LinGcn };
+    assert_eq!(p1.levels(), 16);
+}

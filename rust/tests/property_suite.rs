@@ -1,0 +1,198 @@
+//! Property-style randomized test suite (the offline environment has no
+//! proptest crate; these are seeded-sweep equivalents over the same
+//! invariants — each case runs dozens of random instances).
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::{CkksEngine, CkksParams};
+use lingcn::coordinator::{Batcher, Pending, Router};
+use lingcn::graph::Graph;
+use lingcn::linearize::LinearizationPlan;
+use lingcn::util::Rng;
+use std::time::{Duration, Instant};
+
+/// CKKS: (a+b)·c ≈ a·c + b·c homomorphically, over random vectors/scales.
+#[test]
+fn prop_ckks_distributivity() {
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 9;
+    let engine = CkksEngine::new(p, &[], 11).unwrap();
+    let half = engine.ctx.slots();
+    let mut rng = Rng::seed_from_u64(1);
+    for case in 0..8 {
+        let a: Vec<f64> = (0..half).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let b: Vec<f64> = (0..half).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let c: Vec<f64> = (0..half).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let (ca, cb, cc) = (engine.encrypt(&a), engine.encrypt(&b), engine.encrypt(&c));
+        let lhs = engine.eval.rescale(&engine.eval.mul(&engine.eval.add(&ca, &cb), &cc));
+        let rhs = engine.eval.add(
+            &engine.eval.rescale(&engine.eval.mul(&ca, &cc)),
+            &engine.eval.rescale(&engine.eval.mul(&cb, &cc)),
+        );
+        let l = engine.decrypt(&lhs);
+        let r = engine.decrypt(&rhs);
+        for i in (0..half).step_by(37) {
+            assert!((l[i] - r[i]).abs() < 1e-2, "case {case} slot {i}: {} vs {}", l[i], r[i]);
+        }
+    }
+}
+
+/// CKKS: composition of rotations equals the summed rotation.
+#[test]
+fn prop_rotation_composition() {
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 9;
+    let engine = CkksEngine::new(p, &[3, 5, 8], 13).unwrap();
+    let half = engine.ctx.slots();
+    let v: Vec<f64> = (0..half).map(|i| (i % 23) as f64 / 23.0).collect();
+    let ct = engine.encrypt(&v);
+    let r35 = engine
+        .eval
+        .rotate(&engine.encoder, &engine.eval.rotate(&engine.encoder, &ct, 3), 5);
+    let r8 = engine.eval.rotate(&engine.encoder, &ct, 8);
+    let (a, b) = (engine.decrypt(&r35), engine.decrypt(&r8));
+    for i in (0..half).step_by(13) {
+        assert!((a[i] - b[i]).abs() < 1e-2);
+    }
+}
+
+/// AMA: pack/unpack roundtrip over random geometries.
+#[test]
+fn prop_ama_roundtrip() {
+    let mut rng = Rng::seed_from_u64(3);
+    for _ in 0..40 {
+        let t = 1usize << rng.gen_range_u64(1, 5);
+        let c_max = 1usize << rng.gen_range_u64(0, 4);
+        let copies = 1usize << rng.gen_range_u64(0, 4);
+        let slots = t * c_max * copies;
+        let layout = AmaLayout::new(t, c_max, slots).unwrap();
+        let c = rng.gen_range_u64(1, c_max as u64 + 1) as usize;
+        let feat: Vec<f64> = (0..c * t).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
+        let packed = layout.pack(&feat, c);
+        assert_eq!(layout.unpack(&packed, c), feat);
+        // periodicity invariant
+        let b = layout.block();
+        for (i, &x) in packed.iter().enumerate() {
+            assert_eq!(x, packed[i % b], "packing must be block-periodic");
+        }
+    }
+}
+
+/// Linearization: structural plans always keep per-layer counts
+/// synchronized after apply+extract, and effective count == requested.
+#[test]
+fn prop_structural_plans_synchronized() {
+    let mut rng = Rng::seed_from_u64(4);
+    for _ in 0..30 {
+        let layers = rng.gen_range_u64(1, 5) as usize;
+        let v = rng.gen_range_u64(2, 30) as usize;
+        let kept = rng.gen_range_u64(0, 2 * layers as u64 + 1) as usize;
+        let plan = LinearizationPlan::structural_mixed(layers, v, kept);
+        assert!(plan.is_structural());
+        assert_eq!(plan.effective_nonlinear_layers().unwrap(), kept);
+        let mut model =
+            lingcn::stgcn::StgcnModel::synthetic(Graph::ring(v), 8, 2, 3, &vec![4; layers], 3, 7);
+        plan.apply(&mut model).unwrap();
+        assert_eq!(model.effective_nonlinear_layers().unwrap(), kept);
+    }
+}
+
+/// Router: selection is optimal — no other feasible variant has higher
+/// accuracy; and selection is monotone in the budget.
+#[test]
+fn prop_router_optimality_and_monotonicity() {
+    let mut rng = Rng::seed_from_u64(5);
+    for case in 0..30 {
+        let n = rng.gen_range_u64(1, 8) as usize;
+        let variants: Vec<_> = (0..n)
+            .map(|i| lingcn::coordinator::ModelVariant {
+                name: format!("v{i}"),
+                nl: i,
+                latency_s: rng.gen_range_f64(0.1, 10.0),
+                accuracy: rng.gen_range_f64(0.5, 1.0),
+            })
+            .collect();
+        let router = Router::new(variants.clone());
+        let mut last_acc = -1.0;
+        for step in 0..20 {
+            let budget = 0.1 + step as f64 * 0.5;
+            let sel = router.select(Some(budget));
+            // optimality among feasible
+            for v in &variants {
+                if v.latency_s <= budget {
+                    assert!(
+                        sel.accuracy >= v.accuracy,
+                        "case {case}: {} beats selection",
+                        v.name
+                    );
+                }
+            }
+            // monotone accuracy in budget (once feasible)
+            if sel.latency_s <= budget {
+                assert!(sel.accuracy >= last_acc - 1e-12);
+                last_acc = sel.accuracy;
+            }
+        }
+    }
+}
+
+/// Batcher: conservation — everything pushed is eventually popped exactly
+/// once, FIFO per variant, never exceeding max_batch.
+#[test]
+fn prop_batcher_conservation() {
+    let mut rng = Rng::seed_from_u64(6);
+    for _ in 0..30 {
+        let max_batch = rng.gen_range_u64(1, 6) as usize;
+        let mut b: Batcher<u64> = Batcher::new(max_batch, Duration::from_millis(0));
+        let now = Instant::now();
+        let n = rng.gen_range_u64(1, 60);
+        let mut pushed_per: std::collections::HashMap<String, Vec<u64>> = Default::default();
+        for id in 0..n {
+            let variant = format!("v{}", rng.gen_range_u64(0, 3));
+            b.push(
+                &variant,
+                Pending {
+                    id,
+                    enqueued: now,
+                    payload: id,
+                },
+            );
+            pushed_per.entry(variant).or_default().push(id);
+        }
+        let mut popped_per: std::collections::HashMap<String, Vec<u64>> = Default::default();
+        while let Some((variant, batch)) = b.pop_ready(now + Duration::from_millis(1)) {
+            assert!(batch.len() <= max_batch);
+            popped_per
+                .entry(variant)
+                .or_default()
+                .extend(batch.iter().map(|p| p.id));
+        }
+        assert_eq!(b.queued(), 0);
+        assert_eq!(pushed_per, popped_per, "conservation + FIFO per variant");
+    }
+}
+
+/// Cost model: estimates are linear in counts/split and monotone in N.
+#[test]
+fn prop_cost_model_linearity() {
+    let m = lingcn::costmodel::OpCostModel::reference();
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..20 {
+        let c1 = lingcn::ckks::OpCounts {
+            rot: rng.gen_range_u64(0, 100),
+            rot_limbs: rng.gen_range_u64(0, 1000),
+            rot_limbs_sq: rng.gen_range_u64(0, 10000),
+            pmult_limbs: rng.gen_range_u64(0, 1000),
+            add_limbs: rng.gen_range_u64(0, 1000),
+            cmult_limbs_sq: rng.gen_range_u64(0, 10000),
+            rescale_limbs: rng.gen_range_u64(0, 1000),
+            ..Default::default()
+        };
+        let e1 = m.estimate(1 << 13, &c1, 1).total();
+        let e2 = m.estimate(1 << 13, &c1, 3).total();
+        assert!((e2 - 3.0 * e1).abs() < 1e-9, "split linearity");
+        let big = m.estimate(1 << 14, &c1, 1).total();
+        if e1 > 0.0 {
+            assert!(big > e1, "monotone in N");
+        }
+    }
+}
