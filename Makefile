@@ -1,0 +1,27 @@
+# Build entrypoints the docs and tests reference.
+#
+#   make artifacts   train the LinGCN students on the synthetic surrogate
+#                    and export weights/HLO/metrics (python/compile/aot.py).
+#                    Written to rust/artifacts/ (where the rust integration
+#                    tests look), with a repo-root `artifacts` symlink so the
+#                    CLI's cwd-relative path works from here too.
+#   make test        tier-1 gate via ci.sh
+#   make bench       paper-table bench binaries
+
+.PHONY: artifacts artifacts-quick test bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
+	ln -sfn rust/artifacts artifacts
+
+artifacts-quick:
+	cd python && python -m compile.aot --quick --out ../rust/artifacts/model.hlo.txt
+	ln -sfn rust/artifacts artifacts
+
+test:
+	./ci.sh
+
+bench:
+	cargo bench --bench he_ops
+	cargo bench --bench table2_stgcn3_128
+	cargo bench --bench ablation_fusion

@@ -1,4 +1,5 @@
-//! Adjacency-Matrix-Aware (AMA) ciphertext packing (paper Appendix A.1).
+//! Adjacency-Matrix-Aware (AMA) ciphertext packing (paper Appendix A.1;
+//! DESIGN.md S8).
 //!
 //! Each graph node gets its own ciphertext whose slots hold the node's
 //! `C × T` feature map, channel-major (`slot = c·T + t`), padded to a fixed

@@ -1,4 +1,4 @@
-//! CKKS canonical-embedding encoder.
+//! CKKS canonical-embedding encoder (DESIGN.md S6).
 //!
 //! Packs `N/2` complex (here: real) slots into one plaintext polynomial via
 //! the special FFT over the 5-power rotation group (the HEAAN/SEAL layout):
@@ -50,7 +50,7 @@ pub struct Encoder {
     n: usize,
     /// 2N-th roots of unity e^{2πi j / 2N}, j in 0..2N.
     ksi: Vec<C64>,
-    /// rot_group[i] = 5^i mod 2N, i in 0..N/2.
+    /// `rot_group[i] = 5^i mod 2N`, i in 0..N/2.
     rot_group: Vec<usize>,
 }
 

@@ -1,8 +1,8 @@
-//! The homomorphic evaluator: Add, CMult(+relin), PMult, Rot, Rescale,
-//! conjugation and level management — the exact operation algebra of the
-//! paper's Section 2, with per-op counters feeding the cost model
-//! (DESIGN.md S12) so every paper table can be regenerated from real
-//! operation counts.
+//! The homomorphic evaluator (DESIGN.md S7): Add, CMult(+relin), PMult,
+//! Rot, Rescale, conjugation and level management — the exact operation
+//! algebra of the paper's Section 2, with per-op counters feeding the
+//! cost model (DESIGN.md S12) so every paper table can be regenerated
+//! from real operation counts.
 
 use super::encoding::{Encoder, Plaintext};
 use super::encrypt::Ciphertext;

@@ -1,5 +1,6 @@
 //! Key material: secret key, public key, and key-switching keys
-//! (relinearization + Galois) in the hybrid (special-prime) variant.
+//! (relinearization + Galois) in the hybrid (special-prime) variant
+//! (DESIGN.md S5).
 //!
 //! A key-switching key from key `t` to secret `s` consists of one
 //! RLWE pair per RNS digit: `ksk_i = (b_i, a_i)` over the extended basis

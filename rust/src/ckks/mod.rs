@@ -1,6 +1,6 @@
 //! A from-scratch RNS-CKKS leveled homomorphic encryption scheme — the
 //! substrate the paper evaluates on (Microsoft SEAL in the original; see
-//! DESIGN.md substitution #1).
+//! DESIGN.md substitution #1, and S3–S7 for the per-module design).
 //!
 //! Provides the full operation algebra of Section 2 of the paper:
 //! `Add`, `CMult` (+relinearization), `PMult`, `Rot`, `Rescale`, with
@@ -44,8 +44,9 @@ pub struct CkksEngine {
     pub pk: PublicKey,
     pub eval: Evaluator,
     rng: Mutex<crate::util::Rng>,
-    /// Content-addressed plaintext cache shared across requests (§Perf:
-    /// mask re-encoding dominates serving-path PMult otherwise).
+    /// Content-addressed plaintext cache shared across requests
+    /// (DESIGN.md §Perf-2: mask re-encoding dominates serving-path PMult
+    /// otherwise).
     pub plaintext_cache: Mutex<std::collections::HashMap<(u64, usize, u64), Plaintext>>,
 }
 

@@ -5,7 +5,7 @@
 //! Gentleman-Sande. Multiplying two transformed polynomials pointwise and
 //! inverting yields the negacyclic product — the core primitive behind every
 //! CKKS ciphertext operation. Butterflies use Shoup multiplication with lazy
-//! reduction (values kept in [0, 2q) inside the loop) — see §Perf in
+//! reduction (values kept in [0, 2q) inside the loop) — see §Perf-1 in
 //! DESIGN.md.
 
 use super::zq::{self, ShoupMul};

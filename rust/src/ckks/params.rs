@@ -66,7 +66,7 @@ pub struct CkksContext {
     pub ntt_special: NttTable,
     /// Default encoding scale Δ = 2^scale_bits.
     pub scale: f64,
-    /// inv_last[m][j] = q_m^{-1} mod q_j, for j < m (rescale).
+    /// `inv_last[m][j] = q_m^{-1} mod q_j`, for j < m (rescale).
     pub inv_last: Vec<Vec<u64>>,
     /// q_m mod q_j, for j < m (rescale centering correction).
     pub mod_last: Vec<Vec<u64>>,
@@ -75,8 +75,8 @@ pub struct CkksContext {
     /// P mod q_j.
     pub p_mod: Vec<u64>,
     /// Barrett reduction contexts, index-aligned with `moduli` plus the
-    /// special prime as the last entry (§Perf: removes 128-bit division
-    /// from every pointwise product and key-switch digit).
+    /// special prime as the last entry (DESIGN.md §Perf-1: removes 128-bit
+    /// division from every pointwise product and key-switch digit).
     pub barrett: Vec<zq::Barrett>,
 }
 

@@ -235,8 +235,8 @@ impl RnsPoly {
 
     /// Galois automorphism applied in NTT (evaluation) form: with the
     /// CT/bit-reversed layout, NTT index j holds a(ψ^{2·brv(j)+1}), so
-    /// τ_g is a pure slot permutation — no NTT round-trip (§Perf iter 3).
-    /// `perm` comes from [`ntt_automorphism_permutation`].
+    /// τ_g is a pure slot permutation — no NTT round-trip (DESIGN.md
+    /// §Perf-3). `perm` comes from [`ntt_automorphism_permutation`].
     pub fn automorphism_ntt(&self, perm: &[usize]) -> RnsPoly {
         assert!(self.is_ntt, "NTT-domain automorphism needs NTT form");
         let mut out = self.clone();
@@ -362,7 +362,7 @@ impl RnsPoly {
 }
 
 /// Permutation implementing the Galois automorphism τ_g in NTT domain:
-/// out[j] = in[perm[j]] where NTT index j evaluates at ψ^{2·brv(j)+1}.
+/// `out[j] = in[perm[j]]` where NTT index j evaluates at ψ^{2·brv(j)+1}.
 pub fn ntt_automorphism_permutation(n: usize, g: usize) -> Vec<usize> {
     let bits = n.trailing_zeros();
     let brv = |x: usize| x.reverse_bits() >> (usize::BITS - bits);

@@ -3,7 +3,8 @@
 //! maximum log2(Q·P) for 128-bit classical security with ternary secrets.
 //!
 //! The paper's Table 6 selects N by exactly this rule — these bounds let
-//! the level planner (`he_infer::level_plan`) reproduce that table.
+//! the level planner (`he_infer::level_plan`) reproduce that table. See
+//! DESIGN.md S3 for the accounting policy (Q vs Q·P).
 
 /// (N, max log2 QP) rows for 128-bit classical security.
 pub const MAX_LOG_QP_128: &[(usize, u32)] = &[

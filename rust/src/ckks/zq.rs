@@ -254,8 +254,8 @@ mod tests {
 
 /// Barrett reduction context for a fixed modulus `q < 2^62`: reduces any
 /// 128-bit value mod q with two 64×64 multiplies instead of a (software)
-/// 128-bit division — the §Perf optimization that removes `__umodti3`
-/// from every pointwise product and key-switch digit.
+/// 128-bit division — the DESIGN.md §Perf-1 optimization that removes
+/// `__umodti3` from every pointwise product and key-switch digit.
 #[derive(Clone, Copy, Debug)]
 pub struct Barrett {
     pub q: u64,

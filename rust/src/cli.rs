@@ -1,0 +1,206 @@
+//! Subcommand dispatch for the `lingcn` binary (hand-rolled arg parsing:
+//! the offline environment has no clap — see the vendored-dependency note
+//! in `rust/Cargo.toml`).
+//!
+//! Subcommands:
+//!
+//! | command | effect |
+//! |---|---|
+//! | `plan` | print the HE parameter plan (paper Table 6) |
+//! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
+//! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
+//! | `infer --nl K [--encrypted]` | run one synthetic clip through a trained artifact |
+//! | `serve [--workers N] [--requests M]` | run the serving coordinator (plaintext tier) |
+//!
+//! `plan`, `calibrate` and `predict` are self-contained; `infer` and
+//! `serve` need the `artifacts/` directory produced by the python build
+//! path (`python/compile/aot.py`). Dispatch lives in the library (not in
+//! `main.rs`) so the integration tests can exercise every path in-process.
+
+use crate::costmodel::predict::{predict, PaperVariant};
+use crate::costmodel::OpCostModel;
+use crate::he_infer::level_plan::paper_table6;
+use crate::he_infer::Method;
+use crate::util::ascii_table;
+use anyhow::Result;
+use std::path::Path;
+
+/// Exit code for an unknown/missing subcommand.
+pub const USAGE_EXIT: i32 = 2;
+
+fn arg_value(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Dispatch one invocation. Returns the process exit code on success
+/// (0 for a completed subcommand, [`USAGE_EXIT`] for an unknown one, with
+/// usage printed to stderr); runtime failures surface as `Err`.
+pub fn run(args: &[String]) -> Result<i32> {
+    match args.first().map(String::as_str) {
+        Some("plan") => cmd_plan().map(|()| 0),
+        Some("calibrate") => cmd_calibrate(args).map(|()| 0),
+        Some("predict") => cmd_predict(args).map(|()| 0),
+        Some("infer") => cmd_infer(args).map(|()| 0),
+        Some("serve") => cmd_serve(args).map(|()| 0),
+        _ => {
+            eprintln!("usage: lingcn <plan|calibrate|predict|infer|serve> [options]");
+            Ok(USAGE_EXIT)
+        }
+    }
+}
+
+fn cmd_plan() -> Result<()> {
+    let rows: Vec<Vec<String>> = paper_table6()
+        .into_iter()
+        .map(|(name, p)| {
+            vec![
+                name,
+                p.n.to_string(),
+                p.log_q.to_string(),
+                p.scale_bits.to_string(),
+                p.q0_bits.to_string(),
+                p.levels.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(&["Model", "N", "Q", "p", "q0", "Mult Level"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    let m = if args.iter().any(|a| a == "--quick") {
+        eprintln!("measuring CKKS op latencies (quick: N = 2^11 only)...");
+        OpCostModel::calibrate_quick()?
+    } else {
+        eprintln!("measuring CKKS op latencies (N = 2^11..2^13)...");
+        OpCostModel::calibrate()?
+    };
+    println!("fitted cost model (seconds per feature unit):");
+    println!("  rot_a     = {:.3e}  (N·log2 N·limbs²)", m.rot_a);
+    println!("  cmult_a   = {:.3e}  (N·log2 N·limbs²)", m.cmult_a);
+    println!("  pmult_a   = {:.3e}  (N·limbs)", m.pmult_a);
+    println!("  add_a     = {:.3e}  (N·limbs)", m.add_a);
+    println!("  rescale_a = {:.3e}  (N·log2 N·limbs)", m.rescale_a);
+    Ok(())
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let cost = if args.iter().any(|a| a == "--calibrate") {
+        OpCostModel::calibrate()?
+    } else {
+        OpCostModel::reference()
+    };
+    let mut rows = Vec::new();
+    for nl in [6usize, 5, 4, 3, 2, 1] {
+        for method in [Method::LinGcn, Method::CryptoGcn] {
+            let label = match method {
+                Method::LinGcn => "LinGCN",
+                Method::CryptoGcn => "CryptoGCN",
+            };
+            let r = predict(&PaperVariant::stgcn_3_128(nl, method), &cost)?;
+            rows.push(vec![
+                label.to_string(),
+                nl.to_string(),
+                r.he.n.to_string(),
+                r.he.levels.to_string(),
+                format!("{:.1}", r.total_s),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        ascii_table(&["Method", "NL", "N", "Levels", "Pred latency (s)"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
+    let encrypted = args.iter().any(|a| a == "--encrypted");
+    let dir = Path::new("artifacts");
+    let model = crate::stgcn::StgcnModel::load(
+        &dir.join(format!("model_nl{nl}.lgt")),
+        crate::graph::Graph::ntu_rgbd(),
+    )?;
+    let ex = crate::util::tensorio::TensorFile::load(&dir.join("example_input.lgt"))?;
+    let x = &ex.get("x")?.data;
+    let t0 = std::time::Instant::now();
+    let logits = if encrypted {
+        let params = crate::ckks::CkksParams {
+            n: 1 << 11,
+            q0_bits: 50,
+            scale_bits: 33,
+            levels: 2 * model.layers.len() + 2 + nl,
+            special_bits: 55,
+            allow_insecure: true,
+        };
+        let sess = crate::he_infer::PrivateInferenceSession::new(&model, params, 7)?;
+        let input = sess.encrypt_input(&model, x)?;
+        let out = sess.infer(&model, &input)?;
+        sess.decrypt_logits(&model, &out)
+    } else {
+        model.forward(x)?
+    };
+    let arg = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!(
+        "mode={} nl={nl} predicted_class={arg} latency={:?}\nlogits={logits:?}",
+        if encrypted { "encrypted" } else { "plaintext" },
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
+    let requests: usize = arg_value(args, "--requests").unwrap_or_else(|| "64".into()).parse()?;
+    let cost = OpCostModel::reference();
+    let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
+    println!("variants:");
+    for v in router.variants() {
+        println!(
+            "  {} nl={} acc={:.3} predicted-HE-latency={:.0}s",
+            v.name, v.nl, v.accuracy, v.latency_s
+        );
+    }
+    let coord = crate::coordinator::Coordinator::start(
+        router,
+        std::sync::Arc::new(exec),
+        workers,
+        8,
+        std::time::Duration::from_millis(2),
+    );
+    let ex = crate::util::tensorio::TensorFile::load(Path::new("artifacts/example_input.lgt"))?;
+    let x = ex.get("x")?.data.clone();
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        coord.submit(crate::coordinator::Request {
+            clip: x.clone(),
+            latency_budget_s: if i % 3 == 0 { Some(1000.0) } else { None },
+            resp: tx,
+        })?;
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    println!("{}", coord.metrics.summary());
+    println!(
+        "{requests} requests in {wall:?} → {:.1} req/s (plaintext tier, {workers} workers)",
+        requests as f64 / wall.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}

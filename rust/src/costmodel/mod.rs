@@ -106,6 +106,15 @@ impl OpCostModel {
         Ok(Self::fit(&points))
     }
 
+    /// Single-point calibration at N=2^11 with a tight time budget —
+    /// seconds instead of tens of seconds, at the cost of extrapolating
+    /// the N-dependence entirely from the fitted cost forms. Used by the
+    /// CLI's `calibrate --quick` and the CLI smoke tests.
+    pub fn calibrate_quick() -> anyhow::Result<Self> {
+        let p = measure_point_budget(1 << 11, 2, Duration::from_millis(60))?;
+        Ok(Self::fit(&[p]))
+    }
+
     /// A reference model fitted on this machine after the §Perf pass
     /// (Barrett + NTT-domain automorphism + plaintext cache); regenerate
     /// with `cargo bench --bench he_ops -- --recalibrate`.
@@ -139,8 +148,18 @@ impl OpCostModel {
     }
 }
 
-/// Measure one calibration point on a real engine.
+/// Measure one calibration point on a real engine (default 400 ms budget
+/// per op).
 pub fn measure_point(n: usize, levels: usize) -> anyhow::Result<CalibPoint> {
+    measure_point_budget(n, levels, Duration::from_millis(400))
+}
+
+/// Measure one calibration point with an explicit per-op time budget.
+pub fn measure_point_budget(
+    n: usize,
+    levels: usize,
+    budget: Duration,
+) -> anyhow::Result<CalibPoint> {
     let params = CkksParams {
         n,
         q0_bits: 50,
@@ -155,7 +174,6 @@ pub fn measure_point(n: usize, levels: usize) -> anyhow::Result<CalibPoint> {
     let a = engine.encrypt(&vals);
     let b = engine.encrypt(&vals);
     let pt = engine.encode_for(&vals, &a);
-    let budget = Duration::from_millis(400);
     let limbs = levels + 1;
 
     let rot = time_op(1, 8, budget, || {

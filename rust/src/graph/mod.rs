@@ -1,5 +1,6 @@
 //! Graph substrate: skeleton topology, normalized adjacency, and the
-//! sparse split used by the AMA HE execution (paper Eq. 1 and Eq. 7).
+//! sparse split used by the AMA HE execution (paper Eq. 1 and Eq. 7;
+//! DESIGN.md S8–S9).
 //!
 //! The spatial graph convolution computes
 //! `X_out = D^{-1/2} (A + I) D^{-1/2} · X · W`; under the AMA packing the

@@ -47,7 +47,7 @@ pub trait HeBackend {
 /// Real CKKS execution backend, with a content-addressed plaintext-mask
 /// cache: encoding a mask costs an FFT plus `limbs` NTTs, and a serving
 /// engine re-encodes the *same* conv/activation masks on every request —
-/// caching them is the §Perf L3 iteration-2 optimization (the cache key is
+/// caching them is the DESIGN.md §Perf-2 optimization (the cache key is
 /// a hash of the slot values + limb count + scale bits, so distinct masks
 /// never collide in practice and a false hit only perturbs one mask).
 pub struct CkksBackend<'e> {

@@ -1,4 +1,5 @@
-//! The encrypted STGCN inference engine — the paper's HE execution plan.
+//! The encrypted STGCN inference engine — the paper's HE execution plan
+//! (DESIGN.md S10).
 //!
 //! Key design points, mirroring Sections 3.3–3.4 and Appendix A.3/A.4:
 //! * **AMA per-node ciphertexts**: adjacency aggregation is `PMult`/`Add`

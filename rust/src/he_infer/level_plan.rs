@@ -1,5 +1,6 @@
 //! Multiplicative-level accounting and HE parameter selection — the
-//! machinery behind the paper's Table 6 and Observation 1.
+//! machinery behind the paper's Table 6 and Observation 1 (DESIGN.md
+//! S11).
 //!
 //! Level model per STGCN layer (with LinGCN's node-wise operator fusion,
 //! Figure 4 / Appendix A.4): GCNConv consumes 1 level (Â, BN and the

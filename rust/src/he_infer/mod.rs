@@ -1,7 +1,8 @@
 //! Homomorphically-encrypted STGCN inference (the paper's Section 3.4 +
-//! Appendix A): level planning (Table 6), the AMA execution engine with
-//! node-wise operator fusion, and the backend abstraction that lets the
-//! same engine run on real CKKS ciphertexts or as a symbolic op counter.
+//! Appendix A; DESIGN.md S10–S11): level planning (Table 6), the AMA
+//! execution engine with node-wise operator fusion, and the backend
+//! abstraction that lets the same engine run on real CKKS ciphertexts or
+//! as a symbolic op counter.
 
 pub mod backend;
 pub mod engine;

@@ -2,7 +2,8 @@
 //! Homomorphically Encrypted Inference (NeurIPS 2023) — full-system
 //! reproduction.
 //!
-//! Three-layer architecture:
+//! Three-layer architecture (see `README.md` for the map and `DESIGN.md`
+//! for the per-subsystem sections S1–S13):
 //! - **L3 (this crate)**: CKKS leveled-HE substrate, AMA-packed encrypted
 //!   STGCN inference engine, level planner, serving coordinator.
 //! - **L2 (python/compile)**: JAX STGCN model + LinGCN training pipeline
@@ -10,8 +11,20 @@
 //!   AOT-lowered to HLO text artifacts.
 //! - **L1 (python/compile/kernels)**: Pallas kernels for the compute
 //!   hot-spots, validated against pure-jnp oracles.
+//!
+//! # Feature flags
+//!
+//! * **`pjrt`** (default off): back [`runtime::PjrtModel`] with the XLA
+//!   CPU PJRT client, compiling the AOT HLO artifact
+//!   (`artifacts/model.hlo.txt`) for the plaintext serving tier. Requires
+//!   an `xla` crate in the build environment, which the offline default
+//!   toolchain does not provide. With the feature off (the default),
+//!   `runtime::PjrtModel` is a native executor backed by
+//!   [`stgcn::StgcnModel`] with the identical API and numerics, so the
+//!   coordinator, examples and benches build and run everywhere.
 
 pub mod ckks;
+pub mod cli;
 pub mod graph;
 pub mod stgcn;
 pub mod ama;

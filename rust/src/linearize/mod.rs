@@ -1,4 +1,5 @@
-//! Linearization plans: which node-wise non-linear operators survive.
+//! Linearization plans: which node-wise non-linear operators survive
+//! (DESIGN.md S9).
 //!
 //! This is the rust-side representation of the output of the python
 //! structural-linearization training (Algorithm 1); it also implements the
@@ -15,7 +16,7 @@ use anyhow::{ensure, Result};
 /// `true` = keep the non-linearity.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LinearizationPlan {
-    /// plan[layer] = (h1 over nodes, h2 over nodes).
+    /// `plan[layer]` = (h1 over nodes, h2 over nodes).
     pub layers: Vec<(Vec<bool>, Vec<bool>)>,
 }
 

@@ -1,57 +1,183 @@
-//! PJRT runtime: loads the AOT-compiled student forward pass
-//! (`artifacts/model.hlo.txt`, produced once by `python/compile/aot.py`
-//! with the Pallas kernels inlined) and executes it on the XLA CPU client.
+//! Plaintext serving runtime (DESIGN.md S2, S13).
 //!
 //! This is the *plaintext* serving path — used for reference checks,
 //! accuracy evaluation, and as the cleartext fall-back tier of the
-//! coordinator. Python is never on the request path: the HLO text is
-//! parsed, compiled and executed natively (see /opt/xla-example/load_hlo).
+//! coordinator. Two interchangeable implementations expose the same
+//! [`PjrtModel`] API:
+//!
+//! * **`pjrt` feature (off by default)**: loads the AOT-compiled student
+//!   forward pass (`artifacts/model.hlo.txt`, produced once by
+//!   `python/compile/aot.py` with the Pallas kernels inlined) and executes
+//!   it natively on the XLA CPU PJRT client. Python is never on the
+//!   request path. Enabling this feature requires an `xla` crate in the
+//!   build environment (see `rust/Cargo.toml`); the offline default build
+//!   does not have one.
+//! * **default (native fallback)**: executes the same trained student via
+//!   the in-tree [`crate::stgcn::StgcnModel`] forward pass, loading the
+//!   tensor-text weights that `python/compile/aot.py` exports next to the
+//!   HLO artifact. Numerically this is the identical model, so every
+//!   consumer (coordinator, examples, integration tests) runs unchanged.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+// The offline toolchain ships no `xla` crate; surface an actionable
+// diagnostic instead of a wall of unresolved-import errors. Remove this
+// guard together with adding the `xla` dependency to rust/Cargo.toml.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires an `xla` crate dependency in rust/Cargo.toml, \
+     which the offline build environment does not provide; build with the \
+     default features to use the native fallback executor"
+);
 
-/// A compiled plaintext model executable.
-pub struct PjrtModel {
-    exe: xla::PjRtLoadedExecutable,
-    /// Input shape [V, C_in, T].
-    pub v: usize,
-    pub c_in: usize,
-    pub t: usize,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-impl PjrtModel {
-    /// Load HLO text and compile on the CPU PJRT client.
-    pub fn load(path: &Path, v: usize, c_in: usize, t: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO")?;
-        Ok(PjrtModel { exe, v, c_in, t })
+    /// A compiled plaintext model executable on the XLA CPU client.
+    pub struct PjrtModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Input shape [V, C_in, T].
+        pub v: usize,
+        pub c_in: usize,
+        pub t: usize,
     }
 
-    /// Run one clip [V, C_in, T] (row-major f64, converted to f32) and
-    /// return the logits.
-    pub fn infer(&self, x: &[f64]) -> Result<Vec<f64>> {
-        anyhow::ensure!(x.len() == self.v * self.c_in * self.t, "input shape mismatch");
-        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-        let lit = xla::Literal::vec1(&xf).reshape(&[
-            self.v as i64,
-            self.c_in as i64,
-            self.t as i64,
-        ])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let out = result.to_tuple1()?;
-        let logits_f32 = out.to_vec::<f32>()?;
-        Ok(logits_f32.into_iter().map(|v| v as f64).collect())
+    impl PjrtModel {
+        /// Load HLO text and compile on the CPU PJRT client.
+        pub fn load(path: &Path, v: usize, c_in: usize, t: usize) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling HLO")?;
+            Ok(PjrtModel { exe, v, c_in, t })
+        }
+
+        /// Run one clip [V, C_in, T] (row-major f64, converted to f32) and
+        /// return the logits.
+        pub fn infer(&self, x: &[f64]) -> Result<Vec<f64>> {
+            anyhow::ensure!(x.len() == self.v * self.c_in * self.t, "input shape mismatch");
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let lit = xla::Literal::vec1(&xf).reshape(&[
+                self.v as i64,
+                self.c_in as i64,
+                self.t as i64,
+            ])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → 1-tuple
+            let out = result.to_tuple1()?;
+            let logits_f32 = out.to_vec::<f32>()?;
+            Ok(logits_f32.into_iter().map(|v| v as f64).collect())
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod native_impl {
+    use crate::graph::Graph;
+    use crate::stgcn::StgcnModel;
+    use crate::util::tensorio::TensorFile;
+    use anyhow::{Context, Result};
+    use std::path::{Path, PathBuf};
+
+    /// Native fallback executor with the PJRT runtime's API: the same
+    /// trained student, run through [`StgcnModel::forward`] instead of a
+    /// compiled HLO executable.
+    pub struct PjrtModel {
+        model: StgcnModel,
+        /// Input shape [V, C_in, T].
+        pub v: usize,
+        pub c_in: usize,
+        pub t: usize,
+    }
+
+    /// Map the HLO artifact path to the tensor-text weights of the same
+    /// student: `model.hlo.txt` is lowered from `model_nl{K}.lgt` where
+    /// `K` is recorded in the sibling `example_input.lgt` metadata. A
+    /// `.lgt` path is used directly.
+    fn resolve_weights(path: &Path) -> Result<PathBuf> {
+        if path.extension().is_some_and(|e| e == "lgt") {
+            return Ok(path.to_path_buf());
+        }
+        let dir = path.parent().context("artifact path has no parent dir")?;
+        let meta = TensorFile::load(&dir.join("example_input.lgt"))
+            .context("native runtime fallback needs example_input.lgt next to the HLO artifact")?;
+        let nl = meta.meta_usize("nl")?;
+        Ok(dir.join(format!("model_nl{nl}.lgt")))
+    }
+
+    impl PjrtModel {
+        /// Load the student weights that back the HLO artifact at `path`.
+        pub fn load(path: &Path, v: usize, c_in: usize, t: usize) -> Result<Self> {
+            anyhow::ensure!(
+                v == 25,
+                "native runtime fallback supports the NTU 25-joint graph only \
+                 (got V={v}); enable the `pjrt` feature for arbitrary HLO"
+            );
+            let weights = resolve_weights(path)?;
+            let model = StgcnModel::load(&weights, Graph::ntu_rgbd())
+                .with_context(|| format!("loading native weights {}", weights.display()))?;
+            anyhow::ensure!(
+                model.c_in == c_in && model.t == t,
+                "native model shape [V,{},{}] disagrees with requested [{v},{c_in},{t}]",
+                model.c_in,
+                model.t
+            );
+            Ok(PjrtModel { model, v, c_in, t })
+        }
+
+        /// Run one clip [V, C_in, T] (row-major f64) and return the logits.
+        pub fn infer(&self, x: &[f64]) -> Result<Vec<f64>> {
+            anyhow::ensure!(x.len() == self.v * self.c_in * self.t, "input shape mismatch");
+            self.model.forward(x)
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtModel;
+#[cfg(not(feature = "pjrt"))]
+pub use native_impl::PjrtModel;
+
+#[cfg(all(test, not(feature = "pjrt")))]
 mod tests {
-    // Runtime integration tests live in rust/tests/artifacts_pipeline.rs —
-    // they need `make artifacts` to have run.
+    use super::PjrtModel;
+    use crate::graph::Graph;
+    use crate::stgcn::StgcnModel;
+
+    /// The native fallback on a direct `.lgt` path must reproduce the
+    /// in-memory model's forward pass bit-for-bit (same loader, same
+    /// engine). Full artifacts-pipeline integration (HLO-path resolution)
+    /// lives in rust/tests/artifacts_pipeline.rs.
+    #[test]
+    fn test_native_fallback_matches_stgcn_forward() {
+        let model = StgcnModel::synthetic(Graph::ntu_rgbd(), 8, 2, 3, &[4, 4], 3, 31);
+        let dir = std::env::temp_dir().join("lingcn_test_runtime_native");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model_nl4.lgt");
+        model.to_tensorfile().unwrap().save(&path).unwrap();
+
+        let rt = PjrtModel::load(&path, 25, 2, 8).unwrap();
+        let x: Vec<f64> = (0..25 * 2 * 8).map(|i| ((i % 19) as f64 - 9.0) / 9.0).collect();
+        let want = model.forward(&x).unwrap();
+        let got = rt.infer(&x).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn test_native_fallback_rejects_bad_shapes() {
+        let model = StgcnModel::synthetic(Graph::ntu_rgbd(), 8, 2, 3, &[4], 3, 32);
+        let dir = std::env::temp_dir().join("lingcn_test_runtime_native");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model_shape.lgt");
+        model.to_tensorfile().unwrap().save(&path).unwrap();
+        // wrong graph size
+        assert!(PjrtModel::load(&path, 24, 2, 8).is_err());
+        // wrong (c_in, t)
+        assert!(PjrtModel::load(&path, 25, 3, 8).is_err());
+        // missing sibling metadata for an HLO path
+        assert!(PjrtModel::load(&dir.join("model.hlo.txt"), 25, 2, 8).is_err());
+    }
 }

@@ -10,7 +10,7 @@
 
 use crate::graph::Graph;
 use crate::util::tensorio::{Tensor, TensorFile};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Activation applied at one of the two per-layer positions, for one node.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -45,11 +45,11 @@ pub struct StgcnLayer {
     pub c_out: usize,
     /// 1×1 conv kernel [c_out, c_in] (BN pre-folded by the exporter).
     pub gcn_w: Tensor,
-    /// GCNConv bias [c_out].
+    /// GCNConv bias `[c_out]`.
     pub gcn_b: Tensor,
     /// Temporal conv kernel [c_out, c_out, k].
     pub tconv_w: Tensor,
-    /// Temporal conv bias [c_out].
+    /// Temporal conv bias `[c_out]`.
     pub tconv_b: Tensor,
     /// Per-node activation at position 1 (after GCNConv), length V.
     pub act1: Vec<Activation>,
@@ -88,7 +88,7 @@ pub struct StgcnModel {
     /// Temporal kernel width K (odd; the paper uses 9).
     pub k: usize,
     pub layers: Vec<StgcnLayer>,
-    /// Classifier weight [classes, c_last] and bias [classes].
+    /// Classifier weight `[classes, c_last]` and bias `[classes]`.
     pub fc_w: Tensor,
     pub fc_b: Tensor,
 }
@@ -345,6 +345,70 @@ impl StgcnModel {
             .context("loaded model violates structural constraint")?;
         Ok(model)
     }
+
+    /// Export to the tensor-text interchange format — the exact inverse of
+    /// [`StgcnModel::from_tensorfile`] (the python-side writer lives in
+    /// `python/compile/export.py`). ReLU teachers are not exportable (they
+    /// have no HE execution), and all polynomial activations must share one
+    /// global `c` factor, which the format stores as the `act_c` metadata.
+    pub fn to_tensorfile(&self) -> Result<TensorFile> {
+        let v = self.v();
+        let mut c_act: Option<f64> = None;
+        for layer in &self.layers {
+            for act in layer.act1.iter().chain(&layer.act2) {
+                match *act {
+                    Activation::Relu => bail!("ReLU model is not exportable"),
+                    Activation::Poly { c, .. } => match c_act {
+                        None => c_act = Some(c),
+                        Some(prev) => {
+                            ensure!(prev == c, "inconsistent poly c factor: {prev} vs {c}")
+                        }
+                    },
+                    Activation::Identity => {}
+                }
+            }
+        }
+        let mut tf = TensorFile::default();
+        tf.meta.insert("layers".into(), self.layers.len().to_string());
+        tf.meta.insert("t".into(), self.t.to_string());
+        tf.meta.insert("c_in".into(), self.c_in.to_string());
+        tf.meta.insert("k".into(), self.k.to_string());
+        tf.meta
+            .insert("act_c".into(), c_act.unwrap_or(0.01).to_string());
+        for (li, layer) in self.layers.iter().enumerate() {
+            tf.tensors
+                .insert(format!("layer{li}.gcn_w"), layer.gcn_w.clone());
+            tf.tensors
+                .insert(format!("layer{li}.gcn_b"), layer.gcn_b.clone());
+            tf.tensors
+                .insert(format!("layer{li}.tconv_w"), layer.tconv_w.clone());
+            tf.tensors
+                .insert(format!("layer{li}.tconv_b"), layer.tconv_b.clone());
+            for (pos, acts) in [(1usize, &layer.act1), (2, &layer.act2)] {
+                let (mut h, mut w2, mut w1, mut b) =
+                    (vec![0.0; v], vec![0.0; v], vec![0.0; v], vec![0.0; v]);
+                for (vi, act) in acts.iter().enumerate() {
+                    if let Activation::Poly { w2: a2, w1: a1, b: ab, .. } = *act {
+                        h[vi] = 1.0;
+                        w2[vi] = a2;
+                        w1[vi] = a1;
+                        b[vi] = ab;
+                    }
+                }
+                tf.tensors
+                    .insert(format!("layer{li}.h{pos}"), Tensor::new(vec![v], h));
+                tf.tensors
+                    .insert(format!("layer{li}.act{pos}_w2"), Tensor::new(vec![v], w2));
+                tf.tensors
+                    .insert(format!("layer{li}.act{pos}_w1"), Tensor::new(vec![v], w1));
+                tf.tensors
+                    .insert(format!("layer{li}.act{pos}_b"), Tensor::new(vec![v], b));
+            }
+        }
+        tf.tensors.insert("fc_w".into(), self.fc_w.clone());
+        tf.tensors.insert("fc_b".into(), self.fc_b.clone());
+        Ok(tf)
+    }
 }
 
 #[cfg(test)]
@@ -444,6 +508,32 @@ mod tests {
         let x: Vec<f64> = (0..n_in).map(|i| (i * 7 % 11) as f64 - 5.0).collect();
         let y = m.forward(&x).unwrap();
         assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn test_tensorfile_roundtrip_preserves_forward() {
+        let mut m = tiny_model();
+        // exercise Identity rows in the export path too
+        for a in m.layers[0].act1.iter_mut() {
+            *a = Activation::Identity;
+        }
+        let tf = m.to_tensorfile().unwrap();
+        let back = StgcnModel::from_tensorfile(&tf, m.graph.clone()).unwrap();
+        assert_eq!(
+            back.effective_nonlinear_layers().unwrap(),
+            m.effective_nonlinear_layers().unwrap()
+        );
+        let x: Vec<f64> = (0..m.v() * m.c_in * m.t)
+            .map(|i| ((i % 17) as f64 - 8.0) / 8.0)
+            .collect();
+        assert_eq!(back.forward(&x).unwrap(), m.forward(&x).unwrap());
+    }
+
+    #[test]
+    fn test_relu_model_not_exportable() {
+        let mut m = tiny_model();
+        m.layers[0].act1[0] = Activation::Relu;
+        assert!(m.to_tensorfile().is_err());
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! In-tree utility substrate (this environment is offline; see Cargo.toml):
-//! PRNG, micro-bench harness, tensor text I/O, and a tiny JSON writer.
+//! In-tree utility substrate (the environment is offline — no rand /
+//! criterion / serde; the one shimmed dependency, `anyhow`, is vendored
+//! under `rust/vendor/` — see DESIGN.md S2): PRNG, micro-bench harness,
+//! tensor text I/O, and a tiny JSON writer.
 
 pub mod bench;
 pub mod rng;

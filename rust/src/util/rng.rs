@@ -5,7 +5,7 @@
 //! statistically strong and reproducible, which is what the experiments
 //! need. For a production HE deployment you would swap in an OS CSPRNG —
 //! the sampling interfaces in `ckks::poly` are the single integration
-//! point (see README §Security-notes).
+//! point (see README.md, "Security notes").
 
 /// xoshiro256++ by Blackman & Vigna (public domain reference algorithm).
 #[derive(Clone, Debug)]

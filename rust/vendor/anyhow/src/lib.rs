@@ -1,0 +1,222 @@
+//! Offline API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no network or registry access, so this shim is
+//! vendored as a path dependency. It implements exactly the surface the
+//! `lingcn` crate uses:
+//!
+//! * [`Error`] — an opaque error value carrying a human-readable cause
+//!   chain (outermost context first);
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that is what permits the blanket
+//! `impl From<E: std::error::Error> for Error` used by `?` without
+//! colliding with the reflexive `From<T> for T`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of display messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_context(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "Condition failed: `{}`",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not an integer")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn test_question_mark_and_context() {
+        assert_eq!(parse("17").unwrap(), 17);
+        let e = parse("x").unwrap_err();
+        assert_eq!(e.root_context(), "not an integer");
+        assert!(e.chain().count() >= 2, "source preserved in chain");
+        let e2 = parse("-3").unwrap_err();
+        assert_eq!(e2.to_string(), "negative: -3");
+    }
+
+    #[test]
+    fn test_option_context_and_bail() {
+        fn first(v: &[u8]) -> Result<u8> {
+            let x = v.first().context("empty")?;
+            if *x == 0 {
+                bail!("zero");
+            }
+            Ok(*x)
+        }
+        assert_eq!(first(&[5]).unwrap(), 5);
+        assert_eq!(first(&[]).unwrap_err().to_string(), "empty");
+        assert_eq!(first(&[0]).unwrap_err().to_string(), "zero");
+    }
+
+    #[test]
+    fn test_ensure_bare_condition() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x > 1);
+            Ok(())
+        }
+        let e = check(0).unwrap_err();
+        assert!(e.to_string().contains("x > 1"), "{e}");
+    }
+
+    #[test]
+    fn test_error_context_stacks_and_debug_formats() {
+        let base: Error = "boom".parse::<i32>().unwrap_err().into();
+        let wrapped = base.context("inner").context("outer");
+        assert_eq!(wrapped.to_string(), "outer");
+        let dbg = format!("{wrapped:?}");
+        assert!(dbg.contains("outer") && dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn test_anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("captured {n}");
+        assert_eq!(b.to_string(), "captured 3");
+        let c = anyhow!("fmt {} {}", 1, 2);
+        assert_eq!(c.to_string(), "fmt 1 2");
+    }
+}
