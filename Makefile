@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test bench
+.PHONY: artifacts artifacts-quick test bench bench-plan
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -25,3 +25,7 @@ bench:
 	cargo bench --bench he_ops
 	cargo bench --bench table2_stgcn3_128
 	cargo bench --bench ablation_fusion
+
+# compile-once vs per-request HePlan costs; writes rust/BENCH_plan.json
+bench-plan:
+	cargo bench --bench plan_compile

@@ -1,0 +1,131 @@
+//! Compile-once vs per-request cost of the HePlan path (DESIGN.md S14):
+//! plan compilation + mask pre-encoding are paid once per (model, layout,
+//! params); per-request latency then drops the interpreter's re-derivation
+//! of every mask and scale. Emits `BENCH_plan.json`.
+//! Run: cargo bench --bench plan_compile
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::{CkksEngine, CkksParams};
+use lingcn::graph::Graph;
+use lingcn::he_infer::{compile, CkksBackend, HeStgcn, PlanChain, PlanOptions, PreparedPlan};
+use lingcn::stgcn::StgcnModel;
+use lingcn::util::{ascii_table, bench::time_op};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let he = HeStgcn::new(
+        &model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    let levels = he.levels_needed().unwrap();
+    let params = CkksParams {
+        n: 1 << 11,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    };
+    let ctx = params.build().expect("params");
+    let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), ctx.slots())
+        .unwrap();
+    let chain = PlanChain::from_ctx(&ctx);
+
+    // ---- compile-once costs
+    let budget = Duration::from_secs(2);
+    let c_compile = time_op(1, 20, budget, || {
+        let _ = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
+    });
+    let plan = Arc::new(compile(&model, layout, &chain, PlanOptions::default()).unwrap());
+    let engine = CkksEngine::new(params.clone(), &plan.required_rotations(), 7).expect("engine");
+    let c_prepare = time_op(1, 20, budget, || {
+        let _ = PreparedPlan::new(plan.clone(), &engine).unwrap();
+    });
+    let prepared = PreparedPlan::new(plan.clone(), &engine).unwrap();
+
+    // ---- per-request costs
+    let x: Vec<f64> = (0..model.v() * model.c_in * model.t)
+        .map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0)
+        .collect();
+    let input = lingcn::ama::encrypt_clip(&engine, &layout, &x, model.v(), model.c_in, levels + 1)
+        .unwrap()
+        .cts;
+
+    // interpreted, cold mask cache: what every request paid before the
+    // refactor — every plaintext mask re-encoded on the fly
+    let r_interp_cold = time_op(1, 12, budget, || {
+        engine.plaintext_cache.lock().unwrap().clear();
+        let be = CkksBackend::new(&engine);
+        let _ = he.forward(&be, &input).unwrap();
+    });
+    // interpreted, warm content-addressed cache (§Perf-2 mitigation)
+    let r_interp_warm = time_op(1, 12, budget, || {
+        let be = CkksBackend::new(&engine);
+        let _ = he.forward(&be, &input).unwrap();
+    });
+    // compiled plan, masks pre-encoded
+    let r_plan_1 = time_op(1, 12, budget, || {
+        let _ = prepared.execute(&engine, &input, 1).unwrap();
+    });
+    let pool = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+    let r_plan_n = time_op(1, 12, budget, || {
+        let _ = prepared.execute(&engine, &input, pool).unwrap();
+    });
+    // limb-level fan-out instead of op-level: the ckks::par_limbs path
+    lingcn::ckks::set_limb_parallelism(pool);
+    let r_plan_limb = time_op(1, 12, budget, || {
+        let _ = prepared.execute(&engine, &input, 1).unwrap();
+    });
+    lingcn::ckks::set_limb_parallelism(1);
+
+    let rows = vec![
+        vec!["plan compile (once)".into(), format!("{:.3}", c_compile.median_secs() * 1e3)],
+        vec!["mask pre-encode (once)".into(), format!("{:.3}", c_prepare.median_secs() * 1e3)],
+        vec!["request: interpreted, cold masks".into(), format!("{:.3}", r_interp_cold.median_secs() * 1e3)],
+        vec!["request: interpreted, warm masks".into(), format!("{:.3}", r_interp_warm.median_secs() * 1e3)],
+        vec!["request: compiled plan, 1 thread".into(), format!("{:.3}", r_plan_1.median_secs() * 1e3)],
+        vec![format!("request: compiled plan, {pool} threads"), format!("{:.3}", r_plan_n.median_secs() * 1e3)],
+        vec![format!("request: compiled plan, {pool} limb threads"), format!("{:.3}", r_plan_limb.median_secs() * 1e3)],
+    ];
+    println!("{}", ascii_table(&["path", "median ms"], &rows));
+    println!(
+        "plan: {} ops, {} masks, {} waves, depth {}",
+        plan.ops.len(),
+        plan.masks.len(),
+        plan.waves.len(),
+        plan.levels_needed
+    );
+
+    let json = format!(
+        "{{\n  \"n\": {},\n  \"levels\": {},\n  \"ops\": {},\n  \"masks\": {},\n  \
+         \"compile_s\": {:.6},\n  \"prepare_s\": {:.6},\n  \"interpreted_cold_req_s\": {:.6},\n  \
+         \"interpreted_warm_req_s\": {:.6},\n  \"compiled_req_s\": {:.6},\n  \
+         \"compiled_req_par_s\": {:.6},\n  \"compiled_req_limb_par_s\": {:.6},\n  \
+         \"pool_threads\": {},\n  \
+         \"speedup_vs_cold\": {:.3}\n}}\n",
+        params.n,
+        levels,
+        plan.ops.len(),
+        plan.masks.len(),
+        c_compile.median_secs(),
+        c_prepare.median_secs(),
+        r_interp_cold.median_secs(),
+        r_interp_warm.median_secs(),
+        r_plan_1.median_secs(),
+        r_plan_n.median_secs(),
+        r_plan_limb.median_secs(),
+        pool,
+        r_interp_cold.median_secs() / r_plan_1.median_secs().max(1e-12),
+    );
+    std::fs::write("BENCH_plan.json", &json).expect("writing BENCH_plan.json");
+    println!("wrote BENCH_plan.json");
+
+    // sanity: skipping per-request mask encoding must not be slower
+    assert!(
+        r_plan_1.median_secs() <= r_interp_cold.median_secs() * 1.2,
+        "compiled path should not lose to cold interpreted path"
+    );
+}

@@ -14,80 +14,89 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Homomorphic-op counters, keyed the way the paper's Table 7 reports them.
-#[derive(Default, Debug)]
-pub struct OpCounters {
-    pub add: AtomicU64,
-    pub pmult: AtomicU64,
-    pub cmult: AtomicU64,
-    pub rot: AtomicU64,
-    pub rescale: AtomicU64,
+/// Generates the counter registry once from a single field list, so
+/// `OpCounters`, its `OpCounts` snapshot, `snapshot()`, `reset()` and the
+/// array views can never drift out of sync when a counter is added.
+macro_rules! define_op_counters {
+    ($($(#[$doc:meta])* $field:ident),* $(,)?) => {
+        /// Homomorphic-op counters, keyed the way the paper's Table 7
+        /// reports them (plus serving-path counters). Fields are defined by
+        /// the `define_op_counters!` list; add new counters there only.
+        #[derive(Default, Debug)]
+        pub struct OpCounters {
+            $($(#[$doc])* pub $field: AtomicU64,)*
+        }
+
+        /// A plain-old-data snapshot of the counters.
+        #[derive(Clone, Copy, Debug, Default, PartialEq)]
+        pub struct OpCounts {
+            $($(#[$doc])* pub $field: u64,)*
+        }
+
+        impl OpCounters {
+            pub fn snapshot(&self) -> OpCounts {
+                OpCounts {
+                    $($field: self.$field.load(Ordering::Relaxed),)*
+                }
+            }
+
+            pub fn reset(&self) {
+                $(self.$field.store(0, Ordering::Relaxed);)*
+            }
+        }
+
+        impl OpCounts {
+            /// Field names, in declaration order (aligned with
+            /// [`OpCounts::to_array`]).
+            pub fn field_names() -> &'static [&'static str] {
+                &[$(stringify!($field)),*]
+            }
+
+            /// All counters as an array in declaration order (plan
+            /// serialization, diffing).
+            pub fn to_array(&self) -> Vec<u64> {
+                vec![$(self.$field),*]
+            }
+
+            /// Inverse of [`OpCounts::to_array`]; `None` on length mismatch.
+            pub fn from_array(values: &[u64]) -> Option<OpCounts> {
+                if values.len() != Self::field_names().len() {
+                    return None;
+                }
+                let mut it = values.iter().copied();
+                Some(OpCounts {
+                    $($field: it.next()?,)*
+                })
+            }
+        }
+    };
+}
+
+define_op_counters!(
+    add,
+    pmult,
+    cmult,
+    rot,
+    rescale,
     /// Σ over ops of the RNS limb count at which the op ran (cost ∝ limbs).
-    pub add_limbs: AtomicU64,
-    pub pmult_limbs: AtomicU64,
-    pub cmult_limbs: AtomicU64,
-    pub rot_limbs: AtomicU64,
-    pub rescale_limbs: AtomicU64,
+    add_limbs,
+    pmult_limbs,
+    cmult_limbs,
+    rot_limbs,
+    rescale_limbs,
     /// Σ limbs² for the key-switching ops (their cost is quadratic in the
     /// limb count: digits × extended-basis NTT work).
-    pub cmult_limbs_sq: AtomicU64,
-    pub rot_limbs_sq: AtomicU64,
-}
-
-/// A plain-old-data snapshot of the counters.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct OpCounts {
-    pub add: u64,
-    pub pmult: u64,
-    pub cmult: u64,
-    pub rot: u64,
-    pub rescale: u64,
-    pub add_limbs: u64,
-    pub pmult_limbs: u64,
-    pub cmult_limbs: u64,
-    pub rot_limbs: u64,
-    pub rescale_limbs: u64,
-    pub cmult_limbs_sq: u64,
-    pub rot_limbs_sq: u64,
-}
-
-impl OpCounters {
-    pub fn snapshot(&self) -> OpCounts {
-        OpCounts {
-            add: self.add.load(Ordering::Relaxed),
-            pmult: self.pmult.load(Ordering::Relaxed),
-            cmult: self.cmult.load(Ordering::Relaxed),
-            rot: self.rot.load(Ordering::Relaxed),
-            rescale: self.rescale.load(Ordering::Relaxed),
-            add_limbs: self.add_limbs.load(Ordering::Relaxed),
-            pmult_limbs: self.pmult_limbs.load(Ordering::Relaxed),
-            cmult_limbs: self.cmult_limbs.load(Ordering::Relaxed),
-            rot_limbs: self.rot_limbs.load(Ordering::Relaxed),
-            rescale_limbs: self.rescale_limbs.load(Ordering::Relaxed),
-            cmult_limbs_sq: self.cmult_limbs_sq.load(Ordering::Relaxed),
-            rot_limbs_sq: self.rot_limbs_sq.load(Ordering::Relaxed),
-        }
-    }
-
-    pub fn reset(&self) {
-        for c in [
-            &self.add,
-            &self.pmult,
-            &self.cmult,
-            &self.rot,
-            &self.rescale,
-            &self.add_limbs,
-            &self.pmult_limbs,
-            &self.cmult_limbs,
-            &self.rot_limbs,
-            &self.rescale_limbs,
-            &self.cmult_limbs_sq,
-            &self.rot_limbs_sq,
-        ] {
-            c.store(0, Ordering::Relaxed);
-        }
-    }
-}
+    cmult_limbs_sq,
+    rot_limbs_sq,
+    /// Serving-path: requests answered from a cached compiled `HePlan`
+    /// (he_infer::exec; DESIGN.md S14).
+    plan_cache_hit,
+    /// Serving-path: plan compilations forced by a cache miss.
+    plan_cache_miss,
+    /// Tasks executed by the plan executor's wavefront worker pool
+    /// (bumped only when executing with >1 thread).
+    pool_tasks,
+);
 
 impl OpCounts {
     pub fn total_ops(&self) -> u64 {
@@ -378,10 +387,10 @@ impl Evaluator {
         let mut acc1 = RnsPoly::zero(ctx, nq, true, true);
         for i in 0..nq {
             // digit i: the integer residues [d]_{q_i}, spread over Q_ℓ ∪ {P}
+            // (per-target-limb independent → limb-parallel, DESIGN.md S14)
             let src = &d.limbs[i];
             let mut digit = RnsPoly::zero(ctx, nq, true, false);
-            for j in 0..=nq {
-                let dst = &mut digit.limbs[j];
+            super::poly::par_limbs(&mut digit.limbs, |j, dst| {
                 if j == i {
                     dst.copy_from_slice(src);
                 } else {
@@ -394,7 +403,7 @@ impl Evaluator {
                         dst[t] = br.reduce_u64(src[t]);
                     }
                 }
-            }
+            });
             digit.ntt_forward(ctx);
             let kb = key.digits[i].b.subset(nq, true);
             let ka = key.digits[i].a.subset(nq, true);

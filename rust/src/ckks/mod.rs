@@ -31,6 +31,7 @@ pub use encrypt::Ciphertext;
 pub use eval::{build_eval_keys, Evaluator, OpCounters, OpCounts};
 pub use keys::{EvalKeys, PublicKey, SecretKey};
 pub use params::{CkksContext, CkksParams};
+pub use poly::{limb_parallelism, par_limbs, set_limb_parallelism};
 
 use std::sync::Arc;
 use std::sync::Mutex;

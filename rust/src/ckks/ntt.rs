@@ -203,6 +203,66 @@ mod tests {
     }
 
     #[test]
+    fn test_property_roundtrip_randomized() {
+        // property: inverse(forward(a)) == a for random polynomials across
+        // many seeds, sizes, and prime widths
+        for n in [8usize, 16, 32, 64, 128] {
+            for (pi, bits) in [30u32, 40, 50].iter().enumerate() {
+                let q = zq::gen_ntt_primes(*bits, n, 1, &[])[0];
+                let tbl = NttTable::new(n, q);
+                for seed in 0..6u64 {
+                    let a = rand_poly(n, q, 1000 + seed * 31 + pi as u64);
+                    let mut b = a.clone();
+                    tbl.forward(&mut b);
+                    tbl.inverse(&mut b);
+                    assert_eq!(a, b, "n={n} bits={bits} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_property_negacyclic_product_matches_schoolbook() {
+        // property: pointwise NTT product == schoolbook negacyclic product
+        // for random polynomial pairs across seeds and small sizes
+        for n in [8usize, 16, 32] {
+            let q = zq::gen_ntt_primes(40, n, 1, &[])[0];
+            let tbl = NttTable::new(n, q);
+            for seed in 0..8u64 {
+                let a = rand_poly(n, q, 2000 + seed);
+                let b = rand_poly(n, q, 3000 + seed);
+                let want = negacyclic_mul_naive(&a, &b, q);
+                let (mut fa, mut fb) = (a.clone(), b.clone());
+                tbl.forward(&mut fa);
+                tbl.forward(&mut fb);
+                let mut fc: Vec<u64> = fa
+                    .iter()
+                    .zip(&fb)
+                    .map(|(&x, &y)| zq::mul_mod(x, y, q))
+                    .collect();
+                tbl.inverse(&mut fc);
+                assert_eq!(fc, want, "n={n} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_property_forward_outputs_fully_reduced() {
+        // the lazy butterflies must still hand back values in [0, q)
+        for n in [16usize, 64] {
+            let q = zq::gen_ntt_primes(45, n, 1, &[])[0];
+            let tbl = NttTable::new(n, q);
+            for seed in 0..4u64 {
+                let mut a = rand_poly(n, q, 4000 + seed);
+                tbl.forward(&mut a);
+                assert!(a.iter().all(|&x| x < q));
+                tbl.inverse(&mut a);
+                assert!(a.iter().all(|&x| x < q));
+            }
+        }
+    }
+
+    #[test]
     fn test_negacyclic_wraparound_sign() {
         // x^{n-1} * x = x^n = -1 mod (x^n+1)
         let n = 16;

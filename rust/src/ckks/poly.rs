@@ -10,6 +10,63 @@
 use super::params::CkksContext;
 use super::zq;
 use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide limb-parallelism degree for the hot per-limb loops
+/// (NTT round trips, rescale, key-switch digit spreading). `1` (the
+/// default) keeps every loop serial — results are bit-identical either
+/// way because all limb work is exact modular arithmetic on disjoint
+/// residue vectors, so this is purely a throughput knob (DESIGN.md S14).
+static LIMB_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the number of threads `par_limbs` fans out to (clamped to ≥ 1).
+pub fn set_limb_parallelism(threads: usize) {
+    LIMB_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Current limb-parallelism degree.
+pub fn limb_parallelism() -> usize {
+    LIMB_THREADS.load(Ordering::Relaxed)
+}
+
+/// Run `f(limb_index, &mut limb)` over every limb, fanning out across a
+/// scoped `std::thread` pool when [`set_limb_parallelism`] asked for more
+/// than one thread. Limbs are disjoint `&mut` chunks, so this is safe and
+/// deterministic: each limb's computation is independent of scheduling.
+///
+/// Fan-out pays a thread-spawn per chunk (~tens of µs), which only
+/// amortizes when each limb carries real work — at paper-scale rings
+/// (N ≥ 2^14, one NTT ≈ ms per limb) it wins; at toy N it can lose.
+/// Late-chain ops with very few limbs stay serial regardless.
+pub fn par_limbs<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    // below 3 limbs the spawn overhead can't amortize — stay serial
+    let threads = if items.len() < 3 {
+        1
+    } else {
+        limb_parallelism().min(items.len())
+    };
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let per = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (chunk_idx, chunk) in items.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, item) in chunk.iter_mut().enumerate() {
+                    f(chunk_idx * per + j, item);
+                }
+            });
+        }
+    });
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct RnsPoly {
@@ -76,23 +133,27 @@ impl RnsPoly {
         p
     }
 
-    /// In-place forward NTT on every limb.
+    /// In-place forward NTT on every limb (limb-parallel via [`par_limbs`]).
     pub fn ntt_forward(&mut self, ctx: &CkksContext) {
         assert!(!self.is_ntt, "already in NTT form");
-        for idx in 0..self.limb_count() {
-            let m = self.mod_index(ctx, idx);
-            ctx.ntt_for(m).forward(&mut self.limbs[idx]);
-        }
+        let nq = self.nq;
+        let special = ctx.moduli.len();
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let m = if idx < nq { idx } else { special };
+            ctx.ntt_for(m).forward(limb);
+        });
         self.is_ntt = true;
     }
 
-    /// In-place inverse NTT on every limb.
+    /// In-place inverse NTT on every limb (limb-parallel via [`par_limbs`]).
     pub fn ntt_inverse(&mut self, ctx: &CkksContext) {
         assert!(self.is_ntt, "already in coefficient form");
-        for idx in 0..self.limb_count() {
-            let m = self.mod_index(ctx, idx);
-            ctx.ntt_for(m).inverse(&mut self.limbs[idx]);
-        }
+        let nq = self.nq;
+        let special = ctx.moduli.len();
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let m = if idx < nq { idx } else { special };
+            ctx.ntt_for(m).inverse(limb);
+        });
         self.is_ntt = false;
     }
 
@@ -214,13 +275,12 @@ impl RnsPoly {
         let half = q_m / 2;
         let last = self.limbs.pop().unwrap();
         self.nq -= 1;
-        for j in 0..self.nq {
+        par_limbs(&mut self.limbs, |j, limb| {
             let q_j = ctx.moduli[j];
             let inv = ctx.inv_last[m][j];
             let q_m_mod_j = ctx.mod_last[m][j];
             let br = ctx.barrett_for(j);
             let inv_shoup = zq::ShoupMul::new(inv, q_j);
-            let limb = &mut self.limbs[j];
             for i in 0..limb.len() {
                 // centered lift of the dropped residue for round-to-nearest
                 let r = last[i];
@@ -230,7 +290,7 @@ impl RnsPoly {
                 }
                 limb[i] = inv_shoup.mul(t, q_j);
             }
-        }
+        });
     }
 
     /// Galois automorphism applied in NTT (evaluation) form: with the
@@ -538,6 +598,46 @@ mod tests {
         for (a, b) in coeffs.iter().zip(&back) {
             assert_eq!(*a as i128, *b);
         }
+    }
+
+    #[test]
+    fn test_par_limbs_indices_and_coverage() {
+        // every index visited exactly once, with the right element, at any
+        // parallelism degree (including degrees above the item count)
+        for threads in [1usize, 2, 3, 8, 64] {
+            set_limb_parallelism(threads);
+            let mut items: Vec<u64> = (0..13).collect();
+            par_limbs(&mut items, |i, v| {
+                assert_eq!(*v, i as u64);
+                *v = 1000 + i as u64;
+            });
+            assert_eq!(items, (1000..1013).collect::<Vec<u64>>());
+        }
+        set_limb_parallelism(1);
+    }
+
+    #[test]
+    fn test_limb_parallel_ntt_and_rescale_bit_identical() {
+        // the par_limbs path is a pure scheduling change: NTT round trips
+        // and rescale must produce bit-identical limbs at any thread count
+        let c = ctx();
+        let mut rng = crate::util::Rng::seed_from_u64(17);
+        let base = RnsPoly::sample_uniform(&c, 4, false, &mut rng);
+
+        set_limb_parallelism(1);
+        let mut serial = base.clone();
+        serial.ntt_forward(&c);
+        serial.ntt_inverse(&c);
+        serial.rescale_last(&c);
+
+        set_limb_parallelism(4);
+        let mut parallel = base.clone();
+        parallel.ntt_forward(&c);
+        parallel.ntt_inverse(&c);
+        parallel.rescale_last(&c);
+        set_limb_parallelism(1);
+
+        assert_eq!(serial, parallel);
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! | `plan` | print the HE parameter plan (paper Table 6) |
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
-//! | `infer --nl K [--encrypted]` | run one synthetic clip through a trained artifact |
-//! | `serve [--workers N] [--requests M]` | run the serving coordinator (plaintext tier) |
+//! | `infer --nl K [--encrypted] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out) |
+//! | `serve [--tier plaintext\|he] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s, `--threads` sizing the per-request plan-executor pool and `--limb-threads` the per-limb fan-out |
 //!
 //! `plan`, `calibrate` and `predict` are self-contained; `infer` and
 //! `serve` need the `artifacts/` directory produced by the python build
@@ -122,6 +122,9 @@ fn cmd_predict(args: &[String]) -> Result<()> {
 fn cmd_infer(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
     let encrypted = args.iter().any(|a| a == "--encrypted");
+    let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    let limb_threads: usize =
+        arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
     let dir = Path::new("artifacts");
     let model = crate::stgcn::StgcnModel::load(
         &dir.join(format!("model_nl{nl}.lgt")),
@@ -139,9 +142,10 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             special_bits: 55,
             allow_insecure: true,
         };
+        crate::ckks::set_limb_parallelism(limb_threads);
         let sess = crate::he_infer::PrivateInferenceSession::new(&model, params, 7)?;
         let input = sess.encrypt_input(&model, x)?;
-        let out = sess.infer(&model, &input)?;
+        let out = sess.infer_parallel(&input, threads)?;
         sess.decrypt_logits(&model, &out)
     } else {
         model.forward(x)?
@@ -163,8 +167,31 @@ fn cmd_infer(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let requests: usize = arg_value(args, "--requests").unwrap_or_else(|| "64".into()).parse()?;
+    let tier = arg_value(args, "--tier").unwrap_or_else(|| "plaintext".into());
+    let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    let limb_threads: usize =
+        arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
+    // limb fan-out composes multiplicatively with the plan-executor pool
+    // and the worker pool — keep the product near the core count
+    crate::ckks::set_limb_parallelism(limb_threads);
     let cost = OpCostModel::reference();
-    let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
+    let metrics = std::sync::Arc::new(crate::coordinator::Metrics::default());
+    let (router, executor): (
+        crate::coordinator::Router,
+        std::sync::Arc<dyn crate::coordinator::InferenceExecutor>,
+    ) = match tier.as_str() {
+        "plaintext" => {
+            let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
+            (router, std::sync::Arc::new(exec))
+        }
+        "he" => {
+            let (router, mut exec) =
+                crate::coordinator::he_from_artifacts(Path::new("artifacts"), &cost, threads)?;
+            exec.set_metrics(metrics.clone());
+            (router, std::sync::Arc::new(exec))
+        }
+        other => anyhow::bail!("unknown tier {other} (expected plaintext|he)"),
+    };
     println!("variants:");
     for v in router.variants() {
         println!(
@@ -172,9 +199,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             v.name, v.nl, v.accuracy, v.latency_s
         );
     }
-    let coord = crate::coordinator::Coordinator::start(
+    let coord = crate::coordinator::Coordinator::start_with_metrics(
         router,
-        std::sync::Arc::new(exec),
+        executor,
+        metrics,
         workers,
         8,
         std::time::Duration::from_millis(2),
@@ -198,7 +226,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let wall = t0.elapsed();
     println!("{}", coord.metrics.summary());
     println!(
-        "{requests} requests in {wall:?} → {:.1} req/s (plaintext tier, {workers} workers)",
+        "{requests} requests in {wall:?} → {:.1} req/s ({tier} tier, {workers} workers, \
+         {threads} plan-exec threads)",
         requests as f64 / wall.as_secs_f64()
     );
     coord.shutdown();

@@ -12,6 +12,11 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub degraded: AtomicU64,
+    /// Encrypted-tier requests served from a cached compiled `HePlan`
+    /// (he_infer::exec::HeExecutor; DESIGN.md S14).
+    pub plan_cache_hits: AtomicU64,
+    /// Encrypted-tier requests that forced a plan compilation.
+    pub plan_cache_misses: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -54,11 +59,14 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} degraded={} mean={:?} p50≤{:?} p99≤{:?}",
+            "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
+             mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.degraded.load(Ordering::Relaxed),
+            self.plan_cache_hits.load(Ordering::Relaxed),
+            self.plan_cache_misses.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),

@@ -18,12 +18,11 @@ use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
-/// Build a router + plaintext executor from the artifacts directory
-/// (trained variants + cost-model latency predictions at paper scale).
-pub fn from_artifacts(
+/// Load every trained variant from the artifacts directory:
+/// `(nl → accuracy)` metrics plus the named models.
+pub fn load_variants(
     dir: &Path,
-    cost: &crate::costmodel::OpCostModel,
-) -> Result<(Router, PlaintextExecutor)> {
+) -> Result<(BTreeMap<usize, f64>, HashMap<String, crate::stgcn::StgcnModel>)> {
     let mut acc_by_nl = BTreeMap::new();
     let mut models = HashMap::new();
     for nl in 1..=12usize {
@@ -39,7 +38,15 @@ pub fn from_artifacts(
         models.insert(format!("lingcn-nl{nl}"), model);
     }
     anyhow::ensure!(!models.is_empty(), "no model_nl*.lgt found in {dir:?}");
-    // predicted encrypted latency at paper scale per nl (3-layer family)
+    Ok((acc_by_nl, models))
+}
+
+/// Router over the trained variants, with predicted paper-scale encrypted
+/// latency per nl (3-layer family).
+fn router_from(
+    acc_by_nl: &BTreeMap<usize, f64>,
+    cost: &crate::costmodel::OpCostModel,
+) -> Router {
     let cost = *cost;
     let latency = move |nl: usize| {
         crate::costmodel::predict::predict(
@@ -52,5 +59,30 @@ pub fn from_artifacts(
         .map(|r| r.total_s)
         .unwrap_or(f64::INFINITY)
     };
-    Ok((Router::from_metrics(&acc_by_nl, latency), PlaintextExecutor { models }))
+    Router::from_metrics(acc_by_nl, latency)
+}
+
+/// Build a router + plaintext executor from the artifacts directory
+/// (trained variants + cost-model latency predictions at paper scale).
+pub fn from_artifacts(
+    dir: &Path,
+    cost: &crate::costmodel::OpCostModel,
+) -> Result<(Router, PlaintextExecutor)> {
+    let (acc_by_nl, models) = load_variants(dir)?;
+    Ok((router_from(&acc_by_nl, cost), PlaintextExecutor { models }))
+}
+
+/// Build a router + **encrypted** executor tier from the artifacts
+/// directory: real CKKS inference through cached compiled `HePlan`s
+/// (DESIGN.md S14), `threads` wide per request.
+pub fn he_from_artifacts(
+    dir: &Path,
+    cost: &crate::costmodel::OpCostModel,
+    threads: usize,
+) -> Result<(Router, crate::he_infer::HeExecutor)> {
+    let (acc_by_nl, models) = load_variants(dir)?;
+    Ok((
+        router_from(&acc_by_nl, cost),
+        crate::he_infer::HeExecutor::new(models, threads, 7),
+    ))
 }

@@ -79,8 +79,28 @@ impl Coordinator {
         max_batch: usize,
         max_wait: Duration,
     ) -> Self {
+        Self::start_with_metrics(
+            router,
+            executor,
+            Arc::new(Metrics::default()),
+            n_workers,
+            max_batch,
+            max_wait,
+        )
+    }
+
+    /// Like [`Coordinator::start`], but with a caller-provided metrics
+    /// registry — so an executor tier that reports its own counters (the
+    /// encrypted tier's plan cache) can share the registry.
+    pub fn start_with_metrics(
+        router: Router,
+        executor: Arc<dyn InferenceExecutor>,
+        metrics: Arc<Metrics>,
+        n_workers: usize,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Self {
         let router = Arc::new(router);
-        let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (dispatch_tx, dispatch_rx) = mpsc::channel::<(String, Vec<Pending<Work>>)>();
         let dispatch_rx = Arc::new(Mutex::new(dispatch_rx));

@@ -249,6 +249,7 @@ mod tests {
             cmult_limbs_sq: 6000,
             rescale: 100,
             rescale_limbs: 900,
+            ..Default::default()
         };
         let small = m.estimate(1 << 14, &counts, 1);
         let big = m.estimate(1 << 15, &counts, 1);

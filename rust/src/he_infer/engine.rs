@@ -427,6 +427,35 @@ mod tests {
     }
 
     #[test]
+    fn test_rot_right_vec_edge_cases() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        // k = 0: identity
+        assert_eq!(rot_right_vec(&v, 0), v.to_vec());
+        // k = n: full wrap, identity
+        assert_eq!(rot_right_vec(&v, v.len()), v.to_vec());
+        // k > n: reduces mod n
+        assert_eq!(rot_right_vec(&v, v.len() + 1), rot_right_vec(&v, 1));
+        assert_eq!(rot_right_vec(&v, 3 * v.len() + 2), rot_right_vec(&v, 2));
+        // single-element vector: every k is identity
+        for k in [0usize, 1, 5, 100] {
+            assert_eq!(rot_right_vec(&[7.5], k), vec![7.5]);
+        }
+    }
+
+    #[test]
+    fn test_rot_right_vec_inverts_left_rotation() {
+        // rot_right by k composed with a left rotation by k is identity —
+        // the property the BSGS mask pre-rotation relies on
+        let n = 12;
+        let v: Vec<f64> = (0..n).map(|i| (i * i) as f64).collect();
+        for k in 0..=2 * n {
+            let right = rot_right_vec(&v, k);
+            let left: Vec<f64> = (0..n).map(|i| right[(i + k) % n]).collect();
+            assert_eq!(left, v, "k={k}");
+        }
+    }
+
+    #[test]
     fn test_counting_forward_consumes_exact_levels() {
         let m = tiny();
         let layout = AmaLayout::new(8, 4, 256).unwrap();

@@ -1,0 +1,514 @@
+//! The HePlan executor and the encrypted serving tier (DESIGN.md S14).
+//!
+//! Three execution surfaces over a compiled [`HePlan`]:
+//!
+//! * [`execute_with_backend`] — generic sequential replay against any
+//!   [`HeBackend`] (the equivalence tests and the symbolic
+//!   counting/costing path);
+//! * [`PreparedPlan`] — the real serving path: every plan mask pre-encoded
+//!   to an RNS [`Plaintext`] **once**, then per-request execution over a
+//!   scoped `std::thread` worker pool that runs each wavefront's
+//!   independent ops concurrently (registers are `OnceLock`s — SSA means
+//!   each is written exactly once, so the pool needs no locks on the data
+//!   path). Results are bit-identical at any thread count because the
+//!   schedule never reorders ops that share a register chain.
+//! * [`HeExecutor`] — the coordinator's encrypted tier: implements
+//!   [`InferenceExecutor`], caching compiled plans per (model hash,
+//!   layout) and per-variant CKKS sessions, so repeat requests skip both
+//!   compilation and mask encoding (plan-cache hits are counted in the
+//!   coordinator [`Metrics`] and in the engine's `OpCounters`).
+//!
+//! Parameters note: `HeExecutor` sizes a *toy-scale* CKKS ring big enough
+//! for the model's AMA block (`allow_insecure`), the same policy as
+//! `infer --encrypted` — the serving-path mechanics (plan cache, pool,
+//! batching) are identical at paper scale, only keygen cost grows.
+
+use super::backend::HeBackend;
+use super::plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
+use crate::ama::{encrypt_clip, AmaLayout};
+use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, Evaluator, Plaintext};
+use crate::coordinator::{InferenceExecutor, Metrics};
+use crate::stgcn::StgcnModel;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+
+// ------------------------------------------------------- generic replay
+
+/// Sequentially replay a plan against any backend, materializing masks
+/// through thunks (the backend decides whether to encode them). Drives the
+/// counting backend for cost analysis and the equivalence tests.
+pub fn execute_with_backend<B: HeBackend>(
+    plan: &HePlan,
+    be: &B,
+    inputs: &[B::Ct],
+) -> Result<B::Ct> {
+    ensure!(
+        inputs.len() == plan.n_inputs,
+        "plan expects {} input ciphertexts, got {}",
+        plan.n_inputs,
+        inputs.len()
+    );
+    let top = plan.chain.top_level();
+    ensure!(
+        inputs.iter().all(|ct| be.level(ct) == top),
+        "compiled plans are level-position-dependent: every input must sit \
+         at the chain top level {top}"
+    );
+    let mut regs: Vec<Option<B::Ct>> = vec![None; plan.n_regs];
+    for (i, ct) in inputs.iter().enumerate() {
+        regs[i] = Some(ct.clone());
+    }
+    for (i, op) in plan.ops.iter().enumerate() {
+        let get = |r: u32| -> Result<&B::Ct> {
+            regs[r as usize]
+                .as_ref()
+                .ok_or_else(|| anyhow!("op {i}: register {r} not ready"))
+        };
+        let out = match *op {
+            HeOp::Rotate { src, k, .. } => be.rotate(get(src)?, k as usize),
+            HeOp::MulPlain { src, mask, .. } => {
+                let m = &plan.masks[mask as usize];
+                let thunk = || m.slots.clone();
+                be.mul_plain(get(src)?, &thunk, m.scale)
+            }
+            HeOp::AddPlain { src, mask, .. } => {
+                let m = &plan.masks[mask as usize];
+                let thunk = || m.slots.clone();
+                be.add_plain(get(src)?, &thunk)
+            }
+            HeOp::Add { a, b, .. } => be.add(get(a)?, get(b)?),
+            HeOp::Sub { a, b, .. } => be.sub(get(a)?, get(b)?),
+            HeOp::Mul { a, b, .. } => be.mul(get(a)?, get(b)?),
+            HeOp::Rescale { src, .. } => be.rescale(get(src)?),
+        };
+        regs[op.dst() as usize] = Some(out);
+    }
+    regs[plan.output as usize]
+        .take()
+        .ok_or_else(|| anyhow!("plan produced no output"))
+}
+
+// -------------------------------------------------------- prepared plan
+
+/// A plan bound to one engine: every mask encoded to an RNS plaintext at
+/// its compile-time (scale, limb count) — the compile-once artifact the
+/// serving tier caches and executes per request.
+pub struct PreparedPlan {
+    pub plan: Arc<HePlan>,
+    masks: Vec<Plaintext>,
+}
+
+impl PreparedPlan {
+    /// Pre-encode all plan masks on `engine` (the one-time cost the
+    /// interpreted engine used to pay per request).
+    pub fn new(plan: Arc<HePlan>, engine: &CkksEngine) -> Result<Self> {
+        ensure!(
+            plan.chain == PlanChain::from_ctx(&engine.ctx),
+            "plan was compiled against a different modulus chain"
+        );
+        let masks = plan
+            .masks
+            .iter()
+            .map(|m| engine.encoder.encode(&engine.ctx, &m.slots, m.scale, m.nq))
+            .collect();
+        Ok(PreparedPlan { plan, masks })
+    }
+
+    fn exec_op(
+        &self,
+        op: HeOp,
+        regs: &[OnceLock<Ciphertext>],
+        eval: &Evaluator,
+        enc: &Encoder,
+    ) -> Result<Ciphertext> {
+        let get = |r: u32| -> Result<&Ciphertext> {
+            regs[r as usize]
+                .get()
+                .ok_or_else(|| anyhow!("register {r} not ready (schedule violation)"))
+        };
+        Ok(match op {
+            HeOp::Rotate { src, k, .. } => eval.rotate(enc, get(src)?, k as usize),
+            HeOp::MulPlain { src, mask, .. } => eval.mul_plain(get(src)?, &self.masks[mask as usize]),
+            HeOp::AddPlain { src, mask, .. } => eval.add_plain(get(src)?, &self.masks[mask as usize]),
+            HeOp::Add { a, b, .. } => eval.add(get(a)?, get(b)?),
+            HeOp::Sub { a, b, .. } => eval.sub(get(a)?, get(b)?),
+            HeOp::Mul { a, b, .. } => eval.mul(get(a)?, get(b)?),
+            HeOp::Rescale { src, .. } => eval.rescale(get(src)?),
+        })
+    }
+
+    /// Execute the plan on real ciphertexts. `threads > 1` fans each
+    /// wavefront's ops out over a scoped worker pool (one OS thread per
+    /// worker for the whole request, waves separated by a barrier).
+    pub fn execute(
+        &self,
+        engine: &CkksEngine,
+        inputs: &[Ciphertext],
+        threads: usize,
+    ) -> Result<Ciphertext> {
+        let plan = &self.plan;
+        ensure!(
+            inputs.len() == plan.n_inputs,
+            "plan expects {} input ciphertexts, got {}",
+            plan.n_inputs,
+            inputs.len()
+        );
+        // masks are pre-encoded and rescale positions fixed for inputs at
+        // the chain top, so (unlike the interpreter) a plan cannot absorb
+        // inputs at other levels — reject instead of panicking mid-plan
+        let top = plan.chain.top_level();
+        ensure!(
+            inputs.iter().all(|ct| ct.level() == top),
+            "compiled plans are level-position-dependent: every input must \
+             sit at the chain top level {top}"
+        );
+        let regs: Vec<OnceLock<Ciphertext>> =
+            (0..plan.n_regs).map(|_| OnceLock::new()).collect();
+        for (i, ct) in inputs.iter().enumerate() {
+            let _ = regs[i].set(ct.clone());
+        }
+        let eval = &engine.eval;
+        let enc = &engine.encoder;
+        let threads = threads.max(1);
+        if threads == 1 {
+            for wave in &plan.waves {
+                for &oi in wave {
+                    let op = plan.ops[oi as usize];
+                    let out = self.exec_op(op, &regs, eval, enc)?;
+                    regs[op.dst() as usize]
+                        .set(out)
+                        .map_err(|_| anyhow!("register written twice"))?;
+                }
+            }
+        } else {
+            let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            let barrier = Barrier::new(threads);
+            std::thread::scope(|s| {
+                for tid in 0..threads {
+                    let (regs, barrier, first_err) = (&regs, &barrier, &first_err);
+                    s.spawn(move || {
+                        for wave in &plan.waves {
+                            for (j, &oi) in wave.iter().enumerate() {
+                                if j % threads != tid {
+                                    continue;
+                                }
+                                let op = plan.ops[oi as usize];
+                                // catch panics (evaluator internals use
+                                // assert!): a worker that dies before
+                                // barrier.wait() would deadlock the pool
+                                let result = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| {
+                                        self.exec_op(op, regs, eval, enc)
+                                    }),
+                                );
+                                match result {
+                                    Ok(Ok(out)) => {
+                                        let _ = regs[op.dst() as usize].set(out);
+                                        eval.counters
+                                            .pool_tasks
+                                            .fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Ok(Err(e)) => {
+                                        let mut g = first_err.lock().unwrap();
+                                        g.get_or_insert(e);
+                                    }
+                                    Err(panic) => {
+                                        let msg = panic
+                                            .downcast_ref::<&str>()
+                                            .map(|s| s.to_string())
+                                            .or_else(|| {
+                                                panic.downcast_ref::<String>().cloned()
+                                            })
+                                            .unwrap_or_else(|| "non-string panic".into());
+                                        let mut g = first_err.lock().unwrap();
+                                        g.get_or_insert(anyhow!(
+                                            "plan op {oi} panicked: {msg}"
+                                        ));
+                                    }
+                                }
+                            }
+                            // all of this wave's registers are written
+                            // before anyone starts the next wave
+                            barrier.wait();
+                        }
+                    });
+                }
+            });
+            if let Some(e) = first_err.into_inner().unwrap() {
+                return Err(e);
+            }
+        }
+        regs[plan.output as usize]
+            .get()
+            .cloned()
+            .ok_or_else(|| anyhow!("plan produced no output"))
+    }
+}
+
+// --------------------------------------------------------- serving tier
+
+/// Plan-cache key: everything that determines the compiled dataflow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub model_hash: u64,
+    pub t: usize,
+    pub c_max: usize,
+    pub slots: usize,
+    pub use_bsgs: bool,
+    pub fuse_activations: bool,
+}
+
+impl PlanKey {
+    pub fn new(model: &StgcnModel, layout: &AmaLayout, opts: PlanOptions) -> Self {
+        PlanKey {
+            model_hash: model.content_hash(),
+            t: layout.t,
+            c_max: layout.c_max,
+            slots: layout.slots,
+            use_bsgs: opts.use_bsgs,
+            fuse_activations: opts.fuse_activations,
+        }
+    }
+}
+
+/// One variant's live serving state: engine (keys for exactly the plan's
+/// rotations) + the prepared plan.
+pub struct HeSession {
+    pub model: StgcnModel,
+    pub layout: AmaLayout,
+    pub engine: CkksEngine,
+    pub prepared: PreparedPlan,
+}
+
+/// Toy-scale CKKS parameters sized to the model's AMA block (serving-demo
+/// policy, same as `infer --encrypted`).
+fn params_for(model: &StgcnModel, levels: usize) -> CkksParams {
+    let block = model.c_max().max(model.num_classes()) * model.t;
+    let mut slots = 1usize << 10;
+    while slots < block {
+        slots <<= 1;
+    }
+    CkksParams {
+        n: slots * 2,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    }
+}
+
+/// The geometry a session is built around — computed in exactly one place
+/// so the plan-cache key probe and the session build can never diverge.
+fn geometry(model: &StgcnModel, opts: PlanOptions) -> Result<(AmaLayout, CkksParams)> {
+    let probe_params = params_for(model, 1);
+    let layout = AmaLayout::new(
+        model.t,
+        model.c_max().max(model.num_classes()),
+        probe_params.n / 2,
+    )?;
+    let mut probe = super::HeStgcn::new(model, layout)?;
+    probe.use_bsgs = opts.use_bsgs;
+    probe.fuse_activations = opts.fuse_activations;
+    let levels = probe.levels_needed()?;
+    Ok((layout, params_for(model, levels)))
+}
+
+impl HeSession {
+    /// Build keys + prepared plan for `model`, reusing `cached_plan` when
+    /// it matches this session's chain (cross-variant plan sharing).
+    pub fn new(
+        model: StgcnModel,
+        opts: PlanOptions,
+        seed: u64,
+        cached_plan: Option<Arc<HePlan>>,
+    ) -> Result<(Self, Arc<HePlan>, bool)> {
+        let (layout, params) = geometry(&model, opts)?;
+        Self::with_geometry(model, layout, params, opts, seed, cached_plan)
+    }
+
+    /// Build against a precomputed [`geometry`] result (the executor path,
+    /// which already derived it for the plan-cache key).
+    fn with_geometry(
+        model: StgcnModel,
+        layout: AmaLayout,
+        params: CkksParams,
+        opts: PlanOptions,
+        seed: u64,
+        cached_plan: Option<Arc<HePlan>>,
+    ) -> Result<(Self, Arc<HePlan>, bool)> {
+        let ctx = params.build()?;
+        let chain = PlanChain::from_ctx(&ctx);
+        let (plan, was_cached) = match cached_plan {
+            Some(p) if p.chain == chain && p.layout == layout => (p, true),
+            _ => (
+                Arc::new(compile(&model, layout, &chain, opts)?),
+                false,
+            ),
+        };
+        let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
+        let prepared = PreparedPlan::new(plan.clone(), &engine)?;
+        Ok((
+            HeSession {
+                model,
+                layout,
+                engine,
+                prepared,
+            },
+            plan,
+            was_cached,
+        ))
+    }
+
+    /// Encrypt → execute the compiled plan → decrypt logits.
+    pub fn infer(&self, clip: &[f64], threads: usize) -> Result<Vec<f64>> {
+        let plan = &self.prepared.plan;
+        let input = encrypt_clip(
+            &self.engine,
+            &self.layout,
+            clip,
+            self.model.v(),
+            self.model.c_in,
+            plan.levels_needed + 1,
+        )?;
+        let out = self.prepared.execute(&self.engine, &input.cts, threads)?;
+        let slots = self.engine.decrypt(&out);
+        Ok(plan.extract_logits(&slots))
+    }
+}
+
+/// The encrypted executor tier for the serving coordinator: per-variant
+/// sessions built lazily on first request, compiled plans cached across
+/// variants by [`PlanKey`].
+pub struct HeExecutor {
+    pub threads: usize,
+    seed: u64,
+    opts: PlanOptions,
+    models: HashMap<String, StgcnModel>,
+    sessions: Mutex<HashMap<String, Arc<HeSession>>>,
+    plans: Mutex<HashMap<PlanKey, Arc<HePlan>>>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl HeExecutor {
+    pub fn new(models: HashMap<String, StgcnModel>, threads: usize, seed: u64) -> Self {
+        HeExecutor {
+            threads: threads.max(1),
+            seed,
+            opts: PlanOptions::default(),
+            models,
+            sessions: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
+            metrics: None,
+        }
+    }
+
+    /// Mirror plan-cache hits/misses into the coordinator metrics (call
+    /// before handing the executor to `Coordinator::start_with_metrics`).
+    pub fn set_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
+    }
+
+    fn count_cache(&self, session: &HeSession, hit: bool) {
+        let c = &session.engine.eval.counters;
+        if hit {
+            c.plan_cache_hit.fetch_add(1, Ordering::Relaxed);
+        } else {
+            c.plan_cache_miss.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(m) = &self.metrics {
+            let field = if hit { &m.plan_cache_hits } else { &m.plan_cache_misses };
+            field.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Get-or-build the session for `variant`. A request served from an
+    /// existing session (or a plan shared by another variant) is a
+    /// plan-cache hit; a request that forces `compile` is a miss.
+    fn session(&self, variant: &str) -> Result<(Arc<HeSession>, bool)> {
+        if let Some(s) = self.sessions.lock().unwrap().get(variant) {
+            return Ok((s.clone(), true));
+        }
+        // Build outside the lock so a cold start for one variant never
+        // blocks workers serving already-built variants. Two concurrent
+        // first requests for the same variant may duplicate the build;
+        // the first insert wins and the duplicate is dropped.
+        let model = self
+            .models
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant}"))?
+            .clone();
+        let (layout, params) = geometry(&model, self.opts)?;
+        let key_probe = PlanKey::new(&model, &layout, self.opts);
+        let cached = self.plans.lock().unwrap().get(&key_probe).cloned();
+        let (session, plan, was_cached) =
+            HeSession::with_geometry(model, layout, params, self.opts, self.seed, cached)?;
+        if !was_cached {
+            self.plans.lock().unwrap().entry(key_probe).or_insert(plan);
+        }
+        let session = {
+            let mut sessions = self.sessions.lock().unwrap();
+            sessions
+                .entry(variant.to_string())
+                .or_insert_with(|| Arc::new(session))
+                .clone()
+        };
+        Ok((session, was_cached))
+    }
+}
+
+impl InferenceExecutor for HeExecutor {
+    fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
+        let (session, hit) = self.session(variant)?;
+        self.count_cache(&session, hit);
+        session.infer(clip, self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn tiny() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
+    }
+
+    #[test]
+    fn test_he_executor_serves_and_caches_plans() {
+        let model = tiny();
+        let want = {
+            let x = clip(&model);
+            model.forward(&x).unwrap()
+        };
+        let mut models = HashMap::new();
+        models.insert("v".to_string(), model.clone());
+        let mut ex = HeExecutor::new(models, 2, 7);
+        let metrics = Arc::new(Metrics::default());
+        ex.set_metrics(metrics.clone());
+
+        let x = clip(&model);
+        let got1 = ex.infer("v", &x).unwrap();
+        let got2 = ex.infer("v", &x).unwrap();
+        assert_eq!(got1, got2, "repeat requests must be deterministic");
+        assert_eq!(metrics.plan_cache_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.plan_cache_hits.load(Ordering::Relaxed), 1);
+        // encrypted logits match the plaintext decision
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&got1), argmax(&want));
+        assert!(ex.infer("missing", &x).is_err());
+    }
+
+    fn clip(model: &StgcnModel) -> Vec<f64> {
+        let n = model.v() * model.c_in * model.t;
+        (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+    }
+}

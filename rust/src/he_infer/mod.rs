@@ -1,44 +1,64 @@
 //! Homomorphically-encrypted STGCN inference (the paper's Section 3.4 +
-//! Appendix A; DESIGN.md S10–S11): level planning (Table 6), the AMA
-//! execution engine with node-wise operator fusion, and the backend
+//! Appendix A; DESIGN.md S10–S11, S14): level planning (Table 6), the AMA
+//! execution engine with node-wise operator fusion, the backend
 //! abstraction that lets the same engine run on real CKKS ciphertexts or
-//! as a symbolic op counter.
+//! as a symbolic op counter, and the compile-once **HePlan** path — a
+//! `plan::compile` pass that turns the engine's interpreted walk into a
+//! serializable IR executed per request by `exec`'s limb-/op-parallel
+//! executor with pre-encoded masks.
 
 pub mod backend;
 pub mod engine;
+pub mod exec;
 pub mod level_plan;
+pub mod plan;
 
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
 pub use engine::HeStgcn;
+pub use exec::{execute_with_backend, HeExecutor, HeSession, PlanKey, PreparedPlan};
 pub use level_plan::{HePlanParams, Method, VariantShape};
+pub use plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
 
 use crate::ama::{encrypt_clip, AmaLayout};
 use crate::ckks::{CkksEngine, CkksParams};
 use crate::stgcn::StgcnModel;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// End-to-end private inference service state for one model variant:
-/// CKKS engine (keys for exactly the rotations the plan needs) + compiled
-/// HE executor. This is what the coordinator's workers hold.
+/// CKKS engine (keys for exactly the rotations the compiled plan needs) +
+/// the prepared plan with pre-encoded masks. This is what the
+/// coordinator's workers hold. The compiled plan is the default execution
+/// path; [`PrivateInferenceSession::infer_interpreted`] keeps the
+/// original interpreted walk for ablations and the equivalence tests.
 pub struct PrivateInferenceSession {
     pub engine: CkksEngine,
     pub layout: AmaLayout,
     pub levels: usize,
+    /// The compiled execution plan (also the source of `levels_needed`
+    /// and `required_rotations`).
+    pub plan: Arc<HePlan>,
+    prepared: PreparedPlan,
 }
 
 impl PrivateInferenceSession {
-    /// Build keys and layout for `model` under `params`.
+    /// Compile the plan for `model` under `params`, then build keys for
+    /// exactly the plan's rotations and pre-encode its masks.
     pub fn new(model: &StgcnModel, params: CkksParams, seed: u64) -> Result<Self> {
         let slots = params.n / 2;
         let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), slots)?;
-        let he = HeStgcn::new(model, layout)?;
-        let rotations = he.required_rotations();
+        let ctx = params.build()?;
+        let chain = PlanChain::from_ctx(&ctx);
+        let plan = Arc::new(plan::compile(model, layout, &chain, PlanOptions::default())?);
         let levels = params.levels;
-        let engine = CkksEngine::new(params, &rotations, seed)?;
+        let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
+        let prepared = PreparedPlan::new(plan.clone(), &engine)?;
         Ok(PrivateInferenceSession {
             engine,
             layout,
             levels,
+            plan,
+            prepared,
         })
     }
 
@@ -59,8 +79,29 @@ impl PrivateInferenceSession {
         .cts)
     }
 
-    /// Server side: run the encrypted forward.
+    /// Server side: run the encrypted forward through the compiled plan
+    /// (single-threaded; see [`PrivateInferenceSession::infer_parallel`]).
     pub fn infer(
+        &self,
+        _model: &StgcnModel,
+        input: &[crate::ckks::Ciphertext],
+    ) -> Result<crate::ckks::Ciphertext> {
+        self.prepared.execute(&self.engine, input, 1)
+    }
+
+    /// Compiled execution over the wavefront worker pool.
+    pub fn infer_parallel(
+        &self,
+        input: &[crate::ckks::Ciphertext],
+        threads: usize,
+    ) -> Result<crate::ckks::Ciphertext> {
+        self.prepared.execute(&self.engine, input, threads)
+    }
+
+    /// The original interpreted walk (re-derives masks/scales per request)
+    /// — the refactor's reference path, kept for equivalence tests and
+    /// ablation runs.
+    pub fn infer_interpreted(
         &self,
         model: &StgcnModel,
         input: &[crate::ckks::Ciphertext],
@@ -71,9 +112,8 @@ impl PrivateInferenceSession {
     }
 
     /// Client side: decrypt the logits ciphertext.
-    pub fn decrypt_logits(&self, model: &StgcnModel, ct: &crate::ckks::Ciphertext) -> Vec<f64> {
+    pub fn decrypt_logits(&self, _model: &StgcnModel, ct: &crate::ckks::Ciphertext) -> Vec<f64> {
         let slots = self.engine.decrypt(ct);
-        let he = HeStgcn::new(model, self.layout).expect("layout validated at build");
-        he.extract_logits(&slots)
+        self.plan.extract_logits(&slots)
     }
 }

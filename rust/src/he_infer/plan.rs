@@ -1,0 +1,927 @@
+//! The **HePlan IR**: a compiled, serializable HE execution plan
+//! (DESIGN.md S14).
+//!
+//! The interpreted engine (`engine.rs`) interleaves *deciding* what to do
+//! (mask construction, `p_scale = Δ·q_ℓ / scale` derivation, level
+//! accounting) with *doing* it — per request. This module splits the two:
+//! [`compile`] runs the engine's forward walk **once** against a symbolic
+//! recording backend ([`PlanBuilder`]), performing all scale management and
+//! level accounting statically and materializing every plaintext mask, and
+//! emits a flat SSA op list plus a wavefront schedule. The executor
+//! (`exec.rs`) then replays the plan against real ciphertexts with masks
+//! pre-encoded — `compile → validate → execute`.
+//!
+//! Because the plan is a trace of the *same* engine walk both backends run,
+//! compiled execution is bit-identical to interpreted execution (covered by
+//! `rust/tests/plan_equivalence.rs`), and the plan's static [`OpCounts`]
+//! are exactly the interpreter's — so the cost model (DESIGN.md S12) can be
+//! driven from compiled plans directly. `levels_needed` and
+//! `required_rotations` — previously interpreter methods — are properties
+//! of the compiled plan.
+
+use super::backend::{HeBackend, MaskThunk};
+use super::engine::HeStgcn;
+use crate::ama::AmaLayout;
+use crate::ckks::{CkksContext, OpCounters, OpCounts};
+use crate::stgcn::StgcnModel;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ----------------------------------------------------------------- chain
+
+/// The modulus-chain view a plan is compiled against: everything the
+/// static scale manager needs from a parameter set. A plan compiled
+/// against a chain executes bit-identically only on engines whose chain
+/// matches (the executor checks).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanChain {
+    /// Default encoding scale Δ.
+    pub delta: f64,
+    /// `moduli[level]` (as f64) is the prime a rescale at `level` divides
+    /// by — index-aligned with `CkksContext::moduli`.
+    pub moduli: Vec<f64>,
+}
+
+impl PlanChain {
+    /// Idealized chain where every prime is exactly Δ — the chain the
+    /// symbolic [`CountingBackend`](super::backend::CountingBackend)
+    /// assumes, for op-count planning at paper-scale parameters.
+    pub fn ideal(levels: usize, scale_bits: u32) -> Self {
+        let delta = 2f64.powi(scale_bits as i32);
+        PlanChain {
+            delta,
+            moduli: vec![delta; levels + 1],
+        }
+    }
+
+    /// The real chain of a built CKKS context.
+    pub fn from_ctx(ctx: &CkksContext) -> Self {
+        PlanChain {
+            delta: ctx.scale,
+            moduli: ctx.moduli.iter().map(|&q| q as f64).collect(),
+        }
+    }
+
+    /// Level of a fresh ciphertext on this chain.
+    pub fn top_level(&self) -> usize {
+        self.moduli.len() - 1
+    }
+}
+
+// ------------------------------------------------------------------- ops
+
+/// One pre-encoded plaintext operand: slot values plus the statically
+/// derived encoding scale and the limb count of the consuming ciphertext.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanMask {
+    pub slots: Vec<f64>,
+    /// PMult: the compile-time `p_scale = Δ·q_ℓ / scale`; AddPlain: the
+    /// consuming ciphertext's scale.
+    pub scale: f64,
+    /// Limb count to encode at (consumer's `level + 1`).
+    pub nq: usize,
+}
+
+/// One HE instruction over virtual ciphertext registers (SSA: every `dst`
+/// is written exactly once; registers `0..n_inputs` are the inputs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeOp {
+    /// `dst = Rot(src, k)` — left rotation, `0 < k < slots` (rotations by
+    /// 0 are elided at compile time).
+    Rotate { src: u32, k: u32, dst: u32 },
+    /// `dst = src ⊙ masks[mask]` (PMult with a pre-encoded mask).
+    MulPlain { src: u32, mask: u32, dst: u32 },
+    /// `dst = src + masks[mask]`.
+    AddPlain { src: u32, mask: u32, dst: u32 },
+    Add { a: u32, b: u32, dst: u32 },
+    Sub { a: u32, b: u32, dst: u32 },
+    /// Ciphertext-ciphertext multiplication (+relinearization).
+    Mul { a: u32, b: u32, dst: u32 },
+    Rescale { src: u32, dst: u32 },
+}
+
+impl HeOp {
+    pub fn dst(&self) -> u32 {
+        match *self {
+            HeOp::Rotate { dst, .. }
+            | HeOp::MulPlain { dst, .. }
+            | HeOp::AddPlain { dst, .. }
+            | HeOp::Add { dst, .. }
+            | HeOp::Sub { dst, .. }
+            | HeOp::Mul { dst, .. }
+            | HeOp::Rescale { dst, .. } => dst,
+        }
+    }
+
+    /// Source registers (second slot used by the two-ciphertext ops).
+    pub fn sources(&self) -> (u32, Option<u32>) {
+        match *self {
+            HeOp::Rotate { src, .. }
+            | HeOp::MulPlain { src, .. }
+            | HeOp::AddPlain { src, .. }
+            | HeOp::Rescale { src, .. } => (src, None),
+            HeOp::Add { a, b, .. } | HeOp::Sub { a, b, .. } | HeOp::Mul { a, b, .. } => {
+                (a, Some(b))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ plan
+
+/// A compiled HE execution plan for one (model, layout, chain, options)
+/// tuple: flat SSA ops in trace order, a wavefront schedule for the
+/// parallel executor, interned masks, and static accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HePlan {
+    pub layout: AmaLayout,
+    pub chain: PlanChain,
+    /// Ops in trace (interpreter) order.
+    pub ops: Vec<HeOp>,
+    /// Wavefront schedule: indices into `ops`, grouped so every op's
+    /// sources are produced by an earlier wave — ops within one wave are
+    /// mutually independent and may run concurrently.
+    pub waves: Vec<Vec<u32>>,
+    pub masks: Vec<PlanMask>,
+    /// Input registers `0..n_inputs` (one ciphertext per graph node).
+    pub n_inputs: usize,
+    pub n_regs: usize,
+    /// Register holding the logits ciphertext.
+    pub output: u32,
+    /// Multiplicative depth the plan consumes (was `HeStgcn::levels_needed`).
+    pub levels_needed: usize,
+    pub num_classes: usize,
+    /// Content hash of the compiled model (plan-cache key half).
+    pub model_hash: u64,
+    /// Static op counts of one execution — identical to what the
+    /// interpreted engine tallies (drives the cost model, DESIGN.md S12).
+    pub counts: OpCounts,
+}
+
+/// Engine toggles baked into a plan (the ablation axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanOptions {
+    pub use_bsgs: bool,
+    pub fuse_activations: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions {
+            use_bsgs: true,
+            fuse_activations: true,
+        }
+    }
+}
+
+/// Compile the encrypted forward pass of `model` under `layout` and
+/// `chain` into a [`HePlan`]: one interpreted walk over the symbolic
+/// recording backend, then wavefront scheduling.
+pub fn compile(
+    model: &StgcnModel,
+    layout: AmaLayout,
+    chain: &PlanChain,
+    opts: PlanOptions,
+) -> Result<HePlan> {
+    let mut he = HeStgcn::new(model, layout)?;
+    he.use_bsgs = opts.use_bsgs;
+    he.fuse_activations = opts.fuse_activations;
+    let levels_needed = he.levels_needed()?;
+    ensure!(
+        chain.top_level() >= levels_needed,
+        "chain depth {} below the plan's required depth {levels_needed}",
+        chain.top_level()
+    );
+    let builder = PlanBuilder::new(chain.clone(), layout.slots);
+    let inputs: Vec<PlanCt> = (0..model.v()).map(|_| builder.fresh_input()).collect();
+    let out = he.forward(&builder, &inputs)?;
+    builder.finish(model, layout, levels_needed, out)
+}
+
+impl HePlan {
+    /// Rotation steps whose Galois keys an executing engine must hold —
+    /// exactly the steps the plan uses (was `HeStgcn::required_rotations`,
+    /// which over-approximated from the layout).
+    pub fn required_rotations(&self) -> Vec<usize> {
+        let mut steps = BTreeSet::new();
+        for op in &self.ops {
+            if let HeOp::Rotate { k, .. } = *op {
+                steps.insert(k as usize);
+            }
+        }
+        steps.into_iter().collect()
+    }
+
+    /// Read the class logits out of a decrypted logits-slot vector.
+    pub fn extract_logits(&self, slots: &[f64]) -> Vec<f64> {
+        (0..self.num_classes)
+            .map(|m| slots[m * self.layout.t])
+            .collect()
+    }
+
+    /// Static plan validation: SSA discipline, schedule safety (every op
+    /// scheduled once, sources ready before its wave), level/scale replay
+    /// (rescales never underflow, adds see matching scales, masks encoded
+    /// at their consumer's limb count), and op-count integrity.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n_inputs >= 1 && self.n_inputs <= self.n_regs);
+        ensure!((self.output as usize) < self.n_regs, "output out of range");
+        let top = self.chain.top_level();
+        ensure!(top >= self.levels_needed, "chain shorter than plan depth");
+
+        // --- linear replay: SSA + levels + scales + recount
+        let mut level: Vec<Option<usize>> = vec![None; self.n_regs];
+        let mut scale: Vec<f64> = vec![0.0; self.n_regs];
+        for r in 0..self.n_inputs {
+            level[r] = Some(top);
+            scale[r] = self.chain.delta;
+        }
+        let recount = OpCounters::default();
+        let bump = |c: &AtomicU64, l: &AtomicU64, lvl: usize| {
+            c.fetch_add(1, Ordering::Relaxed);
+            l.fetch_add(lvl as u64 + 1, Ordering::Relaxed);
+        };
+        let bump_sq = |sq: &AtomicU64, lvl: usize| {
+            let l = lvl as u64 + 1;
+            sq.fetch_add(l * l, Ordering::Relaxed);
+        };
+        for (i, op) in self.ops.iter().enumerate() {
+            let (s0, s1) = op.sources();
+            let read = |r: u32| -> Result<(usize, f64)> {
+                let ri = r as usize;
+                ensure!(ri < self.n_regs, "op {i}: register {r} out of range");
+                let l = level[ri].ok_or_else(|| anyhow!("op {i}: register {r} read before write"))?;
+                Ok((l, scale[ri]))
+            };
+            let (l0, sc0) = read(s0)?;
+            let (out_level, out_scale) = match *op {
+                HeOp::Rotate { k, .. } => {
+                    ensure!(
+                        k > 0 && (k as usize) < self.layout.slots,
+                        "op {i}: rotation step {k} outside (0, slots)"
+                    );
+                    bump(&recount.rot, &recount.rot_limbs, l0);
+                    bump_sq(&recount.rot_limbs_sq, l0);
+                    (l0, sc0)
+                }
+                HeOp::MulPlain { mask, .. } => {
+                    let m = self
+                        .masks
+                        .get(mask as usize)
+                        .ok_or_else(|| anyhow!("op {i}: mask {mask} out of range"))?;
+                    ensure!(m.nq == l0 + 1, "op {i}: mask encoded at nq {} for level {l0}", m.nq);
+                    bump(&recount.pmult, &recount.pmult_limbs, l0);
+                    (l0, sc0 * m.scale)
+                }
+                HeOp::AddPlain { mask, .. } => {
+                    let m = self
+                        .masks
+                        .get(mask as usize)
+                        .ok_or_else(|| anyhow!("op {i}: mask {mask} out of range"))?;
+                    ensure!(m.nq == l0 + 1, "op {i}: mask encoded at nq {} for level {l0}", m.nq);
+                    ensure!(
+                        (m.scale - sc0).abs() / sc0 < 1e-6,
+                        "op {i}: add_plain scale mismatch"
+                    );
+                    bump(&recount.add, &recount.add_limbs, l0);
+                    (l0, sc0)
+                }
+                HeOp::Add { b, .. } | HeOp::Sub { b, .. } => {
+                    let (l1, sc1) = read(b)?;
+                    ensure!(
+                        (sc0 - sc1).abs() / sc0 < 1e-6,
+                        "op {i}: add/sub scale mismatch {sc0} vs {sc1}"
+                    );
+                    let l = l0.min(l1);
+                    bump(&recount.add, &recount.add_limbs, l);
+                    (l, sc0)
+                }
+                HeOp::Mul { b, .. } => {
+                    let (l1, sc1) = read(b)?;
+                    let l = l0.min(l1);
+                    bump(&recount.cmult, &recount.cmult_limbs, l);
+                    bump_sq(&recount.cmult_limbs_sq, l);
+                    (l, sc0 * sc1)
+                }
+                HeOp::Rescale { .. } => {
+                    ensure!(l0 > 0, "op {i}: rescale below level 0");
+                    bump(&recount.rescale, &recount.rescale_limbs, l0);
+                    (l0 - 1, sc0 / self.chain.moduli[l0])
+                }
+            };
+            let d = op.dst() as usize;
+            ensure!(d < self.n_regs, "op {i}: dst out of range");
+            ensure!(d >= self.n_inputs, "op {i}: op writes an input register");
+            ensure!(level[d].is_none(), "op {i}: register {d} written twice");
+            level[d] = Some(out_level);
+            scale[d] = out_scale;
+        }
+        let out_level =
+            level[self.output as usize].ok_or_else(|| anyhow!("output register never written"))?;
+        ensure!(
+            top - out_level == self.levels_needed,
+            "plan consumed {} levels, declared {}",
+            top - out_level,
+            self.levels_needed
+        );
+        ensure!(
+            recount.snapshot() == self.counts,
+            "static op counts out of sync with the op list"
+        );
+
+        // --- schedule safety: the waves must be executable in parallel
+        let mut ready = vec![false; self.n_regs];
+        for r in ready.iter_mut().take(self.n_inputs) {
+            *r = true;
+        }
+        let mut seen = vec![false; self.ops.len()];
+        for (w, wave) in self.waves.iter().enumerate() {
+            let mut produced = Vec::with_capacity(wave.len());
+            for &oi in wave {
+                let op = self
+                    .ops
+                    .get(oi as usize)
+                    .ok_or_else(|| anyhow!("wave {w}: op index {oi} out of range"))?;
+                ensure!(!seen[oi as usize], "wave {w}: op {oi} scheduled twice");
+                seen[oi as usize] = true;
+                let (s0, s1) = op.sources();
+                ensure!(ready[s0 as usize], "wave {w}: op {oi} reads unready register {s0}");
+                if let Some(s1) = s1 {
+                    ensure!(ready[s1 as usize], "wave {w}: op {oi} reads unready register {s1}");
+                }
+                produced.push(op.dst() as usize);
+            }
+            for d in produced {
+                ready[d] = true;
+            }
+        }
+        ensure!(seen.iter().all(|&s| s), "schedule misses some ops");
+        ensure!(ready[self.output as usize], "schedule never produces the output");
+        Ok(())
+    }
+
+    // ------------------------------------------------------ serialization
+
+    /// Serialize to a line-based text format (f64s as exact bit patterns).
+    /// The wavefront schedule is recomputed on load, not stored.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("heplan v1\n");
+        s.push_str(&format!(
+            "layout {} {} {}\n",
+            self.layout.t, self.layout.c_max, self.layout.slots
+        ));
+        s.push_str(&format!("chain {:016x} {}", self.chain.delta.to_bits(), self.chain.moduli.len()));
+        for m in &self.chain.moduli {
+            s.push_str(&format!(" {:016x}", m.to_bits()));
+        }
+        s.push('\n');
+        s.push_str(&format!(
+            "meta {} {} {} {} {} {:016x}\n",
+            self.n_inputs, self.n_regs, self.output, self.levels_needed, self.num_classes,
+            self.model_hash
+        ));
+        s.push_str("counts");
+        for v in self.counts.to_array() {
+            s.push_str(&format!(" {v}"));
+        }
+        s.push('\n');
+        for m in &self.masks {
+            s.push_str(&format!("mask {} {:016x} {}", m.nq, m.scale.to_bits(), m.slots.len()));
+            for v in &m.slots {
+                s.push_str(&format!(" {:016x}", v.to_bits()));
+            }
+            s.push('\n');
+        }
+        for op in &self.ops {
+            let line = match *op {
+                HeOp::Rotate { src, k, dst } => format!("op rot {src} {k} {dst}"),
+                HeOp::MulPlain { src, mask, dst } => format!("op pmul {src} {mask} {dst}"),
+                HeOp::AddPlain { src, mask, dst } => format!("op padd {src} {mask} {dst}"),
+                HeOp::Add { a, b, dst } => format!("op add {a} {b} {dst}"),
+                HeOp::Sub { a, b, dst } => format!("op sub {a} {b} {dst}"),
+                HeOp::Mul { a, b, dst } => format!("op mul {a} {b} {dst}"),
+                HeOp::Rescale { src, dst } => format!("op rescale {src} {dst}"),
+            };
+            s.push_str(&line);
+            s.push('\n');
+        }
+        s.push_str("end\n");
+        s
+    }
+
+    /// Parse the [`HePlan::to_text`] format and re-derive the schedule.
+    pub fn from_text(text: &str) -> Result<HePlan> {
+        fn f64_bits(tok: &str) -> Result<f64> {
+            Ok(f64::from_bits(u64::from_str_radix(tok, 16).context("bad f64 bits")?))
+        }
+        let mut lines = text.lines();
+        ensure!(lines.next() == Some("heplan v1"), "bad plan header");
+        let mut layout: Option<AmaLayout> = None;
+        let mut chain: Option<PlanChain> = None;
+        let mut meta: Option<(usize, usize, u32, usize, usize, u64)> = None;
+        let mut counts: Option<OpCounts> = None;
+        let mut masks = Vec::new();
+        let mut ops = Vec::new();
+        let mut saw_end = false;
+        for line in lines {
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks.first().copied() {
+                Some("layout") => {
+                    ensure!(toks.len() == 4, "bad layout line");
+                    layout = Some(AmaLayout::new(
+                        toks[1].parse()?,
+                        toks[2].parse()?,
+                        toks[3].parse()?,
+                    )?);
+                }
+                Some("chain") => {
+                    ensure!(toks.len() >= 3, "bad chain line");
+                    let delta = f64_bits(toks[1])?;
+                    let n: usize = toks[2].parse()?;
+                    ensure!(toks.len() == 3 + n, "chain length mismatch");
+                    let moduli = toks[3..].iter().map(|t| f64_bits(t)).collect::<Result<_>>()?;
+                    chain = Some(PlanChain { delta, moduli });
+                }
+                Some("meta") => {
+                    ensure!(toks.len() == 7, "bad meta line");
+                    meta = Some((
+                        toks[1].parse()?,
+                        toks[2].parse()?,
+                        toks[3].parse()?,
+                        toks[4].parse()?,
+                        toks[5].parse()?,
+                        u64::from_str_radix(toks[6], 16)?,
+                    ));
+                }
+                Some("counts") => {
+                    let vals = toks[1..]
+                        .iter()
+                        .map(|t| t.parse::<u64>().map_err(anyhow::Error::from))
+                        .collect::<Result<Vec<u64>>>()?;
+                    counts = Some(
+                        OpCounts::from_array(&vals)
+                            .ok_or_else(|| anyhow!("counts arity mismatch"))?,
+                    );
+                }
+                Some("mask") => {
+                    ensure!(toks.len() >= 4, "bad mask line");
+                    let nq: usize = toks[1].parse()?;
+                    let scale = f64_bits(toks[2])?;
+                    let len: usize = toks[3].parse()?;
+                    ensure!(toks.len() == 4 + len, "mask length mismatch");
+                    let slots = toks[4..].iter().map(|t| f64_bits(t)).collect::<Result<_>>()?;
+                    masks.push(PlanMask { slots, scale, nq });
+                }
+                Some("op") => {
+                    ensure!(toks.len() >= 4, "bad op line");
+                    let p = |i: usize| -> Result<u32> {
+                        Ok(toks.get(i).ok_or_else(|| anyhow!("short op line"))?.parse()?)
+                    };
+                    let op = match toks[1] {
+                        "rot" => HeOp::Rotate { src: p(2)?, k: p(3)?, dst: p(4)? },
+                        "pmul" => HeOp::MulPlain { src: p(2)?, mask: p(3)?, dst: p(4)? },
+                        "padd" => HeOp::AddPlain { src: p(2)?, mask: p(3)?, dst: p(4)? },
+                        "add" => HeOp::Add { a: p(2)?, b: p(3)?, dst: p(4)? },
+                        "sub" => HeOp::Sub { a: p(2)?, b: p(3)?, dst: p(4)? },
+                        "mul" => HeOp::Mul { a: p(2)?, b: p(3)?, dst: p(4)? },
+                        "rescale" => HeOp::Rescale { src: p(2)?, dst: p(3)? },
+                        other => bail!("unknown op kind {other}"),
+                    };
+                    ops.push(op);
+                }
+                Some("end") => saw_end = true,
+                Some(other) => bail!("unknown plan line kind {other}"),
+                None => {}
+            }
+        }
+        ensure!(saw_end, "plan truncated (no end marker)");
+        let (n_inputs, n_regs, output, levels_needed, num_classes, model_hash) =
+            meta.ok_or_else(|| anyhow!("plan missing meta line"))?;
+        let waves = schedule_waves(&ops, n_regs, n_inputs)?;
+        let plan = HePlan {
+            layout: layout.ok_or_else(|| anyhow!("plan missing layout"))?,
+            chain: chain.ok_or_else(|| anyhow!("plan missing chain"))?,
+            ops,
+            waves,
+            masks,
+            n_inputs,
+            n_regs,
+            output,
+            levels_needed,
+            num_classes,
+            model_hash,
+            counts: counts.ok_or_else(|| anyhow!("plan missing counts"))?,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+/// Wavefront scheduling over the SSA trace: an op's wave is one past the
+/// deepest wave among its sources (inputs sit before wave 0).
+fn schedule_waves(ops: &[HeOp], n_regs: usize, n_inputs: usize) -> Result<Vec<Vec<u32>>> {
+    let mut depth = vec![0usize; n_regs];
+    let mut waves: Vec<Vec<u32>> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        let (s0, s1) = op.sources();
+        ensure!((s0 as usize) < n_regs, "op {i}: register out of range");
+        let mut d = depth[s0 as usize];
+        if let Some(s1) = s1 {
+            ensure!((s1 as usize) < n_regs, "op {i}: register out of range");
+            d = d.max(depth[s1 as usize]);
+        }
+        let dst = op.dst() as usize;
+        ensure!(dst >= n_inputs && dst < n_regs, "op {i}: bad dst register");
+        let d = d + 1;
+        depth[dst] = d;
+        while waves.len() < d {
+            waves.push(Vec::new());
+        }
+        waves[d - 1].push(i as u32);
+    }
+    Ok(waves)
+}
+
+// --------------------------------------------------------------- builder
+
+/// Symbolic ciphertext flowing through the recording walk: a register id
+/// plus the statically tracked (level, scale).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanCt {
+    reg: u32,
+    level: usize,
+    scale: f64,
+}
+
+struct BuilderState {
+    ops: Vec<HeOp>,
+    masks: Vec<PlanMask>,
+    /// Exact mask interning keyed by (slot bit patterns, scale bits, nq).
+    /// Unlike the runtime mask cache (which tolerates a transient hash
+    /// false-hit), a compile-time collision would be baked into every
+    /// execution — so the full content is the key, not a digest.
+    mask_index: HashMap<(Vec<u64>, u64, usize), u32>,
+    next_reg: u32,
+    n_inputs: usize,
+}
+
+/// The recording backend: implements [`HeBackend`] so the unmodified
+/// engine walk (`HeStgcn::forward`) *is* the compiler front-end. Mirrors
+/// `CountingBackend`'s level/scale semantics exactly (same bump
+/// accounting), materializes every mask thunk once, and emits SSA ops.
+pub struct PlanBuilder {
+    chain: PlanChain,
+    slots: usize,
+    state: RefCell<BuilderState>,
+    counters: OpCounters,
+}
+
+impl PlanBuilder {
+    pub fn new(chain: PlanChain, slots: usize) -> Self {
+        PlanBuilder {
+            chain,
+            slots,
+            state: RefCell::new(BuilderState {
+                ops: Vec::new(),
+                masks: Vec::new(),
+                mask_index: HashMap::new(),
+                next_reg: 0,
+                n_inputs: 0,
+            }),
+            counters: OpCounters::default(),
+        }
+    }
+
+    /// Allocate the next input register (fresh top-level ciphertext at Δ).
+    pub fn fresh_input(&self) -> PlanCt {
+        let mut st = self.state.borrow_mut();
+        assert!(
+            st.ops.is_empty(),
+            "inputs must be allocated before any recorded op"
+        );
+        let reg = st.next_reg;
+        st.next_reg += 1;
+        st.n_inputs += 1;
+        PlanCt {
+            reg,
+            level: self.chain.top_level(),
+            scale: self.chain.delta,
+        }
+    }
+
+    fn alloc(st: &mut BuilderState) -> u32 {
+        let r = st.next_reg;
+        st.next_reg += 1;
+        r
+    }
+
+    fn intern_mask(st: &mut BuilderState, slots: Vec<f64>, scale: f64, nq: usize) -> u32 {
+        let key = (
+            slots.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            scale.to_bits(),
+            nq,
+        );
+        if let Some(&id) = st.mask_index.get(&key) {
+            return id;
+        }
+        let id = st.masks.len() as u32;
+        st.masks.push(PlanMask { slots, scale, nq });
+        st.mask_index.insert(key, id);
+        id
+    }
+
+    fn bump(&self, c: &AtomicU64, limbs: &AtomicU64, level: usize) {
+        c.fetch_add(1, Ordering::Relaxed);
+        limbs.fetch_add(level as u64 + 1, Ordering::Relaxed);
+    }
+
+    fn bump_sq(&self, sq: &AtomicU64, level: usize) {
+        let l = level as u64 + 1;
+        sq.fetch_add(l * l, Ordering::Relaxed);
+    }
+
+    /// Seal the recording into a validated plan.
+    pub fn finish(
+        self,
+        model: &StgcnModel,
+        layout: AmaLayout,
+        levels_needed: usize,
+        out: PlanCt,
+    ) -> Result<HePlan> {
+        let st = self.state.into_inner();
+        ensure!(
+            self.chain.top_level() - out.level == levels_needed,
+            "recorded walk consumed {} levels, expected {levels_needed}",
+            self.chain.top_level() - out.level
+        );
+        let waves = schedule_waves(&st.ops, st.next_reg as usize, st.n_inputs)?;
+        let plan = HePlan {
+            layout,
+            chain: self.chain,
+            ops: st.ops,
+            waves,
+            masks: st.masks,
+            n_inputs: st.n_inputs,
+            n_regs: st.next_reg as usize,
+            output: out.reg,
+            levels_needed,
+            num_classes: model.num_classes(),
+            model_hash: model.content_hash(),
+            counts: self.counters.snapshot(),
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+impl HeBackend for PlanBuilder {
+    type Ct = PlanCt;
+
+    fn level(&self, ct: &PlanCt) -> usize {
+        ct.level
+    }
+
+    fn scale(&self, ct: &PlanCt) -> f64 {
+        ct.scale
+    }
+
+    fn q_at(&self, level: usize) -> f64 {
+        self.chain.moduli[level]
+    }
+
+    fn delta(&self) -> f64 {
+        self.chain.delta
+    }
+
+    fn add(&self, a: &PlanCt, b: &PlanCt) -> PlanCt {
+        assert!(
+            (a.scale - b.scale).abs() / a.scale < 1e-6,
+            "plan compile caught scale mismatch in add: {} vs {}",
+            a.scale,
+            b.scale
+        );
+        let level = a.level.min(b.level);
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Add { a: a.reg, b: b.reg, dst });
+        self.bump(&self.counters.add, &self.counters.add_limbs, level);
+        PlanCt { reg: dst, level, scale: a.scale }
+    }
+
+    fn sub(&self, a: &PlanCt, b: &PlanCt) -> PlanCt {
+        assert!(
+            (a.scale - b.scale).abs() / a.scale < 1e-6,
+            "plan compile caught scale mismatch in sub: {} vs {}",
+            a.scale,
+            b.scale
+        );
+        let level = a.level.min(b.level);
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Sub { a: a.reg, b: b.reg, dst });
+        self.bump(&self.counters.add, &self.counters.add_limbs, level);
+        PlanCt { reg: dst, level, scale: a.scale }
+    }
+
+    fn add_plain(&self, a: &PlanCt, mask: MaskThunk) -> PlanCt {
+        let mut st = self.state.borrow_mut();
+        let m = Self::intern_mask(&mut st, mask(), a.scale, a.level + 1);
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::AddPlain { src: a.reg, mask: m, dst });
+        self.bump(&self.counters.add, &self.counters.add_limbs, a.level);
+        PlanCt { reg: dst, ..*a }
+    }
+
+    fn mul_plain(&self, a: &PlanCt, mask: MaskThunk, p_scale: f64) -> PlanCt {
+        let mut st = self.state.borrow_mut();
+        let m = Self::intern_mask(&mut st, mask(), p_scale, a.level + 1);
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::MulPlain { src: a.reg, mask: m, dst });
+        self.bump(&self.counters.pmult, &self.counters.pmult_limbs, a.level);
+        PlanCt {
+            reg: dst,
+            level: a.level,
+            scale: a.scale * p_scale,
+        }
+    }
+
+    fn mul(&self, a: &PlanCt, b: &PlanCt) -> PlanCt {
+        let level = a.level.min(b.level);
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Mul { a: a.reg, b: b.reg, dst });
+        self.bump(&self.counters.cmult, &self.counters.cmult_limbs, level);
+        self.bump_sq(&self.counters.cmult_limbs_sq, level);
+        PlanCt {
+            reg: dst,
+            level,
+            scale: a.scale * b.scale,
+        }
+    }
+
+    fn rotate(&self, a: &PlanCt, k: usize) -> PlanCt {
+        let k = k % self.slots;
+        if k == 0 {
+            // elided at compile time: the executor never sees a no-op
+            // rotation (mirrors both real backends' k == 0 fast path)
+            return *a;
+        }
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Rotate { src: a.reg, k: k as u32, dst });
+        self.bump(&self.counters.rot, &self.counters.rot_limbs, a.level);
+        self.bump_sq(&self.counters.rot_limbs_sq, a.level);
+        PlanCt { reg: dst, ..*a }
+    }
+
+    fn rescale(&self, a: &PlanCt) -> PlanCt {
+        assert!(a.level > 0, "plan compile: rescale below level 0");
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Rescale { src: a.reg, dst });
+        self.bump(&self.counters.rescale, &self.counters.rescale_limbs, a.level);
+        PlanCt {
+            reg: dst,
+            level: a.level - 1,
+            scale: a.scale / self.chain.moduli[a.level],
+        }
+    }
+
+    fn op_counts(&self) -> OpCounts {
+        self.counters.snapshot()
+    }
+
+    fn reset_counts(&self) {
+        self.counters.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::he_infer::backend::CountingBackend;
+
+    fn tiny() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
+    }
+
+    fn tiny_plan() -> HePlan {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+        compile(&m, layout, &chain, PlanOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn test_compile_validates_and_matches_interpreter_counts() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let levels = he.levels_needed().unwrap();
+        let plan = tiny_plan();
+        plan.validate().unwrap();
+        assert_eq!(plan.levels_needed, levels);
+        assert_eq!(plan.n_inputs, 5);
+
+        // static counts == interpreted CountingBackend counts
+        let be = CountingBackend::new(levels, 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let _ = he.forward(&be, &input).unwrap();
+        assert_eq!(plan.counts, be.op_counts());
+    }
+
+    #[test]
+    fn test_plan_rotations_subset_of_layout_steps() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let plan = tiny_plan();
+        let allowed: std::collections::BTreeSet<usize> =
+            layout.rotation_steps(m.k).into_iter().collect();
+        let used = plan.required_rotations();
+        assert!(!used.is_empty());
+        for k in &used {
+            assert!(allowed.contains(k), "plan uses unplanned rotation {k}");
+        }
+    }
+
+    #[test]
+    fn test_waves_cover_all_ops_without_duplicates() {
+        let plan = tiny_plan();
+        let scheduled: usize = plan.waves.iter().map(|w| w.len()).sum();
+        assert_eq!(scheduled, plan.ops.len());
+        // masks are interned: strictly fewer masks than PMult+AddPlain ops
+        let mask_ops = plan
+            .ops
+            .iter()
+            .filter(|o| matches!(o, HeOp::MulPlain { .. } | HeOp::AddPlain { .. }))
+            .count();
+        assert!(plan.masks.len() <= mask_ops);
+        assert!(!plan.masks.is_empty());
+    }
+
+    #[test]
+    fn test_text_roundtrip_is_lossless() {
+        let plan = tiny_plan();
+        let text = plan.to_text();
+        let back = HePlan::from_text(&text).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn test_from_text_rejects_corruption() {
+        let plan = tiny_plan();
+        let text = plan.to_text();
+        // truncation
+        assert!(HePlan::from_text(&text[..text.len() / 2]).is_err());
+        // header damage
+        assert!(HePlan::from_text(&text.replace("heplan v1", "heplan v9")).is_err());
+    }
+
+    #[test]
+    fn test_validate_catches_double_write() {
+        let mut plan = tiny_plan();
+        if let Some(op) = plan.ops.last().copied() {
+            plan.ops.push(op); // same dst written twice
+            assert!(plan.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn test_chain_too_shallow_is_rejected() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let chain = PlanChain::ideal(he.levels_needed().unwrap() - 1, 33);
+        assert!(compile(&m, layout, &chain, PlanOptions::default()).is_err());
+    }
+
+    #[test]
+    fn test_unfused_plan_consumes_more_levels() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let chain = PlanChain::ideal(20, 33);
+        let fused = compile(&m, layout, &chain, PlanOptions::default()).unwrap();
+        let unfused = compile(
+            &m,
+            layout,
+            &chain,
+            PlanOptions { use_bsgs: true, fuse_activations: false },
+        )
+        .unwrap();
+        assert!(unfused.levels_needed > fused.levels_needed);
+        // BSGS ablation: naive plan needs more rotations
+        let naive = compile(
+            &m,
+            layout,
+            &chain,
+            PlanOptions { use_bsgs: false, fuse_activations: true },
+        )
+        .unwrap();
+        assert!(naive.counts.rot > fused.counts.rot);
+    }
+}

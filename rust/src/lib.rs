@@ -3,7 +3,7 @@
 //! reproduction.
 //!
 //! Three-layer architecture (see `README.md` for the map and `DESIGN.md`
-//! for the per-subsystem sections S1–S13):
+//! for the per-subsystem sections S1–S14):
 //! - **L3 (this crate)**: CKKS leveled-HE substrate, AMA-packed encrypted
 //!   STGCN inference engine, level planner, serving coordinator.
 //! - **L2 (python/compile)**: JAX STGCN model + LinGCN training pipeline

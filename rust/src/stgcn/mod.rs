@@ -116,6 +116,62 @@ impl StgcnModel {
         self.layers.iter().map(|l| l.acts_per_node()).sum()
     }
 
+    /// Content hash over structure + weights + activations + graph: the
+    /// model half of the compiled-plan cache key (DESIGN.md S14). The
+    /// hashed word stream is a prefix code — every variable-length section
+    /// is preceded by its length and a section tag — so two structurally
+    /// different models can never emit the same stream (collisions reduce
+    /// to FNV-1a collisions on distinct inputs, not stream ambiguity).
+    pub fn content_hash(&self) -> u64 {
+        const TAG_TENSOR: u64 = 0xa11c_0de0_0000_0001;
+        const TAG_ACTS: u64 = 0xa11c_0de0_0000_0002;
+        const TAG_LAYER: u64 = 0xa11c_0de0_0000_0003;
+        let mut words: Vec<u64> = vec![
+            self.graph.v as u64,
+            self.t as u64,
+            self.c_in as u64,
+            self.k as u64,
+            self.layers.len() as u64,
+            self.graph.norm_adj.len() as u64,
+        ];
+        words.extend(self.graph.norm_adj.iter().map(|v| v.to_bits()));
+        let push_tensor = |words: &mut Vec<u64>, t: &Tensor| {
+            words.push(TAG_TENSOR);
+            words.push(t.shape.len() as u64);
+            words.extend(t.shape.iter().map(|&s| s as u64));
+            words.push(t.data.len() as u64);
+            words.extend(t.data.iter().map(|v| v.to_bits()));
+        };
+        let push_acts = |words: &mut Vec<u64>, acts: &[Activation]| {
+            words.push(TAG_ACTS);
+            words.push(acts.len() as u64);
+            for a in acts {
+                match *a {
+                    Activation::Relu => words.push(1),
+                    Activation::Identity => words.push(2),
+                    Activation::Poly { w2, w1, b, c } => {
+                        words.push(3);
+                        words.extend([w2, w1, b, c].map(f64::to_bits));
+                    }
+                }
+            }
+        };
+        for l in &self.layers {
+            words.push(TAG_LAYER);
+            words.push(l.c_in as u64);
+            words.push(l.c_out as u64);
+            push_tensor(&mut words, &l.gcn_w);
+            push_tensor(&mut words, &l.gcn_b);
+            push_tensor(&mut words, &l.tconv_w);
+            push_tensor(&mut words, &l.tconv_b);
+            push_acts(&mut words, &l.act1);
+            push_acts(&mut words, &l.act2);
+        }
+        push_tensor(&mut words, &self.fc_w);
+        push_tensor(&mut words, &self.fc_b);
+        crate::util::fnv1a_u64(words)
+    }
+
     /// Plaintext forward pass. Input `x` is [V, C_in, T] row-major;
     /// returns class logits.
     pub fn forward(&self, x: &[f64]) -> Result<Vec<f64>> {

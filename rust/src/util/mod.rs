@@ -9,6 +9,19 @@ pub mod tensorio;
 
 pub use rng::Rng;
 
+/// FNV-1a over a stream of u64 words, byte-wise — the content-addressing
+/// hash behind the plan cache (model hashes, mask interning).
+pub fn fnv1a_u64<I: IntoIterator<Item = u64>>(items: I) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for v in items {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// Format a float with fixed decimals for table output.
 pub fn fmt_f(x: f64, decimals: usize) -> String {
     format!("{:.*}", decimals, x)

