@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test bench bench-plan
+.PHONY: artifacts artifacts-quick test bench bench-plan bench-wire
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -29,3 +29,8 @@ bench:
 # compile-once vs per-request HePlan costs; writes rust/BENCH_plan.json
 bench-plan:
 	cargo bench --bench plan_compile
+
+# wire-format serialize/deserialize throughput + eval-key bundle sizes
+# per nl; writes rust/BENCH_wire.json
+bench-wire:
+	cargo bench --bench wire

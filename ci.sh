@@ -32,6 +32,11 @@ fi
 echo "==> cargo build --release"
 cargo build --release
 
+echo "==> cargo build --release --examples"
+# the examples (incl. encrypted_wire, the privacy-boundary demo) must
+# always compile; artifact-dependent ones are only *run* manually
+cargo build --release --examples
+
 echo "==> cargo test -q"
 cargo test -q
 

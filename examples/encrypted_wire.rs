@@ -1,0 +1,106 @@
+//! The client/server privacy boundary, end to end (DESIGN.md S15): two
+//! tenants generate keys locally, ship only their `EvalKeySet`s and
+//! ciphertexts through the serialized wire format, the server — which by
+//! construction holds no secret key — executes the compiled plan on the
+//! ciphertexts through the full coordinator pipeline, and each tenant
+//! decrypts their own logits. Runs on synthetic models, no artifacts
+//! needed.
+//!
+//! Run: cargo run --release --example encrypted_wire
+
+use lingcn::coordinator::{Coordinator, KeyRegistry, Metrics, ModelVariant, Router};
+use lingcn::graph::Graph;
+use lingcn::he_infer::PlanOptions;
+use lingcn::stgcn::StgcnModel;
+use lingcn::wire::{keygen, CtBundle, EvalKeySet, WireExecutor, WireSerialize};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // --- the "published" variant family (synthetic stand-ins) -----------
+    let fast = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4], 3, 17);
+    let accurate = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let mut models = HashMap::new();
+    models.insert("wire-fast".to_string(), fast.clone());
+    models.insert("wire-accurate".to_string(), accurate.clone());
+
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(8, Some(metrics.clone())));
+    let mut server = WireExecutor::new(models, 2, registry);
+    server.set_metrics(metrics.clone());
+
+    // --- client side: keygen per tenant, ship the eval half -------------
+    println!("tenants generating keys locally (secret keys never leave)...");
+    let (alice, alice_eval) = keygen(&fast, "wire-fast", PlanOptions::default(), 1001)?;
+    let (bob, bob_eval) = keygen(&accurate, "wire-accurate", PlanOptions::default(), 2002)?;
+    // everything the server receives goes through bytes — the same path a
+    // network transport would use
+    let alice_eval = EvalKeySet::from_bytes(&alice_eval.to_bytes())?;
+    let bob_eval = EvalKeySet::from_bytes(&bob_eval.to_bytes())?;
+    println!(
+        "  alice → {} galois keys for {}, bob → {} for {}",
+        alice_eval.keys.galois.len(),
+        alice_eval.variant,
+        bob_eval.keys.galois.len(),
+        bob_eval.variant
+    );
+    server.register("alice", alice_eval)?;
+    server.register("bob", bob_eval)?;
+
+    // --- the serving pipeline -------------------------------------------
+    let router = Router::new(vec![
+        ModelVariant { name: "wire-fast".into(), nl: 1, latency_s: 1.0, accuracy: 0.8 },
+        ModelVariant { name: "wire-accurate".into(), nl: 2, latency_s: 2.0, accuracy: 0.9 },
+    ]);
+    let coord = Coordinator::start_with_metrics(
+        router,
+        Arc::new(server),
+        metrics.clone(),
+        2,
+        4,
+        Duration::from_millis(2),
+    );
+
+    let argmax = lingcn::util::argmax;
+    for (tenant, client, model) in [("alice", &alice, &fast), ("bob", &bob, &accurate)] {
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect();
+        // request and response both cross the wire as bytes
+        let request = CtBundle::from_bytes(&client.encrypt_request(&x)?.to_bytes())?;
+        let resp = coord.infer_blocking_encrypted(
+            tenant.into(),
+            Some(client.variant.clone()),
+            request.cts,
+            Some(request.params_hash),
+            None,
+        )?;
+        anyhow::ensure!(resp.error.is_none(), "{tenant}: {:?}", resp.error);
+        let ct = resp.ct_logits.expect("logits ciphertext");
+        let logits = client.decrypt_logits(&ct)?;
+        let plain = model.forward(&x)?;
+        println!(
+            "  {tenant}: variant={} exec={:?} class={} (plaintext model agrees: {})",
+            resp.variant,
+            resp.exec,
+            argmax(&logits),
+            argmax(&plain) == argmax(&logits)
+        );
+    }
+
+    // --- the boundary enforced ------------------------------------------
+    let plain = coord.infer_blocking(vec![0.0; 16], None)?;
+    println!("  plaintext clip on the wire tier → error: {:?}", plain.error.unwrap());
+    let stray = coord.infer_blocking_encrypted(
+        "mallory".into(),
+        Some("wire-fast".into()),
+        vec![],
+        None,
+        None,
+    )?;
+    println!("  unregistered tenant → error: {:?}", stray.error.unwrap());
+
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Wire-format costs (DESIGN.md S15): serialize/deserialize throughput
+//! for ciphertext bundles and the per-variant eval-key bundle size — the
+//! bytes a tenant ships at registration and per request. Synthetic
+//! variant family of increasing depth (the nl knob grows the modulus
+//! chain, which grows keys quadratically: digits × limbs). Emits
+//! `BENCH_wire.json`.
+//! Run: cargo bench --bench wire  (or `make bench-wire`)
+
+use lingcn::graph::Graph;
+use lingcn::he_infer::PlanOptions;
+use lingcn::stgcn::StgcnModel;
+use lingcn::util::{ascii_table, bench::time_op};
+use lingcn::wire::{keygen, CtBundle, EvalKeySet, WireSerialize};
+use std::time::Duration;
+
+struct Row {
+    nl: usize,
+    levels: usize,
+    eval_key_bytes: usize,
+    request_bytes: usize,
+    ser_s: f64,
+    de_s: f64,
+    key_de_s: f64,
+}
+
+fn main() {
+    let budget = Duration::from_secs(2);
+    // deeper channel stacks stand in for larger nl: each extra layer adds
+    // conv+activation levels, growing the chain the keys live on
+    let family: Vec<(usize, Vec<usize>)> =
+        vec![(1, vec![4]), (2, vec![4, 4]), (3, vec![4, 4, 4])];
+    let mut rows = Vec::new();
+    for (nl, channels) in &family {
+        let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, channels, 3, 9);
+        let (client, key_set) =
+            keygen(&model, &format!("bench-nl{nl}"), PlanOptions::default(), 7).unwrap();
+        let key_bytes = key_set.to_bytes();
+        let key_de = time_op(1, 16, budget, || {
+            let _ = EvalKeySet::from_bytes(&key_bytes).unwrap();
+        });
+
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect();
+        let bundle = client.encrypt_request(&x).unwrap();
+        let req_bytes = bundle.to_bytes();
+        let ser = time_op(1, 32, budget, || {
+            let _ = bundle.to_bytes();
+        });
+        let de = time_op(1, 32, budget, || {
+            let _ = CtBundle::from_bytes(&req_bytes).unwrap();
+        });
+
+        rows.push(Row {
+            nl: *nl,
+            levels: key_set.params.levels,
+            eval_key_bytes: key_bytes.len(),
+            request_bytes: req_bytes.len(),
+            ser_s: ser.median_secs(),
+            de_s: de.median_secs(),
+            key_de_s: key_de.median_secs(),
+        });
+    }
+
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mb = r.request_bytes as f64 / (1024.0 * 1024.0);
+            vec![
+                r.nl.to_string(),
+                r.levels.to_string(),
+                format!("{:.2}", r.eval_key_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{:.2}", mb),
+                format!("{:.1}", mb / r.ser_s.max(1e-12)),
+                format!("{:.1}", mb / r.de_s.max(1e-12)),
+                format!("{:.1}", r.key_de_s * 1e3),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(
+            &[
+                "nl",
+                "levels",
+                "eval keys (MiB)",
+                "request (MiB)",
+                "ct ser MiB/s",
+                "ct de MiB/s",
+                "key de (ms)"
+            ],
+            &table
+        )
+    );
+
+    let mut json = String::from("{\n  \"variants\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"nl\": {}, \"levels\": {}, \"eval_key_bytes\": {}, \
+             \"request_bytes\": {}, \"ct_serialize_s\": {:.6}, \
+             \"ct_deserialize_s\": {:.6}, \"key_deserialize_s\": {:.6}}}{}\n",
+            r.nl,
+            r.levels,
+            r.eval_key_bytes,
+            r.request_bytes,
+            r.ser_s,
+            r.de_s,
+            r.key_de_s,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_wire.json", &json).expect("writing BENCH_wire.json");
+    println!("wrote BENCH_wire.json");
+
+    // sanity: deeper chains must not shrink the key bundle
+    for w in rows.windows(2) {
+        assert!(
+            w[1].eval_key_bytes >= w[0].eval_key_bytes,
+            "key-bundle size must grow with depth"
+        );
+    }
+}

@@ -140,6 +140,24 @@ pub struct PackedInput {
     pub cts: Vec<Ciphertext>,
 }
 
+/// Pack a [V, C, T] clip into per-node replicated slot vectors — the
+/// shared packing step of every encryption path (in-process
+/// [`encrypt_clip`] and the wire client's `ClientKeys::encrypt_clip`,
+/// which must stay bit-identical).
+pub fn pack_clip(layout: &AmaLayout, x: &[f64], v: usize, c: usize) -> Result<Vec<Vec<f64>>> {
+    ensure!(
+        x.len() == v * c * layout.t,
+        "clip shape mismatch: expected {v}x{c}x{} = {} values, got {}",
+        layout.t,
+        v * c * layout.t,
+        x.len()
+    );
+    let per = c * layout.t;
+    Ok((0..v)
+        .map(|vi| layout.pack(&x[vi * per..(vi + 1) * per], c))
+        .collect())
+}
+
 /// Encrypt a [V, C, T] clip into per-node ciphertexts at limb count `nq`.
 pub fn encrypt_clip(
     engine: &CkksEngine,
@@ -149,13 +167,9 @@ pub fn encrypt_clip(
     c: usize,
     nq: usize,
 ) -> Result<PackedInput> {
-    ensure!(x.len() == v * c * layout.t, "clip shape mismatch");
-    let per = c * layout.t;
-    let cts = (0..v)
-        .map(|vi| {
-            let packed = layout.pack(&x[vi * per..(vi + 1) * per], c);
-            engine.encrypt_at(&packed, nq)
-        })
+    let cts = pack_clip(layout, x, v, c)?
+        .into_iter()
+        .map(|packed| engine.encrypt_at(&packed, nq))
         .collect();
     Ok(PackedInput {
         layout: *layout,

@@ -11,7 +11,7 @@ use super::poly::RnsPoly;
 use crate::util::Rng;
 
 /// A CKKS ciphertext.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Ciphertext {
     pub c0: RnsPoly,
     pub c1: RnsPoly,

@@ -17,31 +17,36 @@ use std::collections::HashMap;
 
 /// Secret key: ternary polynomial, cached in NTT form over the full
 /// `Q ∪ {P}` basis so any level's limbs can be sliced out.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SecretKey {
     /// NTT form, nq = all Q primes, has_special = true.
     pub s: RnsPoly,
 }
 
 /// Public encryption key `(b, a)` with `b = -a·s + e` over the full Q basis.
+#[derive(Clone, Debug, PartialEq)]
 pub struct PublicKey {
     pub b: RnsPoly,
     pub a: RnsPoly,
 }
 
 /// One digit of a key-switching key.
-#[derive(Clone)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct KskDigit {
     pub b: RnsPoly,
     pub a: RnsPoly,
 }
 
 /// Key-switching key: one digit pair per RNS prime of Q.
-#[derive(Clone)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct KeySwitchKey {
     pub digits: Vec<KskDigit>,
 }
 
-/// All evaluation keys an `Evaluator` needs.
+/// All evaluation keys an `Evaluator` needs. Deliberately excludes the
+/// secret key: this is the exact key material that crosses the wire to
+/// the server (`wire::EvalKeySet` serializes it).
+#[derive(Clone, Debug, PartialEq)]
 pub struct EvalKeys {
     pub relin: KeySwitchKey,
     /// Galois element -> key (for rotations and conjugation).

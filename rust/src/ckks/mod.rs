@@ -7,6 +7,14 @@
 //! leveled modulus chains, hybrid key switching, the canonical-embedding
 //! encoder, and the HE-standard security table.
 //!
+//! The engine is split along the privacy boundary (DESIGN.md S15):
+//! [`EvalEngine`] is the **server half** — context, encoder and evaluation
+//! keys only, with no way to decrypt — while [`CkksEngine`] bundles the
+//! client key material (secret + public key) *on top of* an `EvalEngine`
+//! for trusted single-process use (tests, demos, the `serve --tier he`
+//! tier). `CkksEngine` derefs to its `EvalEngine`, so anything written
+//! against the server half accepts either.
+//!
 //! ```no_run
 //! use lingcn::ckks::{CkksEngine, CkksParams};
 //! let engine = CkksEngine::new(CkksParams::toy(3), &[1, 2], 42).unwrap();
@@ -29,30 +37,77 @@ pub mod zq;
 pub use encoding::{Encoder, Plaintext, C64};
 pub use encrypt::Ciphertext;
 pub use eval::{build_eval_keys, Evaluator, OpCounters, OpCounts};
-pub use keys::{EvalKeys, PublicKey, SecretKey};
+pub use keys::{EvalKeys, KeySwitchKey, PublicKey, SecretKey};
 pub use params::{CkksContext, CkksParams};
 pub use poly::{limb_parallelism, par_limbs, set_limb_parallelism};
 
 use std::sync::Arc;
 use std::sync::Mutex;
 
-/// Convenience bundle: context + encoder + keys + evaluator + RNG.
-/// This is what the HE inference engine and the examples hold.
-pub struct CkksEngine {
+/// The **server half** of the engine: shared context, encoder, evaluator
+/// (relinearization + Galois keys) and the cross-request plaintext cache.
+/// Holds no secret key and no encryption key — a process that only ever
+/// constructs `EvalEngine`s can evaluate on ciphertexts but can neither
+/// decrypt them nor forge fresh encryptions under the client's key. This
+/// is the type the encrypted serving path (`he_infer::exec`,
+/// `wire::server`) is written against.
+pub struct EvalEngine {
     pub ctx: Arc<CkksContext>,
     pub encoder: Encoder,
-    pub sk: SecretKey,
-    pub pk: PublicKey,
     pub eval: Evaluator,
-    rng: Mutex<crate::util::Rng>,
     /// Content-addressed plaintext cache shared across requests
     /// (DESIGN.md §Perf-2: mask re-encoding dominates serving-path PMult
     /// otherwise).
     pub plaintext_cache: Mutex<std::collections::HashMap<(u64, usize, u64), Plaintext>>,
 }
 
+impl EvalEngine {
+    /// Assemble the key-free half from a built context and evaluation keys
+    /// (typically deserialized from a client's `wire::EvalKeySet`).
+    pub fn new(ctx: Arc<CkksContext>, keys: Arc<EvalKeys>) -> Self {
+        let encoder = Encoder::new(ctx.n);
+        let eval = Evaluator::new(ctx.clone(), keys);
+        EvalEngine {
+            ctx,
+            encoder,
+            eval,
+            plaintext_cache: Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Encode a plaintext at a ciphertext's level and scale (for PMult).
+    pub fn encode_for(&self, values: &[f64], ct: &Ciphertext) -> Plaintext {
+        self.encoder.encode(&self.ctx, values, self.ctx.scale, ct.nq())
+    }
+}
+
+/// Convenience bundle: an [`EvalEngine`] plus the **client key half**
+/// (secret + public key and the encryption RNG). This is what the
+/// trusted-single-process paths hold — examples, tests, and the demo
+/// `serve --tier he` tier, where encrypt/execute/decrypt all happen in
+/// one process. The wire deployment shape keeps the two halves in
+/// different processes (`wire::ClientKeys` vs [`EvalEngine`]).
+pub struct CkksEngine {
+    pub sk: SecretKey,
+    pub pk: PublicKey,
+    half: EvalEngine,
+    rng: Mutex<crate::util::Rng>,
+}
+
+impl std::ops::Deref for CkksEngine {
+    type Target = EvalEngine;
+
+    fn deref(&self) -> &EvalEngine {
+        &self.half
+    }
+}
+
 impl CkksEngine {
     /// Build a full engine with Galois keys for `rotation_steps`.
+    ///
+    /// Key generation draws from a single seeded stream in a fixed order
+    /// (secret, public, relin, Galois) — `wire::ClientKeys::generate`
+    /// mirrors this exactly so the split-process path is bit-identical.
     pub fn new(params: CkksParams, rotation_steps: &[usize], seed: u64) -> anyhow::Result<Self> {
         let ctx = params.build()?;
         let encoder = Encoder::new(ctx.n);
@@ -67,16 +122,17 @@ impl CkksEngine {
             false,
             &mut rng,
         ));
-        let eval = Evaluator::new(ctx.clone(), ek);
         Ok(CkksEngine {
-            ctx,
-            encoder,
             sk,
             pk,
-            eval,
+            half: EvalEngine::new(ctx, ek),
             rng: Mutex::new(rng),
-            plaintext_cache: Mutex::new(std::collections::HashMap::new()),
         })
+    }
+
+    /// The key-free server half (also reachable via deref coercion).
+    pub fn eval_half(&self) -> &EvalEngine {
+        &self.half
     }
 
     /// Encode + encrypt a real vector at top level, default scale.
@@ -100,11 +156,6 @@ impl CkksEngine {
         let pt = encrypt::decrypt(&self.ctx, &self.sk, ct);
         self.encoder.decode(&self.ctx, &pt)
     }
-
-    /// Encode a plaintext at a ciphertext's level and scale (for PMult).
-    pub fn encode_for(&self, values: &[f64], ct: &Ciphertext) -> Plaintext {
-        self.encoder.encode(&self.ctx, values, self.ctx.scale, ct.nq())
-    }
 }
 
 #[cfg(test)]
@@ -120,5 +171,20 @@ mod tests {
         assert!((out[0] - 1.0).abs() < 1e-2);
         assert!((out[1] - 4.0).abs() < 1e-2);
         assert!((out[2] - 9.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn test_eval_half_shares_keys_and_evaluates() {
+        // an EvalEngine assembled from the engine's own eval keys computes
+        // the same ciphertexts the bundled engine does
+        let engine = CkksEngine::new(CkksParams::toy(2), &[1], 9).unwrap();
+        let server = EvalEngine::new(engine.ctx.clone(), engine.eval.keys.clone());
+        let ct = engine.encrypt(&[0.5, -0.25, 0.125]);
+        let a = engine.eval.rotate(&engine.encoder, &ct, 1);
+        let b = server.eval.rotate(&server.encoder, &ct, 1);
+        assert_eq!(a.c0, b.c0);
+        assert_eq!(a.c1, b.c1);
+        let out = engine.decrypt(&b);
+        assert!((out[0] + 0.25).abs() < 1e-2);
     }
 }

@@ -11,7 +11,7 @@ use super::zq;
 use std::sync::Arc;
 
 /// Builder-style description of a CKKS parameter set.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CkksParams {
     /// Ring degree N (power of two). Slot count is N/2.
     pub n: usize,

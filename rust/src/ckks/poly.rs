@@ -105,6 +105,17 @@ impl RnsPoly {
         self.nq + self.has_special as usize
     }
 
+    /// Whether every residue word lies in `[0, q)` for its limb's
+    /// modulus — the representation invariant all modular kernels assume
+    /// (checked at the wire boundary: a forged-but-checksummed frame must
+    /// be rejected before it reaches unchecked modular arithmetic).
+    pub fn is_reduced(&self, ctx: &CkksContext) -> bool {
+        (0..self.limb_count()).all(|idx| {
+            let q = ctx.modulus(self.mod_index(ctx, idx));
+            self.limbs[idx].iter().all(|&w| w < q)
+        })
+    }
+
     /// Build from signed i64 coefficients (centered representation), reduced
     /// into every limb. Coefficient form.
     pub fn from_signed_coeffs(ctx: &CkksContext, coeffs: &[i64], nq: usize) -> Self {

@@ -10,12 +10,26 @@
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
 //! | `infer --nl K [--encrypted] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out) |
-//! | `serve [--tier plaintext\|he] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s, `--threads` sizing the per-request plan-executor pool and `--limb-threads` the per-limb fan-out |
+//! | `serve [--tier plaintext\|he\|he-wire] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
+//! | `keygen --nl K [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; writes the local secret key file and the server-shippable eval-key bundle |
+//! | `encrypt --key F --input X.lgt --out R.cts` | client-side: encrypt a clip into a ciphertext request bundle |
+//! | `decrypt-logits --key F --in RESP.ct` | client-side: open the server's logits ciphertext and print the class scores |
 //!
-//! `plan`, `calibrate` and `predict` are self-contained; `infer` and
-//! `serve` need the `artifacts/` directory produced by the python build
-//! path (`python/compile/aot.py`). Dispatch lives in the library (not in
-//! `main.rs`) so the integration tests can exercise every path in-process.
+//! The four-verb wire roundtrip (privacy boundary, DESIGN.md S15):
+//!
+//! ```text
+//! lingcn keygen --nl 2 --out-dir wire
+//! lingcn encrypt --key wire/client_nl2.key --input artifacts/example_input.lgt --out wire/request.cts
+//! lingcn serve --tier he-wire --tenant alice --eval-keys wire/eval_nl2.keys \
+//!              --request wire/request.cts --response wire/response.ct
+//! lingcn decrypt-logits --key wire/client_nl2.key --in wire/response.ct
+//! ```
+//!
+//! `plan`, `calibrate` and `predict` are self-contained; `infer`,
+//! `serve` and `keygen` need the `artifacts/` directory produced by the
+//! python build path (`python/compile/aot.py`). Dispatch lives in the
+//! library (not in `main.rs`) so the integration tests can exercise every
+//! path in-process.
 
 use crate::costmodel::predict::{predict, PaperVariant};
 use crate::costmodel::OpCostModel;
@@ -44,8 +58,13 @@ pub fn run(args: &[String]) -> Result<i32> {
         Some("predict") => cmd_predict(args).map(|()| 0),
         Some("infer") => cmd_infer(args).map(|()| 0),
         Some("serve") => cmd_serve(args).map(|()| 0),
+        Some("keygen") => cmd_keygen(args).map(|()| 0),
+        Some("encrypt") => cmd_encrypt(args).map(|()| 0),
+        Some("decrypt-logits") => cmd_decrypt_logits(args).map(|()| 0),
         _ => {
-            eprintln!("usage: lingcn <plan|calibrate|predict|infer|serve> [options]");
+            eprintln!(
+                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits> [options]"
+            );
             Ok(USAGE_EXIT)
         }
     }
@@ -150,12 +169,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     } else {
         model.forward(x)?
     };
-    let arg = logits
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap()
-        .0;
+    let arg = crate::util::argmax(&logits);
     println!(
         "mode={} nl={nl} predicted_class={arg} latency={:?}\nlogits={logits:?}",
         if encrypted { "encrypted" } else { "plaintext" },
@@ -164,10 +178,260 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Fill `words` from the OS entropy device; errors when none is
+/// available (minimal containers, non-unix) so callers can warn loudly
+/// instead of silently degrading.
+fn os_entropy(words: &mut [u64]) -> Result<()> {
+    use std::io::Read;
+    let mut f = std::fs::File::open("/dev/urandom")?;
+    for w in words.iter_mut() {
+        let mut buf = [0u8; 8];
+        f.read_exact(&mut buf)?;
+        *w = u64::from_le_bytes(buf);
+    }
+    Ok(())
+}
+
+/// Weak last-resort entropy (time + pid). Never a shared constant, but
+/// searchable by an attacker who can bound the invocation window —
+/// every caller must warn when falling back to this.
+fn weak_entropy() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    crate::util::fnv1a_u64([nanos, std::process::id() as u64])
+}
+
+fn cmd_keygen(args: &[String]) -> Result<()> {
+    let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
+    let out_dir = std::path::PathBuf::from(
+        arg_value(args, "--out-dir").unwrap_or_else(|| "wire".into()),
+    );
+    let variant = format!("lingcn-nl{nl}");
+    let model = crate::stgcn::StgcnModel::load(
+        &Path::new("artifacts").join(format!("model_nl{nl}.lgt")),
+        crate::graph::Graph::ntu_rgbd(),
+    )?;
+    let opts = crate::he_infer::PlanOptions::default();
+    // seed policy: explicit --seed is reproducible (tests) but derivable;
+    // the default seeds full 256-bit state from the OS entropy device
+    let (client, key_set) = if let Some(s) = arg_value(args, "--seed") {
+        eprintln!(
+            "WARNING: --seed makes the secret key derivable from the seed \
+             value; use only for reproducible tests"
+        );
+        crate::wire::keygen(&model, &variant, opts, s.parse()?)?
+    } else {
+        let mut state = [0u64; 4];
+        match os_entropy(&mut state) {
+            Ok(()) => crate::wire::keygen_with_state(&model, &variant, opts, state)?,
+            Err(_) => {
+                eprintln!(
+                    "WARNING: no OS entropy device (/dev/urandom); falling \
+                     back to time+pid seeding — the generated key is \
+                     guessable by an attacker who can bound the invocation \
+                     time. Do not use this key for anything but local \
+                     testing."
+                );
+                crate::wire::keygen(&model, &variant, opts, weak_entropy())?
+            }
+        }
+    };
+    std::fs::create_dir_all(&out_dir)?;
+    use crate::wire::WireSerialize;
+    let client_path = out_dir.join(format!("client_nl{nl}.key"));
+    let eval_path = out_dir.join(format!("eval_nl{nl}.keys"));
+    let client_bytes = client.to_bytes();
+    let eval_bytes = key_set.to_bytes();
+    write_secret_file(&client_path, &client_bytes)?;
+    std::fs::write(&eval_path, &eval_bytes)?;
+    println!(
+        "variant={variant} galois_keys={} client_key={} ({} bytes, SECRET — keep local) \
+         eval_keys={} ({} bytes, ship to server)",
+        key_set.keys.galois.len(),
+        client_path.display(),
+        client_bytes.len(),
+        eval_path.display(),
+        eval_bytes.len(),
+    );
+    Ok(())
+}
+
+fn ensure_parent_dir(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write the client's secret key file owner-readable only — it contains
+/// the CKKS secret key, and a default-umask file would hand it to every
+/// local user.
+fn write_secret_file(path: &Path, bytes: &[u8]) -> Result<()> {
+    // write-to-temp + rename: a crash mid-write must never destroy the
+    // only copy of the secret key and its advanced RNG state (recovering
+    // by re-running keygen with the same seed would reset the encryption
+    // randomness stream — the reuse this file exists to prevent). The
+    // temp name is per-process so concurrent writers can't rename each
+    // other's partial files into place.
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".{}.tmp", std::process::id()));
+        std::path::PathBuf::from(os)
+    };
+    match std::fs::remove_file(&tmp) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e.into()),
+    }
+    let mut opts = std::fs::OpenOptions::new();
+    opts.write(true).create_new(true);
+    // created 0600: mode() only applies at creation, which create_new
+    // guarantees — the secret never transits a world-readable file
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::OpenOptionsExt;
+        opts.mode(0o600);
+    }
+    let mut f = opts.open(&tmp)?;
+    std::io::Write::write_all(&mut f, bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn cmd_encrypt(args: &[String]) -> Result<()> {
+    use crate::wire::WireSerialize;
+    let key_path = arg_value(args, "--key")
+        .ok_or_else(|| anyhow::anyhow!("encrypt requires --key <client key file>"))?;
+    let input = arg_value(args, "--input")
+        .unwrap_or_else(|| "artifacts/example_input.lgt".into());
+    let out = arg_value(args, "--out").unwrap_or_else(|| "wire/request.cts".into());
+    let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
+    // mix per-invocation entropy: two encrypts from the same persisted
+    // RNG state (concurrent runs, a restored backup) would otherwise
+    // draw identical (v, e0, e1), leaking plaintext differences
+    let mut mix = [0u64; 4];
+    if os_entropy(&mut mix).is_err() {
+        eprintln!(
+            "WARNING: no OS entropy device; mixing time+pid only — do not \
+             run concurrent encrypts from one key file on this platform"
+        );
+        mix[0] = weak_entropy();
+    }
+    client.mix_entropy(mix);
+    let ex = crate::util::tensorio::TensorFile::load(Path::new(&input))?;
+    let x = &ex.get("x")?.data;
+    let bundle = client.encrypt_request(x)?;
+    // persist the advanced RNG state too (defense in depth)
+    write_secret_file(Path::new(&key_path), &client.to_bytes())?;
+    let bytes = bundle.to_bytes();
+    ensure_parent_dir(Path::new(&out))?;
+    std::fs::write(Path::new(&out), &bytes)?;
+    println!(
+        "variant={} ciphertexts={} wrote {out} ({} bytes)",
+        client.variant,
+        bundle.cts.len(),
+        bytes.len()
+    );
+    Ok(())
+}
+
+fn cmd_decrypt_logits(args: &[String]) -> Result<()> {
+    use crate::wire::WireSerialize;
+    let key_path = arg_value(args, "--key")
+        .ok_or_else(|| anyhow::anyhow!("decrypt-logits requires --key <client key file>"))?;
+    let in_path = arg_value(args, "--in").unwrap_or_else(|| "wire/response.ct".into());
+    let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
+    let ct = crate::ckks::Ciphertext::from_bytes(&std::fs::read(Path::new(&in_path))?)?;
+    let logits = client.decrypt_logits(&ct)?;
+    let arg = crate::util::argmax(&logits);
+    println!("variant={} predicted_class={arg}\nlogits={logits:?}", client.variant);
+    Ok(())
+}
+
+/// The wire tier: register the tenant's eval keys, run the ciphertext
+/// request file through the coordinator, write the logits ciphertext.
+/// The server side of this function only ever handles serialized keys
+/// and ciphertexts — no secret key, no plaintext clip.
+fn cmd_serve_wire(args: &[String]) -> Result<()> {
+    use crate::wire::WireSerialize;
+    let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
+    let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    let limb_threads: usize =
+        arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
+    let capacity: usize =
+        arg_value(args, "--registry-capacity").unwrap_or_else(|| "64".into()).parse()?;
+    let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "cli-tenant".into());
+    let eval_keys = arg_value(args, "--eval-keys")
+        .ok_or_else(|| anyhow::anyhow!("serve --tier he-wire requires --eval-keys <file>"))?;
+    let request = arg_value(args, "--request")
+        .ok_or_else(|| anyhow::anyhow!("serve --tier he-wire requires --request <file>"))?;
+    let response = arg_value(args, "--response").unwrap_or_else(|| "wire/response.ct".into());
+
+    crate::ckks::set_limb_parallelism(limb_threads);
+    let cost = OpCostModel::reference();
+    let metrics = std::sync::Arc::new(crate::coordinator::Metrics::default());
+    let (router, executor) = crate::coordinator::wire_from_artifacts(
+        Path::new("artifacts"),
+        &cost,
+        threads,
+        capacity,
+        metrics.clone(),
+    )?;
+    let key_set = crate::wire::EvalKeySet::from_bytes(&std::fs::read(Path::new(&eval_keys))?)?;
+    let variant = key_set.variant.clone();
+    let tenant_params = key_set.params.clone();
+    executor.register(&tenant, key_set)?;
+    println!("registered tenant {tenant} for variant {variant}");
+
+    let bundle = crate::wire::CtBundle::from_bytes(&std::fs::read(Path::new(&request))?)?;
+    // reject cross-chain requests up front: ciphertexts encrypted under a
+    // different parameter set would otherwise decode as silent garbage
+    bundle.check_params(&tenant_params)?;
+    let coord = crate::coordinator::Coordinator::start_with_metrics(
+        router,
+        std::sync::Arc::new(executor),
+        metrics,
+        workers,
+        8,
+        std::time::Duration::from_millis(2),
+    );
+    let t0 = std::time::Instant::now();
+    let hash = Some(bundle.params_hash);
+    let resp = coord.infer_blocking_encrypted(tenant, Some(variant), bundle.cts, hash, None)?;
+    if let Some(err) = resp.error {
+        coord.shutdown();
+        anyhow::bail!("encrypted request failed: {err}");
+    }
+    let ct = resp.ct_logits.expect("ok response carries the logits ciphertext");
+    let bytes = ct.to_bytes();
+    ensure_parent_dir(Path::new(&response))?;
+    std::fs::write(Path::new(&response), &bytes)?;
+    println!(
+        "served variant={} queue={:?} exec={:?} wall={:?} → wrote {response} ({} bytes)",
+        resp.variant,
+        resp.queue,
+        resp.exec,
+        t0.elapsed(),
+        bytes.len()
+    );
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
+    let tier = arg_value(args, "--tier").unwrap_or_else(|| "plaintext".into());
+    if tier == "he-wire" {
+        return cmd_serve_wire(args);
+    }
     let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let requests: usize = arg_value(args, "--requests").unwrap_or_else(|| "64".into()).parse()?;
-    let tier = arg_value(args, "--tier").unwrap_or_else(|| "plaintext".into());
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
@@ -190,7 +454,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             exec.set_metrics(metrics.clone());
             (router, std::sync::Arc::new(exec))
         }
-        other => anyhow::bail!("unknown tier {other} (expected plaintext|he)"),
+        other => anyhow::bail!("unknown tier {other} (expected plaintext|he|he-wire)"),
     };
     println!("variants:");
     for v in router.variants() {

@@ -17,6 +17,13 @@ pub struct Metrics {
     pub plan_cache_hits: AtomicU64,
     /// Encrypted-tier requests that forced a plan compilation.
     pub plan_cache_misses: AtomicU64,
+    /// Wire-tier key-registry lookups that found the tenant's EvalKeySet
+    /// (coordinator::KeyRegistry; DESIGN.md S15).
+    pub registry_hits: AtomicU64,
+    /// Wire-tier lookups for an unregistered (or evicted) tenant.
+    pub registry_misses: AtomicU64,
+    /// Tenants dropped from the key registry (LRU or explicit removal).
+    pub registry_evictions: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -60,13 +67,16 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
-             mean={:?} p50≤{:?} p99≤{:?}",
+             key_registry={}h/{}m/{}e mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
             self.degraded.load(Ordering::Relaxed),
             self.plan_cache_hits.load(Ordering::Relaxed),
             self.plan_cache_misses.load(Ordering::Relaxed),
+            self.registry_hits.load(Ordering::Relaxed),
+            self.registry_misses.load(Ordering::Relaxed),
+            self.registry_evictions.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),

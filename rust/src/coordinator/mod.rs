@@ -6,30 +6,46 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod service;
 
 pub use batcher::{Batcher, Pending};
 pub use metrics::Metrics;
+pub use registry::KeyRegistry;
 pub use router::{ModelVariant, Router};
-pub use service::{Coordinator, InferenceExecutor, PlaintextExecutor, Request, Response};
+pub use service::{
+    Coordinator, EncryptedRequest, EncryptedResponse, InferenceExecutor, PlaintextExecutor,
+    Request, Response,
+};
 
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 /// Load every trained variant from the artifacts directory:
-/// `(nl → accuracy)` metrics plus the named models.
+/// `(nl → accuracy)` metrics plus the named models. Variants are
+/// discovered by scanning for `model_nl<K>.lgt`, so arbitrarily large or
+/// sparse nl families load without a hardcoded range.
 pub fn load_variants(
     dir: &Path,
 ) -> Result<(BTreeMap<usize, f64>, HashMap<String, crate::stgcn::StgcnModel>)> {
     let mut acc_by_nl = BTreeMap::new();
     let mut models = HashMap::new();
-    for nl in 1..=12usize {
-        let path = dir.join(format!("model_nl{nl}.lgt"));
-        if !path.exists() {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("scanning artifacts directory {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(nl) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("model_nl"))
+            .and_then(|n| n.strip_suffix(".lgt"))
+            .and_then(|n| n.parse::<usize>().ok())
+        else {
             continue;
-        }
+        };
+        let path = entry.path();
         let model = crate::stgcn::StgcnModel::load(&path, crate::graph::Graph::ntu_rgbd())
             .with_context(|| format!("loading {}", path.display()))?;
         let tf = crate::util::tensorio::TensorFile::load(&path)?;
@@ -85,4 +101,25 @@ pub fn he_from_artifacts(
         router_from(&acc_by_nl, cost),
         crate::he_infer::HeExecutor::new(models, threads, 7),
     ))
+}
+
+/// Build a router + the **wire** executor tier (DESIGN.md S15): encrypted
+/// requests only, per-tenant eval keys through a [`KeyRegistry`] bounded
+/// at `registry_capacity` tenants. The executor comes back fully wired to
+/// `metrics` (registry hits/misses/evictions and plan-cache counters).
+pub fn wire_from_artifacts(
+    dir: &Path,
+    cost: &crate::costmodel::OpCostModel,
+    threads: usize,
+    registry_capacity: usize,
+    metrics: std::sync::Arc<Metrics>,
+) -> Result<(Router, crate::wire::WireExecutor)> {
+    let (acc_by_nl, models) = load_variants(dir)?;
+    let registry = std::sync::Arc::new(KeyRegistry::with_metrics(
+        registry_capacity,
+        Some(metrics.clone()),
+    ));
+    let mut executor = crate::wire::WireExecutor::new(models, threads, registry);
+    executor.set_metrics(metrics);
+    Ok((router_from(&acc_by_nl, cost), executor))
 }

@@ -1,0 +1,154 @@
+//! Multi-tenant key registry (DESIGN.md S15): clients register key
+//! material under a tenant/session id; the serving tier looks it up per
+//! request. Bounded LRU — registering past capacity evicts the
+//! least-recently-used tenant, dropping its keys and any serving state
+//! hanging off the entry `Arc`. Hits, misses and evictions are mirrored
+//! into [`Metrics`] when one is attached.
+//!
+//! Generic over the entry type so the coordinator does not depend on the
+//! wire module: the he-wire tier instantiates
+//! `KeyRegistry<wire::TenantKeys>`.
+
+use super::metrics::Metrics;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+struct Inner<T> {
+    entries: HashMap<String, Arc<T>>,
+    /// Recency order, least-recent first.
+    order: VecDeque<String>,
+}
+
+/// Thread-safe bounded LRU registry of per-tenant state.
+pub struct KeyRegistry<T> {
+    capacity: usize,
+    metrics: Option<Arc<Metrics>>,
+    inner: Mutex<Inner<T>>,
+}
+
+impl<T> KeyRegistry<T> {
+    /// Registry holding at most `capacity` tenants (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self::with_metrics(capacity, None)
+    }
+
+    pub fn with_metrics(capacity: usize, metrics: Option<Arc<Metrics>>) -> Self {
+        KeyRegistry {
+            capacity: capacity.max(1),
+            metrics,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+        }
+    }
+
+    fn touch(order: &mut VecDeque<String>, id: &str) {
+        order.retain(|t| t != id);
+        order.push_back(id.to_string());
+    }
+
+    /// Register (or replace) a tenant's entry, evicting the
+    /// least-recently-used tenant when over capacity.
+    pub fn register(&self, id: &str, value: T) -> Arc<T> {
+        let entry = Arc::new(value);
+        let mut inner = self.inner.lock().unwrap();
+        inner.entries.insert(id.to_string(), entry.clone());
+        Self::touch(&mut inner.order, id);
+        while inner.entries.len() > self.capacity {
+            // order and entries stay in sync, so front() is always live
+            let victim = inner.order.pop_front().expect("registry order underflow");
+            inner.entries.remove(&victim);
+            if let Some(m) = &self.metrics {
+                m.registry_evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        entry
+    }
+
+    /// Look up a tenant, refreshing its recency. Counts a registry hit or
+    /// miss in the attached metrics.
+    pub fn get(&self, id: &str) -> Option<Arc<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        let found = inner.entries.get(id).cloned();
+        if found.is_some() {
+            Self::touch(&mut inner.order, id);
+        }
+        if let Some(m) = &self.metrics {
+            let field = if found.is_some() { &m.registry_hits } else { &m.registry_misses };
+            field.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Drop a tenant explicitly (counted as an eviction).
+    pub fn remove(&self, id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.order.retain(|t| t != id);
+        let removed = inner.entries.remove(id).is_some();
+        if removed {
+            if let Some(m) = &self.metrics {
+                m.registry_evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        removed
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_lru_eviction_order() {
+        let r: KeyRegistry<u32> = KeyRegistry::new(2);
+        r.register("a", 1);
+        r.register("b", 2);
+        assert_eq!(*r.get("a").unwrap(), 1); // refresh a: b is now LRU
+        r.register("c", 3);
+        assert!(r.contains("a"));
+        assert!(!r.contains("b"), "least-recently-used must be evicted");
+        assert!(r.contains("c"));
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn test_reregister_replaces_without_eviction() {
+        let r: KeyRegistry<u32> = KeyRegistry::new(2);
+        r.register("a", 1);
+        r.register("a", 9);
+        assert_eq!(r.len(), 1);
+        assert_eq!(*r.get("a").unwrap(), 9);
+    }
+
+    #[test]
+    fn test_metrics_counts() {
+        let m = Arc::new(Metrics::default());
+        let r: KeyRegistry<u32> = KeyRegistry::with_metrics(1, Some(m.clone()));
+        assert!(r.get("a").is_none());
+        r.register("a", 1);
+        assert!(r.get("a").is_some());
+        r.register("b", 2); // evicts a
+        assert!(r.get("a").is_none());
+        assert_eq!(m.registry_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(m.registry_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.registry_evictions.load(Ordering::Relaxed), 1);
+        r.remove("b");
+        assert_eq!(m.registry_evictions.load(Ordering::Relaxed), 2);
+        assert!(r.is_empty());
+    }
+}

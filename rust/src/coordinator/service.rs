@@ -2,10 +2,16 @@
 //! batching) plus a worker pool executing batches. Thread-based (the
 //! offline environment has no tokio); HE work is CPU-bound anyway, so
 //! threads are the right shape.
+//!
+//! Two request shapes share the same pipeline: plaintext [`Request`]s
+//! (trusted tiers) and [`EncryptedRequest`]s — tenant-tagged ciphertext
+//! bundles for the wire tier (DESIGN.md S15), answered with the logits
+//! ciphertext in an [`EncryptedResponse`].
 
 use super::batcher::{Batcher, Pending};
 use super::metrics::Metrics;
 use super::router::Router;
+use crate::ckks::Ciphertext;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -18,6 +24,28 @@ use std::time::{Duration, Instant};
 /// tier, or a mock for tests).
 pub trait InferenceExecutor: Send + Sync + 'static {
     fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>>;
+
+    /// Serve one encrypted request: the tenant's ciphertexts in, the
+    /// logits ciphertext out. `params_hash` is the `wire::params_hash`
+    /// stamp of the parameter set the ciphertexts were encrypted under
+    /// (from the request's `CtBundle`) — the wire tier rejects it if it
+    /// doesn't match the tenant's registered keys, so cross-chain
+    /// ciphertexts error instead of decoding as silent garbage. Only the
+    /// wire tier implements this; every other tier rejects so an
+    /// encrypted request can never silently fall through to a tier that
+    /// would need plaintext.
+    fn infer_encrypted(
+        &self,
+        _variant: &str,
+        _tenant: &str,
+        _cts: &[Ciphertext],
+        _params_hash: Option<u64>,
+    ) -> Result<Ciphertext> {
+        anyhow::bail!(
+            "this executor tier does not accept encrypted-wire requests \
+             (serve with --tier he-wire)"
+        )
+    }
 }
 
 /// Plaintext executor over loaded STGCN models (one per variant).
@@ -35,7 +63,7 @@ impl InferenceExecutor for PlaintextExecutor {
     }
 }
 
-/// A client request.
+/// A client request (plaintext clip — the trusted tiers).
 pub struct Request {
     pub clip: Vec<f64>,
     /// Latency SLA; `None` = best accuracy.
@@ -54,16 +82,64 @@ pub struct Response {
     pub error: Option<String>,
 }
 
+/// An encrypted request on the wire tier: the server sees only the
+/// tenant id (to find the registered `EvalKeySet`) and ciphertexts.
+pub struct EncryptedRequest {
+    pub tenant: String,
+    /// Variant the tenant's keys were generated for. `None` lets the
+    /// router pick by budget — the executor then rejects the request if
+    /// the tenant's keys don't cover the selected variant's plan.
+    pub variant: Option<String>,
+    pub cts: Vec<Ciphertext>,
+    /// `wire::params_hash` stamp from the request's `CtBundle`; checked
+    /// against the tenant's registered keys by the wire executor.
+    pub params_hash: Option<u64>,
+    pub latency_budget_s: Option<f64>,
+    pub resp: SyncSender<EncryptedResponse>,
+}
+
+/// The encrypted reply: the logits ciphertext (only the tenant's secret
+/// key can open it), or an error.
+#[derive(Clone, Debug)]
+pub struct EncryptedResponse {
+    pub id: u64,
+    pub variant: String,
+    pub ct_logits: Option<Ciphertext>,
+    pub queue: Duration,
+    pub exec: Duration,
+    pub error: Option<String>,
+}
+
+/// Intake union: both request shapes share the leader/batcher/worker
+/// pipeline.
+enum Intake {
+    Clear(Request),
+    Encrypted(EncryptedRequest),
+}
+
+/// One batched unit of work, payload per request shape.
+enum Job {
+    Clear {
+        clip: Vec<f64>,
+        resp: SyncSender<Response>,
+    },
+    Encrypted {
+        tenant: String,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        resp: SyncSender<EncryptedResponse>,
+    },
+}
+
 struct Work {
     id: u64,
-    clip: Vec<f64>,
     enqueued: Instant,
-    resp: SyncSender<Response>,
+    job: Job,
 }
 
 /// The running service.
 pub struct Coordinator {
-    submit_tx: Sender<Request>,
+    submit_tx: Sender<Intake>,
     leader: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
@@ -101,7 +177,7 @@ impl Coordinator {
         max_wait: Duration,
     ) -> Self {
         let router = Arc::new(router);
-        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let (submit_tx, submit_rx) = mpsc::channel::<Intake>();
         let (dispatch_tx, dispatch_rx) = mpsc::channel::<(String, Vec<Pending<Work>>)>();
         let dispatch_rx = Arc::new(Mutex::new(dispatch_rx));
 
@@ -135,7 +211,16 @@ impl Coordinator {
     pub fn submit(&self, req: Request) -> Result<()> {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.submit_tx
-            .send(req)
+            .send(Intake::Clear(req))
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))
+    }
+
+    /// Submit an encrypted request; the ciphertext response arrives on
+    /// `req.resp`.
+    pub fn submit_encrypted(&self, req: EncryptedRequest) -> Result<()> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submit_tx
+            .send(Intake::Encrypted(req))
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))
     }
 
@@ -148,6 +233,28 @@ impl Coordinator {
         let (tx, rx) = mpsc::sync_channel(1);
         self.submit(Request {
             clip,
+            latency_budget_s,
+            resp: tx,
+        })?;
+        Ok(rx.recv()?)
+    }
+
+    /// Convenience: submit an encrypted request and wait. `params_hash`
+    /// is the request bundle's parameter-set stamp (`CtBundle::params_hash`).
+    pub fn infer_blocking_encrypted(
+        &self,
+        tenant: String,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        latency_budget_s: Option<f64>,
+    ) -> Result<EncryptedResponse> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.submit_encrypted(EncryptedRequest {
+            tenant,
+            variant,
+            cts,
+            params_hash,
             latency_budget_s,
             resp: tx,
         })?;
@@ -167,7 +274,7 @@ impl Coordinator {
 }
 
 fn leader_loop(
-    submit_rx: Receiver<Request>,
+    submit_rx: Receiver<Intake>,
     dispatch_tx: Sender<(String, Vec<Pending<Work>>)>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
@@ -179,24 +286,53 @@ fn leader_loop(
     let tick = max_wait.max(Duration::from_millis(1)) / 2;
     loop {
         match submit_rx.recv_timeout(tick) {
-            Ok(req) => {
-                let variant = router.select(req.latency_budget_s);
-                if let Some(budget) = req.latency_budget_s {
-                    if variant.latency_s > budget {
+            Ok(intake) => {
+                // route: pinned variant (encrypted requests carry the one
+                // their keys cover) or SLA selection; count degrades
+                let (variant_name, budget, job) = match intake {
+                    Intake::Clear(req) => {
+                        let variant = router.select(req.latency_budget_s);
+                        (
+                            variant.name.clone(),
+                            req.latency_budget_s,
+                            Job::Clear {
+                                clip: req.clip,
+                                resp: req.resp,
+                            },
+                        )
+                    }
+                    Intake::Encrypted(req) => {
+                        let name = req
+                            .variant
+                            .clone()
+                            .unwrap_or_else(|| router.select(req.latency_budget_s).name.clone());
+                        (
+                            name,
+                            req.latency_budget_s,
+                            Job::Encrypted {
+                                tenant: req.tenant,
+                                cts: req.cts,
+                                params_hash: req.params_hash,
+                                resp: req.resp,
+                            },
+                        )
+                    }
+                };
+                if let (Some(budget), Some(v)) = (budget, router.get(&variant_name)) {
+                    if v.latency_s > budget {
                         metrics.degraded.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 let id = next_id.fetch_add(1, Ordering::Relaxed);
                 batcher.push(
-                    &variant.name,
+                    &variant_name,
                     Pending {
                         id,
                         enqueued: Instant::now(),
                         payload: Work {
                             id,
-                            clip: req.clip,
                             enqueued: Instant::now(),
-                            resp: req.resp,
+                            job,
                         },
                     },
                 );
@@ -216,6 +352,29 @@ fn leader_loop(
     }
 }
 
+/// Shared per-request accounting (success/failure counters + latency
+/// histogram) — one place, so the plaintext and encrypted arms can never
+/// drift — mapped into the response shape by `make`.
+fn account<T, R>(
+    metrics: &Metrics,
+    queue: Duration,
+    exec: Duration,
+    result: Result<T>,
+    make: impl FnOnce(Option<T>, Option<String>) -> R,
+) -> R {
+    match result {
+        Ok(v) => {
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.observe_latency(queue + exec);
+            make(Some(v), None)
+        }
+        Err(e) => {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
+            make(None, Some(e.to_string()))
+        }
+    }
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<(String, Vec<Pending<Work>>)>>>,
     executor: Arc<dyn InferenceExecutor>,
@@ -231,34 +390,37 @@ fn worker_loop(
             let work = item.payload;
             let queue = work.enqueued.elapsed();
             let t0 = Instant::now();
-            let result = executor.infer(&variant, &work.clip);
-            let exec = t0.elapsed();
-            let resp = match result {
-                Ok(logits) => {
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.observe_latency(queue + exec);
-                    Response {
+            match work.job {
+                Job::Clear { clip, resp } => {
+                    let result = executor.infer(&variant, &clip);
+                    let exec = t0.elapsed();
+                    let out = account(&metrics, queue, exec, result, |v, error| Response {
                         id: work.id,
                         variant: variant.clone(),
-                        logits,
+                        logits: v.unwrap_or_default(),
                         queue,
                         exec,
-                        error: None,
-                    }
+                        error,
+                    });
+                    let _ = resp.send(out);
                 }
-                Err(e) => {
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    Response {
-                        id: work.id,
-                        variant: variant.clone(),
-                        logits: vec![],
-                        queue,
-                        exec,
-                        error: Some(e.to_string()),
-                    }
+                Job::Encrypted { tenant, cts, params_hash, resp } => {
+                    let result = executor.infer_encrypted(&variant, &tenant, &cts, params_hash);
+                    let exec = t0.elapsed();
+                    let out =
+                        account(&metrics, queue, exec, result, |ct_logits, error| {
+                            EncryptedResponse {
+                                id: work.id,
+                                variant: variant.clone(),
+                                ct_logits,
+                                queue,
+                                exec,
+                                error,
+                            }
+                        });
+                    let _ = resp.send(out);
                 }
-            };
-            let _ = work.resp.send(resp);
+            }
         }
     }
 }
@@ -347,6 +509,86 @@ mod tests {
         assert!(r.error.is_some());
         assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 1);
         c.shutdown();
+    }
+
+    #[test]
+    fn test_encrypted_requests_flow_and_default_tier_rejects() {
+        // a mock ct: the pipeline treats ciphertexts as opaque payloads
+        fn mock_ct(tag: u64) -> crate::ckks::Ciphertext {
+            let limb = vec![tag; 8];
+            let poly = crate::ckks::poly::RnsPoly {
+                limbs: vec![limb],
+                nq: 1,
+                has_special: false,
+                is_ntt: true,
+            };
+            crate::ckks::Ciphertext {
+                c0: poly.clone(),
+                c1: poly,
+                scale: 1.0,
+            }
+        }
+
+        struct MockWire;
+        impl InferenceExecutor for MockWire {
+            fn infer(&self, _v: &str, _clip: &[f64]) -> Result<Vec<f64>> {
+                anyhow::bail!("no plaintext on the wire tier")
+            }
+            fn infer_encrypted(
+                &self,
+                _variant: &str,
+                tenant: &str,
+                cts: &[Ciphertext],
+                _params_hash: Option<u64>,
+            ) -> Result<Ciphertext> {
+                anyhow::ensure!(tenant == "alice", "unknown tenant");
+                Ok(cts[0].clone())
+            }
+        }
+
+        let c = Coordinator::start(
+            test_router(),
+            Arc::new(MockWire),
+            2,
+            4,
+            Duration::from_millis(2),
+        );
+        // encrypted request roundtrips through leader → batcher → worker
+        let r = c
+            .infer_blocking_encrypted(
+                "alice".into(),
+                Some("fast".into()),
+                vec![mock_ct(7)],
+                None,
+                None,
+            )
+            .unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.variant, "fast");
+        assert_eq!(r.ct_logits.unwrap().c0.limbs[0][0], 7);
+        // unknown tenant surfaces as an error response, not a hang
+        let r2 = c
+            .infer_blocking_encrypted("bob".into(), None, vec![mock_ct(1)], None, None)
+            .unwrap();
+        assert!(r2.error.is_some());
+        // plaintext clip on this tier errors through the same pipeline
+        let r3 = c.infer_blocking(vec![1.0], None).unwrap();
+        assert!(r3.error.is_some());
+        c.shutdown();
+
+        // executors without a wire tier reject encrypted requests by default
+        let c2 = Coordinator::start(
+            test_router(),
+            Arc::new(MockExec),
+            1,
+            1,
+            Duration::from_millis(1),
+        );
+        let r4 = c2
+            .infer_blocking_encrypted("alice".into(), None, vec![mock_ct(2)], None, None)
+            .unwrap();
+        assert!(r4.error.unwrap().contains("does not accept encrypted"));
+        c2.shutdown();
     }
 
     #[test]

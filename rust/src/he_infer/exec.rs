@@ -26,7 +26,7 @@
 use super::backend::HeBackend;
 use super::plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
 use crate::ama::{encrypt_clip, AmaLayout};
-use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, Evaluator, Plaintext};
+use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, EvalEngine, Evaluator, Plaintext};
 use crate::coordinator::{InferenceExecutor, Metrics};
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, ensure, Result};
@@ -102,8 +102,12 @@ pub struct PreparedPlan {
 
 impl PreparedPlan {
     /// Pre-encode all plan masks on `engine` (the one-time cost the
-    /// interpreted engine used to pay per request).
-    pub fn new(plan: Arc<HePlan>, engine: &CkksEngine) -> Result<Self> {
+    /// interpreted engine used to pay per request). Takes the key-free
+    /// [`EvalEngine`] half: preparing and executing a plan never requires
+    /// a secret key, which is what lets `wire::WireExecutor` serve
+    /// ciphertexts it cannot open. A full `CkksEngine` derefs to its
+    /// eval half, so trusted-process callers pass `&engine` unchanged.
+    pub fn new(plan: Arc<HePlan>, engine: &EvalEngine) -> Result<Self> {
         ensure!(
             plan.chain == PlanChain::from_ctx(&engine.ctx),
             "plan was compiled against a different modulus chain"
@@ -144,7 +148,7 @@ impl PreparedPlan {
     /// worker for the whole request, waves separated by a barrier).
     pub fn execute(
         &self,
-        engine: &CkksEngine,
+        engine: &EvalEngine,
         inputs: &[Ciphertext],
         threads: usize,
     ) -> Result<Ciphertext> {
@@ -163,6 +167,24 @@ impl PreparedPlan {
             inputs.iter().all(|ct| ct.level() == top),
             "compiled plans are level-position-dependent: every input must \
              sit at the chain top level {top}"
+        );
+        // ...and scale-position-dependent: compile assumed fresh inputs at
+        // exactly Δ (PlanBuilder::fresh_input), and the evaluator asserts
+        // on scale mismatches — reject instead of panicking mid-plan
+        ensure!(
+            inputs.iter().all(|ct| ct.scale == plan.chain.delta),
+            "compiled plans require inputs at the chain's base scale Δ"
+        );
+        // cheap shape guard (O(#limbs), not a data scan): reject
+        // ring-degree mismatches instead of corrupting silently in the
+        // zip-based limb loops. Untrusted wire inputs additionally get a
+        // full residue-reduction scan in WireExecutor::infer_encrypted.
+        ensure!(
+            inputs
+                .iter()
+                .all(|ct| ct.c0.limbs.iter().chain(ct.c1.limbs.iter()).all(|l| l.len() == engine.ctx.n)),
+            "input ciphertexts do not match the engine's ring degree N={}",
+            engine.ctx.n
         );
         let regs: Vec<OnceLock<Ciphertext>> =
             (0..plan.n_regs).map(|_| OnceLock::new()).collect();
@@ -275,6 +297,13 @@ impl PlanKey {
 
 /// One variant's live serving state: engine (keys for exactly the plan's
 /// rotations) + the prepared plan.
+///
+/// **Trust note:** this holds a full [`CkksEngine`] — secret key
+/// included — because the `serve --tier he` tier encrypts and decrypts
+/// server-side as a single-process demo. The documented deployment
+/// default is the `wire` subsystem (`serve --tier he-wire`), whose
+/// serving path is typed against the key-free
+/// [`EvalEngine`] half and cannot decrypt.
 pub struct HeSession {
     pub model: StgcnModel,
     pub layout: AmaLayout,
@@ -300,9 +329,28 @@ fn params_for(model: &StgcnModel, levels: usize) -> CkksParams {
     }
 }
 
+/// Reuse a cached cross-variant plan when it matches this session's
+/// (chain, layout); compile otherwise. One implementation of the cache
+/// staleness rule, shared by the trusted tier ([`HeSession`]) and the
+/// wire tier (`wire::WireExecutor`) so their keying can never drift.
+pub fn plan_for(
+    cached: Option<Arc<HePlan>>,
+    model: &StgcnModel,
+    layout: AmaLayout,
+    chain: &PlanChain,
+    opts: PlanOptions,
+) -> Result<(Arc<HePlan>, bool)> {
+    match cached {
+        Some(p) if p.chain == *chain && p.layout == layout => Ok((p, true)),
+        _ => Ok((Arc::new(compile(model, layout, chain, opts)?), false)),
+    }
+}
+
 /// The geometry a session is built around — computed in exactly one place
-/// so the plan-cache key probe and the session build can never diverge.
-fn geometry(model: &StgcnModel, opts: PlanOptions) -> Result<(AmaLayout, CkksParams)> {
+/// so the plan-cache key probe, the session build, and client-side keygen
+/// (`wire::client::keygen`, which must key against the *server's* layout
+/// and chain) can never diverge.
+pub fn session_geometry(model: &StgcnModel, opts: PlanOptions) -> Result<(AmaLayout, CkksParams)> {
     let probe_params = params_for(model, 1);
     let layout = AmaLayout::new(
         model.t,
@@ -325,7 +373,7 @@ impl HeSession {
         seed: u64,
         cached_plan: Option<Arc<HePlan>>,
     ) -> Result<(Self, Arc<HePlan>, bool)> {
-        let (layout, params) = geometry(&model, opts)?;
+        let (layout, params) = session_geometry(&model, opts)?;
         Self::with_geometry(model, layout, params, opts, seed, cached_plan)
     }
 
@@ -341,13 +389,7 @@ impl HeSession {
     ) -> Result<(Self, Arc<HePlan>, bool)> {
         let ctx = params.build()?;
         let chain = PlanChain::from_ctx(&ctx);
-        let (plan, was_cached) = match cached_plan {
-            Some(p) if p.chain == chain && p.layout == layout => (p, true),
-            _ => (
-                Arc::new(compile(&model, layout, &chain, opts)?),
-                false,
-            ),
-        };
+        let (plan, was_cached) = plan_for(cached_plan, &model, layout, &chain, opts)?;
         let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
         let prepared = PreparedPlan::new(plan.clone(), &engine)?;
         Ok((
@@ -362,8 +404,14 @@ impl HeSession {
         ))
     }
 
-    /// Encrypt → execute the compiled plan → decrypt logits.
-    pub fn infer(&self, clip: &[f64], threads: usize) -> Result<Vec<f64>> {
+    /// Encrypt → execute the compiled plan → decrypt logits, **all in
+    /// this process while holding the secret key** — a
+    /// trusted-single-process convenience for the demo `serve --tier he`
+    /// tier, benches and tests. It is *not* the deployment privacy
+    /// boundary: deployments use the `wire` subsystem
+    /// (`serve --tier he-wire`), where the client encrypts/decrypts and
+    /// the server half ([`EvalEngine`]) never holds a `SecretKey`.
+    pub fn infer_trusted(&self, clip: &[f64], threads: usize) -> Result<Vec<f64>> {
         let plan = &self.prepared.plan;
         let input = encrypt_clip(
             &self.engine,
@@ -440,7 +488,7 @@ impl HeExecutor {
             .get(variant)
             .ok_or_else(|| anyhow!("unknown variant {variant}"))?
             .clone();
-        let (layout, params) = geometry(&model, self.opts)?;
+        let (layout, params) = session_geometry(&model, self.opts)?;
         let key_probe = PlanKey::new(&model, &layout, self.opts);
         let cached = self.plans.lock().unwrap().get(&key_probe).cloned();
         let (session, plan, was_cached) =
@@ -463,7 +511,7 @@ impl InferenceExecutor for HeExecutor {
     fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
         let (session, hit) = self.session(variant)?;
         self.count_cache(&session, hit);
-        session.infer(clip, self.threads)
+        session.infer_trusted(clip, self.threads)
     }
 }
 

@@ -15,7 +15,9 @@ pub mod plan;
 
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
 pub use engine::HeStgcn;
-pub use exec::{execute_with_backend, HeExecutor, HeSession, PlanKey, PreparedPlan};
+pub use exec::{
+    execute_with_backend, session_geometry, HeExecutor, HeSession, PlanKey, PreparedPlan,
+};
 pub use level_plan::{HePlanParams, Method, VariantShape};
 pub use plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
 
@@ -31,6 +33,15 @@ use std::sync::Arc;
 /// coordinator's workers hold. The compiled plan is the default execution
 /// path; [`PrivateInferenceSession::infer_interpreted`] keeps the
 /// original interpreted walk for ablations and the equivalence tests.
+///
+/// **Trust note:** both halves of the boundary live in this one struct —
+/// `encrypt_input`/`decrypt_logits` are the *client* role, `infer` the
+/// *server* role — which makes it a trusted-single-process convenience
+/// for tests, benches and demos. The split-process deployment shape is
+/// the `wire` subsystem (`wire::ClientKeys` on the client,
+/// `wire::WireExecutor` over the key-free `ckks::EvalEngine` on the
+/// server), which `rust/tests/wire_roundtrip.rs` proves bit-identical to
+/// this path.
 pub struct PrivateInferenceSession {
     pub engine: CkksEngine,
     pub layout: AmaLayout,

@@ -3,9 +3,10 @@
 //! reproduction.
 //!
 //! Three-layer architecture (see `README.md` for the map and `DESIGN.md`
-//! for the per-subsystem sections S1–S14):
+//! for the per-subsystem sections S1–S15):
 //! - **L3 (this crate)**: CKKS leveled-HE substrate, AMA-packed encrypted
-//!   STGCN inference engine, level planner, serving coordinator.
+//!   STGCN inference engine, level planner, serving coordinator, and the
+//!   `wire` client/server privacy boundary.
 //! - **L2 (python/compile)**: JAX STGCN model + LinGCN training pipeline
 //!   (structural linearization, polynomial replacement, distillation),
 //!   AOT-lowered to HLO text artifacts.
@@ -34,3 +35,4 @@ pub mod costmodel;
 pub mod coordinator;
 pub mod runtime;
 pub mod util;
+pub mod wire;

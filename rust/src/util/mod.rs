@@ -27,6 +27,19 @@ pub fn fmt_f(x: f64, decimals: usize) -> String {
     format!("{:.*}", decimals, x)
 }
 
+/// Index of the largest logit — the predicted class. NaNs (which would
+/// poison a `partial_cmp().unwrap()` chain) never win against a real
+/// value, and an empty slice returns 0.
+pub fn argmax(v: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if v[best].is_nan() || x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 /// Render an ASCII table (used by the bench harnesses to print the paper's
 /// table rows).
 pub fn ascii_table(headers: &[&str], rows: &[Vec<String>]) -> String {

@@ -33,6 +33,18 @@ impl Rng {
         Rng { s }
     }
 
+    /// Snapshot the generator state (persisted by `wire::ClientKeys` so a
+    /// reloaded client key file continues the same encryption-randomness
+    /// stream instead of resetting it).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

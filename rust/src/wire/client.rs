@@ -1,0 +1,414 @@
+//! The **client half** of the privacy boundary: key generation from a
+//! seed, clip encryption, and logits decryption. A `ClientKeys` value is
+//! the only serializable holder of secret material in the codebase, and
+//! its file (`KIND_CLIENT_KEYS`) is a *local* persistence format — it
+//! never crosses the wire. What ships to the server is the [`EvalKeySet`]
+//! returned alongside it.
+//!
+//! Key generation mirrors `CkksEngine::new`'s draw order exactly (secret,
+//! public, relin, Galois — one seeded stream), so for the same seed and
+//! rotation set the split-process wire path produces bit-identical keys,
+//! ciphertexts and logits to the in-process
+//! `he_infer::PrivateInferenceSession` (asserted by
+//! `rust/tests/wire_roundtrip.rs`).
+
+use super::codec::{ByteReader, ByteWriter, KIND_CLIENT_KEYS};
+use super::format::{read_poly, write_poly, CtBundle, EvalKeySet, WireSerialize};
+use crate::ama::AmaLayout;
+use crate::ckks::keys::{keygen_public, keygen_secret};
+use crate::ckks::{
+    build_eval_keys, encrypt, Ciphertext, CkksContext, CkksParams, Encoder, PublicKey, SecretKey,
+};
+use crate::he_infer::{compile, session_geometry, PlanChain, PlanOptions};
+use crate::stgcn::StgcnModel;
+use crate::util::Rng;
+use anyhow::{ensure, Context, Result};
+use std::sync::{Arc, Mutex};
+
+/// Everything the client must know about a variant to encrypt requests
+/// and read logits **without holding the model**: the published half of
+/// the server's serving geometry (`he_infer::exec::session_geometry`)
+/// plus the logits extraction shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantSpec {
+    /// Graph nodes (one ciphertext each).
+    pub v: usize,
+    /// Input channels of a clip.
+    pub c_in: usize,
+    /// Frames per clip.
+    pub t: usize,
+    /// AMA channel capacity.
+    pub c_max: usize,
+    /// Ciphertext slot count (N/2).
+    pub slots: usize,
+    /// Multiplicative depth of the chain (inputs encrypt at `levels + 1`
+    /// limbs — the plan top).
+    pub levels: usize,
+    /// Output classes (logit `m` lives in slot `m·t`).
+    pub num_classes: usize,
+}
+
+impl VariantSpec {
+    pub fn for_model(model: &StgcnModel, layout: &AmaLayout, params: &CkksParams) -> Self {
+        VariantSpec {
+            v: model.v(),
+            c_in: model.c_in,
+            t: layout.t,
+            c_max: layout.c_max,
+            slots: layout.slots,
+            levels: params.levels,
+            num_classes: model.num_classes(),
+        }
+    }
+
+    pub fn layout(&self) -> Result<AmaLayout> {
+        AmaLayout::new(self.t, self.c_max, self.slots)
+    }
+}
+
+/// Client-side key material and crypto operations. Holds the secret key;
+/// lives on the client, never on the serving side.
+pub struct ClientKeys {
+    pub variant: String,
+    pub spec: VariantSpec,
+    pub params: CkksParams,
+    ctx: Arc<CkksContext>,
+    encoder: Encoder,
+    sk: SecretKey,
+    pk: PublicKey,
+    rng: Mutex<Rng>,
+}
+
+impl ClientKeys {
+    /// Generate a fresh key pair plus the server-shippable [`EvalKeySet`]
+    /// covering `rotations` (the variant plan's `required_rotations`).
+    /// A u64 seed caps the keyspace at 2^64 — fine for the reproducible
+    /// test paths this signature serves; real deployments seed full
+    /// 256-bit state via [`keygen_with_state`].
+    pub fn generate(
+        variant: &str,
+        spec: VariantSpec,
+        params: CkksParams,
+        rotations: &[usize],
+        seed: u64,
+    ) -> Result<(ClientKeys, EvalKeySet)> {
+        let ctx = params.build()?;
+        Self::generate_with_ctx(variant, spec, params, ctx, rotations, Rng::seed_from_u64(seed))
+    }
+
+    /// [`ClientKeys::generate`] against an already-built context (callers
+    /// like [`keygen`] have one from compiling the plan — context
+    /// construction is the expensive part at paper-scale N) and a
+    /// caller-seeded generator.
+    pub fn generate_with_ctx(
+        variant: &str,
+        spec: VariantSpec,
+        params: CkksParams,
+        ctx: Arc<CkksContext>,
+        rotations: &[usize],
+        mut rng: Rng,
+    ) -> Result<(ClientKeys, EvalKeySet)> {
+        ensure!(
+            ctx.slots() == spec.slots && ctx.max_level() == spec.levels,
+            "variant spec geometry disagrees with the parameter set"
+        );
+        let encoder = Encoder::new(ctx.n);
+        // one stream, same draw order as CkksEngine::new
+        let sk = keygen_secret(&ctx, &mut rng);
+        let pk = keygen_public(&ctx, &sk, &mut rng);
+        let keys = build_eval_keys(&ctx, &encoder, &sk, rotations, false, &mut rng);
+        let key_set = EvalKeySet {
+            variant: variant.to_string(),
+            params: params.clone(),
+            keys: Arc::new(keys),
+        };
+        Ok((
+            ClientKeys {
+                variant: variant.to_string(),
+                spec,
+                params,
+                ctx,
+                encoder,
+                sk,
+                pk,
+                rng: Mutex::new(rng),
+            },
+            key_set,
+        ))
+    }
+
+    /// Encrypt a `[V, C_in, T]` clip into per-node ciphertexts at the
+    /// plan's top level — the same `ama::pack_clip` packing and
+    /// encode-then-encrypt steps as the in-process session, so the wire
+    /// path's ciphertexts are bit-identical to `encrypt_clip`'s.
+    ///
+    /// Advances the encryption RNG. A caller that persists this value as
+    /// a key file **must re-serialize it after encrypting** (the CLI
+    /// does): re-running from a stale file would reuse the same
+    /// encryption randomness, which leaks plaintext differences.
+    pub fn encrypt_clip(&self, x: &[f64]) -> Result<Vec<Ciphertext>> {
+        let layout = self.spec.layout()?;
+        let packed = crate::ama::pack_clip(&layout, x, self.spec.v, self.spec.c_in)?;
+        let nq = self.spec.levels + 1;
+        let mut rng = self.rng.lock().unwrap();
+        Ok(packed
+            .into_iter()
+            .map(|slots| {
+                let pt = self.encoder.encode(&self.ctx, &slots, self.ctx.scale, nq);
+                encrypt::encrypt(&self.ctx, &self.pk, &pt, &mut *rng)
+            })
+            .collect())
+    }
+
+    /// Encrypt a clip and stamp it into a shippable [`CtBundle`].
+    pub fn encrypt_request(&self, x: &[f64]) -> Result<CtBundle> {
+        Ok(CtBundle::new(&self.params, self.encrypt_clip(x)?))
+    }
+
+    /// Mix fresh entropy into the encryption RNG. The CLI calls this per
+    /// invocation so concurrent `encrypt` runs — or a restored backup of
+    /// the key file — can never replay the same randomness stream
+    /// against different plaintexts. XORing uniform entropy into the
+    /// state yields a uniform state; the all-zero state (invalid for
+    /// xoshiro) is patched.
+    pub fn mix_entropy(&self, entropy: [u64; 4]) {
+        let mut rng = self.rng.lock().unwrap();
+        let s = rng.state();
+        let mut mixed = [
+            s[0] ^ entropy[0],
+            s[1] ^ entropy[1],
+            s[2] ^ entropy[2],
+            s[3] ^ entropy[3],
+        ];
+        if mixed == [0u64; 4] {
+            mixed[0] = 1;
+        }
+        *rng = Rng::from_state(mixed);
+    }
+
+    /// Decrypt a logits ciphertext returned by the server and extract the
+    /// class scores (slot `m·t` per class, mirroring
+    /// `HePlan::extract_logits`). The response crossed the wire, so its
+    /// geometry is validated against the client chain first — a
+    /// corrupt-but-checksummed frame errors instead of panicking or
+    /// decoding garbage.
+    pub fn decrypt_logits(&self, ct: &Ciphertext) -> Result<Vec<f64>> {
+        ensure!(
+            ct.c0.nq <= self.ctx.moduli.len()
+                && ct.c0.limbs.iter().chain(ct.c1.limbs.iter()).all(|l| l.len() == self.ctx.n),
+            "response ciphertext does not match the client's parameter chain"
+        );
+        ensure!(
+            ct.c0.is_reduced(&self.ctx) && ct.c1.is_reduced(&self.ctx),
+            "response ciphertext residues are not reduced modulo the chain"
+        );
+        let pt = encrypt::decrypt(&self.ctx, &self.sk, ct);
+        let slots = self.encoder.decode(&self.ctx, &pt);
+        Ok((0..self.spec.num_classes)
+            .map(|m| slots[m * self.spec.t])
+            .collect())
+    }
+}
+
+impl WireSerialize for ClientKeys {
+    const KIND: u8 = KIND_CLIENT_KEYS;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        w.put_str(&self.variant);
+        CkksParams::write_payload(&self.params, w);
+        for v in [
+            self.spec.v,
+            self.spec.c_in,
+            self.spec.t,
+            self.spec.c_max,
+            self.spec.slots,
+            self.spec.levels,
+            self.spec.num_classes,
+        ] {
+            w.put_u64(v as u64);
+        }
+        w.put_u64_slice(&self.rng.lock().unwrap().state());
+        write_poly(w, &self.sk.s);
+        write_poly(w, &self.pk.b);
+        write_poly(w, &self.pk.a);
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        let variant = r.str()?;
+        let params = CkksParams::read_payload(r)?;
+        let mut dims = [0usize; 7];
+        for d in dims.iter_mut() {
+            *d = r.u64()? as usize;
+        }
+        let spec = VariantSpec {
+            v: dims[0],
+            c_in: dims[1],
+            t: dims[2],
+            c_max: dims[3],
+            slots: dims[4],
+            levels: dims[5],
+            num_classes: dims[6],
+        };
+        // the checksum is integrity, not authenticity: implausible
+        // dimensions must error here, not divide-by-zero in layout() or
+        // index out of bounds in decrypt_logits
+        let block = spec.c_max.checked_mul(spec.t);
+        let clip_len = spec
+            .v
+            .checked_mul(spec.c_in)
+            .and_then(|p| p.checked_mul(spec.t));
+        let logit_top = spec
+            .num_classes
+            .checked_sub(1)
+            .and_then(|m| m.checked_mul(spec.t));
+        ensure!(
+            spec.v >= 1
+                && spec.c_in >= 1
+                && spec.num_classes >= 1
+                && block.is_some_and(|b| b >= 1 && b <= spec.slots)
+                && clip_len.is_some()
+                && logit_top.is_some_and(|i| i < spec.slots),
+            "client key file: implausible variant spec dimensions"
+        );
+        let state = r.vec_u64(4)?;
+        // xoshiro's all-zero state is a fixed point emitting zeros
+        // forever — a tampered file must not silently destroy the
+        // encryption randomness (same guard as keygen_with_state)
+        ensure!(
+            state != [0u64; 4],
+            "client key file: all-zero RNG state is invalid"
+        );
+        let s = read_poly(r)?;
+        let b = read_poly(r)?;
+        let a = read_poly(r)?;
+        let ctx = params.build()?;
+        ensure!(
+            s.nq == ctx.moduli.len() && s.has_special && s.is_ntt,
+            "client key file: secret key shape mismatch"
+        );
+        ensure!(
+            b.nq == ctx.moduli.len() && a.nq == b.nq && !b.has_special && !a.has_special
+                && b.is_ntt && a.is_ntt,
+            "client key file: public key shape mismatch"
+        );
+        ensure!(
+            s.limbs.iter().chain(b.limbs.iter()).chain(a.limbs.iter()).all(|l| l.len() == ctx.n),
+            "client key file: key polynomial degree mismatch"
+        );
+        ensure!(
+            s.is_reduced(&ctx) && b.is_reduced(&ctx) && a.is_reduced(&ctx),
+            "client key file: key residues are not reduced modulo the chain"
+        );
+        ensure!(
+            ctx.slots() == spec.slots && ctx.max_level() == spec.levels,
+            "client key file: spec geometry disagrees with the parameter set"
+        );
+        let encoder = Encoder::new(ctx.n);
+        Ok(ClientKeys {
+            variant,
+            spec,
+            params,
+            ctx,
+            encoder,
+            sk: SecretKey { s },
+            pk: PublicKey { b, a },
+            rng: Mutex::new(Rng::from_state([state[0], state[1], state[2], state[3]])),
+        })
+    }
+}
+
+/// Client-side keygen against a published variant: derive the serving
+/// geometry and the plan's rotation set exactly as the server will
+/// (`session_geometry` + `compile` are deterministic), then generate
+/// keys. Returns the local secret half and the server-shippable
+/// [`EvalKeySet`]. The u64 seed makes this the *reproducible* entry
+/// point (tests, the bit-identity suite); deployments use
+/// [`keygen_with_state`].
+pub fn keygen(
+    model: &StgcnModel,
+    variant: &str,
+    opts: PlanOptions,
+    seed: u64,
+) -> Result<(ClientKeys, EvalKeySet)> {
+    keygen_with_rng(model, variant, opts, Rng::seed_from_u64(seed))
+}
+
+/// [`keygen`] seeded with full 256-bit generator state (e.g. four words
+/// from the OS entropy device — the CLI default): a single u64 seed
+/// caps the secret keyspace at 2^64.
+pub fn keygen_with_state(
+    model: &StgcnModel,
+    variant: &str,
+    opts: PlanOptions,
+    state: [u64; 4],
+) -> Result<(ClientKeys, EvalKeySet)> {
+    ensure!(state != [0u64; 4], "all-zero generator state is invalid");
+    keygen_with_rng(model, variant, opts, Rng::from_state(state))
+}
+
+fn keygen_with_rng(
+    model: &StgcnModel,
+    variant: &str,
+    opts: PlanOptions,
+    rng: Rng,
+) -> Result<(ClientKeys, EvalKeySet)> {
+    let (layout, params) = session_geometry(model, opts)?;
+    let ctx = params.build().context("building CKKS context for keygen")?;
+    let plan = compile(model, layout, &PlanChain::from_ctx(&ctx), opts)?;
+    let spec = VariantSpec::for_model(model, &layout, &params);
+    ClientKeys::generate_with_ctx(variant, spec, params, ctx, &plan.required_rotations(), rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn tiny() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
+    }
+
+    #[test]
+    fn test_client_keys_file_roundtrip_preserves_crypto() {
+        let model = tiny();
+        let (client, _ks) = keygen(&model, "v", PlanOptions::default(), 77).unwrap();
+        let bytes = client.to_bytes();
+        let back = ClientKeys::from_bytes(&bytes).unwrap();
+        assert_eq!(client.variant, back.variant);
+        assert_eq!(client.spec, back.spec);
+        assert_eq!(client.params, back.params);
+        // same rng state → the reloaded client encrypts identical bits
+        let x: Vec<f64> = (0..model.v() * model.c_in * model.t)
+            .map(|i| (i as f64) / 100.0)
+            .collect();
+        let a = client.encrypt_clip(&x).unwrap();
+        let b = back.encrypt_clip(&x).unwrap();
+        assert_eq!(a, b);
+        // and decrypts what the original encrypted
+        let ct = &a[0];
+        assert_eq!(
+            client.decrypt_logits(ct).unwrap(),
+            back.decrypt_logits(ct).unwrap()
+        );
+    }
+
+    #[test]
+    fn test_clip_shape_is_checked() {
+        let model = tiny();
+        let (client, _) = keygen(&model, "v", PlanOptions::default(), 1).unwrap();
+        assert!(client.encrypt_clip(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn test_corrupt_client_key_file_rejected() {
+        let model = tiny();
+        let (client, _) = keygen(&model, "v", PlanOptions::default(), 2).unwrap();
+        let bytes = client.to_bytes();
+        for pos in (0..bytes.len()).step_by(131) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(ClientKeys::from_bytes(&bad).is_err(), "flip at {pos}");
+        }
+        assert!(ClientKeys::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Binary framing for the wire formats (DESIGN.md S15).
+//!
+//! Every serialized object is one **frame**:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"LGWR"
+//! 4       2     format version (little-endian u16)
+//! 6       1     record kind (one of the KIND_* constants)
+//! 7       1     reserved, must be zero
+//! 8       8     payload length (little-endian u64)
+//! 16      len   payload
+//! 16+len  8     FNV-1a 64 checksum over bytes [0, 16+len)
+//! ```
+//!
+//! The checksum covers header *and* payload and is verified before a
+//! single payload byte is parsed, so truncation and bit flips anywhere in
+//! the frame surface as `Err` — decoding never panics and never allocates
+//! from unvalidated lengths. All integers are little-endian; `f64`s travel
+//! as their exact IEEE-754 bit patterns (the same lossless discipline as
+//! `HePlan::to_text`).
+
+use anyhow::{bail, ensure, Result};
+
+/// Frame magic: "LinGcn WiRe".
+pub const MAGIC: [u8; 4] = *b"LGWR";
+/// Wire format version. Readers reject anything else.
+pub const VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 16;
+const CHECKSUM_LEN: usize = 8;
+
+/// Record kinds (one per serializable type).
+pub const KIND_PARAMS: u8 = 1;
+pub const KIND_PUBLIC_KEY: u8 = 2;
+pub const KIND_KSWITCH_KEY: u8 = 3;
+pub const KIND_EVAL_KEY_SET: u8 = 4;
+pub const KIND_CIPHERTEXT: u8 = 5;
+pub const KIND_CT_BUNDLE: u8 = 6;
+pub const KIND_CLIENT_KEYS: u8 = 7;
+
+/// FNV-1a 64-bit over a byte slice (integrity only — tamper *detection*,
+/// not authentication; see the threat model in DESIGN.md S15).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Wrap a payload in a checksummed frame.
+pub fn frame(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + CHECKSUM_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = fnv1a64(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Like [`frame`], but the payload is written straight into the frame
+/// buffer (header first, length backpatched, checksum appended) — no
+/// intermediate payload copy. This matters on the serving path, where
+/// ciphertext bundles are tens of MiB at paper scale.
+pub fn frame_with(kind: u8, write_payload: impl FnOnce(&mut ByteWriter)) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.push(kind);
+    buf.push(0);
+    buf.extend_from_slice(&0u64.to_le_bytes()); // length backpatched below
+    let mut w = ByteWriter { buf };
+    write_payload(&mut w);
+    let mut buf = w.buf;
+    let payload_len = (buf.len() - HEADER_LEN) as u64;
+    buf[8..16].copy_from_slice(&payload_len.to_le_bytes());
+    let sum = fnv1a64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Verify a frame's header and checksum and return its payload slice.
+/// Rejects wrong magic/version/kind, reserved-byte damage, length
+/// mismatches (truncation or padding), and any checksum failure.
+pub fn unframe(expected_kind: u8, bytes: &[u8]) -> Result<&[u8]> {
+    ensure!(
+        bytes.len() >= HEADER_LEN + CHECKSUM_LEN,
+        "wire frame too short ({} bytes)",
+        bytes.len()
+    );
+    ensure!(bytes[0..4] == MAGIC, "wire frame magic mismatch");
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    ensure!(version == VERSION, "unsupported wire version {version}");
+    let kind = bytes[6];
+    ensure!(
+        kind == expected_kind,
+        "wire record kind mismatch: expected {expected_kind}, got {kind}"
+    );
+    ensure!(bytes[7] == 0, "wire frame reserved byte damaged");
+    let len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let expected_total = (HEADER_LEN as u64)
+        .checked_add(len)
+        .and_then(|v| v.checked_add(CHECKSUM_LEN as u64));
+    match expected_total {
+        Some(total) if total == bytes.len() as u64 => {}
+        _ => bail!(
+            "wire frame length mismatch: header says {len} payload bytes, \
+             frame is {} bytes",
+            bytes.len()
+        ),
+    }
+    let body_end = bytes.len() - CHECKSUM_LEN;
+    let want = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let got = fnv1a64(&bytes[..body_end]);
+    ensure!(got == want, "wire frame checksum mismatch (tampered or corrupt)");
+    Ok(&bytes[HEADER_LEN..body_end])
+}
+
+/// Append-only payload writer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f64 as its exact bit pattern.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_u64_slice(&mut self, vs: &[u64]) {
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked payload reader: every accessor returns `Err` past the
+/// end, and vector reads validate the byte budget *before* allocating.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        ensure!(
+            self.remaining() >= n,
+            "wire payload truncated: need {n} bytes, {} left",
+            self.remaining()
+        );
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// A u8 that must be 0 or 1.
+    pub fn flag(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("wire payload: flag byte must be 0/1, got {other}"),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|_| anyhow::anyhow!("wire payload: invalid UTF-8 string"))?
+            .to_string())
+    }
+
+    pub fn vec_u64(&mut self, count: usize) -> Result<Vec<u64>> {
+        let nbytes = count.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("wire payload: u64 vector length overflows")
+        })?;
+        // one bounds check + bulk decode: this path carries the MiB-scale
+        // ciphertext limbs and key bundles
+        let bytes = self.take(nbytes)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// The payload must be fully consumed (trailing garbage is tampering).
+    pub fn finish(&self) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "wire payload has {} trailing bytes",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_frame_roundtrip() {
+        let payload = b"hello wire".to_vec();
+        let f = frame(KIND_PARAMS, &payload);
+        assert_eq!(unframe(KIND_PARAMS, &f).unwrap(), payload.as_slice());
+    }
+
+    #[test]
+    fn test_frame_with_matches_frame() {
+        // the zero-copy framing must be byte-identical to the two-step one
+        let payload = b"abc123xyz".to_vec();
+        let a = frame(KIND_CT_BUNDLE, &payload);
+        let b = frame_with(KIND_CT_BUNDLE, |w| {
+            for &x in &payload {
+                w.put_u8(x);
+            }
+        });
+        assert_eq!(a, b);
+        assert_eq!(unframe(KIND_CT_BUNDLE, &b).unwrap(), payload.as_slice());
+    }
+
+    #[test]
+    fn test_every_bit_flip_is_rejected() {
+        let f = frame(KIND_CIPHERTEXT, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        for byte in 0..f.len() {
+            for bit in 0..8 {
+                let mut bad = f.clone();
+                bad[byte] ^= 1 << bit;
+                assert!(
+                    unframe(KIND_CIPHERTEXT, &bad).is_err(),
+                    "flip at byte {byte} bit {bit} must be rejected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_truncation_and_extension_rejected() {
+        let f = frame(KIND_PUBLIC_KEY, &vec![0xAB; 64]);
+        for cut in [0, 1, 15, 16, 24, f.len() - 1] {
+            assert!(unframe(KIND_PUBLIC_KEY, &f[..cut]).is_err(), "cut {cut}");
+        }
+        let mut long = f.clone();
+        long.push(0);
+        assert!(unframe(KIND_PUBLIC_KEY, &long).is_err());
+    }
+
+    #[test]
+    fn test_kind_mismatch_rejected() {
+        let f = frame(KIND_PARAMS, b"x");
+        assert!(unframe(KIND_PUBLIC_KEY, &f).is_err());
+    }
+
+    #[test]
+    fn test_reader_bounds() {
+        let mut w = ByteWriter::new();
+        w.put_u32(7);
+        w.put_str("ok");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.str().unwrap(), "ok");
+        r.finish().unwrap();
+        assert!(r.u8().is_err(), "reading past the end must error");
+
+        // a huge claimed vector length must fail before allocating
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let n = r.u64().unwrap() as usize;
+        assert!(ByteReader::new(&bytes[8..]).vec_u64(n).is_err());
+    }
+}

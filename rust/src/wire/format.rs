@@ -1,0 +1,489 @@
+//! Wire serialization of the CKKS public objects (DESIGN.md S15): the
+//! parameter set, the public encryption key, key-switching keys, the
+//! evaluation-key bundle a client registers with the server, and
+//! ciphertexts (single and bundled). Secret material has exactly one
+//! serializable holder — `wire::client::ClientKeys` — and it is never
+//! part of any server-facing record.
+
+use super::codec::{
+    frame_with, unframe, ByteReader, ByteWriter, KIND_CIPHERTEXT, KIND_CT_BUNDLE,
+    KIND_EVAL_KEY_SET, KIND_KSWITCH_KEY, KIND_PARAMS, KIND_PUBLIC_KEY,
+};
+use crate::ckks::keys::KskDigit;
+use crate::ckks::poly::RnsPoly;
+use crate::ckks::{Ciphertext, CkksParams, EvalEngine, EvalKeys, KeySwitchKey, PublicKey};
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Largest ring degree a reader will accept (paper scale is 2^16; this
+/// caps allocation from a forged-but-checksummed frame).
+const MAX_N: usize = 1 << 22;
+/// Largest limb count a reader will accept.
+const MAX_LIMBS: usize = 128;
+
+/// Uniform `to_bytes`/`from_bytes` surface over the framed codec. Every
+/// implementor owns one record kind; `from_bytes` verifies the frame
+/// checksum before parsing and rejects trailing payload bytes after.
+pub trait WireSerialize: Sized {
+    const KIND: u8;
+
+    fn write_payload(&self, w: &mut ByteWriter);
+    fn read_payload(r: &mut ByteReader) -> Result<Self>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        frame_with(Self::KIND, |w| self.write_payload(w))
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let payload = unframe(Self::KIND, bytes)?;
+        let mut r = ByteReader::new(payload);
+        let v = Self::read_payload(&mut r)?;
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+// ------------------------------------------------------------ primitives
+
+pub(crate) fn write_poly(w: &mut ByteWriter, p: &RnsPoly) {
+    let n = p.limbs.first().map(|l| l.len()).unwrap_or(0);
+    w.put_u32(n as u32);
+    w.put_u32(p.nq as u32);
+    w.put_u8(p.has_special as u8);
+    w.put_u8(p.is_ntt as u8);
+    for limb in &p.limbs {
+        debug_assert_eq!(limb.len(), n);
+        w.put_u64_slice(limb);
+    }
+}
+
+pub(crate) fn read_poly(r: &mut ByteReader) -> Result<RnsPoly> {
+    let n = r.u32()? as usize;
+    let nq = r.u32()? as usize;
+    let has_special = r.flag()?;
+    let is_ntt = r.flag()?;
+    ensure!(
+        n.is_power_of_two() && (8..=MAX_N).contains(&n),
+        "wire poly: bad ring degree {n}"
+    );
+    let count = nq + has_special as usize;
+    ensure!(
+        nq >= 1 && count <= MAX_LIMBS,
+        "wire poly: bad limb count nq={nq} special={has_special}"
+    );
+    let limbs = (0..count).map(|_| r.vec_u64(n)).collect::<Result<Vec<_>>>()?;
+    Ok(RnsPoly {
+        limbs,
+        nq,
+        has_special,
+        is_ntt,
+    })
+}
+
+fn write_params_payload(w: &mut ByteWriter, p: &CkksParams) {
+    w.put_u64(p.n as u64);
+    w.put_u32(p.q0_bits);
+    w.put_u32(p.scale_bits);
+    w.put_u64(p.levels as u64);
+    w.put_u32(p.special_bits);
+    w.put_u8(p.allow_insecure as u8);
+}
+
+fn read_params_payload(r: &mut ByteReader) -> Result<CkksParams> {
+    let n = r.u64()? as usize;
+    let q0_bits = r.u32()?;
+    let scale_bits = r.u32()?;
+    let levels = r.u64()? as usize;
+    let special_bits = r.u32()?;
+    let allow_insecure = r.flag()?;
+    ensure!(
+        n.is_power_of_two() && (8..=MAX_N).contains(&n),
+        "wire params: bad ring degree {n}"
+    );
+    ensure!(
+        (1..MAX_LIMBS).contains(&levels),
+        "wire params: bad level count {levels}"
+    );
+    // mirror zq::gen_ntt_primes' accepted range so a forged frame errors
+    // here instead of tripping an assert inside params.build()
+    ensure!(
+        [q0_bits, scale_bits, special_bits]
+            .iter()
+            .all(|b| (20..=61).contains(b)),
+        "wire params: prime bit widths out of range"
+    );
+    Ok(CkksParams {
+        n,
+        q0_bits,
+        scale_bits,
+        levels,
+        special_bits,
+        allow_insecure,
+    })
+}
+
+/// Content hash of a parameter set — stamped into ciphertext bundles so a
+/// server can cheaply reject ciphertexts that were encrypted under a
+/// different modulus chain than the tenant's registered keys.
+pub fn params_hash(p: &CkksParams) -> u64 {
+    let mut w = ByteWriter::new();
+    write_params_payload(&mut w, p);
+    super::codec::fnv1a64(w.as_bytes())
+}
+
+fn write_kswitch_payload(w: &mut ByteWriter, k: &KeySwitchKey) {
+    w.put_u32(k.digits.len() as u32);
+    for d in &k.digits {
+        write_poly(w, &d.b);
+        write_poly(w, &d.a);
+    }
+}
+
+fn read_kswitch_payload(r: &mut ByteReader) -> Result<KeySwitchKey> {
+    let n = r.u32()? as usize;
+    ensure!(
+        (1..=MAX_LIMBS).contains(&n),
+        "wire key-switch key: bad digit count {n}"
+    );
+    let digits = (0..n)
+        .map(|_| {
+            let b = read_poly(r)?;
+            let a = read_poly(r)?;
+            // hybrid key-switch digits always live in NTT form over Q∪{P};
+            // reject other shapes before they can trip evaluator asserts
+            ensure!(
+                b.is_ntt && a.is_ntt && b.has_special && a.has_special && b.nq == a.nq,
+                "wire key-switch key: digit shape mismatch"
+            );
+            Ok(KskDigit { b, a })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(KeySwitchKey { digits })
+}
+
+// ------------------------------------------------------------- per-type
+
+impl WireSerialize for CkksParams {
+    const KIND: u8 = KIND_PARAMS;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        write_params_payload(w, self);
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        read_params_payload(r)
+    }
+}
+
+impl WireSerialize for PublicKey {
+    const KIND: u8 = KIND_PUBLIC_KEY;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        write_poly(w, &self.b);
+        write_poly(w, &self.a);
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        let b = read_poly(r)?;
+        let a = read_poly(r)?;
+        Ok(PublicKey { b, a })
+    }
+}
+
+impl WireSerialize for KeySwitchKey {
+    const KIND: u8 = KIND_KSWITCH_KEY;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        write_kswitch_payload(w, self);
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        read_kswitch_payload(r)
+    }
+}
+
+impl WireSerialize for Ciphertext {
+    const KIND: u8 = KIND_CIPHERTEXT;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        w.put_f64(self.scale);
+        write_poly(w, &self.c0);
+        write_poly(w, &self.c1);
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        let scale = r.f64()?;
+        let c0 = read_poly(r)?;
+        let c1 = read_poly(r)?;
+        ensure!(
+            c0.nq == c1.nq && !c0.has_special && !c1.has_special,
+            "wire ciphertext: component shape mismatch"
+        );
+        // ciphertexts travel in evaluation form; rejecting here keeps a
+        // crafted frame from tripping domain asserts inside the evaluator
+        ensure!(
+            c0.is_ntt && c1.is_ntt,
+            "wire ciphertext: components must be in NTT form"
+        );
+        ensure!(
+            scale.is_finite() && scale > 0.0,
+            "wire ciphertext: invalid scale"
+        );
+        Ok(Ciphertext { c0, c1, scale })
+    }
+}
+
+// ------------------------------------------------------------ eval keys
+
+/// The complete key material a client publishes to the serving side: the
+/// parameter set (the server rebuilds the modulus chain from it — prime
+/// generation is deterministic), the relinearization key, and Galois keys
+/// for exactly the rotations of the variant's compiled plan
+/// (`HePlan::required_rotations`). **No secret key, no public encryption
+/// key**: a server holding only an `EvalKeySet` can evaluate, but can
+/// neither decrypt nor encrypt under the client's key.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalKeySet {
+    /// Variant the Galois subset was generated for (e.g. `lingcn-nl2`).
+    pub variant: String,
+    pub params: CkksParams,
+    /// Shared, not cloned: key bundles are MiB-scale and every engine
+    /// built from this set reuses the same allocation.
+    pub keys: Arc<EvalKeys>,
+}
+
+impl EvalKeySet {
+    /// Extract the shippable key half from a full (trusted-process)
+    /// engine — used by demos and tests; the split-process path generates
+    /// it directly via `wire::client::ClientKeys::generate`.
+    pub fn from_engine(engine: &crate::ckks::CkksEngine, variant: &str) -> Self {
+        EvalKeySet {
+            variant: variant.to_string(),
+            params: engine.ctx.params.clone(),
+            keys: engine.eval.keys.clone(),
+        }
+    }
+
+    /// Build the server-half engine: modulus chain + NTT tables from the
+    /// params, evaluator over these keys. The resulting [`EvalEngine`]
+    /// contains no secret key *by type*. The frame checksum is integrity,
+    /// not authenticity, so this is the trust boundary for key material:
+    /// every key-switch key must have exactly one digit per chain prime,
+    /// full-chain extended-basis polynomials of the chain's ring degree,
+    /// and reduced residues — otherwise a crafted bundle would panic the
+    /// evaluator mid-request instead of failing registration.
+    pub fn build_engine(&self) -> Result<EvalEngine> {
+        let ctx = self.params.build()?;
+        let k = ctx.moduli.len();
+        let well_formed = |ksk: &KeySwitchKey| {
+            ksk.digits.len() == k
+                && ksk.digits.iter().all(|d| {
+                    d.b.nq == k
+                        && d.a.nq == k
+                        && d.b.limbs.iter().chain(d.a.limbs.iter()).all(|l| l.len() == ctx.n)
+                        && d.b.is_reduced(&ctx)
+                        && d.a.is_reduced(&ctx)
+                })
+        };
+        ensure!(
+            well_formed(&self.keys.relin) && self.keys.galois.values().all(well_formed),
+            "eval-key bundle does not match the parameter chain \
+             (digit count, limb shape, or unreduced residues)"
+        );
+        Ok(EvalEngine::new(ctx, self.keys.clone()))
+    }
+
+    /// Whether this bundle carries a Galois key for every rotation step in
+    /// `steps` (the plan's `required_rotations`).
+    pub fn covers_rotations(&self, encoder: &crate::ckks::Encoder, steps: &[usize]) -> bool {
+        steps
+            .iter()
+            .all(|&k| self.keys.galois.contains_key(&encoder.rotation_galois_element(k)))
+    }
+}
+
+impl WireSerialize for EvalKeySet {
+    const KIND: u8 = KIND_EVAL_KEY_SET;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        w.put_str(&self.variant);
+        write_params_payload(w, &self.params);
+        write_kswitch_payload(w, &self.keys.relin);
+        // galois map in sorted element order: byte-stable output
+        let mut elems: Vec<&usize> = self.keys.galois.keys().collect();
+        elems.sort_unstable();
+        w.put_u32(elems.len() as u32);
+        for &g in elems {
+            w.put_u64(g as u64);
+            write_kswitch_payload(w, &self.keys.galois[&g]);
+        }
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        let variant = r.str()?;
+        let params = read_params_payload(r)?;
+        let relin = read_kswitch_payload(r)?;
+        let count = r.u32()? as usize;
+        let mut galois = HashMap::with_capacity(count.min(1024));
+        for _ in 0..count {
+            let g = r.u64()? as usize;
+            let key = read_kswitch_payload(r)?;
+            ensure!(
+                galois.insert(g, key).is_none(),
+                "wire eval-key set: duplicate Galois element {g}"
+            );
+        }
+        Ok(EvalKeySet {
+            variant,
+            params,
+            keys: Arc::new(EvalKeys { relin, galois }),
+        })
+    }
+}
+
+// ------------------------------------------------------------ ct bundle
+
+/// A request's ciphertexts (one per graph node), stamped with the hash of
+/// the parameter set they were encrypted under.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CtBundle {
+    pub params_hash: u64,
+    pub cts: Vec<Ciphertext>,
+}
+
+impl CtBundle {
+    pub fn new(params: &CkksParams, cts: Vec<Ciphertext>) -> Self {
+        CtBundle {
+            params_hash: params_hash(params),
+            cts,
+        }
+    }
+
+    /// Reject a bundle encrypted under a different parameter set.
+    pub fn check_params(&self, params: &CkksParams) -> Result<()> {
+        ensure!(
+            self.params_hash == params_hash(params),
+            "ciphertext bundle was encrypted under a different parameter set"
+        );
+        Ok(())
+    }
+}
+
+impl WireSerialize for CtBundle {
+    const KIND: u8 = KIND_CT_BUNDLE;
+
+    fn write_payload(&self, w: &mut ByteWriter) {
+        w.put_u64(self.params_hash);
+        w.put_u32(self.cts.len() as u32);
+        for ct in &self.cts {
+            ct.write_payload(w);
+        }
+    }
+
+    fn read_payload(r: &mut ByteReader) -> Result<Self> {
+        let params_hash = r.u64()?;
+        let count = r.u32()? as usize;
+        ensure!(
+            (1..=4096).contains(&count),
+            "wire ciphertext bundle: bad ciphertext count {count}"
+        );
+        let cts = (0..count)
+            .map(|_| Ciphertext::read_payload(r))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CtBundle { params_hash, cts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::{build_eval_keys, CkksEngine};
+
+    fn tiny_engine() -> CkksEngine {
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 7;
+        CkksEngine::new(p, &[1, 3], 5).unwrap()
+    }
+
+    #[test]
+    fn test_params_roundtrip_and_hash() {
+        let p = CkksParams::toy(4);
+        let back = CkksParams::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, back);
+        assert_eq!(params_hash(&p), params_hash(&back));
+        let q = CkksParams::toy(5);
+        assert_ne!(params_hash(&p), params_hash(&q));
+    }
+
+    #[test]
+    fn test_public_key_roundtrip() {
+        let e = tiny_engine();
+        let back = PublicKey::from_bytes(&e.pk.to_bytes()).unwrap();
+        assert_eq!(e.pk, back);
+    }
+
+    #[test]
+    fn test_ciphertext_roundtrip_preserves_bits() {
+        let e = tiny_engine();
+        let ct = e.encrypt(&[0.5, -1.25, 3.0]);
+        let back = Ciphertext::from_bytes(&ct.to_bytes()).unwrap();
+        assert_eq!(ct, back);
+        assert_eq!(e.decrypt(&ct), e.decrypt(&back));
+    }
+
+    #[test]
+    fn test_eval_key_set_roundtrip() {
+        let e = tiny_engine();
+        let ks = EvalKeySet::from_engine(&e, "lingcn-nl2");
+        let back = EvalKeySet::from_bytes(&ks.to_bytes()).unwrap();
+        assert_eq!(ks, back);
+        assert!(back.covers_rotations(&e.encoder, &[1, 3]));
+        assert!(!back.covers_rotations(&e.encoder, &[1, 2]));
+    }
+
+    #[test]
+    fn test_eval_key_set_bytes_are_deterministic() {
+        // the galois map is a HashMap, but the wire bytes must not depend
+        // on its iteration order
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 7;
+        let ctx = p.build().unwrap();
+        let enc = crate::ckks::Encoder::new(ctx.n);
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let sk = crate::ckks::keys::keygen_secret(&ctx, &mut rng);
+        let keys = build_eval_keys(&ctx, &enc, &sk, &[1, 2, 5, 9], false, &mut rng);
+        let ks = EvalKeySet {
+            variant: "v".into(),
+            params: p,
+            keys: Arc::new(keys),
+        };
+        assert_eq!(ks.to_bytes(), EvalKeySet::from_bytes(&ks.to_bytes()).unwrap().to_bytes());
+    }
+
+    #[test]
+    fn test_ct_bundle_roundtrip_and_params_check() {
+        let e = tiny_engine();
+        let cts = vec![e.encrypt(&[1.0]), e.encrypt(&[2.0])];
+        let bundle = CtBundle::new(&e.ctx.params, cts);
+        let back = CtBundle::from_bytes(&bundle.to_bytes()).unwrap();
+        assert_eq!(bundle, back);
+        back.check_params(&e.ctx.params).unwrap();
+        assert!(back.check_params(&CkksParams::toy(7)).is_err());
+    }
+
+    #[test]
+    fn test_corrupt_key_material_is_rejected_not_panicking() {
+        let e = tiny_engine();
+        let ks = EvalKeySet::from_engine(&e, "v");
+        let bytes = ks.to_bytes();
+        for cut in [0usize, 10, 24, bytes.len() / 3, bytes.len() - 1] {
+            assert!(EvalKeySet::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        for pos in (0..bytes.len()).step_by(97) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            assert!(EvalKeySet::from_bytes(&bad).is_err(), "flip at {pos}");
+        }
+    }
+}

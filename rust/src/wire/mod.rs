@@ -1,0 +1,38 @@
+//! The client/server **privacy boundary** (DESIGN.md S15).
+//!
+//! LinGCN's deployment model is that the cloud never sees client data:
+//! keys are generated on the client, only the *evaluation* half (public
+//! parameters, relinearization key, Galois keys) plus ciphertexts cross
+//! the wire, and the reply is the ciphertext of the logits. This module
+//! makes that boundary real — and type-checked:
+//!
+//! * [`codec`] — the versioned, length-prefixed, checksummed binary frame
+//!   every wire object travels in; tampering and truncation are rejected,
+//!   never panicked on.
+//! * [`format`] — `to_bytes`/`from_bytes` ([`WireSerialize`]) for
+//!   [`CkksParams`](crate::ckks::CkksParams),
+//!   [`PublicKey`](crate::ckks::PublicKey),
+//!   [`KeySwitchKey`](crate::ckks::KeySwitchKey),
+//!   [`Ciphertext`](crate::ckks::Ciphertext), the [`EvalKeySet`] bundle a
+//!   client registers, and the [`CtBundle`] a request ships.
+//! * [`client`] — [`ClientKeys`]: seeded keygen, clip encryption, logits
+//!   decryption. The only serializable holder of a secret key; its file
+//!   format is local persistence, not a wire record.
+//! * [`server`] — [`WireExecutor`]: the multi-tenant serving tier. Builds
+//!   only [`EvalEngine`](crate::ckks::EvalEngine)s from registered key
+//!   sets, so the serving path contains no `SecretKey` *by type*, and its
+//!   plaintext `infer` entry point is a hard error.
+//!
+//! The full shell roundtrip (`lingcn keygen` → `encrypt` →
+//! `serve --tier he-wire` → `decrypt-logits`) and the bit-identity of the
+//! split path against the in-process `PrivateInferenceSession` are
+//! covered by `rust/tests/wire_roundtrip.rs`.
+
+pub mod client;
+pub mod codec;
+pub mod format;
+pub mod server;
+
+pub use client::{keygen, keygen_with_state, ClientKeys, VariantSpec};
+pub use format::{params_hash, CtBundle, EvalKeySet, WireSerialize};
+pub use server::{TenantKeys, WireExecutor, WireSession};

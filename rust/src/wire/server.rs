@@ -1,0 +1,246 @@
+//! The **server half** of the privacy boundary: a multi-tenant encrypted
+//! executor that holds models, compiled plans, and each tenant's
+//! registered [`EvalKeySet`] — and, by construction, no secret key. The
+//! only engine type this module ever builds is [`EvalEngine`]
+//! (`EvalKeySet::build_engine`), so the serving path cannot decrypt or
+//! encrypt: requests arrive as ciphertext bundles and leave as the
+//! ciphertext of the logits.
+
+use super::format::EvalKeySet;
+use crate::ckks::{Ciphertext, EvalEngine};
+use crate::coordinator::{InferenceExecutor, KeyRegistry, Metrics};
+use crate::he_infer::exec::{plan_for, PlanKey};
+use crate::he_infer::{session_geometry, HePlan, PlanChain, PlanOptions, PreparedPlan};
+use crate::stgcn::StgcnModel;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+/// One tenant's registered key material plus the per-variant serving
+/// state derived from it. The key-free engine is built — and the bundle
+/// fully validated — **at registration** (`EvalKeySet::build_engine`),
+/// so a malformed bundle fails `register`, not the tenant's first
+/// request; all of the tenant's variant sessions share the one engine.
+/// Evicting the tenant from the registry drops everything — keys,
+/// engine, pre-encoded masks — in one `Arc` release.
+pub struct TenantKeys {
+    pub key_set: EvalKeySet,
+    pub engine: EvalEngine,
+    sessions: Mutex<HashMap<String, Arc<WireSession>>>,
+}
+
+impl TenantKeys {
+    pub fn new(key_set: EvalKeySet) -> Result<Self> {
+        let engine = key_set.build_engine()?;
+        Ok(TenantKeys {
+            key_set,
+            engine,
+            sessions: Mutex::new(HashMap::new()),
+        })
+    }
+}
+
+/// A (tenant, variant) serving session: the compiled plan
+/// (`prepared.plan`) with its masks pre-encoded against the tenant's
+/// engine.
+pub struct WireSession {
+    pub prepared: PreparedPlan,
+}
+
+/// The wire-tier executor behind the coordinator: per-tenant key lookup
+/// through the [`KeyRegistry`], cross-tenant plan sharing through the
+/// same [`PlanKey`] cache as the trusted tier, and plan execution over
+/// the wavefront pool. Implements [`InferenceExecutor`] with the
+/// plaintext entry point **rejected** — this tier cannot see clips.
+pub struct WireExecutor {
+    pub threads: usize,
+    opts: PlanOptions,
+    models: HashMap<String, StgcnModel>,
+    pub registry: Arc<KeyRegistry<TenantKeys>>,
+    plans: Mutex<HashMap<PlanKey, Arc<HePlan>>>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl WireExecutor {
+    pub fn new(
+        models: HashMap<String, StgcnModel>,
+        threads: usize,
+        registry: Arc<KeyRegistry<TenantKeys>>,
+    ) -> Self {
+        WireExecutor {
+            threads: threads.max(1),
+            opts: PlanOptions::default(),
+            models,
+            registry,
+            plans: Mutex::new(HashMap::new()),
+            metrics: None,
+        }
+    }
+
+    /// Mirror plan-cache hits/misses into the coordinator metrics (call
+    /// before handing the executor to `Coordinator::start_with_metrics`).
+    pub fn set_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Register (or replace) a tenant's evaluation keys. Fails — before
+    /// anything is stored — if the bundle doesn't validate against its
+    /// own parameter chain, so the tenant learns at registration, not on
+    /// their first request.
+    pub fn register(&self, tenant: &str, key_set: EvalKeySet) -> Result<Arc<TenantKeys>> {
+        Ok(self.registry.register(tenant, TenantKeys::new(key_set)?))
+    }
+
+    fn count_plan_cache(&self, hit: bool) {
+        if let Some(m) = &self.metrics {
+            let field = if hit { &m.plan_cache_hits } else { &m.plan_cache_misses };
+            field.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Get-or-build the tenant's session for `variant`: verify the
+    /// registered keys match the variant's serving geometry and cover the
+    /// plan's rotations, then build the key-free engine and pre-encode
+    /// the plan masks.
+    fn session(&self, tenant: &Arc<TenantKeys>, variant: &str) -> Result<Arc<WireSession>> {
+        if let Some(s) = tenant.sessions.lock().unwrap().get(variant) {
+            // same metric semantics as HeExecutor: every request served
+            // without a compile counts as a plan-cache hit
+            self.count_plan_cache(true);
+            return Ok(s.clone());
+        }
+        let model = self
+            .models
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant}"))?;
+        let (layout, params) = session_geometry(model, self.opts)?;
+        ensure!(
+            tenant.key_set.params == params,
+            "tenant keys were generated for a different parameter set than \
+             variant {variant} (re-run keygen against this variant)"
+        );
+        let key = PlanKey::new(model, &layout, self.opts);
+        let cached = self.plans.lock().unwrap().get(&key).cloned();
+        // Compile outside the locks: a cold plan compile + mask encoding
+        // are the cold-start costs (the engine was built at registration).
+        let engine = &tenant.engine;
+        let chain = PlanChain::from_ctx(&engine.ctx);
+        let (plan, was_cached) = plan_for(cached, model, layout, &chain, self.opts)?;
+        self.count_plan_cache(was_cached);
+        if !was_cached {
+            self.plans.lock().unwrap().entry(key).or_insert_with(|| plan.clone());
+        }
+        let needed = plan.required_rotations();
+        ensure!(
+            tenant.key_set.covers_rotations(&engine.encoder, &needed),
+            "tenant keys do not cover the {} rotations of variant {variant}'s \
+             plan (keygen against this variant)",
+            needed.len()
+        );
+        let prepared = PreparedPlan::new(plan, engine)?;
+        let session = Arc::new(WireSession { prepared });
+        let session = {
+            let mut sessions = tenant.sessions.lock().unwrap();
+            sessions
+                .entry(variant.to_string())
+                .or_insert(session)
+                .clone()
+        };
+        Ok(session)
+    }
+}
+
+impl InferenceExecutor for WireExecutor {
+    fn infer(&self, _variant: &str, _clip: &[f64]) -> Result<Vec<f64>> {
+        bail!(
+            "the he-wire tier holds no secret key and accepts no plaintext \
+             clips — submit an EncryptedRequest (see `serve --tier he-wire`)"
+        )
+    }
+
+    fn infer_encrypted(
+        &self,
+        variant: &str,
+        tenant: &str,
+        cts: &[Ciphertext],
+        params_hash: Option<u64>,
+    ) -> Result<Ciphertext> {
+        let entry = self
+            .registry
+            .get(tenant)
+            .ok_or_else(|| anyhow!("tenant {tenant} has no registered EvalKeySet"))?;
+        // the level/ring checks in execute() can't see prime mismatches —
+        // the bundle's stamp is the cheap cross-chain rejection
+        if let Some(h) = params_hash {
+            ensure!(
+                h == super::format::params_hash(&entry.key_set.params),
+                "request ciphertexts were encrypted under a different \
+                 parameter set than tenant {tenant}'s registered keys"
+            );
+        }
+        let session = self.session(&entry, variant)?;
+        // full residue scan at the trust boundary: wire-deserialized
+        // ciphertexts must be reduced before the unchecked modular
+        // kernels see them (execute() itself only shape-checks — the
+        // trusted in-process tier encrypts its own reduced inputs)
+        ensure!(
+            cts.iter()
+                .all(|ct| ct.c0.is_reduced(&entry.engine.ctx) && ct.c1.is_reduced(&entry.engine.ctx)),
+            "request ciphertext residues are not reduced modulo the chain"
+        );
+        session.prepared.execute(&entry.engine, cts, self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::wire::client::keygen;
+
+    fn tiny() -> StgcnModel {
+        StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
+    }
+
+    fn executor(model: &StgcnModel, capacity: usize) -> WireExecutor {
+        let mut models = HashMap::new();
+        models.insert("v".to_string(), model.clone());
+        WireExecutor::new(models, 2, Arc::new(KeyRegistry::new(capacity)))
+    }
+
+    #[test]
+    fn test_wire_executor_rejects_plaintext_and_unknown_tenants() {
+        let model = tiny();
+        let ex = executor(&model, 4);
+        assert!(ex.infer("v", &[0.0]).is_err(), "plaintext path must be closed");
+        assert!(
+            ex.infer_encrypted("v", "nobody", &[], None).is_err(),
+            "unregistered tenant must be rejected"
+        );
+    }
+
+    #[test]
+    fn test_wire_executor_serves_registered_tenant() {
+        let model = tiny();
+        let want = {
+            let n = model.v() * model.c_in * model.t;
+            let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect();
+            model.forward(&x).unwrap()
+        };
+        let ex = executor(&model, 4);
+        let (client, key_set) = keygen(&model, "v", PlanOptions::default(), 11).unwrap();
+        ex.register("alice", key_set).unwrap();
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect();
+        let cts = client.encrypt_clip(&x).unwrap();
+        let hash = Some(crate::wire::params_hash(&client.params));
+        // a wrong stamp is rejected before any HE work
+        assert!(ex.infer_encrypted("v", "alice", &cts, Some(0xdead)).is_err());
+        let ct = ex.infer_encrypted("v", "alice", &cts, hash).unwrap();
+        let got = client.decrypt_logits(&ct).unwrap();
+        let argmax = crate::util::argmax;
+        assert_eq!(argmax(&got), argmax(&want));
+        assert!(ex.infer_encrypted("missing", "alice", &cts, hash).is_err());
+    }
+}

@@ -46,6 +46,27 @@ fn test_artifact_commands_error_cleanly_without_artifacts() {
     assert!(infer.is_err(), "infer without artifacts must fail");
     let serve = run(&args(&["serve", "--requests", "1"]));
     assert!(serve.is_err(), "serve without artifacts must fail");
+    let keygen = run(&args(&["keygen", "--nl", "2"]));
+    assert!(keygen.is_err(), "keygen without artifacts must fail");
+}
+
+#[test]
+fn test_wire_verbs_check_their_flags() {
+    // missing required flags must be clean errors, not panics
+    assert!(run(&args(&["encrypt"])).is_err(), "encrypt needs --key");
+    assert!(run(&args(&["decrypt-logits"])).is_err(), "decrypt-logits needs --key");
+    assert!(
+        run(&args(&["serve", "--tier", "he-wire"])).is_err(),
+        "he-wire serve needs --eval-keys/--request"
+    );
+    // a missing key file is an I/O error, not a panic
+    assert!(run(&args(&["encrypt", "--key", "no-such-file.key"])).is_err());
+    // a key file with garbage content is a decode error, not a panic
+    let dir = std::env::temp_dir().join("lingcn_cli_smoke_wire");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bogus = dir.join("bogus.key");
+    std::fs::write(&bogus, b"not a wire frame").unwrap();
+    assert!(run(&args(&["encrypt", "--key", bogus.to_str().unwrap()])).is_err());
 }
 
 #[test]

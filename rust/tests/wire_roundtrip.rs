@@ -1,0 +1,267 @@
+//! The privacy boundary's safety net (DESIGN.md S15).
+//!
+//! * Wire-format property tests: ciphertexts, public keys and eval-key
+//!   bundles roundtrip losslessly across seeds and levels; truncated or
+//!   bit-flipped frames return errors, never panic.
+//! * The acceptance end-to-end: client-generated keys → serialized
+//!   `EvalKeySet` → a server path that constructs **only** the key-free
+//!   `EvalEngine` half → client-encrypted ciphertexts in, logits
+//!   ciphertext out → client decryption is **bit-identical** to the
+//!   trusted in-process `PrivateInferenceSession` path.
+//! * The multi-tenant coordinator flow: registry hits/misses/evictions,
+//!   and the wire tier rejecting plaintext.
+
+use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams, PublicKey};
+use lingcn::coordinator::{Coordinator, KeyRegistry, Metrics, Router};
+use lingcn::graph::Graph;
+use lingcn::he_infer::{session_geometry, PlanOptions, PrivateInferenceSession};
+use lingcn::stgcn::StgcnModel;
+use lingcn::wire::{keygen, CtBundle, EvalKeySet, WireExecutor, WireSerialize};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_model(seed: u64) -> StgcnModel {
+    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
+}
+
+fn clip(model: &StgcnModel) -> Vec<f64> {
+    let n = model.v() * model.c_in * model.t;
+    (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+}
+
+// ------------------------------------------------------ property tests
+
+#[test]
+fn test_ciphertext_roundtrip_multiseed_multilevel() {
+    for seed in [1u64, 7, 1234] {
+        for levels in [1usize, 3] {
+            let mut p = CkksParams::toy(levels);
+            p.n = 1 << 8;
+            let engine = CkksEngine::new(p, &[1], seed).unwrap();
+            let vals: Vec<f64> = (0..engine.ctx.slots())
+                .map(|i| ((i as f64) + seed as f64).sin())
+                .collect();
+            for nq in 1..=levels + 1 {
+                let ct = engine.encrypt_at(&vals, nq);
+                let back = Ciphertext::from_bytes(&ct.to_bytes()).unwrap();
+                assert_eq!(ct, back, "seed {seed} levels {levels} nq {nq}");
+                assert_eq!(
+                    engine.decrypt(&ct),
+                    engine.decrypt(&back),
+                    "decryption must see identical bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn test_key_material_roundtrip_multiseed() {
+    for seed in [3u64, 99] {
+        for levels in [1usize, 2] {
+            let mut p = CkksParams::toy(levels);
+            p.n = 1 << 7;
+            let engine = CkksEngine::new(p, &[1, 5], seed).unwrap();
+            let pk_back = PublicKey::from_bytes(&engine.pk.to_bytes()).unwrap();
+            assert_eq!(engine.pk, pk_back);
+            let ks = EvalKeySet::from_engine(&engine, "v");
+            let ks_back = EvalKeySet::from_bytes(&ks.to_bytes()).unwrap();
+            assert_eq!(ks, ks_back, "seed {seed} levels {levels}");
+            // the deserialized keys actually evaluate: rotate and compare
+            let server = ks_back.build_engine().unwrap();
+            let ct = engine.encrypt(&[1.0, 2.0, 3.0]);
+            let a = engine.eval.rotate(&engine.encoder, &ct, 1);
+            let b = server.eval.rotate(&server.encoder, &ct, 1);
+            assert_eq!(a, b, "deserialized Galois keys must act identically");
+        }
+    }
+}
+
+#[test]
+fn test_corruption_corpus_errors_never_panics() {
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 7;
+    let engine = CkksEngine::new(p.clone(), &[1, 2], 13).unwrap();
+    let ct = engine.encrypt(&[0.5; 8]);
+    let bundle = CtBundle::new(&p, vec![engine.encrypt(&[1.0]), engine.encrypt(&[2.0])]);
+    let ks = EvalKeySet::from_engine(&engine, "v");
+
+    let corpus: Vec<(&str, Vec<u8>)> = vec![
+        ("params", p.to_bytes()),
+        ("public key", engine.pk.to_bytes()),
+        ("ciphertext", ct.to_bytes()),
+        ("ct bundle", bundle.to_bytes()),
+        ("eval key set", ks.to_bytes()),
+    ];
+    for (name, bytes) in &corpus {
+        // truncation at every interesting boundary
+        for cut in [0usize, 1, 7, 15, 16, 23, bytes.len() / 2, bytes.len() - 1] {
+            let r = decode_any(name, &bytes[..cut]);
+            assert!(r.is_err(), "{name}: truncation at {cut} must error");
+        }
+        // single-bit flips across the frame (header, payload, checksum)
+        for pos in (0..bytes.len()).step_by(61) {
+            for bit in [0u8, 5] {
+                let mut bad = bytes.clone();
+                bad[pos] ^= 1 << bit;
+                let r = decode_any(name, &bad);
+                assert!(r.is_err(), "{name}: bit flip at byte {pos} must error");
+            }
+        }
+    }
+}
+
+/// Decode a corpus entry with its own type (errors unified for asserts).
+fn decode_any(name: &str, bytes: &[u8]) -> anyhow::Result<()> {
+    match name {
+        "params" => CkksParams::from_bytes(bytes).map(|_| ()),
+        "public key" => PublicKey::from_bytes(bytes).map(|_| ()),
+        "ciphertext" => Ciphertext::from_bytes(bytes).map(|_| ()),
+        "ct bundle" => CtBundle::from_bytes(bytes).map(|_| ()),
+        "eval key set" => EvalKeySet::from_bytes(bytes).map(|_| ()),
+        other => unreachable!("unknown corpus entry {other}"),
+    }
+}
+
+// ------------------------------------------------- acceptance end-to-end
+
+/// The acceptance criterion: a full roundtrip where the server-side state
+/// is, at the type level, only the eval-key half (`EvalEngine` inside
+/// `WireExecutor`) produces logits bit-identical to the trusted
+/// in-process `PrivateInferenceSession` path.
+#[test]
+fn test_wire_roundtrip_bit_identical_to_private_session() {
+    const SEED: u64 = 2024;
+    let model = tiny_model(1);
+    let x = clip(&model);
+
+    // trusted single-process reference path
+    let (_, params) = session_geometry(&model, PlanOptions::default()).unwrap();
+    let sess = PrivateInferenceSession::new(&model, params, SEED).unwrap();
+    let input = sess.encrypt_input(&model, &x).unwrap();
+    let want_ct = sess.infer(&model, &input).unwrap();
+    let want = sess.decrypt_logits(&model, &want_ct);
+
+    // wire path: client keygen (same seed) → keys and ciphertexts over
+    // the serialized wire → key-free server → ciphertext back → client
+    let (client, key_set) = keygen(&model, "v", PlanOptions::default(), SEED).unwrap();
+    let key_set = EvalKeySet::from_bytes(&key_set.to_bytes()).unwrap();
+
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let server = WireExecutor::new(models, 2, Arc::new(KeyRegistry::new(8)));
+    server.register("tenant-a", key_set).unwrap();
+
+    let request = CtBundle::from_bytes(&client.encrypt_request(&x).unwrap().to_bytes()).unwrap();
+    // client encryption randomness mirrors the session's stream: the
+    // ciphertexts crossing the wire are the session's, bit for bit
+    assert_eq!(request.cts, input, "wire ciphertexts must match the trusted path's");
+
+    let ct_logits = lingcn::coordinator::InferenceExecutor::infer_encrypted(
+        &server,
+        "v",
+        "tenant-a",
+        &request.cts,
+        Some(request.params_hash),
+    )
+    .unwrap();
+    let ct_logits = Ciphertext::from_bytes(&ct_logits.to_bytes()).unwrap();
+    assert_eq!(ct_logits, want_ct, "server output ciphertext must match");
+    let got = client.decrypt_logits(&ct_logits).unwrap();
+    assert_eq!(got, want, "wire logits must be bit-identical to the trusted path");
+}
+
+#[test]
+fn test_wrong_tenant_keys_are_rejected_cleanly() {
+    // keys generated against a *different* model (different rotations /
+    // geometry) must be rejected when used for this variant
+    let model = tiny_model(1);
+    let other = StgcnModel::synthetic(Graph::ring(4), 4, 2, 3, &[4], 2, 5);
+    let (client, wrong_keys) = keygen(&other, "other", PlanOptions::default(), 3).unwrap();
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let server = WireExecutor::new(models, 1, Arc::new(KeyRegistry::new(4)));
+    server.register("bob", wrong_keys).unwrap();
+    let cts = client.encrypt_clip(&clip(&other)).unwrap();
+    let err =
+        lingcn::coordinator::InferenceExecutor::infer_encrypted(&server, "v", "bob", &cts, None)
+            .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("different parameter set") || msg.contains("do not cover"),
+        "unexpected error: {msg}"
+    );
+}
+
+// --------------------------------------------- coordinator tenant flow
+
+#[test]
+fn test_multi_tenant_coordinator_flow_with_registry_metrics() {
+    let model = tiny_model(2);
+    let x = clip(&model);
+    let mut models = HashMap::new();
+    models.insert("lingcn-nl2".to_string(), model.clone());
+
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(2, Some(metrics.clone())));
+    let mut server = WireExecutor::new(models, 1, registry.clone());
+    server.set_metrics(metrics.clone());
+
+    // two tenants, independent keys (different seeds → different secrets)
+    let (alice, alice_keys) = keygen(&model, "lingcn-nl2", PlanOptions::default(), 10).unwrap();
+    let (bob, bob_keys) = keygen(&model, "lingcn-nl2", PlanOptions::default(), 20).unwrap();
+    server.register("alice", alice_keys).unwrap();
+    server.register("bob", bob_keys).unwrap();
+
+    let router = Router::new(vec![lingcn::coordinator::ModelVariant {
+        name: "lingcn-nl2".into(),
+        nl: 2,
+        latency_s: 1.0,
+        accuracy: 0.9,
+    }]);
+    let coord = Coordinator::start_with_metrics(
+        router,
+        Arc::new(server),
+        metrics.clone(),
+        2,
+        4,
+        Duration::from_millis(2),
+    );
+
+    let want = model.forward(&x).unwrap();
+    let argmax = lingcn::util::argmax;
+    for (tenant, client) in [("alice", &alice), ("bob", &bob)] {
+        let cts = client.encrypt_clip(&x).unwrap();
+        let hash = Some(lingcn::wire::params_hash(&client.params));
+        let resp = coord
+            .infer_blocking_encrypted(tenant.into(), Some("lingcn-nl2".into()), cts, hash, None)
+            .unwrap();
+        assert!(resp.error.is_none(), "{tenant}: {:?}", resp.error);
+        let got = client.decrypt_logits(&resp.ct_logits.unwrap()).unwrap();
+        assert_eq!(argmax(&got), argmax(&want), "{tenant} decision must match");
+    }
+    // a tenant cannot open another tenant's logits meaningfully — but at
+    // minimum the service never accepts plaintext on this tier
+    let plain = coord.infer_blocking(x.clone(), None).unwrap();
+    assert!(plain.error.unwrap().contains("no secret key"));
+
+    // unregistered tenant: error response + registry miss
+    let cts = alice.encrypt_clip(&x).unwrap();
+    let resp = coord
+        .infer_blocking_encrypted("mallory".into(), Some("lingcn-nl2".into()), cts, None, None)
+        .unwrap();
+    assert!(resp.error.unwrap().contains("no registered EvalKeySet"));
+
+    // capacity-2 registry: registering a third tenant evicts the LRU one
+    let (_carol, carol_keys) = keygen(&model, "lingcn-nl2", PlanOptions::default(), 30).unwrap();
+    registry.register("carol", lingcn::wire::TenantKeys::new(carol_keys).unwrap());
+    assert_eq!(registry.len(), 2);
+    assert!(metrics.registry_evictions.load(Ordering::Relaxed) >= 1);
+    assert!(metrics.registry_hits.load(Ordering::Relaxed) >= 2);
+    assert!(metrics.registry_misses.load(Ordering::Relaxed) >= 1);
+    let summary = metrics.summary();
+    assert!(summary.contains("key_registry="), "summary: {summary}");
+    coord.shutdown();
+}
