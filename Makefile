@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test bench bench-plan bench-wire
+.PHONY: artifacts artifacts-quick test test-batch bench bench-plan bench-wire bench-batch
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -34,3 +34,14 @@ bench-plan:
 # per nl; writes rust/BENCH_wire.json
 bench-wire:
 	cargo bench --bench wire
+
+# slot-packed batch inference: clips/sec at batch 1 vs the layout's full
+# copies(); writes BENCH_batch.json (asserts the ≥2x acceptance floor)
+bench-batch:
+	cargo bench --bench batch_throughput
+
+# the slot-batched differential equivalence suite plus the batched
+# coordinator/wire end-to-ends, in release: CKKS is too slow in debug,
+# so the heavy cases are `#[ignore]`d there
+test-batch:
+	cargo test --release --test batch_equivalence --test coordinator_integration --test wire_roundtrip

@@ -40,4 +40,10 @@ cargo build --release --examples
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo test --release (slot-batched differential + end-to-end suites)"
+# the batch-vs-single differential cases and the batched coordinator/wire
+# end-to-ends run real CKKS executions and are cfg-gated to ignore in
+# debug — run all three suites here in release (make test-batch)
+cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip
+
 echo "==> ci.sh: all green"

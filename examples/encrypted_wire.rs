@@ -73,6 +73,7 @@ fn main() -> anyhow::Result<()> {
             Some(client.variant.clone()),
             request.cts,
             Some(request.params_hash),
+            request.batch,
             None,
         )?;
         anyhow::ensure!(resp.error.is_none(), "{tenant}: {:?}", resp.error);
@@ -96,6 +97,7 @@ fn main() -> anyhow::Result<()> {
         Some("wire-fast".into()),
         vec![],
         None,
+        1,
         None,
     )?;
     println!("  unregistered tenant → error: {:?}", stray.error.unwrap());

@@ -1,0 +1,126 @@
+//! Slot-packed batch throughput (DESIGN.md S16): clips/sec through one
+//! `HePlan` at batch 1 (the legacy replicated layout) vs the layout's
+//! full `copies()` (distinct clips in every block copy). The batched plan
+//! pays one extra rotation + mask PMult + Add per wrapping channel
+//! diagonal — bounded by ~2× the single-clip op count — while serving
+//! `copies()` clips per execution, so full-batch throughput lands well
+//! above the 2× acceptance floor whenever `copies() ≥ 4`. Emits
+//! `BENCH_batch.json`.
+//! Run: cargo bench --bench batch_throughput  (or `make bench-batch`)
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::CkksParams;
+use lingcn::graph::Graph;
+use lingcn::he_infer::{HeStgcn, PlanOptions, PrivateInferenceSession};
+use lingcn::stgcn::StgcnModel;
+use lingcn::util::{ascii_table, bench::time_op};
+use std::time::Duration;
+
+fn toy_params(levels: usize) -> CkksParams {
+    CkksParams {
+        n: 1 << 9, // slots 256; block 32 → copies() = 8
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    }
+}
+
+struct Row {
+    batch: usize,
+    exec_s: f64,
+    clips_per_sec: f64,
+    rots: u64,
+    pmults: u64,
+}
+
+fn run(model: &StgcnModel, levels: usize, batch: usize, budget: Duration) -> Row {
+    let opts = PlanOptions { batch, ..Default::default() };
+    let sess = PrivateInferenceSession::new_with_options(model, toy_params(levels), 7, opts)
+        .expect("session");
+    let n = model.v() * model.c_in * model.t;
+    let clips: Vec<Vec<f64>> = (0..batch)
+        .map(|b| (0..n).map(|i| (((b * 131 + i) * 37 % 101) as f64 - 50.0) / 80.0).collect())
+        .collect();
+    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+    let input = sess.encrypt_input_batch(model, &refs).expect("encrypt");
+    // sanity: every clip's logits decode and de-interleave
+    let out = sess.infer_parallel(&input, 1).expect("infer");
+    let logits = sess.decrypt_logits_batch(model, &out);
+    assert_eq!(logits.len(), batch);
+    let stat = time_op(1, 8, budget, || {
+        let _ = sess.infer_parallel(&input, 1).expect("infer");
+    });
+    let exec_s = stat.median_secs();
+    Row {
+        batch,
+        exec_s,
+        clips_per_sec: batch as f64 / exec_s.max(1e-12),
+        rots: sess.plan.counts.rot,
+        pmults: sess.plan.counts.pmult,
+    }
+}
+
+fn main() {
+    let budget = Duration::from_secs(4);
+    let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let slots = toy_params(1).n / 2;
+    let layout = AmaLayout::new(
+        model.t,
+        model.c_max().max(model.num_classes()),
+        slots,
+    )
+    .expect("layout");
+    let levels = HeStgcn::new(&model, layout).expect("probe").levels_needed().expect("levels");
+    let copies = layout.copies();
+    assert!(copies >= 4, "bench config must leave ≥ 4 copies, got {copies}");
+
+    let single = run(&model, levels, 1, budget);
+    let full = run(&model, levels, copies, budget);
+    let speedup = full.clips_per_sec / single.clips_per_sec.max(1e-12);
+
+    let table: Vec<Vec<String>> = [&single, &full]
+        .iter()
+        .map(|r| {
+            vec![
+                r.batch.to_string(),
+                format!("{:.4}", r.exec_s),
+                format!("{:.2}", r.clips_per_sec),
+                r.rots.to_string(),
+                r.pmults.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        ascii_table(&["batch", "exec (s)", "clips/s", "plan rots", "plan pmults"], &table)
+    );
+    println!("full-batch speedup: {speedup:.2}x (copies = {copies})");
+
+    let json = format!(
+        "{{\n  \"copies\": {copies},\n  \"batch_1\": {{\"exec_s\": {:.6}, \
+         \"clips_per_sec\": {:.3}, \"plan_rots\": {}, \"plan_pmults\": {}}},\n  \
+         \"batch_full\": {{\"batch\": {}, \"exec_s\": {:.6}, \"clips_per_sec\": {:.3}, \
+         \"plan_rots\": {}, \"plan_pmults\": {}}},\n  \"speedup\": {:.3}\n}}\n",
+        single.exec_s,
+        single.clips_per_sec,
+        single.rots,
+        single.pmults,
+        full.batch,
+        full.exec_s,
+        full.clips_per_sec,
+        full.rots,
+        full.pmults,
+        speedup
+    );
+    std::fs::write("BENCH_batch.json", &json).expect("writing BENCH_batch.json");
+    println!("wrote BENCH_batch.json");
+
+    // acceptance floor (ISSUE 4): ≥ 2× clips/sec at full batch vs batch-1
+    // on any config with copies() ≥ 4
+    assert!(
+        speedup >= 2.0,
+        "slot batching must at least double throughput (got {speedup:.2}x)"
+    );
+}

@@ -14,6 +14,18 @@
 //! adjacency multiply is pure `PMult`/`Add` (Eq. 7) and every temporal /
 //! channel-mixing op is node-local — exactly what makes the paper's
 //! *node-wise* structural linearization representable in HE.
+//!
+//! **Slot-packed batching (DESIGN.md S16).** At sub-paper scales the
+//! periodic copies are redundant — every copy holds the same clip. The
+//! batched layout instead places up to `copies()` *distinct* clips into
+//! the copies ([`AmaLayout::pack_batch`]), multiplying serving throughput
+//! at essentially the same per-ciphertext cost. Batched execution gives
+//! up the replication closure, so the engine's channel-diagonal taps
+//! switch to a *block-closed* two-rotation form (see
+//! `he_infer::engine`): every `d·T` tap splits into the in-block global
+//! rotation `d·T` plus the wrap path `d·T − block (mod slots)`, each
+//! masked to exactly the rows it serves, so one clip's edge slots never
+//! bleed into its neighbour's copy.
 
 use crate::ckks::{Ciphertext, CkksEngine};
 use anyhow::{ensure, Result};
@@ -86,16 +98,94 @@ impl AmaLayout {
         out
     }
 
+    /// Pack up to `copies()` *distinct* clips' node features into the
+    /// block copies: clip `b`'s [C, T] map lands in copy `b`, every
+    /// remaining copy stays zero (so the padded copies of a ragged batch
+    /// decrypt to zeros after a batch-compiled plan). The batched sibling
+    /// of [`AmaLayout::pack`]; a batch of one should keep using the
+    /// replicated [`AmaLayout::pack`], which the single-clip plan's
+    /// rotation closure relies on.
+    pub fn pack_batch(&self, feats: &[&[f64]], c: usize) -> Result<Vec<f64>> {
+        ensure!(!feats.is_empty(), "pack_batch needs at least one clip");
+        ensure!(
+            feats.len() <= self.copies(),
+            "batch {} exceeds the layout's {} block copies",
+            feats.len(),
+            self.copies()
+        );
+        ensure!(c <= self.c_max, "channels {c} exceed layout capacity {}", self.c_max);
+        let b = self.block();
+        let mut v = vec![0.0; self.slots];
+        for (copy, feat) in feats.iter().enumerate() {
+            ensure!(
+                feat.len() == c * self.t,
+                "clip {copy}: expected {c}x{} = {} values, got {}",
+                self.t,
+                c * self.t,
+                feat.len()
+            );
+            for ci in 0..c {
+                for ti in 0..self.t {
+                    v[copy * b + self.slot(ci, ti)] = feat[ci * self.t + ti];
+                }
+            }
+        }
+        Ok(v)
+    }
+
+    /// Read the first `batch` copies back out as per-clip [C, T] feature
+    /// maps — the inverse of [`AmaLayout::pack_batch`].
+    pub fn unpack_batch(&self, slots: &[f64], c: usize, batch: usize) -> Result<Vec<Vec<f64>>> {
+        ensure!(
+            batch >= 1 && batch <= self.copies(),
+            "batch {batch} outside 1..={} (the layout's copies())",
+            self.copies()
+        );
+        ensure!(c <= self.c_max, "channels {c} exceed layout capacity {}", self.c_max);
+        ensure!(
+            slots.len() == self.slots,
+            "slot vector length {} does not match the layout's {}",
+            slots.len(),
+            self.slots
+        );
+        let b = self.block();
+        let mut out = Vec::with_capacity(batch);
+        for copy in 0..batch {
+            let mut feat = vec![0.0; c * self.t];
+            for ci in 0..c {
+                for ti in 0..self.t {
+                    feat[ci * self.t + ti] = slots[copy * b + self.slot(ci, ti)];
+                }
+            }
+            out.push(feat);
+        }
+        Ok(out)
+    }
+
     /// Build a full-slot mask vector from a per-block closure
     /// `f(channel, frame) -> value`, replicated into every periodic copy.
     /// Used for all diagonal-method plaintext masks.
     pub fn mask<F: Fn(usize, usize) -> f64>(&self, f: F) -> Vec<f64> {
+        self.mask_batch(f, self.copies())
+    }
+
+    /// Like [`AmaLayout::mask`], but replicated into only the first
+    /// `batch` copies (the rest stay zero). Batched plans restrict every
+    /// mask — conv diagonals, activation constants, biases — to the
+    /// active copies, so the padded copies of a ragged batch stay
+    /// identically zero through the whole encrypted walk.
+    pub fn mask_batch<F: Fn(usize, usize) -> f64>(&self, f: F, batch: usize) -> Vec<f64> {
+        assert!(
+            batch >= 1 && batch <= self.copies(),
+            "mask batch {batch} outside 1..={}",
+            self.copies()
+        );
         let b = self.block();
         let mut v = vec![0.0; self.slots];
         for ci in 0..self.c_max {
             for ti in 0..self.t {
                 let val = f(ci, ti);
-                for copy in 0..self.copies() {
+                for copy in 0..batch {
                     v[copy * b + self.slot(ci, ti)] = val;
                 }
             }
@@ -130,6 +220,31 @@ impl AmaLayout {
         }
         steps.into_iter().collect()
     }
+
+    /// Left-rotation amount of the *wrap* path of channel diagonal `d` in
+    /// the block-closed (batched) form: `d·T − block (mod slots)`. The
+    /// rows `o` with `o + d ≥ c_max` read their data from this rotation
+    /// instead of the plain `d·T`, which would cross into the next copy.
+    pub fn wrap_step(&self, d: usize) -> usize {
+        debug_assert!(d >= 1 && d < self.c_max);
+        self.slots - (self.block() - d * self.t)
+    }
+
+    /// [`AmaLayout::rotation_steps`] plus the wrap-path steps that
+    /// block-closed (batched) plans add: each channel diagonal `d·T`
+    /// gains the companion left rotation `d·T − block (mod slots)`
+    /// (DESIGN.md S16). A superset of every batch size's exact
+    /// `HePlan::required_rotations`.
+    pub fn rotation_steps_batched(&self, k: usize) -> Vec<usize> {
+        let mut steps: std::collections::BTreeSet<usize> =
+            self.rotation_steps(k).into_iter().collect();
+        if self.copies() > 1 {
+            for d in 1..self.c_max {
+                steps.insert(self.wrap_step(d));
+            }
+        }
+        steps.into_iter().collect()
+    }
 }
 
 /// A packed encrypted clip: one ciphertext per graph node.
@@ -156,6 +271,75 @@ pub fn pack_clip(layout: &AmaLayout, x: &[f64], v: usize, c: usize) -> Result<Ve
     Ok((0..v)
         .map(|vi| layout.pack(&x[vi * per..(vi + 1) * per], c))
         .collect())
+}
+
+/// Pack B distinct [V, C, T] clips into per-node slot vectors, clip `b`
+/// in block copy `b` of every node's vector — the batched sibling of
+/// [`pack_clip`], shared by the in-process and wire encryption paths.
+pub fn pack_clip_batch(
+    layout: &AmaLayout,
+    clips: &[&[f64]],
+    v: usize,
+    c: usize,
+) -> Result<Vec<Vec<f64>>> {
+    ensure!(!clips.is_empty(), "pack_clip_batch needs at least one clip");
+    let per = c * layout.t;
+    for (bi, x) in clips.iter().enumerate() {
+        ensure!(
+            x.len() == v * per,
+            "clip {bi} shape mismatch: expected {v}x{c}x{} = {} values, got {}",
+            layout.t,
+            v * per,
+            x.len()
+        );
+    }
+    (0..v)
+        .map(|vi| {
+            let feats: Vec<&[f64]> =
+                clips.iter().map(|x| &x[vi * per..(vi + 1) * per]).collect();
+            layout.pack_batch(&feats, c)
+        })
+        .collect()
+}
+
+/// Encrypt B distinct clips slot-packed into one per-node ciphertext set
+/// at limb count `nq`. `PackedInput::c` is the per-clip channel count.
+pub fn encrypt_clip_batch(
+    engine: &CkksEngine,
+    layout: &AmaLayout,
+    clips: &[&[f64]],
+    v: usize,
+    c: usize,
+    nq: usize,
+) -> Result<PackedInput> {
+    let cts = pack_clip_batch(layout, clips, v, c)?
+        .into_iter()
+        .map(|packed| engine.encrypt_at(&packed, nq))
+        .collect();
+    Ok(PackedInput {
+        layout: *layout,
+        c,
+        cts,
+    })
+}
+
+/// Decrypt per-node ciphertexts of a slot-packed batch back to B
+/// [V, C, T] clips (clip-major output).
+pub fn decrypt_clip_batch(
+    engine: &CkksEngine,
+    layout: &AmaLayout,
+    packed: &[Ciphertext],
+    c: usize,
+    batch: usize,
+) -> Result<Vec<Vec<f64>>> {
+    let mut out = vec![Vec::with_capacity(packed.len() * c * layout.t); batch];
+    for ct in packed {
+        let slots = engine.decrypt(ct);
+        for (bi, feat) in layout.unpack_batch(&slots, c, batch)?.into_iter().enumerate() {
+            out[bi].extend(feat);
+        }
+    }
+    Ok(out)
 }
 
 /// Encrypt a [V, C, T] clip into per-node ciphertexts at limb count `nq`.
@@ -262,6 +446,173 @@ mod tests {
         // pooling strides
         assert!(steps.contains(&2) && steps.contains(&4));
         assert!(steps.contains(&16));
+    }
+
+    #[test]
+    fn test_pack_batch_roundtrip_and_replication_free() {
+        let l = AmaLayout::new(4, 4, 64).unwrap(); // copies = 4
+        let c = 3;
+        let clips: Vec<Vec<f64>> = (0..3)
+            .map(|b| (0..c * 4).map(|i| (b * 100 + i) as f64 + 0.5).collect())
+            .collect();
+        let refs: Vec<&[f64]> = clips.iter().map(|v| v.as_slice()).collect();
+        let packed = l.pack_batch(&refs, c).unwrap();
+        // every clip sits in exactly its own copy
+        let back = l.unpack_batch(&packed, c, 3).unwrap();
+        assert_eq!(back, clips);
+        // the padded copy is identically zero
+        let b = l.block();
+        for s in 3 * b..4 * b {
+            assert_eq!(packed[s], 0.0, "padded copy slot {s} must be zero");
+        }
+        // and no cross-copy replication: copy 1 differs from copy 0
+        assert_ne!(&packed[..b], &packed[b..2 * b]);
+    }
+
+    #[test]
+    fn test_pack_batch_error_cases() {
+        let l = AmaLayout::new(4, 4, 64).unwrap(); // copies = 4
+        let feat = vec![0.0; 2 * 4];
+        let five: Vec<&[f64]> = (0..5).map(|_| feat.as_slice()).collect();
+        assert!(l.pack_batch(&five, 2).is_err(), "B > copies() must be rejected");
+        assert!(l.pack_batch(&[], 2).is_err(), "empty batch must be rejected");
+        assert!(
+            l.pack_batch(&[&feat[..3]], 2).is_err(),
+            "wrong per-clip shape must be rejected"
+        );
+        assert!(
+            l.pack_batch(&[feat.as_slice()], 5).is_err(),
+            "c > c_max must be rejected"
+        );
+        let slots = vec![0.0; 64];
+        assert!(l.unpack_batch(&slots, 2, 0).is_err());
+        assert!(l.unpack_batch(&slots, 2, 5).is_err());
+        assert!(l.unpack_batch(&slots[..10], 2, 1).is_err());
+    }
+
+    /// Cyclic left rotation of a plaintext slot vector (what `Rot` does).
+    fn rot_left(v: &[f64], k: usize) -> Vec<f64> {
+        let n = v.len();
+        (0..n).map(|i| v[(i + k) % n]).collect()
+    }
+
+    /// The block-closure invariant the batched engine relies on
+    /// (DESIGN.md S16): for every channel diagonal `d` and temporal tap
+    /// used by any layer, the masked two-rotation composition
+    /// `m_lo ⊙ Rot(x, d·T + tap)  +  m_hi ⊙ Rot(x, d·T − block + tap)`
+    /// reads **only** the reader's own copy — batched packs never mix
+    /// clips. Exhaustive over small (t, c_max), randomized fill values.
+    #[test]
+    fn test_block_closed_taps_never_mix_copies() {
+        let mut lcg: u64 = 0x9e3779b97f4a7c15;
+        let mut rnd = || {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((lcg >> 33) as f64) / (1u64 << 31) as f64 - 1.0
+        };
+        for (t, cm) in [(2usize, 2usize), (2, 4), (4, 2), (4, 4)] {
+            let copies = 4;
+            let l = AmaLayout::new(t, cm, copies * cm * t).unwrap();
+            assert_eq!(l.copies(), copies);
+            for batch in 1..=copies {
+                // distinct random clips in the first `batch` copies
+                let feats: Vec<Vec<f64>> =
+                    (0..batch).map(|_| (0..cm * t).map(|_| rnd()).collect()).collect();
+                let refs: Vec<&[f64]> = feats.iter().map(|v| v.as_slice()).collect();
+                let x = l.pack_batch(&refs, cm).unwrap();
+                let half_taps: [isize; 3] = [-1, 0, 1];
+                for d in 0..cm {
+                    for &tap in &half_taps {
+                        if t < 2 && tap != 0 {
+                            continue;
+                        }
+                        // masked two-rotation composition, 0/1 masks split
+                        // by the wrap predicate o + d >= c_max
+                        let n = l.slots as isize;
+                        let lo_amt = ((d * t) as isize + tap).rem_euclid(n) as usize;
+                        let hi_amt =
+                            ((d * t) as isize - l.block() as isize + tap).rem_euclid(n) as usize;
+                        let keep = |o: usize, tt: usize, wrap: bool| {
+                            let src_t = tt as isize + tap;
+                            if o + d >= cm && !wrap || o + d < cm && wrap {
+                                return 0.0;
+                            }
+                            if src_t < 0 || src_t >= t as isize {
+                                return 0.0;
+                            }
+                            1.0
+                        };
+                        let m_lo = l.mask_batch(|o, tt| keep(o, tt, false), batch);
+                        let m_hi = l.mask_batch(|o, tt| keep(o, tt, true), batch);
+                        let r_lo = rot_left(&x, lo_amt);
+                        let r_hi = rot_left(&x, hi_amt);
+                        let y: Vec<f64> = (0..l.slots)
+                            .map(|i| m_lo[i] * r_lo[i] + m_hi[i] * r_hi[i])
+                            .collect();
+                        // expected: within each active copy, channel o reads
+                        // its own copy's channel (o+d) % cm at frame tt+tap
+                        for copy in 0..copies {
+                            for o in 0..cm {
+                                for tt in 0..t {
+                                    let got = y[copy * l.block() + l.slot(o, tt)];
+                                    let src_t = tt as isize + tap;
+                                    let want = if copy < batch
+                                        && src_t >= 0
+                                        && (src_t as usize) < t
+                                    {
+                                        feats[copy][((o + d) % cm) * t + src_t as usize]
+                                    } else {
+                                        0.0
+                                    };
+                                    assert_eq!(
+                                        got, want,
+                                        "t={t} cm={cm} batch={batch} d={d} tap={tap} \
+                                         copy={copy} o={o} tt={tt}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_rotation_steps_batched_superset_with_wrap_steps() {
+        let l = AmaLayout::new(8, 4, 512).unwrap();
+        let base: std::collections::BTreeSet<usize> = l.rotation_steps(3).into_iter().collect();
+        let batched: std::collections::BTreeSet<usize> =
+            l.rotation_steps_batched(3).into_iter().collect();
+        assert!(batched.is_superset(&base));
+        for d in 1..4 {
+            assert!(batched.contains(&l.wrap_step(d)), "missing wrap step for d={d}");
+        }
+        // single-copy layouts add nothing (wrap ≡ the plain diagonal)
+        let full = AmaLayout::new(8, 64, 512).unwrap();
+        assert_eq!(full.rotation_steps_batched(3), full.rotation_steps(3));
+    }
+
+    #[test]
+    fn test_encrypt_decrypt_clip_batch() {
+        let mut p = CkksParams::toy(2);
+        p.n = 1 << 9; // slots 256
+        let engine = CkksEngine::new(p, &[], 7).unwrap();
+        let layout = AmaLayout::new(4, 4, engine.ctx.slots()).unwrap();
+        let (v, c, batch) = (3, 2, 4);
+        let clips: Vec<Vec<f64>> = (0..batch)
+            .map(|b| {
+                (0..v * c * 4).map(|i| ((b * 31 + i) as f64 / 10.0).sin()).collect()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = clips.iter().map(|x| x.as_slice()).collect();
+        let packed = encrypt_clip_batch(&engine, &layout, &refs, v, c, 3).unwrap();
+        assert_eq!(packed.cts.len(), v);
+        let back = decrypt_clip_batch(&engine, &layout, &packed.cts, c, batch).unwrap();
+        for (clip, got) in clips.iter().zip(&back) {
+            for (a, b) in clip.iter().zip(got) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        }
     }
 
     #[test]

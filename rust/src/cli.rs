@@ -9,11 +9,11 @@
 //! | `plan` | print the HE parameter plan (paper Table 6) |
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
-//! | `infer --nl K [--encrypted] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out) |
-//! | `serve [--tier plaintext\|he\|he-wire] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
-//! | `keygen --nl K [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; writes the local secret key file and the server-shippable eval-key bundle |
-//! | `encrypt --key F --input X.lgt --out R.cts` | client-side: encrypt a clip into a ciphertext request bundle |
-//! | `decrypt-logits --key F --in RESP.ct` | client-side: open the server's logits ciphertext and print the class scores |
+//! | `infer --nl K [--encrypted] [--batch B] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16) |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
+//! | `keygen --nl K [--batch B] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
+//! | `encrypt --key F --input X.lgt --out R.cts [--batch B]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip) |
+//! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
 //!
 //! The four-verb wire roundtrip (privacy boundary, DESIGN.md S15):
 //!
@@ -141,9 +141,15 @@ fn cmd_predict(args: &[String]) -> Result<()> {
 fn cmd_infer(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
     let encrypted = args.iter().any(|a| a == "--encrypted");
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    anyhow::ensure!(
+        batch == 1 || encrypted,
+        "--batch only applies to --encrypted (slot-packed ciphertext batching)"
+    );
     let dir = Path::new("artifacts");
     let model = crate::stgcn::StgcnModel::load(
         &dir.join(format!("model_nl{nl}.lgt")),
@@ -152,7 +158,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     let ex = crate::util::tensorio::TensorFile::load(&dir.join("example_input.lgt"))?;
     let x = &ex.get("x")?.data;
     let t0 = std::time::Instant::now();
-    let logits = if encrypted {
+    if encrypted {
         let params = crate::ckks::CkksParams {
             n: 1 << 11,
             q0_bits: 50,
@@ -162,19 +168,34 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             allow_insecure: true,
         };
         crate::ckks::set_limb_parallelism(limb_threads);
-        let sess = crate::he_infer::PrivateInferenceSession::new(&model, params, 7)?;
-        let input = sess.encrypt_input(&model, x)?;
+        let opts = crate::he_infer::PlanOptions { batch, ..Default::default() };
+        let sess =
+            crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
+        // demo batch: the example clip slot-packed B times (a deployment
+        // packs B *distinct* client clips)
+        let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
+        let input = sess.encrypt_input_batch(&model, &clips)?;
         let out = sess.infer_parallel(&input, threads)?;
-        sess.decrypt_logits(&model, &out)
+        let per_clip = sess.decrypt_logits_batch(&model, &out);
+        let wall = t0.elapsed();
+        for (b, logits) in per_clip.iter().enumerate() {
+            let arg = crate::util::argmax(logits);
+            println!(
+                "mode=encrypted nl={nl} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}"
+            );
+        }
+        println!(
+            "batch={batch} latency={wall:?} ({:.2} clips/s)",
+            batch as f64 / wall.as_secs_f64()
+        );
     } else {
-        model.forward(x)?
-    };
-    let arg = crate::util::argmax(&logits);
-    println!(
-        "mode={} nl={nl} predicted_class={arg} latency={:?}\nlogits={logits:?}",
-        if encrypted { "encrypted" } else { "plaintext" },
-        t0.elapsed()
-    );
+        let logits = model.forward(x)?;
+        let arg = crate::util::argmax(&logits);
+        println!(
+            "mode=plaintext nl={nl} predicted_class={arg} latency={:?}\nlogits={logits:?}",
+            t0.elapsed()
+        );
+    }
     Ok(())
 }
 
@@ -205,6 +226,8 @@ fn weak_entropy() -> u64 {
 
 fn cmd_keygen(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let out_dir = std::path::PathBuf::from(
         arg_value(args, "--out-dir").unwrap_or_else(|| "wire".into()),
     );
@@ -213,7 +236,9 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
         &Path::new("artifacts").join(format!("model_nl{nl}.lgt")),
         crate::graph::Graph::ntu_rgbd(),
     )?;
-    let opts = crate::he_infer::PlanOptions::default();
+    // --batch B: the Galois set also covers the block-closed batch-B
+    // plan's wrap rotations, so this tenant can ship slot-packed bundles
+    let opts = crate::he_infer::PlanOptions { batch, ..Default::default() };
     // seed policy: explicit --seed is reproducible (tests) but derivable;
     // the default seeds full 256-bit state from the OS entropy device
     let (client, key_set) = if let Some(s) = arg_value(args, "--seed") {
@@ -311,6 +336,8 @@ fn cmd_encrypt(args: &[String]) -> Result<()> {
     let input = arg_value(args, "--input")
         .unwrap_or_else(|| "artifacts/example_input.lgt".into());
     let out = arg_value(args, "--out").unwrap_or_else(|| "wire/request.cts".into());
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
     // mix per-invocation entropy: two encrypts from the same persisted
     // RNG state (concurrent runs, a restored backup) would otherwise
@@ -326,16 +353,24 @@ fn cmd_encrypt(args: &[String]) -> Result<()> {
     client.mix_entropy(mix);
     let ex = crate::util::tensorio::TensorFile::load(Path::new(&input))?;
     let x = &ex.get("x")?.data;
-    let bundle = client.encrypt_request(x)?;
+    // demo batch: the clip slot-packed B times (a deployment packs B
+    // distinct clips; the bundle carries the batch size either way)
+    let bundle = if batch > 1 {
+        let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
+        client.encrypt_request_batch(&clips)?
+    } else {
+        client.encrypt_request(x)?
+    };
     // persist the advanced RNG state too (defense in depth)
     write_secret_file(Path::new(&key_path), &client.to_bytes())?;
     let bytes = bundle.to_bytes();
     ensure_parent_dir(Path::new(&out))?;
     std::fs::write(Path::new(&out), &bytes)?;
     println!(
-        "variant={} ciphertexts={} wrote {out} ({} bytes)",
+        "variant={} ciphertexts={} batch={} wrote {out} ({} bytes)",
         client.variant,
         bundle.cts.len(),
+        bundle.batch,
         bytes.len()
     );
     Ok(())
@@ -346,11 +381,45 @@ fn cmd_decrypt_logits(args: &[String]) -> Result<()> {
     let key_path = arg_value(args, "--key")
         .ok_or_else(|| anyhow::anyhow!("decrypt-logits requires --key <client key file>"))?;
     let in_path = arg_value(args, "--in").unwrap_or_else(|| "wire/response.ct".into());
+    let mut batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    // cross-check against the request bundle when available: the bare
+    // response ciphertext does not carry its batch, and a wrong --batch
+    // would confidently decode padded (zero) copies as predictions
+    if let Some(req_path) = arg_value(args, "--request") {
+        let bundle = crate::wire::CtBundle::from_bytes(&std::fs::read(Path::new(&req_path))?)?;
+        if args.iter().any(|a| a == "--batch") {
+            anyhow::ensure!(
+                batch == bundle.batch,
+                "--batch {batch} disagrees with the request bundle's slot-batch \
+                 size {} ({req_path})",
+                bundle.batch
+            );
+        }
+        batch = bundle.batch;
+    } else if batch > 1 {
+        eprintln!(
+            "WARNING: --batch {batch} is not validated against the request — \
+             if it exceeds what `encrypt --batch` packed, the extra clips \
+             decode CKKS noise on zeroed copies, not real predictions \
+             (pass --request <request.cts> to cross-check)"
+        );
+    }
     let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
     let ct = crate::ckks::Ciphertext::from_bytes(&std::fs::read(Path::new(&in_path))?)?;
-    let logits = client.decrypt_logits(&ct)?;
-    let arg = crate::util::argmax(&logits);
-    println!("variant={} predicted_class={arg}\nlogits={logits:?}", client.variant);
+    if batch > 1 {
+        for (b, logits) in client.decrypt_logits_batch(&ct, batch)?.iter().enumerate() {
+            let arg = crate::util::argmax(logits);
+            println!(
+                "variant={} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}",
+                client.variant
+            );
+        }
+    } else {
+        let logits = client.decrypt_logits(&ct)?;
+        let arg = crate::util::argmax(&logits);
+        println!("variant={} predicted_class={arg}\nlogits={logits:?}", client.variant);
+    }
     Ok(())
 }
 
@@ -360,6 +429,13 @@ fn cmd_decrypt_logits(args: &[String]) -> Result<()> {
 /// and ciphertexts — no secret key, no plaintext clip.
 fn cmd_serve_wire(args: &[String]) -> Result<()> {
     use crate::wire::WireSerialize;
+    // wire batching is client-side: the request bundle carries its own
+    // batch size, so a server-side --batch here would only mislead
+    anyhow::ensure!(
+        arg_value(args, "--batch").is_none(),
+        "--batch does not apply to --tier he-wire: the slot-batch size \
+         travels in the request bundle (use `encrypt --batch B`)"
+    );
     let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     let limb_threads: usize =
@@ -403,7 +479,9 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
     );
     let t0 = std::time::Instant::now();
     let hash = Some(bundle.params_hash);
-    let resp = coord.infer_blocking_encrypted(tenant, Some(variant), bundle.cts, hash, None)?;
+    let batch = bundle.batch;
+    let resp =
+        coord.infer_blocking_encrypted(tenant, Some(variant), bundle.cts, hash, batch, None)?;
     if let Some(err) = resp.error {
         coord.shutdown();
         anyhow::bail!("encrypted request failed: {err}");
@@ -433,6 +511,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let requests: usize = arg_value(args, "--requests").unwrap_or_else(|| "64".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
     // limb fan-out composes multiplicatively with the plan-executor pool
@@ -445,12 +525,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         std::sync::Arc<dyn crate::coordinator::InferenceExecutor>,
     ) = match tier.as_str() {
         "plaintext" => {
+            anyhow::ensure!(batch <= 1, "--batch is a slot-packing knob of --tier he");
             let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
             (router, std::sync::Arc::new(exec))
         }
         "he" => {
-            let (router, mut exec) =
-                crate::coordinator::he_from_artifacts(Path::new("artifacts"), &cost, threads)?;
+            let (router, mut exec) = crate::coordinator::he_from_artifacts(
+                Path::new("artifacts"),
+                &cost,
+                threads,
+                batch,
+            )?;
             exec.set_metrics(metrics.clone());
             (router, std::sync::Arc::new(exec))
         }

@@ -1,8 +1,10 @@
 //! Dynamic batcher: groups queued requests per model variant, dispatching
 //! when a batch fills or its oldest member exceeds the wait deadline.
-//! HE inference amortizes nothing *within* one ciphertext here (each
-//! request is its own ciphertext set), but batching amortizes per-variant
-//! executor setup and keeps workers saturated — the standard serving shape.
+//! On the slot-batched HE tier a dispatched batch becomes **one**
+//! ciphertext-set execution (up to the variant layout's `copies()` clips
+//! per job — see DESIGN.md S16), so readiness is keyed on each queue's
+//! own capacity, not one global knob; elsewhere batching still amortizes
+//! per-variant executor setup and keeps workers saturated.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -18,6 +20,10 @@ pub struct Pending<T> {
 /// Per-variant FIFO queues with deadline-or-size dispatch.
 pub struct Batcher<T> {
     queues: HashMap<String, Vec<Pending<T>>>,
+    /// Per-queue dispatch capacities (the variant's slot capacity on the
+    /// batched HE tier); queues without an entry use `max_batch`.
+    capacities: HashMap<String, usize>,
+    /// Default dispatch capacity for queues without a per-queue one.
     pub max_batch: usize,
     pub max_wait: Duration,
 }
@@ -27,9 +33,24 @@ impl<T> Batcher<T> {
         assert!(max_batch >= 1);
         Batcher {
             queues: HashMap::new(),
+            capacities: HashMap::new(),
             max_batch,
             max_wait,
         }
+    }
+
+    /// Set a queue's own dispatch capacity (e.g. the variant layout's
+    /// `copies()` reported by `InferenceExecutor::slot_capacity`). Zero
+    /// is ignored; the capacity replaces `max_batch` for that queue only.
+    pub fn set_capacity(&mut self, key: &str, cap: usize) {
+        if cap >= 1 {
+            self.capacities.insert(key.to_string(), cap);
+        }
+    }
+
+    /// The dispatch capacity governing `key`'s queue.
+    pub fn capacity(&self, key: &str) -> usize {
+        self.capacities.get(key).copied().unwrap_or(self.max_batch)
     }
 
     pub fn push(&mut self, variant: &str, item: Pending<T>) {
@@ -40,25 +61,32 @@ impl<T> Batcher<T> {
         self.queues.values().map(Vec::len).sum()
     }
 
-    /// Pop the next dispatchable batch: any queue at `max_batch`, or whose
-    /// head has waited past `max_wait`. FIFO within a variant.
+    /// Pop the next dispatchable batch: any queue at its own capacity, or
+    /// whose head has waited past `max_wait` (a deadline flush dispatches
+    /// the partial batch). FIFO within a variant; drained-empty queues
+    /// are removed so `queued()` always counts live work only.
     pub fn pop_ready(&mut self, now: Instant) -> Option<(String, Vec<Pending<T>>)> {
         let key = self
             .queues
             .iter()
             .filter(|(_, q)| !q.is_empty())
-            .find(|(_, q)| {
-                q.len() >= self.max_batch
+            .find(|(k, q)| {
+                q.len() >= self.capacity(k)
                     || now.duration_since(q[0].enqueued) >= self.max_wait
             })
             .map(|(k, _)| k.clone())?;
+        let cap = self.capacity(&key);
         let q = self.queues.get_mut(&key).unwrap();
-        let take = q.len().min(self.max_batch);
+        let take = q.len().min(cap);
         let batch: Vec<Pending<T>> = q.drain(..take).collect();
+        if q.is_empty() {
+            self.queues.remove(&key);
+        }
         Some((key, batch))
     }
 
-    /// Drain everything (shutdown path).
+    /// Drain everything (shutdown path). Leaves no empty queue entries
+    /// behind, so `queued()` reads 0 afterwards.
     pub fn drain_all(&mut self) -> Vec<(String, Vec<Pending<T>>)> {
         let mut out = Vec::new();
         for (k, q) in self.queues.iter_mut() {
@@ -66,6 +94,7 @@ impl<T> Batcher<T> {
                 out.push((k.clone(), q.drain(..).collect()));
             }
         }
+        self.queues.clear();
         out
     }
 }
@@ -143,5 +172,67 @@ mod tests {
         let drained = b.drain_all();
         assert_eq!(drained.iter().map(|(_, q)| q.len()).sum::<usize>(), 2);
         assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn test_per_variant_capacity_overrides_global() {
+        let mut b = Batcher::new(8, Duration::from_secs(100));
+        b.set_capacity("small", 2);
+        let now = Instant::now();
+        b.push("small", p(1, now));
+        b.push("big", p(10, now));
+        b.push("big", p(11, now));
+        b.push("big", p(12, now));
+        assert!(b.pop_ready(now).is_none(), "neither queue at its capacity");
+        b.push("small", p(2, now));
+        let (v, batch) = b.pop_ready(now).unwrap();
+        assert_eq!(v, "small", "per-variant capacity 2 fills first");
+        assert_eq!(batch.len(), 2);
+        // the uncapped queue still answers to the global max_batch
+        for i in 13..18 {
+            b.push("big", p(i, now));
+        }
+        let (v, batch) = b.pop_ready(now).unwrap();
+        assert_eq!(v, "big");
+        assert_eq!(batch.len(), 8);
+        assert_eq!(b.capacity("small"), 2);
+        assert_eq!(b.capacity("big"), 8);
+        assert_eq!(b.capacity("unset"), 8);
+        // capacity 0 is ignored, not stored
+        b.set_capacity("small", 0);
+        assert_eq!(b.capacity("small"), 2);
+    }
+
+    #[test]
+    fn test_deadline_flushes_partial_batch_below_capacity() {
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        b.set_capacity("a", 4);
+        let t0 = Instant::now();
+        b.push("a", p(1, t0));
+        b.push("a", p(2, t0));
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let (_, batch) = b.pop_ready(later).unwrap();
+        assert_eq!(batch.len(), 2, "ragged partial batch flushes on deadline");
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn test_queued_consistent_across_drains() {
+        let mut b = Batcher::new(2, Duration::from_secs(100));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push("a", p(i, now));
+        }
+        b.push("b", p(9, now));
+        assert_eq!(b.queued(), 5);
+        let _ = b.pop_ready(now).unwrap();
+        assert_eq!(b.queued(), 3, "queued() drops by exactly the dispatched count");
+        let _ = b.pop_ready(now).unwrap();
+        assert_eq!(b.queued(), 1, "empty queues are removed, not counted");
+        let drained = b.drain_all();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(b.queued(), 0);
+        assert!(b.pop_ready(now).is_none());
     }
 }

@@ -24,12 +24,41 @@ pub struct Metrics {
     pub registry_misses: AtomicU64,
     /// Tenants dropped from the key registry (LRU or explicit removal).
     pub registry_evictions: AtomicU64,
+    /// Slot-batched jobs dispatched (one ciphertext-set execution serving
+    /// several requests; DESIGN.md S16).
+    pub batch_jobs: AtomicU64,
+    /// Requests answered through slot-batched jobs.
+    pub batch_requests: AtomicU64,
+    /// Block copies that carried a real clip, summed over slot-batched
+    /// jobs (the occupancy numerator).
+    pub slots_filled: AtomicU64,
+    /// Block copies available, summed over slot-batched jobs (the
+    /// occupancy denominator).
+    pub slots_capacity: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
 }
 
 impl Metrics {
+    /// Fraction of available block copies that carried a clip across all
+    /// slot-batched jobs (0.0 before any ran).
+    pub fn slot_occupancy(&self) -> f64 {
+        let cap = self.slots_capacity.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.slots_filled.load(Ordering::Relaxed) as f64 / cap as f64
+    }
+
+    /// Mean requests per slot-batched job (0.0 before any ran).
+    pub fn batch_fill(&self) -> f64 {
+        let jobs = self.batch_jobs.load(Ordering::Relaxed);
+        if jobs == 0 {
+            return 0.0;
+        }
+        self.batch_requests.load(Ordering::Relaxed) as f64 / jobs as f64
+    }
     pub fn observe_latency(&self, d: Duration) {
         let secs = d.as_secs_f64().max(1e-9);
         let idx = ((secs.log2() + 10.0).floor().max(0.0) as usize).min(BUCKET_COUNT - 1);
@@ -67,7 +96,8 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
-             key_registry={}h/{}m/{}e mean={:?} p50≤{:?} p99≤{:?}",
+             key_registry={}h/{}m/{}e slot_batch={}j/{}r fill={:.2} occ={:.2} \
+             mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -77,6 +107,10 @@ impl Metrics {
             self.registry_hits.load(Ordering::Relaxed),
             self.registry_misses.load(Ordering::Relaxed),
             self.registry_evictions.load(Ordering::Relaxed),
+            self.batch_jobs.load(Ordering::Relaxed),
+            self.batch_requests.load(Ordering::Relaxed),
+            self.batch_fill(),
+            self.slot_occupancy(),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
@@ -106,6 +140,23 @@ mod tests {
     fn test_empty_metrics() {
         let m = Metrics::default();
         assert_eq!(m.latency_quantile(0.5), Duration::ZERO);
+        assert_eq!(m.slot_occupancy(), 0.0);
+        assert_eq!(m.batch_fill(), 0.0);
         let _ = m.summary();
+    }
+
+    #[test]
+    fn test_slot_batch_ratios() {
+        let m = Metrics::default();
+        // two jobs: one full (4/4), one ragged (2/4)
+        m.batch_jobs.fetch_add(2, Ordering::Relaxed);
+        m.batch_requests.fetch_add(6, Ordering::Relaxed);
+        m.slots_filled.fetch_add(6, Ordering::Relaxed);
+        m.slots_capacity.fetch_add(8, Ordering::Relaxed);
+        assert!((m.slot_occupancy() - 0.75).abs() < 1e-12);
+        assert!((m.batch_fill() - 3.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("slot_batch=2j/6r"), "summary: {s}");
+        assert!(s.contains("occ=0.75"), "summary: {s}");
     }
 }

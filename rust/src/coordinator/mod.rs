@@ -90,17 +90,19 @@ pub fn from_artifacts(
 
 /// Build a router + **encrypted** executor tier from the artifacts
 /// directory: real CKKS inference through cached compiled `HePlan`s
-/// (DESIGN.md S14), `threads` wide per request.
+/// (DESIGN.md S14), `threads` wide per request. `max_batch > 1` turns on
+/// slot-packed batching (DESIGN.md S16): up to `min(max_batch, copies())`
+/// same-variant clips ride one ciphertext set per job.
 pub fn he_from_artifacts(
     dir: &Path,
     cost: &crate::costmodel::OpCostModel,
     threads: usize,
+    max_batch: usize,
 ) -> Result<(Router, crate::he_infer::HeExecutor)> {
     let (acc_by_nl, models) = load_variants(dir)?;
-    Ok((
-        router_from(&acc_by_nl, cost),
-        crate::he_infer::HeExecutor::new(models, threads, 7),
-    ))
+    let mut executor = crate::he_infer::HeExecutor::new(models, threads, 7);
+    executor.set_max_batch(max_batch);
+    Ok((router_from(&acc_by_nl, cost), executor))
 }
 
 /// Build a router + the **wire** executor tier (DESIGN.md S15): encrypted

@@ -25,21 +25,43 @@ use std::time::{Duration, Instant};
 pub trait InferenceExecutor: Send + Sync + 'static {
     fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>>;
 
+    /// Serve one slot-batched job: up to [`slot_capacity`] clips answered
+    /// by a single execution (the HE batching tier packs them into one
+    /// ciphertext set's block copies; DESIGN.md S16), logits returned in
+    /// request order for de-interleaving. Default: per-clip [`infer`], so
+    /// tiers without slot packing keep their semantics unchanged.
+    ///
+    /// [`slot_capacity`]: InferenceExecutor::slot_capacity
+    fn infer_batch(&self, variant: &str, clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        clips.iter().map(|c| self.infer(variant, c)).collect()
+    }
+
+    /// How many requests one dispatched job for `variant` can absorb in a
+    /// single execution — `min(max_batch, copies())` on the slot-batched
+    /// HE tier, 1 elsewhere. The leader sizes per-variant batches with
+    /// this; values > 1 opt the variant into slot-batched dispatch.
+    fn slot_capacity(&self, _variant: &str) -> usize {
+        1
+    }
+
     /// Serve one encrypted request: the tenant's ciphertexts in, the
     /// logits ciphertext out. `params_hash` is the `wire::params_hash`
     /// stamp of the parameter set the ciphertexts were encrypted under
     /// (from the request's `CtBundle`) — the wire tier rejects it if it
     /// doesn't match the tenant's registered keys, so cross-chain
-    /// ciphertexts error instead of decoding as silent garbage. Only the
-    /// wire tier implements this; every other tier rejects so an
-    /// encrypted request can never silently fall through to a tier that
-    /// would need plaintext.
+    /// ciphertexts error instead of decoding as silent garbage. `batch`
+    /// is the bundle's claimed slot-batch size (client-side packing);
+    /// the wire tier validates it at ingress — a forged value errors,
+    /// never panics or mis-slices logits. Only the wire tier implements
+    /// this; every other tier rejects so an encrypted request can never
+    /// silently fall through to a tier that would need plaintext.
     fn infer_encrypted(
         &self,
         _variant: &str,
         _tenant: &str,
         _cts: &[Ciphertext],
         _params_hash: Option<u64>,
+        _batch: usize,
     ) -> Result<Ciphertext> {
         anyhow::bail!(
             "this executor tier does not accept encrypted-wire requests \
@@ -94,6 +116,10 @@ pub struct EncryptedRequest {
     /// `wire::params_hash` stamp from the request's `CtBundle`; checked
     /// against the tenant's registered keys by the wire executor.
     pub params_hash: Option<u64>,
+    /// Slot-batch size of the bundle (`CtBundle::batch`): how many
+    /// distinct clips the tenant packed into the ciphertexts' block
+    /// copies. Validated at the executor's ingress.
+    pub batch: usize,
     pub latency_budget_s: Option<f64>,
     pub resp: SyncSender<EncryptedResponse>,
 }
@@ -127,6 +153,7 @@ enum Job {
         tenant: String,
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
+        batch: usize,
         resp: SyncSender<EncryptedResponse>,
     },
 }
@@ -134,6 +161,9 @@ enum Job {
 struct Work {
     id: u64,
     enqueued: Instant,
+    /// Routed variant (the dispatch key may add a tenant suffix; workers
+    /// read the variant from here).
+    variant: String,
     job: Job,
 }
 
@@ -184,8 +214,11 @@ impl Coordinator {
         let leader = {
             let router = router.clone();
             let metrics = metrics.clone();
+            let executor = executor.clone();
             std::thread::spawn(move || {
-                leader_loop(submit_rx, dispatch_tx, router, metrics, max_batch, max_wait)
+                leader_loop(
+                    submit_rx, dispatch_tx, router, executor, metrics, max_batch, max_wait,
+                )
             })
         };
 
@@ -240,13 +273,17 @@ impl Coordinator {
     }
 
     /// Convenience: submit an encrypted request and wait. `params_hash`
-    /// is the request bundle's parameter-set stamp (`CtBundle::params_hash`).
+    /// is the request bundle's parameter-set stamp
+    /// (`CtBundle::params_hash`), `batch` its slot-batch size
+    /// (`CtBundle::batch`; 1 for single-clip bundles).
+    #[allow(clippy::too_many_arguments)]
     pub fn infer_blocking_encrypted(
         &self,
         tenant: String,
         variant: Option<String>,
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
+        batch: usize,
         latency_budget_s: Option<f64>,
     ) -> Result<EncryptedResponse> {
         let (tx, rx) = mpsc::sync_channel(1);
@@ -255,6 +292,7 @@ impl Coordinator {
             variant,
             cts,
             params_hash,
+            batch,
             latency_budget_s,
             resp: tx,
         })?;
@@ -273,10 +311,18 @@ impl Coordinator {
     }
 }
 
+/// The dispatch-queue key separator between a variant and a wire tenant.
+/// Control byte, so it can never collide with a variant name; keeping
+/// tenants in separate queues guarantees a dispatched batch never mixes
+/// two tenants' ciphertexts into one job.
+const TENANT_KEY_SEP: char = '\u{1}';
+
+#[allow(clippy::too_many_arguments)]
 fn leader_loop(
     submit_rx: Receiver<Intake>,
     dispatch_tx: Sender<(String, Vec<Pending<Work>>)>,
     router: Arc<Router>,
+    executor: Arc<dyn InferenceExecutor>,
     metrics: Arc<Metrics>,
     max_batch: usize,
     max_wait: Duration,
@@ -288,11 +334,16 @@ fn leader_loop(
         match submit_rx.recv_timeout(tick) {
             Ok(intake) => {
                 // route: pinned variant (encrypted requests carry the one
-                // their keys cover) or SLA selection; count degrades
-                let (variant_name, budget, job) = match intake {
+                // their keys cover) or SLA selection; count degrades.
+                // Queue key: the variant for plaintext work, variant ⊕
+                // tenant for encrypted — same-variant clear requests
+                // coalesce into slot-batched jobs, wire requests only
+                // ever share a dispatch with their own tenant.
+                let (variant_name, queue_key, budget, job) = match intake {
                     Intake::Clear(req) => {
                         let variant = router.select(req.latency_budget_s);
                         (
+                            variant.name.clone(),
                             variant.name.clone(),
                             req.latency_budget_s,
                             Job::Clear {
@@ -306,13 +357,16 @@ fn leader_loop(
                             .variant
                             .clone()
                             .unwrap_or_else(|| router.select(req.latency_budget_s).name.clone());
+                        let key = format!("{name}{TENANT_KEY_SEP}{}", req.tenant);
                         (
                             name,
+                            key,
                             req.latency_budget_s,
                             Job::Encrypted {
                                 tenant: req.tenant,
                                 cts: req.cts,
                                 params_hash: req.params_hash,
+                                batch: req.batch,
                                 resp: req.resp,
                             },
                         )
@@ -323,15 +377,22 @@ fn leader_loop(
                         metrics.degraded.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+                // size this queue by the variant's slot capacity; tiers
+                // without slot batching report 1 and keep the global knob
+                let cap = executor.slot_capacity(&variant_name);
+                if cap > 1 && matches!(job, Job::Clear { .. }) {
+                    batcher.set_capacity(&queue_key, cap);
+                }
                 let id = next_id.fetch_add(1, Ordering::Relaxed);
                 batcher.push(
-                    &variant_name,
+                    &queue_key,
                     Pending {
                         id,
                         enqueued: Instant::now(),
                         payload: Work {
                             id,
                             enqueued: Instant::now(),
+                            variant: variant_name,
                             job,
                         },
                     },
@@ -385,7 +446,84 @@ fn worker_loop(
             let guard = rx.lock().unwrap();
             guard.recv()
         };
-        let Ok((variant, batch)) = msg else { break };
+        let Ok((_key, batch)) = msg else { break };
+        // the leader keys queues so a dispatched batch is one variant and
+        // (for wire work) one tenant; read the variant from the payload
+        let Some(variant) = batch.first().map(|p| p.payload.variant.clone()) else {
+            continue;
+        };
+
+        // slot-batched fast path: several plaintext requests for a
+        // batching tier execute as ONE slot-packed job; per-request
+        // logits come back de-interleaved in request order
+        let cap = executor.slot_capacity(&variant);
+        let all_clear = batch
+            .iter()
+            .all(|p| matches!(p.payload.job, Job::Clear { .. }));
+        if all_clear && cap > 1 && batch.len() > 1 {
+            let mut ids = Vec::with_capacity(batch.len());
+            let mut queues = Vec::with_capacity(batch.len());
+            let mut clips = Vec::with_capacity(batch.len());
+            let mut resps = Vec::with_capacity(batch.len());
+            for item in batch {
+                let work = item.payload;
+                let Job::Clear { clip, resp } = work.job else { unreachable!() };
+                ids.push(work.id);
+                queues.push(work.enqueued.elapsed());
+                clips.push(clip);
+                resps.push(resp);
+            }
+            // chunk to the slot capacity: pop_ready never oversizes a
+            // dispatch, but the shutdown drain can hand over a whole
+            // queue in one batch
+            let mut start = 0;
+            while start < clips.len() {
+                let end = (start + cap).min(clips.len());
+                let chunk = &clips[start..end];
+                let t0 = Instant::now();
+                let result = executor.infer_batch(&variant, chunk);
+                let exec = t0.elapsed();
+                // occupancy counts *served* jobs only (failed jobs would
+                // skew the denominator), matching the encrypted arm
+                if matches!(&result, Ok(all) if all.len() == chunk.len()) {
+                    metrics.batch_jobs.fetch_add(1, Ordering::Relaxed);
+                    metrics.batch_requests.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    metrics.slots_filled.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    metrics.slots_capacity.fetch_add(cap as u64, Ordering::Relaxed);
+                }
+                // one failure fails the whole job: every member errors
+                let per_request: Vec<Result<Vec<f64>>> = match result {
+                    Ok(all) if all.len() == chunk.len() => all.into_iter().map(Ok).collect(),
+                    Ok(all) => {
+                        let msg = format!(
+                            "slot-batched job returned {} logit sets for {} requests",
+                            all.len(),
+                            chunk.len()
+                        );
+                        (0..chunk.len()).map(|_| Err(anyhow::anyhow!(msg.clone()))).collect()
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        (0..chunk.len()).map(|_| Err(anyhow::anyhow!(msg.clone()))).collect()
+                    }
+                };
+                for (off, result) in per_request.into_iter().enumerate() {
+                    let i = start + off;
+                    let out = account(&metrics, queues[i], exec, result, |v, error| Response {
+                        id: ids[i],
+                        variant: variant.clone(),
+                        logits: v.unwrap_or_default(),
+                        queue: queues[i],
+                        exec,
+                        error,
+                    });
+                    let _ = resps[i].send(out);
+                }
+                start = end;
+            }
+            continue;
+        }
+
         for item in batch {
             let work = item.payload;
             let queue = work.enqueued.elapsed();
@@ -394,6 +532,16 @@ fn worker_loop(
                 Job::Clear { clip, resp } => {
                     let result = executor.infer(&variant, &clip);
                     let exec = t0.elapsed();
+                    // a lone request on a batching tier still occupies a
+                    // whole ciphertext set: count it as a 1-of-cap job so
+                    // sparse traffic shows as low occupancy instead of
+                    // sampling only the coalesced dispatches
+                    if cap > 1 && result.is_ok() {
+                        metrics.batch_jobs.fetch_add(1, Ordering::Relaxed);
+                        metrics.batch_requests.fetch_add(1, Ordering::Relaxed);
+                        metrics.slots_filled.fetch_add(1, Ordering::Relaxed);
+                        metrics.slots_capacity.fetch_add(cap as u64, Ordering::Relaxed);
+                    }
                     let out = account(&metrics, queue, exec, result, |v, error| Response {
                         id: work.id,
                         variant: variant.clone(),
@@ -404,9 +552,22 @@ fn worker_loop(
                     });
                     let _ = resp.send(out);
                 }
-                Job::Encrypted { tenant, cts, params_hash, resp } => {
-                    let result = executor.infer_encrypted(&variant, &tenant, &cts, params_hash);
+                Job::Encrypted { tenant, cts, params_hash, batch: req_batch, resp } => {
+                    let result =
+                        executor.infer_encrypted(&variant, &tenant, &cts, params_hash, req_batch);
                     let exec = t0.elapsed();
+                    // client-side slot batching: every served bundle is
+                    // one job with `req_batch` filled copies out of the
+                    // variant's `cap` — single-clip bundles included, so
+                    // maximally underfilled traffic shows as low
+                    // occupancy instead of being invisible (a served
+                    // bundle's batch is ingress-validated ≤ cap)
+                    if cap > 1 && result.is_ok() {
+                        metrics.batch_jobs.fetch_add(1, Ordering::Relaxed);
+                        metrics.batch_requests.fetch_add(1, Ordering::Relaxed);
+                        metrics.slots_filled.fetch_add(req_batch as u64, Ordering::Relaxed);
+                        metrics.slots_capacity.fetch_add(cap as u64, Ordering::Relaxed);
+                    }
                     let out =
                         account(&metrics, queue, exec, result, |ct_logits, error| {
                             EncryptedResponse {
@@ -540,8 +701,10 @@ mod tests {
                 tenant: &str,
                 cts: &[Ciphertext],
                 _params_hash: Option<u64>,
+                batch: usize,
             ) -> Result<Ciphertext> {
                 anyhow::ensure!(tenant == "alice", "unknown tenant");
+                anyhow::ensure!(batch == 1, "unexpected batch");
                 Ok(cts[0].clone())
             }
         }
@@ -560,6 +723,7 @@ mod tests {
                 Some("fast".into()),
                 vec![mock_ct(7)],
                 None,
+                1,
                 None,
             )
             .unwrap();
@@ -568,7 +732,7 @@ mod tests {
         assert_eq!(r.ct_logits.unwrap().c0.limbs[0][0], 7);
         // unknown tenant surfaces as an error response, not a hang
         let r2 = c
-            .infer_blocking_encrypted("bob".into(), None, vec![mock_ct(1)], None, None)
+            .infer_blocking_encrypted("bob".into(), None, vec![mock_ct(1)], None, 1, None)
             .unwrap();
         assert!(r2.error.is_some());
         // plaintext clip on this tier errors through the same pipeline
@@ -585,10 +749,160 @@ mod tests {
             Duration::from_millis(1),
         );
         let r4 = c2
-            .infer_blocking_encrypted("alice".into(), None, vec![mock_ct(2)], None, None)
+            .infer_blocking_encrypted("alice".into(), None, vec![mock_ct(2)], None, 1, None)
             .unwrap();
         assert!(r4.error.unwrap().contains("does not accept encrypted"));
         c2.shutdown();
+    }
+
+    /// A batching tier mock: records every slot-batched job it serves and
+    /// answers logits that encode (clip id, batch size) so de-interleaving
+    /// mistakes are visible per request.
+    struct MockBatchExec {
+        cap: usize,
+        jobs: Mutex<Vec<(String, usize)>>,
+    }
+    impl InferenceExecutor for MockBatchExec {
+        fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
+            self.jobs.lock().unwrap().push((variant.to_string(), 1));
+            Ok(vec![clip[0], 1.0])
+        }
+        fn infer_batch(&self, variant: &str, clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+            anyhow::ensure!(clips.len() <= self.cap, "leader oversized a job");
+            self.jobs
+                .lock()
+                .unwrap()
+                .push((variant.to_string(), clips.len()));
+            Ok(clips.iter().map(|c| vec![c[0], clips.len() as f64]).collect())
+        }
+        fn slot_capacity(&self, _variant: &str) -> usize {
+            self.cap
+        }
+    }
+
+    #[test]
+    fn test_slot_batched_dispatch_deinterleaves_per_request() {
+        let exec = Arc::new(MockBatchExec { cap: 4, jobs: Mutex::new(Vec::new()) });
+        let c = Coordinator::start(
+            test_router(),
+            exec.clone(),
+            1,
+            16, // global knob larger than the slot capacity: capacity wins
+            Duration::from_millis(500),
+        );
+        // 8 same-variant requests with distinct payloads → two full jobs
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (tx, rx) = mpsc::sync_channel(1);
+            c.submit(Request {
+                clip: vec![100.0 + i as f64],
+                latency_budget_s: Some(1.0), // all pick "fast"
+                resp: tx,
+            })
+            .unwrap();
+            rxs.push((i, rx));
+        }
+        for (i, rx) in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+            assert_eq!(
+                r.logits[0],
+                100.0 + i as f64,
+                "request {i} got another clip's logits back"
+            );
+            assert_eq!(r.logits[1], 4.0, "request {i} must ride a full batch of 4");
+        }
+        let jobs = exec.jobs.lock().unwrap().clone();
+        assert_eq!(jobs, vec![("fast".to_string(), 4), ("fast".to_string(), 4)]);
+        // occupancy metrics: two full jobs of 4/4
+        assert_eq!(c.metrics.batch_jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(c.metrics.batch_requests.load(Ordering::Relaxed), 8);
+        assert_eq!(c.metrics.slots_filled.load(Ordering::Relaxed), 8);
+        assert_eq!(c.metrics.slots_capacity.load(Ordering::Relaxed), 8);
+        assert!((c.metrics.slot_occupancy() - 1.0).abs() < 1e-12);
+        assert!((c.metrics.batch_fill() - 4.0).abs() < 1e-12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_slot_batched_ragged_flush_and_variant_isolation() {
+        let exec = Arc::new(MockBatchExec { cap: 4, jobs: Mutex::new(Vec::new()) });
+        let c = Coordinator::start(
+            test_router(),
+            exec.clone(),
+            1,
+            16,
+            Duration::from_millis(10),
+        );
+        // 3 fast + 1 slow: neither queue fills its capacity; the deadline
+        // flushes ragged batches without ever mixing variants
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (tx, rx) = mpsc::sync_channel(1);
+            c.submit(Request {
+                clip: vec![i as f64],
+                latency_budget_s: Some(1.0),
+                resp: tx,
+            })
+            .unwrap();
+            rxs.push(rx);
+        }
+        let (tx, rx_slow) = mpsc::sync_channel(1);
+        c.submit(Request { clip: vec![50.0], latency_budget_s: None, resp: tx }).unwrap();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.variant, "fast");
+        }
+        let r = rx_slow.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(r.variant, "slow");
+        let jobs = exec.jobs.lock().unwrap().clone();
+        assert!(
+            jobs.iter().all(|(v, n)| (v == "fast" && *n <= 3) || (v == "slow" && *n == 1)),
+            "jobs must never mix variants: {jobs:?}"
+        );
+        assert_eq!(jobs.iter().map(|(_, n)| n).sum::<usize>(), 4);
+        c.shutdown();
+    }
+
+    #[test]
+    fn test_slot_batched_job_failure_fails_every_member() {
+        struct FailingBatch;
+        impl InferenceExecutor for FailingBatch {
+            fn infer(&self, _v: &str, clip: &[f64]) -> Result<Vec<f64>> {
+                Ok(vec![clip[0]])
+            }
+            fn infer_batch(&self, _v: &str, _clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+                anyhow::bail!("injected batch failure")
+            }
+            fn slot_capacity(&self, _v: &str) -> usize {
+                2
+            }
+        }
+        let c = Coordinator::start(
+            test_router(),
+            Arc::new(FailingBatch),
+            1,
+            8,
+            Duration::from_millis(5),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..2 {
+            let (tx, rx) = mpsc::sync_channel(1);
+            c.submit(Request {
+                clip: vec![i as f64],
+                latency_budget_s: Some(1.0),
+                resp: tx,
+            })
+            .unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.unwrap().contains("injected batch failure"));
+        }
+        assert_eq!(c.metrics.failed.load(Ordering::Relaxed), 2);
+        c.shutdown();
     }
 
     #[test]

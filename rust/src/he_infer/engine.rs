@@ -15,6 +15,18 @@
 //!   `p_scale = Δ·q_ℓ / scale(ct)` so post-rescale scales renormalize to Δ;
 //!   the polynomial's linear branch is encoded at `scale(ct)` so it lands
 //!   exactly on the square's scale (no approximate-scale adds).
+//! * **Slot-packed batching** (DESIGN.md S16): with `batch > 1` distinct
+//!   clips in the block copies, the replication closure is gone, so every
+//!   channel-diagonal tap becomes *block-closed*: the in-block rows
+//!   (`o + d < C_max`) keep the global `d·T` rotation, the wrapping rows
+//!   (`o + d ≥ C_max`) read through the companion rotation
+//!   `d·T − block (mod slots)`, and the split is folded into the existing
+//!   weight masks — one extra rotation, one extra mask PMult and one
+//!   extra Add per wrapping diagonal, **zero extra levels** (both halves
+//!   merge into the same pre-rescale accumulator). All masks are
+//!   restricted to the active copies, so the padded copies of a ragged
+//!   batch stay identically zero end to end. `batch == 1` is bit-for-bit
+//!   the legacy replicated path.
 
 use super::backend::HeBackend;
 use crate::ama::AmaLayout;
@@ -31,6 +43,11 @@ pub struct HeStgcn<'m> {
     /// Node-wise operator fusion (true, LinGCN) vs unfused activations
     /// costing an extra level each (false, CryptoGCN-style baseline).
     pub fuse_activations: bool,
+    /// Distinct clips slot-packed into the block copies (1..=copies()).
+    /// 1 = the legacy replicated layout; >1 switches every
+    /// channel-diagonal tap to its block-closed two-rotation form and
+    /// restricts every mask to the first `batch` copies.
+    pub batch: usize,
 }
 
 /// Cyclically rotate a plaintext slot vector right by `k` (mask
@@ -63,12 +80,34 @@ impl<'m> HeStgcn<'m> {
             layout,
             use_bsgs: true,
             fuse_activations: true,
+            batch: 1,
         })
     }
 
-    /// Rotation steps whose Galois keys the CKKS engine must hold.
+    /// Rotation steps whose Galois keys the CKKS engine must hold
+    /// (layout over-approximation; compiled plans report the exact set).
     pub fn required_rotations(&self) -> Vec<usize> {
-        self.layout.rotation_steps(self.model.k)
+        if self.block_closed() {
+            self.layout.rotation_steps_batched(self.model.k)
+        } else {
+            self.layout.rotation_steps(self.model.k)
+        }
+    }
+
+    /// Whether the walk runs in the block-closed (batched) form.
+    fn block_closed(&self) -> bool {
+        self.batch > 1
+    }
+
+    /// Copies each mask is replicated into: all of them on the legacy
+    /// replicated layout (`batch == 1`, preserving bit-identity with the
+    /// pre-batching engine), exactly the active copies otherwise.
+    fn mask_copies(&self) -> usize {
+        if self.batch > 1 {
+            self.batch
+        } else {
+            self.layout.copies()
+        }
     }
 
     /// Multiplicative depth this engine consumes (must be ≤ params levels).
@@ -95,6 +134,12 @@ impl<'m> HeStgcn<'m> {
     pub fn forward<B: HeBackend>(&self, be: &B, input: &[B::Ct]) -> Result<B::Ct> {
         let v = self.model.v();
         ensure!(input.len() == v, "need one ciphertext per node");
+        ensure!(
+            self.batch >= 1 && self.batch <= self.layout.copies(),
+            "batch {} outside 1..={} (the layout's copies())",
+            self.batch,
+            self.layout.copies()
+        );
         let need = self.levels_needed()?;
         ensure!(
             be.level(&input[0]) >= need,
@@ -116,7 +161,9 @@ impl<'m> HeStgcn<'m> {
 
     /// GCNConv: hoisted channel-diagonal rotations per input node, then per
     /// output node Σ over neighbours and diagonals of PMults whose masks
-    /// fuse `w · â_kj · α_k` (+ folded BN bias, also α-scaled).
+    /// fuse `w · â_kj · α_k` (+ folded BN bias, also α-scaled). In
+    /// block-closed (batched) mode each diagonal splits into the in-block
+    /// rotation and the wrap rotation, the weight mask split with it.
     fn gcn_conv<B: HeBackend>(
         &self,
         be: &B,
@@ -127,19 +174,30 @@ impl<'m> HeStgcn<'m> {
         let cm = self.layout.c_max;
         let t = self.layout.t;
         let graph = &self.model.graph;
+        let closed = self.block_closed();
+        let mb = self.mask_copies();
 
         // channel diagonals that touch any (o, i) weight
         let used_d: Vec<usize> = (0..cm)
             .filter(|&d| (0..co).any(|o| (o + d) % cm < ci))
             .collect();
+        // which block-closed paths a diagonal needs: rows with o + d < cm
+        // stay in-block (exist iff d < ci), rows with o + d ≥ cm wrap
+        let lo_used = |d: usize| !closed || d < ci;
+        let hi_used = |d: usize| closed && d > 0 && co + d > cm;
 
         // hoisted rotations: every input node rotated once per diagonal
-        let rotated: Vec<Vec<B::Ct>> = cts
+        // path (legacy mode: exactly one — the plain d·T — per diagonal)
+        let rotated: Vec<Vec<(Option<B::Ct>, Option<B::Ct>)>> = cts
             .iter()
             .map(|ct| {
                 used_d
                     .iter()
-                    .map(|&d| be.rotate(ct, d * t))
+                    .map(|&d| {
+                        let lo = lo_used(d).then(|| be.rotate(ct, d * t));
+                        let hi = hi_used(d).then(|| be.rotate(ct, self.layout.wrap_step(d)));
+                        (lo, hi)
+                    })
                     .collect::<Vec<_>>()
             })
             .collect();
@@ -150,33 +208,42 @@ impl<'m> HeStgcn<'m> {
             let mut acc: Option<B::Ct> = None;
             for (j, a_kj) in graph.in_neighbors(k) {
                 for (di, &d) in used_d.iter().enumerate() {
-                    let src = &rotated[j][di];
-                    let p_scale = be.delta() * be.q_at(be.level(src)) / be.scale(src);
-                    let layout = self.layout;
-                    let w = &layer.gcn_w;
-                    let thunk = move || {
-                        layout.mask(|o, _tt| {
-                            let i = (o + d) % cm;
-                            if o < co && i < ci {
-                                a_kj * alpha * w.get(&[o, i])
-                            } else {
-                                0.0
-                            }
-                        })
-                    };
-                    let term = be.mul_plain(src, &thunk, p_scale);
-                    acc = Some(match acc {
-                        Some(a) => be.add(&a, &term),
-                        None => term,
-                    });
+                    for (src, wrap) in [
+                        (rotated[j][di].0.as_ref(), false),
+                        (rotated[j][di].1.as_ref(), true),
+                    ] {
+                        let Some(src) = src else { continue };
+                        let p_scale = be.delta() * be.q_at(be.level(src)) / be.scale(src);
+                        let layout = self.layout;
+                        let w = &layer.gcn_w;
+                        let thunk = move || {
+                            layout.mask_batch(
+                                |o, _tt| {
+                                    let i = (o + d) % cm;
+                                    if o < co && i < ci && (!closed || (o + d >= cm) == wrap) {
+                                        a_kj * alpha * w.get(&[o, i])
+                                    } else {
+                                        0.0
+                                    }
+                                },
+                                mb,
+                            )
+                        };
+                        let term = be.mul_plain(src, &thunk, p_scale);
+                        acc = Some(match acc {
+                            Some(a) => be.add(&a, &term),
+                            None => term,
+                        });
+                    }
                 }
             }
             let mut y = be.rescale(&acc.expect("node with no neighbours"));
             // bias (BN folded), scaled by the fused α
             let layout = self.layout;
             let b = &layer.gcn_b;
-            let bias_thunk =
-                move || layout.mask(|o, _| if o < co { alpha * b.data[o] } else { 0.0 });
+            let bias_thunk = move || {
+                layout.mask_batch(|o, _| if o < co { alpha * b.data[o] } else { 0.0 }, mb)
+            };
             y = be.add_plain(&y, &bias_thunk);
             out.push(y);
         }
@@ -199,35 +266,36 @@ impl<'m> HeStgcn<'m> {
                 Activation::Relu => bail!("ReLU cannot run under HE; export a polynomial model"),
                 Activation::Poly { w2, w1, b, c } => {
                     let layout = self.layout;
+                    let mb = self.mask_copies();
                     if self.fuse_activations {
                         let (alpha, sign) = self.alpha_sign(&acts[k]);
                         let sq = be.rescale(&be.mul(ct, ct));
-                        let lin_thunk = move || layout.mask(|_, _| w1 / alpha);
+                        let lin_thunk = move || layout.mask_batch(|_, _| w1 / alpha, mb);
                         let lin = be.rescale(&be.mul_plain(ct, &lin_thunk, be.scale(ct)));
                         let y = if sign >= 0.0 {
                             be.add(&sq, &lin)
                         } else {
                             be.sub(&lin, &sq)
                         };
-                        let bias_thunk = move || layout.mask(|_, _| b);
+                        let bias_thunk = move || layout.mask_batch(|_, _| b, mb);
                         out.push(be.add_plain(&y, &bias_thunk));
                     } else {
                         // CryptoGCN-style: square, then an explicit c·w2
                         // plaintext multiplication — an extra level.
                         let sq = be.rescale(&be.mul(ct, ct));
-                        let scale_thunk = move || layout.mask(|_, _| c * w2);
+                        let scale_thunk = move || layout.mask_batch(|_, _| c * w2, mb);
                         let p_scale = be.delta() * be.q_at(be.level(&sq)) / be.scale(&sq);
                         let sq_scaled = be.rescale(&be.mul_plain(&sq, &scale_thunk, p_scale));
                         // linear branch: two PMult+rescale hops to land on
                         // the same level and scale Δ as the quadratic branch
-                        let lin_thunk = move || layout.mask(|_, _| w1);
+                        let lin_thunk = move || layout.mask_batch(|_, _| w1, mb);
                         let p1 = be.delta() * be.q_at(be.level(ct)) / be.scale(ct);
                         let lin1 = be.rescale(&be.mul_plain(ct, &lin_thunk, p1));
-                        let one_thunk = move || layout.mask(|_, _| 1.0);
+                        let one_thunk = move || layout.mask_batch(|_, _| 1.0, mb);
                         let p2 = be.delta() * be.q_at(be.level(&lin1)) / be.scale(&lin1);
                         let lin = be.rescale(&be.mul_plain(&lin1, &one_thunk, p2));
                         let y = be.add(&sq_scaled, &lin);
-                        let bias_thunk = move || layout.mask(|_, _| b);
+                        let bias_thunk = move || layout.mask_batch(|_, _| b, mb);
                         out.push(be.add_plain(&y, &bias_thunk));
                     }
                 }
@@ -238,7 +306,11 @@ impl<'m> HeStgcn<'m> {
 
     /// Temporal 1×K convolution per node (node-wise separable), with the
     /// *next* activation's α fused into the masks. BSGS: K baby rotations
-    /// (taps), then one giant rotation per channel diagonal.
+    /// (taps), then one giant rotation per channel diagonal — two giant
+    /// rotations (in-block + wrap) per wrapping diagonal in block-closed
+    /// (batched) mode. The temporal taps themselves never cross a block:
+    /// the masks already zero frames outside `[0, T)`, so only the
+    /// channel-diagonal part of the combined rotation can wrap.
     fn temporal_conv<B: HeBackend>(
         &self,
         be: &B,
@@ -251,28 +323,43 @@ impl<'m> HeStgcn<'m> {
         let kk = self.model.k;
         let half = kk / 2;
         let slots = self.layout.slots;
+        let closed = self.block_closed();
+        let mb = self.mask_copies();
+        let block = self.layout.block();
 
         let used_d: Vec<usize> = (0..cm)
             .filter(|&d| (0..co).any(|o| (o + d) % cm < co))
             .collect();
+        let lo_used = |d: usize| !closed || d < co;
+        let hi_used = |d: usize| closed && d > 0 && co + d > cm;
 
         let mut out = Vec::with_capacity(cts.len());
         for (node, ct) in cts.iter().enumerate() {
             let (alpha, _) = self.alpha_sign(&layer.act2[node]);
             let p_scale = be.delta() * be.q_at(be.level(ct)) / be.scale(ct);
-            let mask_for = |d: usize, tap: isize| {
+            // `wrap`: which block-closed half this mask serves (ignored in
+            // legacy mode, where the single path carries the full mask)
+            let mask_for = |d: usize, tap: isize, wrap: bool| {
                 let layout = self.layout;
                 let w = &layer.tconv_w;
                 move || {
-                    layout.mask(|o, tt| {
-                        let i = (o + d) % cm;
-                        let src_t = tt as isize + tap;
-                        if o < co && i < co && src_t >= 0 && (src_t as usize) < layout.t {
-                            alpha * w.get(&[o, i, (tap + half as isize) as usize])
-                        } else {
-                            0.0
-                        }
-                    })
+                    layout.mask_batch(
+                        |o, tt| {
+                            let i = (o + d) % cm;
+                            let src_t = tt as isize + tap;
+                            if o < co
+                                && i < co
+                                && src_t >= 0
+                                && (src_t as usize) < layout.t
+                                && (!closed || (o + d >= cm) == wrap)
+                            {
+                                alpha * w.get(&[o, i, (tap + half as isize) as usize])
+                            } else {
+                                0.0
+                            }
+                        },
+                        mb,
+                    )
                 }
             };
 
@@ -292,38 +379,57 @@ impl<'m> HeStgcn<'m> {
                     .collect();
                 let mut acc: Option<B::Ct> = None;
                 for &d in &used_d {
-                    // inner_d = Σ_tap baby_tap ⊙ rot_right(mask(d,tap), d·T)
-                    let mut inner: Option<B::Ct> = None;
-                    for (tap, bct) in &baby {
-                        let m = mask_for(d, *tap);
-                        let thunk = move || rot_right_vec(&m(), d * t);
-                        let term = be.mul_plain(bct, &thunk, p_scale);
-                        inner = Some(match inner {
-                            Some(a) => be.add(&a, &term),
-                            None => term,
+                    // inner = Σ_tap baby_tap ⊙ rot_right(mask(d,tap), giant)
+                    // per giant-step path; in-block giant is d·T, wrap giant
+                    // is d·T − block (mod slots)
+                    let paths = [
+                        (d * t, false, lo_used(d)),
+                        (if d > 0 { self.layout.wrap_step(d) } else { 0 }, true, hi_used(d)),
+                    ];
+                    for &(giant_amt, wrap, used) in &paths {
+                        if !used {
+                            continue;
+                        }
+                        let mut inner: Option<B::Ct> = None;
+                        for (tap, bct) in &baby {
+                            let m = mask_for(d, *tap, wrap);
+                            let thunk = move || rot_right_vec(&m(), giant_amt);
+                            let term = be.mul_plain(bct, &thunk, p_scale);
+                            inner = Some(match inner {
+                                Some(a) => be.add(&a, &term),
+                                None => term,
+                            });
+                        }
+                        let giant = be.rotate(&inner.unwrap(), giant_amt);
+                        acc = Some(match acc {
+                            Some(a) => be.add(&a, &giant),
+                            None => giant,
                         });
                     }
-                    let giant = be.rotate(&inner.unwrap(), d * t);
-                    acc = Some(match acc {
-                        Some(a) => be.add(&a, &giant),
-                        None => giant,
-                    });
                 }
                 acc.unwrap()
             } else {
-                // naive: one rotation per (diagonal, tap) pair
+                // naive: one rotation per (diagonal, tap) pair and path
                 let mut acc: Option<B::Ct> = None;
                 for &d in &used_d {
                     for tap in -(half as isize)..=half as isize {
-                        let amt = (d * t) as isize + tap;
-                        let amt = amt.rem_euclid(slots as isize) as usize;
-                        let rot = be.rotate(ct, amt);
-                        let thunk = mask_for(d, tap);
-                        let term = be.mul_plain(&rot, &thunk, p_scale);
-                        acc = Some(match acc {
-                            Some(a) => be.add(&a, &term),
-                            None => term,
-                        });
+                        let paths = [
+                            ((d * t) as isize + tap, false, lo_used(d)),
+                            ((d * t) as isize - block as isize + tap, true, hi_used(d)),
+                        ];
+                        for &(amt, wrap, used) in &paths {
+                            if !used {
+                                continue;
+                            }
+                            let amt = amt.rem_euclid(slots as isize) as usize;
+                            let rot = be.rotate(ct, amt);
+                            let thunk = mask_for(d, tap, wrap);
+                            let term = be.mul_plain(&rot, &thunk, p_scale);
+                            acc = Some(match acc {
+                                Some(a) => be.add(&a, &term),
+                                None => term,
+                            });
+                        }
                     }
                 }
                 acc.unwrap()
@@ -332,8 +438,9 @@ impl<'m> HeStgcn<'m> {
             let mut y = be.rescale(&acc);
             let layout = self.layout;
             let bvec = &layer.tconv_b;
-            let bias_thunk =
-                move || layout.mask(|o, _| if o < co { alpha * bvec.data[o] } else { 0.0 });
+            let bias_thunk = move || {
+                layout.mask_batch(|o, _| if o < co { alpha * bvec.data[o] } else { 0.0 }, mb)
+            };
             y = be.add_plain(&y, &bias_thunk);
             out.push(y);
         }
@@ -341,12 +448,19 @@ impl<'m> HeStgcn<'m> {
     }
 
     /// Global average pooling over (V, T) followed by the FC head via the
-    /// channel-diagonal method. Output: logit for class m at slot m·T.
+    /// channel-diagonal method. Output: logit for class m at slot m·T
+    /// (clip `b`'s logits at `b·block + m·T` in batched mode). The
+    /// frame-summation tree needs no closure changes: a `tt = 0` slot's
+    /// rotate-add reach is `T − 1 < block` frames, entirely inside its
+    /// own copy, and every cross-copy partial sum lands in a slot the
+    /// pool mask zeroes.
     fn pool_fc<B: HeBackend>(&self, be: &B, cts: &[B::Ct], c_last: usize) -> Result<B::Ct> {
         let t = self.layout.t;
         let cm = self.layout.c_max;
         let v = self.model.v();
         let classes = self.model.num_classes();
+        let closed = self.block_closed();
+        let mb = self.mask_copies();
 
         // Σ over nodes
         let mut s = cts[0].clone();
@@ -363,40 +477,59 @@ impl<'m> HeStgcn<'m> {
         // pool mask: keep slot (c, 0) with factor 1/(V·T)
         let layout = self.layout;
         let inv = 1.0 / (v * t) as f64;
-        let pool_thunk =
-            move || layout.mask(|o, tt| if tt == 0 && o < c_last { inv } else { 0.0 });
+        let pool_thunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o < c_last { inv } else { 0.0 }, mb)
+        };
         let p_scale = be.delta() * be.q_at(be.level(&s)) / be.scale(&s);
         let pooled = be.rescale(&be.mul_plain(&s, &pool_thunk, p_scale));
 
-        // FC diagonals
+        // FC diagonals (block-closed split in batched mode, like the convs)
         let used_d: Vec<usize> = (0..cm)
             .filter(|&d| (0..classes).any(|o| (o + d) % cm < c_last))
             .collect();
+        let lo_used = |d: usize| !closed || d < c_last;
+        let hi_used = |d: usize| closed && d > 0 && classes + d > cm;
         let p_scale = be.delta() * be.q_at(be.level(&pooled)) / be.scale(&pooled);
         let mut acc: Option<B::Ct> = None;
         for &d in &used_d {
-            let rot = be.rotate(&pooled, d * t);
-            let fw = &self.model.fc_w;
-            let thunk = move || {
-                layout.mask(|o, tt| {
-                    let c = (o + d) % cm;
-                    if tt == 0 && o < classes && c < c_last {
-                        fw.get(&[o, c])
-                    } else {
-                        0.0
-                    }
-                })
-            };
-            let term = be.mul_plain(&rot, &thunk, p_scale);
-            acc = Some(match acc {
-                Some(a) => be.add(&a, &term),
-                None => term,
-            });
+            let paths = [
+                (d * t, false, lo_used(d)),
+                (if d > 0 { self.layout.wrap_step(d) } else { 0 }, true, hi_used(d)),
+            ];
+            for &(amt, wrap, used) in &paths {
+                if !used {
+                    continue;
+                }
+                let rot = be.rotate(&pooled, amt);
+                let fw = &self.model.fc_w;
+                let thunk = move || {
+                    layout.mask_batch(
+                        |o, tt| {
+                            let c = (o + d) % cm;
+                            if tt == 0
+                                && o < classes
+                                && c < c_last
+                                && (!closed || (o + d >= cm) == wrap)
+                            {
+                                fw.get(&[o, c])
+                            } else {
+                                0.0
+                            }
+                        },
+                        mb,
+                    )
+                };
+                let term = be.mul_plain(&rot, &thunk, p_scale);
+                acc = Some(match acc {
+                    Some(a) => be.add(&a, &term),
+                    None => term,
+                });
+            }
         }
         let mut y = be.rescale(&acc.unwrap());
         let fb = &self.model.fc_b;
         let bias_thunk = move || {
-            layout.mask(|o, tt| if tt == 0 && o < classes { fb.data[o] } else { 0.0 })
+            layout.mask_batch(|o, tt| if tt == 0 && o < classes { fb.data[o] } else { 0.0 }, mb)
         };
         y = be.add_plain(&y, &bias_thunk);
         Ok(y)

@@ -25,12 +25,12 @@
 
 use super::backend::HeBackend;
 use super::plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
-use crate::ama::{encrypt_clip, AmaLayout};
+use crate::ama::{pack_clip, pack_clip_batch, AmaLayout};
 use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, EvalEngine, Evaluator, Plaintext};
 use crate::coordinator::{InferenceExecutor, Metrics};
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, ensure, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier, Mutex, OnceLock};
 
@@ -280,6 +280,8 @@ pub struct PlanKey {
     pub slots: usize,
     pub use_bsgs: bool,
     pub fuse_activations: bool,
+    /// Slot-batch size the plan was compiled for (masks differ per size).
+    pub batch: usize,
 }
 
 impl PlanKey {
@@ -291,6 +293,7 @@ impl PlanKey {
             slots: layout.slots,
             use_bsgs: opts.use_bsgs,
             fuse_activations: opts.fuse_activations,
+            batch: opts.batch,
         }
     }
 }
@@ -308,7 +311,16 @@ pub struct HeSession {
     pub model: StgcnModel,
     pub layout: AmaLayout,
     pub engine: CkksEngine,
-    pub prepared: PreparedPlan,
+    /// The session's base prepared plan (compiled at the build-time
+    /// `opts.batch` — the full slot-batch size on a batching tier).
+    pub prepared: Arc<PreparedPlan>,
+    opts: PlanOptions,
+    /// Lazily prepared plans for other batch sizes (the ragged flushes of
+    /// a partially filled batch), sharing the engine and its Galois keys.
+    ragged: Mutex<HashMap<usize, Arc<PreparedPlan>>>,
+    /// Compiled-but-unprepared plans kept from the build (the single-clip
+    /// plan of a batching session, compiled anyway for the key union).
+    spare_plans: Mutex<HashMap<usize, Arc<HePlan>>>,
 }
 
 /// Toy-scale CKKS parameters sized to the model's AMA block (serving-demo
@@ -341,9 +353,35 @@ pub fn plan_for(
     opts: PlanOptions,
 ) -> Result<(Arc<HePlan>, bool)> {
     match cached {
-        Some(p) if p.chain == *chain && p.layout == layout => Ok((p, true)),
+        Some(p) if p.chain == *chain && p.layout == layout && p.batch == opts.batch => {
+            Ok((p, true))
+        }
         _ => Ok((Arc::new(compile(model, layout, chain, opts)?), false)),
     }
+}
+
+/// Get-or-compute a per-variant slot capacity from the serving geometry
+/// alone (no keygen) — the shared lookup of the trusted ([`HeExecutor`])
+/// and wire (`wire::WireExecutor`) tiers, so their caching can never
+/// drift. `cap` maps the layout's `copies()` to the tier's capacity
+/// policy; unknown variants degrade to 1.
+pub fn cached_slot_capacity(
+    cache: &Mutex<HashMap<String, usize>>,
+    models: &HashMap<String, StgcnModel>,
+    opts: PlanOptions,
+    variant: &str,
+    cap: impl Fn(usize) -> usize,
+) -> usize {
+    if let Some(&c) = cache.lock().unwrap().get(variant) {
+        return c;
+    }
+    let c = models
+        .get(variant)
+        .and_then(|m| session_geometry(m, opts).ok())
+        .map(|(layout, _)| cap(layout.copies()).max(1))
+        .unwrap_or(1);
+    cache.lock().unwrap().insert(variant.to_string(), c);
+    c
 }
 
 /// The geometry a session is built around — computed in exactly one place
@@ -390,18 +428,95 @@ impl HeSession {
         let ctx = params.build()?;
         let chain = PlanChain::from_ctx(&ctx);
         let (plan, was_cached) = plan_for(cached_plan, &model, layout, &chain, opts)?;
-        let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
-        let prepared = PreparedPlan::new(plan.clone(), &engine)?;
+        // A batching session also serves single-clip (and ragged)
+        // requests: key the engine for the union of the batched and
+        // single-clip plans' rotation steps. Neither set contains the
+        // other — block-closed plans drop the d·T rotations of diagonals
+        // whose rows all wrap, and add the wrap steps the replicated
+        // batch-1 plan never needs.
+        let mut rots: BTreeSet<usize> = plan.required_rotations().into_iter().collect();
+        let mut spare = HashMap::new();
+        if opts.batch > 1 {
+            let single = Arc::new(compile(
+                &model,
+                layout,
+                &chain,
+                PlanOptions { batch: 1, ..opts },
+            )?);
+            rots.extend(single.required_rotations());
+            spare.insert(1usize, single);
+        }
+        let rots: Vec<usize> = rots.into_iter().collect();
+        let engine = CkksEngine::new(params, &rots, seed)?;
+        let prepared = Arc::new(PreparedPlan::new(plan.clone(), &engine)?);
         Ok((
             HeSession {
                 model,
                 layout,
                 engine,
                 prepared,
+                opts,
+                ragged: Mutex::new(HashMap::new()),
+                spare_plans: Mutex::new(spare),
             },
             plan,
             was_cached,
         ))
+    }
+
+    /// Prepared plan for `batch` active copies: the session's base plan
+    /// when the sizes match, else a lazily compiled + mask-encoded
+    /// sibling sharing the engine (rotation steps are identical for every
+    /// batch > 1, and the build keyed the engine for the batch-1 ∪
+    /// full-batch union — the coverage check below guards the remaining
+    /// misconfiguration: asking a batch-1 session for batched work).
+    /// The bool is `true` when no compile was needed (plan-cache-hit
+    /// semantics).
+    pub fn prepared_for(&self, batch: usize) -> Result<(Arc<PreparedPlan>, bool)> {
+        ensure!(
+            batch >= 1 && batch <= self.layout.copies(),
+            "batch {batch} outside 1..={} (the layout's copies())",
+            self.layout.copies()
+        );
+        if batch == self.prepared.plan.batch {
+            return Ok((self.prepared.clone(), true));
+        }
+        if let Some(p) = self.ragged.lock().unwrap().get(&batch) {
+            return Ok((p.clone(), true));
+        }
+        let plan = match self.spare_plans.lock().unwrap().remove(&batch) {
+            Some(p) => p,
+            None => {
+                let chain = PlanChain::from_ctx(&self.engine.ctx);
+                Arc::new(compile(
+                    &self.model,
+                    self.layout,
+                    &chain,
+                    PlanOptions { batch, ..self.opts },
+                )?)
+            }
+        };
+        let needed = plan.required_rotations();
+        ensure!(
+            needed.iter().all(|&k| {
+                self.engine
+                    .eval
+                    .keys
+                    .galois
+                    .contains_key(&self.engine.encoder.rotation_galois_element(k))
+            }),
+            "session keys do not cover the rotations of batch {batch} \
+             (build the session with batching enabled)"
+        );
+        let prepared = Arc::new(PreparedPlan::new(plan, &self.engine)?);
+        let prepared = self
+            .ragged
+            .lock()
+            .unwrap()
+            .entry(batch)
+            .or_insert(prepared)
+            .clone();
+        Ok((prepared, false))
     }
 
     /// Encrypt → execute the compiled plan → decrypt logits, **all in
@@ -412,18 +527,38 @@ impl HeSession {
     /// (`serve --tier he-wire`), where the client encrypts/decrypts and
     /// the server half ([`EvalEngine`]) never holds a `SecretKey`.
     pub fn infer_trusted(&self, clip: &[f64], threads: usize) -> Result<Vec<f64>> {
-        let plan = &self.prepared.plan;
-        let input = encrypt_clip(
-            &self.engine,
-            &self.layout,
-            clip,
-            self.model.v(),
-            self.model.c_in,
-            plan.levels_needed + 1,
-        )?;
-        let out = self.prepared.execute(&self.engine, &input.cts, threads)?;
+        let mut logits = self.infer_trusted_batch(&[clip], threads)?;
+        Ok(logits.remove(0))
+    }
+
+    /// Slot-batched [`HeSession::infer_trusted`]: up to `copies()`
+    /// distinct clips packed into one per-node ciphertext set, one
+    /// execution, per-clip logits out (clip `b` from block copy `b`).
+    pub fn infer_trusted_batch(
+        &self,
+        clips: &[&[f64]],
+        threads: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        ensure!(!clips.is_empty(), "need at least one clip");
+        let (prepared, _cached) = self.prepared_for(clips.len())?;
+        let plan = &prepared.plan;
+        let (v, c) = (self.model.v(), self.model.c_in);
+        // batch 1 keeps the replicated layout its plan's rotation closure
+        // relies on; batches pack distinct clips into the copies
+        let packed = if clips.len() == 1 {
+            pack_clip(&self.layout, clips[0], v, c)?
+        } else {
+            pack_clip_batch(&self.layout, clips, v, c)?
+        };
+        let cts: Vec<Ciphertext> = packed
+            .iter()
+            .map(|p| self.engine.encrypt_at(p, plan.levels_needed + 1))
+            .collect();
+        let out = prepared.execute(&self.engine, &cts, threads)?;
         let slots = self.engine.decrypt(&out);
-        Ok(plan.extract_logits(&slots))
+        Ok((0..clips.len())
+            .map(|b| plan.extract_logits_clip(&slots, b))
+            .collect())
     }
 }
 
@@ -434,9 +569,15 @@ pub struct HeExecutor {
     pub threads: usize,
     seed: u64,
     opts: PlanOptions,
+    /// Serving cap on slot-batched clips per ciphertext set (1 = slot
+    /// batching off; per variant the effective cap is
+    /// `min(max_batch, layout.copies())`).
+    max_batch: usize,
     models: HashMap<String, StgcnModel>,
     sessions: Mutex<HashMap<String, Arc<HeSession>>>,
     plans: Mutex<HashMap<PlanKey, Arc<HePlan>>>,
+    /// Cached per-variant slot capacities (geometry-only, no keygen).
+    capacities: Mutex<HashMap<String, usize>>,
     metrics: Option<Arc<Metrics>>,
 }
 
@@ -446,11 +587,21 @@ impl HeExecutor {
             threads: threads.max(1),
             seed,
             opts: PlanOptions::default(),
+            max_batch: 1,
             models,
             sessions: Mutex::new(HashMap::new()),
             plans: Mutex::new(HashMap::new()),
+            capacities: Mutex::new(HashMap::new()),
             metrics: None,
         }
+    }
+
+    /// Enable slot-batched serving (DESIGN.md S16): coalesce up to
+    /// `max_batch` clips — capped at each variant layout's `copies()` —
+    /// into one ciphertext set per job. Call before the first request;
+    /// sessions are built for their variant's full batch size.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.max_batch = max_batch.max(1);
     }
 
     /// Mirror plan-cache hits/misses into the coordinator metrics (call
@@ -489,10 +640,14 @@ impl HeExecutor {
             .ok_or_else(|| anyhow!("unknown variant {variant}"))?
             .clone();
         let (layout, params) = session_geometry(&model, self.opts)?;
-        let key_probe = PlanKey::new(&model, &layout, self.opts);
+        // the session's full batch size: the serving cap, bounded by what
+        // this variant's layout can actually hold
+        let full = self.max_batch.clamp(1, layout.copies());
+        let opts = PlanOptions { batch: full, ..self.opts };
+        let key_probe = PlanKey::new(&model, &layout, opts);
         let cached = self.plans.lock().unwrap().get(&key_probe).cloned();
         let (session, plan, was_cached) =
-            HeSession::with_geometry(model, layout, params, self.opts, self.seed, cached)?;
+            HeSession::with_geometry(model, layout, params, opts, self.seed, cached)?;
         if !was_cached {
             self.plans.lock().unwrap().entry(key_probe).or_insert(plan);
         }
@@ -512,6 +667,26 @@ impl InferenceExecutor for HeExecutor {
         let (session, hit) = self.session(variant)?;
         self.count_cache(&session, hit);
         session.infer_trusted(clip, self.threads)
+    }
+
+    fn infer_batch(&self, variant: &str, clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        let (session, hit) = self.session(variant)?;
+        self.count_cache(&session, hit);
+        let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+        session.infer_trusted_batch(&refs, self.threads)
+    }
+
+    /// The per-variant slot capacity the coordinator's batcher sizes jobs
+    /// with: `min(max_batch, copies())` — derived from the serving
+    /// geometry alone (no keygen), so the leader can query it cheaply
+    /// before any session exists.
+    fn slot_capacity(&self, variant: &str) -> usize {
+        if self.max_batch <= 1 {
+            return 1;
+        }
+        cached_slot_capacity(&self.capacities, &self.models, self.opts, variant, |copies| {
+            self.max_batch.min(copies)
+        })
     }
 }
 
@@ -558,5 +733,25 @@ mod tests {
     fn clip(model: &StgcnModel) -> Vec<f64> {
         let n = model.v() * model.c_in * model.t;
         (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+    }
+
+    #[test]
+    fn test_slot_capacity_respects_layout_and_cap() {
+        let model = tiny();
+        let mut models = HashMap::new();
+        models.insert("v".to_string(), model.clone());
+        let mut ex = HeExecutor::new(models, 1, 7);
+        assert_eq!(ex.slot_capacity("v"), 1, "batching off → capacity 1");
+        ex.set_max_batch(4);
+        assert_eq!(ex.slot_capacity("v"), 4, "cap below copies() → the cap");
+
+        let mut models2 = HashMap::new();
+        models2.insert("v".to_string(), model.clone());
+        let mut ex2 = HeExecutor::new(models2, 1, 7);
+        ex2.set_max_batch(usize::MAX);
+        let (layout, _) = session_geometry(&model, PlanOptions::default()).unwrap();
+        assert!(layout.copies() > 1, "toy geometry must leave copies to batch");
+        assert_eq!(ex2.slot_capacity("v"), layout.copies(), "uncapped → copies()");
+        assert_eq!(ex2.slot_capacity("missing"), 1, "unknown variant degrades to 1");
     }
 }

@@ -21,10 +21,10 @@ pub use exec::{
 pub use level_plan::{HePlanParams, Method, VariantShape};
 pub use plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
 
-use crate::ama::{encrypt_clip, AmaLayout};
+use crate::ama::{encrypt_clip, encrypt_clip_batch, AmaLayout};
 use crate::ckks::{CkksEngine, CkksParams};
 use crate::stgcn::StgcnModel;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::Arc;
 
 /// End-to-end private inference service state for one model variant:
@@ -56,11 +56,23 @@ impl PrivateInferenceSession {
     /// Compile the plan for `model` under `params`, then build keys for
     /// exactly the plan's rotations and pre-encode its masks.
     pub fn new(model: &StgcnModel, params: CkksParams, seed: u64) -> Result<Self> {
+        Self::new_with_options(model, params, seed, PlanOptions::default())
+    }
+
+    /// [`PrivateInferenceSession::new`] with explicit plan options — the
+    /// entry point for slot-batched sessions (`opts.batch > 1` compiles
+    /// the block-closed plan; DESIGN.md S16).
+    pub fn new_with_options(
+        model: &StgcnModel,
+        params: CkksParams,
+        seed: u64,
+        opts: PlanOptions,
+    ) -> Result<Self> {
         let slots = params.n / 2;
         let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), slots)?;
         let ctx = params.build()?;
         let chain = PlanChain::from_ctx(&ctx);
-        let plan = Arc::new(plan::compile(model, layout, &chain, PlanOptions::default())?);
+        let plan = Arc::new(plan::compile(model, layout, &chain, opts)?);
         let levels = params.levels;
         let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
         let prepared = PreparedPlan::new(plan.clone(), &engine)?;
@@ -73,16 +85,48 @@ impl PrivateInferenceSession {
         })
     }
 
-    /// Client side: encrypt a [V, C_in, T] clip.
+    /// Client side: encrypt a [V, C_in, T] clip (single-clip sessions).
     pub fn encrypt_input(
         &self,
         model: &StgcnModel,
         x: &[f64],
     ) -> Result<Vec<crate::ckks::Ciphertext>> {
+        ensure!(
+            self.plan.batch == 1,
+            "session plan was compiled for batch {}; use encrypt_input_batch",
+            self.plan.batch
+        );
         Ok(encrypt_clip(
             &self.engine,
             &self.layout,
             x,
+            model.v(),
+            model.c_in,
+            self.levels + 1,
+        )?
+        .cts)
+    }
+
+    /// Client side: slot-pack exactly `plan.batch` distinct clips into
+    /// one per-node ciphertext set (clip `b` into block copy `b`).
+    pub fn encrypt_input_batch(
+        &self,
+        model: &StgcnModel,
+        clips: &[&[f64]],
+    ) -> Result<Vec<crate::ckks::Ciphertext>> {
+        ensure!(
+            clips.len() == self.plan.batch,
+            "session plan was compiled for batch {}, got {} clips",
+            self.plan.batch,
+            clips.len()
+        );
+        if clips.len() == 1 {
+            return self.encrypt_input(model, clips[0]);
+        }
+        Ok(encrypt_clip_batch(
+            &self.engine,
+            &self.layout,
+            clips,
             model.v(),
             model.c_in,
             self.levels + 1,
@@ -117,14 +161,28 @@ impl PrivateInferenceSession {
         model: &StgcnModel,
         input: &[crate::ckks::Ciphertext],
     ) -> Result<crate::ckks::Ciphertext> {
-        let he = HeStgcn::new(model, self.layout)?;
+        let mut he = HeStgcn::new(model, self.layout)?;
+        he.batch = self.plan.batch;
         let be = CkksBackend::new(&self.engine);
         he.forward(&be, input)
     }
 
-    /// Client side: decrypt the logits ciphertext.
+    /// Client side: decrypt the logits ciphertext (clip 0 of a batch).
     pub fn decrypt_logits(&self, _model: &StgcnModel, ct: &crate::ckks::Ciphertext) -> Vec<f64> {
         let slots = self.engine.decrypt(ct);
         self.plan.extract_logits(&slots)
+    }
+
+    /// Client side: decrypt per-clip logits of a slot-batched response
+    /// (clip `b`'s scores from block copy `b`).
+    pub fn decrypt_logits_batch(
+        &self,
+        _model: &StgcnModel,
+        ct: &crate::ckks::Ciphertext,
+    ) -> Vec<Vec<f64>> {
+        let slots = self.engine.decrypt(ct);
+        (0..self.plan.batch)
+            .map(|b| self.plan.extract_logits_clip(&slots, b))
+            .collect()
     }
 }

@@ -153,6 +153,10 @@ pub struct HePlan {
     /// Multiplicative depth the plan consumes (was `HeStgcn::levels_needed`).
     pub levels_needed: usize,
     pub num_classes: usize,
+    /// Distinct clips slot-packed into the block copies (DESIGN.md S16).
+    /// 1 = the legacy replicated layout; >1 = block-closed masks/taps,
+    /// restricted to the first `batch` copies.
+    pub batch: usize,
     /// Content hash of the compiled model (plan-cache key half).
     pub model_hash: u64,
     /// Static op counts of one execution — identical to what the
@@ -160,11 +164,17 @@ pub struct HePlan {
     pub counts: OpCounts,
 }
 
-/// Engine toggles baked into a plan (the ablation axes).
+/// Engine toggles baked into a plan (the ablation axes plus the
+/// slot-batch size).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanOptions {
     pub use_bsgs: bool,
     pub fuse_activations: bool,
+    /// Distinct clips per ciphertext set (1..=layout.copies()). Batched
+    /// plans trade one extra rotation + mask PMult + Add per wrapping
+    /// channel diagonal for `batch`× the clips per execution — the level
+    /// budget is unchanged (see DESIGN.md S16 and `OpCounts`).
+    pub batch: usize,
 }
 
 impl Default for PlanOptions {
@@ -172,6 +182,7 @@ impl Default for PlanOptions {
         PlanOptions {
             use_bsgs: true,
             fuse_activations: true,
+            batch: 1,
         }
     }
 }
@@ -185,9 +196,16 @@ pub fn compile(
     chain: &PlanChain,
     opts: PlanOptions,
 ) -> Result<HePlan> {
+    ensure!(
+        opts.batch >= 1 && opts.batch <= layout.copies(),
+        "plan batch {} outside 1..={} (the layout's copies())",
+        opts.batch,
+        layout.copies()
+    );
     let mut he = HeStgcn::new(model, layout)?;
     he.use_bsgs = opts.use_bsgs;
     he.fuse_activations = opts.fuse_activations;
+    he.batch = opts.batch;
     let levels_needed = he.levels_needed()?;
     ensure!(
         chain.top_level() >= levels_needed,
@@ -197,7 +215,7 @@ pub fn compile(
     let builder = PlanBuilder::new(chain.clone(), layout.slots);
     let inputs: Vec<PlanCt> = (0..model.v()).map(|_| builder.fresh_input()).collect();
     let out = he.forward(&builder, &inputs)?;
-    builder.finish(model, layout, levels_needed, out)
+    builder.finish(model, layout, levels_needed, opts.batch, out)
 }
 
 impl HePlan {
@@ -214,10 +232,19 @@ impl HePlan {
         steps.into_iter().collect()
     }
 
-    /// Read the class logits out of a decrypted logits-slot vector.
+    /// Read the class logits out of a decrypted logits-slot vector
+    /// (clip 0 of a batched plan).
     pub fn extract_logits(&self, slots: &[f64]) -> Vec<f64> {
+        self.extract_logits_clip(slots, 0)
+    }
+
+    /// Read clip `clip`'s class logits out of a decrypted logits-slot
+    /// vector: logit `m` lives at `clip·block + m·T`.
+    pub fn extract_logits_clip(&self, slots: &[f64], clip: usize) -> Vec<f64> {
+        debug_assert!(clip < self.batch.max(1));
+        let base = clip * self.layout.block();
         (0..self.num_classes)
-            .map(|m| slots[m * self.layout.t])
+            .map(|m| slots[base + m * self.layout.t])
             .collect()
     }
 
@@ -228,6 +255,12 @@ impl HePlan {
     pub fn validate(&self) -> Result<()> {
         ensure!(self.n_inputs >= 1 && self.n_inputs <= self.n_regs);
         ensure!((self.output as usize) < self.n_regs, "output out of range");
+        ensure!(
+            self.batch >= 1 && self.batch <= self.layout.copies(),
+            "plan batch {} outside 1..={}",
+            self.batch,
+            self.layout.copies()
+        );
         let top = self.chain.top_level();
         ensure!(top >= self.levels_needed, "chain shorter than plan depth");
 
@@ -368,7 +401,7 @@ impl HePlan {
     /// The wavefront schedule is recomputed on load, not stored.
     pub fn to_text(&self) -> String {
         let mut s = String::new();
-        s.push_str("heplan v1\n");
+        s.push_str("heplan v2\n");
         s.push_str(&format!(
             "layout {} {} {}\n",
             self.layout.t, self.layout.c_max, self.layout.slots
@@ -379,9 +412,9 @@ impl HePlan {
         }
         s.push('\n');
         s.push_str(&format!(
-            "meta {} {} {} {} {} {:016x}\n",
+            "meta {} {} {} {} {} {} {:016x}\n",
             self.n_inputs, self.n_regs, self.output, self.levels_needed, self.num_classes,
-            self.model_hash
+            self.batch, self.model_hash
         ));
         s.push_str("counts");
         for v in self.counts.to_array() {
@@ -418,10 +451,17 @@ impl HePlan {
             Ok(f64::from_bits(u64::from_str_radix(tok, 16).context("bad f64 bits")?))
         }
         let mut lines = text.lines();
-        ensure!(lines.next() == Some("heplan v1"), "bad plan header");
+        // v1 is exactly v2 with an implicit batch of 1 (the meta line
+        // lacks the batch token) — plans persisted before slot batching
+        // stay readable, mirroring the wire codec's version window
+        let version = match lines.next() {
+            Some("heplan v1") => 1,
+            Some("heplan v2") => 2,
+            _ => bail!("bad plan header"),
+        };
         let mut layout: Option<AmaLayout> = None;
         let mut chain: Option<PlanChain> = None;
-        let mut meta: Option<(usize, usize, u32, usize, usize, u64)> = None;
+        let mut meta: Option<(usize, usize, u32, usize, usize, usize, u64)> = None;
         let mut counts: Option<OpCounts> = None;
         let mut masks = Vec::new();
         let mut ops = Vec::new();
@@ -446,14 +486,16 @@ impl HePlan {
                     chain = Some(PlanChain { delta, moduli });
                 }
                 Some("meta") => {
-                    ensure!(toks.len() == 7, "bad meta line");
+                    ensure!(toks.len() == 6 + version as usize, "bad meta line");
+                    let batch = if version >= 2 { toks[6].parse()? } else { 1 };
                     meta = Some((
                         toks[1].parse()?,
                         toks[2].parse()?,
                         toks[3].parse()?,
                         toks[4].parse()?,
                         toks[5].parse()?,
-                        u64::from_str_radix(toks[6], 16)?,
+                        batch,
+                        u64::from_str_radix(toks[5 + version as usize], 16)?,
                     ));
                 }
                 Some("counts") => {
@@ -498,7 +540,7 @@ impl HePlan {
             }
         }
         ensure!(saw_end, "plan truncated (no end marker)");
-        let (n_inputs, n_regs, output, levels_needed, num_classes, model_hash) =
+        let (n_inputs, n_regs, output, levels_needed, num_classes, batch, model_hash) =
             meta.ok_or_else(|| anyhow!("plan missing meta line"))?;
         let waves = schedule_waves(&ops, n_regs, n_inputs)?;
         let plan = HePlan {
@@ -512,6 +554,7 @@ impl HePlan {
             output,
             levels_needed,
             num_classes,
+            batch,
             model_hash,
             counts: counts.ok_or_else(|| anyhow!("plan missing counts"))?,
         };
@@ -649,6 +692,7 @@ impl PlanBuilder {
         model: &StgcnModel,
         layout: AmaLayout,
         levels_needed: usize,
+        batch: usize,
         out: PlanCt,
     ) -> Result<HePlan> {
         let st = self.state.into_inner();
@@ -669,6 +713,7 @@ impl PlanBuilder {
             output: out.reg,
             levels_needed,
             num_classes: model.num_classes(),
+            batch,
             model_hash: model.content_hash(),
             counts: self.counters.snapshot(),
         };
@@ -873,13 +918,46 @@ mod tests {
     }
 
     #[test]
+    fn test_v1_plan_text_still_parses_as_batch_1() {
+        // a pre-batching (v1) plan is exactly a v2 plan with batch = 1:
+        // header + batch-less meta line, everything else unchanged
+        let plan = tiny_plan();
+        assert_eq!(plan.batch, 1);
+        let v1: String = plan
+            .to_text()
+            .lines()
+            .map(|line| {
+                let out = if line == "heplan v2" {
+                    "heplan v1".to_string()
+                } else if let Some(rest) = line.strip_prefix("meta ") {
+                    let toks: Vec<&str> = rest.split_whitespace().collect();
+                    assert_eq!(toks.len(), 7);
+                    assert_eq!(toks[5], "1", "batch token");
+                    format!(
+                        "meta {} {} {} {} {} {}",
+                        toks[0], toks[1], toks[2], toks[3], toks[4], toks[6]
+                    )
+                } else {
+                    line.to_string()
+                };
+                out + "\n"
+            })
+            .collect();
+        let back = HePlan::from_text(&v1).unwrap();
+        assert_eq!(back, plan);
+        // a v1 header with a v2 (8-token) meta line is malformed
+        let mixed = plan.to_text().replace("heplan v2", "heplan v1");
+        assert!(HePlan::from_text(&mixed).is_err());
+    }
+
+    #[test]
     fn test_from_text_rejects_corruption() {
         let plan = tiny_plan();
         let text = plan.to_text();
         // truncation
         assert!(HePlan::from_text(&text[..text.len() / 2]).is_err());
         // header damage
-        assert!(HePlan::from_text(&text.replace("heplan v1", "heplan v9")).is_err());
+        assert!(HePlan::from_text(&text.replace("heplan v2", "heplan v9")).is_err());
     }
 
     #[test]
@@ -910,7 +988,7 @@ mod tests {
             &m,
             layout,
             &chain,
-            PlanOptions { use_bsgs: true, fuse_activations: false },
+            PlanOptions { use_bsgs: true, fuse_activations: false, ..Default::default() },
         )
         .unwrap();
         assert!(unfused.levels_needed > fused.levels_needed);
@@ -919,9 +997,64 @@ mod tests {
             &m,
             layout,
             &chain,
-            PlanOptions { use_bsgs: false, fuse_activations: true },
+            PlanOptions { use_bsgs: false, fuse_activations: true, ..Default::default() },
         )
         .unwrap();
         assert!(naive.counts.rot > fused.counts.rot);
+    }
+
+    #[test]
+    fn test_batched_plan_compiles_validates_and_roundtrips() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap(); // copies = 8
+        let chain = PlanChain::ideal(
+            HeStgcn::new(&m, layout).unwrap().levels_needed().unwrap(),
+            33,
+        );
+        let single = compile(&m, layout, &chain, PlanOptions::default()).unwrap();
+        for batch in [2usize, 5, 8] {
+            let opts = PlanOptions { batch, ..Default::default() };
+            let plan = compile(&m, layout, &chain, opts).unwrap();
+            plan.validate().unwrap();
+            assert_eq!(plan.batch, batch);
+            // unchanged level budget — the wrap paths merge pre-rescale
+            assert_eq!(plan.levels_needed, single.levels_needed);
+            assert_eq!(plan.counts.cmult, single.counts.cmult);
+            assert_eq!(plan.counts.rescale, single.counts.rescale);
+            // the documented extra cost: more rotations and mask PMults
+            assert!(plan.counts.rot > single.counts.rot);
+            assert!(plan.counts.pmult > single.counts.pmult);
+            // lossless text roundtrip carries the batch
+            let back = HePlan::from_text(&plan.to_text()).unwrap();
+            assert_eq!(plan, back);
+        }
+        // block-closed plans use the same rotation set at every batch > 1
+        let p2 = compile(&m, layout, &chain, PlanOptions { batch: 2, ..Default::default() })
+            .unwrap();
+        let p8 = compile(&m, layout, &chain, PlanOptions { batch: 8, ..Default::default() })
+            .unwrap();
+        assert_eq!(p2.required_rotations(), p8.required_rotations());
+        // and the wrap steps are new relative to the single-clip plan
+        let single_rots: std::collections::BTreeSet<usize> =
+            single.required_rotations().into_iter().collect();
+        assert!(p8.required_rotations().iter().any(|k| !single_rots.contains(k)));
+    }
+
+    #[test]
+    fn test_batch_out_of_range_rejected() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap(); // copies = 8
+        let chain = PlanChain::ideal(20, 33);
+        for batch in [0usize, 9, 100] {
+            assert!(
+                compile(&m, layout, &chain, PlanOptions { batch, ..Default::default() })
+                    .is_err(),
+                "batch {batch} must be rejected"
+            );
+        }
+        // a plan with a forged batch fails validation
+        let mut forged = compile(&m, layout, &chain, PlanOptions::default()).unwrap();
+        forged.batch = 99;
+        assert!(forged.validate().is_err());
     }
 }

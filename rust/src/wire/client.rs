@@ -64,6 +64,12 @@ impl VariantSpec {
     pub fn layout(&self) -> Result<AmaLayout> {
         AmaLayout::new(self.t, self.c_max, self.slots)
     }
+
+    /// Block copies of the variant's layout — the maximum slot-batch size
+    /// a request bundle for this variant can carry (DESIGN.md S16).
+    pub fn copies(&self) -> usize {
+        AmaLayout { t: self.t, c_max: self.c_max, slots: self.slots }.copies()
+    }
 }
 
 /// Client-side key material and crypto operations. Holds the secret key;
@@ -149,6 +155,36 @@ impl ClientKeys {
     pub fn encrypt_clip(&self, x: &[f64]) -> Result<Vec<Ciphertext>> {
         let layout = self.spec.layout()?;
         let packed = crate::ama::pack_clip(&layout, x, self.spec.v, self.spec.c_in)?;
+        self.encrypt_packed(packed)
+    }
+
+    /// Slot-pack up to `copies()` distinct clips into one per-node
+    /// ciphertext set (clip `b` in block copy `b`; DESIGN.md S16). A
+    /// batch of one keeps the replicated layout the single-clip plan's
+    /// rotation closure relies on — bit-identical to
+    /// [`ClientKeys::encrypt_clip`]. Requests built this way need keys
+    /// generated with a batched `PlanOptions` (`keygen --batch`), since
+    /// block-closed plans rotate through extra wrap steps.
+    pub fn encrypt_clip_batch(&self, clips: &[&[f64]]) -> Result<Vec<Ciphertext>> {
+        ensure!(!clips.is_empty(), "need at least one clip");
+        let layout = self.spec.layout()?;
+        ensure!(
+            clips.len() <= layout.copies(),
+            "batch {} exceeds variant {}'s {} block copies",
+            clips.len(),
+            self.variant,
+            layout.copies()
+        );
+        let packed = if clips.len() == 1 {
+            crate::ama::pack_clip(&layout, clips[0], self.spec.v, self.spec.c_in)?
+        } else {
+            crate::ama::pack_clip_batch(&layout, clips, self.spec.v, self.spec.c_in)?
+        };
+        self.encrypt_packed(packed)
+    }
+
+    /// Shared encode-then-encrypt step of the single and batched paths.
+    fn encrypt_packed(&self, packed: Vec<Vec<f64>>) -> Result<Vec<Ciphertext>> {
         let nq = self.spec.levels + 1;
         let mut rng = self.rng.lock().unwrap();
         Ok(packed
@@ -163,6 +199,16 @@ impl ClientKeys {
     /// Encrypt a clip and stamp it into a shippable [`CtBundle`].
     pub fn encrypt_request(&self, x: &[f64]) -> Result<CtBundle> {
         Ok(CtBundle::new(&self.params, self.encrypt_clip(x)?))
+    }
+
+    /// Encrypt a slot-packed batch of clips into a shippable [`CtBundle`]
+    /// carrying its batch size.
+    pub fn encrypt_request_batch(&self, clips: &[&[f64]]) -> Result<CtBundle> {
+        Ok(CtBundle::new_batched(
+            &self.params,
+            self.encrypt_clip_batch(clips)?,
+            clips.len(),
+        ))
     }
 
     /// Mix fresh entropy into the encryption RNG. The CLI calls this per
@@ -188,11 +234,35 @@ impl ClientKeys {
 
     /// Decrypt a logits ciphertext returned by the server and extract the
     /// class scores (slot `m·t` per class, mirroring
-    /// `HePlan::extract_logits`). The response crossed the wire, so its
-    /// geometry is validated against the client chain first — a
-    /// corrupt-but-checksummed frame errors instead of panicking or
-    /// decoding garbage.
+    /// `HePlan::extract_logits`). One code path with the batched variant
+    /// — the validation hardening can never drift between the two.
     pub fn decrypt_logits(&self, ct: &Ciphertext) -> Result<Vec<f64>> {
+        Ok(self.decrypt_logits_batch(ct, 1)?.remove(0))
+    }
+
+    /// Decrypt the per-clip logits of a slot-batched response: clip `b`'s
+    /// class scores live at `b·block + m·T`. `batch` must match what the
+    /// request bundle carried; the geometry is validated so a corrupt
+    /// response (or a wrong batch) errors instead of indexing garbage.
+    pub fn decrypt_logits_batch(
+        &self,
+        ct: &Ciphertext,
+        batch: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let layout = self.spec.layout()?;
+        ensure!(
+            batch >= 1 && batch <= layout.copies(),
+            "batch {batch} outside 1..={} (variant {}'s copies)",
+            layout.copies(),
+            self.variant
+        );
+        ensure!(
+            self.spec.num_classes <= self.spec.c_max,
+            "variant spec packs {} classes into {} channel rows — batched \
+             logits would cross a block boundary",
+            self.spec.num_classes,
+            self.spec.c_max
+        );
         ensure!(
             ct.c0.nq <= self.ctx.moduli.len()
                 && ct.c0.limbs.iter().chain(ct.c1.limbs.iter()).all(|l| l.len() == self.ctx.n),
@@ -204,8 +274,13 @@ impl ClientKeys {
         );
         let pt = encrypt::decrypt(&self.ctx, &self.sk, ct);
         let slots = self.encoder.decode(&self.ctx, &pt);
-        Ok((0..self.spec.num_classes)
-            .map(|m| slots[m * self.spec.t])
+        let block = layout.block();
+        Ok((0..batch)
+            .map(|b| {
+                (0..self.spec.num_classes)
+                    .map(|m| slots[b * block + m * self.spec.t])
+                    .collect()
+            })
             .collect())
     }
 }
@@ -354,9 +429,24 @@ fn keygen_with_rng(
 ) -> Result<(ClientKeys, EvalKeySet)> {
     let (layout, params) = session_geometry(model, opts)?;
     let ctx = params.build().context("building CKKS context for keygen")?;
-    let plan = compile(model, layout, &PlanChain::from_ctx(&ctx), opts)?;
+    let chain = PlanChain::from_ctx(&ctx);
+    let plan = compile(model, layout, &chain, opts)?;
+    // Batched keygen ships Galois keys for the union of the batched and
+    // single-clip plans: block-closed plans add wrap steps but also drop
+    // the d·T rotations of all-wrapping diagonals, so neither rotation
+    // set contains the other — and a tenant with batched keys must still
+    // be able to send plain single-clip requests. Every batch size > 1
+    // shares one rotation set (only the masks depend on the size), so
+    // keys cut for one batched plan cover all ragged sizes too.
+    let mut rots: std::collections::BTreeSet<usize> =
+        plan.required_rotations().into_iter().collect();
+    if opts.batch > 1 {
+        let single = compile(model, layout, &chain, PlanOptions { batch: 1, ..opts })?;
+        rots.extend(single.required_rotations());
+    }
+    let rots: Vec<usize> = rots.into_iter().collect();
     let spec = VariantSpec::for_model(model, &layout, &params);
-    ClientKeys::generate_with_ctx(variant, spec, params, ctx, &plan.required_rotations(), rng)
+    ClientKeys::generate_with_ctx(variant, spec, params, ctx, &rots, rng)
 }
 
 #[cfg(test)]

@@ -24,8 +24,14 @@ use anyhow::{bail, ensure, Result};
 
 /// Frame magic: "LinGcn WiRe".
 pub const MAGIC: [u8; 4] = *b"LGWR";
-/// Wire format version. Readers reject anything else.
-pub const VERSION: u16 = 1;
+/// Wire format version written by this build. v2: `CtBundle` carries a
+/// slot-batch size (DESIGN.md S16).
+pub const VERSION: u16 = 2;
+/// Oldest version still readable. Only the `CtBundle` payload changed in
+/// v2, so v1 frames of every *other* kind (client key files, eval-key
+/// bundles, ciphertexts, params) stay readable — a pre-batching tenant's
+/// persisted secret key must not become undecodable on upgrade.
+pub const MIN_VERSION: u16 = 1;
 
 const HEADER_LEN: usize = 16;
 const CHECKSUM_LEN: usize = 8;
@@ -96,8 +102,18 @@ pub fn unframe(expected_kind: u8, bytes: &[u8]) -> Result<&[u8]> {
     );
     ensure!(bytes[0..4] == MAGIC, "wire frame magic mismatch");
     let version = u16::from_le_bytes([bytes[4], bytes[5]]);
-    ensure!(version == VERSION, "unsupported wire version {version}");
+    ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported wire version {version}"
+    );
     let kind = bytes[6];
+    // the one payload that changed shape in v2: old bundles would
+    // mis-parse the batch field as the ciphertext count
+    ensure!(
+        !(version < 2 && kind == KIND_CT_BUNDLE),
+        "v1 ciphertext bundles are not readable by the batched (v2) \
+         format — re-encrypt the request"
+    );
     ensure!(
         kind == expected_kind,
         "wire record kind mismatch: expected {expected_kind}, got {kind}"
@@ -315,6 +331,31 @@ mod tests {
     fn test_kind_mismatch_rejected() {
         let f = frame(KIND_PARAMS, b"x");
         assert!(unframe(KIND_PUBLIC_KEY, &f).is_err());
+    }
+
+    /// Re-frame a payload under an explicit version (checksum rebuilt).
+    fn frame_v(version: u16, kind: u8, payload: &[u8]) -> Vec<u8> {
+        let mut f = frame(kind, payload);
+        f[4..6].copy_from_slice(&version.to_le_bytes());
+        let body_end = f.len() - 8;
+        let sum = fnv1a64(&f[..body_end]);
+        let at = body_end;
+        f[at..].copy_from_slice(&sum.to_le_bytes());
+        f
+    }
+
+    #[test]
+    fn test_version_window() {
+        let payload = b"legacy".to_vec();
+        // v1 frames stay readable for kinds whose payload never changed
+        let v1 = frame_v(1, KIND_CLIENT_KEYS, &payload);
+        assert_eq!(unframe(KIND_CLIENT_KEYS, &v1).unwrap(), payload.as_slice());
+        // ...but not for the bundle kind, whose payload grew a field
+        let v1_bundle = frame_v(1, KIND_CT_BUNDLE, &payload);
+        assert!(unframe(KIND_CT_BUNDLE, &v1_bundle).is_err());
+        // versions outside the window are rejected either side
+        assert!(unframe(KIND_CLIENT_KEYS, &frame_v(0, KIND_CLIENT_KEYS, &payload)).is_err());
+        assert!(unframe(KIND_CLIENT_KEYS, &frame_v(3, KIND_CLIENT_KEYS, &payload)).is_err());
     }
 
     #[test]

@@ -344,18 +344,38 @@ impl WireSerialize for EvalKeySet {
 
 // ------------------------------------------------------------ ct bundle
 
+/// Largest slot-batch size a reader will accept (paper-scale slot counts
+/// cap `copies()` well below this; the executor additionally rejects any
+/// batch above the variant layout's real `copies()`).
+const MAX_BATCH: usize = 4096;
+
 /// A request's ciphertexts (one per graph node), stamped with the hash of
-/// the parameter set they were encrypted under.
+/// the parameter set they were encrypted under and the slot-batch size
+/// the client packed (DESIGN.md S16). The `batch` field is untrusted
+/// input like everything else on the wire: readers bound it here, and
+/// `WireExecutor::infer_encrypted` rejects values the variant's layout
+/// cannot hold **before any HE work** — a forged batch errors at
+/// ingress; it can never mis-slice another clip's logits because
+/// block-closed plans keep every copy's dataflow inside its own copy.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CtBundle {
     pub params_hash: u64,
+    /// Distinct clips slot-packed into the block copies (1 = the legacy
+    /// replicated single-clip layout).
+    pub batch: usize,
     pub cts: Vec<Ciphertext>,
 }
 
 impl CtBundle {
     pub fn new(params: &CkksParams, cts: Vec<Ciphertext>) -> Self {
+        Self::new_batched(params, cts, 1)
+    }
+
+    /// A bundle carrying `batch` slot-packed clips.
+    pub fn new_batched(params: &CkksParams, cts: Vec<Ciphertext>, batch: usize) -> Self {
         CtBundle {
             params_hash: params_hash(params),
+            batch,
             cts,
         }
     }
@@ -375,6 +395,7 @@ impl WireSerialize for CtBundle {
 
     fn write_payload(&self, w: &mut ByteWriter) {
         w.put_u64(self.params_hash);
+        w.put_u32(self.batch as u32);
         w.put_u32(self.cts.len() as u32);
         for ct in &self.cts {
             ct.write_payload(w);
@@ -383,6 +404,11 @@ impl WireSerialize for CtBundle {
 
     fn read_payload(r: &mut ByteReader) -> Result<Self> {
         let params_hash = r.u64()?;
+        let batch = r.u32()? as usize;
+        ensure!(
+            (1..=MAX_BATCH).contains(&batch),
+            "wire ciphertext bundle: bad slot-batch size {batch}"
+        );
         let count = r.u32()? as usize;
         ensure!(
             (1..=4096).contains(&count),
@@ -391,7 +417,7 @@ impl WireSerialize for CtBundle {
         let cts = (0..count)
             .map(|_| Ciphertext::read_payload(r))
             .collect::<Result<Vec<_>>>()?;
-        Ok(CtBundle { params_hash, cts })
+        Ok(CtBundle { params_hash, batch, cts })
     }
 }
 
@@ -466,10 +492,33 @@ mod tests {
         let e = tiny_engine();
         let cts = vec![e.encrypt(&[1.0]), e.encrypt(&[2.0])];
         let bundle = CtBundle::new(&e.ctx.params, cts);
+        assert_eq!(bundle.batch, 1);
         let back = CtBundle::from_bytes(&bundle.to_bytes()).unwrap();
         assert_eq!(bundle, back);
         back.check_params(&e.ctx.params).unwrap();
         assert!(back.check_params(&CkksParams::toy(7)).is_err());
+    }
+
+    #[test]
+    fn test_batched_ct_bundle_roundtrip_and_batch_bounds() {
+        let e = tiny_engine();
+        let cts = vec![e.encrypt(&[1.0]), e.encrypt(&[2.0])];
+        let bundle = CtBundle::new_batched(&e.ctx.params, cts.clone(), 3);
+        let back = CtBundle::from_bytes(&bundle.to_bytes()).unwrap();
+        assert_eq!(back.batch, 3);
+        assert_eq!(bundle, back);
+        // a zero or absurd batch is rejected at the reader, not later
+        for bad_batch in [0usize, MAX_BATCH + 1, u32::MAX as usize] {
+            let forged = CtBundle {
+                params_hash: bundle.params_hash,
+                batch: bad_batch,
+                cts: cts.clone(),
+            };
+            assert!(
+                CtBundle::from_bytes(&forged.to_bytes()).is_err(),
+                "batch {bad_batch} must be rejected at ingress"
+            );
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 use super::format::EvalKeySet;
 use crate::ckks::{Ciphertext, EvalEngine};
 use crate::coordinator::{InferenceExecutor, KeyRegistry, Metrics};
-use crate::he_infer::exec::{plan_for, PlanKey};
+use crate::he_infer::exec::{cached_slot_capacity, plan_for, PlanKey};
 use crate::he_infer::{session_geometry, HePlan, PlanChain, PlanOptions, PreparedPlan};
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -27,7 +27,9 @@ use std::sync::{Arc, Mutex};
 pub struct TenantKeys {
     pub key_set: EvalKeySet,
     pub engine: EvalEngine,
-    sessions: Mutex<HashMap<String, Arc<WireSession>>>,
+    /// Serving sessions keyed by (variant, slot-batch size): batched
+    /// bundles execute batch-compiled plans whose masks differ per size.
+    sessions: Mutex<HashMap<(String, usize), Arc<WireSession>>>,
 }
 
 impl TenantKeys {
@@ -59,6 +61,9 @@ pub struct WireExecutor {
     models: HashMap<String, StgcnModel>,
     pub registry: Arc<KeyRegistry<TenantKeys>>,
     plans: Mutex<HashMap<PlanKey, Arc<HePlan>>>,
+    /// Cached per-variant block-copy counts (geometry-only, no keys) —
+    /// the occupancy denominator the coordinator's slot metrics use.
+    capacities: Mutex<HashMap<String, usize>>,
     metrics: Option<Arc<Metrics>>,
 }
 
@@ -74,6 +79,7 @@ impl WireExecutor {
             models,
             registry,
             plans: Mutex::new(HashMap::new()),
+            capacities: Mutex::new(HashMap::new()),
             metrics: None,
         }
     }
@@ -99,12 +105,20 @@ impl WireExecutor {
         }
     }
 
-    /// Get-or-build the tenant's session for `variant`: verify the
-    /// registered keys match the variant's serving geometry and cover the
-    /// plan's rotations, then build the key-free engine and pre-encode
-    /// the plan masks.
-    fn session(&self, tenant: &Arc<TenantKeys>, variant: &str) -> Result<Arc<WireSession>> {
-        if let Some(s) = tenant.sessions.lock().unwrap().get(variant) {
+    /// Get-or-build the tenant's session for `(variant, batch)`: validate
+    /// the claimed batch against the variant's layout (**the ingress check
+    /// for a forged `CtBundle::batch`** — it errors here, before any HE
+    /// work), verify the registered keys match the serving geometry and
+    /// cover the batch-compiled plan's rotations, then pre-encode the
+    /// plan masks against the tenant's key-free engine.
+    fn session(
+        &self,
+        tenant: &Arc<TenantKeys>,
+        variant: &str,
+        batch: usize,
+    ) -> Result<Arc<WireSession>> {
+        let skey = (variant.to_string(), batch);
+        if let Some(s) = tenant.sessions.lock().unwrap().get(&skey) {
             // same metric semantics as HeExecutor: every request served
             // without a compile counts as a plan-cache hit
             self.count_plan_cache(true);
@@ -116,17 +130,24 @@ impl WireExecutor {
             .ok_or_else(|| anyhow!("unknown variant {variant}"))?;
         let (layout, params) = session_geometry(model, self.opts)?;
         ensure!(
+            batch >= 1 && batch <= layout.copies(),
+            "request slot-batch {batch} outside 1..={} (variant {variant}'s \
+             block copies) — rejected at ingress",
+            layout.copies()
+        );
+        ensure!(
             tenant.key_set.params == params,
             "tenant keys were generated for a different parameter set than \
              variant {variant} (re-run keygen against this variant)"
         );
-        let key = PlanKey::new(model, &layout, self.opts);
+        let opts = PlanOptions { batch, ..self.opts };
+        let key = PlanKey::new(model, &layout, opts);
         let cached = self.plans.lock().unwrap().get(&key).cloned();
         // Compile outside the locks: a cold plan compile + mask encoding
         // are the cold-start costs (the engine was built at registration).
         let engine = &tenant.engine;
         let chain = PlanChain::from_ctx(&engine.ctx);
-        let (plan, was_cached) = plan_for(cached, model, layout, &chain, self.opts)?;
+        let (plan, was_cached) = plan_for(cached, model, layout, &chain, opts)?;
         self.count_plan_cache(was_cached);
         if !was_cached {
             self.plans.lock().unwrap().entry(key).or_insert_with(|| plan.clone());
@@ -135,17 +156,15 @@ impl WireExecutor {
         ensure!(
             tenant.key_set.covers_rotations(&engine.encoder, &needed),
             "tenant keys do not cover the {} rotations of variant {variant}'s \
-             plan (keygen against this variant)",
-            needed.len()
+             batch-{batch} plan (keygen against this variant{})",
+            needed.len(),
+            if batch > 1 { " with --batch" } else { "" }
         );
         let prepared = PreparedPlan::new(plan, engine)?;
         let session = Arc::new(WireSession { prepared });
         let session = {
             let mut sessions = tenant.sessions.lock().unwrap();
-            sessions
-                .entry(variant.to_string())
-                .or_insert(session)
-                .clone()
+            sessions.entry(skey).or_insert(session).clone()
         };
         Ok(session)
     }
@@ -159,12 +178,24 @@ impl InferenceExecutor for WireExecutor {
         )
     }
 
+    /// The variant layout's `copies()`: on this tier batching is
+    /// client-side (one bundle carries the clips), so this is not a
+    /// coalescing knob — it is the occupancy denominator, so a tenant
+    /// shipping half-full bundles shows up as under-occupancy in the
+    /// metrics instead of a fake 1.0.
+    fn slot_capacity(&self, variant: &str) -> usize {
+        cached_slot_capacity(&self.capacities, &self.models, self.opts, variant, |copies| {
+            copies
+        })
+    }
+
     fn infer_encrypted(
         &self,
         variant: &str,
         tenant: &str,
         cts: &[Ciphertext],
         params_hash: Option<u64>,
+        batch: usize,
     ) -> Result<Ciphertext> {
         let entry = self
             .registry
@@ -179,7 +210,9 @@ impl InferenceExecutor for WireExecutor {
                  parameter set than tenant {tenant}'s registered keys"
             );
         }
-        let session = self.session(&entry, variant)?;
+        // the claimed slot-batch size is untrusted: session() bounds it
+        // against the variant's layout before any HE work runs
+        let session = self.session(&entry, variant, batch)?;
         // full residue scan at the trust boundary: wire-deserialized
         // ciphertexts must be reduced before the unchecked modular
         // kernels see them (execute() itself only shape-checks — the
@@ -215,7 +248,7 @@ mod tests {
         let ex = executor(&model, 4);
         assert!(ex.infer("v", &[0.0]).is_err(), "plaintext path must be closed");
         assert!(
-            ex.infer_encrypted("v", "nobody", &[], None).is_err(),
+            ex.infer_encrypted("v", "nobody", &[], None, 1).is_err(),
             "unregistered tenant must be rejected"
         );
     }
@@ -236,11 +269,35 @@ mod tests {
         let cts = client.encrypt_clip(&x).unwrap();
         let hash = Some(crate::wire::params_hash(&client.params));
         // a wrong stamp is rejected before any HE work
-        assert!(ex.infer_encrypted("v", "alice", &cts, Some(0xdead)).is_err());
-        let ct = ex.infer_encrypted("v", "alice", &cts, hash).unwrap();
+        assert!(ex.infer_encrypted("v", "alice", &cts, Some(0xdead), 1).is_err());
+        let ct = ex.infer_encrypted("v", "alice", &cts, hash, 1).unwrap();
         let got = client.decrypt_logits(&ct).unwrap();
         let argmax = crate::util::argmax;
         assert_eq!(argmax(&got), argmax(&want));
-        assert!(ex.infer_encrypted("missing", "alice", &cts, hash).is_err());
+        assert!(ex.infer_encrypted("missing", "alice", &cts, hash, 1).is_err());
+    }
+
+    #[test]
+    fn test_forged_batch_rejected_at_ingress_before_he_work() {
+        let model = tiny();
+        let ex = executor(&model, 4);
+        let (client, key_set) = keygen(&model, "v", PlanOptions::default(), 13).unwrap();
+        ex.register("alice", key_set).unwrap();
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 / 9.0).cos()).collect();
+        let cts = client.encrypt_clip(&x).unwrap();
+        let copies = client.spec.copies();
+        let hash = Some(crate::wire::params_hash(&client.params));
+        // batch = 0 and batch > copies() both error cleanly at ingress
+        for forged in [0usize, copies + 1, usize::MAX] {
+            let err = ex.infer_encrypted("v", "alice", &cts, hash, forged).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("ingress") || msg.contains("outside 1..="), "{msg}");
+        }
+        // a *plausible* forged batch (> 1 but within copies) on keys cut
+        // for the single-clip plan is refused by rotation coverage — it
+        // never executes, so it can never mis-slice logits
+        let err = ex.infer_encrypted("v", "alice", &cts, hash, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("do not cover"), "{err:#}");
     }
 }

@@ -1,0 +1,323 @@
+//! Slot-packed batch inference: the differential equivalence suite
+//! (ISSUE 4; DESIGN.md S16).
+//!
+//! The claim under test: running B distinct clips through ONE
+//! batch-compiled `HePlan` (clips in the block copies, block-closed
+//! rotation taps) yields
+//! * the same per-clip logits as B independent single-clip runs, to CKKS
+//!   noise tolerance, with the same classification decisions;
+//! * `OpCounts` identical to the single-clip plan's modulo the documented
+//!   extra rotation + mask-PMult + Add per wrapping channel diagonal —
+//!   in particular the same CMult and Rescale counts (unchanged level
+//!   budget);
+//! * zeros in every padded copy of a ragged batch (B < copies()).
+//!
+//! The real-CKKS cases execute full encrypted forwards and are too slow
+//! for the debug-profile tier-1 run, so they are `#[ignore]`d in debug
+//! and exercised in `--release` by ci.sh / `make test-batch`. The
+//! symbolic (counting-backend) cases always run.
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::CkksParams;
+use lingcn::graph::Graph;
+use lingcn::he_infer::{
+    compile, execute_with_backend, CountingBackend, HeBackend, HeStgcn, PlanChain, PlanOptions,
+    PrivateInferenceSession,
+};
+use lingcn::linearize::LinearizationPlan;
+use lingcn::stgcn::StgcnModel;
+
+fn tiny_model(seed: u64) -> StgcnModel {
+    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
+}
+
+/// The nl-variant family the suite sweeps: the full polynomial model and
+/// two structurally linearized variants (different effective nl).
+fn variants(seed: u64) -> Vec<(&'static str, StgcnModel)> {
+    let full = tiny_model(seed);
+    let mut lin = tiny_model(seed + 10);
+    LinearizationPlan::structural_mixed(2, 5, 2).apply(&mut lin).unwrap();
+    let mut lin0 = tiny_model(seed + 20);
+    LinearizationPlan::layer_wise(2, 5, 0).apply(&mut lin0).unwrap();
+    vec![("full", full), ("mixed-nl2", lin), ("linear-nl0", lin0)]
+}
+
+/// Small ring (N = 2^9, 256 slots): block 32 → copies() = 8, so batched
+/// layouts have real wrap paths to get wrong.
+fn toy_params(levels: usize) -> CkksParams {
+    CkksParams {
+        n: 1 << 9,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    }
+}
+
+fn session_for(model: &StgcnModel, batch: usize, seed: u64) -> PrivateInferenceSession {
+    let probe = HeStgcn::new(
+        model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 8).unwrap(),
+    )
+    .unwrap();
+    let levels = probe.levels_needed().unwrap();
+    PrivateInferenceSession::new_with_options(
+        model,
+        toy_params(levels),
+        seed,
+        PlanOptions { batch, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn clip(model: &StgcnModel, seed: usize) -> Vec<f64> {
+    let n = model.v() * model.c_in * model.t;
+    (0..n)
+        .map(|i| (((seed * 131 + i) * 37 % 101) as f64 - 50.0) / 80.0)
+        .collect()
+}
+
+/// Two encrypted runs of the same math agree to CKKS noise: relative to
+/// the logit magnitude of the reference run.
+fn assert_close(label: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{label}: logit arity");
+    let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() / max_mag < 2e-2,
+            "{label}: logit {i} diverged — batched {g} vs single {w}"
+        );
+    }
+    assert_eq!(
+        lingcn::util::argmax(got),
+        lingcn::util::argmax(want),
+        "{label}: classification flipped"
+    );
+}
+
+// ----------------------------------------------------- symbolic sweeps
+
+/// Batched plans keep the single-clip plan's level budget and CMult /
+/// Rescale counts exactly; the only growth is the documented extra
+/// rotation + mask PMult + Add per wrapping diagonal. Swept over nl
+/// variants × every batch size the layout admits.
+#[test]
+fn test_batched_opcounts_match_single_modulo_mask_pmults() {
+    for (name, model) in variants(1) {
+        let layout = AmaLayout::new(8, 4, 256).unwrap(); // copies() = 8
+        let he = HeStgcn::new(&model, layout).unwrap();
+        let levels = he.levels_needed().unwrap();
+        let chain = PlanChain::ideal(levels, 33);
+        let single = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
+        // masks only depend on the batch size, ops don't: every batched
+        // size must share this reference op skeleton
+        let skeleton = compile(
+            &model,
+            layout,
+            &chain,
+            PlanOptions { batch: 2, ..Default::default() },
+        )
+        .unwrap();
+        for batch in 2..=layout.copies() {
+            let plan = compile(
+                &model,
+                layout,
+                &chain,
+                PlanOptions { batch, ..Default::default() },
+            )
+            .unwrap();
+            plan.validate().unwrap();
+            assert_eq!(plan.levels_needed, single.levels_needed, "{name} b{batch}: levels");
+            assert_eq!(plan.counts.cmult, single.counts.cmult, "{name} b{batch}: cmult");
+            assert_eq!(plan.counts.rescale, single.counts.rescale, "{name} b{batch}: rescale");
+            assert!(plan.counts.rot > single.counts.rot, "{name} b{batch}: rot");
+            assert!(plan.counts.pmult > single.counts.pmult, "{name} b{batch}: pmult");
+            assert!(plan.counts.add > single.counts.add, "{name} b{batch}: add");
+            assert_eq!(plan.ops, skeleton.ops, "{name} b{batch}: op skeleton");
+        }
+    }
+}
+
+/// The batched interpreted walk replayed from its compiled plan tallies
+/// exactly the plan's static counts and lands on level 0 — the
+/// compile/execute equivalence of `plan_equivalence.rs`, batched.
+#[test]
+fn test_batched_counting_replay_matches_interpreter() {
+    for (name, model) in variants(2) {
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        for batch in [2usize, 8] {
+            let mut he = HeStgcn::new(&model, layout).unwrap();
+            he.batch = batch;
+            let levels = he.levels_needed().unwrap();
+
+            let be_interp = CountingBackend::new(levels, 33);
+            let input: Vec<_> = (0..model.v()).map(|_| be_interp.fresh()).collect();
+            let out_interp = he.forward(&be_interp, &input).unwrap();
+            assert_eq!(be_interp.level(&out_interp), 0, "{name} b{batch}");
+
+            let chain = PlanChain::ideal(levels, 33);
+            let plan = compile(
+                &model,
+                layout,
+                &chain,
+                PlanOptions { batch, ..Default::default() },
+            )
+            .unwrap();
+            let be_plan = CountingBackend::new(levels, 33);
+            let input2: Vec<_> = (0..model.v()).map(|_| be_plan.fresh()).collect();
+            let out_plan = execute_with_backend(&plan, &be_plan, &input2).unwrap();
+
+            assert_eq!(be_interp.op_counts(), be_plan.op_counts(), "{name} b{batch}");
+            assert_eq!(be_interp.op_counts(), plan.counts, "{name} b{batch}");
+            assert_eq!(be_plan.level(&out_plan), 0, "{name} b{batch}");
+        }
+    }
+}
+
+// ------------------------------------------------- real-CKKS differentials
+
+/// The acceptance criterion: for every nl variant, a batch-of-B run
+/// yields each clip's logits equal (to CKKS noise) to that clip's
+/// independent single-clip run, at batch sizes 1, 2 and copies().
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_batched_logits_match_independent_single_runs() {
+    for model_seed in [1u64, 2] {
+        for (name, model) in variants(model_seed) {
+            let single_sess = session_for(&model, 1, 2024);
+            let copies = single_sess.layout.copies();
+            assert!(copies >= 4, "toy geometry must leave copies to batch");
+
+            // independent single-clip reference runs (batch size 1 of the
+            // acceptance sweep — the batched paths are compared to these)
+            let clips: Vec<Vec<f64>> = (0..copies).map(|s| clip(&model, s)).collect();
+            let singles: Vec<Vec<f64>> = clips
+                .iter()
+                .map(|x| {
+                    let input = single_sess.encrypt_input(&model, x).unwrap();
+                    let out = single_sess.infer(&model, &input).unwrap();
+                    single_sess.decrypt_logits(&model, &out)
+                })
+                .collect();
+
+            for batch in [2usize, copies] {
+                let sess = session_for(&model, batch, 2024);
+                let refs: Vec<&[f64]> = clips[..batch].iter().map(|c| c.as_slice()).collect();
+                let input = sess.encrypt_input_batch(&model, &refs).unwrap();
+                let out = sess.infer(&model, &input).unwrap();
+                assert_eq!(out.level(), 0, "{name} b{batch}: depth budget");
+                let per_clip = sess.decrypt_logits_batch(&model, &out);
+                assert_eq!(per_clip.len(), batch);
+                for (b, got) in per_clip.iter().enumerate() {
+                    assert_close(
+                        &format!("seed {model_seed} {name} batch {batch} clip {b}"),
+                        got,
+                        &singles[b],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Ragged last batch: B < copies() clips still come back right, and the
+/// padded copies decrypt to zeros (batch-aware masks zero them end to
+/// end — nothing leaks between copies, not even bias terms).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_ragged_batch_padded_copies_decrypt_to_zeros() {
+    let (_, model) = variants(3).remove(1);
+    let single_sess = session_for(&model, 1, 7);
+    let copies = single_sess.layout.copies();
+    let batch = 3;
+    assert!(batch < copies);
+
+    let clips: Vec<Vec<f64>> = (0..batch).map(|s| clip(&model, s + 40)).collect();
+    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+    let sess = session_for(&model, batch, 7);
+    let input = sess.encrypt_input_batch(&model, &refs).unwrap();
+    let out = sess.infer(&model, &input).unwrap();
+
+    // active clips match their single runs
+    let per_clip = sess.decrypt_logits_batch(&model, &out);
+    for (b, got) in per_clip.iter().enumerate() {
+        let input = single_sess.encrypt_input(&model, &clips[b]).unwrap();
+        let single = single_sess.decrypt_logits(
+            &model,
+            &single_sess.infer(&model, &input).unwrap(),
+        );
+        assert_close(&format!("ragged clip {b}"), got, &single);
+    }
+
+    // every slot of every padded copy is zero to CKKS noise
+    let slots = sess.engine.decrypt(&out);
+    let block = sess.layout.block();
+    for copy in batch..copies {
+        for (i, v) in slots[copy * block..(copy + 1) * block].iter().enumerate() {
+            assert!(
+                v.abs() < 1e-3,
+                "padded copy {copy} slot {i} leaked a value: {v}"
+            );
+        }
+    }
+}
+
+/// Batched compiled execution is bit-identical to the batched interpreted
+/// walk — the plan_equivalence guarantee carries over to block-closed
+/// plans (same masks, same op order, any thread count).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_batched_compiled_matches_interpreted_bit_for_bit() {
+    let (_, model) = variants(4).remove(0);
+    let batch = 4;
+    let sess = session_for(&model, batch, 99);
+    let clips: Vec<Vec<f64>> = (0..batch).map(|s| clip(&model, s + 7)).collect();
+    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+    let input = sess.encrypt_input_batch(&model, &refs).unwrap();
+
+    let ct_plan = sess.infer(&model, &input).unwrap();
+    let ct_interp = sess.infer_interpreted(&model, &input).unwrap();
+    assert_eq!(
+        sess.engine.decrypt(&ct_plan),
+        sess.engine.decrypt(&ct_interp),
+        "compiled batched execution must be bit-identical to interpreted"
+    );
+    for threads in [2usize, 4] {
+        let ct_par = sess.infer_parallel(&input, threads).unwrap();
+        assert_eq!(
+            sess.engine.decrypt(&ct_plan),
+            sess.engine.decrypt(&ct_par),
+            "parallel batched execution ({threads} threads) changed bits"
+        );
+    }
+}
+
+/// The serving-tier sweep: one `HeSession` built for the full batch
+/// serves every size 1..=copies() (ragged plans prepared lazily against
+/// the same engine), with consistent per-size results.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_hesession_serves_all_batch_sizes_from_one_engine() {
+    use lingcn::he_infer::HeSession;
+    let (_, model) = variants(5).remove(1);
+    let (session, _plan, _cached) = HeSession::new(
+        model.clone(),
+        PlanOptions { batch: 8, ..Default::default() },
+        11,
+        None,
+    )
+    .unwrap();
+    let copies = session.layout.copies();
+    assert!(copies >= 8);
+    let clips: Vec<Vec<f64>> = (0..3).map(|s| clip(&model, s)).collect();
+    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+
+    // full path: 3-clip ragged job on the batch-8 session
+    let batched = session.infer_trusted_batch(&refs, 1).unwrap();
+    // single path through the same session (batch-1 spare plan)
+    for (b, x) in clips.iter().enumerate() {
+        let single = session.infer_trusted(x, 1).unwrap();
+        assert_close(&format!("session clip {b}"), &batched[b], &single);
+    }
+}

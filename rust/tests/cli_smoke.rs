@@ -27,6 +27,17 @@ fn test_calibrate_quick_runs_without_artifacts() {
 }
 
 #[test]
+fn test_batch_flag_validated_before_artifacts() {
+    // slot-batching knobs fail fast on nonsense, before touching disk
+    assert!(run(&args(&["infer", "--nl", "2", "--batch", "0"])).is_err());
+    assert!(
+        run(&args(&["infer", "--nl", "2", "--batch", "2"])).is_err(),
+        "--batch without --encrypted must be rejected"
+    );
+    assert!(run(&args(&["infer", "--nl", "2", "--batch", "nope"])).is_err());
+}
+
+#[test]
 fn test_unknown_subcommand_exits_nonzero() {
     assert_eq!(run(&args(&["frobnicate"])).unwrap(), USAGE_EXIT);
     assert_eq!(run(&args(&[])).unwrap(), USAGE_EXIT);

@@ -1,5 +1,7 @@
-//! Coordinator integration over real artifacts: routing on the trained
-//! Pareto frontier, plaintext executor correctness, batching under load.
+//! Coordinator integration: routing on the trained Pareto frontier,
+//! plaintext executor correctness, batching under load (artifacts-gated),
+//! and the slot-batched HE tier end to end on synthetic models (DESIGN.md
+//! S16; release-gated — real CKKS is too slow in debug).
 
 use lingcn::coordinator::{Coordinator, Request};
 use lingcn::costmodel::OpCostModel;
@@ -76,5 +78,87 @@ fn test_serving_under_load_all_complete_and_route_correctly() {
     }
     assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), n);
     assert_eq!(coord.metrics.failed.load(Ordering::Relaxed), 0);
+    coord.shutdown();
+}
+
+/// The slot-batched HE tier through the whole coordinator pipeline:
+/// same-variant requests coalesce into slot-batched ciphertext jobs,
+/// per-request logits survive de-interleaving (every request carries a
+/// *distinct* clip and must get its own answer back), and the occupancy
+/// metrics are reported. Synthetic models — no artifacts needed.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_slot_batched_he_tier_end_to_end_with_occupancy_metrics() {
+    use lingcn::coordinator::{InferenceExecutor, Metrics, ModelVariant, Router};
+    use lingcn::graph::Graph;
+    use lingcn::he_infer::HeExecutor;
+    use lingcn::stgcn::StgcnModel;
+    use std::collections::HashMap;
+
+    let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let mut models = HashMap::new();
+    models.insert("nl2".to_string(), model.clone());
+    let mut exec = HeExecutor::new(models, 1, 7);
+    exec.set_max_batch(4);
+    let metrics = Arc::new(Metrics::default());
+    exec.set_metrics(metrics.clone());
+    let cap = exec.slot_capacity("nl2");
+    assert_eq!(cap, 4, "toy geometry leaves ≥ 4 copies");
+
+    let router = Router::new(vec![ModelVariant {
+        name: "nl2".into(),
+        nl: 2,
+        latency_s: 1.0,
+        accuracy: 0.9,
+    }]);
+    let coord = Coordinator::start_with_metrics(
+        router,
+        Arc::new(exec),
+        metrics.clone(),
+        1,
+        16,
+        Duration::from_millis(500),
+    );
+
+    // 8 requests with distinct clips → two full slot-batched jobs
+    let n_in = model.v() * model.c_in * model.t;
+    let clips: Vec<Vec<f64>> = (0..8)
+        .map(|s| (0..n_in).map(|i| (((s * 131 + i) * 37 % 101) as f64 - 50.0) / 80.0).collect())
+        .collect();
+    let mut rxs = Vec::new();
+    for x in &clips {
+        let (tx, rx) = mpsc::sync_channel(1);
+        coord
+            .submit(Request { clip: x.clone(), latency_budget_s: None, resp: tx })
+            .unwrap();
+        rxs.push(rx);
+    }
+    let argmax = lingcn::util::argmax;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        // de-interleaving check: each request's logits must match ITS
+        // clip's plaintext forward (to CKKS noise), not a neighbour's
+        let want = model.forward(&clips[i]).unwrap();
+        let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+        for (j, (g, w)) in r.logits.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() / max_mag < 2e-2,
+                "request {i} logit {j}: got {g}, its own clip predicts {w}"
+            );
+        }
+        assert_eq!(
+            argmax(&r.logits),
+            argmax(&want),
+            "request {i} decoded another clip's logits"
+        );
+    }
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 8);
+    assert!(coord.metrics.batch_jobs.load(Ordering::Relaxed) >= 1, "no slot-batched job ran");
+    assert_eq!(coord.metrics.batch_requests.load(Ordering::Relaxed), 8);
+    assert!(coord.metrics.slot_occupancy() > 0.0);
+    assert!(coord.metrics.batch_fill() > 1.0, "batching never coalesced");
+    let summary = coord.metrics.summary();
+    assert!(summary.contains("slot_batch="), "summary: {summary}");
     coord.shutdown();
 }

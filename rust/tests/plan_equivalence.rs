@@ -131,12 +131,13 @@ fn test_counting_backend_replay_matches_interpreter() {
     let layout = AmaLayout::new(8, 4, 256).unwrap();
     for opts in [
         PlanOptions::default(),
-        PlanOptions { use_bsgs: false, fuse_activations: true },
-        PlanOptions { use_bsgs: true, fuse_activations: false },
+        PlanOptions { use_bsgs: false, fuse_activations: true, ..Default::default() },
+        PlanOptions { use_bsgs: true, fuse_activations: false, ..Default::default() },
     ] {
         let mut he = HeStgcn::new(&m, layout).unwrap();
         he.use_bsgs = opts.use_bsgs;
         he.fuse_activations = opts.fuse_activations;
+        he.batch = opts.batch;
         let levels = he.levels_needed().unwrap();
 
         let be_interp = CountingBackend::new(levels, 33);

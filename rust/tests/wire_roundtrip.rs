@@ -86,6 +86,11 @@ fn test_corruption_corpus_errors_never_panics() {
     let engine = CkksEngine::new(p.clone(), &[1, 2], 13).unwrap();
     let ct = engine.encrypt(&[0.5; 8]);
     let bundle = CtBundle::new(&p, vec![engine.encrypt(&[1.0]), engine.encrypt(&[2.0])]);
+    let batched = CtBundle::new_batched(
+        &p,
+        vec![engine.encrypt(&[3.0]), engine.encrypt(&[4.0])],
+        4,
+    );
     let ks = EvalKeySet::from_engine(&engine, "v");
 
     let corpus: Vec<(&str, Vec<u8>)> = vec![
@@ -93,6 +98,7 @@ fn test_corruption_corpus_errors_never_panics() {
         ("public key", engine.pk.to_bytes()),
         ("ciphertext", ct.to_bytes()),
         ("ct bundle", bundle.to_bytes()),
+        ("ct bundle", batched.to_bytes()),
         ("eval key set", ks.to_bytes()),
     ];
     for (name, bytes) in &corpus {
@@ -165,12 +171,124 @@ fn test_wire_roundtrip_bit_identical_to_private_session() {
         "tenant-a",
         &request.cts,
         Some(request.params_hash),
+        request.batch,
     )
     .unwrap();
     let ct_logits = Ciphertext::from_bytes(&ct_logits.to_bytes()).unwrap();
     assert_eq!(ct_logits, want_ct, "server output ciphertext must match");
     let got = client.decrypt_logits(&ct_logits).unwrap();
     assert_eq!(got, want, "wire logits must be bit-identical to the trusted path");
+}
+
+/// The batched wire path (DESIGN.md S16): a tenant with `--batch` keys
+/// ships B distinct clips in one bundle; the key-free server runs the
+/// batch-compiled plan; per-clip logits match each clip's single-clip
+/// wire run.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn test_wire_batched_bundle_roundtrips_per_clip() {
+    let model = tiny_model(1);
+    let batch = 2;
+    let opts = PlanOptions { batch, ..Default::default() };
+    let (client, key_set) = keygen(&model, "v", opts, 31).unwrap();
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let server = WireExecutor::new(models, 2, Arc::new(KeyRegistry::new(8)));
+    server.register("tenant-a", EvalKeySet::from_bytes(&key_set.to_bytes()).unwrap()).unwrap();
+
+    let clips: Vec<Vec<f64>> = (0..batch)
+        .map(|s| {
+            let n = model.v() * model.c_in * model.t;
+            (0..n).map(|i| (((s * 53 + i) * 37 % 101) as f64 - 50.0) / 80.0).collect()
+        })
+        .collect();
+    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+    let request =
+        CtBundle::from_bytes(&client.encrypt_request_batch(&refs).unwrap().to_bytes()).unwrap();
+    assert_eq!(request.batch, batch);
+    let ct_logits = lingcn::coordinator::InferenceExecutor::infer_encrypted(
+        &server,
+        "v",
+        "tenant-a",
+        &request.cts,
+        Some(request.params_hash),
+        request.batch,
+    )
+    .unwrap();
+    let per_clip = client.decrypt_logits_batch(&ct_logits, batch).unwrap();
+
+    // reference: each clip through its own single-clip wire request
+    // (batched keys cover the single-clip plan too — the keygen union)
+    let argmax = lingcn::util::argmax;
+    for (b, x) in clips.iter().enumerate() {
+        let single_req = client.encrypt_request(x).unwrap();
+        let single_ct = lingcn::coordinator::InferenceExecutor::infer_encrypted(
+            &server,
+            "v",
+            "tenant-a",
+            &single_req.cts,
+            Some(single_req.params_hash),
+            1,
+        )
+        .unwrap();
+        let want = client.decrypt_logits(&single_ct).unwrap();
+        let got = &per_clip[b];
+        let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() / max_mag < 2e-2,
+                "clip {b} logit {i}: batched {g} vs single {w}"
+            );
+        }
+        assert_eq!(argmax(got), argmax(&want), "clip {b} decision flipped");
+    }
+}
+
+/// A forged `batch` field in a checksummed bundle errors at ingress —
+/// never panics, never mis-slices logits (satellite of ISSUE 4).
+#[test]
+fn test_forged_batch_field_errors_at_ingress() {
+    let model = tiny_model(2);
+    let (client, key_set) = keygen(&model, "v", PlanOptions::default(), 41).unwrap();
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let server = WireExecutor::new(models, 1, Arc::new(KeyRegistry::new(4)));
+    server.register("alice", key_set).unwrap();
+
+    let x = clip(&model);
+    let bundle = client.encrypt_request(&x).unwrap();
+    let copies = client.spec.copies();
+    assert!(copies > 1);
+
+    // re-frame the bundle with forged batch values: the frames are valid
+    // (checksummed after forging), so rejection is semantic, not codec
+    for forged in [0usize, copies + 1, 4096] {
+        let mut fake = bundle.clone();
+        fake.batch = forged;
+        let bytes = fake.to_bytes();
+        match CtBundle::from_bytes(&bytes) {
+            // the reader bounds batch at 1..=MAX_BATCH
+            Err(_) => assert_eq!(forged, 0, "only batch 0 dies at the reader here"),
+            Ok(parsed) => {
+                // past the reader, the executor's ingress check rejects
+                // anything the variant's layout cannot hold
+                let err = lingcn::coordinator::InferenceExecutor::infer_encrypted(
+                    &server,
+                    "v",
+                    "alice",
+                    &parsed.cts,
+                    Some(parsed.params_hash),
+                    parsed.batch,
+                )
+                .unwrap_err();
+                let msg = format!("{err:#}");
+                assert!(
+                    msg.contains("ingress") || msg.contains("outside 1..="),
+                    "forged batch {forged}: unexpected error {msg}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
@@ -185,9 +303,10 @@ fn test_wrong_tenant_keys_are_rejected_cleanly() {
     let server = WireExecutor::new(models, 1, Arc::new(KeyRegistry::new(4)));
     server.register("bob", wrong_keys).unwrap();
     let cts = client.encrypt_clip(&clip(&other)).unwrap();
-    let err =
-        lingcn::coordinator::InferenceExecutor::infer_encrypted(&server, "v", "bob", &cts, None)
-            .unwrap_err();
+    let err = lingcn::coordinator::InferenceExecutor::infer_encrypted(
+        &server, "v", "bob", &cts, None, 1,
+    )
+    .unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("different parameter set") || msg.contains("do not cover"),
@@ -236,7 +355,14 @@ fn test_multi_tenant_coordinator_flow_with_registry_metrics() {
         let cts = client.encrypt_clip(&x).unwrap();
         let hash = Some(lingcn::wire::params_hash(&client.params));
         let resp = coord
-            .infer_blocking_encrypted(tenant.into(), Some("lingcn-nl2".into()), cts, hash, None)
+            .infer_blocking_encrypted(
+                tenant.into(),
+                Some("lingcn-nl2".into()),
+                cts,
+                hash,
+                1,
+                None,
+            )
             .unwrap();
         assert!(resp.error.is_none(), "{tenant}: {:?}", resp.error);
         let got = client.decrypt_logits(&resp.ct_logits.unwrap()).unwrap();
@@ -250,7 +376,14 @@ fn test_multi_tenant_coordinator_flow_with_registry_metrics() {
     // unregistered tenant: error response + registry miss
     let cts = alice.encrypt_clip(&x).unwrap();
     let resp = coord
-        .infer_blocking_encrypted("mallory".into(), Some("lingcn-nl2".into()), cts, None, None)
+        .infer_blocking_encrypted(
+            "mallory".into(),
+            Some("lingcn-nl2".into()),
+            cts,
+            None,
+            1,
+            None,
+        )
         .unwrap();
     assert!(resp.error.unwrap().contains("no registered EvalKeySet"));
 
