@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test test-batch bench bench-plan bench-wire bench-batch
+.PHONY: artifacts artifacts-quick test test-batch bench bench-plan bench-wire bench-batch regen-golden
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -26,9 +26,16 @@ bench:
 	cargo bench --bench table2_stgcn3_128
 	cargo bench --bench ablation_fusion
 
-# compile-once vs per-request HePlan costs; writes rust/BENCH_plan.json
+# compile-once vs per-request HePlan costs + the S17 op-count regression
+# gate (optimized plan must beat the raw trace on every counted op);
+# writes rust/BENCH_plan.json with the per-pass optimizer deltas
 bench-plan:
 	cargo bench --bench plan_compile
+
+# intentionally rewrite the golden-vector fixtures (rust/tests/golden/)
+# from the current build — review the fixture diff like code
+regen-golden:
+	REGEN_GOLDEN=1 cargo test --release --test golden_vectors
 
 # wire-format serialize/deserialize throughput + eval-key bundle sizes
 # per nl; writes rust/BENCH_wire.json

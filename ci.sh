@@ -43,7 +43,31 @@ cargo test -q
 echo "==> cargo test --release (slot-batched differential + end-to-end suites)"
 # the batch-vs-single differential cases and the batched coordinator/wire
 # end-to-ends run real CKKS executions and are cfg-gated to ignore in
-# debug — run all three suites here in release (make test-batch)
-cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip
+# debug — run all three suites here in release (make test-batch), plus
+# the optimizer's bit-identity differential (property_suite)
+cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip --test property_suite
+
+echo "==> golden vectors (release: logits + op-count digests)"
+# missing fixtures bootstrap (first run on a fresh tree writes them);
+# existing fixtures gate against any cross-PR numeric or op-count drift —
+# regenerate intentionally with `make regen-golden`
+cargo test --release -q --test golden_vectors
+# the gate only bites once the fixtures are committed: nag loudly while
+# any bootstrapped fixture is still untracked
+if command -v git >/dev/null && [ -d .git ]; then
+    untracked=$(git ls-files --others --exclude-standard rust/tests/golden/ || true)
+    if [ -n "$untracked" ]; then
+        echo "WARNING: golden fixtures were bootstrapped this run and are not yet"
+        echo "committed — the cross-PR drift gate is inactive until they are:"
+        echo "$untracked" | sed 's/^/    /'
+    fi
+fi
+
+echo "==> op-count regression gate (bench plan_compile, same as make bench-plan)"
+# benches/plan_compile.rs asserts optimized <= raw on every cost-bearing
+# OpCounts field and strictly fewer key-switch decompositions, then
+# writes BENCH_plan.json with the per-pass deltas — an assert failure
+# fails the build here (invoked via cargo directly so ci.sh needs no make)
+cargo bench --bench plan_compile
 
 echo "==> ci.sh: all green"

@@ -1,11 +1,14 @@
-//! Compile-once vs per-request cost of the HePlan path (DESIGN.md S14):
-//! plan compilation + mask pre-encoding are paid once per (model, layout,
-//! params); per-request latency then drops the interpreter's re-derivation
-//! of every mask and scale. Emits `BENCH_plan.json`.
+//! Compile-once vs per-request cost of the HePlan path (DESIGN.md S14)
+//! plus the S17 optimizer gate: the optimized plan must spend no more of
+//! any cost-bearing op than the raw trace — on every counted field — and
+//! strictly less rotation key-switch decomposition work on the
+//! GCNConv/BSGS fan-outs. A violation aborts the bench (ci.sh runs this
+//! as the op-count regression gate). Emits `BENCH_plan.json` with the
+//! per-pass before/after `OpCounts` deltas.
 //! Run: cargo bench --bench plan_compile
 
 use lingcn::ama::AmaLayout;
-use lingcn::ckks::{CkksEngine, CkksParams};
+use lingcn::ckks::{CkksEngine, CkksParams, OpCounts};
 use lingcn::graph::Graph;
 use lingcn::he_infer::{compile, CkksBackend, HeStgcn, PlanChain, PlanOptions, PreparedPlan};
 use lingcn::stgcn::StgcnModel;
@@ -33,18 +36,53 @@ fn main() {
     let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), ctx.slots())
         .unwrap();
     let chain = PlanChain::from_ctx(&ctx);
+    let raw_opts = PlanOptions { optimize: false, ..Default::default() };
 
-    // ---- compile-once costs
+    // ---- compile-once costs (optimized = the serving default)
     let budget = Duration::from_secs(2);
     let c_compile = time_op(1, 20, budget, || {
         let _ = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
     });
     let plan = Arc::new(compile(&model, layout, &chain, PlanOptions::default()).unwrap());
+    let raw = Arc::new(compile(&model, layout, &chain, raw_opts).unwrap());
     let engine = CkksEngine::new(params.clone(), &plan.required_rotations(), 7).expect("engine");
     let c_prepare = time_op(1, 20, budget, || {
         let _ = PreparedPlan::new(plan.clone(), &engine).unwrap();
     });
     let prepared = PreparedPlan::new(plan.clone(), &engine).unwrap();
+    // the optimizer never changes the rotation-step set, so one engine
+    // serves both plan families
+    let prepared_raw = PreparedPlan::new(raw.clone(), &engine).unwrap();
+
+    // ---- the S17 op-count regression gate
+    println!("optimizer passes (DESIGN.md S17):");
+    for p in &plan.opt_passes {
+        println!(
+            "  {:10} ops {} -> {}  rot {} -> {}  ks_decomp {} -> {}",
+            p.name,
+            p.before.total_ops(),
+            p.after.total_ops(),
+            p.before.rot,
+            p.after.rot,
+            p.before.ks_decomp,
+            p.after.ks_decomp,
+        );
+    }
+    for ((name, o), (_, r)) in plan.counts.cost_fields().iter().zip(raw.counts.cost_fields()) {
+        assert!(
+            *o <= r,
+            "OP-COUNT REGRESSION: optimized {name} = {o} exceeds raw {r}"
+        );
+    }
+    assert!(
+        plan.counts.ks_decomp < raw.counts.ks_decomp,
+        "hoisted grouping must share decompositions on the GCNConv/BSGS fans \
+         ({} vs {})",
+        plan.counts.ks_decomp,
+        raw.counts.ks_decomp
+    );
+    assert!(!plan.groups.is_empty(), "rotation fans must be grouped");
+    assert_eq!(plan.levels_needed, raw.levels_needed, "levels must not grow");
 
     // ---- per-request costs
     let x: Vec<f64> = (0..model.v() * model.c_in * model.t)
@@ -66,7 +104,11 @@ fn main() {
         let be = CkksBackend::new(&engine);
         let _ = he.forward(&be, &input).unwrap();
     });
-    // compiled plan, masks pre-encoded
+    // compiled raw plan (pre-S17 behavior)
+    let r_plan_raw = time_op(1, 12, budget, || {
+        let _ = prepared_raw.execute(&engine, &input, 1).unwrap();
+    });
+    // compiled optimized plan, masks pre-encoded
     let r_plan_1 = time_op(1, 12, budget, || {
         let _ = prepared.execute(&engine, &input, 1).unwrap();
     });
@@ -82,43 +124,78 @@ fn main() {
     lingcn::ckks::set_limb_parallelism(1);
 
     let rows = vec![
-        vec!["plan compile (once)".into(), format!("{:.3}", c_compile.median_secs() * 1e3)],
+        vec!["plan compile+optimize (once)".into(), format!("{:.3}", c_compile.median_secs() * 1e3)],
         vec!["mask pre-encode (once)".into(), format!("{:.3}", c_prepare.median_secs() * 1e3)],
         vec!["request: interpreted, cold masks".into(), format!("{:.3}", r_interp_cold.median_secs() * 1e3)],
         vec!["request: interpreted, warm masks".into(), format!("{:.3}", r_interp_warm.median_secs() * 1e3)],
-        vec!["request: compiled plan, 1 thread".into(), format!("{:.3}", r_plan_1.median_secs() * 1e3)],
-        vec![format!("request: compiled plan, {pool} threads"), format!("{:.3}", r_plan_n.median_secs() * 1e3)],
-        vec![format!("request: compiled plan, {pool} limb threads"), format!("{:.3}", r_plan_limb.median_secs() * 1e3)],
+        vec!["request: raw plan, 1 thread".into(), format!("{:.3}", r_plan_raw.median_secs() * 1e3)],
+        vec!["request: optimized plan, 1 thread".into(), format!("{:.3}", r_plan_1.median_secs() * 1e3)],
+        vec![format!("request: optimized plan, {pool} threads"), format!("{:.3}", r_plan_n.median_secs() * 1e3)],
+        vec![format!("request: optimized plan, {pool} limb threads"), format!("{:.3}", r_plan_limb.median_secs() * 1e3)],
     ];
     println!("{}", ascii_table(&["path", "median ms"], &rows));
     println!(
-        "plan: {} ops, {} masks, {} waves, depth {}",
+        "optimized plan: {} ops ({} raw), {} masks, {} waves, {} rot groups, depth {}",
         plan.ops.len(),
+        raw.ops.len(),
         plan.masks.len(),
         plan.waves.len(),
+        plan.groups.len(),
         plan.levels_needed
     );
 
+    let counts_json = |c: &OpCounts| -> String {
+        let vals: Vec<String> = OpCounts::field_names()
+            .iter()
+            .zip(c.to_array())
+            .map(|(n, v)| format!("\"{n}\": {v}"))
+            .collect();
+        format!("{{{}}}", vals.join(", "))
+    };
+    let passes_json: Vec<String> = plan
+        .opt_passes
+        .iter()
+        .map(|p| {
+            format!(
+                "{{\"name\": \"{}\", \"before\": {}, \"after\": {}}}",
+                p.name,
+                counts_json(&p.before),
+                counts_json(&p.after)
+            )
+        })
+        .collect();
     let json = format!(
-        "{{\n  \"n\": {},\n  \"levels\": {},\n  \"ops\": {},\n  \"masks\": {},\n  \
+        "{{\n  \"n\": {},\n  \"levels\": {},\n  \"ops\": {},\n  \"ops_raw\": {},\n  \
+         \"masks\": {},\n  \"rot_groups\": {},\n  \
          \"compile_s\": {:.6},\n  \"prepare_s\": {:.6},\n  \"interpreted_cold_req_s\": {:.6},\n  \
-         \"interpreted_warm_req_s\": {:.6},\n  \"compiled_req_s\": {:.6},\n  \
+         \"interpreted_warm_req_s\": {:.6},\n  \"compiled_raw_req_s\": {:.6},\n  \
+         \"compiled_req_s\": {:.6},\n  \
          \"compiled_req_par_s\": {:.6},\n  \"compiled_req_limb_par_s\": {:.6},\n  \
          \"pool_threads\": {},\n  \
-         \"speedup_vs_cold\": {:.3}\n}}\n",
+         \"speedup_vs_cold\": {:.3},\n  \
+         \"opt\": {{\n    \"ks_decomp_raw\": {},\n    \"ks_decomp_opt\": {},\n    \
+         \"total_ops_raw\": {},\n    \"total_ops_opt\": {},\n    \"passes\": [{}]\n  }}\n}}\n",
         params.n,
         levels,
         plan.ops.len(),
+        raw.ops.len(),
         plan.masks.len(),
+        plan.groups.len(),
         c_compile.median_secs(),
         c_prepare.median_secs(),
         r_interp_cold.median_secs(),
         r_interp_warm.median_secs(),
+        r_plan_raw.median_secs(),
         r_plan_1.median_secs(),
         r_plan_n.median_secs(),
         r_plan_limb.median_secs(),
         pool,
         r_interp_cold.median_secs() / r_plan_1.median_secs().max(1e-12),
+        raw.counts.ks_decomp,
+        plan.counts.ks_decomp,
+        raw.counts.total_ops(),
+        plan.counts.total_ops(),
+        passes_json.join(", "),
     );
     std::fs::write("BENCH_plan.json", &json).expect("writing BENCH_plan.json");
     println!("wrote BENCH_plan.json");

@@ -96,11 +96,45 @@ define_op_counters!(
     /// Tasks executed by the plan executor's wavefront worker pool
     /// (bumped only when executing with >1 thread).
     pool_tasks,
+    /// Rotation-path RNS digit decompositions performed: one per plain
+    /// `Rot`, one per hoisted `RotGroup` — the quantity Halevi–Shoup
+    /// hoisting shares (DESIGN.md S17). Relinearization decompositions
+    /// are costed by `cmult_limbs_sq`, not here.
+    ks_decomp,
+    /// Σ limbs² per rotation-path digit decomposition (spread + forward
+    /// NTT work of one full decomposition is quadratic in the limb count).
+    ks_decomp_limbs_sq,
+    /// Hoisted rotation groups executed (0 on unoptimized plans).
+    rot_group,
 );
 
 impl OpCounts {
     pub fn total_ops(&self) -> u64 {
         self.add + self.pmult + self.cmult + self.rot
+    }
+
+    /// The cost-bearing counters the optimizer must never increase
+    /// (DESIGN.md S17): every HE-work field, excluding the serving-path
+    /// bookkeeping (`plan_cache_*`, `pool_tasks`) and the structural
+    /// `rot_group` tally (grouping *adds* groups while strictly removing
+    /// decomposition work — the gate below is over work, not structure).
+    pub fn cost_fields(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("add", self.add),
+            ("pmult", self.pmult),
+            ("cmult", self.cmult),
+            ("rot", self.rot),
+            ("rescale", self.rescale),
+            ("add_limbs", self.add_limbs),
+            ("pmult_limbs", self.pmult_limbs),
+            ("cmult_limbs", self.cmult_limbs),
+            ("rot_limbs", self.rot_limbs),
+            ("rescale_limbs", self.rescale_limbs),
+            ("cmult_limbs_sq", self.cmult_limbs_sq),
+            ("rot_limbs_sq", self.rot_limbs_sq),
+            ("ks_decomp", self.ks_decomp),
+            ("ks_decomp_limbs_sq", self.ks_decomp_limbs_sq),
+        ]
     }
 }
 
@@ -279,6 +313,17 @@ impl Evaluator {
         self.apply_galois(a, enc.conjugation_galois_element())
     }
 
+    /// Cached NTT-domain automorphism permutation for Galois element `g`.
+    fn auto_perm(&self, g: usize) -> Arc<Vec<usize>> {
+        let mut cache = self.auto_perms.lock().unwrap();
+        cache
+            .entry(g)
+            .or_insert_with(|| {
+                Arc::new(super::poly::ntt_automorphism_permutation(self.ctx.n, g))
+            })
+            .clone()
+    }
+
     fn apply_galois(&self, a: &Ciphertext, g: usize) -> Ciphertext {
         let ctx = &self.ctx;
         let key = self
@@ -287,15 +332,7 @@ impl Evaluator {
             .get(&g)
             .unwrap_or_else(|| panic!("no galois key for element {g}"));
         // c0: permute directly in NTT domain (no NTT round-trip, §Perf)
-        let perm = {
-            let mut cache = self.auto_perms.lock().unwrap();
-            cache
-                .entry(g)
-                .or_insert_with(|| {
-                    Arc::new(super::poly::ntt_automorphism_permutation(ctx.n, g))
-                })
-                .clone()
-        };
+        let perm = self.auto_perm(g);
         let tc0 = a.c0.automorphism_ntt(&perm);
         // c1: key switching needs coefficient-form digits
         let mut c1 = a.c1.clone();
@@ -311,11 +348,108 @@ impl Evaluator {
         self.counters
             .rot_limbs_sq
             .fetch_add((r0.nq * r0.nq) as u64, Ordering::Relaxed);
+        self.counters.ks_decomp.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .ks_decomp_limbs_sq
+            .fetch_add((r0.nq * r0.nq) as u64, Ordering::Relaxed);
         Ciphertext {
             c0: r0,
             c1: u1,
             scale: a.scale,
         }
+    }
+
+    /// Hoisted rotation group (Halevi–Shoup; DESIGN.md S17): rotate `a`
+    /// by every step in `ks` while performing the RNS digit decomposition
+    /// of `c1` **once** for the whole group, instead of once per step.
+    ///
+    /// Bit-identity with per-step [`Evaluator::rotate`] rests on two
+    /// exact commutations. (1) The centered digit lift in
+    /// [`Evaluator::ks_digit`] commutes with the Galois automorphism's
+    /// per-limb negation — `spread(−r mod q_i) = −spread(r) mod q_j`
+    /// coefficient-for-coefficient — so the automorphism of a decomposed
+    /// digit *is* the digit of the automorphed polynomial. (2) Applying
+    /// the automorphism in NTT form is a pure slot permutation, so
+    /// `perm_g(NTT(p)) = NTT(τ_g(p))` exactly. Everything downstream
+    /// (mul_acc order, ModDown) is the same integer arithmetic in the
+    /// same order as the per-step path, hence identical output bits —
+    /// the property `rust/tests/property_suite.rs` and the eval unit
+    /// tests pin down.
+    ///
+    /// Counter semantics: each produced rotation tallies as a `rot`
+    /// (unchanged vs the per-step path); the shared decomposition tallies
+    /// one `ks_decomp` for the whole group (vs one per step), plus one
+    /// `rot_group`.
+    pub fn rotate_group(&self, enc: &Encoder, a: &Ciphertext, ks: &[usize]) -> Vec<Ciphertext> {
+        let ctx = &self.ctx;
+        let half = ctx.slots();
+        assert!(!ks.is_empty(), "rotate_group needs at least one step");
+        let nq = a.c0.nq;
+        // shared part: c1 to coefficient form once
+        let mut c1 = a.c1.clone();
+        c1.ntt_inverse(ctx);
+        // one lane per step: (perm, key, acc0, acc1)
+        let mut lanes: Vec<(Arc<Vec<usize>>, &KeySwitchKey, RnsPoly, RnsPoly)> = ks
+            .iter()
+            .map(|&k| {
+                let k = k % half;
+                assert!(k > 0, "rotate_group: rotation by 0 must be elided by the caller");
+                let g = enc.rotation_galois_element(k);
+                let key = self
+                    .keys
+                    .galois
+                    .get(&g)
+                    .unwrap_or_else(|| panic!("no galois key for element {g}"));
+                (
+                    self.auto_perm(g),
+                    key,
+                    RnsPoly::zero(ctx, nq, true, true),
+                    RnsPoly::zero(ctx, nq, true, true),
+                )
+            })
+            .collect();
+        // decompose-once: each digit is spread + NTT'd a single time, then
+        // permuted per lane (only one digit is live at a time)
+        for i in 0..nq {
+            let mut digit = self.ks_digit(&c1, i);
+            digit.ntt_forward(ctx);
+            for (perm, key, acc0, acc1) in lanes.iter_mut() {
+                let td = digit.automorphism_ntt(&perm[..]);
+                let kb = key.digits[i].b.subset(nq, true);
+                let ka = key.digits[i].a.subset(nq, true);
+                acc0.mul_acc(ctx, &td, &kb);
+                acc1.mul_acc(ctx, &td, &ka);
+            }
+        }
+        let mut out = Vec::with_capacity(lanes.len());
+        for (perm, _key, mut acc0, mut acc1) in lanes {
+            acc0.ntt_inverse(ctx);
+            acc1.ntt_inverse(ctx);
+            let mut u0 = self.mod_down(&acc0);
+            let mut u1 = self.mod_down(&acc1);
+            u0.ntt_forward(ctx);
+            u1.ntt_forward(ctx);
+            let mut r0 = a.c0.automorphism_ntt(&perm);
+            r0.add_assign(ctx, &u0);
+            self.counters.rot.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .rot_limbs
+                .fetch_add(r0.nq as u64, Ordering::Relaxed);
+            self.counters
+                .rot_limbs_sq
+                .fetch_add((r0.nq * r0.nq) as u64, Ordering::Relaxed);
+            out.push(Ciphertext {
+                c0: r0,
+                c1: u1,
+                scale: a.scale,
+            });
+        }
+        self.counters.rot_group.fetch_add(1, Ordering::Relaxed);
+        self.counters.ks_decomp.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .ks_decomp_limbs_sq
+            .fetch_add((nq * nq) as u64, Ordering::Relaxed);
+        out
     }
 
     // ------------------------------------------------------------ rescale
@@ -376,34 +510,56 @@ impl Evaluator {
         self.key_switch_coeff(&dc, key)
     }
 
+    /// Digit `i` of a coefficient-form polynomial `d`: the residues
+    /// `[d]_{q_i}` lifted **centered** (values above `q_i/2` spread as
+    /// `−(q_i − r)`) over the extended basis `Q_ℓ ∪ {P}`, per-target-limb
+    /// independent → limb-parallel (DESIGN.md S14).
+    ///
+    /// The centered lift is what makes decomposition commute bit-exactly
+    /// with the Galois automorphism — `spread_j(q_i − r) = −spread_j(r)
+    /// mod q_j` for every target limb `j` (and `neg(0) = 0` on both
+    /// sides) — the invariant [`Evaluator::rotate_group`]'s hoisting
+    /// relies on. It also halves the digit magnitude bound, so key-switch
+    /// noise only improves over the plain lift.
+    fn ks_digit(&self, d: &RnsPoly, i: usize) -> RnsPoly {
+        let ctx = &self.ctx;
+        assert!(!d.is_ntt);
+        let nq = d.nq;
+        let n = ctx.n;
+        let q_i = ctx.moduli[i];
+        let half = q_i / 2;
+        let src = &d.limbs[i];
+        let mut digit = RnsPoly::zero(ctx, nq, true, false);
+        super::poly::par_limbs(&mut digit.limbs, |j, dst| {
+            if j == i {
+                dst.copy_from_slice(src);
+            } else {
+                let m = if j < nq { j } else { ctx.moduli.len() };
+                let q_j = ctx.modulus(m);
+                let br = ctx.barrett_for(m);
+                for t in 0..n {
+                    let r = src[t];
+                    dst[t] = if r > half {
+                        zq::neg_mod(br.reduce_u64(q_i - r), q_j)
+                    } else {
+                        br.reduce_u64(r)
+                    };
+                }
+            }
+        });
+        digit
+    }
+
     /// Hybrid key switch, coefficient-form input. Returns NTT-form pair
     /// over the same Q limbs as the input.
     fn key_switch_coeff(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
         let ctx = &self.ctx;
         assert!(!d.is_ntt && !d.has_special);
         let nq = d.nq;
-        let n = ctx.n;
         let mut acc0 = RnsPoly::zero(ctx, nq, true, true);
         let mut acc1 = RnsPoly::zero(ctx, nq, true, true);
         for i in 0..nq {
-            // digit i: the integer residues [d]_{q_i}, spread over Q_ℓ ∪ {P}
-            // (per-target-limb independent → limb-parallel, DESIGN.md S14)
-            let src = &d.limbs[i];
-            let mut digit = RnsPoly::zero(ctx, nq, true, false);
-            super::poly::par_limbs(&mut digit.limbs, |j, dst| {
-                if j == i {
-                    dst.copy_from_slice(src);
-                } else {
-                    let br = if j < nq {
-                        ctx.barrett_for(j)
-                    } else {
-                        ctx.barrett_for(ctx.moduli.len())
-                    };
-                    for t in 0..n {
-                        dst[t] = br.reduce_u64(src[t]);
-                    }
-                }
-            });
+            let mut digit = self.ks_digit(d, i);
             digit.ntt_forward(ctx);
             let kb = key.digits[i].b.subset(nq, true);
             let ka = key.digits[i].a.subset(nq, true);
@@ -644,6 +800,54 @@ mod tests {
             let want = (alpha * xs[i]).powi(2) + w1 * xs[i] + b;
             assert!((got[i] - want).abs() < 2e-2, "slot {i}: {} vs {want}", got[i]);
         }
+    }
+
+    #[test]
+    fn test_rotate_group_bit_identical_to_single_rotations() {
+        // the decompose-once Halevi–Shoup path must equal the per-step
+        // path down to the last ciphertext bit (DESIGN.md S17)
+        let mut f = fixture(3, 9, &[1, 3, 64, 100]);
+        let half = f.ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| ((i * 13 % 29) as f64 - 14.0) / 14.0).collect();
+        let ca = enc_vec(&mut f, &a);
+        let ks = [1usize, 3, 64, 100];
+        let singles: Vec<Ciphertext> =
+            ks.iter().map(|&k| f.ev.rotate(&f.enc, &ca, k)).collect();
+        f.ev.counters.reset();
+        let grouped = f.ev.rotate_group(&f.enc, &ca, &ks);
+        assert_eq!(grouped.len(), ks.len());
+        for (k, (g, s)) in ks.iter().zip(grouped.iter().zip(&singles)) {
+            assert_eq!(g, s, "hoisted rotation by {k} changed ciphertext bits");
+        }
+        // ...and at a lower level (fewer limbs), after a rescale
+        let low = f.ev.rescale(&f.ev.mul(&ca, &ca));
+        let single_low = f.ev.rotate(&f.enc, &low, 3);
+        let grouped_low = f.ev.rotate_group(&f.enc, &low, &[3]);
+        assert_eq!(grouped_low[0], single_low);
+    }
+
+    #[test]
+    fn test_rotate_group_counter_semantics() {
+        let mut f = fixture(2, 8, &[1, 2, 5]);
+        let a = vec![0.25; f.ctx.slots()];
+        let ca = enc_vec(&mut f, &a);
+        f.ev.counters.reset();
+        let _ = f.ev.rotate_group(&f.enc, &ca, &[1, 2, 5]);
+        let c = f.ev.counters.snapshot();
+        assert_eq!(c.rot, 3, "each produced rotation tallies as a rot");
+        assert_eq!(c.rot_group, 1);
+        assert_eq!(c.ks_decomp, 1, "one shared decomposition for the group");
+        let nq = ca.c0.nq as u64;
+        assert_eq!(c.ks_decomp_limbs_sq, nq * nq);
+        assert_eq!(c.rot_limbs, 3 * nq);
+        // per-step path: one decomposition per rotation
+        f.ev.counters.reset();
+        for k in [1usize, 2, 5] {
+            let _ = f.ev.rotate(&f.enc, &ca, k);
+        }
+        let c = f.ev.counters.snapshot();
+        assert_eq!(c.ks_decomp, 3);
+        assert_eq!(c.rot_group, 0);
     }
 
     #[test]

@@ -9,9 +9,9 @@
 //! | `plan` | print the HE parameter plan (paper Table 6) |
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
-//! | `infer --nl K [--encrypted] [--batch B] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16) |
-//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
-//! | `keygen --nl K [--batch B] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
+//! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17) |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
+//! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
 //! | `encrypt --key F --input X.lgt --out R.cts [--batch B]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip) |
 //! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
 //!
@@ -141,6 +141,7 @@ fn cmd_predict(args: &[String]) -> Result<()> {
 fn cmd_infer(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
     let encrypted = args.iter().any(|a| a == "--encrypted");
+    let optimize = !args.iter().any(|a| a == "--no-opt");
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     let limb_threads: usize =
@@ -168,7 +169,7 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             allow_insecure: true,
         };
         crate::ckks::set_limb_parallelism(limb_threads);
-        let opts = crate::he_infer::PlanOptions { batch, ..Default::default() };
+        let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
         let sess =
             crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
         // demo batch: the example clip slot-packed B times (a deployment
@@ -237,8 +238,12 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
         crate::graph::Graph::ntu_rgbd(),
     )?;
     // --batch B: the Galois set also covers the block-closed batch-B
-    // plan's wrap rotations, so this tenant can ship slot-packed bundles
-    let opts = crate::he_infer::PlanOptions { batch, ..Default::default() };
+    // plan's wrap rotations, so this tenant can ship slot-packed bundles.
+    // --no-opt keys against the raw plan — same rotation set either way
+    // (the optimizer never adds or drops a distinct step), kept for
+    // symmetry with the serving flags.
+    let optimize = !args.iter().any(|a| a == "--no-opt");
+    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
     // seed policy: explicit --seed is reproducible (tests) but derivable;
     // the default seeds full 256-bit state from the OS entropy device
     let (client, key_set) = if let Some(s) = arg_value(args, "--seed") {
@@ -438,6 +443,7 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
     );
     let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    let optimize = !args.iter().any(|a| a == "--no-opt");
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
     let capacity: usize =
@@ -452,13 +458,16 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
     crate::ckks::set_limb_parallelism(limb_threads);
     let cost = OpCostModel::reference();
     let metrics = std::sync::Arc::new(crate::coordinator::Metrics::default());
-    let (router, executor) = crate::coordinator::wire_from_artifacts(
+    let (router, mut executor) = crate::coordinator::wire_from_artifacts(
         Path::new("artifacts"),
         &cost,
         threads,
         capacity,
         metrics.clone(),
     )?;
+    // tenant keys cover the same rotation set either way (the optimizer
+    // never adds or drops a distinct step), so --no-opt is safe here
+    executor.set_optimize(optimize);
     let key_set = crate::wire::EvalKeySet::from_bytes(&std::fs::read(Path::new(&eval_keys))?)?;
     let variant = key_set.variant.clone();
     let tenant_params = key_set.params.clone();
@@ -512,6 +521,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let requests: usize = arg_value(args, "--requests").unwrap_or_else(|| "64".into()).parse()?;
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    let optimize = !args.iter().any(|a| a == "--no-opt");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
@@ -526,6 +536,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     ) = match tier.as_str() {
         "plaintext" => {
             anyhow::ensure!(batch <= 1, "--batch is a slot-packing knob of --tier he");
+            anyhow::ensure!(optimize, "--no-opt is a HePlan knob of --tier he");
             let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
             (router, std::sync::Arc::new(exec))
         }
@@ -536,6 +547,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 threads,
                 batch,
             )?;
+            exec.set_optimize(optimize);
             exec.set_metrics(metrics.clone());
             (router, std::sync::Arc::new(exec))
         }

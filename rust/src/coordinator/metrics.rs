@@ -35,6 +35,12 @@ pub struct Metrics {
     /// Block copies available, summed over slot-batched jobs (the
     /// occupancy denominator).
     pub slots_capacity: AtomicU64,
+    /// HE ops removed by the plan optimizer's CSE/DCE passes, summed over
+    /// fresh plan compiles (he_infer::opt; DESIGN.md S17).
+    pub opt_ops_removed: AtomicU64,
+    /// Rotations re-homed into hoisted `RotGroup`s (decompose-once key
+    /// switching), summed over fresh plan compiles.
+    pub opt_rots_grouped: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -97,7 +103,7 @@ impl Metrics {
         format!(
             "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
              key_registry={}h/{}m/{}e slot_batch={}j/{}r fill={:.2} occ={:.2} \
-             mean={:?} p50≤{:?} p99≤{:?}",
+             opt={}ops/{}rots mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -111,6 +117,8 @@ impl Metrics {
             self.batch_requests.load(Ordering::Relaxed),
             self.batch_fill(),
             self.slot_occupancy(),
+            self.opt_ops_removed.load(Ordering::Relaxed),
+            self.opt_rots_grouped.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
@@ -158,5 +166,14 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("slot_batch=2j/6r"), "summary: {s}");
         assert!(s.contains("occ=0.75"), "summary: {s}");
+    }
+
+    #[test]
+    fn test_optimizer_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.opt_ops_removed.fetch_add(17, Ordering::Relaxed);
+        m.opt_rots_grouped.fetch_add(40, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("opt=17ops/40rots"), "summary: {s}");
     }
 }

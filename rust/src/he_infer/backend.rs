@@ -38,6 +38,17 @@ pub trait HeBackend {
     fn rotate(&self, a: &Self::Ct, k: usize) -> Self::Ct;
     fn rescale(&self, a: &Self::Ct) -> Self::Ct;
 
+    /// Hoisted rotation group (`HeOp::RotGroup`, DESIGN.md S17): rotate
+    /// `a` by every step in `ks`, sharing the key-switch digit
+    /// decomposition where the backend supports it. The default falls
+    /// back to per-step [`HeBackend::rotate`] — correct but without the
+    /// shared decomposition, so its `ks_decomp` accounting is the
+    /// per-step one; the real and counting backends override it with
+    /// group-exact semantics.
+    fn rotate_group(&self, a: &Self::Ct, ks: &[usize]) -> Vec<Self::Ct> {
+        ks.iter().map(|&k| self.rotate(a, k)).collect()
+    }
+
     fn op_counts(&self) -> OpCounts;
     fn reset_counts(&self);
 }
@@ -140,6 +151,10 @@ impl<'e> HeBackend for CkksBackend<'e> {
 
     fn rotate(&self, a: &Ciphertext, k: usize) -> Ciphertext {
         self.engine.eval.rotate(&self.engine.encoder, a, k)
+    }
+
+    fn rotate_group(&self, a: &Ciphertext, ks: &[usize]) -> Vec<Ciphertext> {
+        self.engine.eval.rotate_group(&self.engine.encoder, a, ks)
     }
 
     fn rescale(&self, a: &Ciphertext) -> Ciphertext {
@@ -268,7 +283,22 @@ impl HeBackend for CountingBackend {
         }
         self.bump(&self.counters.rot, &self.counters.rot_limbs, a.level);
         self.bump_sq(&self.counters.rot_limbs_sq, a.level);
+        self.counters.ks_decomp.fetch_add(1, Ordering::Relaxed);
+        self.bump_sq(&self.counters.ks_decomp_limbs_sq, a.level);
         *a
+    }
+
+    fn rotate_group(&self, a: &CountCt, ks: &[usize]) -> Vec<CountCt> {
+        // group-exact accounting, mirroring Evaluator::rotate_group:
+        // one shared decomposition, one rot per produced rotation
+        for _ in ks {
+            self.bump(&self.counters.rot, &self.counters.rot_limbs, a.level);
+            self.bump_sq(&self.counters.rot_limbs_sq, a.level);
+        }
+        self.counters.rot_group.fetch_add(1, Ordering::Relaxed);
+        self.counters.ks_decomp.fetch_add(1, Ordering::Relaxed);
+        self.bump_sq(&self.counters.ks_decomp_limbs_sq, a.level);
+        vec![*a; ks.len()]
     }
 
     fn rescale(&self, a: &CountCt) -> CountCt {

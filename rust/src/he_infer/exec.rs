@@ -66,6 +66,20 @@ pub fn execute_with_backend<B: HeBackend>(
                 .as_ref()
                 .ok_or_else(|| anyhow!("op {i}: register {r} not ready"))
         };
+        // the multi-destination op first (hoisted rotation fan, S17)
+        if let HeOp::RotGroup { src, group } = *op {
+            let spec = plan
+                .groups
+                .get(group as usize)
+                .ok_or_else(|| anyhow!("op {i}: rotation group {group} out of range"))?;
+            let ks: Vec<usize> = spec.iter().map(|&(k, _)| k as usize).collect();
+            let outs = be.rotate_group(get(src)?, &ks);
+            ensure!(outs.len() == ks.len(), "op {i}: backend group arity mismatch");
+            for (&(_, dst), out) in spec.iter().zip(outs) {
+                regs[dst as usize] = Some(out);
+            }
+            continue;
+        }
         let out = match *op {
             HeOp::Rotate { src, k, .. } => be.rotate(get(src)?, k as usize),
             HeOp::MulPlain { src, mask, .. } => {
@@ -82,6 +96,7 @@ pub fn execute_with_backend<B: HeBackend>(
             HeOp::Sub { a, b, .. } => be.sub(get(a)?, get(b)?),
             HeOp::Mul { a, b, .. } => be.mul(get(a)?, get(b)?),
             HeOp::Rescale { src, .. } => be.rescale(get(src)?),
+            HeOp::RotGroup { .. } => unreachable!("handled above"),
         };
         regs[op.dst() as usize] = Some(out);
     }
@@ -120,27 +135,52 @@ impl PreparedPlan {
         Ok(PreparedPlan { plan, masks })
     }
 
+    /// Execute one op, writing its destination register(s) — plural for
+    /// the hoisted [`HeOp::RotGroup`], which is one schedulable unit that
+    /// produces every rotation of its fan from a shared decomposition.
     fn exec_op(
         &self,
         op: HeOp,
         regs: &[OnceLock<Ciphertext>],
         eval: &Evaluator,
         enc: &Encoder,
-    ) -> Result<Ciphertext> {
+    ) -> Result<()> {
         let get = |r: u32| -> Result<&Ciphertext> {
             regs[r as usize]
                 .get()
                 .ok_or_else(|| anyhow!("register {r} not ready (schedule violation)"))
         };
-        Ok(match op {
-            HeOp::Rotate { src, k, .. } => eval.rotate(enc, get(src)?, k as usize),
-            HeOp::MulPlain { src, mask, .. } => eval.mul_plain(get(src)?, &self.masks[mask as usize]),
-            HeOp::AddPlain { src, mask, .. } => eval.add_plain(get(src)?, &self.masks[mask as usize]),
-            HeOp::Add { a, b, .. } => eval.add(get(a)?, get(b)?),
-            HeOp::Sub { a, b, .. } => eval.sub(get(a)?, get(b)?),
-            HeOp::Mul { a, b, .. } => eval.mul(get(a)?, get(b)?),
-            HeOp::Rescale { src, .. } => eval.rescale(get(src)?),
-        })
+        let set = |r: u32, ct: Ciphertext| -> Result<()> {
+            regs[r as usize]
+                .set(ct)
+                .map_err(|_| anyhow!("register {r} written twice"))
+        };
+        match op {
+            HeOp::RotGroup { src, group } => {
+                let spec = self
+                    .plan
+                    .groups
+                    .get(group as usize)
+                    .ok_or_else(|| anyhow!("rotation group {group} out of range"))?;
+                let ks: Vec<usize> = spec.iter().map(|&(k, _)| k as usize).collect();
+                let outs = eval.rotate_group(enc, get(src)?, &ks);
+                for (&(_, dst), out) in spec.iter().zip(outs) {
+                    set(dst, out)?;
+                }
+            }
+            HeOp::Rotate { src, k, dst } => set(dst, eval.rotate(enc, get(src)?, k as usize))?,
+            HeOp::MulPlain { src, mask, dst } => {
+                set(dst, eval.mul_plain(get(src)?, &self.masks[mask as usize]))?
+            }
+            HeOp::AddPlain { src, mask, dst } => {
+                set(dst, eval.add_plain(get(src)?, &self.masks[mask as usize]))?
+            }
+            HeOp::Add { a, b, dst } => set(dst, eval.add(get(a)?, get(b)?))?,
+            HeOp::Sub { a, b, dst } => set(dst, eval.sub(get(a)?, get(b)?))?,
+            HeOp::Mul { a, b, dst } => set(dst, eval.mul(get(a)?, get(b)?))?,
+            HeOp::Rescale { src, dst } => set(dst, eval.rescale(get(src)?))?,
+        }
+        Ok(())
     }
 
     /// Execute the plan on real ciphertexts. `threads > 1` fans each
@@ -197,11 +237,7 @@ impl PreparedPlan {
         if threads == 1 {
             for wave in &plan.waves {
                 for &oi in wave {
-                    let op = plan.ops[oi as usize];
-                    let out = self.exec_op(op, &regs, eval, enc)?;
-                    regs[op.dst() as usize]
-                        .set(out)
-                        .map_err(|_| anyhow!("register written twice"))?;
+                    self.exec_op(plan.ops[oi as usize], &regs, eval, enc)?;
                 }
             }
         } else {
@@ -226,8 +262,7 @@ impl PreparedPlan {
                                     }),
                                 );
                                 match result {
-                                    Ok(Ok(out)) => {
-                                        let _ = regs[op.dst() as usize].set(out);
+                                    Ok(Ok(())) => {
                                         eval.counters
                                             .pool_tasks
                                             .fetch_add(1, Ordering::Relaxed);
@@ -282,6 +317,9 @@ pub struct PlanKey {
     pub fuse_activations: bool,
     /// Slot-batch size the plan was compiled for (masks differ per size).
     pub batch: usize,
+    /// Whether the optimizer pipeline ran (optimized and raw plans are
+    /// different op lists; DESIGN.md S17).
+    pub optimize: bool,
 }
 
 impl PlanKey {
@@ -294,6 +332,7 @@ impl PlanKey {
             use_bsgs: opts.use_bsgs,
             fuse_activations: opts.fuse_activations,
             batch: opts.batch,
+            optimize: opts.optimize,
         }
     }
 }
@@ -353,11 +392,29 @@ pub fn plan_for(
     opts: PlanOptions,
 ) -> Result<(Arc<HePlan>, bool)> {
     match cached {
-        Some(p) if p.chain == *chain && p.layout == layout && p.batch == opts.batch => {
+        Some(p)
+            if p.chain == *chain
+                && p.layout == layout
+                && p.batch == opts.batch
+                && p.optimized == opts.optimize =>
+        {
             Ok((p, true))
         }
         _ => Ok((Arc::new(compile(model, layout, chain, opts)?), false)),
     }
+}
+
+/// Mirror a freshly compiled plan's optimizer savings into the
+/// coordinator metrics (no-op for raw plans): ops removed by CSE/DCE and
+/// rotations re-homed into hoisted groups. Shared by the trusted
+/// ([`HeExecutor`]) and wire (`wire::WireExecutor`) tiers.
+pub fn record_opt_metrics(metrics: &Metrics, plan: &HePlan) {
+    if let (Some(first), Some(last)) = (plan.opt_passes.first(), plan.opt_passes.last()) {
+        let removed = first.before.total_ops().saturating_sub(last.after.total_ops());
+        metrics.opt_ops_removed.fetch_add(removed, Ordering::Relaxed);
+    }
+    let grouped: u64 = plan.groups.iter().map(|g| g.len() as u64).sum();
+    metrics.opt_rots_grouped.fetch_add(grouped, Ordering::Relaxed);
 }
 
 /// Get-or-compute a per-variant slot capacity from the serving geometry
@@ -604,6 +661,14 @@ impl HeExecutor {
         self.max_batch = max_batch.max(1);
     }
 
+    /// Toggle the HePlan optimizer pipeline (DESIGN.md S17; the CLI's
+    /// `--no-opt`). Call before the first request: the flag is part of
+    /// the plan-cache identity, so flipping it later just compiles a
+    /// second family of plans.
+    pub fn set_optimize(&mut self, optimize: bool) {
+        self.opts.optimize = optimize;
+    }
+
     /// Mirror plan-cache hits/misses into the coordinator metrics (call
     /// before handing the executor to `Coordinator::start_with_metrics`).
     pub fn set_metrics(&mut self, metrics: Arc<Metrics>) {
@@ -649,6 +714,9 @@ impl HeExecutor {
         let (session, plan, was_cached) =
             HeSession::with_geometry(model, layout, params, opts, self.seed, cached)?;
         if !was_cached {
+            if let Some(m) = &self.metrics {
+                record_opt_metrics(m, &plan);
+            }
             self.plans.lock().unwrap().entry(key_probe).or_insert(plan);
         }
         let session = {

@@ -4,13 +4,16 @@
 //! abstraction that lets the same engine run on real CKKS ciphertexts or
 //! as a symbolic op counter, and the compile-once **HePlan** path — a
 //! `plan::compile` pass that turns the engine's interpreted walk into a
-//! serializable IR executed per request by `exec`'s limb-/op-parallel
-//! executor with pre-encoded masks.
+//! serializable IR, run through the bit-exact `opt` pass pipeline
+//! (CSE → DCE → hoisted rotation grouping, DESIGN.md S17) and executed
+//! per request by `exec`'s limb-/op-parallel executor with pre-encoded
+//! masks.
 
 pub mod backend;
 pub mod engine;
 pub mod exec;
 pub mod level_plan;
+pub mod opt;
 pub mod plan;
 
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
@@ -19,7 +22,7 @@ pub use exec::{
     execute_with_backend, session_geometry, HeExecutor, HeSession, PlanKey, PreparedPlan,
 };
 pub use level_plan::{HePlanParams, Method, VariantShape};
-pub use plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
+pub use plan::{compile, HeOp, HePlan, PassStat, PlanChain, PlanOptions};
 
 use crate::ama::{encrypt_clip, encrypt_clip_batch, AmaLayout};
 use crate::ckks::{CkksEngine, CkksParams};

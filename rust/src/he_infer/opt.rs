@@ -1,0 +1,458 @@
+//! The HePlan IR optimizer (DESIGN.md S17): a pass-manager pipeline over
+//! the compiled SSA op list that removes redundant work without changing
+//! a single output bit.
+//!
+//! Three passes, run in order by [`optimize`]:
+//!
+//! 1. **CSE** ([`cse_pass`]) — identical pure ops (`Rot(src, k)` pairs,
+//!    repeated mask `PMult`s/`AddPlain`s, duplicate `Add`/`Sub`/`Mul`/
+//!    `Rescale`) collapse to one computation. Masks are interned at
+//!    compile time, so mask-id equality *is* content equality. Operand
+//!    order is deliberately **not** canonicalized for the commutative
+//!    ops: `Add(a, b)` and `Add(b, a)` carry the first operand's scale
+//!    metadata, and bit-exactness outranks the marginal extra match.
+//! 2. **DCE** ([`dce_pass`]) — backward liveness from the logits root;
+//!    ops whose destinations are all dead are dropped (compile traces
+//!    are mostly live, but CSE rewrites and synthetic plans leave dead
+//!    tails).
+//! 3. **Rotation grouping** ([`group_pass`]) — every source register
+//!    with ≥ 2 distinct rotation steps (the GCNConv hoisted taps, BSGS
+//!    baby steps, batch wrap companions of DESIGN.md S16, the FC fan)
+//!    lowers into one [`HeOp::RotGroup`], executed by the decompose-once
+//!    Halevi–Shoup key switch (`Evaluator::rotate_group`): one RNS digit
+//!    decomposition shared across all Galois applications of the source.
+//!    Output bits are identical to per-step rotation (see the centered
+//!    digit-lift argument on `Evaluator::ks_digit`); the shared work
+//!    shows up as a strictly smaller `ks_decomp` count.
+//!
+//! Every pass is *bit-exact*: CSE/DCE only remove computations whose
+//! results are (exactly) recomputed elsewhere or never read, and grouping
+//! reorders nothing observable — so an optimized plan decrypts to the
+//! same logits bits as the raw trace, the property
+//! `rust/tests/property_suite.rs` and the golden-vector suite enforce
+//! across PRs. The pipeline never increases any cost-bearing `OpCounts`
+//! field or `levels_needed` (gated by `make bench-plan` in ci.sh).
+
+use super::plan::{schedule_waves, HeOp, HePlan, PassStat};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+
+/// Run the full pipeline (CSE → DCE → rotation grouping → compaction),
+/// recording each pass's before/after [`crate::ckks::OpCounts`] in
+/// `opt_passes` and stamping the result `optimized`. The input plan is
+/// untouched; the returned plan is validated.
+pub fn optimize(plan: &HePlan) -> Result<HePlan> {
+    let passes: [(&str, fn(&HePlan) -> Result<HePlan>); 3] =
+        [("cse", cse_pass), ("dce", dce_pass), ("rot-group", group_pass)];
+    let mut p = plan.clone();
+    let mut stats = Vec::with_capacity(passes.len());
+    for (name, pass) in passes {
+        let before = p.counts;
+        p = pass(&p)?;
+        stats.push(PassStat {
+            name: name.to_string(),
+            before,
+            after: p.counts,
+        });
+    }
+    compact(&mut p)?;
+    p.optimized = true;
+    p.opt_passes = stats;
+    // compact() just set counts from replay(), so only the schedule is
+    // left to check (full validate() would replay a third time)
+    p.check_schedule()?;
+    Ok(p)
+}
+
+/// Remap an op's source registers through `rename` (destinations are
+/// left alone — passes manage those).
+fn remap_sources(op: HeOp, rename: &[u32]) -> HeOp {
+    let r = |x: u32| rename[x as usize];
+    match op {
+        HeOp::Rotate { src, k, dst } => HeOp::Rotate { src: r(src), k, dst },
+        HeOp::MulPlain { src, mask, dst } => HeOp::MulPlain { src: r(src), mask, dst },
+        HeOp::AddPlain { src, mask, dst } => HeOp::AddPlain { src: r(src), mask, dst },
+        HeOp::Add { a, b, dst } => HeOp::Add { a: r(a), b: r(b), dst },
+        HeOp::Sub { a, b, dst } => HeOp::Sub { a: r(a), b: r(b), dst },
+        HeOp::Mul { a, b, dst } => HeOp::Mul { a: r(a), b: r(b), dst },
+        HeOp::Rescale { src, dst } => HeOp::Rescale { src: r(src), dst },
+        HeOp::RotGroup { src, group } => HeOp::RotGroup { src: r(src), group },
+    }
+}
+
+/// Value-numbering key: two ops with the same key compute bit-identical
+/// ciphertexts (sources already canonicalized through the rename map).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum Key {
+    Rot(u32, u32),
+    PMul(u32, u32),
+    PAdd(u32, u32),
+    Add(u32, u32),
+    Sub(u32, u32),
+    Mul(u32, u32),
+    Rescale(u32),
+}
+
+/// Common-subexpression elimination over the SSA trace. Duplicate ops are
+/// dropped and their destinations renamed to the first computation —
+/// the batch path's repeated per-diagonal mask PMults and any duplicated
+/// `Rot(src, step)` pairs collapse here.
+pub fn cse_pass(plan: &HePlan) -> Result<HePlan> {
+    let mut p = plan.clone();
+    let mut rename: Vec<u32> = (0..p.n_regs as u32).collect();
+    let mut seen: HashMap<Key, u32> = HashMap::new();
+    let mut ops = Vec::with_capacity(p.ops.len());
+    for op in &p.ops {
+        let op = remap_sources(*op, &rename);
+        match op {
+            HeOp::RotGroup { src, group } => {
+                // group elements are value definitions too: seed the map
+                // so later plain rotations of the same (src, k) dedup
+                let spec = p
+                    .groups
+                    .get(group as usize)
+                    .ok_or_else(|| anyhow!("cse: rotation group {group} out of range"))?;
+                for &(k, dst) in spec {
+                    seen.entry(Key::Rot(src, k)).or_insert(dst);
+                }
+                ops.push(op);
+            }
+            _ => {
+                let key = match op {
+                    HeOp::Rotate { src, k, .. } => Key::Rot(src, k),
+                    HeOp::MulPlain { src, mask, .. } => Key::PMul(src, mask),
+                    HeOp::AddPlain { src, mask, .. } => Key::PAdd(src, mask),
+                    HeOp::Add { a, b, .. } => Key::Add(a, b),
+                    HeOp::Sub { a, b, .. } => Key::Sub(a, b),
+                    HeOp::Mul { a, b, .. } => Key::Mul(a, b),
+                    HeOp::Rescale { src, .. } => Key::Rescale(src),
+                    HeOp::RotGroup { .. } => unreachable!(),
+                };
+                let dst = op.dst();
+                if let Some(&canon) = seen.get(&key) {
+                    rename[dst as usize] = canon;
+                    continue; // duplicate: computed already, drop the op
+                }
+                seen.insert(key, dst);
+                ops.push(op);
+            }
+        }
+    }
+    p.output = rename[p.output as usize];
+    p.ops = ops;
+    p.refresh()?;
+    Ok(p)
+}
+
+/// Dead-op elimination, backward from the logits root. A rotation group
+/// keeps only its live destinations; a group left with one lowers back
+/// to a plain [`HeOp::Rotate`].
+pub fn dce_pass(plan: &HePlan) -> Result<HePlan> {
+    let mut p = plan.clone();
+    let mut live = vec![false; p.n_regs];
+    live[p.output as usize] = true;
+    let mut keep = vec![false; p.ops.len()];
+    for (i, op) in p.ops.iter().enumerate().rev() {
+        let any_dst_live = match *op {
+            HeOp::RotGroup { group, .. } => p
+                .groups
+                .get(group as usize)
+                .ok_or_else(|| anyhow!("dce: rotation group {group} out of range"))?
+                .iter()
+                .any(|&(_, d)| live[d as usize]),
+            _ => live[op.dst() as usize],
+        };
+        if any_dst_live {
+            keep[i] = true;
+            let (s0, s1) = op.sources();
+            live[s0 as usize] = true;
+            if let Some(s1) = s1 {
+                live[s1 as usize] = true;
+            }
+        }
+    }
+    let mut groups: Vec<Vec<(u32, u32)>> = Vec::new();
+    let mut ops = Vec::with_capacity(p.ops.len());
+    for (i, op) in p.ops.iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        match *op {
+            HeOp::RotGroup { src, group } => {
+                let spec: Vec<(u32, u32)> = p.groups[group as usize]
+                    .iter()
+                    .copied()
+                    .filter(|&(_, d)| live[d as usize])
+                    .collect();
+                if spec.len() == 1 {
+                    let (k, dst) = spec[0];
+                    ops.push(HeOp::Rotate { src, k, dst });
+                } else {
+                    let gid = groups.len() as u32;
+                    groups.push(spec);
+                    ops.push(HeOp::RotGroup { src, group: gid });
+                }
+            }
+            other => ops.push(other),
+        }
+    }
+    p.ops = ops;
+    p.groups = groups;
+    p.refresh()?;
+    Ok(p)
+}
+
+/// Lower common-source rotation fans into [`HeOp::RotGroup`]s. Only the
+/// first occurrence of each distinct step per source joins the group
+/// (exact duplicates — which only exist if CSE was skipped — stay plain
+/// rotations); the group sits at the first member's position, which is
+/// topologically sound because its only dependency is the shared source.
+/// Fans of one stay plain `Rot` ops.
+pub fn group_pass(plan: &HePlan) -> Result<HePlan> {
+    let mut p = plan.clone();
+    // src -> fan of (k, dst), first occurrence per distinct k
+    let mut fans: HashMap<u32, Vec<(u32, u32)>> = HashMap::new();
+    for op in &p.ops {
+        if let HeOp::Rotate { src, k, dst } = *op {
+            let fan = fans.entry(src).or_default();
+            if !fan.iter().any(|&(fk, _)| fk == k) {
+                fan.push((k, dst));
+            }
+        }
+    }
+    let mut groups = p.groups.clone();
+    let mut ops = Vec::with_capacity(p.ops.len());
+    for op in &p.ops {
+        match *op {
+            HeOp::Rotate { src, k, dst } => {
+                let fan = &fans[&src];
+                if fan.len() < 2 {
+                    ops.push(*op);
+                    continue;
+                }
+                match fan.iter().position(|&(fk, fd)| (fk, fd) == (k, dst)) {
+                    Some(0) => {
+                        // first member: the whole fan lowers here
+                        let gid = groups.len() as u32;
+                        groups.push(fan.clone());
+                        ops.push(HeOp::RotGroup { src, group: gid });
+                    }
+                    Some(_) => {} // later member: emitted with the group
+                    None => ops.push(*op), // duplicate step: stays plain
+                }
+            }
+            other => ops.push(other),
+        }
+    }
+    p.ops = ops;
+    p.groups = groups;
+    p.refresh()?;
+    Ok(p)
+}
+
+/// Finishing sweep: renumber registers densely (inputs keep `0..n`),
+/// drop masks no surviving op references, and remap indices. Changes no
+/// counts — purely a canonical-form step so serialized optimized plans
+/// carry no dead registers or masks.
+fn compact(p: &mut HePlan) -> Result<()> {
+    // --- registers: definition order after the inputs
+    let mut reg_map: Vec<Option<u32>> = vec![None; p.n_regs];
+    for (r, m) in reg_map.iter_mut().enumerate().take(p.n_inputs) {
+        *m = Some(r as u32);
+    }
+    let mut next = p.n_inputs as u32;
+    for op in &p.ops {
+        match *op {
+            HeOp::RotGroup { group, .. } => {
+                for &(_, dst) in &p.groups[group as usize] {
+                    ensure!(reg_map[dst as usize].is_none(), "compact: dst defined twice");
+                    reg_map[dst as usize] = Some(next);
+                    next += 1;
+                }
+            }
+            _ => {
+                let dst = op.dst() as usize;
+                ensure!(reg_map[dst].is_none(), "compact: dst defined twice");
+                reg_map[dst] = Some(next);
+                next += 1;
+            }
+        }
+    }
+    let m = |r: u32| -> Result<u32> {
+        reg_map[r as usize].ok_or_else(|| anyhow!("compact: dangling register {r}"))
+    };
+    // --- masks: keep referenced ones in stable order
+    let mut mask_used = vec![false; p.masks.len()];
+    for op in &p.ops {
+        if let HeOp::MulPlain { mask, .. } | HeOp::AddPlain { mask, .. } = *op {
+            mask_used[mask as usize] = true;
+        }
+    }
+    let mut mask_map: Vec<Option<u32>> = vec![None; p.masks.len()];
+    let mut kept_masks = Vec::new();
+    for (i, used) in mask_used.iter().enumerate() {
+        if *used {
+            mask_map[i] = Some(kept_masks.len() as u32);
+            kept_masks.push(p.masks[i].clone());
+        }
+    }
+    // --- rewrite
+    for g in p.groups.iter_mut() {
+        for (_, dst) in g.iter_mut() {
+            *dst = m(*dst)?;
+        }
+    }
+    let ops = p
+        .ops
+        .iter()
+        .map(|op| -> Result<HeOp> {
+            Ok(match *op {
+                HeOp::Rotate { src, k, dst } => HeOp::Rotate { src: m(src)?, k, dst: m(dst)? },
+                HeOp::MulPlain { src, mask, dst } => HeOp::MulPlain {
+                    src: m(src)?,
+                    mask: mask_map[mask as usize]
+                        .ok_or_else(|| anyhow!("compact: dangling mask"))?,
+                    dst: m(dst)?,
+                },
+                HeOp::AddPlain { src, mask, dst } => HeOp::AddPlain {
+                    src: m(src)?,
+                    mask: mask_map[mask as usize]
+                        .ok_or_else(|| anyhow!("compact: dangling mask"))?,
+                    dst: m(dst)?,
+                },
+                HeOp::Add { a, b, dst } => HeOp::Add { a: m(a)?, b: m(b)?, dst: m(dst)? },
+                HeOp::Sub { a, b, dst } => HeOp::Sub { a: m(a)?, b: m(b)?, dst: m(dst)? },
+                HeOp::Mul { a, b, dst } => HeOp::Mul { a: m(a)?, b: m(b)?, dst: m(dst)? },
+                HeOp::Rescale { src, dst } => HeOp::Rescale { src: m(src)?, dst: m(dst)? },
+                HeOp::RotGroup { src, group } => HeOp::RotGroup { src: m(src)?, group },
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    p.ops = ops;
+    p.masks = kept_masks;
+    p.output = m(p.output)?;
+    p.n_regs = next as usize;
+    p.waves = schedule_waves(&p.ops, &p.groups, p.n_regs, p.n_inputs)?;
+    p.counts = p.replay()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ama::AmaLayout;
+    use crate::graph::Graph;
+    use crate::he_infer::plan::{compile, PlanChain, PlanOptions};
+    use crate::he_infer::HeStgcn;
+    use crate::stgcn::StgcnModel;
+
+    fn raw_plan(batch: usize) -> HePlan {
+        let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+        compile(&m, layout, &chain, PlanOptions { batch, optimize: false, ..Default::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn test_pipeline_reduces_ks_decomp_and_validates() {
+        for batch in [1usize, 4] {
+            let raw = raw_plan(batch);
+            let opt = optimize(&raw).unwrap();
+            opt.validate().unwrap();
+            assert!(opt.optimized);
+            assert!(!opt.groups.is_empty(), "batch {batch}: fans must group");
+            assert!(opt.groups.iter().all(|g| g.len() >= 2));
+            assert!(
+                opt.counts.ks_decomp < raw.counts.ks_decomp,
+                "batch {batch}: hoisting must share decompositions"
+            );
+            assert_eq!(opt.counts.rot, raw.counts.rot, "grouping keeps every rotation");
+            assert_eq!(opt.levels_needed, raw.levels_needed);
+            assert_eq!(opt.required_rotations(), raw.required_rotations());
+            for ((name, o), (_, r)) in
+                opt.counts.cost_fields().iter().zip(raw.counts.cost_fields())
+            {
+                assert!(*o <= r, "batch {batch} {name}: {o} > {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_batch_wrap_rot_pairs_share_a_group() {
+        // DESIGN.md S16: each wrapping diagonal adds a companion rotation
+        // of the *same* source — those pairs must land in one group
+        let opt = optimize(&raw_plan(4)).unwrap();
+        let wrap_floor = opt.layout.slots - opt.layout.block();
+        let has_pairing = opt.groups.iter().any(|g| {
+            g.iter().any(|&(k, _)| (k as usize) < opt.layout.block())
+                && g.iter().any(|&(k, _)| (k as usize) >= wrap_floor)
+        });
+        assert!(has_pairing, "in-block + wrap companion must share a source group");
+    }
+
+    #[test]
+    fn test_cse_removes_injected_duplicate_rotation() {
+        let raw = raw_plan(1);
+        // duplicate an existing rotation into a fresh register and point
+        // one later consumer at the duplicate: same math, redundant op
+        let (idx, (src, k, dst)) = raw
+            .ops
+            .iter()
+            .enumerate()
+            .find_map(|(i, op)| match *op {
+                HeOp::Rotate { src, k, dst } => Some((i, (src, k, dst))),
+                _ => None,
+            })
+            .expect("trace has rotations");
+        let mut forged = raw.clone();
+        let dup = forged.n_regs as u32;
+        forged.n_regs += 1;
+        forged.ops.insert(idx + 1, HeOp::Rotate { src, k, dst: dup });
+        let user = forged.ops[idx + 2..]
+            .iter()
+            .position(|op| op.sources().0 == dst || op.sources().1 == Some(dst))
+            .map(|p| p + idx + 2)
+            .expect("rotation has a consumer");
+        forged.ops[user] = {
+            let op = forged.ops[user];
+            let rename: Vec<u32> = (0..forged.n_regs as u32)
+                .map(|r| if r == dst { dup } else { r })
+                .collect();
+            remap_sources(op, &rename)
+        };
+        forged.refresh().unwrap();
+        forged.validate().unwrap();
+        assert_eq!(forged.counts.rot, raw.counts.rot + 1);
+
+        let after = cse_pass(&forged).unwrap();
+        after.validate().unwrap();
+        assert_eq!(after.counts.rot, raw.counts.rot, "duplicate must collapse");
+    }
+
+    #[test]
+    fn test_dce_removes_dead_tail() {
+        let raw = raw_plan(1);
+        let mut forged = raw.clone();
+        // a rotation nobody reads
+        let dup = forged.n_regs as u32;
+        forged.n_regs += 1;
+        forged.ops.push(HeOp::Rotate { src: forged.output, k: 8, dst: dup });
+        forged.refresh().unwrap();
+        forged.validate().unwrap();
+        let after = dce_pass(&forged).unwrap();
+        after.validate().unwrap();
+        assert_eq!(after.counts, raw.counts);
+        assert_eq!(after.ops.len(), raw.ops.len());
+    }
+
+    #[test]
+    fn test_passes_are_idempotent_on_their_fixed_point() {
+        let opt = optimize(&raw_plan(2)).unwrap();
+        let again = optimize(&opt).unwrap();
+        assert_eq!(again.counts, opt.counts);
+        assert_eq!(again.ops, opt.ops);
+        assert_eq!(again.groups, opt.groups);
+    }
+}

@@ -100,9 +100,20 @@ pub enum HeOp {
     /// Ciphertext-ciphertext multiplication (+relinearization).
     Mul { a: u32, b: u32, dst: u32 },
     Rescale { src: u32, dst: u32 },
+    /// Hoisted rotation fan (optimizer-lowered, DESIGN.md S17): every
+    /// `(k, dst)` pair of `HePlan::groups[group]` is `dst = Rot(src, k)`,
+    /// executed with one shared key-switch digit decomposition
+    /// (`Evaluator::rotate_group`) — bit-identical to the individual
+    /// rotations. The only multi-destination op; `PlanBuilder` never
+    /// records it, `opt::group_pass` creates it.
+    RotGroup { src: u32, group: u32 },
 }
 
 impl HeOp {
+    /// The single destination register. **Not defined for
+    /// [`HeOp::RotGroup`]** (it writes one register per group element) —
+    /// consumers iterate the group spec instead; reaching here with a
+    /// group op is a programming error.
     pub fn dst(&self) -> u32 {
         match *self {
             HeOp::Rotate { dst, .. }
@@ -112,6 +123,9 @@ impl HeOp {
             | HeOp::Sub { dst, .. }
             | HeOp::Mul { dst, .. }
             | HeOp::Rescale { dst, .. } => dst,
+            HeOp::RotGroup { .. } => {
+                panic!("RotGroup has one dst per group element; read HePlan::groups")
+            }
         }
     }
 
@@ -121,7 +135,8 @@ impl HeOp {
             HeOp::Rotate { src, .. }
             | HeOp::MulPlain { src, .. }
             | HeOp::AddPlain { src, .. }
-            | HeOp::Rescale { src, .. } => (src, None),
+            | HeOp::Rescale { src, .. }
+            | HeOp::RotGroup { src, .. } => (src, None),
             HeOp::Add { a, b, .. } | HeOp::Sub { a, b, .. } | HeOp::Mul { a, b, .. } => {
                 (a, Some(b))
             }
@@ -130,6 +145,17 @@ impl HeOp {
 }
 
 // ------------------------------------------------------------------ plan
+
+/// One optimizer pass's before/after static accounting (DESIGN.md S17):
+/// the per-pass `OpCounts` delta surfaced in coordinator `Metrics` and
+/// `BENCH_plan.json`. `name` is a whitespace-free pass id (`cse`, `dce`,
+/// `rot-group`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PassStat {
+    pub name: String,
+    pub before: OpCounts,
+    pub after: OpCounts,
+}
 
 /// A compiled HE execution plan for one (model, layout, chain, options)
 /// tuple: flat SSA ops in trace order, a wavefront schedule for the
@@ -145,6 +171,11 @@ pub struct HePlan {
     /// mutually independent and may run concurrently.
     pub waves: Vec<Vec<u32>>,
     pub masks: Vec<PlanMask>,
+    /// Hoisted rotation groups: `groups[g]` is the `(k, dst)` fan of the
+    /// unique `HeOp::RotGroup { group: g, .. }` op (DESIGN.md S17).
+    /// Empty on unoptimized plans. Steps within a group are distinct;
+    /// every group holds at least two.
+    pub groups: Vec<Vec<(u32, u32)>>,
     /// Input registers `0..n_inputs` (one ciphertext per graph node).
     pub n_inputs: usize,
     pub n_regs: usize,
@@ -157,6 +188,13 @@ pub struct HePlan {
     /// 1 = the legacy replicated layout; >1 = block-closed masks/taps,
     /// restricted to the first `batch` copies.
     pub batch: usize,
+    /// Whether the optimizer pipeline (`opt::optimize`) produced this
+    /// plan. Part of the plan-cache identity (`PlanKey`): optimized and
+    /// raw plans execute the same math but different op lists.
+    pub optimized: bool,
+    /// Per-pass before/after accounting recorded by the optimizer
+    /// (empty on raw plans).
+    pub opt_passes: Vec<PassStat>,
     /// Content hash of the compiled model (plan-cache key half).
     pub model_hash: u64,
     /// Static op counts of one execution — identical to what the
@@ -165,7 +203,7 @@ pub struct HePlan {
 }
 
 /// Engine toggles baked into a plan (the ablation axes plus the
-/// slot-batch size).
+/// slot-batch size and the optimizer switch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanOptions {
     pub use_bsgs: bool,
@@ -175,6 +213,12 @@ pub struct PlanOptions {
     /// channel diagonal for `batch`× the clips per execution — the level
     /// budget is unchanged (see DESIGN.md S16 and `OpCounts`).
     pub batch: usize,
+    /// Run the IR optimizer pipeline (CSE → DCE → rotation grouping,
+    /// DESIGN.md S17) on the recorded trace. On (the default) the plan
+    /// executes bit-identically to the raw trace with strictly no more
+    /// work per counted op; `--no-opt` / `false` keeps the raw trace
+    /// (the op-for-op interpreter-equivalence reference).
+    pub optimize: bool,
 }
 
 impl Default for PlanOptions {
@@ -183,6 +227,7 @@ impl Default for PlanOptions {
             use_bsgs: true,
             fuse_activations: true,
             batch: 1,
+            optimize: true,
         }
     }
 }
@@ -215,18 +260,33 @@ pub fn compile(
     let builder = PlanBuilder::new(chain.clone(), layout.slots);
     let inputs: Vec<PlanCt> = (0..model.v()).map(|_| builder.fresh_input()).collect();
     let out = he.forward(&builder, &inputs)?;
-    builder.finish(model, layout, levels_needed, opts.batch, out)
+    let plan = builder.finish(model, layout, levels_needed, opts.batch, out)?;
+    if opts.optimize {
+        super::opt::optimize(&plan)
+    } else {
+        Ok(plan)
+    }
 }
 
 impl HePlan {
     /// Rotation steps whose Galois keys an executing engine must hold —
     /// exactly the steps the plan uses (was `HeStgcn::required_rotations`,
-    /// which over-approximated from the layout).
+    /// which over-approximated from the layout). Optimization never
+    /// changes this set: CSE only removes duplicate steps, grouping only
+    /// re-homes them.
     pub fn required_rotations(&self) -> Vec<usize> {
         let mut steps = BTreeSet::new();
         for op in &self.ops {
-            if let HeOp::Rotate { k, .. } = *op {
-                steps.insert(k as usize);
+            match *op {
+                HeOp::Rotate { k, .. } => {
+                    steps.insert(k as usize);
+                }
+                HeOp::RotGroup { group, .. } => {
+                    if let Some(spec) = self.groups.get(group as usize) {
+                        steps.extend(spec.iter().map(|&(k, _)| k as usize));
+                    }
+                }
+                _ => {}
             }
         }
         steps.into_iter().collect()
@@ -253,6 +313,20 @@ impl HePlan {
     /// (rescales never underflow, adds see matching scales, masks encoded
     /// at their consumer's limb count), and op-count integrity.
     pub fn validate(&self) -> Result<()> {
+        let recount = self.replay()?;
+        ensure!(
+            recount == self.counts,
+            "static op counts out of sync with the op list"
+        );
+        self.check_schedule()
+    }
+
+    /// Recompute the static [`OpCounts`] by linear replay, verifying the
+    /// SSA/level/scale discipline on the way. This is `validate` minus
+    /// the count comparison and schedule check — the optimizer uses it to
+    /// refresh `counts` after a pass, `from_text` to reconstruct counts
+    /// a pre-S17 (v1/v2) plan text could not carry.
+    pub fn replay(&self) -> Result<OpCounts> {
         ensure!(self.n_inputs >= 1 && self.n_inputs <= self.n_regs);
         ensure!((self.output as usize) < self.n_regs, "output out of range");
         ensure!(
@@ -280,6 +354,7 @@ impl HePlan {
             let l = lvl as u64 + 1;
             sq.fetch_add(l * l, Ordering::Relaxed);
         };
+        let mut groups_seen = vec![false; self.groups.len()];
         for (i, op) in self.ops.iter().enumerate() {
             let (s0, s1) = op.sources();
             let read = |r: u32| -> Result<(usize, f64)> {
@@ -289,6 +364,43 @@ impl HePlan {
                 Ok((l, scale[ri]))
             };
             let (l0, sc0) = read(s0)?;
+            // the multi-destination op first: each group element writes
+            // its own register at the source's (level, scale)
+            if let HeOp::RotGroup { group, .. } = *op {
+                let gi = group as usize;
+                let spec = self
+                    .groups
+                    .get(gi)
+                    .ok_or_else(|| anyhow!("op {i}: rotation group {group} out of range"))?;
+                ensure!(!groups_seen[gi], "op {i}: rotation group {group} referenced twice");
+                groups_seen[gi] = true;
+                ensure!(
+                    spec.len() >= 2,
+                    "op {i}: rotation group {group} holds {} step(s); singletons \
+                     must stay plain Rot ops",
+                    spec.len()
+                );
+                let mut ks = BTreeSet::new();
+                for &(k, dst) in spec {
+                    ensure!(
+                        k > 0 && (k as usize) < self.layout.slots,
+                        "op {i}: group rotation step {k} outside (0, slots)"
+                    );
+                    ensure!(ks.insert(k), "op {i}: duplicate step {k} in rotation group");
+                    let d = dst as usize;
+                    ensure!(d < self.n_regs, "op {i}: group dst out of range");
+                    ensure!(d >= self.n_inputs, "op {i}: group writes an input register");
+                    ensure!(level[d].is_none(), "op {i}: register {d} written twice");
+                    level[d] = Some(l0);
+                    scale[d] = sc0;
+                    bump(&recount.rot, &recount.rot_limbs, l0);
+                    bump_sq(&recount.rot_limbs_sq, l0);
+                }
+                recount.rot_group.fetch_add(1, Ordering::Relaxed);
+                recount.ks_decomp.fetch_add(1, Ordering::Relaxed);
+                bump_sq(&recount.ks_decomp_limbs_sq, l0);
+                continue;
+            }
             let (out_level, out_scale) = match *op {
                 HeOp::Rotate { k, .. } => {
                     ensure!(
@@ -297,6 +409,8 @@ impl HePlan {
                     );
                     bump(&recount.rot, &recount.rot_limbs, l0);
                     bump_sq(&recount.rot_limbs_sq, l0);
+                    recount.ks_decomp.fetch_add(1, Ordering::Relaxed);
+                    bump_sq(&recount.ks_decomp_limbs_sq, l0);
                     (l0, sc0)
                 }
                 HeOp::MulPlain { mask, .. } => {
@@ -343,6 +457,7 @@ impl HePlan {
                     bump(&recount.rescale, &recount.rescale_limbs, l0);
                     (l0 - 1, sc0 / self.chain.moduli[l0])
                 }
+                HeOp::RotGroup { .. } => unreachable!("handled above"),
             };
             let d = op.dst() as usize;
             ensure!(d < self.n_regs, "op {i}: dst out of range");
@@ -351,6 +466,10 @@ impl HePlan {
             level[d] = Some(out_level);
             scale[d] = out_scale;
         }
+        ensure!(
+            groups_seen.iter().all(|&s| s),
+            "rotation group never referenced by a RotGroup op"
+        );
         let out_level =
             level[self.output as usize].ok_or_else(|| anyhow!("output register never written"))?;
         ensure!(
@@ -359,19 +478,22 @@ impl HePlan {
             top - out_level,
             self.levels_needed
         );
-        ensure!(
-            recount.snapshot() == self.counts,
-            "static op counts out of sync with the op list"
-        );
+        Ok(recount.snapshot())
+    }
 
-        // --- schedule safety: the waves must be executable in parallel
+    /// Schedule safety: the waves must be executable in parallel — every
+    /// op scheduled exactly once, sources ready before their wave.
+    /// Crate-visible so callers that just set `counts` from [`replay`]
+    /// (`from_text`, the optimizer) can finish validation without paying
+    /// a second, tautological replay.
+    pub(crate) fn check_schedule(&self) -> Result<()> {
         let mut ready = vec![false; self.n_regs];
         for r in ready.iter_mut().take(self.n_inputs) {
             *r = true;
         }
         let mut seen = vec![false; self.ops.len()];
         for (w, wave) in self.waves.iter().enumerate() {
-            let mut produced = Vec::with_capacity(wave.len());
+            let mut produced = Vec::new();
             for &oi in wave {
                 let op = self
                     .ops
@@ -384,7 +506,16 @@ impl HePlan {
                 if let Some(s1) = s1 {
                     ensure!(ready[s1 as usize], "wave {w}: op {oi} reads unready register {s1}");
                 }
-                produced.push(op.dst() as usize);
+                match *op {
+                    HeOp::RotGroup { group, .. } => {
+                        let spec = self
+                            .groups
+                            .get(group as usize)
+                            .ok_or_else(|| anyhow!("wave {w}: group {group} out of range"))?;
+                        produced.extend(spec.iter().map(|&(_, d)| d as usize));
+                    }
+                    _ => produced.push(op.dst() as usize),
+                }
             }
             for d in produced {
                 ready[d] = true;
@@ -395,13 +526,28 @@ impl HePlan {
         Ok(())
     }
 
+    /// Recompute the derived state (`waves`, `counts`) after a structural
+    /// mutation of `ops`/`groups` — the optimizer's per-pass refresh,
+    /// also used by tests that splice synthetic redundancy into a plan.
+    pub fn refresh(&mut self) -> Result<()> {
+        self.waves = schedule_waves(&self.ops, &self.groups, self.n_regs, self.n_inputs)?;
+        self.counts = self.replay()?;
+        Ok(())
+    }
+
     // ------------------------------------------------------ serialization
 
     /// Serialize to a line-based text format (f64s as exact bit patterns).
-    /// The wavefront schedule is recomputed on load, not stored.
+    /// The wavefront schedule is recomputed on load, not stored. Format
+    /// v3 (DESIGN.md S17): the meta line carries the optimize flag,
+    /// `group`/`pass` lines carry the optimizer's rotation groups and
+    /// per-pass deltas, and the `end` line carries an FNV-1a checksum of
+    /// every preceding line so any corruption — including bit flips
+    /// inside mask payloads that would otherwise still parse — is
+    /// rejected on load.
     pub fn to_text(&self) -> String {
         let mut s = String::new();
-        s.push_str("heplan v2\n");
+        s.push_str("heplan v3\n");
         s.push_str(&format!(
             "layout {} {} {}\n",
             self.layout.t, self.layout.c_max, self.layout.slots
@@ -412,19 +558,39 @@ impl HePlan {
         }
         s.push('\n');
         s.push_str(&format!(
-            "meta {} {} {} {} {} {} {:016x}\n",
-            self.n_inputs, self.n_regs, self.output, self.levels_needed, self.num_classes,
-            self.batch, self.model_hash
+            "meta {} {} {} {} {} {} {} {:016x}\n",
+            self.n_inputs,
+            self.n_regs,
+            self.output,
+            self.levels_needed,
+            self.num_classes,
+            self.batch,
+            self.optimized as u8,
+            self.model_hash
         ));
         s.push_str("counts");
         for v in self.counts.to_array() {
             s.push_str(&format!(" {v}"));
         }
         s.push('\n');
+        for p in &self.opt_passes {
+            s.push_str(&format!("pass {}", p.name));
+            for v in p.before.to_array().iter().chain(p.after.to_array().iter()) {
+                s.push_str(&format!(" {v}"));
+            }
+            s.push('\n');
+        }
         for m in &self.masks {
             s.push_str(&format!("mask {} {:016x} {}", m.nq, m.scale.to_bits(), m.slots.len()));
             for v in &m.slots {
                 s.push_str(&format!(" {:016x}", v.to_bits()));
+            }
+            s.push('\n');
+        }
+        for g in &self.groups {
+            s.push_str(&format!("group {}", g.len()));
+            for &(k, dst) in g {
+                s.push_str(&format!(" {k} {dst}"));
             }
             s.push('\n');
         }
@@ -437,37 +603,54 @@ impl HePlan {
                 HeOp::Sub { a, b, dst } => format!("op sub {a} {b} {dst}"),
                 HeOp::Mul { a, b, dst } => format!("op mul {a} {b} {dst}"),
                 HeOp::Rescale { src, dst } => format!("op rescale {src} {dst}"),
+                HeOp::RotGroup { src, group } => format!("op rotg {src} {group}"),
             };
             s.push_str(&line);
             s.push('\n');
         }
-        s.push_str("end\n");
+        s.push_str(&format!("end {:016x}\n", text_checksum(&s)));
         s
     }
 
     /// Parse the [`HePlan::to_text`] format and re-derive the schedule.
+    /// Accepts a version window: v1 (pre-batching) and v2 (pre-optimizer)
+    /// plan texts parse with implicit `batch = 1` / `optimized = false`
+    /// and their shorter counts arity (the rotation-path counters S17
+    /// added are reconstructed by replay and cross-checked against the
+    /// stored prefix), mirroring the wire codec's version window.
     pub fn from_text(text: &str) -> Result<HePlan> {
         fn f64_bits(tok: &str) -> Result<f64> {
             Ok(f64::from_bits(u64::from_str_radix(tok, 16).context("bad f64 bits")?))
         }
         let mut lines = text.lines();
-        // v1 is exactly v2 with an implicit batch of 1 (the meta line
-        // lacks the batch token) — plans persisted before slot batching
-        // stay readable, mirroring the wire codec's version window
-        let version = match lines.next() {
-            Some("heplan v1") => 1,
+        let header = lines.next();
+        let version = match header {
+            Some("heplan v1") => 1usize,
             Some("heplan v2") => 2,
+            Some("heplan v3") => 3,
             _ => bail!("bad plan header"),
         };
+        // running checksum over every line before `end` (v3 verifies it)
+        fn eat(h: &mut u64, line: &str) {
+            *h = crate::util::fnv1a_fold(*h, line.bytes().chain(std::iter::once(b'\n')));
+        }
+        let mut checksum: u64 = crate::util::FNV1A_BASIS;
+        eat(&mut checksum, header.unwrap());
         let mut layout: Option<AmaLayout> = None;
         let mut chain: Option<PlanChain> = None;
-        let mut meta: Option<(usize, usize, u32, usize, usize, usize, u64)> = None;
-        let mut counts: Option<OpCounts> = None;
+        let mut meta: Option<(usize, usize, u32, usize, usize, usize, bool, u64)> = None;
+        let mut count_vals: Option<Vec<u64>> = None;
+        let mut opt_passes = Vec::new();
         let mut masks = Vec::new();
+        let mut groups: Vec<Vec<(u32, u32)>> = Vec::new();
         let mut ops = Vec::new();
         let mut saw_end = false;
         for line in lines {
+            ensure!(!saw_end, "trailing data after the end marker");
             let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.first().copied() != Some("end") {
+                eat(&mut checksum, line);
+            }
             match toks.first().copied() {
                 Some("layout") => {
                     ensure!(toks.len() == 4, "bad layout line");
@@ -481,13 +664,24 @@ impl HePlan {
                     ensure!(toks.len() >= 3, "bad chain line");
                     let delta = f64_bits(toks[1])?;
                     let n: usize = toks[2].parse()?;
-                    ensure!(toks.len() == 3 + n, "chain length mismatch");
+                    // length checks compare against the actual token count
+                    // (never `k + len`, which a hostile length overflows)
+                    ensure!(n == toks.len() - 3, "chain length mismatch");
                     let moduli = toks[3..].iter().map(|t| f64_bits(t)).collect::<Result<_>>()?;
                     chain = Some(PlanChain { delta, moduli });
                 }
                 Some("meta") => {
-                    ensure!(toks.len() == 6 + version as usize, "bad meta line");
+                    ensure!(toks.len() == 6 + version, "bad meta line");
                     let batch = if version >= 2 { toks[6].parse()? } else { 1 };
+                    let optimized = if version >= 3 {
+                        match toks[7] {
+                            "0" => false,
+                            "1" => true,
+                            other => bail!("bad optimize flag {other}"),
+                        }
+                    } else {
+                        false
+                    };
                     meta = Some((
                         toks[1].parse()?,
                         toks[2].parse()?,
@@ -495,7 +689,8 @@ impl HePlan {
                         toks[4].parse()?,
                         toks[5].parse()?,
                         batch,
-                        u64::from_str_radix(toks[5 + version as usize], 16)?,
+                        optimized,
+                        u64::from_str_radix(toks[5 + version], 16)?,
                     ));
                 }
                 Some("counts") => {
@@ -503,19 +698,47 @@ impl HePlan {
                         .iter()
                         .map(|t| t.parse::<u64>().map_err(anyhow::Error::from))
                         .collect::<Result<Vec<u64>>>()?;
-                    counts = Some(
-                        OpCounts::from_array(&vals)
-                            .ok_or_else(|| anyhow!("counts arity mismatch"))?,
-                    );
+                    count_vals = Some(vals);
+                }
+                Some("pass") => {
+                    ensure!(version >= 3, "pass lines are a v3 feature");
+                    let arity = OpCounts::field_names().len();
+                    ensure!(toks.len() == 2 + 2 * arity, "bad pass line");
+                    let vals = toks[2..]
+                        .iter()
+                        .map(|t| t.parse::<u64>().map_err(anyhow::Error::from))
+                        .collect::<Result<Vec<u64>>>()?;
+                    opt_passes.push(PassStat {
+                        name: toks[1].to_string(),
+                        before: OpCounts::from_array(&vals[..arity])
+                            .ok_or_else(|| anyhow!("pass counts arity"))?,
+                        after: OpCounts::from_array(&vals[arity..])
+                            .ok_or_else(|| anyhow!("pass counts arity"))?,
+                    });
                 }
                 Some("mask") => {
                     ensure!(toks.len() >= 4, "bad mask line");
                     let nq: usize = toks[1].parse()?;
                     let scale = f64_bits(toks[2])?;
                     let len: usize = toks[3].parse()?;
-                    ensure!(toks.len() == 4 + len, "mask length mismatch");
+                    ensure!(len == toks.len() - 4, "mask length mismatch");
                     let slots = toks[4..].iter().map(|t| f64_bits(t)).collect::<Result<_>>()?;
                     masks.push(PlanMask { slots, scale, nq });
+                }
+                Some("group") => {
+                    ensure!(version >= 3, "group lines are a v3 feature");
+                    ensure!(toks.len() >= 2, "bad group line");
+                    let len: usize = toks[1].parse()?;
+                    ensure!(
+                        (toks.len() - 2) % 2 == 0 && len == (toks.len() - 2) / 2,
+                        "group length mismatch"
+                    );
+                    let spec = (0..len)
+                        .map(|i| -> Result<(u32, u32)> {
+                            Ok((toks[2 + 2 * i].parse()?, toks[3 + 2 * i].parse()?))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    groups.push(spec);
                 }
                 Some("op") => {
                     ensure!(toks.len() >= 4, "bad op line");
@@ -530,42 +753,114 @@ impl HePlan {
                         "sub" => HeOp::Sub { a: p(2)?, b: p(3)?, dst: p(4)? },
                         "mul" => HeOp::Mul { a: p(2)?, b: p(3)?, dst: p(4)? },
                         "rescale" => HeOp::Rescale { src: p(2)?, dst: p(3)? },
+                        "rotg" => {
+                            ensure!(version >= 3, "rotg ops are a v3 feature");
+                            HeOp::RotGroup { src: p(2)?, group: p(3)? }
+                        }
                         other => bail!("unknown op kind {other}"),
                     };
                     ops.push(op);
                 }
-                Some("end") => saw_end = true,
+                Some("end") => {
+                    if version >= 3 {
+                        ensure!(toks.len() == 2, "v3 end line must carry a checksum");
+                        let want = u64::from_str_radix(toks[1], 16).context("bad checksum")?;
+                        ensure!(
+                            want == checksum,
+                            "plan text checksum mismatch (corrupted plan)"
+                        );
+                    } else {
+                        ensure!(toks.len() == 1, "bad end line");
+                    }
+                    saw_end = true;
+                }
                 Some(other) => bail!("unknown plan line kind {other}"),
                 None => {}
             }
         }
         ensure!(saw_end, "plan truncated (no end marker)");
-        let (n_inputs, n_regs, output, levels_needed, num_classes, batch, model_hash) =
+        let (n_inputs, n_regs, output, levels_needed, num_classes, batch, optimized, model_hash) =
             meta.ok_or_else(|| anyhow!("plan missing meta line"))?;
-        let waves = schedule_waves(&ops, n_regs, n_inputs)?;
-        let plan = HePlan {
+        // bound the register space before ANY n_regs-sized allocation
+        // (schedule_waves/replay build vec![_; n_regs]): a forged meta
+        // line must error, never over-allocate or capacity-panic —
+        // structurally, a plan can define at most one register per input
+        // plus one per op destination
+        ensure!(
+            n_inputs <= MAX_PLAN_INPUTS,
+            "implausible input count {n_inputs} (max {MAX_PLAN_INPUTS})"
+        );
+        let definable = ops.iter().fold(n_inputs, |acc, op| {
+            acc.saturating_add(match *op {
+                HeOp::RotGroup { group, .. } => {
+                    groups.get(group as usize).map(|g| g.len()).unwrap_or(0)
+                }
+                _ => 1,
+            })
+        });
+        ensure!(
+            n_regs <= definable,
+            "meta n_regs {n_regs} exceeds the {definable} registers the op list can define"
+        );
+        let waves = schedule_waves(&ops, &groups, n_regs, n_inputs)?;
+        let mut plan = HePlan {
             layout: layout.ok_or_else(|| anyhow!("plan missing layout"))?,
             chain: chain.ok_or_else(|| anyhow!("plan missing chain"))?,
             ops,
             waves,
             masks,
+            groups,
             n_inputs,
             n_regs,
             output,
             levels_needed,
             num_classes,
             batch,
+            optimized,
+            opt_passes,
             model_hash,
-            counts: counts.ok_or_else(|| anyhow!("plan missing counts"))?,
+            counts: OpCounts::default(),
         };
-        plan.validate()?;
+        // counts: v3 stores the full arity; v1/v2 predate the S17
+        // rotation-path counters, so replay reconstructs the full set and
+        // the stored prefix is cross-checked against it
+        let actual = plan.replay()?;
+        let vals = count_vals.ok_or_else(|| anyhow!("plan missing counts"))?;
+        let arity = OpCounts::field_names().len();
+        let stored_arity = if version >= 3 { arity } else { arity - 3 };
+        ensure!(vals.len() == stored_arity, "counts arity mismatch");
+        ensure!(
+            vals[..] == actual.to_array()[..stored_arity],
+            "stored op counts disagree with the op list"
+        );
+        plan.counts = actual;
+        // counts were just set from replay(), so full validate()'s count
+        // comparison is tautological — only the schedule remains to check
+        plan.check_schedule()?;
         Ok(plan)
     }
 }
 
+/// Cap on a plan's input-register count accepted from serialized text —
+/// one ciphertext per graph node, so anything past this is a forged meta
+/// line, rejected before it can size an allocation.
+const MAX_PLAN_INPUTS: usize = 1 << 20;
+
+/// FNV-1a over a byte stream (plan-text checksum; same constants as the
+/// reader's incremental fold — both delegate to `util`).
+fn text_checksum(s: &str) -> u64 {
+    crate::util::fnv1a_bytes(s.as_bytes())
+}
+
 /// Wavefront scheduling over the SSA trace: an op's wave is one past the
-/// deepest wave among its sources (inputs sit before wave 0).
-fn schedule_waves(ops: &[HeOp], n_regs: usize, n_inputs: usize) -> Result<Vec<Vec<u32>>> {
+/// deepest wave among its sources (inputs sit before wave 0). A
+/// [`HeOp::RotGroup`]'s destinations all land one wave past its source.
+pub(crate) fn schedule_waves(
+    ops: &[HeOp],
+    groups: &[Vec<(u32, u32)>],
+    n_regs: usize,
+    n_inputs: usize,
+) -> Result<Vec<Vec<u32>>> {
     let mut depth = vec![0usize; n_regs];
     let mut waves: Vec<Vec<u32>> = Vec::new();
     for (i, op) in ops.iter().enumerate() {
@@ -576,10 +871,24 @@ fn schedule_waves(ops: &[HeOp], n_regs: usize, n_inputs: usize) -> Result<Vec<Ve
             ensure!((s1 as usize) < n_regs, "op {i}: register out of range");
             d = d.max(depth[s1 as usize]);
         }
-        let dst = op.dst() as usize;
-        ensure!(dst >= n_inputs && dst < n_regs, "op {i}: bad dst register");
         let d = d + 1;
-        depth[dst] = d;
+        match *op {
+            HeOp::RotGroup { group, .. } => {
+                let spec = groups
+                    .get(group as usize)
+                    .ok_or_else(|| anyhow!("op {i}: rotation group out of range"))?;
+                for &(_, dst) in spec {
+                    let dst = dst as usize;
+                    ensure!(dst >= n_inputs && dst < n_regs, "op {i}: bad dst register");
+                    depth[dst] = d;
+                }
+            }
+            _ => {
+                let dst = op.dst() as usize;
+                ensure!(dst >= n_inputs && dst < n_regs, "op {i}: bad dst register");
+                depth[dst] = d;
+            }
+        }
         while waves.len() < d {
             waves.push(Vec::new());
         }
@@ -701,19 +1010,22 @@ impl PlanBuilder {
             "recorded walk consumed {} levels, expected {levels_needed}",
             self.chain.top_level() - out.level
         );
-        let waves = schedule_waves(&st.ops, st.next_reg as usize, st.n_inputs)?;
+        let waves = schedule_waves(&st.ops, &[], st.next_reg as usize, st.n_inputs)?;
         let plan = HePlan {
             layout,
             chain: self.chain,
             ops: st.ops,
             waves,
             masks: st.masks,
+            groups: Vec::new(),
             n_inputs: st.n_inputs,
             n_regs: st.next_reg as usize,
             output: out.reg,
             levels_needed,
             num_classes: model.num_classes(),
             batch,
+            optimized: false,
+            opt_passes: Vec::new(),
             model_hash: model.content_hash(),
             counts: self.counters.snapshot(),
         };
@@ -819,6 +1131,8 @@ impl HeBackend for PlanBuilder {
         st.ops.push(HeOp::Rotate { src: a.reg, k: k as u32, dst });
         self.bump(&self.counters.rot, &self.counters.rot_limbs, a.level);
         self.bump_sq(&self.counters.rot_limbs_sq, a.level);
+        self.counters.ks_decomp.fetch_add(1, Ordering::Relaxed);
+        self.bump_sq(&self.counters.ks_decomp_limbs_sq, a.level);
         PlanCt { reg: dst, ..*a }
     }
 
@@ -854,6 +1168,17 @@ mod tests {
         StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9)
     }
 
+    /// Raw (unoptimized) plan: the op-for-op interpreter trace.
+    fn tiny_plan_raw() -> HePlan {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+        compile(&m, layout, &chain, PlanOptions { optimize: false, ..Default::default() })
+            .unwrap()
+    }
+
+    /// Default (optimized) plan.
     fn tiny_plan() -> HePlan {
         let m = tiny();
         let layout = AmaLayout::new(8, 4, 256).unwrap();
@@ -868,16 +1193,38 @@ mod tests {
         let layout = AmaLayout::new(8, 4, 256).unwrap();
         let he = HeStgcn::new(&m, layout).unwrap();
         let levels = he.levels_needed().unwrap();
-        let plan = tiny_plan();
+        let plan = tiny_plan_raw();
         plan.validate().unwrap();
         assert_eq!(plan.levels_needed, levels);
         assert_eq!(plan.n_inputs, 5);
+        assert!(!plan.optimized && plan.groups.is_empty() && plan.opt_passes.is_empty());
 
         // static counts == interpreted CountingBackend counts
         let be = CountingBackend::new(levels, 33);
         let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
         let _ = he.forward(&be, &input).unwrap();
         assert_eq!(plan.counts, be.op_counts());
+    }
+
+    #[test]
+    fn test_default_compile_runs_the_optimizer() {
+        let raw = tiny_plan_raw();
+        let opt = tiny_plan();
+        assert!(opt.optimized);
+        assert_eq!(opt.opt_passes.len(), 3, "cse, dce, rot-group");
+        // the GCNConv hoisted fans and BSGS baby steps guarantee groups
+        assert!(!opt.groups.is_empty(), "rotation fans must be grouped");
+        assert!(opt.counts.rot_group > 0);
+        // hoisting strictly reduces decomposition work, never op work
+        assert!(opt.counts.ks_decomp < raw.counts.ks_decomp);
+        for ((name, o), (_, r)) in opt.counts.cost_fields().iter().zip(raw.counts.cost_fields())
+        {
+            assert!(*o <= r, "{name}: optimized {o} > raw {r}");
+        }
+        assert_eq!(opt.levels_needed, raw.levels_needed);
+        // same rotation key requirements either way
+        assert_eq!(opt.required_rotations(), raw.required_rotations());
+        opt.validate().unwrap();
     }
 
     #[test]
@@ -911,44 +1258,17 @@ mod tests {
 
     #[test]
     fn test_text_roundtrip_is_lossless() {
-        let plan = tiny_plan();
-        let text = plan.to_text();
-        let back = HePlan::from_text(&text).unwrap();
-        assert_eq!(plan, back);
+        for plan in [tiny_plan_raw(), tiny_plan()] {
+            let text = plan.to_text();
+            let back = HePlan::from_text(&text).unwrap();
+            assert_eq!(plan, back);
+        }
     }
 
-    #[test]
-    fn test_v1_plan_text_still_parses_as_batch_1() {
-        // a pre-batching (v1) plan is exactly a v2 plan with batch = 1:
-        // header + batch-less meta line, everything else unchanged
-        let plan = tiny_plan();
-        assert_eq!(plan.batch, 1);
-        let v1: String = plan
-            .to_text()
-            .lines()
-            .map(|line| {
-                let out = if line == "heplan v2" {
-                    "heplan v1".to_string()
-                } else if let Some(rest) = line.strip_prefix("meta ") {
-                    let toks: Vec<&str> = rest.split_whitespace().collect();
-                    assert_eq!(toks.len(), 7);
-                    assert_eq!(toks[5], "1", "batch token");
-                    format!(
-                        "meta {} {} {} {} {} {}",
-                        toks[0], toks[1], toks[2], toks[3], toks[4], toks[6]
-                    )
-                } else {
-                    line.to_string()
-                };
-                out + "\n"
-            })
-            .collect();
-        let back = HePlan::from_text(&v1).unwrap();
-        assert_eq!(back, plan);
-        // a v1 header with a v2 (8-token) meta line is malformed
-        let mixed = plan.to_text().replace("heplan v2", "heplan v1");
-        assert!(HePlan::from_text(&mixed).is_err());
-    }
+    // The v1/v2 version-window behavior (old texts parse losslessly,
+    // old versions reject v3 structures, mixed header/meta arities are
+    // malformed) is pinned by the integration fuzz suite,
+    // `rust/tests/plan_text_fuzz.rs`, which owns the downgrade rewriter.
 
     #[test]
     fn test_from_text_rejects_corruption() {
@@ -957,7 +1277,17 @@ mod tests {
         // truncation
         assert!(HePlan::from_text(&text[..text.len() / 2]).is_err());
         // header damage
-        assert!(HePlan::from_text(&text.replace("heplan v2", "heplan v9")).is_err());
+        assert!(HePlan::from_text(&text.replace("heplan v3", "heplan v9")).is_err());
+        // the v3 checksum catches payload corruption that still parses:
+        // flip one hex digit inside a mask value line
+        let pos = text.find("mask ").unwrap() + 10;
+        let mut bytes = text.clone().into_bytes();
+        bytes[pos] = if bytes[pos] == b'0' { b'1' } else { b'0' };
+        let flipped = String::from_utf8(bytes).unwrap();
+        assert!(HePlan::from_text(&flipped).is_err(), "checksum must catch bit flips");
+        // trailing garbage after the end marker
+        let trailing = format!("{text}op rot 0 1 9\n");
+        assert!(HePlan::from_text(&trailing).is_err());
     }
 
     #[test]

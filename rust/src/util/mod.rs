@@ -9,15 +9,32 @@ pub mod tensorio;
 
 pub use rng::Rng;
 
+/// FNV-1a offset basis (shared by every FNV helper below so the
+/// constants can never drift apart).
+pub const FNV1A_BASIS: u64 = 0xcbf29ce484222325;
+const FNV1A_PRIME: u64 = 0x100000001b3;
+
+/// Fold more bytes into a running FNV-1a state (start from
+/// [`FNV1A_BASIS`]) — the incremental form line-based checksums use.
+pub fn fnv1a_fold(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV1A_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    fnv1a_fold(FNV1A_BASIS, bytes.iter().copied())
+}
+
 /// FNV-1a over a stream of u64 words, byte-wise — the content-addressing
 /// hash behind the plan cache (model hashes, mask interning).
 pub fn fnv1a_u64<I: IntoIterator<Item = u64>>(items: I) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+    let mut h = FNV1A_BASIS;
     for v in items {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
+        h = fnv1a_fold(h, v.to_le_bytes());
     }
     h
 }

@@ -9,7 +9,7 @@
 use super::format::EvalKeySet;
 use crate::ckks::{Ciphertext, EvalEngine};
 use crate::coordinator::{InferenceExecutor, KeyRegistry, Metrics};
-use crate::he_infer::exec::{cached_slot_capacity, plan_for, PlanKey};
+use crate::he_infer::exec::{cached_slot_capacity, plan_for, record_opt_metrics, PlanKey};
 use crate::he_infer::{session_geometry, HePlan, PlanChain, PlanOptions, PreparedPlan};
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -90,6 +90,13 @@ impl WireExecutor {
         self.metrics = Some(metrics);
     }
 
+    /// Toggle the HePlan optimizer (DESIGN.md S17). Rotation-key
+    /// requirements are identical either way, so existing tenant keys
+    /// keep working; the flag only selects which plan family serves.
+    pub fn set_optimize(&mut self, optimize: bool) {
+        self.opts.optimize = optimize;
+    }
+
     /// Register (or replace) a tenant's evaluation keys. Fails — before
     /// anything is stored — if the bundle doesn't validate against its
     /// own parameter chain, so the tenant learns at registration, not on
@@ -150,6 +157,9 @@ impl WireExecutor {
         let (plan, was_cached) = plan_for(cached, model, layout, &chain, opts)?;
         self.count_plan_cache(was_cached);
         if !was_cached {
+            if let Some(m) = &self.metrics {
+                record_opt_metrics(m, &plan);
+            }
             self.plans.lock().unwrap().entry(key).or_insert_with(|| plan.clone());
         }
         let needed = plan.required_rotations();

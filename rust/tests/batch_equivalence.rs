@@ -12,88 +12,27 @@
 //!   budget);
 //! * zeros in every padded copy of a ragged batch (B < copies()).
 //!
+//! The op-for-op interpreter comparisons run on **raw** (unoptimized)
+//! plans — that is the trace-equality contract; the real-CKKS
+//! differentials run the serving default (optimized, S17), so they also
+//! exercise hoisted rotation groups end to end.
+//!
 //! The real-CKKS cases execute full encrypted forwards and are too slow
 //! for the debug-profile tier-1 run, so they are `#[ignore]`d in debug
 //! and exercised in `--release` by ci.sh / `make test-batch`. The
 //! symbolic (counting-backend) cases always run.
 
+mod common;
+
+use common::{assert_close, clip_seeded as clip, session_for, variants};
 use lingcn::ama::AmaLayout;
-use lingcn::ckks::CkksParams;
-use lingcn::graph::Graph;
 use lingcn::he_infer::{
     compile, execute_with_backend, CountingBackend, HeBackend, HeStgcn, PlanChain, PlanOptions,
-    PrivateInferenceSession,
 };
-use lingcn::linearize::LinearizationPlan;
-use lingcn::stgcn::StgcnModel;
 
-fn tiny_model(seed: u64) -> StgcnModel {
-    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
-}
-
-/// The nl-variant family the suite sweeps: the full polynomial model and
-/// two structurally linearized variants (different effective nl).
-fn variants(seed: u64) -> Vec<(&'static str, StgcnModel)> {
-    let full = tiny_model(seed);
-    let mut lin = tiny_model(seed + 10);
-    LinearizationPlan::structural_mixed(2, 5, 2).apply(&mut lin).unwrap();
-    let mut lin0 = tiny_model(seed + 20);
-    LinearizationPlan::layer_wise(2, 5, 0).apply(&mut lin0).unwrap();
-    vec![("full", full), ("mixed-nl2", lin), ("linear-nl0", lin0)]
-}
-
-/// Small ring (N = 2^9, 256 slots): block 32 → copies() = 8, so batched
-/// layouts have real wrap paths to get wrong.
-fn toy_params(levels: usize) -> CkksParams {
-    CkksParams {
-        n: 1 << 9,
-        q0_bits: 50,
-        scale_bits: 33,
-        levels,
-        special_bits: 55,
-        allow_insecure: true,
-    }
-}
-
-fn session_for(model: &StgcnModel, batch: usize, seed: u64) -> PrivateInferenceSession {
-    let probe = HeStgcn::new(
-        model,
-        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 8).unwrap(),
-    )
-    .unwrap();
-    let levels = probe.levels_needed().unwrap();
-    PrivateInferenceSession::new_with_options(
-        model,
-        toy_params(levels),
-        seed,
-        PlanOptions { batch, ..Default::default() },
-    )
-    .unwrap()
-}
-
-fn clip(model: &StgcnModel, seed: usize) -> Vec<f64> {
-    let n = model.v() * model.c_in * model.t;
-    (0..n)
-        .map(|i| (((seed * 131 + i) * 37 % 101) as f64 - 50.0) / 80.0)
-        .collect()
-}
-
-/// Two encrypted runs of the same math agree to CKKS noise: relative to
-/// the logit magnitude of the reference run.
-fn assert_close(label: &str, got: &[f64], want: &[f64]) {
-    assert_eq!(got.len(), want.len(), "{label}: logit arity");
-    let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
-    for (i, (g, w)) in got.iter().zip(want).enumerate() {
-        assert!(
-            (g - w).abs() / max_mag < 2e-2,
-            "{label}: logit {i} diverged — batched {g} vs single {w}"
-        );
-    }
-    assert_eq!(
-        lingcn::util::argmax(got),
-        lingcn::util::argmax(want),
-        "{label}: classification flipped"
-    );
+/// Raw-trace options at `batch` (the interpreter-equality reference).
+fn raw(batch: usize) -> PlanOptions {
+    PlanOptions { batch, optimize: false, ..Default::default() }
 }
 
 // ----------------------------------------------------- symbolic sweeps
@@ -101,7 +40,8 @@ fn assert_close(label: &str, got: &[f64], want: &[f64]) {
 /// Batched plans keep the single-clip plan's level budget and CMult /
 /// Rescale counts exactly; the only growth is the documented extra
 /// rotation + mask PMult + Add per wrapping diagonal. Swept over nl
-/// variants × every batch size the layout admits.
+/// variants × every batch size the layout admits, for both the raw
+/// traces and the optimized plans.
 #[test]
 fn test_batched_opcounts_match_single_modulo_mask_pmults() {
     for (name, model) in variants(1) {
@@ -109,38 +49,31 @@ fn test_batched_opcounts_match_single_modulo_mask_pmults() {
         let he = HeStgcn::new(&model, layout).unwrap();
         let levels = he.levels_needed().unwrap();
         let chain = PlanChain::ideal(levels, 33);
-        let single = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
-        // masks only depend on the batch size, ops don't: every batched
-        // size must share this reference op skeleton
-        let skeleton = compile(
-            &model,
-            layout,
-            &chain,
-            PlanOptions { batch: 2, ..Default::default() },
-        )
-        .unwrap();
-        for batch in 2..=layout.copies() {
-            let plan = compile(
-                &model,
-                layout,
-                &chain,
-                PlanOptions { batch, ..Default::default() },
-            )
-            .unwrap();
-            plan.validate().unwrap();
-            assert_eq!(plan.levels_needed, single.levels_needed, "{name} b{batch}: levels");
-            assert_eq!(plan.counts.cmult, single.counts.cmult, "{name} b{batch}: cmult");
-            assert_eq!(plan.counts.rescale, single.counts.rescale, "{name} b{batch}: rescale");
-            assert!(plan.counts.rot > single.counts.rot, "{name} b{batch}: rot");
-            assert!(plan.counts.pmult > single.counts.pmult, "{name} b{batch}: pmult");
-            assert!(plan.counts.add > single.counts.add, "{name} b{batch}: add");
-            assert_eq!(plan.ops, skeleton.ops, "{name} b{batch}: op skeleton");
+        for optimize in [false, true] {
+            let opts = |batch| PlanOptions { optimize, ..raw(batch) };
+            let single = compile(&model, layout, &chain, opts(1)).unwrap();
+            // masks only depend on the batch size, ops don't: every
+            // batched size must share this reference op skeleton
+            let skeleton = compile(&model, layout, &chain, opts(2)).unwrap();
+            for batch in 2..=layout.copies() {
+                let plan = compile(&model, layout, &chain, opts(batch)).unwrap();
+                plan.validate().unwrap();
+                let tag = format!("{name} b{batch} opt={optimize}");
+                assert_eq!(plan.levels_needed, single.levels_needed, "{tag}: levels");
+                assert_eq!(plan.counts.cmult, single.counts.cmult, "{tag}: cmult");
+                assert_eq!(plan.counts.rescale, single.counts.rescale, "{tag}: rescale");
+                assert!(plan.counts.rot > single.counts.rot, "{tag}: rot");
+                assert!(plan.counts.pmult > single.counts.pmult, "{tag}: pmult");
+                assert!(plan.counts.add > single.counts.add, "{tag}: add");
+                assert_eq!(plan.ops, skeleton.ops, "{tag}: op skeleton");
+                assert_eq!(plan.groups, skeleton.groups, "{tag}: rot groups");
+            }
         }
     }
 }
 
-/// The batched interpreted walk replayed from its compiled plan tallies
-/// exactly the plan's static counts and lands on level 0 — the
+/// The batched interpreted walk replayed from its compiled raw plan
+/// tallies exactly the plan's static counts and lands on level 0 — the
 /// compile/execute equivalence of `plan_equivalence.rs`, batched.
 #[test]
 fn test_batched_counting_replay_matches_interpreter() {
@@ -157,13 +90,7 @@ fn test_batched_counting_replay_matches_interpreter() {
             assert_eq!(be_interp.level(&out_interp), 0, "{name} b{batch}");
 
             let chain = PlanChain::ideal(levels, 33);
-            let plan = compile(
-                &model,
-                layout,
-                &chain,
-                PlanOptions { batch, ..Default::default() },
-            )
-            .unwrap();
+            let plan = compile(&model, layout, &chain, raw(batch)).unwrap();
             let be_plan = CountingBackend::new(levels, 33);
             let input2: Vec<_> = (0..model.v()).map(|_| be_plan.fresh()).collect();
             let out_plan = execute_with_backend(&plan, &be_plan, &input2).unwrap();
@@ -264,14 +191,16 @@ fn test_ragged_batch_padded_copies_decrypt_to_zeros() {
 }
 
 /// Batched compiled execution is bit-identical to the batched interpreted
-/// walk — the plan_equivalence guarantee carries over to block-closed
-/// plans (same masks, same op order, any thread count).
+/// walk — the plan_equivalence guarantee carries over to block-closed,
+/// optimizer-grouped plans (hoisted wrap-companion rotations and all), at
+/// any thread count.
 #[test]
 #[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
 fn test_batched_compiled_matches_interpreted_bit_for_bit() {
     let (_, model) = variants(4).remove(0);
     let batch = 4;
     let sess = session_for(&model, batch, 99);
+    assert!(sess.plan.optimized && !sess.plan.groups.is_empty());
     let clips: Vec<Vec<f64>> = (0..batch).map(|s| clip(&model, s + 7)).collect();
     let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
     let input = sess.encrypt_input_batch(&model, &refs).unwrap();

@@ -38,6 +38,19 @@ fn test_batch_flag_validated_before_artifacts() {
 }
 
 #[test]
+fn test_no_opt_flag_validated_before_artifacts() {
+    // --no-opt is a HePlan knob: the plaintext tier rejects it up front
+    // (before artifact loading), like --batch. Pin the message so a
+    // missing-artifacts error can't mask a deleted guard.
+    let err = run(&args(&["serve", "--tier", "plaintext", "--no-opt", "--requests", "1"]))
+        .expect_err("--no-opt on the plaintext tier must be rejected");
+    assert!(
+        format!("{err:#}").contains("--no-opt"),
+        "rejection must name the flag, got: {err:#}"
+    );
+}
+
+#[test]
 fn test_unknown_subcommand_exits_nonzero() {
     assert_eq!(run(&args(&["frobnicate"])).unwrap(), USAGE_EXIT);
     assert_eq!(run(&args(&[])).unwrap(), USAGE_EXIT);

@@ -1,0 +1,111 @@
+//! Shared small-params fixtures for the integration suites (ISSUE 5
+//! satellite: one copy of the tiny model / params / clip builders that
+//! `batch_equivalence.rs`, `plan_equivalence.rs`, `wire_roundtrip.rs`,
+//! `property_suite.rs`, `plan_text_fuzz.rs` and `golden_vectors.rs` all
+//! previously duplicated).
+//!
+//! Each integration test binary compiles this module independently, so
+//! not every helper is used by every binary — hence the file-level
+//! `dead_code` allowance.
+#![allow(dead_code)]
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::CkksParams;
+use lingcn::graph::Graph;
+use lingcn::he_infer::{HeStgcn, PlanOptions, PrivateInferenceSession};
+use lingcn::linearize::LinearizationPlan;
+use lingcn::stgcn::StgcnModel;
+
+/// The canonical tiny STGCN: ring(5), T = 8, C_in = 2, two 4-channel
+/// layers, 3 classes.
+pub fn tiny_model(seed: u64) -> StgcnModel {
+    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
+}
+
+/// The nl-variant family the differential suites sweep: the full
+/// polynomial model and two structurally linearized variants (different
+/// effective nl).
+pub fn variants(seed: u64) -> Vec<(&'static str, StgcnModel)> {
+    let full = tiny_model(seed);
+    let mut lin = tiny_model(seed + 10);
+    LinearizationPlan::structural_mixed(2, 5, 2).apply(&mut lin).unwrap();
+    let mut lin0 = tiny_model(seed + 20);
+    LinearizationPlan::layer_wise(2, 5, 0).apply(&mut lin0).unwrap();
+    vec![("full", full), ("mixed-nl2", lin), ("linear-nl0", lin0)]
+}
+
+/// Toy CKKS ring of `n` coefficients (`n/2` slots) at the standard
+/// small-params bit profile. `n = 1 << 9` gives 256 slots → block 32 →
+/// `copies() = 8`, so batched layouts have real wrap paths to get wrong;
+/// `n = 1 << 11` is the single-clip equivalence profile.
+pub fn toy_params(n: usize, levels: usize) -> CkksParams {
+    CkksParams {
+        n,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels,
+        special_bits: 55,
+        allow_insecure: true,
+    }
+}
+
+/// Multiplicative depth of `model` under default engine toggles (the
+/// slots value only shapes the probe layout; depth is layout-free).
+pub fn probe_levels(model: &StgcnModel, slots: usize) -> usize {
+    HeStgcn::new(
+        model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), slots).unwrap(),
+    )
+    .unwrap()
+    .levels_needed()
+    .unwrap()
+}
+
+/// A session over the 256-slot batching geometry (the batch_equivalence
+/// profile), compiled at `opts`.
+pub fn session_for_opts(
+    model: &StgcnModel,
+    opts: PlanOptions,
+    seed: u64,
+) -> PrivateInferenceSession {
+    let levels = probe_levels(model, 1 << 8);
+    PrivateInferenceSession::new_with_options(model, toy_params(1 << 9, levels), seed, opts)
+        .unwrap()
+}
+
+/// A session over the 256-slot batching geometry for `batch` clips.
+pub fn session_for(model: &StgcnModel, batch: usize, seed: u64) -> PrivateInferenceSession {
+    session_for_opts(model, PlanOptions { batch, ..Default::default() }, seed)
+}
+
+/// The deterministic synthetic clip the suites share (seed 0 is the
+/// historical single-clip pattern).
+pub fn clip_seeded(model: &StgcnModel, seed: usize) -> Vec<f64> {
+    let n = model.v() * model.c_in * model.t;
+    (0..n)
+        .map(|i| (((seed * 131 + i) * 37 % 101) as f64 - 50.0) / 80.0)
+        .collect()
+}
+
+/// The historical fixed clip (`clip_seeded` at seed 0).
+pub fn clip(model: &StgcnModel) -> Vec<f64> {
+    clip_seeded(model, 0)
+}
+
+/// Two encrypted runs of the same math agree to CKKS noise: relative to
+/// the logit magnitude of the reference run, same argmax.
+pub fn assert_close(label: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{label}: logit arity");
+    let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() / max_mag < 2e-2,
+            "{label}: logit {i} diverged — {g} vs {w}"
+        );
+    }
+    assert_eq!(
+        lingcn::util::argmax(got),
+        lingcn::util::argmax(want),
+        "{label}: classification flipped"
+    );
+}

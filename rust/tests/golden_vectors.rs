@@ -1,0 +1,181 @@
+//! Golden-vector regression fixtures (ISSUE 5 satellite; DESIGN.md S17).
+//!
+//! Every (nl variant × batch ∈ {1, full}) case pins down three things
+//! against checked-in fixtures under `rust/tests/golden/`:
+//!
+//! * the **OpCounts digest** of the raw and optimized compiled plans
+//!   (any silent change in what the compiler or optimizer emits fails);
+//! * the **plan-text digest** (structure drift: op order, masks, groups,
+//!   serialization format);
+//! * the **reference logits** of a real small-params encrypted run, bit
+//!   pattern for bit pattern (any numeric drift anywhere in the CKKS
+//!   stack — keygen draw order, key-switch digit lift, evaluator op
+//!   order — fails). The logits cases execute full encrypted forwards,
+//!   so they are release-gated like the other real-CKKS suites.
+//!
+//! Lifecycle: a missing fixture is **bootstrapped** — written from the
+//! current build and reported — so the suite passes on a fresh checkout
+//! and pins everything from then on; ci.sh runs it in both debug and
+//! release, and the comparison is what guards later PRs. Intentional
+//! changes regenerate via `make regen-golden` (`REGEN_GOLDEN=1`), which
+//! rewrites the fixtures for review in the diff.
+//!
+//! Everything here is deterministic by construction: synthetic models are
+//! seeded, CKKS keygen/encryption randomness is seeded, plan compilation
+//! and optimization are deterministic, and the evaluator is exact modular
+//! arithmetic (f64 ops are IEEE-defined, identical across debug/release).
+
+mod common;
+
+use common::{clip_seeded, probe_levels, session_for_opts, variants};
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::OpCounts;
+use lingcn::he_infer::{compile, HePlan, PlanChain, PlanOptions};
+use lingcn::stgcn::StgcnModel;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+const GOLDEN_DIR: &str = "tests/golden";
+
+/// Digest for the fixture lines (the library's canonical FNV-1a, so the
+/// constants can never drift from the plan-text checksum's).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    lingcn::util::fnv1a_bytes(bytes)
+}
+
+fn regen() -> bool {
+    std::env::var("REGEN_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Compare `got` against the fixture at `name`, bootstrapping the file
+/// when absent (or when `REGEN_GOLDEN=1`). Returns whether the fixture
+/// was (re)written.
+fn check_fixture(name: &str, got: &str) -> bool {
+    let path: PathBuf = Path::new(GOLDEN_DIR).join(name);
+    if regen() || !path.exists() {
+        std::fs::create_dir_all(GOLDEN_DIR).expect("creating tests/golden");
+        std::fs::write(&path, got).expect("writing golden fixture");
+        eprintln!("golden: wrote {}", path.display());
+        return true;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading golden fixture");
+    assert_eq!(
+        want.trim_end(),
+        got.trim_end(),
+        "golden fixture {} drifted — if intentional, regenerate with `make regen-golden` \
+         and commit the diff",
+        path.display()
+    );
+    false
+}
+
+/// One line per counter, in declaration order — a readable digest that
+/// makes fixture diffs reviewable field by field.
+fn counts_digest(label: &str, c: &OpCounts) -> String {
+    let mut s = String::new();
+    for (name, v) in OpCounts::field_names().iter().zip(c.to_array()) {
+        writeln!(s, "{label}.{name} {v}").unwrap();
+    }
+    s
+}
+
+fn compile_pair(model: &StgcnModel, batch: usize) -> (HePlan, HePlan) {
+    let layout = AmaLayout::new(8, 4, 256).unwrap(); // copies() = 8
+    let levels = probe_levels(model, 256);
+    let chain = PlanChain::ideal(levels, 33);
+    let raw = compile(
+        model,
+        layout,
+        &chain,
+        PlanOptions { batch, optimize: false, ..Default::default() },
+    )
+    .unwrap();
+    let opt = compile(model, layout, &chain, PlanOptions { batch, ..Default::default() })
+        .unwrap();
+    (raw, opt)
+}
+
+/// Symbolic golden: per (variant × batch) the raw/optimized OpCounts and
+/// the optimized plan-text digest. Runs in debug and release.
+#[test]
+fn golden_opcounts_and_plan_digests() {
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    for (name, model) in variants(1) {
+        for batch in [1usize, layout.copies()] {
+            let (raw, opt) = compile_pair(&model, batch);
+            let mut s = String::new();
+            writeln!(s, "case {name} batch {batch}").unwrap();
+            s.push_str(&counts_digest("raw", &raw.counts));
+            s.push_str(&counts_digest("opt", &opt.counts));
+            writeln!(s, "raw.ops {}", raw.ops.len()).unwrap();
+            writeln!(s, "opt.ops {}", opt.ops.len()).unwrap();
+            writeln!(s, "opt.groups {}", opt.groups.len()).unwrap();
+            writeln!(s, "opt.masks {}", opt.masks.len()).unwrap();
+            writeln!(s, "levels {}", opt.levels_needed).unwrap();
+            writeln!(s, "raw.text_digest {:016x}", fnv1a(raw.to_text().as_bytes())).unwrap();
+            writeln!(s, "opt.text_digest {:016x}", fnv1a(opt.to_text().as_bytes())).unwrap();
+            for p in &opt.opt_passes {
+                writeln!(
+                    s,
+                    "pass.{} ops {} -> {} ks_decomp {} -> {}",
+                    p.name,
+                    p.before.total_ops(),
+                    p.after.total_ops(),
+                    p.before.ks_decomp,
+                    p.after.ks_decomp
+                )
+                .unwrap();
+            }
+            check_fixture(&format!("{name}_b{batch}.counts"), &s);
+        }
+    }
+}
+
+/// Real-CKKS golden: reference logits as exact f64 bit patterns, per
+/// (variant × batch ∈ {1, full}), via the default (optimized) serving
+/// session. Release-gated; run by ci.sh.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (ci.sh)")]
+fn golden_reference_logits() {
+    for (name, model) in variants(1) {
+        let copies = {
+            let layout = AmaLayout::new(8, 4, 256).unwrap();
+            layout.copies()
+        };
+        for batch in [1usize, copies] {
+            let sess =
+                session_for_opts(&model, PlanOptions { batch, ..Default::default() }, 2024);
+            let clips: Vec<Vec<f64>> = (0..batch).map(|s| clip_seeded(&model, s)).collect();
+            let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+            let input = sess.encrypt_input_batch(&model, &refs).unwrap();
+            let out = sess.infer(&model, &input).unwrap();
+            let per_clip = sess.decrypt_logits_batch(&model, &out);
+
+            let mut s = String::new();
+            writeln!(s, "case {name} batch {batch}").unwrap();
+            for (b, logits) in per_clip.iter().enumerate() {
+                write!(s, "clip {b}").unwrap();
+                for v in logits {
+                    write!(s, " {:016x}", v.to_bits()).unwrap();
+                }
+                writeln!(s).unwrap();
+                writeln!(s, "clip {b} argmax {}", lingcn::util::argmax(logits)).unwrap();
+            }
+            check_fixture(&format!("{name}_b{batch}.logits"), &s);
+        }
+    }
+}
+
+/// The bootstrap behavior itself is pinned: a fixture written by this
+/// build must compare clean against an immediate recompute (determinism
+/// guard — if compilation were nondeterministic, golden files would be
+/// unusable).
+#[test]
+fn golden_generation_is_deterministic() {
+    let (_, model) = variants(1).remove(0);
+    let (raw1, opt1) = compile_pair(&model, 4);
+    let (raw2, opt2) = compile_pair(&model, 4);
+    assert_eq!(raw1, raw2, "raw compilation must be deterministic");
+    assert_eq!(opt1, opt2, "optimization must be deterministic");
+    assert_eq!(opt1.to_text(), opt2.to_text());
+}

@@ -1,12 +1,16 @@
-//! The refactor's safety net (DESIGN.md S14): compiled `HePlan` execution
-//! must be **bit-identical** to the interpreted `HeStgcn` walk — same
-//! logits down to the last f64 bit, same `OpCounts` — on both the real
-//! CKKS backend and the symbolic counting backend, at any executor thread
-//! count.
+//! The refactor's safety net (DESIGN.md S14, S17): compiled `HePlan`
+//! execution must be **bit-identical** to the interpreted `HeStgcn` walk
+//! — same logits down to the last f64 bit — on both the real CKKS
+//! backend and the symbolic counting backend, at any executor thread
+//! count. Raw (unoptimized) plans additionally perform *exactly* the
+//! interpreter's ops; optimized plans perform a subset (CSE/DCE) with
+//! hoisted rotation groups, still bit-identical in value.
 
+mod common;
+
+use common::{clip, tiny_model, toy_params};
 use lingcn::ama::AmaLayout;
-use lingcn::ckks::{CkksParams, OpCounts};
-use lingcn::graph::Graph;
+use lingcn::ckks::OpCounts;
 use lingcn::he_infer::{
     compile, execute_with_backend, CountingBackend, HeBackend, HeStgcn, PlanChain,
     PlanOptions, PrivateInferenceSession,
@@ -14,24 +18,9 @@ use lingcn::he_infer::{
 use lingcn::linearize::LinearizationPlan;
 use lingcn::stgcn::StgcnModel;
 
-fn tiny_model(seed: u64) -> StgcnModel {
-    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
-}
-
-fn toy_params(levels: usize) -> CkksParams {
-    CkksParams {
-        n: 1 << 11,
-        q0_bits: 50,
-        scale_bits: 33,
-        levels,
-        special_bits: 55,
-        allow_insecure: true,
-    }
-}
-
-fn clip(model: &StgcnModel) -> Vec<f64> {
-    let n = model.v() * model.c_in * model.t;
-    (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+/// Raw-trace options: the op-for-op interpreter-equivalence reference.
+fn raw() -> PlanOptions {
+    PlanOptions { optimize: false, ..Default::default() }
 }
 
 /// Zero the serving-path counters that legitimately differ between the
@@ -46,7 +35,8 @@ fn core(c: OpCounts) -> OpCounts {
     }
 }
 
-/// Interpreted vs compiled on the real CKKS backend: identical bits.
+/// Interpreted vs compiled raw plan on the real CKKS backend: identical
+/// bits, identical op counts.
 fn assert_real_equivalence(model: &StgcnModel) {
     let probe = HeStgcn::new(
         model,
@@ -54,7 +44,9 @@ fn assert_real_equivalence(model: &StgcnModel) {
     )
     .unwrap();
     let levels = probe.levels_needed().unwrap();
-    let sess = PrivateInferenceSession::new(model, toy_params(levels), 2024).unwrap();
+    let sess =
+        PrivateInferenceSession::new_with_options(model, toy_params(1 << 11, levels), 2024, raw())
+            .unwrap();
     let x = clip(model);
     let input = sess.encrypt_input(model, &x).unwrap();
 
@@ -122,17 +114,63 @@ fn test_linearized_model_compiled_matches_interpreted() {
     assert_real_equivalence(&m);
 }
 
+/// The S17 guarantee: the *optimized* plan (CSE + DCE + hoisted rotation
+/// groups) still decrypts to the interpreter's exact logit bits, while
+/// doing no more of any op and strictly less key-switch decomposition.
+#[test]
+fn test_optimized_plan_bit_identical_with_fewer_decompositions() {
+    let model = tiny_model(1);
+    let probe = HeStgcn::new(
+        &model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    let levels = probe.levels_needed().unwrap();
+    let sess = PrivateInferenceSession::new(&model, toy_params(1 << 11, levels), 2024).unwrap();
+    assert!(sess.plan.optimized, "default sessions serve optimized plans");
+    assert!(!sess.plan.groups.is_empty(), "rotation fans must group");
+    let x = clip(&model);
+    let input = sess.encrypt_input(&model, &x).unwrap();
+
+    let logits_interp = sess.decrypt_logits(&model, &sess.infer_interpreted(&model, &input).unwrap());
+
+    sess.engine.eval.counters.reset();
+    let ct_plan = sess.infer(&model, &input).unwrap();
+    let counts_plan = sess.engine.eval.counters.snapshot();
+    let logits_plan = sess.decrypt_logits(&model, &ct_plan);
+    assert_eq!(
+        logits_interp, logits_plan,
+        "optimized execution must not change a single logit bit"
+    );
+    assert!(counts_plan.rot_group > 0, "groups must execute hoisted");
+    assert!(
+        counts_plan.ks_decomp < counts_plan.rot,
+        "hoisting must share decompositions across the rotation fans"
+    );
+    // the static plan counts predict the executed counts exactly (modulo
+    // the rescale_limbs convention gap checked in the raw suite)
+    let mut static_counts = sess.plan.counts;
+    static_counts.rescale_limbs = counts_plan.rescale_limbs;
+    assert_eq!(core(counts_plan), core(static_counts));
+
+    // pooled execution of a grouped plan: still bit-identical
+    for threads in [2usize, 4] {
+        let ct_par = sess.infer_parallel(&input, threads).unwrap();
+        assert_eq!(logits_interp, sess.decrypt_logits(&model, &ct_par));
+    }
+}
+
 #[test]
 fn test_counting_backend_replay_matches_interpreter() {
-    // symbolic equivalence at arbitrary (paper-scale) depth: the plan
+    // symbolic equivalence at arbitrary (paper-scale) depth: the raw plan
     // replayed on the counting backend tallies exactly the interpreter's
     // op counts, and both equal the plan's static counts
     let m = tiny_model(3);
     let layout = AmaLayout::new(8, 4, 256).unwrap();
     for opts in [
-        PlanOptions::default(),
-        PlanOptions { use_bsgs: false, fuse_activations: true, ..Default::default() },
-        PlanOptions { use_bsgs: true, fuse_activations: false, ..Default::default() },
+        raw(),
+        PlanOptions { use_bsgs: false, ..raw() },
+        PlanOptions { fuse_activations: false, ..raw() },
     ] {
         let mut he = HeStgcn::new(&m, layout).unwrap();
         he.use_bsgs = opts.use_bsgs;
@@ -158,6 +196,28 @@ fn test_counting_backend_replay_matches_interpreter() {
     }
 }
 
+/// Replaying an *optimized* plan on the counting backend tallies exactly
+/// the plan's static counts — the grouped-rotation accounting of the
+/// backend, executor, and validator all agree.
+#[test]
+fn test_counting_backend_replay_matches_optimized_static_counts() {
+    let m = tiny_model(3);
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    for batch in [1usize, 4] {
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let levels = he.levels_needed().unwrap();
+        let chain = PlanChain::ideal(levels, 33);
+        let plan = compile(&m, layout, &chain, PlanOptions { batch, ..Default::default() })
+            .unwrap();
+        assert!(plan.optimized && !plan.groups.is_empty());
+        let be = CountingBackend::new(levels, 33);
+        let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+        let out = execute_with_backend(&plan, &be, &input).unwrap();
+        assert_eq!(be.op_counts(), plan.counts, "batch {batch}");
+        assert_eq!(be.level(&out), 0, "batch {batch}");
+    }
+}
+
 #[test]
 fn test_plan_rotations_are_exactly_what_execution_needs() {
     // the engine holds Galois keys for plan.required_rotations() only —
@@ -169,8 +229,9 @@ fn test_plan_rotations_are_exactly_what_execution_needs() {
         AmaLayout::new(m.t, m.c_max().max(m.num_classes()), 1 << 10).unwrap(),
     )
     .unwrap();
-    let sess = PrivateInferenceSession::new(&m, toy_params(probe.levels_needed().unwrap()), 7)
-        .unwrap();
+    let sess =
+        PrivateInferenceSession::new(&m, toy_params(1 << 11, probe.levels_needed().unwrap()), 7)
+            .unwrap();
     let rots = sess.plan.required_rotations();
     let mut sorted = rots.clone();
     sorted.sort_unstable();

@@ -1,0 +1,224 @@
+//! Plan-text fuzz corpus (ISSUE 5 satellite; DESIGN.md S17): malformed,
+//! truncated and bit-flipped v1/v2/v3 plan texts through
+//! `HePlan::from_text` must **error** — never panic, never over-allocate
+//! from an unvalidated length field — mirroring the wire codec's
+//! corruption-corpus style (`wire_roundtrip.rs`).
+//!
+//! v3 texts carry an FNV-1a checksum on the `end` line, so even payload
+//! corruption that would still parse structurally (a flipped hex digit
+//! inside a mask value) is rejected. v1/v2 (no checksum) reject through
+//! structural and replay validation.
+
+mod common;
+
+use common::{probe_levels, variants};
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::OpCounts;
+use lingcn::he_infer::{compile, HePlan, PlanChain, PlanOptions};
+use lingcn::util::Rng;
+
+/// The corpus seeds: a raw single-clip plan, an optimized plan (groups +
+/// pass lines), and an optimized batched plan (wrap rotations).
+fn corpus() -> Vec<(String, String)> {
+    let (_, model) = variants(1).remove(0);
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    let chain = PlanChain::ideal(probe_levels(&model, 256), 33);
+    let raw = compile(
+        &model,
+        layout,
+        &chain,
+        PlanOptions { optimize: false, ..Default::default() },
+    )
+    .unwrap();
+    let opt = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
+    let batched = compile(&model, layout, &chain, PlanOptions { batch: 4, ..Default::default() })
+        .unwrap();
+    vec![
+        ("raw".into(), raw.to_text()),
+        ("optimized".into(), opt.to_text()),
+        ("batched".into(), batched.to_text()),
+    ]
+}
+
+/// Downgrade a v3 text of a *raw batch-1* plan to v1/v2 (drops meta
+/// tokens, truncates the counts arity, strips the checksum) — these must
+/// still parse, pinning the version window.
+fn downgrade(text: &str, version: usize) -> String {
+    let old_arity = OpCounts::field_names().len() - 3;
+    text.lines()
+        .map(|line| {
+            let out = if line == "heplan v3" {
+                format!("heplan v{version}")
+            } else if let Some(rest) = line.strip_prefix("meta ") {
+                let toks: Vec<&str> = rest.split_whitespace().collect();
+                let mut kept: Vec<&str> = toks[..5 + version - 1].to_vec();
+                kept.push(toks[7]);
+                format!("meta {}", kept.join(" "))
+            } else if let Some(rest) = line.strip_prefix("counts ") {
+                let toks: Vec<&str> = rest.split_whitespace().collect();
+                format!("counts {}", toks[..old_arity].join(" "))
+            } else if line.starts_with("end ") {
+                "end".to_string()
+            } else {
+                line.to_string()
+            };
+            out + "\n"
+        })
+        .collect()
+}
+
+#[test]
+fn fuzz_version_window_baseline_roundtrips() {
+    for (name, text) in corpus() {
+        let plan = HePlan::from_text(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(plan.to_text(), text, "{name}: canonical reserialization");
+    }
+    // raw plans downgrade losslessly into the old-version window: the
+    // parse of the downgraded text equals the parse of the v3 original
+    let (_, raw_text) = corpus().remove(0);
+    let raw_plan = HePlan::from_text(&raw_text).unwrap();
+    assert!(!raw_plan.optimized && raw_plan.batch == 1);
+    for version in [1usize, 2] {
+        let back = HePlan::from_text(&downgrade(&raw_text, version))
+            .unwrap_or_else(|e| panic!("v{version}: {e}"));
+        assert_eq!(back, raw_plan, "v{version} window must be lossless");
+    }
+    // an old header with the newer (longer) meta line is malformed
+    let mixed = raw_text.replace("heplan v3", "heplan v1");
+    assert!(HePlan::from_text(&mixed).is_err(), "v1 header + v3 meta arity");
+}
+
+#[test]
+fn fuzz_truncations_error_cleanly() {
+    for (name, text) in corpus() {
+        // every line boundary, plus mid-line cuts
+        let mut cuts: Vec<usize> = text
+            .char_indices()
+            .filter(|&(_, c)| c == '\n')
+            .map(|(i, _)| i + 1)
+            .collect();
+        cuts.pop(); // the full text itself parses
+        // (text.len() - 1 only sheds the final '\n', which line-based
+        // parsing legitimately tolerates — cut into the checksum instead)
+        cuts.extend([0, 1, 7, text.len() / 3, text.len() / 2, text.len() - 2]);
+        for cut in cuts {
+            let r = HePlan::from_text(&text[..cut]);
+            assert!(r.is_err(), "{name}: truncation at {cut} must error");
+        }
+    }
+}
+
+#[test]
+fn fuzz_bit_flips_error_cleanly() {
+    let mut rng = Rng::seed_from_u64(7);
+    for (name, text) in corpus() {
+        let bytes = text.as_bytes();
+        // ~200 random single-character corruptions across the text, each
+        // staying printable ASCII so the result is still a str (the final
+        // '\n' is excluded: trailing-newline loss is not corruption to a
+        // line-based format)
+        for _ in 0..200 {
+            let pos = rng.gen_range_u64(0, bytes.len() as u64 - 1) as usize;
+            let mut bad = bytes.to_vec();
+            let replacement = match bad[pos] {
+                b'0' => b'1',
+                b'9' => b'8',
+                b'a'..=b'f' => b'0',
+                b' ' => b'_',
+                b'\n' => b' ',
+                c => c ^ 1,
+            };
+            if replacement == bad[pos] {
+                continue;
+            }
+            bad[pos] = replacement;
+            let bad = String::from_utf8(bad).unwrap();
+            if bad == text {
+                continue;
+            }
+            let r = HePlan::from_text(&bad);
+            assert!(
+                r.is_err(),
+                "{name}: corruption at byte {pos} ({:?} -> {:?}) must error",
+                bytes[pos] as char,
+                replacement as char
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_hostile_length_fields_never_overallocate() {
+    // forged length prefixes far beyond the actual token count must be
+    // rejected by token-arity checks before any allocation keyed on them
+    let (_, text) = corpus().remove(1);
+    let hostile = [
+        // usize::MAX and 2^63 lengths: the arity checks must compare
+        // against the real token count, never compute `k + len` (which
+        // would overflow-panic in debug)
+        ("mask 3 0000000000000000 18446744073709551615\n", "mask length"),
+        ("group 4294967295 1 9\n", "group length"),
+        ("group 9223372036854775808 1 9\n", "group length overflow"),
+        ("chain 0000000000000000 18446744073709551615\n", "chain length"),
+        ("chain 0000000000000000 99999999\n", "chain length"),
+        ("counts 1 2 3\n", "counts arity"),
+        ("op rot 4294967295 1 4294967295\n", "register range"),
+        ("meta 1 2 3\n", "meta arity"),
+    ];
+    for (line, what) in hostile {
+        // splice the hostile line right after the header; everything
+        // after it is the original body (checksum now wrong too, but the
+        // structural error must fire without a panic either way)
+        let mut spliced = String::from("heplan v3\n");
+        spliced.push_str(line);
+        for l in text.lines().skip(1) {
+            spliced.push_str(l);
+            spliced.push('\n');
+        }
+        let r = HePlan::from_text(&spliced);
+        assert!(r.is_err(), "hostile {what} line must error");
+    }
+    // a forged end line with a garbage checksum token
+    let bad_end = text.replace("end ", "end zzzz");
+    assert!(HePlan::from_text(&bad_end).is_err());
+
+    // forged meta register counts on a checksum-free v1 text must error
+    // *before* any n_regs/n_inputs-sized allocation (vec![_; n_regs]
+    // with a 2^64-ish count would capacity-panic or OOM, not Err)
+    let (_, raw_text) = corpus().remove(0);
+    let v1 = downgrade(&raw_text, 1);
+    for (field, huge) in [(0usize, "1048577"), (0, "18446744073709551615"), (1, "1099511627776")]
+    {
+        let forged: String = v1
+            .lines()
+            .map(|l| {
+                let out = if let Some(rest) = l.strip_prefix("meta ") {
+                    let mut t: Vec<String> =
+                        rest.split_whitespace().map(str::to_string).collect();
+                    t[field] = huge.to_string();
+                    format!("meta {}", t.join(" "))
+                } else {
+                    l.to_string()
+                };
+                out + "\n"
+            })
+            .collect();
+        let r = HePlan::from_text(&forged);
+        assert!(r.is_err(), "forged meta field {field} = {huge} must error");
+    }
+}
+
+#[test]
+fn fuzz_old_versions_reject_v3_features() {
+    let (_, opt_text) = corpus().remove(1);
+    // group/pass/rotg lines under a v1/v2 header must error
+    for version in ["heplan v1", "heplan v2"] {
+        let degraded = opt_text.replace("heplan v3", version);
+        assert!(
+            HePlan::from_text(&degraded).is_err(),
+            "{version} must reject v3 structures"
+        );
+    }
+    // unknown future version
+    assert!(HePlan::from_text(&opt_text.replace("heplan v3", "heplan v4")).is_err());
+}

@@ -2,12 +2,19 @@
 //! proptest crate; these are seeded-sweep equivalents over the same
 //! invariants — each case runs dozens of random instances).
 
+mod common;
+
+use common::{clip, probe_levels, tiny_model, toy_params};
 use lingcn::ama::AmaLayout;
 use lingcn::ckks::{CkksEngine, CkksParams};
 use lingcn::coordinator::{Batcher, Pending, Router};
 use lingcn::graph::Graph;
+use lingcn::he_infer::opt::{cse_pass, dce_pass, group_pass, optimize};
+use lingcn::he_infer::{compile, HeOp, HePlan, HeStgcn, PlanChain, PlanOptions, PreparedPlan};
 use lingcn::linearize::LinearizationPlan;
+use lingcn::stgcn::StgcnModel;
 use lingcn::util::Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// CKKS: (a+b)·c ≈ a·c + b·c homomorphically, over random vectors/scales.
@@ -168,6 +175,208 @@ fn prop_batcher_conservation() {
         }
         assert_eq!(b.queued(), 0);
         assert_eq!(pushed_per, popped_per, "conservation + FIFO per variant");
+    }
+}
+
+// ------------------------------------------------ optimizer properties
+
+/// A randomized raw plan: model shape, engine toggles and batch size all
+/// drawn from `rng`, optionally with synthetic redundancy spliced in
+/// (a duplicated rotation re-consumed downstream, plus a dead tail) so
+/// CSE and DCE have guaranteed work even on traces that are naturally
+/// duplicate-free. Returns the plan and whether redundancy was injected.
+fn random_raw_plan(rng: &mut Rng) -> (HePlan, bool) {
+    let layers = rng.gen_range_u64(1, 3) as usize;
+    let v = rng.gen_range_u64(3, 7) as usize;
+    let model = StgcnModel::synthetic(
+        Graph::ring(v),
+        8,
+        2,
+        3,
+        &vec![4; layers],
+        3,
+        rng.gen_range_u64(1, 1 << 30),
+    );
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    let opts = PlanOptions {
+        use_bsgs: rng.gen_range_u64(0, 2) == 1,
+        fuse_activations: rng.gen_range_u64(0, 2) == 1,
+        batch: [1usize, 2, 8][rng.gen_range_u64(0, 3) as usize],
+        optimize: false,
+    };
+    let he = {
+        let mut he = HeStgcn::new(&model, layout).unwrap();
+        he.use_bsgs = opts.use_bsgs;
+        he.fuse_activations = opts.fuse_activations;
+        he.batch = opts.batch;
+        he
+    };
+    let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+    let mut plan = compile(&model, layout, &chain, opts).unwrap();
+
+    let inject = rng.gen_range_u64(0, 2) == 1 && inject_redundancy(&mut plan, rng);
+    (plan, inject)
+}
+
+/// Splice in (a) a duplicate of an existing rotation whose result one
+/// later consumer reads — bit-identical math, redundant op — and (b) a
+/// rotation nobody reads. Refreshes and re-validates the plan. Returns
+/// whether anything was injected.
+fn inject_redundancy(plan: &mut HePlan, rng: &mut Rng) -> bool {
+    let rots: Vec<(usize, (u32, u32, u32))> = plan
+        .ops
+        .iter()
+        .enumerate()
+        .filter_map(|(i, op)| match *op {
+            HeOp::Rotate { src, k, dst } => Some((i, (src, k, dst))),
+            _ => None,
+        })
+        .collect();
+    if rots.is_empty() {
+        return false;
+    }
+    let (idx, (src, k, dst)) = rots[rng.gen_range_u64(0, rots.len() as u64) as usize];
+    let dup = plan.n_regs as u32;
+    plan.n_regs += 1;
+    plan.ops.insert(idx + 1, HeOp::Rotate { src, k, dst: dup });
+    if let Some(user) = plan.ops[idx + 2..]
+        .iter()
+        .position(|op| {
+            !matches!(op, HeOp::RotGroup { .. })
+                && (op.sources().0 == dst || op.sources().1 == Some(dst))
+        })
+        .map(|p| p + idx + 2)
+    {
+        let op = plan.ops[user];
+        let rename: Vec<u32> = (0..plan.n_regs as u32)
+            .map(|r| if r == dst { dup } else { r })
+            .collect();
+        plan.ops[user] = match op {
+            HeOp::Rotate { src, k, dst } => HeOp::Rotate { src: rename[src as usize], k, dst },
+            HeOp::MulPlain { src, mask, dst } => {
+                HeOp::MulPlain { src: rename[src as usize], mask, dst }
+            }
+            HeOp::AddPlain { src, mask, dst } => {
+                HeOp::AddPlain { src: rename[src as usize], mask, dst }
+            }
+            HeOp::Add { a, b, dst } => {
+                HeOp::Add { a: rename[a as usize], b: rename[b as usize], dst }
+            }
+            HeOp::Sub { a, b, dst } => {
+                HeOp::Sub { a: rename[a as usize], b: rename[b as usize], dst }
+            }
+            HeOp::Mul { a, b, dst } => {
+                HeOp::Mul { a: rename[a as usize], b: rename[b as usize], dst }
+            }
+            HeOp::Rescale { src, dst } => HeOp::Rescale { src: rename[src as usize], dst },
+            HeOp::RotGroup { .. } => unreachable!(),
+        };
+    }
+    // a dead tail DCE must sweep
+    let dead = plan.n_regs as u32;
+    plan.n_regs += 1;
+    plan.ops.push(HeOp::Rotate { src: plan.output, k: 8, dst: dead });
+    plan.refresh().unwrap();
+    plan.validate().unwrap();
+    true
+}
+
+/// ISSUE 5 property (a) + (c): randomized plans through each pass alone
+/// and through the full pipeline must still validate, never increase any
+/// cost-bearing `OpCounts` field, keep `levels_needed`, and keep the
+/// rotation-step requirement.
+#[test]
+fn prop_optimizer_passes_preserve_validity_and_never_add_cost() {
+    let mut rng = Rng::seed_from_u64(41);
+    let passes: [(&str, fn(&HePlan) -> anyhow::Result<HePlan>); 4] = [
+        ("cse", cse_pass),
+        ("dce", dce_pass),
+        ("rot-group", group_pass),
+        ("pipeline", |p| optimize(p)),
+    ];
+    for case in 0..12 {
+        let (plan, injected) = random_raw_plan(&mut rng);
+        for (name, pass) in passes {
+            let out = pass(&plan).expect(name);
+            out.validate().unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            assert_eq!(out.levels_needed, plan.levels_needed, "case {case} {name}");
+            assert_eq!(
+                out.required_rotations(),
+                plan.required_rotations(),
+                "case {case} {name}: rotation keys must stay sufficient"
+            );
+            assert_eq!(out.n_inputs, plan.n_inputs, "case {case} {name}");
+            assert!((out.output as usize) < out.n_regs, "case {case} {name}");
+            for ((field, o), (_, r)) in
+                out.counts.cost_fields().iter().zip(plan.counts.cost_fields())
+            {
+                assert!(
+                    *o <= r,
+                    "case {case} {name} {field}: {o} > {r} (pass added cost)"
+                );
+            }
+        }
+        let opt = optimize(&plan).unwrap();
+        if injected {
+            // the spliced-in duplicate and dead tail must both go
+            assert!(
+                opt.counts.total_ops() < plan.counts.total_ops(),
+                "case {case}: pipeline left injected redundancy in place"
+            );
+        }
+        // grouping must fire on every trace family (hoisted GCN fans)
+        assert!(opt.counts.ks_decomp < plan.counts.ks_decomp, "case {case}");
+    }
+}
+
+/// ISSUE 5 property (b): the optimized plan decrypts to **bit-identical**
+/// logits vs the unoptimized plan — same ciphertext inputs, same engine,
+/// every slot's f64 bits equal. Real CKKS, so release-gated.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn prop_optimized_plans_decrypt_bit_identical() {
+    for seed in [11u64, 12] {
+        let model = tiny_model(seed);
+        let levels = probe_levels(&model, 1 << 10);
+        let params = toy_params(1 << 11, levels);
+        let ctx = params.build().unwrap();
+        let layout = AmaLayout::new(
+            model.t,
+            model.c_max().max(model.num_classes()),
+            ctx.slots(),
+        )
+        .unwrap();
+        let chain = PlanChain::from_ctx(&ctx);
+        let raw = Arc::new(
+            compile(&model, layout, &chain, PlanOptions { optimize: false, ..Default::default() })
+                .unwrap(),
+        );
+        let opt = Arc::new(optimize(&raw).unwrap());
+        assert_eq!(raw.required_rotations(), opt.required_rotations());
+
+        let engine = CkksEngine::new(params, &raw.required_rotations(), seed).unwrap();
+        let prepared_raw = PreparedPlan::new(raw.clone(), &engine).unwrap();
+        let prepared_opt = PreparedPlan::new(opt.clone(), &engine).unwrap();
+        let x = clip(&model);
+        let input = lingcn::ama::encrypt_clip(
+            &engine,
+            &layout,
+            &x,
+            model.v(),
+            model.c_in,
+            levels + 1,
+        )
+        .unwrap()
+        .cts;
+        for threads in [1usize, 3] {
+            let a = prepared_raw.execute(&engine, &input, threads).unwrap();
+            let b = prepared_opt.execute(&engine, &input, threads).unwrap();
+            assert_eq!(
+                engine.decrypt(&a),
+                engine.decrypt(&b),
+                "seed {seed} threads {threads}: optimized plan changed decrypted bits"
+            );
+        }
     }
 }
 

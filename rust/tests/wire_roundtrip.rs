@@ -11,6 +11,9 @@
 //! * The multi-tenant coordinator flow: registry hits/misses/evictions,
 //!   and the wire tier rejecting plaintext.
 
+mod common;
+
+use common::{clip, tiny_model};
 use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams, PublicKey};
 use lingcn::coordinator::{Coordinator, KeyRegistry, Metrics, Router};
 use lingcn::graph::Graph;
@@ -21,15 +24,6 @@ use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
-
-fn tiny_model(seed: u64) -> StgcnModel {
-    StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, seed)
-}
-
-fn clip(model: &StgcnModel) -> Vec<f64> {
-    let n = model.v() * model.c_in * model.t;
-    (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
-}
 
 // ------------------------------------------------------ property tests
 
