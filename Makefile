@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test test-batch bench bench-plan bench-wire bench-batch regen-golden
+.PHONY: artifacts artifacts-quick test test-batch test-net bench bench-plan bench-wire bench-batch regen-golden
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -38,9 +38,16 @@ regen-golden:
 	REGEN_GOLDEN=1 cargo test --release --test golden_vectors
 
 # wire-format serialize/deserialize throughput + eval-key bundle sizes
-# per nl; writes rust/BENCH_wire.json
+# per nl, plus the loopback TCP round-trip latency/throughput section;
+# writes rust/BENCH_wire.json
 bench-wire:
 	cargo bench --bench wire
+
+# the TCP tier end to end: the mock-backed fault-injection corpus and the
+# loopback bit-identity/concurrency suites (release: the roundtrip cases
+# run real CKKS)
+test-net:
+	cargo test --release --test net_faults --test net_roundtrip
 
 # slot-packed batch inference: clips/sec at batch 1 vs the layout's full
 # copies(); writes BENCH_batch.json (asserts the ≥2x acceptance floor)

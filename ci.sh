@@ -47,6 +47,22 @@ echo "==> cargo test --release (slot-batched differential + end-to-end suites)"
 # the optimizer's bit-identity differential (property_suite)
 cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip --test property_suite
 
+echo "==> TCP tier: loopback + fault-injection suites (release)"
+# net_faults is mock-backed (fast); net_roundtrip's release-gated cases
+# run real CKKS over a loopback socket, including the bit-identity
+# acceptance (socket logits == in-process logits). A hung socket must
+# fail loudly, not wedge CI: give each suite a hard timeout where the
+# coreutils timeout binary exists.
+run_timed() {
+    if command -v timeout >/dev/null; then
+        timeout --signal=KILL "$1" "${@:2}"
+    else
+        "${@:2}"
+    fi
+}
+run_timed 600 cargo test --release -q --test net_faults
+run_timed 1200 cargo test --release -q --test net_roundtrip
+
 echo "==> golden vectors (release: logits + op-count digests)"
 # missing fixtures bootstrap (first run on a fresh tree writes them);
 # existing fixtures gate against any cross-PR numeric or op-count drift —

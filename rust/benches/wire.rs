@@ -1,17 +1,27 @@
-//! Wire-format costs (DESIGN.md S15): serialize/deserialize throughput
-//! for ciphertext bundles and the per-variant eval-key bundle size — the
-//! bytes a tenant ships at registration and per request. Synthetic
-//! variant family of increasing depth (the nl knob grows the modulus
-//! chain, which grows keys quadratically: digits × limbs). Emits
-//! `BENCH_wire.json`.
+//! Wire-format costs (DESIGN.md S15/S18): serialize/deserialize
+//! throughput for ciphertext bundles, the per-variant eval-key bundle
+//! size — the bytes a tenant ships at registration and per request — and
+//! the loopback TCP round-trip (register + infer latency over a real
+//! `NetServer` on `127.0.0.1`). Synthetic variant family of increasing
+//! depth (the nl knob grows the modulus chain, which grows keys
+//! quadratically: digits × limbs). Emits `BENCH_wire.json`.
 //! Run: cargo bench --bench wire  (or `make bench-wire`)
 
+use lingcn::coordinator::{
+    Coordinator, InferenceExecutor, KeyRegistry, Metrics, ModelVariant, Router,
+};
 use lingcn::graph::Graph;
 use lingcn::he_infer::PlanOptions;
 use lingcn::stgcn::StgcnModel;
 use lingcn::util::{ascii_table, bench::time_op};
-use lingcn::wire::{keygen, CtBundle, EvalKeySet, WireSerialize};
-use std::time::Duration;
+use lingcn::wire::net::Client as NetClient;
+use lingcn::wire::{
+    keygen, CoordinatorBackend, CtBundle, EvalKeySet, NetConfig, NetServer, WireExecutor,
+    WireSerialize,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 struct Row {
     nl: usize,
@@ -92,6 +102,67 @@ fn main() {
         )
     );
 
+    // ---- loopback TCP round-trip (DESIGN.md S18) -------------------------
+    // the full remote path on 127.0.0.1: keygen → connect → register →
+    // streamed upload → encrypted logits back, over the real coordinator
+    let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let (client, key_set) = keygen(&model, "bench-net", PlanOptions::default(), 7).unwrap();
+    let n = model.v() * model.c_in * model.t;
+    let x: Vec<f64> = (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect();
+    let bundle = client.encrypt_request(&x).unwrap();
+
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(8, Some(metrics.clone())));
+    let mut models = HashMap::new();
+    models.insert("bench-net".to_string(), model.clone());
+    let mut executor = WireExecutor::new(models, 2, registry);
+    executor.set_metrics(metrics.clone());
+    let executor = Arc::new(executor);
+    let dyn_exec: Arc<dyn InferenceExecutor> = executor.clone();
+    let coord = Coordinator::start_with_metrics(
+        Router::new(vec![ModelVariant {
+            name: "bench-net".into(),
+            nl: 2,
+            latency_s: 1.0,
+            accuracy: 0.9,
+        }]),
+        dyn_exec,
+        metrics.clone(),
+        2,
+        8,
+        Duration::from_millis(2),
+    );
+    let backend = Arc::new(CoordinatorBackend::new(executor, coord));
+    let server =
+        NetServer::bind("127.0.0.1:0", backend, metrics.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr().to_string();
+
+    let t0 = Instant::now();
+    let mut conn = NetClient::connect_with(&addr, "bench", Duration::from_secs(600)).unwrap();
+    conn.register(&key_set).unwrap();
+    let register_s = t0.elapsed().as_secs_f64();
+    // one counted round-trip for the exact wire bytes of a request
+    let (out0, in0) = (conn.bytes_out, conn.bytes_in);
+    conn.infer(Some("bench-net"), &bundle).unwrap();
+    let upload_bytes = conn.bytes_out - out0;
+    let download_bytes = conn.bytes_in - in0;
+    // then the sampled round-trip latency (the warm-up already happened)
+    let rt = time_op(0, 8, budget, || {
+        conn.infer(Some("bench-net"), &bundle).unwrap();
+    });
+    let rt_s = rt.median_secs();
+    drop(conn);
+    server.shutdown();
+    println!(
+        "loopback: register {:.1} ms, round-trip {:.1} ms ({:.2} req/s), \
+         {:.2} MiB up / {:.3} MiB down per request",
+        register_s * 1e3,
+        rt_s * 1e3,
+        1.0 / rt_s.max(1e-12),
+        upload_bytes as f64 / (1024.0 * 1024.0),
+        download_bytes as f64 / (1024.0 * 1024.0),
+    );
+
     let mut json = String::from("{\n  \"variants\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
@@ -108,7 +179,16 @@ fn main() {
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"loopback\": {{\"register_s\": {:.6}, \"round_trip_s\": {:.6}, \
+         \"round_trips_per_s\": {:.3}, \"upload_bytes\": {upload_bytes}, \
+         \"download_bytes\": {download_bytes}}}\n",
+        register_s,
+        rt_s,
+        1.0 / rt_s.max(1e-12),
+    ));
+    json.push_str("}\n");
     std::fs::write("BENCH_wire.json", &json).expect("writing BENCH_wire.json");
     println!("wrote BENCH_wire.json");
 

@@ -10,10 +10,11 @@
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
 //! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17) |
-//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys (see below) |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive |
 //! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
 //! | `encrypt --key F --input X.lgt --out R.cts [--batch B]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip) |
 //! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
+//! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits, all over one TCP connection (DESIGN.md S18) |
 //!
 //! The four-verb wire roundtrip (privacy boundary, DESIGN.md S15):
 //!
@@ -23,6 +24,13 @@
 //! lingcn serve --tier he-wire --tenant alice --eval-keys wire/eval_nl2.keys \
 //!              --request wire/request.cts --response wire/response.ct
 //! lingcn decrypt-logits --key wire/client_nl2.key --in wire/response.ct
+//! ```
+//!
+//! The same boundary over a real socket (DESIGN.md S18) is two commands:
+//!
+//! ```text
+//! lingcn serve --tier he-wire --listen 127.0.0.1:7070     # terminal 1
+//! lingcn infer-remote --addr 127.0.0.1:7070 --nl 2        # terminal 2
 //! ```
 //!
 //! `plan`, `calibrate` and `predict` are self-contained; `infer`,
@@ -61,9 +69,10 @@ pub fn run(args: &[String]) -> Result<i32> {
         Some("keygen") => cmd_keygen(args).map(|()| 0),
         Some("encrypt") => cmd_encrypt(args).map(|()| 0),
         Some("decrypt-logits") => cmd_decrypt_logits(args).map(|()| 0),
+        Some("infer-remote") => cmd_infer_remote(args).map(|()| 0),
         _ => {
             eprintln!(
-                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits> [options]"
+                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits|infer-remote> [options]"
             );
             Ok(USAGE_EXIT)
         }
@@ -225,6 +234,40 @@ fn weak_entropy() -> u64 {
     crate::util::fnv1a_u64([nanos, std::process::id() as u64])
 }
 
+/// Shared seed policy for the key-generating verbs (`keygen`,
+/// `infer-remote`): explicit `--seed` is reproducible (tests) but
+/// derivable, and warns; the default seeds full 256-bit state from the OS
+/// entropy device, with a loud time+pid fallback.
+fn keygen_from_args(
+    args: &[String],
+    model: &crate::stgcn::StgcnModel,
+    variant: &str,
+    opts: crate::he_infer::PlanOptions,
+) -> Result<(crate::wire::ClientKeys, crate::wire::EvalKeySet)> {
+    if let Some(s) = arg_value(args, "--seed") {
+        eprintln!(
+            "WARNING: --seed makes the secret key derivable from the seed \
+             value; use only for reproducible tests"
+        );
+        crate::wire::keygen(model, variant, opts, s.parse()?)
+    } else {
+        let mut state = [0u64; 4];
+        match os_entropy(&mut state) {
+            Ok(()) => crate::wire::keygen_with_state(model, variant, opts, state),
+            Err(_) => {
+                eprintln!(
+                    "WARNING: no OS entropy device (/dev/urandom); falling \
+                     back to time+pid seeding — the generated key is \
+                     guessable by an attacker who can bound the invocation \
+                     time. Do not use this key for anything but local \
+                     testing."
+                );
+                crate::wire::keygen(model, variant, opts, weak_entropy())
+            }
+        }
+    }
+}
+
 fn cmd_keygen(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
@@ -244,30 +287,7 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     // symmetry with the serving flags.
     let optimize = !args.iter().any(|a| a == "--no-opt");
     let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
-    // seed policy: explicit --seed is reproducible (tests) but derivable;
-    // the default seeds full 256-bit state from the OS entropy device
-    let (client, key_set) = if let Some(s) = arg_value(args, "--seed") {
-        eprintln!(
-            "WARNING: --seed makes the secret key derivable from the seed \
-             value; use only for reproducible tests"
-        );
-        crate::wire::keygen(&model, &variant, opts, s.parse()?)?
-    } else {
-        let mut state = [0u64; 4];
-        match os_entropy(&mut state) {
-            Ok(()) => crate::wire::keygen_with_state(&model, &variant, opts, state)?,
-            Err(_) => {
-                eprintln!(
-                    "WARNING: no OS entropy device (/dev/urandom); falling \
-                     back to time+pid seeding — the generated key is \
-                     guessable by an attacker who can bound the invocation \
-                     time. Do not use this key for anything but local \
-                     testing."
-                );
-                crate::wire::keygen(&model, &variant, opts, weak_entropy())?
-            }
-        }
-    };
+    let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
     std::fs::create_dir_all(&out_dir)?;
     use crate::wire::WireSerialize;
     let client_path = out_dir.join(format!("client_nl{nl}.key"));
@@ -428,12 +448,17 @@ fn cmd_decrypt_logits(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The wire tier: register the tenant's eval keys, run the ciphertext
-/// request file through the coordinator, write the logits ciphertext.
-/// The server side of this function only ever handles serialized keys
-/// and ciphertexts — no secret key, no plaintext clip.
-fn cmd_serve_wire(args: &[String]) -> Result<()> {
-    use crate::wire::WireSerialize;
+/// Shared `--tier he-wire` executor flags, parsed and validated before
+/// any artifact or socket work so flag errors stay fast and clean.
+struct WireServeFlags {
+    workers: usize,
+    threads: usize,
+    limb_threads: usize,
+    capacity: usize,
+    optimize: bool,
+}
+
+fn wire_serve_flags(args: &[String]) -> Result<WireServeFlags> {
     // wire batching is client-side: the request bundle carries its own
     // batch size, so a server-side --batch here would only mislead
     anyhow::ensure!(
@@ -441,19 +466,113 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
         "--batch does not apply to --tier he-wire: the slot-batch size \
          travels in the request bundle (use `encrypt --batch B`)"
     );
-    let workers: usize = arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?;
-    let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
-    let optimize = !args.iter().any(|a| a == "--no-opt");
-    let limb_threads: usize =
-        arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
-    let capacity: usize =
-        arg_value(args, "--registry-capacity").unwrap_or_else(|| "64".into()).parse()?;
+    Ok(WireServeFlags {
+        workers: arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?,
+        threads: arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?,
+        limb_threads: arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?,
+        capacity: arg_value(args, "--registry-capacity").unwrap_or_else(|| "64".into()).parse()?,
+        optimize: !args.iter().any(|a| a == "--no-opt"),
+    })
+}
+
+/// The wire tier has two modes: `--listen ADDR` serves the TCP protocol
+/// (DESIGN.md S18); `--dir D` (or explicit `--eval-keys`/`--request`/
+/// `--response`) runs the offline file-driven roundtrip. They are
+/// mutually exclusive — previously the file path silently won.
+fn cmd_serve_wire(args: &[String]) -> Result<()> {
+    let flags = wire_serve_flags(args)?;
+    let listen = arg_value(args, "--listen");
+    let file_flags: Vec<&str> = ["--dir", "--eval-keys", "--request", "--response"]
+        .into_iter()
+        .filter(|f| args.iter().any(|a| a == f))
+        .collect();
+    if listen.is_some() && !file_flags.is_empty() {
+        anyhow::bail!(
+            "--listen (network serving) and {} (file-driven roundtrip) are \
+             mutually exclusive — pick one mode",
+            file_flags.join("/")
+        );
+    }
+    match listen {
+        Some(addr) => cmd_serve_wire_listen(args, &addr, flags),
+        None if file_flags.is_empty() => anyhow::bail!(
+            "serve --tier he-wire needs a mode: --listen <addr> for network \
+             serving, or --dir <dir> (or explicit --eval-keys/--request/\
+             --response) for the file-driven roundtrip"
+        ),
+        None => cmd_serve_wire_files(args, flags),
+    }
+}
+
+/// Resolve the single `<prefix>*<suffix>` file in `dir` (e.g. the
+/// eval-key bundle `keygen --out-dir` wrote there).
+fn find_unique_file(dir: &Path, prefix: &str, suffix: &str) -> Result<std::path::PathBuf> {
+    let mut matches: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("scanning {}: {e}", dir.display()))?
+        .filter_map(|entry| entry.ok())
+        .map(|entry| entry.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(prefix) && n.ends_with(suffix))
+        })
+        .collect();
+    matches.sort();
+    match matches.len() {
+        0 => anyhow::bail!(
+            "no {prefix}*{suffix} in {} (run `lingcn keygen --out-dir` first?)",
+            dir.display()
+        ),
+        1 => Ok(matches.remove(0)),
+        n => anyhow::bail!(
+            "{n} {prefix}*{suffix} candidates in {} — pass --eval-keys explicitly",
+            dir.display()
+        ),
+    }
+}
+
+/// File-driven mode: register the tenant's eval keys, run the ciphertext
+/// request file through the coordinator, write the logits ciphertext.
+/// The server side of this function only ever handles serialized keys
+/// and ciphertexts — no secret key, no plaintext clip.
+fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
+    use crate::wire::WireSerialize;
+    let WireServeFlags { workers, threads, limb_threads, capacity, optimize } = flags;
     let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "cli-tenant".into());
-    let eval_keys = arg_value(args, "--eval-keys")
-        .ok_or_else(|| anyhow::anyhow!("serve --tier he-wire requires --eval-keys <file>"))?;
-    let request = arg_value(args, "--request")
-        .ok_or_else(|| anyhow::anyhow!("serve --tier he-wire requires --request <file>"))?;
-    let response = arg_value(args, "--response").unwrap_or_else(|| "wire/response.ct".into());
+    // --dir D fills in the conventional names (keygen's eval_nl*.keys,
+    // encrypt's request.cts); explicit flags override file-by-file
+    let dir = arg_value(args, "--dir").map(std::path::PathBuf::from);
+    let eval_keys = match arg_value(args, "--eval-keys") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let d = dir.as_deref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "serve --tier he-wire requires --eval-keys <file> (or \
+                     --dir <dir> containing an eval_nl*.keys bundle)"
+                )
+            })?;
+            find_unique_file(d, "eval", ".keys")?
+        }
+    };
+    let request = match arg_value(args, "--request") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => match &dir {
+            Some(d) => d.join("request.cts"),
+            None => anyhow::bail!(
+                "serve --tier he-wire requires --request <file> (or --dir <dir> \
+                 containing request.cts)"
+            ),
+        },
+    };
+    let response = match arg_value(args, "--response") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => match &dir {
+            Some(d) => d.join("response.ct"),
+            None => std::path::PathBuf::from("wire/response.ct"),
+        },
+    };
+    let (eval_keys, request, response) =
+        (eval_keys.as_path(), request.as_path(), response.as_path());
 
     crate::ckks::set_limb_parallelism(limb_threads);
     let cost = OpCostModel::reference();
@@ -468,13 +587,13 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
     // tenant keys cover the same rotation set either way (the optimizer
     // never adds or drops a distinct step), so --no-opt is safe here
     executor.set_optimize(optimize);
-    let key_set = crate::wire::EvalKeySet::from_bytes(&std::fs::read(Path::new(&eval_keys))?)?;
+    let key_set = crate::wire::EvalKeySet::from_bytes(&std::fs::read(eval_keys)?)?;
     let variant = key_set.variant.clone();
     let tenant_params = key_set.params.clone();
     executor.register(&tenant, key_set)?;
     println!("registered tenant {tenant} for variant {variant}");
 
-    let bundle = crate::wire::CtBundle::from_bytes(&std::fs::read(Path::new(&request))?)?;
+    let bundle = crate::wire::CtBundle::from_bytes(&std::fs::read(request)?)?;
     // reject cross-chain requests up front: ciphertexts encrypted under a
     // different parameter set would otherwise decode as silent garbage
     bundle.check_params(&tenant_params)?;
@@ -497,18 +616,141 @@ fn cmd_serve_wire(args: &[String]) -> Result<()> {
     }
     let ct = resp.ct_logits.expect("ok response carries the logits ciphertext");
     let bytes = ct.to_bytes();
-    ensure_parent_dir(Path::new(&response))?;
-    std::fs::write(Path::new(&response), &bytes)?;
+    ensure_parent_dir(response)?;
+    std::fs::write(response, &bytes)?;
     println!(
-        "served variant={} queue={:?} exec={:?} wall={:?} → wrote {response} ({} bytes)",
+        "served variant={} queue={:?} exec={:?} wall={:?} → wrote {} ({} bytes)",
         resp.variant,
         resp.queue,
         resp.exec,
         t0.elapsed(),
+        response.display(),
         bytes.len()
     );
     println!("{}", coord.metrics.summary());
     coord.shutdown();
+    Ok(())
+}
+
+/// Network mode (DESIGN.md S18): bind the TCP tier over the coordinator
+/// and serve until killed. Tenants register their own eval keys over the
+/// socket, so no `--eval-keys`/`--tenant` here.
+fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> Result<()> {
+    let WireServeFlags { workers, threads, limb_threads, capacity, optimize } = flags;
+    // net knobs, validated before artifact loading
+    let read_timeout_ms: u64 =
+        arg_value(args, "--read-timeout-ms").unwrap_or_else(|| "30000".into()).parse()?;
+    let write_timeout_ms: u64 =
+        arg_value(args, "--write-timeout-ms").unwrap_or_else(|| "30000".into()).parse()?;
+    let max_conns: usize =
+        arg_value(args, "--max-conns-per-tenant").unwrap_or_else(|| "64".into()).parse()?;
+    let max_inflight: usize =
+        arg_value(args, "--max-inflight-per-tenant").unwrap_or_else(|| "32".into()).parse()?;
+
+    crate::ckks::set_limb_parallelism(limb_threads);
+    let cost = OpCostModel::reference();
+    let metrics = std::sync::Arc::new(crate::coordinator::Metrics::default());
+    let (router, mut executor) = crate::coordinator::wire_from_artifacts(
+        Path::new("artifacts"),
+        &cost,
+        threads,
+        capacity,
+        metrics.clone(),
+    )?;
+    executor.set_optimize(optimize);
+    let executor = std::sync::Arc::new(executor);
+    println!("variants:");
+    for v in router.variants() {
+        println!(
+            "  {} nl={} acc={:.3} predicted-HE-latency={:.0}s",
+            v.name, v.nl, v.accuracy, v.latency_s
+        );
+    }
+    let dyn_exec: std::sync::Arc<dyn crate::coordinator::InferenceExecutor> = executor.clone();
+    let coord = crate::coordinator::Coordinator::start_with_metrics(
+        router,
+        dyn_exec,
+        metrics.clone(),
+        workers,
+        8,
+        std::time::Duration::from_millis(2),
+    );
+    let backend =
+        std::sync::Arc::new(crate::wire::net::CoordinatorBackend::new(executor, coord));
+    let cfg = crate::wire::net::NetConfig {
+        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+        write_timeout: std::time::Duration::from_millis(write_timeout_ms),
+        max_conns_per_tenant: max_conns,
+        max_inflight_per_tenant: max_inflight,
+        ..Default::default()
+    };
+    let server = crate::wire::net::NetServer::bind(addr, backend, metrics.clone(), cfg)?;
+    println!(
+        "listening on {} ({workers} workers, {threads} plan-exec threads; \
+         tenants register eval keys over the socket; ctrl-c to stop)",
+        server.local_addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        println!("{}", metrics.summary());
+    }
+}
+
+/// Client side of the TCP tier: keygen → register → encrypt → streamed
+/// upload → decrypt, all against a remote `serve --tier he-wire --listen`
+/// process. Only eval keys and ciphertexts leave this process.
+fn cmd_infer_remote(args: &[String]) -> Result<()> {
+    let addr = arg_value(args, "--addr")
+        .ok_or_else(|| anyhow::anyhow!("infer-remote requires --addr <host:port>"))?;
+    let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "cli-tenant".into());
+    let timeout_ms: u64 =
+        arg_value(args, "--timeout-ms").unwrap_or_else(|| "600000".into()).parse()?;
+    let input =
+        arg_value(args, "--input").unwrap_or_else(|| "artifacts/example_input.lgt".into());
+    let optimize = !args.iter().any(|a| a == "--no-opt");
+    let variant = format!("lingcn-nl{nl}");
+    let model = crate::stgcn::StgcnModel::load(
+        &Path::new("artifacts").join(format!("model_nl{nl}.lgt")),
+        crate::graph::Graph::ntu_rgbd(),
+    )?;
+    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
+    let ex = crate::util::tensorio::TensorFile::load(Path::new(&input))?;
+    let x = &ex.get("x")?.data;
+
+    let t0 = std::time::Instant::now();
+    let mut conn = crate::wire::net::Client::connect_with(
+        &addr,
+        &tenant,
+        std::time::Duration::from_millis(timeout_ms),
+    )?;
+    conn.register(&key_set)?;
+    let t_registered = t0.elapsed();
+    // demo batch: the example clip slot-packed B times (a deployment
+    // packs B distinct clips)
+    let bundle = if batch > 1 {
+        let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
+        client.encrypt_request_batch(&clips)?
+    } else {
+        client.encrypt_request(x)?
+    };
+    let reply = conn.infer(Some(&variant), &bundle)?;
+    let wall = t0.elapsed();
+    for (b, logits) in client.decrypt_logits_batch(&reply.ct_logits, batch)?.iter().enumerate() {
+        let arg = crate::util::argmax(logits);
+        println!(
+            "variant={} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}",
+            reply.variant
+        );
+    }
+    println!(
+        "remote={addr} register={t_registered:?} queue={:?} exec={:?} wall={wall:?} \
+         sent={}B received={}B",
+        reply.queue, reply.exec, conn.bytes_out, conn.bytes_in
+    );
     Ok(())
 }
 

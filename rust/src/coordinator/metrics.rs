@@ -41,6 +41,23 @@ pub struct Metrics {
     /// Rotations re-homed into hoisted `RotGroup`s (decompose-once key
     /// switching), summed over fresh plan compiles.
     pub opt_rots_grouped: AtomicU64,
+    /// TCP connections that passed the hello handshake + admission check
+    /// (wire::net; DESIGN.md S18).
+    pub net_conns_accepted: AtomicU64,
+    /// TCP connections turned away at the handshake (bad hello, protocol
+    /// mismatch, or tenant over its connection quota).
+    pub net_conns_rejected: AtomicU64,
+    /// Gauge: connections currently open (incremented on accept,
+    /// decremented when the handler returns — panic-safe via guard).
+    pub net_conns_active: AtomicU64,
+    /// Bytes read from sockets (requests, including rejected frames).
+    pub net_bytes_in: AtomicU64,
+    /// Bytes written to sockets (replies, including error frames).
+    pub net_bytes_out: AtomicU64,
+    /// Requests rejected after the handshake (unknown tenant, in-flight
+    /// quota, malformed frames) — connection-level rejects are counted in
+    /// `net_conns_rejected` instead.
+    pub net_requests_rejected: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -103,7 +120,8 @@ impl Metrics {
         format!(
             "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
              key_registry={}h/{}m/{}e slot_batch={}j/{}r fill={:.2} occ={:.2} \
-             opt={}ops/{}rots mean={:?} p50≤{:?} p99≤{:?}",
+             opt={}ops/{}rots net_conns={}a/{}r/{}live net_io={}in/{}out \
+             net_req_rej={} mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -119,6 +137,12 @@ impl Metrics {
             self.slot_occupancy(),
             self.opt_ops_removed.load(Ordering::Relaxed),
             self.opt_rots_grouped.load(Ordering::Relaxed),
+            self.net_conns_accepted.load(Ordering::Relaxed),
+            self.net_conns_rejected.load(Ordering::Relaxed),
+            self.net_conns_active.load(Ordering::Relaxed),
+            self.net_bytes_in.load(Ordering::Relaxed),
+            self.net_bytes_out.load(Ordering::Relaxed),
+            self.net_requests_rejected.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
@@ -166,6 +190,21 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("slot_batch=2j/6r"), "summary: {s}");
         assert!(s.contains("occ=0.75"), "summary: {s}");
+    }
+
+    #[test]
+    fn test_net_counters_surface_in_summary() {
+        let m = Metrics::default();
+        m.net_conns_accepted.fetch_add(5, Ordering::Relaxed);
+        m.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+        m.net_conns_active.fetch_add(2, Ordering::Relaxed);
+        m.net_bytes_in.fetch_add(4096, Ordering::Relaxed);
+        m.net_bytes_out.fetch_add(512, Ordering::Relaxed);
+        m.net_requests_rejected.fetch_add(3, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("net_conns=5a/1r/2live"), "summary: {s}");
+        assert!(s.contains("net_io=4096in/512out"), "summary: {s}");
+        assert!(s.contains("net_req_rej=3"), "summary: {s}");
     }
 
     #[test]

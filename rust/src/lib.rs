@@ -3,10 +3,12 @@
 //! reproduction.
 //!
 //! Three-layer architecture (see `README.md` for the map and `DESIGN.md`
-//! for the per-subsystem sections S1–S15):
+//! for the per-subsystem sections S1–S18):
 //! - **L3 (this crate)**: CKKS leveled-HE substrate, AMA-packed encrypted
 //!   STGCN inference engine, level planner, serving coordinator, and the
-//!   `wire` client/server privacy boundary.
+//!   `wire` client/server privacy boundary — including its TCP serving
+//!   tier (`wire::net`: streamed ciphertext upload, per-tenant admission,
+//!   `serve --tier he-wire --listen` / `infer-remote`).
 //! - **L2 (python/compile)**: JAX STGCN model + LinGCN training pipeline
 //!   (structural linearization, polynomial replacement, distillation),
 //!   AOT-lowered to HLO text artifacts.

@@ -33,8 +33,12 @@ pub const VERSION: u16 = 2;
 /// persisted secret key must not become undecodable on upgrade.
 pub const MIN_VERSION: u16 = 1;
 
-const HEADER_LEN: usize = 16;
-const CHECKSUM_LEN: usize = 8;
+/// Fixed frame header size (magic + version + kind + reserved + length).
+/// Public because the TCP tier ([`super::net`]) reads headers incrementally
+/// off a socket to validate length budgets *before* allocating payloads.
+pub const HEADER_LEN: usize = 16;
+/// Trailing FNV-1a 64 checksum size.
+pub const CHECKSUM_LEN: usize = 8;
 
 /// Record kinds (one per serializable type).
 pub const KIND_PARAMS: u8 = 1;
@@ -44,6 +48,17 @@ pub const KIND_EVAL_KEY_SET: u8 = 4;
 pub const KIND_CIPHERTEXT: u8 = 5;
 pub const KIND_CT_BUNDLE: u8 = 6;
 pub const KIND_CLIENT_KEYS: u8 = 7;
+
+/// TCP protocol kinds (DESIGN.md S18). Kinds 8..16 stay reserved for
+/// future *at-rest* record types; the socket vocabulary starts at 16 so
+/// the two families are visually distinct in hex dumps. These frames only
+/// ever travel over a connection — they are never persisted.
+pub const KIND_NET_HELLO: u8 = 16;
+pub const KIND_NET_OK: u8 = 17;
+pub const KIND_NET_ERROR: u8 = 18;
+pub const KIND_NET_REGISTER: u8 = 19;
+pub const KIND_NET_INFER: u8 = 20;
+pub const KIND_NET_LOGITS: u8 = 21;
 
 /// FNV-1a 64-bit over a byte slice (integrity only — tamper *detection*,
 /// not authentication; see the threat model in DESIGN.md S15).

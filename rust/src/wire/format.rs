@@ -346,8 +346,9 @@ impl WireSerialize for EvalKeySet {
 
 /// Largest slot-batch size a reader will accept (paper-scale slot counts
 /// cap `copies()` well below this; the executor additionally rejects any
-/// batch above the variant layout's real `copies()`).
-const MAX_BATCH: usize = 4096;
+/// batch above the variant layout's real `copies()`). Public because the
+/// TCP tier enforces the same bound on `NET_INFER` headers.
+pub const MAX_BATCH: usize = 4096;
 
 /// A request's ciphertexts (one per graph node), stamped with the hash of
 /// the parameter set they were encrypted under and the slot-batch size

@@ -22,6 +22,10 @@
 //!   only [`EvalEngine`](crate::ckks::EvalEngine)s from registered key
 //!   sets, so the serving path contains no `SecretKey` *by type*, and its
 //!   plaintext `infer` entry point is a hard error.
+//! * [`net`] — the TCP tier (DESIGN.md S18): [`NetServer`] speaks codec
+//!   frames over sockets with streamed ciphertext upload, per-connection
+//!   timeouts and per-tenant admission; [`net::Client`] is the matching
+//!   blocking client (`lingcn infer-remote`).
 //!
 //! The full shell roundtrip (`lingcn keygen` → `encrypt` →
 //! `serve --tier he-wire` → `decrypt-logits`) and the bit-identity of the
@@ -31,8 +35,10 @@
 pub mod client;
 pub mod codec;
 pub mod format;
+pub mod net;
 pub mod server;
 
 pub use client::{keygen, keygen_with_state, ClientKeys, VariantSpec};
 pub use format::{params_hash, CtBundle, EvalKeySet, WireSerialize};
+pub use net::{CoordinatorBackend, InferOutcome, NetBackend, NetConfig, NetServer};
 pub use server::{TenantKeys, WireExecutor, WireSession};

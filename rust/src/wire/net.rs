@@ -1,0 +1,1145 @@
+//! TCP serving tier (DESIGN.md S18): the wire subsystem on a real socket.
+//!
+//! A connection is a sequence of the same length-prefixed, checksummed
+//! [`codec`](super::codec) frames the at-rest formats use, with a small
+//! socket-only vocabulary (`KIND_NET_*`). The shape every session follows:
+//!
+//! ```text
+//! client                                server
+//!   NET_HELLO {proto, tenant}  ──────▶   validate + connection admission
+//!   ◀───────────────  NET_OK | NET_ERROR(over-quota/protocol/bad-frame)
+//!   NET_REGISTER {EvalKeySet}  ──────▶   KeyRegistry::register
+//!   ◀───────────────  NET_OK | NET_ERROR(rejected/bad-frame)
+//!   NET_INFER {variant, hash, batch, n}  ─▶  admission (tenant known?
+//!   CIPHERTEXT × n  ───(streamed)────▶     in-flight quota?) *before*
+//!                                          ingesting a single ciphertext;
+//!                                          each frame validated on arrival
+//!   ◀──────────  NET_LOGITS {variant, timings, ct} | NET_ERROR
+//! ```
+//!
+//! Ciphertext uploads are **streamed**: the server reads one frame at a
+//! time straight into the validator (`Ciphertext::from_bytes`) and never
+//! buffers a whole request — a paper-scale bundle is tens of MiB, and a
+//! hostile length prefix must be rejected *before* any allocation.
+//!
+//! The server is thread-per-connection over the existing coordinator
+//! (leader/batcher/worker) pipeline: handler threads block in
+//! [`Coordinator::infer_blocking_encrypted`], so slot-batching across
+//! tenants keeps working unchanged. [`NetBackend`] decouples the socket
+//! machinery from the HE stack so the fault-injection suite
+//! (`rust/tests/net_faults.rs`) runs in debug builds against mock
+//! backends; `rust/tests/net_roundtrip.rs` proves the real path produces
+//! logits bit-identical to the in-process [`WireExecutor`] on the same
+//! bundles.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::ckks::Ciphertext;
+use crate::coordinator::{Coordinator, Metrics};
+use crate::wire::codec::{
+    frame_with, unframe, ByteReader, CHECKSUM_LEN, HEADER_LEN, KIND_CIPHERTEXT, KIND_NET_ERROR,
+    KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER, MAGIC,
+    MIN_VERSION, VERSION,
+};
+use crate::wire::format::{CtBundle, EvalKeySet, WireSerialize, MAX_BATCH};
+use crate::wire::server::WireExecutor;
+
+/// Protocol revision carried in the hello frame; bumped independently of
+/// the codec version when the *conversation shape* changes.
+pub const NET_PROTO: u32 = 1;
+
+/// Typed error codes carried in `NET_ERROR` frames. The vendored anyhow
+/// shim has no downcasting, so the stable contract tests (and clients)
+/// key on is the [`err_name`] token embedded in the error message.
+pub const ERR_BAD_FRAME: u32 = 1;
+pub const ERR_TOO_LARGE: u32 = 2;
+pub const ERR_PROTOCOL: u32 = 3;
+pub const ERR_UNKNOWN_TENANT: u32 = 4;
+pub const ERR_OVER_QUOTA: u32 = 5;
+pub const ERR_REJECTED: u32 = 6;
+pub const ERR_TIMEOUT: u32 = 7;
+pub const ERR_INTERNAL: u32 = 8;
+
+/// Stable text token for an error code (part of the wire contract: the
+/// fault suites assert on these substrings).
+pub fn err_name(code: u32) -> &'static str {
+    match code {
+        ERR_BAD_FRAME => "bad-frame",
+        ERR_TOO_LARGE => "too-large",
+        ERR_PROTOCOL => "protocol",
+        ERR_UNKNOWN_TENANT => "unknown-tenant",
+        ERR_OVER_QUOTA => "over-quota",
+        ERR_REJECTED => "rejected",
+        ERR_TIMEOUT => "timeout",
+        ERR_INTERNAL => "internal",
+        _ => "unknown",
+    }
+}
+
+/// Server-side knobs. `Duration::ZERO` timeouts and `0` quotas mean
+/// "unlimited" (useful in tests; production defaults are all bounded).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Per-read socket timeout — a stalled or slow-writing client is cut
+    /// off with a typed `timeout` error.
+    pub read_timeout: Duration,
+    /// Per-write socket timeout.
+    pub write_timeout: Duration,
+    /// Payload budget for ciphertext and control frames. Enforced from
+    /// the 16-byte header alone, before any payload allocation.
+    pub max_frame_bytes: u64,
+    /// Payload budget for `NET_REGISTER` frames (an eval-key bundle is an
+    /// order of magnitude bigger than a ciphertext).
+    pub max_key_frame_bytes: u64,
+    /// Most ciphertext frames one `NET_INFER` may announce.
+    pub max_request_cts: usize,
+    /// Per-tenant cap on simultaneously open connections (checked at
+    /// hello).
+    pub max_conns_per_tenant: usize,
+    /// Per-tenant cap on requests simultaneously inside the coordinator
+    /// (checked at the `NET_INFER` header, before ciphertext ingest).
+    pub max_inflight_per_tenant: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            max_frame_bytes: 256 << 20,
+            max_key_frame_bytes: 1 << 30,
+            max_request_cts: 4096, // mirrors CtBundle's own count bound
+            max_conns_per_tenant: 64,
+            max_inflight_per_tenant: 32,
+        }
+    }
+}
+
+/// What an inference produced, plus the server-side timing split the
+/// logits frame carries back to the client.
+#[derive(Clone, Debug)]
+pub struct InferOutcome {
+    pub variant: String,
+    pub ct_logits: Ciphertext,
+    pub queue: Duration,
+    pub exec: Duration,
+}
+
+/// The server's view of the HE stack. Production is
+/// [`CoordinatorBackend`]; the fault suite substitutes mocks so socket
+/// behavior is testable in debug builds without real CKKS inference.
+pub trait NetBackend: Send + Sync + 'static {
+    fn register(&self, tenant: &str, key_set: EvalKeySet) -> Result<()>;
+    /// Admission pre-check: is this tenant known? Consulted at the
+    /// `NET_INFER` header so an unknown tenant is refused *before* the
+    /// server ingests its ciphertexts.
+    fn is_registered(&self, tenant: &str) -> bool;
+    fn infer(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+    ) -> Result<InferOutcome>;
+}
+
+/// The production backend: key registration goes straight to the
+/// [`WireExecutor`]'s registry, inference through the coordinator's
+/// leader/batcher/worker pipeline (so cross-tenant slot batching and all
+/// serving metrics keep working over TCP).
+pub struct CoordinatorBackend {
+    executor: Arc<WireExecutor>,
+    coordinator: Coordinator,
+}
+
+impl CoordinatorBackend {
+    pub fn new(executor: Arc<WireExecutor>, coordinator: Coordinator) -> Self {
+        CoordinatorBackend { executor, coordinator }
+    }
+}
+
+impl NetBackend for CoordinatorBackend {
+    fn register(&self, tenant: &str, key_set: EvalKeySet) -> Result<()> {
+        self.executor.register(tenant, key_set).map(|_| ())
+    }
+
+    fn is_registered(&self, tenant: &str) -> bool {
+        self.executor.registry.contains(tenant)
+    }
+
+    fn infer(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+    ) -> Result<InferOutcome> {
+        let resp = self.coordinator.infer_blocking_encrypted(
+            tenant.to_string(),
+            variant,
+            cts,
+            params_hash,
+            batch,
+            None,
+        )?;
+        if let Some(e) = resp.error {
+            bail!("{e}");
+        }
+        let ct_logits = resp
+            .ct_logits
+            .ok_or_else(|| anyhow!("coordinator returned neither logits nor an error"))?;
+        Ok(InferOutcome { variant: resp.variant, ct_logits, queue: resp.queue, exec: resp.exec })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// frame builders / parsers (shared by server, client, and the raw-socket
+// fault suite — public so tests can speak the protocol byte-for-byte)
+// ---------------------------------------------------------------------------
+
+pub fn hello_frame(tenant: &str) -> Vec<u8> {
+    frame_with(KIND_NET_HELLO, |w| {
+        w.put_u32(NET_PROTO);
+        w.put_str(tenant);
+    })
+}
+
+pub fn ok_frame(message: &str) -> Vec<u8> {
+    frame_with(KIND_NET_OK, |w| w.put_str(message))
+}
+
+pub fn error_frame(code: u32, message: &str) -> Vec<u8> {
+    frame_with(KIND_NET_ERROR, |w| {
+        w.put_u32(code);
+        w.put_str(message);
+    })
+}
+
+/// The `NET_INFER` header announcing a streamed upload of `ct_count`
+/// ciphertext frames.
+pub fn infer_header_frame(
+    variant: Option<&str>,
+    params_hash: Option<u64>,
+    batch: usize,
+    ct_count: usize,
+) -> Vec<u8> {
+    frame_with(KIND_NET_INFER, |w| {
+        w.put_str(variant.unwrap_or(""));
+        w.put_u8(params_hash.is_some() as u8);
+        w.put_u64(params_hash.unwrap_or(0));
+        w.put_u64(batch as u64);
+        w.put_u32(ct_count as u32);
+    })
+}
+
+pub fn parse_error_frame(frame: &[u8]) -> Result<(u32, String)> {
+    let payload = unframe(KIND_NET_ERROR, frame)?;
+    let mut r = ByteReader::new(payload);
+    let code = r.u32()?;
+    let message = r.str()?;
+    r.finish()?;
+    Ok((code, message))
+}
+
+fn parse_ok_frame(frame: &[u8]) -> Result<String> {
+    let payload = unframe(KIND_NET_OK, frame)?;
+    let mut r = ByteReader::new(payload);
+    let message = r.str()?;
+    r.finish()?;
+    Ok(message)
+}
+
+/// Tenant ids end up as registry and batch-queue keys; keep them short,
+/// non-empty and free of control characters (the coordinator's composite
+/// queue keys use `'\u{1}'` as a separator).
+pub fn validate_tenant(tenant: &str) -> Result<()> {
+    ensure!(
+        !tenant.is_empty() && tenant.len() <= 128,
+        "tenant id must be 1..=128 bytes"
+    );
+    ensure!(
+        tenant.chars().all(|c| !c.is_control()),
+        "tenant id must not contain control characters"
+    );
+    Ok(())
+}
+
+fn parse_hello(frame: &[u8]) -> Result<(u32, String)> {
+    let payload = unframe(KIND_NET_HELLO, frame)?;
+    let mut r = ByteReader::new(payload);
+    let proto = r.u32()?;
+    let tenant = r.str()?;
+    r.finish()?;
+    validate_tenant(&tenant)?;
+    Ok((proto, tenant))
+}
+
+fn parse_register(frame: &[u8]) -> Result<EvalKeySet> {
+    let payload = unframe(KIND_NET_REGISTER, frame)?;
+    let mut r = ByteReader::new(payload);
+    let key_set = EvalKeySet::read_payload(&mut r)?;
+    r.finish()?;
+    Ok(key_set)
+}
+
+struct InferHeader {
+    variant: Option<String>,
+    params_hash: Option<u64>,
+    batch: usize,
+    ct_count: usize,
+}
+
+fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
+    let payload = unframe(KIND_NET_INFER, frame)?;
+    let mut r = ByteReader::new(payload);
+    let variant = r.str()?;
+    let has_hash = r.flag()?;
+    let hash = r.u64()?;
+    let batch = r.u64()? as usize;
+    let ct_count = r.u32()? as usize;
+    r.finish()?;
+    ensure!(
+        (1..=MAX_BATCH).contains(&batch),
+        "infer header: slot-batch size {batch} outside 1..={MAX_BATCH}"
+    );
+    ensure!(
+        ct_count >= 1 && ct_count <= max_cts,
+        "infer header: ciphertext count {ct_count} outside 1..={max_cts}"
+    );
+    Ok(InferHeader {
+        variant: if variant.is_empty() { None } else { Some(variant) },
+        params_hash: has_hash.then_some(hash),
+        batch,
+        ct_count,
+    })
+}
+
+fn logits_frame(out: &InferOutcome) -> Vec<u8> {
+    frame_with(KIND_NET_LOGITS, |w| {
+        w.put_str(&out.variant);
+        w.put_u64(out.queue.as_micros() as u64);
+        w.put_u64(out.exec.as_micros() as u64);
+        out.ct_logits.write_payload(w);
+    })
+}
+
+fn parse_logits_frame(frame: &[u8]) -> Result<InferOutcome> {
+    let payload = unframe(KIND_NET_LOGITS, frame)?;
+    let mut r = ByteReader::new(payload);
+    let variant = r.str()?;
+    let queue = Duration::from_micros(r.u64()?);
+    let exec = Duration::from_micros(r.u64()?);
+    let ct_logits = Ciphertext::read_payload(&mut r)?;
+    r.finish()?;
+    Ok(InferOutcome { variant, ct_logits, queue, exec })
+}
+
+// ---------------------------------------------------------------------------
+// incremental frame reading
+// ---------------------------------------------------------------------------
+
+/// Why a socket read failed — drives the close-vs-reply policy. A clean
+/// EOF *between* frames is a normal goodbye; everything else is a fault.
+enum ReadFail {
+    CleanEof,
+    Timeout,
+    Disconnected(String),
+    /// Header bytes that are not a codec frame (wrong magic / version /
+    /// reserved byte): frame sync is gone, the connection must close.
+    Hostile(String),
+    /// Length prefix over the kind's budget — rejected before allocating.
+    TooLarge { kind: u8, len: u64, max: u64 },
+}
+
+fn read_full(r: &mut impl Read, buf: &mut [u8], at_boundary: bool) -> std::result::Result<(), ReadFail> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if at_boundary && got == 0 {
+                    ReadFail::CleanEof
+                } else {
+                    ReadFail::Disconnected(format!(
+                        "peer closed mid-frame ({got}/{} bytes)",
+                        buf.len()
+                    ))
+                })
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err(ReadFail::Timeout)
+            }
+            Err(e) => return Err(ReadFail::Disconnected(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame incrementally: 16-byte header first, validate magic /
+/// version / reserved / length-vs-budget, and only then allocate and read
+/// the payload + checksum. Returns the *complete* frame bytes so callers
+/// hand them to [`unframe`] for the checksum pass.
+fn read_frame(
+    r: &mut impl Read,
+    max_for: &dyn Fn(u8) -> u64,
+) -> std::result::Result<(u8, Vec<u8>), ReadFail> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    if header[0..4] != MAGIC {
+        return Err(ReadFail::Hostile("frame magic mismatch".into()));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(ReadFail::Hostile(format!("unsupported wire version {version}")));
+    }
+    if header[7] != 0 {
+        return Err(ReadFail::Hostile("frame reserved byte damaged".into()));
+    }
+    let kind = header[6];
+    let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let max = max_for(kind);
+    if len > max {
+        return Err(ReadFail::TooLarge { kind, len, max });
+    }
+    let mut frame = Vec::with_capacity(HEADER_LEN + len as usize + CHECKSUM_LEN);
+    frame.extend_from_slice(&header);
+    frame.resize(HEADER_LEN + len as usize + CHECKSUM_LEN, 0);
+    read_full(r, &mut frame[HEADER_LEN..], false)?;
+    Ok((kind, frame))
+}
+
+/// Client-side / test-harness frame reader with a uniform budget, mapping
+/// read failures to errors with stable message tokens.
+pub fn read_frame_budget(r: &mut impl Read, max: u64) -> Result<(u8, Vec<u8>)> {
+    match read_frame(r, &|_| max) {
+        Ok(x) => Ok(x),
+        Err(ReadFail::CleanEof) => bail!("connection closed"),
+        Err(ReadFail::Timeout) => bail!("read timed out"),
+        Err(ReadFail::Disconnected(m)) => bail!("connection lost: {m}"),
+        Err(ReadFail::Hostile(m)) => bail!("malformed frame: {m}"),
+        Err(ReadFail::TooLarge { len, max, .. }) => {
+            bail!("frame too large ({len} > budget {max})")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
+/// Byte-counting wrapper feeding the `net_bytes_in`/`net_bytes_out`
+/// serving metrics.
+struct MeteredStream {
+    inner: TcpStream,
+    metrics: Arc<Metrics>,
+}
+
+impl Read for MeteredStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.metrics.net_bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+impl Write for MeteredStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.metrics.net_bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Poison-immune lock: a handler that panicked while holding a counter
+/// map must not wedge every other connection.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// RAII slot in a per-tenant counter map (connection or in-flight quota).
+/// Dropping releases the slot even on panic or early return.
+struct TenantSlot<'a> {
+    map: &'a Mutex<HashMap<String, usize>>,
+    tenant: String,
+}
+
+impl<'a> TenantSlot<'a> {
+    /// `quota == 0` means unlimited.
+    fn acquire(
+        map: &'a Mutex<HashMap<String, usize>>,
+        tenant: &str,
+        quota: usize,
+    ) -> Option<Self> {
+        let mut m = lock(map);
+        let n = m.entry(tenant.to_string()).or_insert(0);
+        if quota > 0 && *n >= quota {
+            if *n == 0 {
+                m.remove(tenant);
+            }
+            return None;
+        }
+        *n += 1;
+        Some(TenantSlot { map, tenant: tenant.to_string() })
+    }
+}
+
+impl Drop for TenantSlot<'_> {
+    fn drop(&mut self) {
+        let mut m = lock(self.map);
+        if let Some(n) = m.get_mut(&self.tenant) {
+            *n -= 1;
+            if *n == 0 {
+                m.remove(&self.tenant);
+            }
+        }
+    }
+}
+
+/// Gauge decrement on drop (panic-safe `net_conns_active` accounting).
+struct GaugeGuard<'a>(&'a AtomicU64);
+
+impl Drop for GaugeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+struct Shared {
+    backend: Arc<dyn NetBackend>,
+    metrics: Arc<Metrics>,
+    cfg: NetConfig,
+    stop: AtomicBool,
+    /// Per-tenant open connections (hello-stage admission).
+    conns: Mutex<HashMap<String, usize>>,
+    /// Per-tenant requests inside the backend (request-stage admission).
+    inflight: Mutex<HashMap<String, usize>>,
+    /// Stream clones for forced shutdown of blocked handler threads.
+    live: Mutex<HashMap<u64, TcpStream>>,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    next_conn_id: AtomicU64,
+}
+
+/// Thread-per-connection TCP server. [`NetServer::bind`] returning is the
+/// readiness signal (the listener is accepting); tests bind `127.0.0.1:0`
+/// and read the real port from [`NetServer::local_addr`] — no sleeps.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    pub fn bind(
+        addr: &str,
+        backend: Arc<dyn NetBackend>,
+        metrics: Arc<Metrics>,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        let shared = Arc::new(Shared {
+            backend,
+            metrics,
+            cfg,
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashMap::new()),
+            live: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(NetServer { local_addr, shared, accept: Some(accept) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Stop accepting, force open connections off their sockets, and join
+    /// every thread. Safe to call with clients still connected.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for (_, s) in lock(&self.shared.live).drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handlers: Vec<_> = lock(&self.shared.handlers).drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            break; // the shutdown wake-up connection
+        }
+        let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            lock(&shared.live).insert(id, clone);
+        }
+        let sh = shared.clone();
+        let handle = std::thread::spawn(move || {
+            // a panicking handler must not take the process (or the
+            // accept loop) down with it — the connection just dies
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_conn(stream, &sh)
+            }));
+            if res.is_err() {
+                sh.metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+            }
+            lock(&sh.live).remove(&id);
+        });
+        let mut handlers = lock(&shared.handlers);
+        handlers.retain(|h| !h.is_finished());
+        handlers.push(handle);
+    }
+}
+
+fn send_bytes(io: &mut MeteredStream, bytes: &[u8]) -> std::io::Result<()> {
+    io.write_all(bytes)?;
+    io.flush()
+}
+
+fn send_error(io: &mut MeteredStream, code: u32, message: &str) -> std::io::Result<()> {
+    send_bytes(io, &error_frame(code, message))
+}
+
+/// Best-effort typed error for a read failure, where the protocol still
+/// allows one. Timeouts and oversize claims get a frame (the socket is
+/// still writable and sync is irrelevant — we close right after); a
+/// vanished peer gets nothing.
+fn fault_reply(io: &mut MeteredStream, fail: &ReadFail) {
+    let (code, msg) = match fail {
+        ReadFail::CleanEof | ReadFail::Disconnected(_) => return,
+        ReadFail::Timeout => (ERR_TIMEOUT, "read timed out (slow or stalled client)".to_string()),
+        ReadFail::Hostile(m) => (ERR_BAD_FRAME, m.clone()),
+        ReadFail::TooLarge { kind, len, max } => (
+            ERR_TOO_LARGE,
+            format!("frame kind {kind} claims {len} payload bytes (budget {max})"),
+        ),
+    };
+    let _ = send_error(io, code, &msg);
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    if shared.cfg.read_timeout > Duration::ZERO {
+        let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    }
+    if shared.cfg.write_timeout > Duration::ZERO {
+        let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    }
+    let metrics = shared.metrics.clone();
+    metrics.net_conns_active.fetch_add(1, Ordering::Relaxed);
+    let _active = GaugeGuard(&shared.metrics.net_conns_active);
+    let mut io = MeteredStream { inner: stream, metrics: metrics.clone() };
+    let max_for = |kind: u8| {
+        if kind == KIND_NET_REGISTER {
+            shared.cfg.max_key_frame_bytes
+        } else {
+            shared.cfg.max_frame_bytes
+        }
+    };
+
+    // --- hello + connection admission -------------------------------------
+    let (kind, frame) = match read_frame(&mut io, &max_for) {
+        Ok(x) => x,
+        Err(fail) => {
+            metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+            fault_reply(&mut io, &fail);
+            return;
+        }
+    };
+    if kind != KIND_NET_HELLO {
+        metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = send_error(&mut io, ERR_PROTOCOL, "expected a hello frame first");
+        return;
+    }
+    let (proto, tenant) = match parse_hello(&frame) {
+        Ok(x) => x,
+        Err(e) => {
+            metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = send_error(&mut io, ERR_BAD_FRAME, &format!("hello rejected: {e:#}"));
+            return;
+        }
+    };
+    if proto != NET_PROTO {
+        metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+        let _ = send_error(
+            &mut io,
+            ERR_PROTOCOL,
+            &format!("protocol revision {proto} not supported (server speaks {NET_PROTO})"),
+        );
+        return;
+    }
+    let _conn_slot =
+        match TenantSlot::acquire(&shared.conns, &tenant, shared.cfg.max_conns_per_tenant) {
+            Some(slot) => slot,
+            None => {
+                metrics.net_conns_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = send_error(
+                    &mut io,
+                    ERR_OVER_QUOTA,
+                    &format!(
+                        "tenant {tenant} is at its connection quota ({})",
+                        shared.cfg.max_conns_per_tenant
+                    ),
+                );
+                return;
+            }
+        };
+    metrics.net_conns_accepted.fetch_add(1, Ordering::Relaxed);
+    if send_bytes(&mut io, &ok_frame("lingcn-wire/1")).is_err() {
+        return;
+    }
+
+    // --- command loop ------------------------------------------------------
+    loop {
+        let (kind, frame) = match read_frame(&mut io, &max_for) {
+            Ok(x) => x,
+            Err(ReadFail::CleanEof) => return,
+            Err(fail) => {
+                fault_reply(&mut io, &fail);
+                return;
+            }
+        };
+        match kind {
+            KIND_NET_REGISTER => match parse_register(&frame) {
+                Ok(key_set) => match shared.backend.register(&tenant, key_set) {
+                    Ok(()) => {
+                        if send_bytes(&mut io, &ok_frame("registered")).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                        // content was well-framed but the HE stack refused
+                        // it — the connection stays usable
+                        if send_error(&mut io, ERR_REJECTED, &format!("{e:#}")).is_err() {
+                            return;
+                        }
+                    }
+                },
+                Err(e) => {
+                    // can't trust frame sync after a malformed key bundle
+                    metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = send_error(
+                        &mut io,
+                        ERR_BAD_FRAME,
+                        &format!("eval-key frame rejected: {e:#}"),
+                    );
+                    return;
+                }
+            },
+            KIND_NET_INFER => {
+                if !serve_infer(&mut io, shared, &tenant, &frame, &max_for) {
+                    return;
+                }
+            }
+            other => {
+                let _ = send_error(
+                    &mut io,
+                    ERR_PROTOCOL,
+                    &format!("unexpected frame kind {other} (want register or infer)"),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Handle one `NET_INFER`: admission first, then stream the announced
+/// ciphertext frames one at a time into the validator. Returns whether
+/// the connection is still in sync (keep serving it).
+fn serve_infer(
+    io: &mut MeteredStream,
+    shared: &Shared,
+    tenant: &str,
+    header_frame: &[u8],
+    max_for: &dyn Fn(u8) -> u64,
+) -> bool {
+    let metrics = &shared.metrics;
+    let hdr = match parse_infer_header(header_frame, shared.cfg.max_request_cts) {
+        Ok(h) => h,
+        Err(e) => {
+            metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = send_error(io, ERR_BAD_FRAME, &format!("infer header rejected: {e:#}"));
+            return false;
+        }
+    };
+
+    // admission before ingesting a single ciphertext byte
+    let mut reject: Option<(u32, String)> = None;
+    if !shared.backend.is_registered(tenant) {
+        reject = Some((
+            ERR_UNKNOWN_TENANT,
+            format!("tenant {tenant} has no registered eval keys (send a register frame first)"),
+        ));
+    }
+    let slot = if reject.is_none() {
+        match TenantSlot::acquire(&shared.inflight, tenant, shared.cfg.max_inflight_per_tenant) {
+            Some(slot) => Some(slot),
+            None => {
+                reject = Some((
+                    ERR_OVER_QUOTA,
+                    format!(
+                        "tenant {tenant} is at its in-flight request quota ({})",
+                        shared.cfg.max_inflight_per_tenant
+                    ),
+                ));
+                None
+            }
+        }
+    } else {
+        None
+    };
+    if let Some((code, msg)) = reject {
+        metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+        // drain the announced frames (bounded by the header we already
+        // validated) so the client — likely still mid-write — reliably
+        // receives the typed error and the connection stays in sync
+        for _ in 0..hdr.ct_count {
+            match read_frame(io, max_for) {
+                Ok((KIND_CIPHERTEXT, _)) => {}
+                Ok(_) | Err(_) => return false,
+            }
+        }
+        return send_error(io, code, &msg).is_ok();
+    }
+
+    // streamed upload: frame-at-a-time into the validator
+    let mut cts = Vec::with_capacity(hdr.ct_count);
+    for i in 0..hdr.ct_count {
+        let (kind, frame) = match read_frame(io, max_for) {
+            Ok(x) => x,
+            Err(fail) => {
+                fault_reply(io, &fail);
+                return false;
+            }
+        };
+        if kind != KIND_CIPHERTEXT {
+            let _ = send_error(
+                io,
+                ERR_PROTOCOL,
+                &format!("expected ciphertext frame {i}/{}, got kind {kind}", hdr.ct_count),
+            );
+            return false;
+        }
+        match Ciphertext::from_bytes(&frame) {
+            Ok(ct) => cts.push(ct),
+            Err(e) => {
+                metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = send_error(
+                    io,
+                    ERR_BAD_FRAME,
+                    &format!("ciphertext frame {i} rejected: {e:#}"),
+                );
+                return false;
+            }
+        }
+    }
+
+    let outcome = shared.backend.infer(tenant, hdr.variant, cts, hdr.params_hash, hdr.batch);
+    drop(slot); // release the in-flight quota before writing the reply
+    match outcome {
+        Ok(out) => send_bytes(io, &logits_frame(&out)).is_ok(),
+        Err(e) => {
+            metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+            send_error(io, ERR_REJECTED, &format!("{e:#}")).is_ok()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Blocking client for the TCP tier. Holds no key material — callers pair
+/// it with [`ClientKeys`](crate::wire::ClientKeys) for keygen / encrypt /
+/// decrypt, so the privacy boundary is unchanged: only eval keys and
+/// ciphertexts ever reach this type.
+pub struct Client {
+    io: TcpStream,
+    max_frame: u64,
+    /// Wire bytes written / read by this client (for the CLI's transfer
+    /// report and the loopback bench).
+    pub bytes_out: u64,
+    pub bytes_in: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str, tenant: &str) -> Result<Client> {
+        Self::connect_with(addr, tenant, Duration::from_secs(30))
+    }
+
+    /// Connect, send the hello, and wait for the server's admission
+    /// verdict. `timeout` bounds every subsequent read and write;
+    /// `Duration::ZERO` means unbounded.
+    pub fn connect_with(addr: &str, tenant: &str, timeout: Duration) -> Result<Client> {
+        validate_tenant(tenant)?;
+        let io = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = io.set_nodelay(true);
+        if timeout > Duration::ZERO {
+            let _ = io.set_read_timeout(Some(timeout));
+            let _ = io.set_write_timeout(Some(timeout));
+        }
+        let mut client =
+            Client { io, max_frame: NetConfig::default().max_frame_bytes, bytes_out: 0, bytes_in: 0 };
+        client.send(&hello_frame(tenant))?;
+        let frame = client.expect_reply(KIND_NET_OK)?;
+        parse_ok_frame(&frame)?;
+        Ok(client)
+    }
+
+    fn send(&mut self, bytes: &[u8]) -> Result<()> {
+        self.io.write_all(bytes).context("writing to server")?;
+        self.io.flush().context("flushing to server")?;
+        self.bytes_out += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn expect_reply(&mut self, want_kind: u8) -> Result<Vec<u8>> {
+        let (kind, frame) = read_frame_budget(&mut self.io, self.max_frame)?;
+        self.bytes_in += frame.len() as u64;
+        if kind == KIND_NET_ERROR {
+            let (code, message) = parse_error_frame(&frame)?;
+            bail!("server error [{}]: {message}", err_name(code));
+        }
+        ensure!(kind == want_kind, "unexpected reply frame kind {kind} (want {want_kind})");
+        Ok(frame)
+    }
+
+    /// Register this tenant's evaluation keys with the server.
+    pub fn register(&mut self, key_set: &EvalKeySet) -> Result<()> {
+        let frame = frame_with(KIND_NET_REGISTER, |w| key_set.write_payload(w));
+        self.send(&frame)?;
+        let reply = self.expect_reply(KIND_NET_OK)?;
+        parse_ok_frame(&reply)?;
+        Ok(())
+    }
+
+    /// Upload a request bundle (streamed: header frame, then one codec
+    /// frame per ciphertext — byte-identical to `Ciphertext::to_bytes`)
+    /// and block for the encrypted logits.
+    pub fn infer(&mut self, variant: Option<&str>, bundle: &CtBundle) -> Result<InferOutcome> {
+        self.send(&infer_header_frame(
+            variant,
+            Some(bundle.params_hash),
+            bundle.batch,
+            bundle.cts.len(),
+        ))?;
+        for ct in &bundle.cts {
+            self.send(&ct.to_bytes())?;
+        }
+        let reply = self.expect_reply(KIND_NET_LOGITS)?;
+        parse_logits_frame(&reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn test_control_frames_roundtrip() {
+        let (proto, tenant) = parse_hello(&hello_frame("alice")).unwrap();
+        assert_eq!(proto, NET_PROTO);
+        assert_eq!(tenant, "alice");
+        assert_eq!(parse_ok_frame(&ok_frame("hi")).unwrap(), "hi");
+        let (code, msg) = parse_error_frame(&error_frame(ERR_OVER_QUOTA, "full")).unwrap();
+        assert_eq!(code, ERR_OVER_QUOTA);
+        assert_eq!(msg, "full");
+    }
+
+    #[test]
+    fn test_tenant_validation() {
+        assert!(validate_tenant("alice").is_ok());
+        assert!(validate_tenant("").is_err());
+        assert!(validate_tenant(&"x".repeat(129)).is_err());
+        // the coordinator's composite queue-key separator must be illegal
+        assert!(validate_tenant("a\u{1}b").is_err());
+        assert!(validate_tenant("a\nb").is_err());
+    }
+
+    #[test]
+    fn test_infer_header_roundtrip_and_bounds() {
+        let f = infer_header_frame(Some("lingcn-nl2"), Some(7), 2, 3);
+        let h = parse_infer_header(&f, 16).unwrap();
+        assert_eq!(h.variant.as_deref(), Some("lingcn-nl2"));
+        assert_eq!(h.params_hash, Some(7));
+        assert_eq!(h.batch, 2);
+        assert_eq!(h.ct_count, 3);
+        // empty variant string travels as None; absent hash as None
+        let h = parse_infer_header(&infer_header_frame(None, None, 1, 1), 16).unwrap();
+        assert!(h.variant.is_none() && h.params_hash.is_none());
+        // count over the server budget is rejected at the header
+        assert!(parse_infer_header(&infer_header_frame(None, None, 1, 17), 16).is_err());
+        assert!(parse_infer_header(&infer_header_frame(None, None, 0, 1), 16).is_err());
+        assert!(parse_infer_header(&infer_header_frame(None, None, 1, 0), 16).is_err());
+    }
+
+    #[test]
+    fn test_err_name_tokens_are_stable() {
+        for (code, name) in [
+            (ERR_BAD_FRAME, "bad-frame"),
+            (ERR_TOO_LARGE, "too-large"),
+            (ERR_PROTOCOL, "protocol"),
+            (ERR_UNKNOWN_TENANT, "unknown-tenant"),
+            (ERR_OVER_QUOTA, "over-quota"),
+            (ERR_REJECTED, "rejected"),
+            (ERR_TIMEOUT, "timeout"),
+            (ERR_INTERNAL, "internal"),
+        ] {
+            assert_eq!(err_name(code), name);
+        }
+        assert_eq!(err_name(999), "unknown");
+    }
+
+    #[test]
+    fn test_read_frame_happy_and_clean_eof() {
+        let f = ok_frame("ping");
+        let mut r = Cursor::new(f.clone());
+        let (kind, got) = read_frame(&mut r, &|_| 1 << 20).unwrap();
+        assert_eq!(kind, KIND_NET_OK);
+        assert_eq!(got, f);
+        // next read: clean EOF at a frame boundary
+        assert!(matches!(read_frame(&mut r, &|_| 1 << 20), Err(ReadFail::CleanEof)));
+    }
+
+    #[test]
+    fn test_read_frame_truncation_is_disconnect_not_clean() {
+        let f = ok_frame("ping");
+        for cut in [1, HEADER_LEN - 1, HEADER_LEN + 1, f.len() - 1] {
+            let mut r = Cursor::new(f[..cut].to_vec());
+            assert!(
+                matches!(read_frame(&mut r, &|_| 1 << 20), Err(ReadFail::Disconnected(_))),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn test_read_frame_hostile_header_rejected() {
+        let mut bad_magic = ok_frame("x");
+        bad_magic[0] ^= 0xFF;
+        let mut r = Cursor::new(bad_magic);
+        assert!(matches!(read_frame(&mut r, &|_| 1 << 20), Err(ReadFail::Hostile(_))));
+        let mut bad_reserved = ok_frame("x");
+        bad_reserved[7] = 9;
+        let mut r = Cursor::new(bad_reserved);
+        assert!(matches!(read_frame(&mut r, &|_| 1 << 20), Err(ReadFail::Hostile(_))));
+    }
+
+    #[test]
+    fn test_read_frame_hostile_length_rejected_before_allocation() {
+        // a header claiming u64::MAX payload bytes must fail from the
+        // header alone (no allocation, no payload read)
+        let mut header = Vec::new();
+        header.extend_from_slice(&MAGIC);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.push(KIND_NET_INFER);
+        header.push(0);
+        header.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = Cursor::new(header);
+        match read_frame(&mut r, &|_| 1 << 20) {
+            Err(ReadFail::TooLarge { len, max, .. }) => {
+                assert_eq!(len, u64::MAX);
+                assert_eq!(max, 1 << 20);
+            }
+            _ => panic!("oversize claim must be TooLarge"),
+        }
+    }
+
+    #[test]
+    fn test_read_frame_per_kind_budget() {
+        // register frames get the key budget, everything else the
+        // ciphertext budget
+        let big = ok_frame(&"y".repeat(100));
+        let mut r = Cursor::new(big.clone());
+        let budget = |kind: u8| if kind == KIND_NET_REGISTER { 1 << 20 } else { 10 };
+        assert!(matches!(read_frame(&mut r, &budget), Err(ReadFail::TooLarge { .. })));
+    }
+
+    #[test]
+    fn test_tenant_slot_quota_and_release() {
+        let map = Mutex::new(HashMap::new());
+        let a = TenantSlot::acquire(&map, "t", 2).expect("first slot");
+        let _b = TenantSlot::acquire(&map, "t", 2).expect("second slot");
+        assert!(TenantSlot::acquire(&map, "t", 2).is_none(), "third must hit quota");
+        // another tenant is unaffected
+        assert!(TenantSlot::acquire(&map, "u", 2).is_some());
+        drop(a);
+        assert!(TenantSlot::acquire(&map, "t", 2).is_some(), "drop frees the slot");
+        // quota 0 = unlimited
+        for _ in 0..10 {
+            std::mem::forget(TenantSlot::acquire(&map, "v", 0).unwrap());
+        }
+    }
+
+    #[test]
+    fn test_logits_frame_needs_real_ct() {
+        // a logits frame with garbage where the ciphertext should be is a
+        // decode error, not a panic
+        let f = frame_with(KIND_NET_LOGITS, |w| {
+            w.put_str("v");
+            w.put_u64(1);
+            w.put_u64(2);
+            w.put_u8(0xAB);
+        });
+        assert!(parse_logits_frame(&f).is_err());
+    }
+}

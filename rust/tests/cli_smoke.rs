@@ -97,3 +97,54 @@ fn test_wire_verbs_check_their_flags() {
 fn test_bad_flag_value_is_an_error() {
     assert!(run(&args(&["infer", "--nl", "not-a-number"])).is_err());
 }
+
+#[test]
+fn test_serve_wire_modes_are_mutually_exclusive() {
+    // --listen (TCP mode) and the file-roundtrip flags are two different
+    // serving modes: combining them must be a named error, before any
+    // artifact or socket work
+    for combo in [
+        vec!["serve", "--tier", "he-wire", "--listen", "127.0.0.1:0", "--dir", "wire"],
+        vec!["serve", "--tier", "he-wire", "--listen", "127.0.0.1:0", "--eval-keys", "k.keys"],
+        vec!["serve", "--tier", "he-wire", "--listen", "127.0.0.1:0", "--request", "r.cts"],
+    ] {
+        let err = run(&args(&combo)).expect_err("mixed serve modes must be rejected");
+        assert!(
+            format!("{err:#}").contains("mutually exclusive"),
+            "combo {combo:?}: got {err:#}"
+        );
+    }
+}
+
+#[test]
+fn test_serve_wire_without_a_mode_names_both() {
+    // bare `serve --tier he-wire` must point at both modes, so the error
+    // doubles as usage
+    let err = run(&args(&["serve", "--tier", "he-wire"])).expect_err("needs a mode");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--listen"), "must mention TCP mode, got: {msg}");
+    assert!(msg.contains("--dir"), "must mention file mode, got: {msg}");
+}
+
+#[test]
+fn test_serve_wire_dir_mode_errors_cleanly_on_missing_files() {
+    // --dir with no keygen output: a clean pointer at `lingcn keygen`,
+    // not a panic or an opaque I/O error
+    let dir = std::env::temp_dir().join("lingcn_cli_smoke_wire_empty");
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = run(&args(&["serve", "--tier", "he-wire", "--dir", dir.to_str().unwrap()]))
+        .expect_err("empty --dir must fail");
+    assert!(format!("{err:#}").contains("keygen"), "got: {err:#}");
+}
+
+#[test]
+fn test_infer_remote_requires_addr() {
+    let err = run(&args(&["infer-remote"])).expect_err("infer-remote needs --addr");
+    assert!(format!("{err:#}").contains("--addr"), "got: {err:#}");
+    // flag values are validated before any connection is attempted
+    assert!(run(&args(&["infer-remote", "--addr", "127.0.0.1:1", "--nl", "x"])).is_err());
+    assert!(
+        run(&args(&["infer-remote", "--addr", "127.0.0.1:1", "--batch", "0"])).is_err(),
+        "batch 0 must be rejected"
+    );
+}

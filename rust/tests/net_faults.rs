@@ -1,0 +1,493 @@
+//! Socket fault-injection corpus for the TCP tier (DESIGN.md S18, ISSUE 6
+//! satellite): mid-upload disconnects, truncated and bit-flipped frames,
+//! hostile length prefixes, a slow writer tripping the read timeout,
+//! unknown tenants, and both admission quotas. The server must never
+//! panic, must answer with typed error frames where the protocol allows,
+//! and must keep serving healthy connections through every fault.
+//!
+//! Runs against mock [`NetBackend`]s, so the whole corpus is debug-fast —
+//! no real CKKS inference. Key/ciphertext *material* is real (a tiny
+//! `n = 2^7` engine) so frame parsing is exercised end to end. No test
+//! uses sleeps as synchronization: ports come from `127.0.0.1:0`,
+//! readiness is `NetServer::bind` returning, and the gated backend is
+//! synchronized with channels.
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams};
+use lingcn::coordinator::Metrics;
+use lingcn::wire::codec::{
+    frame_with, KIND_NET_ERROR, KIND_NET_HELLO, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER,
+    MAGIC, VERSION,
+};
+use lingcn::wire::net::{
+    err_name, hello_frame, infer_header_frame, ok_frame, parse_error_frame, read_frame_budget,
+    Client, InferOutcome, NetBackend, NetConfig, NetServer,
+};
+use lingcn::wire::{CtBundle, EvalKeySet, WireSerialize};
+
+// --------------------------------------------------------------- fixtures
+
+/// Tiny but *real* key/ciphertext material: `n = 2^7` keeps engine
+/// construction cheap enough for debug builds.
+fn tiny_engine() -> CkksEngine {
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 7;
+    CkksEngine::new(p, &[1, 3], 5).unwrap()
+}
+
+struct Fixture {
+    key_set: EvalKeySet,
+    bundle: CtBundle,
+}
+
+fn fixture() -> Fixture {
+    let engine = tiny_engine();
+    let key_set = EvalKeySet::from_engine(&engine, "v");
+    let ct = engine.encrypt(&[0.5, -0.25, 0.125]);
+    let bundle = CtBundle::new(&key_set.params, vec![ct]);
+    Fixture { key_set, bundle }
+}
+
+/// Registration records the tenant; inference echoes the first ciphertext.
+#[derive(Default)]
+struct EchoBackend {
+    registered: Mutex<HashSet<String>>,
+    infer_calls: AtomicU64,
+}
+
+impl NetBackend for EchoBackend {
+    fn register(&self, tenant: &str, _key_set: EvalKeySet) -> anyhow::Result<()> {
+        self.registered.lock().unwrap().insert(tenant.to_string());
+        Ok(())
+    }
+
+    fn is_registered(&self, tenant: &str) -> bool {
+        self.registered.lock().unwrap().contains(tenant)
+    }
+
+    fn infer(
+        &self,
+        _tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        _params_hash: Option<u64>,
+        _batch: usize,
+    ) -> anyhow::Result<InferOutcome> {
+        self.infer_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(InferOutcome {
+            variant: variant.unwrap_or_else(|| "echo".into()),
+            ct_logits: cts.into_iter().next().expect("server never passes zero cts"),
+            queue: Duration::ZERO,
+            exec: Duration::ZERO,
+        })
+    }
+}
+
+/// Echo backend whose `infer` signals entry and then blocks on a channel —
+/// the deterministic (sleep-free) way to hold a request in flight while
+/// another one probes the in-flight quota.
+struct GatedBackend {
+    echo: EchoBackend,
+    entered_tx: Mutex<mpsc::Sender<()>>,
+    release_rx: Mutex<mpsc::Receiver<()>>,
+}
+
+impl NetBackend for GatedBackend {
+    fn register(&self, tenant: &str, key_set: EvalKeySet) -> anyhow::Result<()> {
+        self.echo.register(tenant, key_set)
+    }
+
+    fn is_registered(&self, tenant: &str) -> bool {
+        self.echo.is_registered(tenant)
+    }
+
+    fn infer(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+    ) -> anyhow::Result<InferOutcome> {
+        self.entered_tx.lock().unwrap().send(()).unwrap();
+        self.release_rx.lock().unwrap().recv().unwrap();
+        self.echo.infer(tenant, variant, cts, params_hash, batch)
+    }
+}
+
+fn spawn(backend: Arc<dyn NetBackend>, cfg: NetConfig) -> (NetServer, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::default());
+    let server = NetServer::bind("127.0.0.1:0", backend, metrics.clone(), cfg).unwrap();
+    (server, metrics)
+}
+
+// ------------------------------------------------------- raw-socket tools
+
+fn raw_connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(20))).unwrap();
+    s
+}
+
+/// Connect + hello + consume the OK — a session ready for hostile frames.
+fn raw_session(addr: SocketAddr, tenant: &str) -> TcpStream {
+    let mut s = raw_connect(addr);
+    s.write_all(&hello_frame(tenant)).unwrap();
+    let (kind, _) = read_frame_budget(&mut s, 1 << 30).unwrap();
+    assert_eq!(kind, KIND_NET_OK, "hello must be acknowledged");
+    s
+}
+
+/// The next frame must be a typed error carrying `token`; returns the
+/// message for further asserts.
+fn expect_error(s: &mut TcpStream, token: &str) -> String {
+    let (kind, frame) = read_frame_budget(s, 1 << 30).unwrap();
+    assert_eq!(kind, KIND_NET_ERROR, "expected a typed error frame");
+    let (code, message) = parse_error_frame(&frame).unwrap();
+    assert_eq!(err_name(code), token, "error message: {message}");
+    message
+}
+
+fn expect_eof(s: &mut TcpStream) {
+    assert!(
+        read_frame_budget(s, 1 << 30).is_err(),
+        "server must have closed this connection"
+    );
+}
+
+/// A full healthy register+infer roundtrip through the real `net::Client`
+/// — the liveness probe every fault test runs afterwards.
+fn healthy_roundtrip(addr: SocketAddr, tenant: &str, fx: &Fixture) {
+    let mut c = Client::connect_with(&addr.to_string(), tenant, Duration::from_secs(20)).unwrap();
+    c.register(&fx.key_set).unwrap();
+    let out = c.infer(Some("v"), &fx.bundle).unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0], "echo backend must return the upload");
+    assert!(c.bytes_out > 0 && c.bytes_in > 0);
+}
+
+// ------------------------------------------------------------------ tests
+
+#[test]
+fn test_mid_upload_disconnect_leaves_server_serving() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+    // a registered tenant starts a 3-ciphertext upload and vanishes after 1
+    healthy_roundtrip(addr, "alice", &fx);
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&infer_header_frame(Some("v"), None, 1, 3)).unwrap();
+    s.write_all(&fx.bundle.cts[0].to_bytes()).unwrap();
+    s.shutdown(Shutdown::Both).unwrap();
+    drop(s);
+    // the server is unfazed: a fresh healthy tenant completes
+    healthy_roundtrip(addr, "bob", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_truncated_frame_is_disconnect_not_panic() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+    // a frame header promising 100 payload bytes, then only 10, then EOF
+    let mut s = raw_session(addr, "alice");
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&MAGIC);
+    partial.extend_from_slice(&VERSION.to_le_bytes());
+    partial.push(KIND_NET_REGISTER);
+    partial.push(0);
+    partial.extend_from_slice(&100u64.to_le_bytes());
+    partial.extend_from_slice(&[0u8; 10]);
+    s.write_all(&partial).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    expect_eof(&mut s);
+    // also: truncation inside the 16-byte header itself
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&MAGIC).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    expect_eof(&mut s);
+    healthy_roundtrip(addr, "alice", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_bit_flipped_frames_get_typed_bad_frame_error() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+    healthy_roundtrip(addr, "alice", &fx);
+
+    // a flipped payload byte in a streamed ciphertext frame fails the
+    // checksum in the validator and is reported per-frame
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&infer_header_frame(Some("v"), None, 1, 1)).unwrap();
+    let mut ct_bytes = fx.bundle.cts[0].to_bytes();
+    ct_bytes[20] ^= 0x40; // payload region: header is bytes 0..16
+    s.write_all(&ct_bytes).unwrap();
+    let msg = expect_error(&mut s, "bad-frame");
+    assert!(msg.contains("ciphertext"), "message should name the frame: {msg}");
+    expect_eof(&mut s);
+
+    // same for a flipped eval-key registration frame
+    let mut s = raw_session(addr, "alice");
+    let mut reg = frame_with(KIND_NET_REGISTER, |w| fx.key_set.write_payload(w));
+    reg[20] ^= 0x40;
+    s.write_all(&reg).unwrap();
+    expect_error(&mut s, "bad-frame");
+    expect_eof(&mut s);
+
+    healthy_roundtrip(addr, "bob", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+    assert!(metrics.net_requests_rejected.load(Ordering::Relaxed) >= 2);
+}
+
+#[test]
+fn test_hostile_length_prefix_rejected_without_allocation() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+
+    // a header claiming u64::MAX payload bytes: the typed reject must
+    // come from the header alone — we never send (or own) that payload
+    let mut s = raw_session(addr, "alice");
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(&MAGIC);
+    hostile.extend_from_slice(&VERSION.to_le_bytes());
+    hostile.push(KIND_NET_REGISTER);
+    hostile.push(0);
+    hostile.extend_from_slice(&u64::MAX.to_le_bytes());
+    s.write_all(&hostile).unwrap();
+    let msg = expect_error(&mut s, "too-large");
+    assert!(msg.contains("budget"), "message should name the budget: {msg}");
+    expect_eof(&mut s);
+
+    // garbage that is not a codec frame at all
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&[0xAB; 16]).unwrap();
+    expect_error(&mut s, "bad-frame");
+    expect_eof(&mut s);
+
+    healthy_roundtrip(addr, "alice", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_slow_writer_trips_read_timeout_without_stalling_others() {
+    let fx = fixture();
+    let cfg = NetConfig { read_timeout: Duration::from_millis(150), ..Default::default() };
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), cfg);
+    let addr = server.local_addr();
+    // the slow client completes its hello, then stalls mid-session
+    let mut slow = raw_session(addr, "sloth");
+    // a healthy tenant connects and completes while the stall is pending —
+    // thread-per-connection means nobody waits behind the sloth
+    healthy_roundtrip(addr, "alice", &fx);
+    // the stalled connection is cut off with a typed timeout error
+    expect_error(&mut slow, "timeout");
+    expect_eof(&mut slow);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_unknown_tenant_rejected_then_recovers_on_same_connection() {
+    let fx = fixture();
+    let backend = Arc::new(EchoBackend::default());
+    let (server, metrics) = spawn(backend.clone(), NetConfig::default());
+    let addr = server.local_addr();
+    let mut c =
+        Client::connect_with(&addr.to_string(), "mallory", Duration::from_secs(20)).unwrap();
+    // infer before register: the server refuses before ingesting the
+    // upload, but drains it so the connection stays in sync
+    let err = c.infer(Some("v"), &fx.bundle).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unknown-tenant"),
+        "want typed unknown-tenant, got: {err:#}"
+    );
+    // same connection, proper order: register then infer now succeed
+    c.register(&fx.key_set).unwrap();
+    let out = c.infer(Some("v"), &fx.bundle).unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0]);
+    // the rejected request was refused at admission — it never reached
+    // the backend (its upload was drained, not served)
+    assert_eq!(backend.infer_calls.load(Ordering::Relaxed), 1);
+    drop(c);
+    server.shutdown();
+    assert_eq!(metrics.net_requests_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_inflight_quota_rejects_typed_and_releases() {
+    let fx = fixture();
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let backend = Arc::new(GatedBackend {
+        echo: EchoBackend::default(),
+        entered_tx: Mutex::new(entered_tx),
+        release_rx: Mutex::new(release_rx),
+    });
+    let cfg = NetConfig { max_inflight_per_tenant: 1, ..Default::default() };
+    let (server, metrics) = spawn(backend, cfg);
+    let addr = server.local_addr();
+
+    let mut c1 = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    c1.register(&fx.key_set).unwrap();
+    let bundle = fx.bundle.clone();
+    let holder = std::thread::spawn(move || c1.infer(Some("v"), &bundle).unwrap());
+    // deterministic: the first request is *inside* the backend now
+    entered_rx.recv().unwrap();
+
+    // second request from the same tenant hits the in-flight quota with a
+    // typed error — after the server drained its upload
+    let mut c2 = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    let err = c2.infer(Some("v"), &fx.bundle).unwrap_err();
+    assert!(format!("{err:#}").contains("over-quota"), "got: {err:#}");
+
+    // a different tenant is not affected by alice's quota
+    let mut c3 = Client::connect_with(&addr.to_string(), "bob", Duration::from_secs(20)).unwrap();
+    c3.register(&fx.key_set).unwrap();
+    // bob's request also blocks in the gated backend; release twice
+    let bundle = fx.bundle.clone();
+    let bob = std::thread::spawn(move || c3.infer(Some("v"), &bundle).unwrap());
+    entered_rx.recv().unwrap();
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    let out = holder.join().unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0]);
+    bob.join().unwrap();
+
+    // the released slot is reusable: alice can run again
+    let mut c4 = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    let bundle = fx.bundle.clone();
+    let again = std::thread::spawn(move || c4.infer(Some("v"), &bundle).unwrap());
+    entered_rx.recv().unwrap();
+    release_tx.send(()).unwrap();
+    again.join().unwrap();
+
+    server.shutdown();
+    assert_eq!(metrics.net_requests_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_connection_quota_enforced_at_hello() {
+    let fx = fixture();
+    let cfg = NetConfig { max_conns_per_tenant: 2, ..Default::default() };
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), cfg);
+    let addr = server.local_addr();
+    let _c1 = raw_session(addr, "alice");
+    let _c2 = raw_session(addr, "alice");
+    // third connection for the same tenant: typed over-quota at hello
+    let mut s = raw_connect(addr);
+    s.write_all(&hello_frame("alice")).unwrap();
+    let msg = expect_error(&mut s, "over-quota");
+    assert!(msg.contains("connection quota"), "got: {msg}");
+    expect_eof(&mut s);
+    // another tenant is unaffected
+    healthy_roundtrip(addr, "bob", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_rejected.load(Ordering::Relaxed), 1);
+    assert!(metrics.net_conns_accepted.load(Ordering::Relaxed) >= 3);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_protocol_violations_get_typed_errors() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+
+    // first frame must be a hello
+    let mut s = raw_connect(addr);
+    s.write_all(&ok_frame("hi")).unwrap();
+    expect_error(&mut s, "protocol");
+    expect_eof(&mut s);
+
+    // unsupported protocol revision
+    let mut s = raw_connect(addr);
+    s.write_all(&frame_with(KIND_NET_HELLO, |w| {
+        w.put_u32(99);
+        w.put_str("alice");
+    }))
+    .unwrap();
+    expect_error(&mut s, "protocol");
+    expect_eof(&mut s);
+
+    // hostile tenant ids: empty, and the coordinator's queue-key separator
+    for tenant in ["", "a\u{1}b"] {
+        let mut s = raw_connect(addr);
+        s.write_all(&frame_with(KIND_NET_HELLO, |w| {
+            w.put_u32(1);
+            w.put_str(tenant);
+        }))
+        .unwrap();
+        expect_error(&mut s, "bad-frame");
+        expect_eof(&mut s);
+    }
+
+    // server-only frame kind mid-session
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&frame_with(KIND_NET_LOGITS, |w| w.put_str("v"))).unwrap();
+    expect_error(&mut s, "protocol");
+    expect_eof(&mut s);
+
+    // announced ciphertext count, delivered something else
+    healthy_roundtrip(addr, "alice", &fx);
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&infer_header_frame(Some("v"), None, 1, 2)).unwrap();
+    s.write_all(&fx.bundle.cts[0].to_bytes()).unwrap();
+    s.write_all(&ok_frame("not a ciphertext")).unwrap();
+    expect_error(&mut s, "protocol");
+    expect_eof(&mut s);
+
+    healthy_roundtrip(addr, "bob", &fx);
+    server.shutdown();
+    assert!(metrics.net_conns_rejected.load(Ordering::Relaxed) >= 4);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_malformed_register_payload_closes_cleanly() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+    // a well-framed register whose payload is not an EvalKeySet
+    let mut s = raw_session(addr, "alice");
+    s.write_all(&frame_with(KIND_NET_REGISTER, |w| w.put_u8(0xEE))).unwrap();
+    expect_error(&mut s, "bad-frame");
+    expect_eof(&mut s);
+    healthy_roundtrip(addr, "alice", &fx);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_bytes_metrics_account_both_directions() {
+    let fx = fixture();
+    let (server, metrics) = spawn(Arc::new(EchoBackend::default()), NetConfig::default());
+    let addr = server.local_addr();
+    let mut c = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    c.register(&fx.key_set).unwrap();
+    let out = c.infer(Some("v"), &fx.bundle).unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0]);
+    drop(c);
+    server.shutdown();
+    // the server read at least what the client wrote, and vice versa
+    // (shutdown joined every handler, so the counters are final)
+    assert!(metrics.net_bytes_in.load(Ordering::Relaxed) >= 1, "no bytes counted in");
+    assert!(metrics.net_bytes_out.load(Ordering::Relaxed) >= 1, "no bytes counted out");
+    let s = metrics.summary();
+    assert!(s.contains("net_conns=1a/0r/0live"), "summary: {s}");
+}

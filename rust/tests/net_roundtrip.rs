@@ -1,0 +1,292 @@
+//! Loopback acceptance suite for the TCP tier (ISSUE 6): a real
+//! `NetServer` on `127.0.0.1:0` over the real `WireExecutor` +
+//! coordinator stack, with the bit-identity claim at its center — the
+//! logits ciphertext that comes back over the socket is `assert_eq!` to
+//! what the in-process executor produces for the *same* bundle.
+//!
+//! No sleeps anywhere: `NetServer::bind` returning is the readiness
+//! signal, ports come from `:0`, and the concurrency test synchronizes on
+//! thread joins. The single-request test runs in debug (one inference,
+//! like `wire_roundtrip`'s acceptance test); the seed × variant × batch
+//! sweep and the concurrency differential are release-gated (ci.sh).
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use common::{assert_close, clip_seeded, tiny_model, variants};
+use lingcn::ckks::Ciphertext;
+use lingcn::coordinator::{
+    Coordinator, InferenceExecutor, KeyRegistry, Metrics, ModelVariant, Router,
+};
+use lingcn::he_infer::PlanOptions;
+use lingcn::stgcn::StgcnModel;
+use lingcn::wire::net::Client;
+use lingcn::wire::{keygen, CoordinatorBackend, CtBundle, NetConfig, NetServer, WireExecutor};
+
+/// The full serving stack on a loopback socket: executor → coordinator →
+/// [`CoordinatorBackend`] → [`NetServer`] on `127.0.0.1:0`. Returns the
+/// executor too, so tests can run the same bundles in-process and demand
+/// bit-identical ciphertexts from both paths.
+fn start_net_server(
+    named: &[(&str, StgcnModel)],
+    workers: usize,
+    cfg: NetConfig,
+) -> (NetServer, Arc<WireExecutor>, Arc<Metrics>) {
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(16, Some(metrics.clone())));
+    let mut models = HashMap::new();
+    let mut menu = Vec::new();
+    for (i, (name, model)) in named.iter().enumerate() {
+        models.insert(name.to_string(), model.clone());
+        // latency/accuracy only matter to auto-routing; these tests always
+        // pin the variant by name
+        menu.push(ModelVariant {
+            name: name.to_string(),
+            nl: i,
+            latency_s: 1.0,
+            accuracy: 0.9,
+        });
+    }
+    let mut executor = WireExecutor::new(models, 2, registry);
+    executor.set_metrics(metrics.clone());
+    let executor = Arc::new(executor);
+    let dyn_exec: Arc<dyn InferenceExecutor> = executor.clone();
+    let coord = Coordinator::start_with_metrics(
+        Router::new(menu),
+        dyn_exec,
+        metrics.clone(),
+        workers,
+        8,
+        Duration::from_millis(2),
+    );
+    let backend = Arc::new(CoordinatorBackend::new(executor.clone(), coord));
+    let server = NetServer::bind("127.0.0.1:0", backend, metrics.clone(), cfg)
+        .expect("binding 127.0.0.1:0 must succeed");
+    (server, executor, metrics)
+}
+
+/// The in-process reference for a bundle: straight into the executor,
+/// no sockets, no coordinator.
+fn reference_ct(
+    executor: &WireExecutor,
+    variant: &str,
+    tenant: &str,
+    bundle: &CtBundle,
+) -> Ciphertext {
+    InferenceExecutor::infer_encrypted(
+        executor,
+        variant,
+        tenant,
+        &bundle.cts,
+        Some(bundle.params_hash),
+        bundle.batch,
+    )
+    .expect("in-process reference inference")
+}
+
+/// The acceptance core, debug-runnable (one tiny inference each path):
+/// register + infer over a real TCP socket returns the *bit-identical*
+/// logits ciphertext the in-process executor produces for the same
+/// bundle, and the decrypted logits track the plaintext model.
+#[test]
+fn test_loopback_logits_bit_identical_to_in_process() {
+    let model = tiny_model(1);
+    let (server, executor, metrics) =
+        start_net_server(&[("v", model.clone())], 2, NetConfig::default());
+    let addr = server.local_addr().to_string();
+
+    let (keys, key_set) = keygen(&model, "v", PlanOptions::default(), 42).unwrap();
+    let x = clip_seeded(&model, 0);
+    let bundle = keys.encrypt_request(&x).unwrap();
+
+    let mut conn = Client::connect_with(&addr, "alice", Duration::from_secs(120)).unwrap();
+    conn.register(&key_set).unwrap();
+    // registration happened over the wire; the in-process path now sees
+    // the same tenant, so both paths run the same keys on the same bundle
+    let want_ct = reference_ct(&executor, "v", "alice", &bundle);
+    let out = conn.infer(Some("v"), &bundle).unwrap();
+    assert_eq!(out.variant, "v");
+    assert_eq!(
+        out.ct_logits, want_ct,
+        "TCP logits ciphertext must be bit-identical to the in-process executor's"
+    );
+    let got = keys.decrypt_logits(&out.ct_logits).unwrap();
+    assert_close("loopback", &got, &model.forward(&x).unwrap());
+    assert!(conn.bytes_out > 0 && conn.bytes_in > 0);
+    drop(conn);
+
+    server.shutdown();
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+    assert!(metrics.completed.load(Ordering::Relaxed) >= 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.net_conns_accepted.load(Ordering::Relaxed), 1);
+}
+
+/// The differential sweep: seeds × nl-variants × batch sizes, every case
+/// asserting socket-vs-in-process ciphertext equality plus decrypted
+/// logits against the plaintext forward pass.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS sweep: run in release (ci.sh)")]
+fn test_loopback_sweep_seeds_variants_batches() {
+    for seed in [3u64, 4] {
+        let family = variants(seed);
+        let named: Vec<(&str, StgcnModel)> =
+            family.iter().map(|(n, m)| (*n, m.clone())).collect();
+        let (server, executor, metrics) = start_net_server(&named, 3, NetConfig::default());
+        let addr = server.local_addr().to_string();
+        let mut served = 0u64;
+
+        for (vi, (vname, model)) in family.iter().enumerate() {
+            let vname: &str = vname;
+            for batch in [1usize, 2] {
+                let opts = PlanOptions { batch, ..Default::default() };
+                let (keys, key_set) =
+                    keygen(model, vname, opts, seed * 100 + vi as u64).unwrap();
+                if batch > keys.spec.copies() {
+                    continue; // this geometry cannot hold the batch
+                }
+                let tenant = format!("t-{seed}-{vname}-{batch}");
+                let clips: Vec<Vec<f64>> =
+                    (0..batch).map(|b| clip_seeded(model, seed as usize * 7 + b)).collect();
+                let bundle = if batch == 1 {
+                    keys.encrypt_request(&clips[0]).unwrap()
+                } else {
+                    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+                    keys.encrypt_request_batch(&refs).unwrap()
+                };
+
+                let mut conn =
+                    Client::connect_with(&addr, &tenant, Duration::from_secs(300)).unwrap();
+                conn.register(&key_set).unwrap();
+                let want_ct = reference_ct(&executor, vname, &tenant, &bundle);
+                let out = conn.infer(Some(vname), &bundle).unwrap();
+                served += 1;
+                assert_eq!(
+                    out.ct_logits, want_ct,
+                    "seed {seed} variant {vname} batch {batch}: ciphertexts diverged"
+                );
+                let per_clip = keys.decrypt_logits_batch(&out.ct_logits, batch).unwrap();
+                for (b, x) in clips.iter().enumerate() {
+                    assert_close(
+                        &format!("seed {seed} {vname} batch {batch} clip {b}"),
+                        &per_clip[b],
+                        &model.forward(x).unwrap(),
+                    );
+                }
+            }
+        }
+
+        server.shutdown();
+        assert!(served >= 4, "sweep degenerated to {served} cases for seed {seed}");
+        assert_eq!(metrics.failed.load(Ordering::Relaxed), 0, "seed {seed}");
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), served, "seed {seed}");
+        assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+    }
+}
+
+/// The concurrency differential: three tenants with ragged batch sizes
+/// hammer one server from their own threads; every reply must equal that
+/// tenant's single-client in-process run bit for bit, the metrics must
+/// add up exactly, and an over-quota tenant must hit connection
+/// admission.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (ci.sh)")]
+fn test_concurrent_tenants_differential_and_admission() {
+    let model = tiny_model(5);
+    let cfg = NetConfig { max_conns_per_tenant: 2, ..Default::default() };
+    let (server, executor, metrics) = start_net_server(&[("v", model.clone())], 3, cfg);
+    let addr = server.local_addr().to_string();
+
+    // per-tenant fixtures up front: keys and two request bundles each
+    // (ragged batches: 1, 2, 1)
+    let tenants = ["t-a", "t-b", "t-c"];
+    let batches = [1usize, 2, 1];
+    let mut fixtures = Vec::new();
+    for (ti, (tenant, &batch)) in tenants.iter().zip(&batches).enumerate() {
+        let opts = PlanOptions { batch, ..Default::default() };
+        let (keys, key_set) = keygen(&model, "v", opts, 1000 + ti as u64).unwrap();
+        assert!(batch <= keys.spec.copies(), "fixture geometry too small");
+        let bundles: Vec<CtBundle> = (0..2)
+            .map(|r| {
+                let clips: Vec<Vec<f64>> =
+                    (0..batch).map(|b| clip_seeded(&model, ti * 31 + r * 7 + b)).collect();
+                if batch == 1 {
+                    keys.encrypt_request(&clips[0]).unwrap()
+                } else {
+                    let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
+                    keys.encrypt_request_batch(&refs).unwrap()
+                }
+            })
+            .collect();
+        fixtures.push((tenant.to_string(), keys, key_set, bundles));
+    }
+
+    // all three tenants at once, each thread: connect → register → 2 infers
+    let mut threads = Vec::new();
+    for (tenant, _, key_set, bundles) in &fixtures {
+        let addr = addr.clone();
+        let tenant = tenant.clone();
+        let key_set = key_set.clone();
+        let bundles = bundles.clone();
+        threads.push(std::thread::spawn(move || -> Vec<Ciphertext> {
+            let mut conn =
+                Client::connect_with(&addr, &tenant, Duration::from_secs(300)).unwrap();
+            conn.register(&key_set).unwrap();
+            bundles
+                .iter()
+                .map(|b| conn.infer(Some("v"), b).unwrap().ct_logits)
+                .collect()
+        }));
+    }
+    let results: Vec<Vec<Ciphertext>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+
+    // differential: every concurrent reply equals the tenant's own
+    // single-client in-process run on the identical bundle
+    for ((tenant, keys, _, bundles), cts) in fixtures.iter().zip(&results) {
+        for (r, (bundle, got_ct)) in bundles.iter().zip(cts).enumerate() {
+            let want_ct = reference_ct(&executor, "v", tenant, bundle);
+            assert_eq!(got_ct, &want_ct, "{tenant} request {r}: ciphertext diverged under load");
+            let per_clip = keys.decrypt_logits_batch(got_ct, bundle.batch).unwrap();
+            assert_eq!(per_clip.len(), bundle.batch);
+            for logits in &per_clip {
+                assert_eq!(logits.len(), 3, "{tenant} request {r}: logit arity");
+            }
+        }
+    }
+
+    // metrics add up exactly: 6 served requests over 3 accepted conns
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 6);
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.net_conns_accepted.load(Ordering::Relaxed), 3);
+    assert_eq!(metrics.net_conns_rejected.load(Ordering::Relaxed), 0);
+    assert_eq!(executor.registry.len(), 3);
+
+    // admission: a tenant at its connection quota (2) gets a typed
+    // rejection for the third connect, and the quota frees on disconnect
+    let _hog1 = Client::connect_with(&addr, "hog", Duration::from_secs(30)).unwrap();
+    let hog2 = Client::connect_with(&addr, "hog", Duration::from_secs(30)).unwrap();
+    let err = Client::connect_with(&addr, "hog", Duration::from_secs(30)).unwrap_err();
+    assert!(format!("{err:#}").contains("over-quota"), "got: {err:#}");
+    drop(hog2);
+    // the slot frees once the server reaps the closed connection; retry
+    // without sleeping — connect errors are the signal, not a timer
+    let mut freed = false;
+    for _ in 0..200 {
+        match Client::connect_with(&addr, "hog", Duration::from_secs(30)) {
+            Ok(_) => {
+                freed = true;
+                break;
+            }
+            Err(e) => assert!(format!("{e:#}").contains("over-quota"), "got: {e:#}"),
+        }
+    }
+    assert!(freed, "connection quota never freed after disconnect");
+    assert_eq!(metrics.net_requests_rejected.load(Ordering::Relaxed), 0);
+
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
