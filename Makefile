@@ -8,7 +8,7 @@
 #   make test        tier-1 gate via ci.sh
 #   make bench       paper-table bench binaries
 
-.PHONY: artifacts artifacts-quick test test-batch test-net bench bench-plan bench-wire bench-batch regen-golden
+.PHONY: artifacts artifacts-quick test test-batch test-net bench bench-plan bench-wire bench-batch bench-kernels regen-golden
 
 artifacts:
 	cd python && python -m compile.aot --out ../rust/artifacts/model.hlo.txt
@@ -53,6 +53,14 @@ test-net:
 # copies(); writes BENCH_batch.json (asserts the ≥2x acceptance floor)
 bench-batch:
 	cargo bench --bench batch_throughput
+
+# CKKS kernel campaign (§Perf-4..6): NTT/key-switch/rescale/rotate-group
+# medians under baseline / pool / fused / arena / campaign configs;
+# writes rust/BENCH_kernels.json and fails on >20% regression of the
+# campaign config vs the committed baseline (rebaseline intentionally
+# with `cargo bench --bench he_ops -- --kernels --rebaseline`)
+bench-kernels:
+	cargo bench --bench he_ops -- --kernels
 
 # the slot-batched differential equivalence suite plus the batched
 # coordinator/wire end-to-ends, in release: CKKS is too slow in debug,

@@ -86,4 +86,21 @@ echo "==> op-count regression gate (bench plan_compile, same as make bench-plan)
 # fails the build here (invoked via cargo directly so ci.sh needs no make)
 cargo bench --bench plan_compile
 
+echo "==> kernel wall-clock regression gate (bench he_ops --kernels, same as make bench-kernels)"
+# measures the campaign kernels (NTT fwd/inv, key switch, rescale,
+# rotate_group, cmult + ablation configs) and appends the medians to
+# rust/BENCH_kernels.json; a gated kernel >20% slower than the committed
+# baseline exits nonzero and fails the build. A missing or
+# shape-mismatched baseline bootstraps with a warning instead — the gate
+# only bites once BENCH_kernels.json is committed (same lifecycle as the
+# golden fixtures; nag below while it is untracked)
+cargo bench --bench he_ops -- --kernels
+if command -v git >/dev/null && [ -d .git ]; then
+    untracked=$(git ls-files --others --exclude-standard rust/BENCH_kernels.json || true)
+    if [ -n "$untracked" ]; then
+        echo "WARNING: rust/BENCH_kernels.json was bootstrapped this run and is not yet"
+        echo "committed — the kernel wall-clock regression gate is inactive until it is"
+    fi
+fi
+
 echo "==> ci.sh: all green"

@@ -1,12 +1,88 @@
-//! Real CKKS operation micro-benchmarks (paper Fig. 2 bottom: op latency
-//! grows with polynomial degree N) and cost-model calibration.
-//! Run: cargo bench --bench he_ops  [-- --recalibrate]
+//! Real CKKS operation micro-benchmarks.
+//!
+//! Two modes:
+//!
+//! * default — cost-model calibration across ring degrees (paper Fig. 2
+//!   bottom: op latency grows with N). Run:
+//!   `cargo bench --bench he_ops  [-- --recalibrate]`
+//!
+//! * `--kernels` — the kernel-campaign harness (DESIGN.md §Perf-4..6):
+//!   measures NTT forward/inverse, hybrid key switch, rescale, hoisted
+//!   rotation groups, add/pmult/cmult at paper-scale N under five
+//!   configurations — `baseline` (every campaign optimization off: scoped
+//!   spawns, eager inner product, fresh allocations), `pool` / `fused` /
+//!   `arena` (exactly one optimization on, so each is individually
+//!   ablatable), and `campaign` (all on, the shipping default). Writes
+//!   `BENCH_kernels.json` (in `rust/`, the bench cwd) and gates the
+//!   `campaign` medians against the committed baseline: any gated kernel
+//!   more than 20% slower fails the run. A missing or shape-mismatched
+//!   baseline bootstraps with a warning instead of failing — commit the
+//!   file to arm the gate (same lifecycle as the golden-vector fixtures).
+//!   Run: `make bench-kernels`, or
+//!   `cargo bench --bench he_ops -- --kernels [--log-n 15] [--levels 8]
+//!    [--budget-ms 800] [--rebaseline]`
 
+use lingcn::ckks::{
+    set_arena_enabled, set_fused_keyswitch, set_limb_parallelism, CkksEngine, CkksParams,
+};
 use lingcn::costmodel::{measure_point, OpCostModel};
-use lingcn::util::ascii_table;
+use lingcn::util::bench::time_op;
+use lingcn::util::{ascii_table, fmt_f, pool};
+use std::time::Duration;
+
+/// The kernels whose campaign medians are regression-gated (>20% slower
+/// than the committed baseline fails). add/pmult are measured and
+/// reported but not gated: at paper scale they are tens of microseconds,
+/// where scheduler jitter swamps any real regression.
+const GATED: &[&str] = &[
+    "ntt_fwd",
+    "ntt_inv",
+    "key_switch",
+    "rescale",
+    "rotate_group",
+    "cmult",
+];
+
+/// Every measured kernel, in report order.
+const KERNELS: &[&str] = &[
+    "ntt_fwd",
+    "ntt_inv",
+    "key_switch",
+    "rescale",
+    "rotate_group",
+    "add",
+    "pmult",
+    "cmult",
+];
+
+/// (name, pooled_spawn, fused_keyswitch, arena) — `baseline` is the
+/// pre-campaign code path; the three middle rows flip exactly one
+/// optimization on for ablation; `campaign` is the shipping default.
+const CONFIGS: &[(&str, bool, bool, bool)] = &[
+    ("baseline", false, false, false),
+    ("pool", true, false, false),
+    ("fused", false, true, false),
+    ("arena", false, false, true),
+    ("campaign", true, true, true),
+];
+
+const BENCH_FILE: &str = "BENCH_kernels.json";
+const GATE_FACTOR: f64 = 1.2;
+const HISTORY_CAP: usize = 50;
 
 fn main() {
-    let recal = std::env::args().any(|a| a == "--recalibrate");
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--kernels") {
+        kernels_mode(&args);
+    } else {
+        calibration_mode(&args);
+    }
+}
+
+// ------------------------------------------------------ calibration mode
+
+fn calibration_mode(args: &[String]) {
+    let recal = args.iter().any(|a| a == "--recalibrate");
     let mut rows = Vec::new();
     let mut points = Vec::new();
     for (log_n, levels) in [(11u32, 4usize), (12, 6), (13, 8)] {
@@ -40,4 +116,295 @@ fn main() {
     // and everything grows with N
     assert!(points[2].rot_s > points[0].rot_s, "Rot must grow with N");
     assert!(points[2].rot_s > points[2].add_s * 5.0, "Rot >> Add");
+}
+
+// --------------------------------------------------------- kernels mode
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn kernels_mode(args: &[String]) {
+    let log_n: u32 = flag_value(args, "--log-n")
+        .map(|v| v.parse().expect("--log-n wants an integer"))
+        .unwrap_or(15);
+    let levels: usize = flag_value(args, "--levels")
+        .map(|v| v.parse().expect("--levels wants an integer"))
+        .unwrap_or(8);
+    let budget_ms: u64 = flag_value(args, "--budget-ms")
+        .map(|v| v.parse().expect("--budget-ms wants an integer"))
+        .unwrap_or(800);
+    let rebaseline = args.iter().any(|a| a == "--rebaseline");
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(8);
+
+    let params = CkksParams {
+        n: 1usize << log_n,
+        q0_bits: 47,
+        scale_bits: 33,
+        levels,
+        special_bits: 60,
+        allow_insecure: true,
+    };
+    println!(
+        "kernel campaign: N=2^{log_n}, limbs={}, limb-threads={threads}, \
+         budget {budget_ms} ms/kernel",
+        levels + 1
+    );
+    let rots = [1usize, 2, 3, 4];
+    let engine = CkksEngine::new(params, &rots, 4242).expect("engine build");
+    let half = engine.ctx.slots();
+    let xs: Vec<f64> = (0..half).map(|i| ((i * 13 % 37) as f64 - 18.0) / 20.0).collect();
+    let ys: Vec<f64> = (0..half).map(|i| ((i * 7 % 29) as f64 - 14.0) / 16.0).collect();
+    let ct_a = engine.encrypt(&xs);
+    let ct_b = engine.encrypt(&ys);
+    let pt = engine.encode_for(&ys, &ct_a);
+    // NTT round-trip operands: a coefficient-form and an NTT-form poly
+    let mut coeff_poly = ct_a.c0.clone();
+    coeff_poly.ntt_inverse(&engine.ctx);
+    let ntt_poly = ct_a.c0.clone();
+
+    set_limb_parallelism(threads);
+    let budget = Duration::from_millis(budget_ms);
+    let mut results: Vec<(&str, Vec<(&str, f64)>)> = Vec::new();
+    for &(name, pooled, fused, arena) in CONFIGS {
+        pool::set_pooled_spawn(pooled);
+        set_fused_keyswitch(fused);
+        set_arena_enabled(arena);
+        let ev = &engine.eval;
+        let enc = &engine.encoder;
+        let ctx = &engine.ctx;
+        // the NTT closures clone their operand each run (the transform is
+        // in-place); the clone is identical across configs, so deltas
+        // between configs are still pure kernel deltas
+        let med = |stats: lingcn::util::bench::BenchStats| stats.median_secs() * 1e3;
+        let mut row: Vec<(&str, f64)> = Vec::new();
+        row.push((
+            "ntt_fwd",
+            med(time_op(1, 30, budget, || {
+                let mut p = coeff_poly.clone();
+                p.ntt_forward(ctx);
+            })),
+        ));
+        row.push((
+            "ntt_inv",
+            med(time_op(1, 30, budget, || {
+                let mut p = ntt_poly.clone();
+                p.ntt_inverse(ctx);
+            })),
+        ));
+        row.push((
+            "key_switch",
+            med(time_op(1, 20, budget, || {
+                let _ = ev.rotate(enc, &ct_a, 1);
+            })),
+        ));
+        row.push((
+            "rescale",
+            med(time_op(1, 30, budget, || {
+                let _ = ev.rescale(&ct_a);
+            })),
+        ));
+        row.push((
+            "rotate_group",
+            med(time_op(1, 10, budget, || {
+                let _ = ev.rotate_group(enc, &ct_a, &rots);
+            })),
+        ));
+        row.push((
+            "add",
+            med(time_op(1, 50, budget, || {
+                let _ = ev.add(&ct_a, &ct_b);
+            })),
+        ));
+        row.push((
+            "pmult",
+            med(time_op(1, 50, budget, || {
+                let _ = ev.mul_plain(&ct_a, &pt);
+            })),
+        ));
+        row.push((
+            "cmult",
+            med(time_op(1, 20, budget, || {
+                let _ = ev.mul(&ct_a, &ct_b);
+            })),
+        ));
+        println!(
+            "  {name:>9}: {}",
+            row.iter()
+                .map(|(k, v)| format!("{k} {}ms", fmt_f(*v, 3)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        results.push((name, row));
+    }
+    // restore shipping defaults before anything else runs in-process
+    pool::set_pooled_spawn(true);
+    set_fused_keyswitch(true);
+    set_arena_enabled(true);
+    set_limb_parallelism(1);
+
+    print_table(&results);
+    let campaign: &Vec<(&str, f64)> = &results.last().expect("configs nonempty").1;
+
+    // ------------------------------------------------ baseline + gate
+    let old = std::fs::read_to_string(BENCH_FILE).ok();
+    let n = 1usize << log_n;
+    let shape_matches = old.as_deref().map_or(false, |s| {
+        json_num(s, "n") == Some(n as f64)
+            && json_num(s, "levels") == Some(levels as f64)
+            && json_num(s, "threads") == Some(threads as f64)
+    });
+    let mut gates: Vec<(&str, f64)> = Vec::new();
+    let mut regressions: Vec<String> = Vec::new();
+    if let (Some(old), true, false) = (old.as_deref(), shape_matches, rebaseline) {
+        for &k in GATED {
+            let gate = json_num(old, &format!("gate_{k}_ms"))
+                .unwrap_or_else(|| panic!("baseline {BENCH_FILE} lacks gate_{k}_ms"));
+            let got = kernel_ms(campaign, k);
+            if got > gate * GATE_FACTOR {
+                regressions.push(format!(
+                    "{k}: {} ms vs gate {} ms (>{:.0}% regression)",
+                    fmt_f(got, 3),
+                    fmt_f(gate, 3),
+                    (GATE_FACTOR - 1.0) * 100.0
+                ));
+            }
+            gates.push((k, gate));
+        }
+    } else {
+        if rebaseline {
+            println!("--rebaseline: gates reset to this run's campaign medians");
+        } else if old.is_some() && !shape_matches {
+            println!(
+                "WARNING: {BENCH_FILE} was measured at a different (n, levels, threads) \
+                 shape — gate skipped, baseline rebuilt for this shape"
+            );
+        } else {
+            println!(
+                "WARNING: no committed {BENCH_FILE} baseline — gate inactive until \
+                 this run's file is committed"
+            );
+        }
+        for &k in GATED {
+            gates.push((k, kernel_ms(campaign, k)));
+        }
+    }
+
+    // --------------------------------------------------------- write
+    let history = carry_history(old.as_deref(), campaign);
+    write_bench_file(n, levels, threads, &gates, &results, &history);
+    println!("wrote {BENCH_FILE}");
+
+    if !regressions.is_empty() {
+        eprintln!("KERNEL REGRESSION GATE FAILED:");
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        eprintln!("(intentional? re-run with --rebaseline and commit the new {BENCH_FILE})");
+        std::process::exit(1);
+    }
+}
+
+fn kernel_ms(row: &[(&str, f64)], kernel: &str) -> f64 {
+    row.iter()
+        .find(|(k, _)| *k == kernel)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("kernel {kernel} not measured"))
+}
+
+fn print_table(results: &[(&str, Vec<(&str, f64)>)]) {
+    let mut headers = vec!["config"];
+    headers.extend(KERNELS.iter().map(|k| *k));
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(name, row)| {
+            let mut cells = vec![name.to_string()];
+            cells.extend(KERNELS.iter().map(|k| fmt_f(kernel_ms(row, k), 3)));
+            cells
+        })
+        .collect();
+    println!("\nmedian ms per kernel:");
+    println!("{}", ascii_table(&headers, &rows));
+}
+
+/// Scan `src` for `"key": <number>` and parse the number. The file is
+/// written by this bench one key per line, so a line-oriented scan is
+/// robust without a JSON parser (none is vendored).
+fn json_num(src: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = src.find(&needle)? + needle.len();
+    let rest = src[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Previous history lines (one JSON object per line, identified by the
+/// `{"ts":` prefix) plus this run's campaign entry, capped to the newest
+/// [`HISTORY_CAP`].
+fn carry_history(old: Option<&str>, campaign: &[(&str, f64)]) -> Vec<String> {
+    let mut hist: Vec<String> = old
+        .map(|s| {
+            s.lines()
+                .map(str::trim)
+                .filter(|l| l.starts_with("{\"ts\":"))
+                .map(|l| l.trim_end_matches(',').to_string())
+                .collect()
+        })
+        .unwrap_or_default();
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let fields: Vec<String> = campaign
+        .iter()
+        .map(|(k, v)| format!("\"{k}_ms\": {}", fmt_f(*v, 4)))
+        .collect();
+    hist.push(format!("{{\"ts\": {ts}, {}}}", fields.join(", ")));
+    if hist.len() > HISTORY_CAP {
+        let drop = hist.len() - HISTORY_CAP;
+        hist.drain(..drop);
+    }
+    hist
+}
+
+fn write_bench_file(
+    n: usize,
+    levels: usize,
+    threads: usize,
+    gates: &[(&str, f64)],
+    results: &[(&str, Vec<(&str, f64)>)],
+    history: &[String],
+) {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"n\": {n},\n"));
+    out.push_str(&format!("  \"levels\": {levels},\n"));
+    out.push_str(&format!("  \"threads\": {threads},\n"));
+    for (k, v) in gates {
+        out.push_str(&format!("  \"gate_{k}_ms\": {},\n", fmt_f(*v, 4)));
+    }
+    out.push_str("  \"configs\": {\n");
+    let cfg_rows: Vec<String> = results
+        .iter()
+        .map(|(name, row)| {
+            let fields: Vec<String> = row
+                .iter()
+                .map(|(k, v)| format!("\"{k}_ms\": {}", fmt_f(*v, 4)))
+                .collect();
+            format!("    \"{name}\": {{{}}}", fields.join(", "))
+        })
+        .collect();
+    out.push_str(&cfg_rows.join(",\n"));
+    out.push_str("\n  },\n");
+    out.push_str("  \"history\": [\n");
+    let hist_rows: Vec<String> = history.iter().map(|h| format!("    {h}")).collect();
+    out.push_str(&hist_rows.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    std::fs::write(BENCH_FILE, &out).expect("writing BENCH_kernels.json");
 }

@@ -1,0 +1,258 @@
+//! Thread-local scratch-buffer arena for RNS limb sets (DESIGN.md
+//! §Perf-6).
+//!
+//! Every hot evaluator op used to allocate fresh multi-MiB buffers —
+//! `ks_digit` one `(nq+1)`-limb polynomial per digit, `key_switch_coeff`
+//! two accumulators, `mod_down` its output, `automorphism_ntt` and
+//! `RnsPoly::mul` a full clone they then overwrite. At paper-scale N a
+//! single limb is 256 KiB, so one rotation churned tens of MiB through
+//! the allocator per call. This arena recycles those buffers per thread,
+//! keyed by `(ring degree, limb count)`.
+//!
+//! Contract: [`take_limbs`] returns **dirty** buffers — the contents are
+//! whatever the previous user left; callers must overwrite every word
+//! (all call sites do: permutations, pointwise products, and spreads
+//! write the full range). [`take_acc`] returns **zeroed** `u128`
+//! accumulators, because accumulation reads before writing. Buffers that
+//! escape (e.g. a `mod_down` output that becomes part of a ciphertext)
+//! are simply never recycled — the arena only sees what callers
+//! explicitly hand back, so there is no ownership tracking to get wrong.
+//!
+//! Being thread-local, the arena needs no locks and interacts safely
+//! with both the persistent pool and scoped spawns. Caps: at most
+//! [`MAX_PER_KEY`] buffers per shape and [`MAX_THREAD_BYTES`] total per
+//! thread; excess buffers drop to the allocator as before.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Ablation toggle (bench mode `--kernels`): `true` (default) recycles
+/// scratch buffers; `false` makes every take a fresh allocation (the
+/// pre-campaign behavior). Values produced are bit-identical either way.
+static ARENA_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable scratch-buffer recycling (the ablation baseline
+/// allocates fresh, as the pre-campaign code did).
+pub fn set_arena_enabled(enabled: bool) {
+    ARENA_ENABLED.store(enabled, Ordering::Relaxed);
+}
+
+/// Whether scratch buffers are currently recycled.
+pub fn arena_enabled() -> bool {
+    ARENA_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Max recycled buffers kept per `(n, limb_count)` shape.
+const MAX_PER_KEY: usize = 4;
+
+/// Max bytes of recycled buffers kept per thread (paper-scale key switch
+/// keeps a handful of shapes live; beyond this, buffers drop to the
+/// allocator instead of accumulating).
+const MAX_THREAD_BYTES: usize = 192 << 20;
+
+#[derive(Default)]
+struct ThreadArena {
+    limbs: HashMap<(usize, usize), Vec<Vec<Vec<u64>>>>,
+    accs: HashMap<(usize, usize), Vec<Vec<Vec<u128>>>>,
+    bytes: usize,
+}
+
+thread_local! {
+    static ARENA: RefCell<ThreadArena> = RefCell::new(ThreadArena::default());
+}
+
+fn limb_bytes(n: usize, count: usize) -> usize {
+    n * count * std::mem::size_of::<u64>()
+}
+
+fn acc_bytes(n: usize, count: usize) -> usize {
+    n * count * std::mem::size_of::<u128>()
+}
+
+/// Take a `count`-limb buffer set, each limb `n` words, **dirty** — the
+/// caller must overwrite every word before reading any.
+pub fn take_limbs(n: usize, count: usize) -> Vec<Vec<u64>> {
+    if arena_enabled() {
+        let hit = ARENA.with(|a| {
+            let mut a = a.borrow_mut();
+            let buf = a.limbs.get_mut(&(n, count)).and_then(|v| v.pop());
+            if buf.is_some() {
+                a.bytes -= limb_bytes(n, count);
+            }
+            buf
+        });
+        if let Some(buf) = hit {
+            debug_assert!(buf.len() == count && buf.iter().all(|l| l.len() == n));
+            return buf;
+        }
+    }
+    vec![vec![0u64; n]; count]
+}
+
+/// Return a limb buffer set to the current thread's arena (no-op when
+/// disabled, ragged, or over the caps).
+pub fn recycle_limbs(buf: Vec<Vec<u64>>) {
+    if !arena_enabled() || buf.is_empty() {
+        return;
+    }
+    let (n, count) = (buf[0].len(), buf.len());
+    if buf.iter().any(|l| l.len() != n) {
+        return;
+    }
+    ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        let bytes = limb_bytes(n, count);
+        if a.bytes + bytes > MAX_THREAD_BYTES {
+            return;
+        }
+        let slot = a.limbs.entry((n, count)).or_default();
+        if slot.len() < MAX_PER_KEY {
+            slot.push(buf);
+            a.bytes += bytes;
+        }
+    });
+}
+
+/// Take a `count`-limb set of **zeroed** 128-bit accumulators (the fused
+/// key-switch inner product reads before writing, so recycled buffers
+/// are re-zeroed here).
+pub fn take_acc(n: usize, count: usize) -> Vec<Vec<u128>> {
+    if arena_enabled() {
+        let hit = ARENA.with(|a| {
+            let mut a = a.borrow_mut();
+            let buf = a.accs.get_mut(&(n, count)).and_then(|v| v.pop());
+            if buf.is_some() {
+                a.bytes -= acc_bytes(n, count);
+            }
+            buf
+        });
+        if let Some(mut buf) = hit {
+            debug_assert!(buf.len() == count && buf.iter().all(|l| l.len() == n));
+            for limb in &mut buf {
+                limb.fill(0);
+            }
+            return buf;
+        }
+    }
+    vec![vec![0u128; n]; count]
+}
+
+/// Return an accumulator set to the current thread's arena.
+pub fn recycle_acc(buf: Vec<Vec<u128>>) {
+    if !arena_enabled() || buf.is_empty() {
+        return;
+    }
+    let (n, count) = (buf[0].len(), buf.len());
+    if buf.iter().any(|l| l.len() != n) {
+        return;
+    }
+    ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        let bytes = acc_bytes(n, count);
+        if a.bytes + bytes > MAX_THREAD_BYTES {
+            return;
+        }
+        let slot = a.accs.entry((n, count)).or_default();
+        if slot.len() < MAX_PER_KEY {
+            slot.push(buf);
+            a.bytes += bytes;
+        }
+    });
+}
+
+/// Buffers currently pooled by this thread (tests/diagnostics).
+pub fn pooled_buffers() -> usize {
+    ARENA.with(|a| {
+        let a = a.borrow();
+        a.limbs.values().map(Vec::len).sum::<usize>() + a.accs.values().map(Vec::len).sum::<usize>()
+    })
+}
+
+/// Bytes currently pooled by this thread (tests/diagnostics).
+pub fn pooled_bytes() -> usize {
+    ARENA.with(|a| a.borrow().bytes)
+}
+
+/// Drop every buffer pooled by this thread (tests).
+pub fn clear() {
+    ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        a.limbs.clear();
+        a.accs.clear();
+        a.bytes = 0;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_limbs_roundtrip_and_reuse() {
+        clear();
+        set_arena_enabled(true);
+        let mut b = take_limbs(64, 3);
+        assert_eq!(b.len(), 3);
+        b[1][7] = 0xdead;
+        recycle_limbs(b);
+        assert_eq!(pooled_buffers(), 1);
+        let b2 = take_limbs(64, 3);
+        assert_eq!(pooled_buffers(), 0, "same-shape take must reuse");
+        // dirty contract: the recycled buffer keeps its old contents
+        assert_eq!(b2[1][7], 0xdead);
+        // different shape misses the pool
+        recycle_limbs(b2);
+        let other = take_limbs(64, 4);
+        assert_eq!(pooled_buffers(), 1);
+        recycle_limbs(other);
+        clear();
+    }
+
+    #[test]
+    fn test_acc_rezeroed_on_reuse() {
+        clear();
+        set_arena_enabled(true);
+        let mut acc = take_acc(32, 2);
+        acc[0][5] = 999;
+        recycle_acc(acc);
+        let acc2 = take_acc(32, 2);
+        assert!(acc2.iter().all(|l| l.iter().all(|&v| v == 0)));
+        recycle_acc(acc2);
+        clear();
+    }
+
+    #[test]
+    fn test_per_key_cap() {
+        clear();
+        set_arena_enabled(true);
+        for _ in 0..(MAX_PER_KEY + 3) {
+            recycle_limbs(vec![vec![0u64; 16]; 2]);
+        }
+        assert_eq!(pooled_buffers(), MAX_PER_KEY);
+        clear();
+    }
+
+    #[test]
+    fn test_disabled_allocates_fresh() {
+        clear();
+        set_arena_enabled(false);
+        recycle_limbs(vec![vec![7u64; 16]; 2]);
+        assert_eq!(pooled_buffers(), 0, "disabled arena keeps nothing");
+        let b = take_limbs(16, 2);
+        assert!(b.iter().all(|l| l.iter().all(|&v| v == 0)));
+        set_arena_enabled(true);
+        clear();
+    }
+
+    #[test]
+    fn test_bytes_accounting() {
+        clear();
+        set_arena_enabled(true);
+        recycle_limbs(vec![vec![0u64; 128]; 4]);
+        assert_eq!(pooled_bytes(), 128 * 4 * 8);
+        let _ = take_limbs(128, 4);
+        assert_eq!(pooled_bytes(), 0);
+        clear();
+    }
+}

@@ -4,15 +4,91 @@
 //! cost model (DESIGN.md S12) so every paper table can be regenerated
 //! from real operation counts.
 
+use super::arena;
 use super::encoding::{Encoder, Plaintext};
 use super::encrypt::Ciphertext;
 use super::keys::{EvalKeys, KeySwitchKey};
 use super::params::CkksContext;
-use super::poly::RnsPoly;
+use super::poly::{par_limbs, RnsPoly};
 use super::zq;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Ablation toggle (bench mode `--kernels`): `true` (default) runs the
+/// fused lazy-reduction key-switch inner product (§Perf-5); `false`
+/// restores the pre-campaign eager per-element Barrett + modular-add
+/// path. Both are bit-identical — the fused path reduces the *sum* of
+/// full 128-bit digit products once per output word, and
+/// `Σ (dᵢ·kᵢ mod q) mod q == (Σ dᵢ·kᵢ) mod q`.
+static FUSED_KEYSWITCH: AtomicBool = AtomicBool::new(true);
+
+/// Select the fused (default) or eager key-switch inner product.
+pub fn set_fused_keyswitch(fused: bool) {
+    FUSED_KEYSWITCH.store(fused, Ordering::Relaxed);
+}
+
+/// Whether key switching currently uses the fused inner product.
+pub fn fused_keyswitch() -> bool {
+    FUSED_KEYSWITCH.load(Ordering::Relaxed)
+}
+
+/// The fused inner product's overflow headroom: RNS primes are ≤ 61 bits
+/// (`zq::gen_ntt_primes` asserts it), so each digit product is < 2^122
+/// and up to 2^6 = 64 of them sum without overflowing a u128. Every real
+/// chain has far fewer digits (nq ≤ levels + 1).
+const MAX_FUSED_DIGITS: usize = 64;
+
+/// Accumulate `digit × key` into both 128-bit accumulators, walking each
+/// digit limb **once** (§Perf-5: the eager path loaded every digit word
+/// twice — once per accumulator — and paid a Barrett reduction plus a
+/// modular add per word per digit). The key polynomials are stored over
+/// the full `Q ∪ {P}` basis, so working-set limb `idx` maps to key limb
+/// `idx` for the Q part and to the key's trailing special limb otherwise —
+/// indexed directly instead of materializing the `subset()` clones the
+/// eager path takes.
+fn fused_acc(
+    digit: &RnsPoly,
+    kb: &RnsPoly,
+    ka: &RnsPoly,
+    nq: usize,
+    acc0: &mut [Vec<u128>],
+    acc1: &mut [Vec<u128>],
+) {
+    debug_assert!(digit.is_ntt && kb.is_ntt && ka.is_ntt);
+    debug_assert!(digit.has_special && kb.has_special && ka.has_special);
+    let mut pairs: Vec<(&mut Vec<u128>, &mut Vec<u128>)> =
+        acc0.iter_mut().zip(acc1.iter_mut()).collect();
+    par_limbs(&mut pairs, |idx, (a0, a1)| {
+        let kidx = if idx < nq { idx } else { kb.nq };
+        let dv = &digit.limbs[idx];
+        let bv = &kb.limbs[kidx];
+        let av = &ka.limbs[kidx];
+        for t in 0..dv.len() {
+            let x = dv[t] as u128;
+            a0[t] += x * bv[t] as u128;
+            a1[t] += x * av[t] as u128;
+        }
+    });
+}
+
+/// Reduce a fused accumulator **once** per output word into an NTT-form
+/// extended-basis polynomial: one `Barrett::reduce_u128` per word total,
+/// where the eager path paid one reduction *plus* a modular add per word
+/// per digit. `reduce_u128` is exact and canonical for any u128 input
+/// (its quotient underestimates the true one by < 2; one conditional
+/// subtract finishes), so the result equals the eager chain bit for bit.
+fn reduce_acc(ctx: &CkksContext, acc: &[Vec<u128>], nq: usize) -> RnsPoly {
+    let special = ctx.moduli.len();
+    let mut out = RnsPoly::scratch(ctx, nq, true, true);
+    par_limbs(&mut out.limbs, |idx, dst| {
+        let br = ctx.barrett_for(if idx < nq { idx } else { special });
+        for (d, &v) in dst.iter_mut().zip(&acc[idx]) {
+            *d = br.reduce_u128(v);
+        }
+    });
+    out
+}
 
 /// Generates the counter registry once from a single field list, so
 /// `OpCounters`, its `OpCounts` snapshot, `snapshot()`, `reset()` and the
@@ -388,8 +464,8 @@ impl Evaluator {
         // shared part: c1 to coefficient form once
         let mut c1 = a.c1.clone();
         c1.ntt_inverse(ctx);
-        // one lane per step: (perm, key, acc0, acc1)
-        let mut lanes: Vec<(Arc<Vec<usize>>, &KeySwitchKey, RnsPoly, RnsPoly)> = ks
+        // one lane per step: (perm, key)
+        let lanes: Vec<(Arc<Vec<usize>>, &KeySwitchKey)> = ks
             .iter()
             .map(|&k| {
                 let k = k % half;
@@ -400,37 +476,19 @@ impl Evaluator {
                     .galois
                     .get(&g)
                     .unwrap_or_else(|| panic!("no galois key for element {g}"));
-                (
-                    self.auto_perm(g),
-                    key,
-                    RnsPoly::zero(ctx, nq, true, true),
-                    RnsPoly::zero(ctx, nq, true, true),
-                )
+                (self.auto_perm(g), key)
             })
             .collect();
-        // decompose-once: each digit is spread + NTT'd a single time, then
-        // permuted per lane (only one digit is live at a time)
-        for i in 0..nq {
-            let mut digit = self.ks_digit(&c1, i);
-            digit.ntt_forward(ctx);
-            for (perm, key, acc0, acc1) in lanes.iter_mut() {
-                let td = digit.automorphism_ntt(&perm[..]);
-                let kb = key.digits[i].b.subset(nq, true);
-                let ka = key.digits[i].a.subset(nq, true);
-                acc0.mul_acc(ctx, &td, &kb);
-                acc1.mul_acc(ctx, &td, &ka);
-            }
-        }
+        let switched = if fused_keyswitch() && nq <= MAX_FUSED_DIGITS {
+            self.rotate_group_switch_fused(&c1, &lanes, nq)
+        } else {
+            self.rotate_group_switch_eager(&c1, &lanes, nq)
+        };
         let mut out = Vec::with_capacity(lanes.len());
-        for (perm, _key, mut acc0, mut acc1) in lanes {
-            acc0.ntt_inverse(ctx);
-            acc1.ntt_inverse(ctx);
-            let mut u0 = self.mod_down(&acc0);
-            let mut u1 = self.mod_down(&acc1);
-            u0.ntt_forward(ctx);
-            u1.ntt_forward(ctx);
-            let mut r0 = a.c0.automorphism_ntt(&perm);
+        for ((perm, _key), (u0, u1)) in lanes.iter().zip(switched) {
+            let mut r0 = a.c0.automorphism_ntt(perm);
             r0.add_assign(ctx, &u0);
+            u0.recycle();
             self.counters.rot.fetch_add(1, Ordering::Relaxed);
             self.counters
                 .rot_limbs
@@ -450,6 +508,99 @@ impl Evaluator {
             .ks_decomp_limbs_sq
             .fetch_add((nq * nq) as u64, Ordering::Relaxed);
         out
+    }
+
+    /// Per-lane key-switch outputs for a hoisted rotation group, fused
+    /// inner product (§Perf-5): each digit is spread + NTT'd once, the
+    /// permuted digit accumulates into per-lane 128-bit accumulators —
+    /// one reduction per output word per lane at the end, no key subset
+    /// clones, all transients recycled through the arena.
+    fn rotate_group_switch_fused(
+        &self,
+        c1: &RnsPoly,
+        lanes: &[(Arc<Vec<usize>>, &KeySwitchKey)],
+        nq: usize,
+    ) -> Vec<(RnsPoly, RnsPoly)> {
+        let ctx = &self.ctx;
+        debug_assert!(nq <= MAX_FUSED_DIGITS);
+        let mut accs: Vec<(Vec<Vec<u128>>, Vec<Vec<u128>>)> = lanes
+            .iter()
+            .map(|_| (arena::take_acc(ctx.n, nq + 1), arena::take_acc(ctx.n, nq + 1)))
+            .collect();
+        // decompose-once: each digit is spread + NTT'd a single time, then
+        // permuted per lane (only one digit is live at a time)
+        for i in 0..nq {
+            let mut digit = self.ks_digit(c1, i);
+            digit.ntt_forward(ctx);
+            for ((perm, key), (acc0, acc1)) in lanes.iter().zip(accs.iter_mut()) {
+                let td = digit.automorphism_ntt(perm);
+                fused_acc(&td, &key.digits[i].b, &key.digits[i].a, nq, acc0, acc1);
+                td.recycle();
+            }
+            digit.recycle();
+        }
+        accs.into_iter()
+            .map(|(acc0, acc1)| {
+                let mut s0 = reduce_acc(ctx, &acc0, nq);
+                let mut s1 = reduce_acc(ctx, &acc1, nq);
+                arena::recycle_acc(acc0);
+                arena::recycle_acc(acc1);
+                s0.ntt_inverse(ctx);
+                s1.ntt_inverse(ctx);
+                let mut u0 = self.mod_down(&s0);
+                let mut u1 = self.mod_down(&s1);
+                s0.recycle();
+                s1.recycle();
+                u0.ntt_forward(ctx);
+                u1.ntt_forward(ctx);
+                (u0, u1)
+            })
+            .collect()
+    }
+
+    /// The pre-campaign eager group path, kept verbatim as the
+    /// `--kernels` ablation baseline (subset clones + `mul_acc` per
+    /// digit per lane).
+    fn rotate_group_switch_eager(
+        &self,
+        c1: &RnsPoly,
+        lanes: &[(Arc<Vec<usize>>, &KeySwitchKey)],
+        nq: usize,
+    ) -> Vec<(RnsPoly, RnsPoly)> {
+        let ctx = &self.ctx;
+        let mut accs: Vec<(RnsPoly, RnsPoly)> = lanes
+            .iter()
+            .map(|_| {
+                (
+                    RnsPoly::zero(ctx, nq, true, true),
+                    RnsPoly::zero(ctx, nq, true, true),
+                )
+            })
+            .collect();
+        for i in 0..nq {
+            let mut digit = self.ks_digit(c1, i);
+            digit.ntt_forward(ctx);
+            for ((perm, key), (acc0, acc1)) in lanes.iter().zip(accs.iter_mut()) {
+                let td = digit.automorphism_ntt(&perm[..]);
+                let kb = key.digits[i].b.subset(nq, true);
+                let ka = key.digits[i].a.subset(nq, true);
+                acc0.mul_acc(ctx, &td, &kb);
+                acc1.mul_acc(ctx, &td, &ka);
+                td.recycle();
+            }
+            digit.recycle();
+        }
+        accs.into_iter()
+            .map(|(mut acc0, mut acc1)| {
+                acc0.ntt_inverse(ctx);
+                acc1.ntt_inverse(ctx);
+                let mut u0 = self.mod_down(&acc0);
+                let mut u1 = self.mod_down(&acc1);
+                u0.ntt_forward(ctx);
+                u1.ntt_forward(ctx);
+                (u0, u1)
+            })
+            .collect()
     }
 
     // ------------------------------------------------------------ rescale
@@ -529,7 +680,9 @@ impl Evaluator {
         let q_i = ctx.moduli[i];
         let half = q_i / 2;
         let src = &d.limbs[i];
-        let mut digit = RnsPoly::zero(ctx, nq, true, false);
+        // scratch, not zero: both branches below write every word of every
+        // limb, so the zero-fill was pure overwrite fodder (§Perf-6)
+        let mut digit = RnsPoly::scratch(ctx, nq, true, false);
         super::poly::par_limbs(&mut digit.limbs, |j, dst| {
             if j == i {
                 dst.copy_from_slice(src);
@@ -551,8 +704,59 @@ impl Evaluator {
     }
 
     /// Hybrid key switch, coefficient-form input. Returns NTT-form pair
-    /// over the same Q limbs as the input.
+    /// over the same Q limbs as the input. Dispatches between the fused
+    /// lazy-reduction inner product (§Perf-5, default) and the eager
+    /// pre-campaign path (ablation baseline; also the fallback past the
+    /// u128 overflow headroom, which no real chain approaches).
     fn key_switch_coeff(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
+        if fused_keyswitch() && d.nq <= MAX_FUSED_DIGITS {
+            self.key_switch_coeff_fused(d, key)
+        } else {
+            self.key_switch_coeff_eager(d, key)
+        }
+    }
+
+    /// Fused inner product: accumulate all `nq` digit products as full
+    /// 128-bit integers per output word, reduce once per word, walking
+    /// each NTT'd digit a single time for both accumulators and indexing
+    /// the key limbs in place (no `subset()` clones). Bit-identical to
+    /// [`Evaluator::key_switch_coeff_eager`] because
+    /// `Σ (dᵢ·kᵢ mod q) mod q == (Σ dᵢ·kᵢ) mod q` and both paths end
+    /// canonical in `[0, q)`.
+    fn key_switch_coeff_fused(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
+        let ctx = &self.ctx;
+        assert!(!d.is_ntt && !d.has_special);
+        let nq = d.nq;
+        debug_assert!(nq <= MAX_FUSED_DIGITS);
+        let mut acc0 = arena::take_acc(ctx.n, nq + 1);
+        let mut acc1 = arena::take_acc(ctx.n, nq + 1);
+        for i in 0..nq {
+            let mut digit = self.ks_digit(d, i);
+            digit.ntt_forward(ctx);
+            fused_acc(&digit, &key.digits[i].b, &key.digits[i].a, nq, &mut acc0, &mut acc1);
+            digit.recycle();
+        }
+        let mut s0 = reduce_acc(ctx, &acc0, nq);
+        let mut s1 = reduce_acc(ctx, &acc1, nq);
+        arena::recycle_acc(acc0);
+        arena::recycle_acc(acc1);
+        // ModDown by P (divide by the special prime, rounding)
+        s0.ntt_inverse(ctx);
+        s1.ntt_inverse(ctx);
+        let mut u0 = self.mod_down(&s0);
+        let mut u1 = self.mod_down(&s1);
+        s0.recycle();
+        s1.recycle();
+        u0.ntt_forward(ctx);
+        u1.ntt_forward(ctx);
+        (u0, u1)
+    }
+
+    /// The pre-campaign eager path, kept verbatim as the `--kernels`
+    /// ablation baseline: per digit, clone key-limb subsets and
+    /// `mul_acc` (Barrett reduce + modular add per word) into NTT-form
+    /// accumulators.
+    fn key_switch_coeff_eager(&self, d: &RnsPoly, key: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
         let ctx = &self.ctx;
         assert!(!d.is_ntt && !d.has_special);
         let nq = d.nq;
@@ -565,6 +769,7 @@ impl Evaluator {
             let ka = key.digits[i].a.subset(nq, true);
             acc0.mul_acc(ctx, &digit, &kb);
             acc1.mul_acc(ctx, &digit, &ka);
+            digit.recycle();
         }
         // ModDown by P (divide by the special prime, rounding)
         acc0.ntt_inverse(ctx);
@@ -577,6 +782,10 @@ impl Evaluator {
     }
 
     /// Exact division by the special prime with centered rounding.
+    /// Limb-parallel (target limbs are independent), with the `P^{-1}`
+    /// Shoup constants precomputed in the context (§Perf-6: this used to
+    /// pay a 128-bit division per limb per call) and a scratch-arena
+    /// output (every word is written below).
     fn mod_down(&self, u: &RnsPoly) -> RnsPoly {
         let ctx = &self.ctx;
         assert!(!u.is_ntt && u.has_special);
@@ -584,13 +793,12 @@ impl Evaluator {
         let sp = &u.limbs[nq]; // residues mod P
         let p = ctx.special;
         let half = p / 2;
-        let mut out = RnsPoly::zero(ctx, nq, false, false);
-        for j in 0..nq {
+        let mut out = RnsPoly::scratch(ctx, nq, false, false);
+        par_limbs(&mut out.limbs, |j, dst| {
             let q_j = ctx.moduli[j];
             let p_mod = ctx.p_mod[j];
-            let p_inv = zq::ShoupMul::new(ctx.p_inv[j], q_j);
+            let p_inv = &ctx.p_inv_shoup[j];
             let br = ctx.barrett_for(j);
-            let dst = &mut out.limbs[j];
             let src = &u.limbs[j];
             for t in 0..ctx.n {
                 let r = sp[t];
@@ -600,7 +808,7 @@ impl Evaluator {
                 }
                 dst[t] = p_inv.mul(v, q_j);
             }
-        }
+        });
         out
     }
 }
@@ -848,6 +1056,31 @@ mod tests {
         let c = f.ev.counters.snapshot();
         assert_eq!(c.ks_decomp, 3);
         assert_eq!(c.rot_group, 0);
+    }
+
+    #[test]
+    fn test_fused_keyswitch_bit_identical_to_eager() {
+        // the lazy-reduction inner product must reproduce the eager
+        // Barrett-per-product path bit for bit across relinearization,
+        // single rotations, and hoisted groups (flipping the toggle
+        // mid-run is safe for concurrent tests precisely because the
+        // paths are identical)
+        let mut f = fixture(3, 9, &[1, 7]);
+        let half = f.ctx.slots();
+        let a: Vec<f64> = (0..half).map(|i| ((i * 7 % 23) as f64 - 11.0) / 11.0).collect();
+        let ca = enc_vec(&mut f, &a);
+        set_fused_keyswitch(true);
+        let fused_mul = f.ev.mul(&ca, &ca);
+        let fused_rot = f.ev.rotate(&f.enc, &ca, 7);
+        let fused_grp = f.ev.rotate_group(&f.enc, &ca, &[1, 7]);
+        set_fused_keyswitch(false);
+        let eager_mul = f.ev.mul(&ca, &ca);
+        let eager_rot = f.ev.rotate(&f.enc, &ca, 7);
+        let eager_grp = f.ev.rotate_group(&f.enc, &ca, &[1, 7]);
+        set_fused_keyswitch(true);
+        assert_eq!(fused_mul, eager_mul, "relinearization diverged");
+        assert_eq!(fused_rot, eager_rot, "rotation key switch diverged");
+        assert_eq!(fused_grp, eager_grp, "hoisted group diverged");
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! assert!((out[1] - 4.0).abs() < 1e-2);
 //! ```
 
+pub mod arena;
 pub mod encoding;
 pub mod encrypt;
 pub mod eval;
@@ -34,12 +35,15 @@ pub mod poly;
 pub mod security;
 pub mod zq;
 
+pub use arena::{arena_enabled, set_arena_enabled};
 pub use encoding::{Encoder, Plaintext, C64};
 pub use encrypt::Ciphertext;
-pub use eval::{build_eval_keys, Evaluator, OpCounters, OpCounts};
+pub use eval::{
+    build_eval_keys, fused_keyswitch, set_fused_keyswitch, Evaluator, OpCounters, OpCounts,
+};
 pub use keys::{EvalKeys, KeySwitchKey, PublicKey, SecretKey};
 pub use params::{CkksContext, CkksParams};
-pub use poly::{limb_parallelism, par_limbs, set_limb_parallelism};
+pub use poly::{limb_parallelism, par_limbs, set_limb_parallelism, RnsPoly};
 
 use std::sync::Arc;
 use std::sync::Mutex;

@@ -68,10 +68,15 @@ pub struct CkksContext {
     pub scale: f64,
     /// `inv_last[m][j] = q_m^{-1} mod q_j`, for j < m (rescale).
     pub inv_last: Vec<Vec<u64>>,
+    /// Shoup-precomputed `inv_last` (§Perf-6: rescale used to rebuild the
+    /// `ShoupMul` per call, per limb — one 128-bit division each).
+    pub inv_last_shoup: Vec<Vec<zq::ShoupMul>>,
     /// q_m mod q_j, for j < m (rescale centering correction).
     pub mod_last: Vec<Vec<u64>>,
     /// P^{-1} mod q_j (hybrid key-switch ModDown).
     pub p_inv: Vec<u64>,
+    /// Shoup-precomputed `p_inv` (§Perf-6, same story for ModDown).
+    pub p_inv_shoup: Vec<zq::ShoupMul>,
     /// P mod q_j.
     pub p_mod: Vec<u64>,
     /// Barrett reduction contexts, index-aligned with `moduli` plus the
@@ -115,7 +120,21 @@ impl CkksContext {
                 mod_last[m].push(moduli[m] % moduli[j]);
             }
         }
-        let p_inv = moduli.iter().map(|&q| zq::inv_mod(special % q, q)).collect();
+        let inv_last_shoup = inv_last
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .map(|(j, &inv)| zq::ShoupMul::new(inv, moduli[j]))
+                    .collect()
+            })
+            .collect();
+        let p_inv: Vec<u64> = moduli.iter().map(|&q| zq::inv_mod(special % q, q)).collect();
+        let p_inv_shoup = p_inv
+            .iter()
+            .zip(&moduli)
+            .map(|(&inv, &q)| zq::ShoupMul::new(inv, q))
+            .collect();
         let p_mod = moduli.iter().map(|&q| special % q).collect();
         let mut barrett: Vec<zq::Barrett> = moduli.iter().map(|&q| zq::Barrett::new(q)).collect();
         barrett.push(zq::Barrett::new(special));
@@ -128,8 +147,10 @@ impl CkksContext {
             ntt,
             ntt_special,
             inv_last,
+            inv_last_shoup,
             mod_last,
             p_inv,
+            p_inv_shoup,
             p_mod,
             barrett,
             params,
@@ -192,6 +213,26 @@ mod tests {
         d.sort();
         d.dedup();
         assert_eq!(d.len(), all.len());
+    }
+
+    #[test]
+    fn test_shoup_tables_match_per_call_construction() {
+        // the precomputed tables must be exactly what the kernels used to
+        // build per call — the §Perf-6 bit-identity argument
+        let ctx = CkksParams::toy(3).build().unwrap();
+        for m in 0..ctx.moduli.len() {
+            assert_eq!(ctx.inv_last_shoup[m].len(), ctx.inv_last[m].len());
+            for j in 0..m {
+                let per_call = zq::ShoupMul::new(ctx.inv_last[m][j], ctx.moduli[j]);
+                assert_eq!(ctx.inv_last_shoup[m][j].w, per_call.w);
+                assert_eq!(ctx.inv_last_shoup[m][j].w_shoup, per_call.w_shoup);
+            }
+        }
+        for j in 0..ctx.moduli.len() {
+            let per_call = zq::ShoupMul::new(ctx.p_inv[j], ctx.moduli[j]);
+            assert_eq!(ctx.p_inv_shoup[j].w, per_call.w);
+            assert_eq!(ctx.p_inv_shoup[j].w_shoup, per_call.w_shoup);
+        }
     }
 
     #[test]

@@ -29,21 +29,22 @@ pub fn limb_parallelism() -> usize {
     LIMB_THREADS.load(Ordering::Relaxed)
 }
 
-/// Run `f(limb_index, &mut limb)` over every limb, fanning out across a
-/// scoped `std::thread` pool when [`set_limb_parallelism`] asked for more
-/// than one thread. Limbs are disjoint `&mut` chunks, so this is safe and
-/// deterministic: each limb's computation is independent of scheduling.
+/// Run `f(limb_index, &mut limb)` over every limb, fanning out across the
+/// persistent worker pool (`util::pool`; DESIGN.md §Perf-4) when
+/// [`set_limb_parallelism`] asked for more than one thread. Limbs are
+/// disjoint `&mut` elements, so this is safe and deterministic: each
+/// limb's computation is independent of scheduling.
 ///
-/// Fan-out pays a thread-spawn per chunk (~tens of µs), which only
-/// amortizes when each limb carries real work — at paper-scale rings
-/// (N ≥ 2^14, one NTT ≈ ms per limb) it wins; at toy N it can lose.
+/// With `util::pool::set_pooled_spawn(false)` (the ablation baseline)
+/// this falls back to the pre-campaign scoped `std::thread` fan-out,
+/// which pays a thread-spawn per chunk (~tens of µs) on every call.
 /// Late-chain ops with very few limbs stay serial regardless.
 pub fn par_limbs<T, F>(items: &mut [T], f: F)
 where
     T: Send,
     F: Fn(usize, &mut T) + Sync,
 {
-    // below 3 limbs the spawn overhead can't amortize — stay serial
+    // below 3 limbs the fan-out overhead can't amortize — stay serial
     let threads = if items.len() < 3 {
         1
     } else {
@@ -53,6 +54,19 @@ where
         for (i, item) in items.iter_mut().enumerate() {
             f(i, item);
         }
+        return;
+    }
+    if crate::util::pool::pooled_spawn() {
+        let base = items.as_mut_ptr() as usize;
+        let task = |i: usize| {
+            // SAFETY: the pool claims each index in 0..len exactly once,
+            // so every task holds the only &mut to its element; T: Send
+            // lets elements be touched from pool workers; pool::run does
+            // not return until all tasks finished.
+            let item = unsafe { &mut *(base as *mut T).add(i) };
+            f(i, item);
+        };
+        crate::util::pool::run(threads - 1, items.len(), &task);
         return;
     }
     let per = items.len().div_ceil(threads);
@@ -89,6 +103,36 @@ impl RnsPoly {
             has_special,
             is_ntt,
         }
+    }
+
+    /// A polynomial backed by possibly-dirty arena buffers (`ckks::arena`;
+    /// DESIGN.md §Perf-6). The caller must overwrite **every word of every
+    /// limb** before reading any — use [`RnsPoly::zero`] when that is not
+    /// guaranteed.
+    pub fn scratch(ctx: &CkksContext, nq: usize, has_special: bool, is_ntt: bool) -> Self {
+        let count = nq + has_special as usize;
+        RnsPoly {
+            limbs: super::arena::take_limbs(ctx.n, count),
+            nq,
+            has_special,
+            is_ntt,
+        }
+    }
+
+    /// Arena-backed scratch shaped like `self` (same dirty-buffer contract
+    /// as [`RnsPoly::scratch`]).
+    pub fn scratch_like(&self) -> Self {
+        RnsPoly {
+            limbs: super::arena::take_limbs(self.limbs[0].len(), self.limb_count()),
+            nq: self.nq,
+            has_special: self.has_special,
+            is_ntt: self.is_ntt,
+        }
+    }
+
+    /// Return this polynomial's limb buffers to the thread-local arena.
+    pub fn recycle(self) {
+        super::arena::recycle_limbs(self.limbs);
     }
 
     /// Modulus index in the context for limb slot `idx`.
@@ -176,56 +220,63 @@ impl RnsPoly {
 
     pub fn add_assign(&mut self, ctx: &CkksContext, other: &RnsPoly) {
         self.check_compat(other);
-        for idx in 0..self.limb_count() {
-            let q = ctx.modulus(self.mod_index(ctx, idx));
-            for (a, &b) in self.limbs[idx].iter_mut().zip(&other.limbs[idx]) {
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let q = ctx.modulus(if idx < nq { idx } else { special });
+            for (a, &b) in limb.iter_mut().zip(&other.limbs[idx]) {
                 *a = zq::add_mod(*a, b, q);
             }
-        }
+        });
     }
 
     pub fn sub_assign(&mut self, ctx: &CkksContext, other: &RnsPoly) {
         self.check_compat(other);
-        for idx in 0..self.limb_count() {
-            let q = ctx.modulus(self.mod_index(ctx, idx));
-            for (a, &b) in self.limbs[idx].iter_mut().zip(&other.limbs[idx]) {
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let q = ctx.modulus(if idx < nq { idx } else { special });
+            for (a, &b) in limb.iter_mut().zip(&other.limbs[idx]) {
                 *a = zq::sub_mod(*a, b, q);
             }
-        }
+        });
     }
 
     pub fn neg_assign(&mut self, ctx: &CkksContext) {
-        for idx in 0..self.limb_count() {
-            let q = ctx.modulus(self.mod_index(ctx, idx));
-            for a in self.limbs[idx].iter_mut() {
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let q = ctx.modulus(if idx < nq { idx } else { special });
+            for a in limb.iter_mut() {
                 *a = zq::neg_mod(*a, q);
             }
-        }
+        });
     }
 
-    /// Pointwise product (both operands must be in NTT form).
+    /// Pointwise product (both operands must be in NTT form). The output
+    /// comes from the scratch arena — every word is written below, so the
+    /// pre-campaign clone-then-overwrite memcpy is dead weight (§Perf-6).
     pub fn mul(&self, ctx: &CkksContext, other: &RnsPoly) -> RnsPoly {
         self.check_compat(other);
         assert!(self.is_ntt, "mul requires NTT form");
-        let mut out = self.clone();
-        for idx in 0..out.limb_count() {
-            let br = ctx.barrett_for(out.mod_index(ctx, idx));
-            for (a, &b) in out.limbs[idx].iter_mut().zip(&other.limbs[idx]) {
-                *a = br.mul(*a, b);
+        let mut out = self.scratch_like();
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut out.limbs, |idx, dst| {
+            let br = ctx.barrett_for(if idx < nq { idx } else { special });
+            for ((d, &a), &b) in dst.iter_mut().zip(&self.limbs[idx]).zip(&other.limbs[idx]) {
+                *d = br.mul(a, b);
             }
-        }
+        });
         out
     }
 
     pub fn mul_assign(&mut self, ctx: &CkksContext, other: &RnsPoly) {
         self.check_compat(other);
         assert!(self.is_ntt, "mul requires NTT form");
-        for idx in 0..self.limb_count() {
-            let br = ctx.barrett_for(self.mod_index(ctx, idx));
-            for (a, &b) in self.limbs[idx].iter_mut().zip(&other.limbs[idx]) {
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let br = ctx.barrett_for(if idx < nq { idx } else { special });
+            for (a, &b) in limb.iter_mut().zip(&other.limbs[idx]) {
                 *a = br.mul(*a, b);
             }
-        }
+        });
     }
 
     /// Multiply-accumulate: `self += a * b` (all NTT form).
@@ -233,29 +284,33 @@ impl RnsPoly {
         a.check_compat(b);
         self.check_compat(a);
         assert!(self.is_ntt);
-        for idx in 0..self.limb_count() {
-            let m = self.mod_index(ctx, idx);
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, dst| {
+            let m = if idx < nq { idx } else { special };
             let q = ctx.modulus(m);
             let br = ctx.barrett_for(m);
-            let dst = &mut self.limbs[idx];
             let (av, bv) = (&a.limbs[idx], &b.limbs[idx]);
             for i in 0..dst.len() {
                 let p = br.mul(av[i], bv[i]);
                 dst[i] = zq::add_mod(dst[i], p, q);
             }
-        }
+        });
     }
 
-    /// Multiply every limb by a scalar (given per-limb, already reduced).
+    /// Multiply every limb by a scalar (given per-limb, already reduced)
+    /// via a Shoup-precomputed constant per limb — same trick
+    /// `rescale_last` uses, replacing an eager 128-bit `mul_mod` per
+    /// coefficient with one widening multiply and a subtraction.
     pub fn mul_scalar_per_limb(&mut self, ctx: &CkksContext, scalars: &[u64]) {
         assert_eq!(scalars.len(), self.limb_count());
-        for idx in 0..self.limb_count() {
-            let q = ctx.modulus(self.mod_index(ctx, idx));
-            let s = scalars[idx] % q;
-            for a in self.limbs[idx].iter_mut() {
-                *a = zq::mul_mod(*a, s, q);
+        let (nq, special) = (self.nq, ctx.moduli.len());
+        par_limbs(&mut self.limbs, |idx, limb| {
+            let q = ctx.modulus(if idx < nq { idx } else { special });
+            let sm = zq::ShoupMul::new(scalars[idx] % q, q);
+            for a in limb.iter_mut() {
+                *a = sm.mul(*a, q);
             }
-        }
+        });
     }
 
     /// Drop the last Q limb (RNS modulus reduction without scaling). The
@@ -288,10 +343,9 @@ impl RnsPoly {
         self.nq -= 1;
         par_limbs(&mut self.limbs, |j, limb| {
             let q_j = ctx.moduli[j];
-            let inv = ctx.inv_last[m][j];
             let q_m_mod_j = ctx.mod_last[m][j];
             let br = ctx.barrett_for(j);
-            let inv_shoup = zq::ShoupMul::new(inv, q_j);
+            let inv_shoup = &ctx.inv_last_shoup[m][j];
             for i in 0..limb.len() {
                 // centered lift of the dropped residue for round-to-nearest
                 let r = last[i];
@@ -310,14 +364,17 @@ impl RnsPoly {
     /// §Perf-3). `perm` comes from [`ntt_automorphism_permutation`].
     pub fn automorphism_ntt(&self, perm: &[usize]) -> RnsPoly {
         assert!(self.is_ntt, "NTT-domain automorphism needs NTT form");
-        let mut out = self.clone();
-        for idx in 0..self.limb_count() {
+        assert_eq!(perm.len(), self.limbs[0].len(), "permutation/ring mismatch");
+        // scratch, not clone: `perm` is a permutation of 0..N, so the loop
+        // writes every word — the pre-campaign clone paid a full memcpy
+        // only to overwrite it (§Perf-6)
+        let mut out = self.scratch_like();
+        par_limbs(&mut out.limbs, |idx, dst| {
             let src = &self.limbs[idx];
-            let dst = &mut out.limbs[idx];
             for (j, &k) in perm.iter().enumerate() {
                 dst[j] = src[k];
             }
-        }
+        });
         out
     }
 
@@ -614,16 +671,21 @@ mod tests {
     #[test]
     fn test_par_limbs_indices_and_coverage() {
         // every index visited exactly once, with the right element, at any
-        // parallelism degree (including degrees above the item count)
-        for threads in [1usize, 2, 3, 8, 64] {
-            set_limb_parallelism(threads);
-            let mut items: Vec<u64> = (0..13).collect();
-            par_limbs(&mut items, |i, v| {
-                assert_eq!(*v, i as u64);
-                *v = 1000 + i as u64;
-            });
-            assert_eq!(items, (1000..1013).collect::<Vec<u64>>());
+        // parallelism degree (including degrees above the item count),
+        // through both the persistent pool and the scoped-spawn fallback
+        for pooled in [true, false] {
+            crate::util::pool::set_pooled_spawn(pooled);
+            for threads in [1usize, 2, 3, 8, 64] {
+                set_limb_parallelism(threads);
+                let mut items: Vec<u64> = (0..13).collect();
+                par_limbs(&mut items, |i, v| {
+                    assert_eq!(*v, i as u64);
+                    *v = 1000 + i as u64;
+                });
+                assert_eq!(items, (1000..1013).collect::<Vec<u64>>(), "pooled={pooled}");
+            }
         }
+        crate::util::pool::set_pooled_spawn(true);
         set_limb_parallelism(1);
     }
 
@@ -631,6 +693,7 @@ mod tests {
     fn test_limb_parallel_ntt_and_rescale_bit_identical() {
         // the par_limbs path is a pure scheduling change: NTT round trips
         // and rescale must produce bit-identical limbs at any thread count
+        // under either spawn mode (pool or scoped threads)
         let c = ctx();
         let mut rng = crate::util::Rng::seed_from_u64(17);
         let base = RnsPoly::sample_uniform(&c, 4, false, &mut rng);
@@ -641,14 +704,59 @@ mod tests {
         serial.ntt_inverse(&c);
         serial.rescale_last(&c);
 
-        set_limb_parallelism(4);
-        let mut parallel = base.clone();
-        parallel.ntt_forward(&c);
-        parallel.ntt_inverse(&c);
-        parallel.rescale_last(&c);
+        for pooled in [true, false] {
+            crate::util::pool::set_pooled_spawn(pooled);
+            for threads in [2usize, 4, 8] {
+                set_limb_parallelism(threads);
+                let mut parallel = base.clone();
+                parallel.ntt_forward(&c);
+                parallel.ntt_inverse(&c);
+                parallel.rescale_last(&c);
+                assert_eq!(serial, parallel, "pooled={pooled} threads={threads}");
+            }
+        }
+        crate::util::pool::set_pooled_spawn(true);
         set_limb_parallelism(1);
+    }
 
-        assert_eq!(serial, parallel);
+    #[test]
+    fn test_scratch_ops_bit_identical_and_shoup_scalar() {
+        // arena-backed mul/automorphism_ntt and the Shoup scalar path must
+        // equal the plain paths bit for bit, including on recycled (dirty)
+        // buffers the second time around
+        let c = ctx();
+        let mut rng = crate::util::Rng::seed_from_u64(23);
+        let mut a = RnsPoly::sample_uniform(&c, 3, false, &mut rng);
+        let mut b = RnsPoly::sample_uniform(&c, 3, false, &mut rng);
+        a.is_ntt = true;
+        b.is_ntt = true;
+        let perm = ntt_automorphism_permutation(c.n, 5);
+        for round in 0..3 {
+            // round 0 allocates, later rounds reuse recycled buffers
+            let prod = a.mul(&c, &b);
+            let mut want = a.clone();
+            want.mul_assign(&c, &b);
+            assert_eq!(prod, want, "round {round}");
+            let rot = a.automorphism_ntt(&perm);
+            for idx in 0..a.limb_count() {
+                for (j, &k) in perm.iter().enumerate() {
+                    assert_eq!(rot.limbs[idx][j], a.limbs[idx][k]);
+                }
+            }
+            prod.recycle();
+            rot.recycle();
+        }
+        // ShoupMul scalar path == eager mul_mod path
+        let scalars: Vec<u64> = (0..3).map(|i| 0x1234_5678 + i as u64).collect();
+        let mut shoup = a.clone();
+        shoup.mul_scalar_per_limb(&c, &scalars);
+        for idx in 0..3 {
+            let q = c.moduli[idx];
+            let s = scalars[idx] % q;
+            for (got, &orig) in shoup.limbs[idx].iter().zip(&a.limbs[idx]) {
+                assert_eq!(*got, zq::mul_mod(orig, s, q));
+            }
+        }
     }
 
     #[test]

@@ -184,8 +184,14 @@ impl PreparedPlan {
     }
 
     /// Execute the plan on real ciphertexts. `threads > 1` fans each
-    /// wavefront's ops out over a scoped worker pool (one OS thread per
-    /// worker for the whole request, waves separated by a barrier).
+    /// wavefront's ops out over the persistent worker pool shared with
+    /// `par_limbs` (`util::pool`; DESIGN.md §Perf-4). With
+    /// `util::pool::set_pooled_spawn(false)` — the `--kernels` ablation
+    /// baseline — it falls back to the pre-campaign scoped pool (one OS
+    /// thread per worker for the whole request, waves separated by a
+    /// standing barrier). Results are identical either way: waves are the
+    /// only ordering the dataflow needs, and both paths complete a wave
+    /// before starting the next.
     pub fn execute(
         &self,
         engine: &EvalEngine,
@@ -239,6 +245,51 @@ impl PreparedPlan {
                 for &oi in wave {
                     self.exec_op(plan.ops[oi as usize], &regs, eval, enc)?;
                 }
+            }
+        } else if crate::util::pool::pooled_spawn() {
+            // persistent-pool path (§Perf-4): the same workers that serve
+            // `par_limbs` fan each wave out — no per-request thread spawns,
+            // no standing barrier. `pool::run` returning *is* the wave
+            // barrier: every register of this wave is written before the
+            // next wave starts.
+            let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+            for wave in &plan.waves {
+                let task = |j: usize| {
+                    let oi = wave[j];
+                    let op = plan.ops[oi as usize];
+                    // catch panics (evaluator internals use assert!) and
+                    // convert to errors, mirroring the scoped path
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.exec_op(op, &regs, eval, enc)
+                    }));
+                    match result {
+                        Ok(Ok(())) => {
+                            eval.counters.pool_tasks.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(Err(e)) => {
+                            let mut g = first_err.lock().unwrap();
+                            g.get_or_insert(e);
+                        }
+                        Err(panic) => {
+                            let msg = panic
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| panic.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "non-string panic".into());
+                            let mut g = first_err.lock().unwrap();
+                            g.get_or_insert(anyhow!("plan op {oi} panicked: {msg}"));
+                        }
+                    }
+                };
+                crate::util::pool::run(threads - 1, wave.len(), &task);
+                // later waves read this wave's registers; stop early once
+                // an op failed instead of cascading read-miss errors
+                if first_err.lock().unwrap().is_some() {
+                    break;
+                }
+            }
+            if let Some(e) = first_err.into_inner().unwrap() {
+                return Err(e);
             }
         } else {
             let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);

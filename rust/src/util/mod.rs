@@ -4,6 +4,7 @@
 //! tensor text I/O, and a tiny JSON writer.
 
 pub mod bench;
+pub mod pool;
 pub mod rng;
 pub mod tensorio;
 

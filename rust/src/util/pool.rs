@@ -1,0 +1,328 @@
+//! Persistent worker pool for the CKKS hot loops (DESIGN.md §Perf-4).
+//!
+//! `par_limbs` used to spawn fresh OS threads through `std::thread::scope`
+//! on every call, so a 3-limb rescale paid tens of µs of spawn/join
+//! overhead per invocation — often more than the modular arithmetic it
+//! parallelized. This module keeps one process-wide set of workers alive
+//! and feeds them index-claimed jobs instead. The wavefront plan executor
+//! (`he_infer::exec`) dispatches through the same pool, so per-op limb
+//! parallelism and per-wave op parallelism share workers rather than
+//! oversubscribing the machine with two independent thread sets.
+//!
+//! Design:
+//!
+//! * a job is a borrowed `Fn(usize)` plus an atomic task cursor; workers
+//!   (and the submitter) claim indices with `fetch_add`, so tasks are
+//!   distributed dynamically — no static chunking, no idle tail when task
+//!   costs are skewed (waves mix µs adds with ms key switches);
+//! * the **submitter participates**: after enqueueing, it claims tasks
+//!   like any worker until the cursor is exhausted, then blocks only for
+//!   helpers' in-flight tasks. A pool worker that submits a nested job
+//!   (a wavefront op calling `par_limbs`) therefore always makes
+//!   progress even if every other worker is busy — nesting cannot
+//!   deadlock because tasks never block on task *claims*, only on
+//!   completion of work that is itself running;
+//! * task panics are caught and re-thrown in the submitter
+//!   (`resume_unwind`), preserving the panic payload — the same
+//!   observable behavior as a panic crossing `std::thread::scope`.
+//!
+//! Scheduling never changes results: every caller hands the pool
+//! independent tasks over disjoint data (RNS limbs, SSA wavefront ops),
+//! so this is purely a throughput knob — the bit-identity the
+//! kernel-differential suite (`rust/tests/kernel_differential.rs`) pins.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Ablation toggle (bench mode `--kernels`): `true` (default) routes
+/// `par_limbs` and the wavefront executor through the persistent pool;
+/// `false` restores the pre-campaign scoped-spawn paths. Both paths are
+/// bit-identical, so flipping this mid-run is harmless.
+static POOLED_SPAWN: AtomicBool = AtomicBool::new(true);
+
+/// Route parallel fan-out through the persistent pool (default) or the
+/// legacy per-call `std::thread::scope` paths (the ablation baseline).
+pub fn set_pooled_spawn(pooled: bool) {
+    POOLED_SPAWN.store(pooled, Ordering::Relaxed);
+}
+
+/// Whether fan-out currently uses the persistent pool.
+pub fn pooled_spawn() -> bool {
+    POOLED_SPAWN.load(Ordering::Relaxed)
+}
+
+/// Upper bound on pool workers (the pool grows on demand up to the
+/// largest helper count any caller asks for, and never shrinks).
+const MAX_WORKERS: usize = 64;
+
+struct JobState {
+    /// Tasks claimed but not yet finished + tasks not yet claimed.
+    remaining: usize,
+    /// First captured panic payload (re-thrown by the submitter).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Job {
+    /// Lifetime-erased borrow of the caller's closure. Sound because
+    /// `run` does not return until `remaining == 0`, so every use of the
+    /// pointer happens while the caller's frame is alive.
+    f: *const (dyn Fn(usize) + Sync),
+    /// Total task count; indices `0..tasks` are claimed exactly once.
+    tasks: usize,
+    /// Next unclaimed task index (may run past `tasks`; claimers that
+    /// draw an out-of-range index simply retire the job).
+    next: AtomicUsize,
+    state: Mutex<JobState>,
+    done: Condvar,
+}
+
+// SAFETY: `f` points at a `Sync` closure that outlives the job (see the
+// field comment); all other fields are themselves Send + Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work: Condvar,
+    workers: AtomicUsize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        work: Condvar::new(),
+        workers: AtomicUsize::new(0),
+    })
+}
+
+/// Number of live pool workers (diagnostics/tests).
+pub fn worker_count() -> usize {
+    pool().workers.load(Ordering::Relaxed)
+}
+
+/// Grow the pool to at least `target` workers (capped at [`MAX_WORKERS`]).
+fn ensure_workers(target: usize) {
+    let p = pool();
+    let target = target.min(MAX_WORKERS);
+    loop {
+        let cur = p.workers.load(Ordering::Relaxed);
+        if cur >= target {
+            return;
+        }
+        if p.workers
+            .compare_exchange(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            if std::thread::Builder::new()
+                .name("ckks-pool".into())
+                .spawn(worker_loop)
+                .is_err()
+            {
+                // spawn refused (resource exhaustion): undo the claim;
+                // `run` degrades to submitter-only execution, which is
+                // always correct
+                p.workers.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+/// Claim-and-run one task of `job`, recording completion and any panic.
+fn run_task(job: &Job, idx: usize) {
+    // SAFETY: the submitter keeps the closure alive until remaining == 0,
+    // and `run_task` is only called with an in-range claimed index.
+    let f = unsafe { &*job.f };
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(idx)));
+    let mut st = job.state.lock().unwrap();
+    if let Err(payload) = result {
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+    }
+    st.remaining -= 1;
+    if st.remaining == 0 {
+        job.done.notify_all();
+    }
+}
+
+fn worker_loop() {
+    let p = pool();
+    let mut q = p.queue.lock().unwrap();
+    loop {
+        let job = loop {
+            if let Some(j) = q.front() {
+                break j.clone();
+            }
+            q = p.work.wait(q).unwrap();
+        };
+        let idx = job.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= job.tasks {
+            // exhausted: retire it — but only if it is still the same
+            // job at the front (the submitter may already have removed
+            // it and another job taken its place)
+            if q.front().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                q.pop_front();
+            }
+            continue;
+        }
+        drop(q);
+        run_task(&job, idx);
+        q = p.queue.lock().unwrap();
+    }
+}
+
+/// Run `f(0..tasks)` with up to `helpers` pool workers assisting the
+/// calling thread. Each index is claimed exactly once; the call returns
+/// only after every task finished. A panicking task is re-thrown here
+/// with its original payload after the remaining tasks complete.
+///
+/// `helpers == 0` or `tasks <= 1` short-circuits to a serial loop with
+/// no pool interaction at all.
+pub fn run(helpers: usize, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if helpers == 0 || tasks <= 1 {
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+    let p = pool();
+    ensure_workers(helpers);
+    let job = Arc::new(Job {
+        // lifetime erasure: `*const dyn ...` in a struct field defaults
+        // to + 'static — see the safety argument on `Job::f`
+        f: unsafe {
+            std::mem::transmute::<*const (dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(
+                f as *const _,
+            )
+        },
+        tasks,
+        next: AtomicUsize::new(0),
+        state: Mutex::new(JobState {
+            remaining: tasks,
+            panic: None,
+        }),
+        done: Condvar::new(),
+    });
+    {
+        let mut q = p.queue.lock().unwrap();
+        q.push_back(job.clone());
+        p.work.notify_all();
+    }
+    // the submitter participates until the cursor runs dry
+    loop {
+        let idx = job.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= tasks {
+            break;
+        }
+        run_task(&job, idx);
+    }
+    // no claims remain: remove the exhausted job so workers stop seeing it
+    {
+        let mut q = p.queue.lock().unwrap();
+        if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            q.remove(pos);
+        }
+    }
+    // wait for helpers' in-flight tasks, then surface any panic
+    let mut st = job.state.lock().unwrap();
+    while st.remaining > 0 {
+        st = job.done.wait(st).unwrap();
+    }
+    if let Some(payload) = st.panic.take() {
+        drop(st);
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn test_every_index_runs_exactly_once() {
+        for tasks in [0usize, 1, 2, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            run(3, tasks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn test_zero_helpers_is_serial_in_order() {
+        let order = Mutex::new(Vec::new());
+        run(0, 5, &|i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn test_panic_propagates_with_payload() {
+        let caught = std::panic::catch_unwind(|| {
+            run(2, 8, &|i| {
+                if i == 3 {
+                    panic!("task three failed");
+                }
+            });
+        });
+        let payload = caught.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "task three failed");
+        // the pool must still be usable after a panicked job
+        let n = AtomicU64::new(0);
+        run(2, 16, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn test_nested_submission_completes() {
+        // a task that itself fans out through the pool (the wavefront
+        // executor's ops calling par_limbs) must not deadlock
+        let total = AtomicU64::new(0);
+        run(2, 4, &|_| {
+            run(2, 8, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn test_concurrent_submitters() {
+        // two independent jobs in flight from different threads share the
+        // queue without mixing indices
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                run(3, 50, &|_| {
+                    a.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+            s.spawn(|| {
+                run(3, 70, &|_| {
+                    b.fetch_add(1, Ordering::Relaxed);
+                })
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 50);
+        assert_eq!(b.load(Ordering::Relaxed), 70);
+    }
+
+    #[test]
+    fn test_toggle_roundtrip() {
+        assert!(pooled_spawn(), "pooled spawn defaults on");
+        set_pooled_spawn(false);
+        assert!(!pooled_spawn());
+        set_pooled_spawn(true);
+    }
+}

@@ -1,0 +1,229 @@
+//! Kernel-campaign differential suite (DESIGN.md §Perf-4..6): every
+//! runtime toggle the `--kernels` bench ablates — persistent pool vs
+//! scoped spawns, fused lazy key-switch inner product vs eager, arena
+//! recycling vs fresh allocation — must be a pure scheduling/allocation
+//! change. These tests pin the bit-identity claim the whole campaign
+//! rests on, plus the `[0, 2q)` lazy-range and u128 overflow-headroom
+//! arithmetic facts the fused path's correctness argument uses.
+//!
+//! The toggles are process-global atomics, so tests that flip them
+//! serialize on one mutex and restore the shipping defaults on drop
+//! (other suites in this binary would otherwise observe a flipped
+//! toggle — harmless for correctness, since every path is identical,
+//! but serializing keeps each assertion about a *specific* path honest).
+
+mod common;
+
+use common::{clip, session_for, tiny_model};
+use lingcn::ckks::{
+    set_arena_enabled, set_fused_keyswitch, set_limb_parallelism, zq, CkksEngine, CkksParams,
+    Ciphertext, RnsPoly,
+};
+use lingcn::util::{pool, Rng};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Serialize toggle-flipping tests and restore shipping defaults
+/// (pooled spawns, fused key switch, arena on, serial limbs) on drop —
+/// even when the guarded test panics (poisoning is tolerated for the
+/// same reason).
+struct ToggleGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+fn toggles() -> ToggleGuard {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    ToggleGuard(
+        LOCK.get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()),
+    )
+}
+
+impl Drop for ToggleGuard {
+    fn drop(&mut self) {
+        pool::set_pooled_spawn(true);
+        set_fused_keyswitch(true);
+        set_arena_enabled(true);
+        set_limb_parallelism(1);
+    }
+}
+
+fn toy_engine(levels: usize, log_n: u32, rots: &[usize], seed: u64) -> CkksEngine {
+    let mut p = CkksParams::toy(levels);
+    p.n = 1 << log_n;
+    CkksEngine::new(p, rots, seed).unwrap()
+}
+
+/// One representative slice of the evaluator surface, exercising every
+/// campaign-touched kernel: NTT round trips (inside mul/rescale), the
+/// relinearization key switch, a single rotation, a hoisted rotation
+/// group, elementwise add, and ModDown (inside every key switch).
+fn pipeline(engine: &CkksEngine, ct: &Ciphertext) -> Vec<Ciphertext> {
+    let ev = &engine.eval;
+    let enc = &engine.encoder;
+    let sq = ev.rescale(&ev.mul(ct, ct));
+    let rot = ev.rotate(enc, ct, 5);
+    let grp = ev.rotate_group(enc, ct, &[1, 5]);
+    let sum = ev.add(&rot, &grp[0]);
+    vec![sq, rot, sum, grp[0].clone(), grp[1].clone()]
+}
+
+/// The tentpole gate: all 2³ combinations of (pooled, fused, arena) at
+/// several limb-thread counts produce the reference ciphertexts bit for
+/// bit. Runs the matrix twice so the second pass hits recycled (dirty)
+/// arena buffers and warm pool workers.
+#[test]
+fn test_toggle_matrix_bit_identical() {
+    let _g = toggles();
+    let engine = toy_engine(3, 9, &[1, 5], 77);
+    let half = engine.ctx.slots();
+    let xs: Vec<f64> = (0..half).map(|i| ((i * 13 % 29) as f64 - 14.0) / 14.0).collect();
+    let ct = engine.encrypt(&xs);
+
+    // reference: serial, eager, no arena — the pre-campaign path
+    pool::set_pooled_spawn(false);
+    set_fused_keyswitch(false);
+    set_arena_enabled(false);
+    set_limb_parallelism(1);
+    let want = pipeline(&engine, &ct);
+
+    for round in 0..2 {
+        for pooled in [false, true] {
+            for fused in [false, true] {
+                for arena in [false, true] {
+                    for threads in [1usize, 4] {
+                        pool::set_pooled_spawn(pooled);
+                        set_fused_keyswitch(fused);
+                        set_arena_enabled(arena);
+                        set_limb_parallelism(threads);
+                        let got = pipeline(&engine, &ct);
+                        assert_eq!(
+                            got, want,
+                            "round {round}: pooled={pooled} fused={fused} \
+                             arena={arena} threads={threads} diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pooled vs scoped vs serial `par_limbs` over NTT round trips and
+/// rescale, across seeds and thread counts (extends the in-crate
+/// `test_limb_parallel_ntt_and_rescale_bit_identical` to multiple seeds
+/// and the cross-toggle matrix).
+#[test]
+fn test_pooled_vs_scoped_limb_ops_across_seeds() {
+    let _g = toggles();
+    let mut p = CkksParams::toy(3);
+    p.n = 1 << 7;
+    let ctx = p.build().unwrap();
+    for seed in [2u64, 19, 71, 1234] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let base = RnsPoly::sample_uniform(&ctx, 4, false, &mut rng);
+        set_limb_parallelism(1);
+        let mut want = base.clone();
+        want.ntt_forward(&ctx);
+        want.ntt_inverse(&ctx);
+        want.rescale_last(&ctx);
+        for pooled in [true, false] {
+            pool::set_pooled_spawn(pooled);
+            for threads in [2usize, 4, 8, 16] {
+                set_limb_parallelism(threads);
+                let mut got = base.clone();
+                got.ntt_forward(&ctx);
+                got.ntt_inverse(&ctx);
+                got.rescale_last(&ctx);
+                assert_eq!(got, want, "seed {seed} pooled={pooled} threads={threads}");
+            }
+        }
+    }
+}
+
+/// The compiled-plan executor through the persistent pool equals the
+/// scoped-pool and serial paths ciphertext-for-ciphertext.
+#[test]
+fn test_executor_pooled_vs_scoped_bit_identical() {
+    let _g = toggles();
+    let model = tiny_model(3);
+    let session = session_for(&model, 1, 7);
+    let input = session.encrypt_input(&model, &clip(&model)).unwrap();
+    let want = session.infer_parallel(&input, 1).unwrap();
+    for pooled in [true, false] {
+        pool::set_pooled_spawn(pooled);
+        for threads in [2usize, 3] {
+            let got = session.infer_parallel(&input, threads).unwrap();
+            assert_eq!(got, want, "pooled={pooled} threads={threads} executor diverged");
+        }
+    }
+}
+
+/// Property: `ShoupMul::mul_lazy` lands in `[0, 2q)` and is congruent to
+/// the exact product mod q, over random 61-bit (max width) and mid-width
+/// NTT primes — the intermediate-range invariant lazy butterflies and
+/// the fused inner product's operands rely on.
+#[test]
+fn test_shoup_lazy_range_invariant() {
+    let mut primes = zq::gen_ntt_primes(61, 64, 2, &[]);
+    primes.extend(zq::gen_ntt_primes(33, 64, 2, &[]));
+    let mut rng = Rng::seed_from_u64(5);
+    for &q in &primes {
+        for _ in 0..2000 {
+            let w = rng.gen_below(q);
+            let a = rng.gen_below(q);
+            let sm = zq::ShoupMul::new(w, q);
+            let lazy = sm.mul_lazy(a, q);
+            assert!(lazy < 2 * q, "mul_lazy out of [0, 2q): {lazy} for q={q}");
+            assert_eq!(lazy % q, zq::mul_mod(a, w, q), "congruence broke");
+            let full = sm.mul(a, q);
+            assert!(full < q);
+            assert_eq!(full, zq::mul_mod(a, w, q));
+        }
+    }
+}
+
+/// Arithmetic fact behind `MAX_FUSED_DIGITS = 64`: 64 maximal products
+/// of two 61-bit values sum in a u128 without overflow, and the 65th
+/// overflows — the fused inner product's headroom is exactly the digit
+/// bound it asserts.
+#[test]
+fn test_fused_accumulator_overflow_headroom() {
+    let max61 = (1u128 << 61) - 1;
+    let product = max61 * max61;
+    let mut acc: u128 = 0;
+    for _ in 0..64 {
+        acc = acc
+            .checked_add(product)
+            .expect("64 maximal digit products must fit a u128");
+    }
+    assert!(
+        acc.checked_add(product).is_none(),
+        "65 maximal products should overflow — the 64-digit cap is tight"
+    );
+}
+
+/// Arena on/off over a long op chain, interleaved so recycled buffers
+/// from one op feed the next: values never change, and `par_limbs`
+/// closures observe each limb exactly once either way.
+#[test]
+fn test_arena_reuse_preserves_values_under_parallelism() {
+    let _g = toggles();
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 7;
+    let ctx = p.build().unwrap();
+    let mut rng = Rng::seed_from_u64(13);
+    let mut a = RnsPoly::sample_uniform(&ctx, 3, false, &mut rng);
+    let mut b = RnsPoly::sample_uniform(&ctx, 3, false, &mut rng);
+    a.ntt_forward(&ctx);
+    b.ntt_forward(&ctx);
+    set_arena_enabled(false);
+    let want: Vec<RnsPoly> = (0..4).map(|_| a.mul(&ctx, &b)).collect();
+    set_arena_enabled(true);
+    for threads in [1usize, 4] {
+        set_limb_parallelism(threads);
+        for w in &want {
+            let got = a.mul(&ctx, &b);
+            assert_eq!(&got, w, "threads={threads}");
+            got.recycle(); // feed the next iteration a dirty buffer
+        }
+    }
+}
