@@ -44,8 +44,9 @@ echo "==> cargo test --release (slot-batched differential + end-to-end suites)"
 # the batch-vs-single differential cases and the batched coordinator/wire
 # end-to-ends run real CKKS executions and are cfg-gated to ignore in
 # debug — run all three suites here in release (make test-batch), plus
-# the optimizer's bit-identity differential (property_suite)
-cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip --test property_suite
+# the optimizer's bit-identity differential (property_suite) and the S19
+# profiler acceptance (>= 95% attribution, profiling-toggle bit-identity)
+cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip --test property_suite --test inspect_profile
 
 echo "==> TCP tier: loopback + fault-injection suites (release)"
 # net_faults is mock-backed (fast); net_roundtrip's release-gated cases
@@ -79,12 +80,24 @@ if command -v git >/dev/null && [ -d .git ]; then
     fi
 fi
 
-echo "==> op-count regression gate (bench plan_compile, same as make bench-plan)"
+echo "==> op-count + profiled wall-clock regression gates (bench plan_compile, same as make bench-plan)"
 # benches/plan_compile.rs asserts optimized <= raw on every cost-bearing
-# OpCounts field and strictly fewer key-switch decompositions, then
-# writes BENCH_plan.json with the per-pass deltas — an assert failure
-# fails the build here (invoked via cargo directly so ci.sh needs no make)
+# OpCounts field and strictly fewer key-switch decompositions, then runs
+# the optimized plan under the S19 per-op profiler and writes
+# BENCH_plan.json with the per-pass deltas plus per-wave latency
+# attribution. A profiled per-request total >20% slower than the
+# committed baseline's gate_profiled_total_ms exits nonzero and fails
+# the build; a missing / shape-mismatched / pre-S19 baseline bootstraps
+# with a warning (same lifecycle as BENCH_kernels.json; nag below while
+# it is untracked)
 cargo bench --bench plan_compile
+if command -v git >/dev/null && [ -d .git ]; then
+    untracked=$(git ls-files --others --exclude-standard rust/BENCH_plan.json || true)
+    if [ -n "$untracked" ]; then
+        echo "WARNING: rust/BENCH_plan.json was bootstrapped this run and is not yet"
+        echo "committed — the plan wall-clock regression gate is inactive until it is"
+    fi
+fi
 
 echo "==> kernel wall-clock regression gate (bench he_ops --kernels, same as make bench-kernels)"
 # measures the campaign kernels (NTT fwd/inv, key switch, rescale,

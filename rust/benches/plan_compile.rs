@@ -5,16 +5,33 @@
 //! GCNConv/BSGS fan-outs. A violation aborts the bench (ci.sh runs this
 //! as the op-count regression gate). Emits `BENCH_plan.json` with the
 //! per-pass before/after `OpCounts` deltas.
-//! Run: cargo bench --bench plan_compile
+//!
+//! Also the S19 **profiled wall-clock gate**: runs the optimized plan
+//! with per-op profiling on, emits per-wave latency attribution into
+//! `BENCH_plan.json`, and fails if the profiled per-request total
+//! regressed more than 20% against the committed baseline's
+//! `gate_profiled_total_ms`. Same lifecycle as `BENCH_kernels.json`:
+//! a missing / shape-mismatched / pre-S19 baseline bootstraps with a
+//! warning; `-- --rebaseline` resets the gate intentionally.
+//! Run: cargo bench --bench plan_compile [-- --rebaseline]
 
 use lingcn::ama::AmaLayout;
 use lingcn::ckks::{CkksEngine, CkksParams, OpCounts};
 use lingcn::graph::Graph;
-use lingcn::he_infer::{compile, CkksBackend, HeStgcn, PlanChain, PlanOptions, PreparedPlan};
+use lingcn::he_infer::{
+    compile, set_profiling, CkksBackend, HeOp, HeStgcn, PlanChain, PlanOptions, PreparedPlan,
+};
 use lingcn::stgcn::StgcnModel;
-use lingcn::util::{ascii_table, bench::time_op};
+use lingcn::util::{ascii_table, bench::time_op, fmt_f};
 use std::sync::Arc;
 use std::time::Duration;
+
+const BENCH_FILE: &str = "BENCH_plan.json";
+const GATE_FACTOR: f64 = 1.2;
+const HISTORY_CAP: usize = 50;
+/// Profiled iterations backing the wall-clock gate (medians would need
+/// per-run splits; the profiler folds runs, so the gate uses the mean).
+const PROFILE_RUNS: usize = 8;
 
 fn main() {
     let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
@@ -144,6 +161,97 @@ fn main() {
         plan.levels_needed
     );
 
+    // ---- S19 profiled wall-clock gate
+    let rebaseline = std::env::args().any(|a| a == "--rebaseline");
+    set_profiling(true);
+    for _ in 0..PROFILE_RUNS {
+        let _ = prepared.execute(&engine, &input, 1).unwrap();
+    }
+    set_profiling(false);
+    let snap = prepared.profile.snapshot(&plan);
+    assert_eq!(snap.runs, PROFILE_RUNS as u64, "every profiled run must be recorded");
+    // acceptance bar: at one thread the per-op recorder must account for
+    // (nearly) everything execute() spent
+    assert!(
+        snap.attribution_fraction() >= 0.95,
+        "profiler attributed only {:.1}% of wall-clock at 1 thread",
+        snap.attribution_fraction() * 100.0
+    );
+    let profiled_total_ms = snap.total_s / snap.runs as f64 * 1e3;
+    println!(
+        "profiled request: {} ms/run over {} runs ({:.1}% attributed, {} waves)",
+        fmt_f(profiled_total_ms, 3),
+        snap.runs,
+        snap.attribution_fraction() * 100.0,
+        plan.waves.len()
+    );
+
+    let old = std::fs::read_to_string(BENCH_FILE).ok();
+    let shape_matches = old.as_deref().map_or(false, |s| {
+        json_num(s, "n") == Some(params.n as f64) && json_num(s, "levels") == Some(levels as f64)
+    });
+    let mut gate_ms = profiled_total_ms;
+    let mut regression: Option<String> = None;
+    if let (Some(old_src), true, false) = (old.as_deref(), shape_matches, rebaseline) {
+        match json_num(old_src, "gate_profiled_total_ms") {
+            Some(gate) => {
+                gate_ms = gate;
+                if profiled_total_ms > gate * GATE_FACTOR {
+                    regression = Some(format!(
+                        "profiled_total: {} ms vs gate {} ms (>{:.0}% regression)",
+                        fmt_f(profiled_total_ms, 3),
+                        fmt_f(gate, 3),
+                        (GATE_FACTOR - 1.0) * 100.0
+                    ));
+                }
+            }
+            None => println!(
+                "WARNING: {BENCH_FILE} predates the S19 gate (no \
+                 gate_profiled_total_ms) — gate bootstraps from this run"
+            ),
+        }
+    } else if rebaseline {
+        println!("--rebaseline: gate reset to this run's profiled total");
+    } else if old.is_some() && !shape_matches {
+        println!(
+            "WARNING: {BENCH_FILE} was measured at a different (n, levels) shape \
+             — gate skipped, baseline rebuilt for this shape"
+        );
+    } else {
+        println!(
+            "WARNING: no committed {BENCH_FILE} baseline — gate inactive until \
+             this run's file is committed"
+        );
+    }
+    let history = carry_history(old.as_deref(), profiled_total_ms, snap.attribution_fraction());
+    let wave_ms: Vec<String> = snap
+        .per_wave_s
+        .iter()
+        .map(|s| fmt_f(s / snap.runs as f64 * 1e3, 4))
+        .collect();
+    let kind_ms: Vec<String> = HeOp::KIND_NAMES
+        .iter()
+        .enumerate()
+        .filter(|&(ki, _)| snap.per_kind_hits[ki] > 0)
+        .map(|(ki, name)| {
+            format!("\"{name}_ms\": {}", fmt_f(snap.per_kind_s[ki] / snap.runs as f64 * 1e3, 4))
+        })
+        .collect();
+    let profile_json = format!(
+        "{{\n    \"runs\": {},\n    \"total_ms\": {},\n    \"attribution\": {:.4},\n    \
+         \"per_kind\": {{{}}},\n    \"wave_ms\": [{}]\n  }}",
+        snap.runs,
+        fmt_f(profiled_total_ms, 4),
+        snap.attribution_fraction(),
+        kind_ms.join(", "),
+        wave_ms.join(", "),
+    );
+    let history_json = history
+        .iter()
+        .map(|h| format!("    {h}"))
+        .collect::<Vec<_>>()
+        .join(",\n");
+
     let counts_json = |c: &OpCounts| -> String {
         let vals: Vec<String> = OpCounts::field_names()
             .iter()
@@ -174,7 +282,8 @@ fn main() {
          \"pool_threads\": {},\n  \
          \"speedup_vs_cold\": {:.3},\n  \
          \"opt\": {{\n    \"ks_decomp_raw\": {},\n    \"ks_decomp_opt\": {},\n    \
-         \"total_ops_raw\": {},\n    \"total_ops_opt\": {},\n    \"passes\": [{}]\n  }}\n}}\n",
+         \"total_ops_raw\": {},\n    \"total_ops_opt\": {},\n    \"passes\": [{}]\n  }},\n  \
+         \"gate_profiled_total_ms\": {},\n  \"profile\": {},\n  \"history\": [\n{}\n  ]\n}}\n",
         params.n,
         levels,
         plan.ops.len(),
@@ -196,13 +305,64 @@ fn main() {
         raw.counts.total_ops(),
         plan.counts.total_ops(),
         passes_json.join(", "),
+        fmt_f(gate_ms, 4),
+        profile_json,
+        history_json,
     );
-    std::fs::write("BENCH_plan.json", &json).expect("writing BENCH_plan.json");
-    println!("wrote BENCH_plan.json");
+    std::fs::write(BENCH_FILE, &json).expect("writing BENCH_plan.json");
+    println!("wrote {BENCH_FILE}");
 
     // sanity: skipping per-request mask encoding must not be slower
     assert!(
         r_plan_1.median_secs() <= r_interp_cold.median_secs() * 1.2,
         "compiled path should not lose to cold interpreted path"
     );
+
+    if let Some(r) = regression {
+        eprintln!("PLAN WALL-CLOCK REGRESSION GATE FAILED:");
+        eprintln!("  {r}");
+        eprintln!("(intentional? re-run with --rebaseline and commit the new {BENCH_FILE})");
+        std::process::exit(1);
+    }
+}
+
+/// Scan `src` for `"key": <number>` and parse the number (same
+/// line-oriented scanner as `benches/he_ops.rs` — no JSON parser is
+/// vendored).
+fn json_num(src: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = src.find(&needle)? + needle.len();
+    let rest = src[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Previous history lines (one JSON object per line, `{"ts":`-prefixed)
+/// plus this run's entry, capped to the newest [`HISTORY_CAP`].
+fn carry_history(old: Option<&str>, profiled_total_ms: f64, attribution: f64) -> Vec<String> {
+    let mut hist: Vec<String> = old
+        .map(|s| {
+            s.lines()
+                .map(str::trim)
+                .filter(|l| l.starts_with("{\"ts\":"))
+                .map(|l| l.trim_end_matches(',').to_string())
+                .collect()
+        })
+        .unwrap_or_default();
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    hist.push(format!(
+        "{{\"ts\": {ts}, \"profiled_total_ms\": {}, \"attribution\": {:.4}}}",
+        fmt_f(profiled_total_ms, 4),
+        attribution
+    ));
+    if hist.len() > HISTORY_CAP {
+        let drop = hist.len() - HISTORY_CAP;
+        hist.drain(..drop);
+    }
+    hist
 }

@@ -10,11 +10,13 @@
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
 //! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17) |
-//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M] [--status-json]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive; `--status-json` prints the DESIGN.md S19 machine-readable snapshot after the run summary (plaintext/he tiers) |
 //! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
 //! | `encrypt --key F --input X.lgt --out R.cts [--batch B]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip) |
 //! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
 //! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits, all over one TCP connection (DESIGN.md S18) |
+//! | `inspect [--plan-text F \| --artifacts [--nl K]] [--format json\|text\|dot] [--cost] [--profile N] [--batch B] [--no-opt] [--threads T]` | dump a compiled `HePlan` as a queryable graph (DESIGN.md S19): per-op kind/level/scale/wave, per-wave widths and critical path, per-pass optimizer accounting; `--cost` overlays reference cost-model predictions; `--profile N` (needs `--artifacts`) runs N profiled encrypted iterations first and overlays measured per-op latencies |
+//! | `status --addr H:P [--tenant T] [--timeout-ms MS]` | fetch a live server's JSON status snapshot over TCP (DESIGN.md S19): metrics counters + latency histogram, per-plan profile EWMAs, plan-cache contents |
 //!
 //! The four-verb wire roundtrip (privacy boundary, DESIGN.md S15):
 //!
@@ -70,9 +72,11 @@ pub fn run(args: &[String]) -> Result<i32> {
         Some("encrypt") => cmd_encrypt(args).map(|()| 0),
         Some("decrypt-logits") => cmd_decrypt_logits(args).map(|()| 0),
         Some("infer-remote") => cmd_infer_remote(args).map(|()| 0),
+        Some("inspect") => cmd_inspect(args).map(|()| 0),
+        Some("status") => cmd_status(args).map(|()| 0),
         _ => {
             eprintln!(
-                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits|infer-remote> [options]"
+                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits|infer-remote|inspect|status> [options]"
             );
             Ok(USAGE_EXIT)
         }
@@ -754,6 +758,113 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Plan inspector (DESIGN.md S19). Flag validation runs before any file
+/// or HE work so `inspect --format bogus` fails fast and clean.
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let format = arg_value(args, "--format").unwrap_or_else(|| "text".into());
+    anyhow::ensure!(
+        matches!(format.as_str(), "json" | "text" | "dot"),
+        "unknown --format {format} (expected json|text|dot)"
+    );
+    let plan_text = arg_value(args, "--plan-text");
+    let artifacts = args.iter().any(|a| a == "--artifacts");
+    anyhow::ensure!(
+        !(plan_text.is_some() && artifacts),
+        "--plan-text and --artifacts are mutually exclusive — pick one plan source"
+    );
+    anyhow::ensure!(
+        plan_text.is_some() || artifacts,
+        "inspect needs a plan source: --plan-text <file> or --artifacts [--nl K]"
+    );
+    let profile_runs: usize = match arg_value(args, "--profile") {
+        Some(n) => n.parse()?,
+        None => 0,
+    };
+    anyhow::ensure!(
+        profile_runs == 0 || artifacts,
+        "--profile requires --artifacts (profiling executes real encrypted \
+         inference against a trained variant)"
+    );
+    let cost = args.iter().any(|a| a == "--cost").then(OpCostModel::reference);
+
+    // source 1: a serialized plan file (`HePlan::to_text` format) — no
+    // artifacts, keys, or HE work involved
+    if let Some(path) = plan_text {
+        let plan = crate::he_infer::HePlan::from_text(&std::fs::read_to_string(Path::new(&path))?)?;
+        let out = match format.as_str() {
+            "json" => crate::he_infer::inspect::plan_json(&plan, None, cost.as_ref())?,
+            "dot" => crate::he_infer::inspect::plan_dot(&plan)?,
+            _ => crate::he_infer::inspect::plan_text(&plan, None, cost.as_ref())?,
+        };
+        println!("{out}");
+        return Ok(());
+    }
+
+    // source 2: compile the trained variant exactly as `infer --encrypted`
+    // serves it, optionally profiling N real encrypted iterations
+    let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
+    let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let optimize = !args.iter().any(|a| a == "--no-opt");
+    let dir = Path::new("artifacts");
+    let model = crate::stgcn::StgcnModel::load(
+        &dir.join(format!("model_nl{nl}.lgt")),
+        crate::graph::Graph::ntu_rgbd(),
+    )?;
+    let params = crate::ckks::CkksParams {
+        n: 1 << 11,
+        q0_bits: 50,
+        scale_bits: 33,
+        levels: 2 * model.layers.len() + 2 + nl,
+        special_bits: 55,
+        allow_insecure: true,
+    };
+    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    let sess = crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
+    if profile_runs > 0 {
+        let ex = crate::util::tensorio::TensorFile::load(&dir.join("example_input.lgt"))?;
+        let x = &ex.get("x")?.data;
+        let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
+        let input = sess.encrypt_input_batch(&model, &clips)?;
+        eprintln!("profiling {profile_runs} encrypted iteration(s) of nl={nl}...");
+        crate::he_infer::set_profiling(true);
+        let runs: Result<Vec<_>> =
+            (0..profile_runs).map(|_| sess.infer_parallel(&input, threads)).collect();
+        crate::he_infer::set_profiling(false);
+        runs?;
+    }
+    let profile = (profile_runs > 0).then(|| sess.prepared().profile.clone());
+    let out = match format.as_str() {
+        "json" => crate::he_infer::inspect::plan_json(
+            &sess.plan,
+            profile.as_deref(),
+            cost.as_ref(),
+        )?,
+        "dot" => crate::he_infer::inspect::plan_dot(&sess.plan)?,
+        _ => crate::he_infer::inspect::plan_text(&sess.plan, profile.as_deref(), cost.as_ref())?,
+    };
+    println!("{out}");
+    Ok(())
+}
+
+/// Probe a live `serve --tier he-wire --listen` server's status endpoint
+/// (DESIGN.md S19) and print the JSON snapshot.
+fn cmd_status(args: &[String]) -> Result<()> {
+    let addr = arg_value(args, "--addr")
+        .ok_or_else(|| anyhow::anyhow!("status requires --addr <host:port>"))?;
+    let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "status-probe".into());
+    let timeout_ms: u64 =
+        arg_value(args, "--timeout-ms").unwrap_or_else(|| "30000".into()).parse()?;
+    let mut conn = crate::wire::net::Client::connect_with(
+        &addr,
+        &tenant,
+        std::time::Duration::from_millis(timeout_ms),
+    )?;
+    println!("{}", conn.status()?);
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let tier = arg_value(args, "--tier").unwrap_or_else(|| "plaintext".into());
     if tier == "he-wire" {
@@ -833,6 +944,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
          {threads} plan-exec threads)",
         requests as f64 / wall.as_secs_f64()
     );
+    // machine-readable tail for scripts: the same snapshot the TCP
+    // tier's STATUS frame serves (DESIGN.md S19)
+    if args.iter().any(|a| a == "--status-json") {
+        println!("{}", coord.status_json());
+    }
     coord.shutdown();
     Ok(())
 }

@@ -1,13 +1,16 @@
-//! Serving metrics: counters + latency histogram (log-spaced buckets).
+//! Serving metrics: counters + latency histogram (log-spaced buckets),
+//! plus the hand-rolled JSON snapshot the `NET_STATUS` frame and the CLI
+//! `status` verb both serve (DESIGN.md S19).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const BUCKET_COUNT: usize = 24;
 
 /// Thread-safe metrics registry.
-#[derive(Default)]
 pub struct Metrics {
+    /// Construction instant — the `uptime_s` gauge's zero point.
+    started: Instant,
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
@@ -63,7 +66,56 @@ pub struct Metrics {
     latency_sum_us: AtomicU64,
 }
 
+// `Instant` has no `Default`, so the registry spells its own out (every
+// counter zero, clock started now).
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            plan_cache_hits: AtomicU64::new(0),
+            plan_cache_misses: AtomicU64::new(0),
+            registry_hits: AtomicU64::new(0),
+            registry_misses: AtomicU64::new(0),
+            registry_evictions: AtomicU64::new(0),
+            batch_jobs: AtomicU64::new(0),
+            batch_requests: AtomicU64::new(0),
+            slots_filled: AtomicU64::new(0),
+            slots_capacity: AtomicU64::new(0),
+            opt_ops_removed: AtomicU64::new(0),
+            opt_rots_grouped: AtomicU64::new(0),
+            net_conns_accepted: AtomicU64::new(0),
+            net_conns_rejected: AtomicU64::new(0),
+            net_conns_active: AtomicU64::new(0),
+            net_bytes_in: AtomicU64::new(0),
+            net_bytes_out: AtomicU64::new(0),
+            net_requests_rejected: AtomicU64::new(0),
+            latency_buckets: Default::default(),
+            latency_sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Build identity carried in every status snapshot: crate version plus
+/// the compiled feature set (so a probe can tell which binary answered).
+pub fn build_info() -> String {
+    format!(
+        "lingcn/{} features={}",
+        env!("CARGO_PKG_VERSION"),
+        if cfg!(feature = "pjrt") { "pjrt" } else { "default" }
+    )
+}
+
 impl Metrics {
+    /// Seconds since this registry was constructed (the serving process's
+    /// effective uptime — every tier builds its `Metrics` at startup).
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
     /// Fraction of available block copies that carried a clip across all
     /// slot-batched jobs (0.0 before any ran).
     pub fn slot_occupancy(&self) -> f64 {
@@ -90,8 +142,20 @@ impl Metrics {
             .fetch_add(d.as_micros() as u64, Ordering::Relaxed);
     }
 
+    /// Observations recorded in the histogram. The mean divides by this —
+    /// not by `completed` — so callers that observe latencies without
+    /// driving the submitted/completed counters (benches, the net tier's
+    /// per-frame timings) still get a correct mean, and an empty registry
+    /// divides by 1, not 0.
+    fn latency_observations(&self) -> u64 {
+        self.latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
     pub fn mean_latency(&self) -> Duration {
-        let n = self.completed.load(Ordering::Relaxed).max(1);
+        let n = self.latency_observations().max(1);
         Duration::from_micros(self.latency_sum_us.load(Ordering::Relaxed) / n)
     }
 
@@ -147,6 +211,73 @@ impl Metrics {
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
         )
+    }
+
+    /// The full registry as one hand-rolled JSON object — the single
+    /// serializer behind the `NET_STATUS` frame and the CLI `status` verb
+    /// (DESIGN.md S19). Counters are read `Relaxed` and independently, so
+    /// the snapshot is monotone-consistent per counter, not a global
+    /// atomic cut — fine for observability, documented so nobody builds
+    /// an invariant checker on top of it.
+    pub fn snapshot(&self) -> String {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut out = format!(
+            "{{\"build\":\"{}\",\"uptime_s\":{:.3}",
+            crate::util::json_escape(&build_info()),
+            self.uptime_s()
+        );
+        out.push_str(&format!(
+            ",\"counters\":{{\"submitted\":{},\"completed\":{},\"failed\":{},\
+             \"degraded\":{},\"plan_cache_hits\":{},\"plan_cache_misses\":{},\
+             \"registry_hits\":{},\"registry_misses\":{},\"registry_evictions\":{},\
+             \"batch_jobs\":{},\"batch_requests\":{},\"slots_filled\":{},\
+             \"slots_capacity\":{},\"opt_ops_removed\":{},\"opt_rots_grouped\":{},\
+             \"net_conns_accepted\":{},\"net_conns_rejected\":{},\
+             \"net_conns_active\":{},\"net_bytes_in\":{},\"net_bytes_out\":{},\
+             \"net_requests_rejected\":{}}}",
+            c(&self.submitted),
+            c(&self.completed),
+            c(&self.failed),
+            c(&self.degraded),
+            c(&self.plan_cache_hits),
+            c(&self.plan_cache_misses),
+            c(&self.registry_hits),
+            c(&self.registry_misses),
+            c(&self.registry_evictions),
+            c(&self.batch_jobs),
+            c(&self.batch_requests),
+            c(&self.slots_filled),
+            c(&self.slots_capacity),
+            c(&self.opt_ops_removed),
+            c(&self.opt_rots_grouped),
+            c(&self.net_conns_accepted),
+            c(&self.net_conns_rejected),
+            c(&self.net_conns_active),
+            c(&self.net_bytes_in),
+            c(&self.net_bytes_out),
+            c(&self.net_requests_rejected),
+        ));
+        out.push_str(",\"latency\":{\"buckets\":[");
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&b.load(Ordering::Relaxed).to_string());
+        }
+        out.push_str(&format!(
+            "],\"observed\":{},\"mean_s\":{},\"p50_s\":{},\"p90_s\":{},\"p99_s\":{}}}",
+            self.latency_observations(),
+            self.mean_latency().as_secs_f64(),
+            self.latency_quantile(0.5).as_secs_f64(),
+            self.latency_quantile(0.9).as_secs_f64(),
+            self.latency_quantile(0.99).as_secs_f64(),
+        ));
+        out.push_str(&format!(
+            ",\"derived\":{{\"batch_fill\":{},\"slot_occupancy\":{}}}}}",
+            self.batch_fill(),
+            self.slot_occupancy()
+        ));
+        out
     }
 }
 
@@ -205,6 +336,39 @@ mod tests {
         assert!(s.contains("net_conns=5a/1r/2live"), "summary: {s}");
         assert!(s.contains("net_io=4096in/512out"), "summary: {s}");
         assert!(s.contains("net_req_rej=3"), "summary: {s}");
+    }
+
+    #[test]
+    fn test_mean_latency_tracks_observations_not_completed() {
+        let m = Metrics::default();
+        // no completed increments at all — the mean must still be right
+        m.observe_latency(Duration::from_millis(100));
+        m.observe_latency(Duration::from_millis(300));
+        let mean = m.mean_latency();
+        assert!(
+            mean >= Duration::from_millis(190) && mean <= Duration::from_millis(210),
+            "mean {mean:?}"
+        );
+        assert_eq!(Metrics::default().mean_latency(), Duration::ZERO);
+    }
+
+    #[test]
+    fn test_snapshot_json_shape() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.net_bytes_out.fetch_add(512, Ordering::Relaxed);
+        m.observe_latency(Duration::from_millis(8));
+        let s = m.snapshot();
+        assert!(s.starts_with("{\"build\":\"lingcn/"), "{s}");
+        assert!(s.contains("\"uptime_s\":"), "{s}");
+        assert!(s.contains("\"submitted\":3"), "{s}");
+        assert!(s.contains("\"net_bytes_out\":512"), "{s}");
+        assert!(s.contains("\"observed\":1"), "{s}");
+        assert!(s.contains("\"p99_s\":"), "{s}");
+        // balanced braces and exactly one array — cheap structural check
+        assert_eq!(s.matches('{').count(), s.matches('}').count(), "{s}");
+        assert_eq!(s.matches('[').count(), 1, "{s}");
+        assert_eq!(s.matches(']').count(), 1, "{s}");
     }
 
     #[test]

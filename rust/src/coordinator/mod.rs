@@ -11,7 +11,7 @@ pub mod router;
 pub mod service;
 
 pub use batcher::{Batcher, Pending};
-pub use metrics::Metrics;
+pub use metrics::{build_info, Metrics};
 pub use registry::KeyRegistry;
 pub use router::{ModelVariant, Router};
 pub use service::{

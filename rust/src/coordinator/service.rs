@@ -299,6 +299,19 @@ impl Coordinator {
         Ok(rx.recv()?)
     }
 
+    /// One-line JSON status of the running service — the in-process
+    /// analogue of the wire tier's STATUS frame (DESIGN.md S19): the
+    /// full [`Metrics::snapshot`] plus the profiler's per-plan EWMA
+    /// registry. Reads atomics and one registry lock only; never touches
+    /// the executor tier or the dispatch queues.
+    pub fn status_json(&self) -> String {
+        format!(
+            "{{\"metrics\":{},\"profiles\":{}}}",
+            self.metrics.snapshot(),
+            crate::he_infer::profile::profiles_json()
+        )
+    }
+
     /// Graceful shutdown: stop intake, drain queues, join threads.
     pub fn shutdown(mut self) {
         drop(self.submit_tx);

@@ -25,6 +25,7 @@
 
 use super::backend::HeBackend;
 use super::plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
+use super::profile::{self, PlanProfile, RequestSample};
 use crate::ama::{pack_clip, pack_clip_batch, AmaLayout};
 use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, EvalEngine, Evaluator, Plaintext};
 use crate::coordinator::{InferenceExecutor, Metrics};
@@ -113,6 +114,14 @@ pub fn execute_with_backend<B: HeBackend>(
 pub struct PreparedPlan {
     pub plan: Arc<HePlan>,
     masks: Vec<Plaintext>,
+    /// Lifetime per-op wall-clock totals (DESIGN.md S19); only written
+    /// while `profile::set_profiling(true)` is in effect.
+    pub profile: Arc<PlanProfile>,
+    /// Plan-cache identity for cross-request EWMA aggregation. Set once
+    /// by the executor that cached this plan ([`PreparedPlan::set_key`]);
+    /// unkeyed prepared plans still profile locally, they just skip the
+    /// process-wide registry.
+    key: OnceLock<PlanKey>,
 }
 
 impl PreparedPlan {
@@ -132,7 +141,16 @@ impl PreparedPlan {
             .iter()
             .map(|m| engine.encoder.encode(&engine.ctx, &m.slots, m.scale, m.nq))
             .collect();
-        Ok(PreparedPlan { plan, masks })
+        let profile = Arc::new(PlanProfile::new(plan.ops.len()));
+        Ok(PreparedPlan { plan, masks, profile, key: OnceLock::new() })
+    }
+
+    /// Attach the plan-cache key this prepared plan serves under, so
+    /// profiled requests also feed the per-[`PlanKey`] EWMA registry.
+    /// First caller wins (the key is part of the plan's identity and
+    /// never changes); later calls are no-ops.
+    pub fn set_key(&self, key: PlanKey) {
+        let _ = self.key.set(key);
     }
 
     /// Execute one op, writing its destination register(s) — plural for
@@ -181,6 +199,31 @@ impl PreparedPlan {
             HeOp::Rescale { src, dst } => set(dst, eval.rescale(get(src)?))?,
         }
         Ok(())
+    }
+
+    /// [`PreparedPlan::exec_op`] with optional per-op timing — every
+    /// executor branch funnels through here. `sample` is `None` when
+    /// profiling is off (decided once per request), making the disabled
+    /// cost a branch on an already-loaded `Option`: no clock reads, no
+    /// profile writes, bit-identical results either way (timing never
+    /// feeds back into the computation).
+    fn run_op(
+        &self,
+        oi: u32,
+        regs: &[OnceLock<Ciphertext>],
+        eval: &Evaluator,
+        enc: &Encoder,
+        sample: Option<&RequestSample>,
+    ) -> Result<()> {
+        let op = self.plan.ops[oi as usize];
+        let Some(sample) = sample else {
+            return self.exec_op(op, regs, eval, enc);
+        };
+        let t0 = std::time::Instant::now();
+        let out = self.exec_op(op, regs, eval, enc);
+        self.profile
+            .record_op(oi as usize, t0.elapsed().as_nanos() as u64, sample);
+        out
     }
 
     /// Execute the plan on real ciphertexts. `threads > 1` fans each
@@ -240,10 +283,14 @@ impl PreparedPlan {
         let eval = &engine.eval;
         let enc = &engine.encoder;
         let threads = threads.max(1);
+        // profiling decision sampled once per request (S19): `None` keeps
+        // the serving path at one relaxed atomic load total
+        let sample = profile::profiling_enabled().then(RequestSample::default);
+        let t_start = sample.as_ref().map(|_| std::time::Instant::now());
         if threads == 1 {
             for wave in &plan.waves {
                 for &oi in wave {
-                    self.exec_op(plan.ops[oi as usize], &regs, eval, enc)?;
+                    self.run_op(oi, &regs, eval, enc, sample.as_ref())?;
                 }
             }
         } else if crate::util::pool::pooled_spawn() {
@@ -256,11 +303,10 @@ impl PreparedPlan {
             for wave in &plan.waves {
                 let task = |j: usize| {
                     let oi = wave[j];
-                    let op = plan.ops[oi as usize];
                     // catch panics (evaluator internals use assert!) and
                     // convert to errors, mirroring the scoped path
                     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        self.exec_op(op, &regs, eval, enc)
+                        self.run_op(oi, &regs, eval, enc, sample.as_ref())
                     }));
                     match result {
                         Ok(Ok(())) => {
@@ -296,20 +342,20 @@ impl PreparedPlan {
             let barrier = Barrier::new(threads);
             std::thread::scope(|s| {
                 for tid in 0..threads {
-                    let (regs, barrier, first_err) = (&regs, &barrier, &first_err);
+                    let (regs, barrier, first_err, sample) =
+                        (&regs, &barrier, &first_err, sample.as_ref());
                     s.spawn(move || {
                         for wave in &plan.waves {
                             for (j, &oi) in wave.iter().enumerate() {
                                 if j % threads != tid {
                                     continue;
                                 }
-                                let op = plan.ops[oi as usize];
                                 // catch panics (evaluator internals use
                                 // assert!): a worker that dies before
                                 // barrier.wait() would deadlock the pool
                                 let result = std::panic::catch_unwind(
                                     std::panic::AssertUnwindSafe(|| {
-                                        self.exec_op(op, regs, eval, enc)
+                                        self.run_op(oi, regs, eval, enc, sample)
                                     }),
                                 );
                                 match result {
@@ -347,6 +393,10 @@ impl PreparedPlan {
             if let Some(e) = first_err.into_inner().unwrap() {
                 return Err(e);
             }
+        }
+        if let (Some(sample), Some(t0)) = (&sample, t_start) {
+            self.profile
+                .record_run(t0.elapsed().as_nanos() as u64, sample, self.key.get());
         }
         regs[plan.output as usize]
             .get()
@@ -557,6 +607,7 @@ impl HeSession {
         let rots: Vec<usize> = rots.into_iter().collect();
         let engine = CkksEngine::new(params, &rots, seed)?;
         let prepared = Arc::new(PreparedPlan::new(plan.clone(), &engine)?);
+        prepared.set_key(PlanKey::new(&model, &layout, opts));
         Ok((
             HeSession {
                 model,
@@ -617,6 +668,11 @@ impl HeSession {
              (build the session with batching enabled)"
         );
         let prepared = Arc::new(PreparedPlan::new(plan, &self.engine)?);
+        prepared.set_key(PlanKey::new(
+            &self.model,
+            &self.layout,
+            PlanOptions { batch, ..self.opts },
+        ));
         let prepared = self
             .ragged
             .lock()

@@ -1,0 +1,486 @@
+//! Plan inspector (DESIGN.md S19): dump any [`HePlan`] as a queryable
+//! graph — JSON for tooling, a compact text report for terminals, DOT for
+//! graph viewers — with optional measured-profile and costmodel overlays.
+//!
+//! The per-op `level`/`scale` attribution comes from
+//! [`HePlan::replay_states`], i.e. the *same* linear walk `validate`
+//! runs, so what the inspector prints is exactly what validation checks —
+//! the two can't drift. A [`PlanProfile`] overlay adds measured per-op /
+//! per-wave / per-kind seconds (and the wave-critical-path estimate: each
+//! wave is as slow as its slowest op, so the plan's parallel lower bound
+//! is the sum of per-wave maxima). An [`OpCostModel`] overlay adds
+//! predicted per-op seconds from the fitted cost forms, putting measured
+//! and predicted time side by side per op.
+//!
+//! Everything here is read-only over a compiled plan; nothing on the
+//! serving path calls into this module.
+
+use super::plan::{HeOp, HePlan, OpState};
+use super::profile::{PlanProfile, ProfileSnapshot};
+use crate::costmodel::OpCostModel;
+use crate::util::ascii_table;
+use anyhow::Result;
+
+/// Everything the renderers need, derived once: replay states, the op →
+/// wave map, and the optional measured/predicted per-op seconds.
+struct Inspection {
+    states: Vec<OpState>,
+    wave_of: Vec<usize>,
+    snap: Option<ProfileSnapshot>,
+    pred_s: Option<Vec<f64>>,
+}
+
+fn inspect(
+    plan: &HePlan,
+    profile: Option<&PlanProfile>,
+    cost: Option<&OpCostModel>,
+) -> Result<Inspection> {
+    let (_, states) = plan.replay_states()?;
+    let mut wave_of = vec![0usize; plan.ops.len()];
+    for (w, wave) in plan.waves.iter().enumerate() {
+        for &oi in wave {
+            wave_of[oi as usize] = w;
+        }
+    }
+    let snap = profile.map(|p| p.snapshot(plan));
+    let pred_s = cost.map(|c| {
+        (0..plan.ops.len())
+            .map(|oi| predict_op_s(c, plan, plan.ops[oi], &states[oi]))
+            .collect()
+    });
+    Ok(Inspection { states, wave_of, snap, pred_s })
+}
+
+/// Predicted seconds for one op from the fitted cost forms (the same
+/// feature shapes `OpCostModel::estimate` uses, applied per op at its
+/// replayed level). A `RotGroup` fan is predicted as its member
+/// rotations — the shared decomposition makes this an upper bound.
+fn predict_op_s(cost: &OpCostModel, plan: &HePlan, op: HeOp, state: &OpState) -> f64 {
+    let n = plan.layout.slots as f64 * 2.0;
+    let nlog = n * n.log2();
+    let limbs = (state.level + 1) as f64;
+    match op {
+        HeOp::Rotate { .. } => cost.rot_a * nlog * limbs * limbs,
+        HeOp::RotGroup { group, .. } => {
+            plan.groups[group as usize].len() as f64 * cost.rot_a * nlog * limbs * limbs
+        }
+        HeOp::Mul { .. } => cost.cmult_a * nlog * limbs * limbs,
+        HeOp::MulPlain { .. } => cost.pmult_a * n * limbs,
+        HeOp::AddPlain { .. } | HeOp::Add { .. } | HeOp::Sub { .. } => cost.add_a * n * limbs,
+        // the replayed state is the *output* level; the rescale itself
+        // ran over the input's one-extra limb
+        HeOp::Rescale { .. } => cost.rescale_a * nlog * (limbs + 1.0),
+    }
+}
+
+/// Wave-critical-path estimate over per-op seconds: each wave costs its
+/// slowest member, the plan costs the sum of waves.
+fn critical_path_s(plan: &HePlan, per_op_s: &[f64]) -> f64 {
+    plan.waves
+        .iter()
+        .map(|wave| wave.iter().map(|&oi| per_op_s[oi as usize]).fold(0.0, f64::max))
+        .sum()
+}
+
+// ------------------------------------------------------------------- JSON
+
+/// Render `plan` as a JSON graph (hand-rolled — the tree has no serde):
+/// plan header, per-op nodes (id/kind/sources/dst/level/scale/wave plus
+/// measured and predicted seconds when overlays are given), per-wave
+/// rollups with the critical path, and per-pass optimizer accounting.
+pub fn plan_json(
+    plan: &HePlan,
+    profile: Option<&PlanProfile>,
+    cost: Option<&OpCostModel>,
+) -> Result<String> {
+    let ins = inspect(plan, profile, cost)?;
+    let mut out = String::with_capacity(plan.ops.len() * 96 + 1024);
+    out.push_str(&format!(
+        "{{\"model_hash\":\"{:016x}\",\"batch\":{},\"optimized\":{},\"levels_needed\":{},\
+         \"n_inputs\":{},\"n_regs\":{},\"output\":{},\"slots\":{},\"n_masks\":{},\
+         \"n_groups\":{},\"n_ops\":{},\"n_waves\":{}",
+        plan.model_hash,
+        plan.batch,
+        plan.optimized,
+        plan.levels_needed,
+        plan.n_inputs,
+        plan.n_regs,
+        plan.output,
+        plan.layout.slots,
+        plan.masks.len(),
+        plan.groups.len(),
+        plan.ops.len(),
+        plan.waves.len(),
+    ));
+
+    // --- ops ---------------------------------------------------------------
+    out.push_str(",\"ops\":[");
+    for (oi, op) in plan.ops.iter().enumerate() {
+        if oi > 0 {
+            out.push(',');
+        }
+        let (s0, s1) = op.sources();
+        let st = &ins.states[oi];
+        out.push_str(&format!(
+            "{{\"id\":{oi},\"kind\":\"{}\",\"sources\":[{}{}]",
+            op.kind_name(),
+            s0,
+            s1.map(|b| format!(",{b}")).unwrap_or_default()
+        ));
+        match *op {
+            HeOp::RotGroup { group, .. } => {
+                let spec = &plan.groups[group as usize];
+                out.push_str(&format!(",\"group\":{group},\"dsts\":["));
+                for (i, &(k, dst)) in spec.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&format!("{{\"k\":{k},\"dst\":{dst}}}"));
+                }
+                out.push(']');
+            }
+            HeOp::Rotate { k, dst, .. } => out.push_str(&format!(",\"k\":{k},\"dst\":{dst}")),
+            HeOp::MulPlain { mask, dst, .. } | HeOp::AddPlain { mask, dst, .. } => {
+                out.push_str(&format!(",\"mask\":{mask},\"dst\":{dst}"))
+            }
+            _ => out.push_str(&format!(",\"dst\":{}", op.dst())),
+        }
+        out.push_str(&format!(
+            ",\"level\":{},\"scale\":{},\"wave\":{}",
+            st.level, st.scale, ins.wave_of[oi]
+        ));
+        if let Some(snap) = &ins.snap {
+            out.push_str(&format!(
+                ",\"measured_s\":{},\"hits\":{}",
+                snap.per_op_s[oi], snap.per_op_hits[oi]
+            ));
+        }
+        if let Some(pred) = &ins.pred_s {
+            out.push_str(&format!(",\"predicted_s\":{}", pred[oi]));
+        }
+        out.push('}');
+    }
+    out.push(']');
+
+    // --- waves -------------------------------------------------------------
+    out.push_str(",\"waves\":[");
+    for (w, wave) in plan.waves.iter().enumerate() {
+        if w > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"index\":{w},\"width\":{}", wave.len()));
+        if let Some(snap) = &ins.snap {
+            let times: Vec<f64> = wave.iter().map(|&oi| snap.per_op_s[oi as usize]).collect();
+            let span = times.iter().cloned().fold(0.0, f64::max);
+            let max_op = wave
+                .iter()
+                .max_by(|&&a, &&b| {
+                    snap.per_op_s[a as usize].total_cmp(&snap.per_op_s[b as usize])
+                })
+                .copied()
+                .unwrap_or(0);
+            out.push_str(&format!(
+                ",\"measured_s\":{},\"span_s\":{span},\"max_op\":{max_op}",
+                snap.per_wave_s[w]
+            ));
+        }
+        out.push('}');
+    }
+    out.push(']');
+
+    // --- optimizer pass accounting ------------------------------------------
+    out.push_str(",\"passes\":[");
+    for (i, p) in plan.opt_passes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"before_ops\":{},\"after_ops\":{},\
+             \"before_ks_decomp\":{},\"after_ks_decomp\":{}}}",
+            crate::util::json_escape(&p.name),
+            p.before.total_ops(),
+            p.after.total_ops(),
+            p.before.ks_decomp,
+            p.after.ks_decomp,
+        ));
+    }
+    out.push(']');
+
+    // --- profile rollup -----------------------------------------------------
+    if let Some(snap) = &ins.snap {
+        out.push_str(&format!(
+            ",\"profile\":{{\"runs\":{},\"total_s\":{},\"attributed_s\":{},\
+             \"attribution\":{},\"critical_path_s\":{},\"per_kind\":{{",
+            snap.runs,
+            snap.total_s,
+            snap.attributed_s,
+            snap.attribution_fraction(),
+            critical_path_s(plan, &snap.per_op_s),
+        ));
+        let mut first = true;
+        for (ki, name) in HeOp::KIND_NAMES.iter().enumerate() {
+            if snap.per_kind_hits[ki] == 0 {
+                continue;
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\"{name}\":{{\"s\":{},\"hits\":{}}}",
+                snap.per_kind_s[ki], snap.per_kind_hits[ki]
+            ));
+        }
+        out.push_str("}}");
+    }
+    if let Some(pred) = &ins.pred_s {
+        out.push_str(&format!(
+            ",\"predicted\":{{\"total_s\":{},\"critical_path_s\":{}}}",
+            pred.iter().sum::<f64>(),
+            critical_path_s(plan, pred),
+        ));
+    }
+    out.push('}');
+    Ok(out)
+}
+
+// ------------------------------------------------------------------- text
+
+/// Compact terminal report: plan header, pass deltas, per-kind rollup
+/// (measured seconds when a profile is attached, predictions when a cost
+/// model is), wave shape, and the hottest ops.
+pub fn plan_text(
+    plan: &HePlan,
+    profile: Option<&PlanProfile>,
+    cost: Option<&OpCostModel>,
+) -> Result<String> {
+    let ins = inspect(plan, profile, cost)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "plan model_hash={:016x} batch={} optimized={} levels={} ops={} waves={} \
+         masks={} groups={} regs={} (inputs {})\n",
+        plan.model_hash,
+        plan.batch,
+        plan.optimized,
+        plan.levels_needed,
+        plan.ops.len(),
+        plan.waves.len(),
+        plan.masks.len(),
+        plan.groups.len(),
+        plan.n_regs,
+        plan.n_inputs,
+    ));
+    for p in &plan.opt_passes {
+        out.push_str(&format!(
+            "pass {:<9} ops {} -> {}  ks_decomp {} -> {}\n",
+            p.name,
+            p.before.total_ops(),
+            p.after.total_ops(),
+            p.before.ks_decomp,
+            p.after.ks_decomp,
+        ));
+    }
+
+    // per-kind rollup
+    let mut kind_n = [0u64; HeOp::KIND_NAMES.len()];
+    for op in &plan.ops {
+        kind_n[op.kind_index()] += 1;
+    }
+    let mut rows = Vec::new();
+    for (ki, name) in HeOp::KIND_NAMES.iter().enumerate() {
+        if kind_n[ki] == 0 {
+            continue;
+        }
+        let mut row = vec![name.to_string(), kind_n[ki].to_string()];
+        if let Some(snap) = &ins.snap {
+            row.push(format!("{:.6}", snap.per_kind_s[ki]));
+            row.push(snap.per_kind_hits[ki].to_string());
+        }
+        if let Some(pred) = &ins.pred_s {
+            let s: f64 = plan
+                .ops
+                .iter()
+                .enumerate()
+                .filter(|(_, op)| op.kind_index() == ki)
+                .map(|(oi, _)| pred[oi])
+                .sum();
+            row.push(format!("{s:.6}"));
+        }
+        rows.push(row);
+    }
+    let mut headers = vec!["kind", "ops"];
+    if ins.snap.is_some() {
+        headers.push("measured_s");
+        headers.push("hits");
+    }
+    if ins.pred_s.is_some() {
+        headers.push("predicted_s");
+    }
+    out.push_str(&ascii_table(&headers, &rows));
+    out.push('\n');
+
+    // wave shape
+    let widest = plan.waves.iter().map(Vec::len).max().unwrap_or(0);
+    out.push_str(&format!(
+        "waves: {} (widest {widest}, mean width {:.1})\n",
+        plan.waves.len(),
+        plan.ops.len() as f64 / plan.waves.len().max(1) as f64
+    ));
+    if let Some(snap) = &ins.snap {
+        out.push_str(&format!(
+            "profile: runs={} total={:.6}s attributed={:.6}s ({:.1}%) \
+             wave-critical-path={:.6}s\n",
+            snap.runs,
+            snap.total_s,
+            snap.attributed_s,
+            100.0 * snap.attribution_fraction(),
+            critical_path_s(plan, &snap.per_op_s),
+        ));
+        // hottest ops
+        let mut hot: Vec<usize> = (0..plan.ops.len()).collect();
+        hot.sort_by(|&a, &b| snap.per_op_s[b].total_cmp(&snap.per_op_s[a]));
+        for &oi in hot.iter().take(10) {
+            if snap.per_op_s[oi] <= 0.0 {
+                break;
+            }
+            out.push_str(&format!(
+                "  hot op {oi}: {} wave={} level={} {:.6}s ({} hits)\n",
+                plan.ops[oi].kind_name(),
+                ins.wave_of[oi],
+                ins.states[oi].level,
+                snap.per_op_s[oi],
+                snap.per_op_hits[oi],
+            ));
+        }
+    }
+    if let Some(pred) = &ins.pred_s {
+        out.push_str(&format!(
+            "predicted: total={:.6}s wave-critical-path={:.6}s\n",
+            pred.iter().sum::<f64>(),
+            critical_path_s(plan, pred),
+        ));
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------------------- DOT
+
+/// Emit the plan's dataflow as a Graphviz digraph: one node per op
+/// (labelled kind/level/wave), edges along register def-use chains,
+/// diamond nodes for the plan inputs. Intended for the small plans a
+/// human actually renders; paper-scale plans still emit valid DOT, just
+/// a big one.
+pub fn plan_dot(plan: &HePlan) -> Result<String> {
+    let ins = inspect(plan, None, None)?;
+    // register -> producing op (inputs have no producer)
+    let mut def: Vec<Option<usize>> = vec![None; plan.n_regs];
+    for (oi, op) in plan.ops.iter().enumerate() {
+        match *op {
+            HeOp::RotGroup { group, .. } => {
+                for &(_, dst) in &plan.groups[group as usize] {
+                    def[dst as usize] = Some(oi);
+                }
+            }
+            _ => def[op.dst() as usize] = Some(oi),
+        }
+    }
+    let mut out = String::from("digraph heplan {\n  rankdir=TB;\n  node [shape=box];\n");
+    for i in 0..plan.n_inputs {
+        out.push_str(&format!("  in{i} [shape=diamond,label=\"input {i}\"];\n"));
+    }
+    for (oi, op) in plan.ops.iter().enumerate() {
+        out.push_str(&format!(
+            "  op{oi} [label=\"{oi}: {} L{} w{}\"];\n",
+            op.kind_name(),
+            ins.states[oi].level,
+            ins.wave_of[oi]
+        ));
+    }
+    let src_node = |r: u32| -> String {
+        match def[r as usize] {
+            Some(p) => format!("op{p}"),
+            None => format!("in{r}"),
+        }
+    };
+    for (oi, op) in plan.ops.iter().enumerate() {
+        let (s0, s1) = op.sources();
+        out.push_str(&format!("  {} -> op{oi};\n", src_node(s0)));
+        if let Some(b) = s1 {
+            out.push_str(&format!("  {} -> op{oi};\n", src_node(b)));
+        }
+    }
+    out.push_str("  out [shape=diamond,label=\"logits\"];\n");
+    out.push_str(&format!("  {} -> out;\n}}\n", src_node(plan.output)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ama::AmaLayout;
+    use crate::graph::Graph;
+    use crate::he_infer::plan::{compile, PlanChain, PlanOptions};
+    use crate::he_infer::HeStgcn;
+    use crate::stgcn::StgcnModel;
+
+    fn tiny_plan(optimize: bool) -> HePlan {
+        let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+        compile(&m, layout, &chain, PlanOptions { optimize, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn test_json_matches_replay_states() {
+        let plan = tiny_plan(true);
+        let (_, states) = plan.replay_states().unwrap();
+        assert_eq!(states.len(), plan.ops.len());
+        let json = plan_json(&plan, None, None).unwrap();
+        // spot-check: every op id appears with the replayed level
+        for (oi, st) in states.iter().enumerate() {
+            let needle = format!("\"id\":{oi},");
+            let at = json.find(&needle).unwrap_or_else(|| panic!("op {oi} missing"));
+            // the op object runs until the next op's id (RotGroup ops nest
+            // `dsts` objects, so a plain `}`-scan would stop early)
+            let rest = &json[at..];
+            let end = rest[needle.len()..]
+                .find("\"id\":")
+                .map(|p| p + needle.len())
+                .unwrap_or(rest.len());
+            let obj = &rest[..end];
+            assert!(
+                obj.contains(&format!("\"level\":{}", st.level)),
+                "op {oi}: level drifted: {obj}"
+            );
+        }
+        assert!(json.contains("\"passes\":["));
+        assert!(json.contains("\"name\":\"cse\""), "optimized plan records passes");
+    }
+
+    #[test]
+    fn test_text_and_dot_render() {
+        let plan = tiny_plan(true);
+        let text = plan_text(&plan, None, None).unwrap();
+        assert!(text.contains("plan model_hash="), "{text}");
+        assert!(text.contains("rotg") || text.contains("rot"), "{text}");
+        let dot = plan_dot(&plan).unwrap();
+        assert!(dot.starts_with("digraph heplan {"));
+        assert!(dot.trim_end().ends_with('}'));
+        assert!(dot.contains("-> op0") || dot.contains("op0 ["));
+        // every op got a node
+        for oi in 0..plan.ops.len() {
+            assert!(dot.contains(&format!("op{oi} [")), "op {oi} missing from dot");
+        }
+    }
+
+    #[test]
+    fn test_cost_overlay_predicts_positive_totals() {
+        let plan = tiny_plan(false);
+        let cost = OpCostModel::reference();
+        let json = plan_json(&plan, None, Some(&cost)).unwrap();
+        assert!(json.contains("\"predicted\":{"), "{}", &json[json.len() - 200..]);
+        let text = plan_text(&plan, None, Some(&cost)).unwrap();
+        assert!(text.contains("predicted_s"), "{text}");
+    }
+}

@@ -12,9 +12,11 @@
 pub mod backend;
 pub mod engine;
 pub mod exec;
+pub mod inspect;
 pub mod level_plan;
 pub mod opt;
 pub mod plan;
+pub mod profile;
 
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
 pub use engine::HeStgcn;
@@ -22,7 +24,8 @@ pub use exec::{
     execute_with_backend, session_geometry, HeExecutor, HeSession, PlanKey, PreparedPlan,
 };
 pub use level_plan::{HePlanParams, Method, VariantShape};
-pub use plan::{compile, HeOp, HePlan, PassStat, PlanChain, PlanOptions};
+pub use plan::{compile, HeOp, HePlan, OpState, PassStat, PlanChain, PlanOptions};
+pub use profile::{set_profiling, PlanProfile};
 
 use crate::ama::{encrypt_clip, encrypt_clip_batch, AmaLayout};
 use crate::ckks::{CkksEngine, CkksParams};
@@ -79,6 +82,7 @@ impl PrivateInferenceSession {
         let levels = params.levels;
         let engine = CkksEngine::new(params, &plan.required_rotations(), seed)?;
         let prepared = PreparedPlan::new(plan.clone(), &engine)?;
+        prepared.set_key(PlanKey::new(model, &layout, opts));
         Ok(PrivateInferenceSession {
             engine,
             layout,
@@ -86,6 +90,12 @@ impl PrivateInferenceSession {
             plan,
             prepared,
         })
+    }
+
+    /// The prepared plan (pre-encoded masks + per-op [`PlanProfile`]) —
+    /// the inspector's profile source for this session.
+    pub fn prepared(&self) -> &PreparedPlan {
+        &self.prepared
     }
 
     /// Client side: encrypt a [V, C_in, T] clip (single-clip sessions).

@@ -142,6 +142,41 @@ impl HeOp {
             }
         }
     }
+
+    /// Stable kind names, indexed by [`HeOp::kind_index`] — the same
+    /// mnemonics as the plan text format, the attribution keys the
+    /// inspector and profiler group by.
+    pub const KIND_NAMES: [&'static str; 8] =
+        ["rot", "pmul", "padd", "add", "sub", "mul", "rescale", "rotg"];
+
+    /// Dense index into [`HeOp::KIND_NAMES`].
+    pub fn kind_index(&self) -> usize {
+        match self {
+            HeOp::Rotate { .. } => 0,
+            HeOp::MulPlain { .. } => 1,
+            HeOp::AddPlain { .. } => 2,
+            HeOp::Add { .. } => 3,
+            HeOp::Sub { .. } => 4,
+            HeOp::Mul { .. } => 5,
+            HeOp::Rescale { .. } => 6,
+            HeOp::RotGroup { .. } => 7,
+        }
+    }
+
+    /// Stable kind name (see [`HeOp::KIND_NAMES`]).
+    pub fn kind_name(&self) -> &'static str {
+        Self::KIND_NAMES[self.kind_index()]
+    }
+}
+
+/// Per-op output state — the (level, scale) the op's destination
+/// register(s) carry after it executes, as recomputed by
+/// [`HePlan::replay_states`]. For [`HeOp::RotGroup`] every group element
+/// shares the source's state, so one entry covers the whole fan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpState {
+    pub level: usize,
+    pub scale: f64,
 }
 
 // ------------------------------------------------------------------ plan
@@ -327,6 +362,14 @@ impl HePlan {
     /// refresh `counts` after a pass, `from_text` to reconstruct counts
     /// a pre-S17 (v1/v2) plan text could not carry.
     pub fn replay(&self) -> Result<OpCounts> {
+        Ok(self.replay_states()?.0)
+    }
+
+    /// [`HePlan::replay`] that also returns every op's output
+    /// (level, scale). The inspector renders these, and because they come
+    /// out of the *same* walk `validate` runs, the graph's per-op
+    /// attribution can never drift from what validation checks.
+    pub fn replay_states(&self) -> Result<(OpCounts, Vec<OpState>)> {
         ensure!(self.n_inputs >= 1 && self.n_inputs <= self.n_regs);
         ensure!((self.output as usize) < self.n_regs, "output out of range");
         ensure!(
@@ -355,6 +398,7 @@ impl HePlan {
             sq.fetch_add(l * l, Ordering::Relaxed);
         };
         let mut groups_seen = vec![false; self.groups.len()];
+        let mut states: Vec<OpState> = Vec::with_capacity(self.ops.len());
         for (i, op) in self.ops.iter().enumerate() {
             let (s0, s1) = op.sources();
             let read = |r: u32| -> Result<(usize, f64)> {
@@ -399,6 +443,7 @@ impl HePlan {
                 recount.rot_group.fetch_add(1, Ordering::Relaxed);
                 recount.ks_decomp.fetch_add(1, Ordering::Relaxed);
                 bump_sq(&recount.ks_decomp_limbs_sq, l0);
+                states.push(OpState { level: l0, scale: sc0 });
                 continue;
             }
             let (out_level, out_scale) = match *op {
@@ -465,6 +510,7 @@ impl HePlan {
             ensure!(level[d].is_none(), "op {i}: register {d} written twice");
             level[d] = Some(out_level);
             scale[d] = out_scale;
+            states.push(OpState { level: out_level, scale: out_scale });
         }
         ensure!(
             groups_seen.iter().all(|&s| s),
@@ -478,7 +524,7 @@ impl HePlan {
             top - out_level,
             self.levels_needed
         );
-        Ok(recount.snapshot())
+        Ok((recount.snapshot(), states))
     }
 
     /// Schedule safety: the waves must be executable in parallel — every

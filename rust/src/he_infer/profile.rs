@@ -1,0 +1,331 @@
+//! Per-op execution profiler (DESIGN.md S19): an ablatable wall-clock
+//! recorder the plan executor threads through every op it runs.
+//!
+//! Profiling is a process-wide switch ([`set_profiling`]), default off.
+//! Off, the only cost on the serving path is one relaxed atomic load per
+//! request — no timestamps are taken and no profile state is touched, so
+//! logits stay bit-identical either way (timing never feeds back into the
+//! computation; the golden-vector suite pins this). On, every
+//! [`PreparedPlan::execute`](super::exec::PreparedPlan::execute) branch
+//! (single-thread, pooled, scoped) times each op and folds the result
+//! into the plan's [`PlanProfile`] with relaxed atomic adds — lock-free,
+//! so the pooled and scoped branches record without serializing on a
+//! mutex.
+//!
+//! Two aggregation horizons:
+//!
+//! * **Per-plan, cumulative** — [`PlanProfile`] accumulates op/run totals
+//!   for the lifetime of one `PreparedPlan`; [`PlanProfile::snapshot`]
+//!   derives per-wave and per-[`HeOp`]-kind rollups from the plan's own
+//!   schedule, so the hot path never maintains them.
+//! * **Per-[`PlanKey`], EWMA** — every profiled request folds its
+//!   wall-clock and attributed totals into a process-wide registry keyed
+//!   by the plan-cache key (α = [`EWMA_ALPHA`]), so hot plans converge to
+//!   stable attribution across sessions and cache rebuilds. Served by the
+//!   `STATUS` frame via [`profiles_json`].
+//!
+//! Attribution accounting: per-op nanoseconds also accumulate into a
+//! per-request [`RequestSample`], so `attributed / total` measures how
+//! much of a request's wall-clock the op timers explain (≥95% at
+//! `threads == 1` is an acceptance gate; with a worker pool the *sum* of
+//! per-op time can legitimately exceed wall-clock, so the ratio is only a
+//! coverage check in the single-threaded case).
+
+use super::exec::PlanKey;
+use super::plan::HeOp;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// EWMA smoothing factor for the per-[`PlanKey`] registry: each profiled
+/// request moves the stored estimate 20% of the way to its own
+/// measurement — heavy enough to converge in a few requests, light
+/// enough to ride out scheduler noise.
+pub const EWMA_ALPHA: f64 = 0.2;
+
+static PROFILING: AtomicBool = AtomicBool::new(false);
+
+/// Turn per-op profiling on or off process-wide (default off). Takes
+/// effect at the next `execute` call; requests already in flight keep the
+/// decision they sampled at entry.
+pub fn set_profiling(on: bool) {
+    PROFILING.store(on, Ordering::Relaxed);
+}
+
+/// Is per-op profiling currently enabled?
+pub fn profiling_enabled() -> bool {
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// Poison-immune lock (a panicking profiled request must not wedge the
+/// registry for every later snapshot).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Per-request attribution accumulator, created on the stack of one
+/// `execute` call and shared by reference with its worker threads —
+/// atomic because pooled/scoped ops add to it concurrently.
+#[derive(Default)]
+pub struct RequestSample {
+    pub attributed_ns: AtomicU64,
+}
+
+/// Lifetime per-op timing totals for one prepared plan. One slot per op
+/// (RotGroup fans count as one op, matching the schedule); all updates
+/// are relaxed atomic adds, so recording is lock-free from any executor
+/// branch.
+pub struct PlanProfile {
+    op_ns: Vec<AtomicU64>,
+    op_hits: Vec<AtomicU64>,
+    total_ns: AtomicU64,
+    attributed_ns: AtomicU64,
+    runs: AtomicU64,
+}
+
+impl PlanProfile {
+    pub fn new(n_ops: usize) -> Self {
+        PlanProfile {
+            op_ns: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
+            op_hits: (0..n_ops).map(|_| AtomicU64::new(0)).collect(),
+            total_ns: AtomicU64::new(0),
+            attributed_ns: AtomicU64::new(0),
+            runs: AtomicU64::new(0),
+        }
+    }
+
+    /// Completed profiled requests recorded so far.
+    pub fn runs(&self) -> u64 {
+        self.runs.load(Ordering::Relaxed)
+    }
+
+    /// Fold one timed op into the plan totals and the request's sample.
+    pub fn record_op(&self, oi: usize, ns: u64, sample: &RequestSample) {
+        self.op_ns[oi].fetch_add(ns, Ordering::Relaxed);
+        self.op_hits[oi].fetch_add(1, Ordering::Relaxed);
+        sample.attributed_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Close out one profiled request: fold its wall-clock and attributed
+    /// totals into the plan profile and, when the plan knows its cache
+    /// key, into the process-wide EWMA registry.
+    pub fn record_run(&self, total_ns: u64, sample: &RequestSample, key: Option<&PlanKey>) {
+        let attributed = sample.attributed_ns.load(Ordering::Relaxed);
+        self.total_ns.fetch_add(total_ns, Ordering::Relaxed);
+        self.attributed_ns.fetch_add(attributed, Ordering::Relaxed);
+        self.runs.fetch_add(1, Ordering::Relaxed);
+        if let Some(&key) = key {
+            note_request(key, total_ns as f64 / 1e9, attributed as f64 / 1e9);
+        }
+    }
+
+    /// Consistent read of the accumulated totals, with per-wave and
+    /// per-kind rollups derived from the plan's schedule. `plan` must be
+    /// the plan this profile was sized for (checked).
+    pub fn snapshot(&self, plan: &super::plan::HePlan) -> ProfileSnapshot {
+        assert_eq!(
+            plan.ops.len(),
+            self.op_ns.len(),
+            "profile sized for a different plan"
+        );
+        let per_op_s: Vec<f64> = self
+            .op_ns
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed) as f64 / 1e9)
+            .collect();
+        let per_op_hits: Vec<u64> = self.op_hits.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let mut per_wave_s = vec![0.0; plan.waves.len()];
+        for (w, wave) in plan.waves.iter().enumerate() {
+            per_wave_s[w] = wave.iter().map(|&oi| per_op_s[oi as usize]).sum();
+        }
+        let mut per_kind_s = [0.0; HeOp::KIND_NAMES.len()];
+        let mut per_kind_hits = [0u64; HeOp::KIND_NAMES.len()];
+        for (oi, op) in plan.ops.iter().enumerate() {
+            per_kind_s[op.kind_index()] += per_op_s[oi];
+            per_kind_hits[op.kind_index()] += per_op_hits[oi];
+        }
+        ProfileSnapshot {
+            runs: self.runs.load(Ordering::Relaxed),
+            total_s: self.total_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            attributed_s: self.attributed_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            per_op_s,
+            per_op_hits,
+            per_wave_s,
+            per_kind_s,
+            per_kind_hits,
+        }
+    }
+}
+
+/// Plain-data view of a [`PlanProfile`] at one instant.
+pub struct ProfileSnapshot {
+    pub runs: u64,
+    /// Wall-clock summed over profiled requests.
+    pub total_s: f64,
+    /// Per-op timer sum over profiled requests.
+    pub attributed_s: f64,
+    pub per_op_s: Vec<f64>,
+    pub per_op_hits: Vec<u64>,
+    /// Sum of the wave's member op timings (schedule order).
+    pub per_wave_s: Vec<f64>,
+    /// Rollup by [`HeOp::KIND_NAMES`] index.
+    pub per_kind_s: [f64; HeOp::KIND_NAMES.len()],
+    pub per_kind_hits: [u64; HeOp::KIND_NAMES.len()],
+}
+
+impl ProfileSnapshot {
+    /// Fraction of measured wall-clock the per-op timers explain
+    /// (1.0 when nothing ran yet; can exceed 1.0 under a worker pool).
+    pub fn attribution_fraction(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 1.0;
+        }
+        self.attributed_s / self.total_s
+    }
+}
+
+// ------------------------------------------------------------- EWMA registry
+
+/// Cross-request EWMA of one plan's profiled latency split.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanEwma {
+    /// Profiled requests folded in.
+    pub runs: u64,
+    /// EWMA of per-request wall-clock seconds.
+    pub total_s: f64,
+    /// EWMA of per-request attributed (per-op timer sum) seconds.
+    pub attributed_s: f64,
+}
+
+fn registry() -> &'static Mutex<HashMap<PlanKey, PlanEwma>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<PlanKey, PlanEwma>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Fold one profiled request into the per-[`PlanKey`] EWMA registry. The
+/// first request seeds the estimate; later ones smooth with
+/// [`EWMA_ALPHA`].
+pub fn note_request(key: PlanKey, total_s: f64, attributed_s: f64) {
+    let mut reg = lock(registry());
+    let e = reg.entry(key).or_default();
+    e.runs += 1;
+    if e.runs == 1 {
+        e.total_s = total_s;
+        e.attributed_s = attributed_s;
+    } else {
+        e.total_s += EWMA_ALPHA * (total_s - e.total_s);
+        e.attributed_s += EWMA_ALPHA * (attributed_s - e.attributed_s);
+    }
+}
+
+/// Current registry contents, deterministically ordered (the registry is
+/// a hash map; status output must not shuffle between calls).
+pub fn ewma_snapshot() -> Vec<(PlanKey, PlanEwma)> {
+    let mut all: Vec<(PlanKey, PlanEwma)> = lock(registry()).iter().map(|(k, v)| (*k, *v)).collect();
+    all.sort_by_key(|(k, _)| (k.model_hash, k.batch, k.optimize));
+    all
+}
+
+/// Drop all EWMA state (tests: isolate profiled runs from each other).
+pub fn ewma_reset() {
+    lock(registry()).clear();
+}
+
+/// The per-plan EWMA summaries as a JSON array (hand-rolled, like every
+/// serializer in this tree) — the `profiles` section of the `STATUS`
+/// snapshot.
+pub fn profiles_json() -> String {
+    let mut out = String::from("[");
+    for (i, (key, e)) in ewma_snapshot().into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"model_hash\":\"{:016x}\",\"batch\":{},\"optimize\":{},\"runs\":{},\
+             \"ewma_total_s\":{},\"ewma_attributed_s\":{}}}",
+            key.model_hash, key.batch, key.optimize, e.runs, e.total_s, e.attributed_s
+        ));
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The EWMA registry is process-global and these tests reset it —
+    /// serialize them so the harness's thread pool can't interleave a
+    /// reset into another test's read-back.
+    static REGISTRY_TESTS: Mutex<()> = Mutex::new(());
+
+    fn key(model_hash: u64) -> PlanKey {
+        PlanKey {
+            model_hash,
+            t: 8,
+            c_max: 4,
+            slots: 256,
+            use_bsgs: true,
+            fuse_activations: true,
+            batch: 1,
+            optimize: true,
+        }
+    }
+
+    #[test]
+    fn test_profiling_switch_defaults_off() {
+        // other tests may flip the global; assert the transition both ways
+        set_profiling(false);
+        assert!(!profiling_enabled());
+        set_profiling(true);
+        assert!(profiling_enabled());
+        set_profiling(false);
+        assert!(!profiling_enabled());
+    }
+
+    #[test]
+    fn test_record_and_attribution() {
+        let p = PlanProfile::new(3);
+        let sample = RequestSample::default();
+        p.record_op(0, 40, &sample);
+        p.record_op(1, 50, &sample);
+        p.record_op(2, 5, &sample);
+        p.record_run(100, &sample, None);
+        assert_eq!(p.runs(), 1);
+        assert_eq!(sample.attributed_ns.load(Ordering::Relaxed), 95);
+    }
+
+    #[test]
+    fn test_ewma_converges_and_resets() {
+        let _serial = lock(&REGISTRY_TESTS);
+        let k = key(0xfeed_0001);
+        note_request(k, 1.0, 0.9);
+        let e0 = ewma_snapshot().into_iter().find(|(kk, _)| *kk == k).unwrap().1;
+        assert_eq!(e0.runs, 1);
+        assert!((e0.total_s - 1.0).abs() < 1e-12, "first sample seeds");
+        for _ in 0..60 {
+            note_request(k, 2.0, 1.8);
+        }
+        let e = ewma_snapshot().into_iter().find(|(kk, _)| *kk == k).unwrap().1;
+        assert!((e.total_s - 2.0).abs() < 1e-3, "EWMA converged: {}", e.total_s);
+        assert!((e.attributed_s - 1.8).abs() < 1e-3);
+        ewma_reset();
+        assert!(ewma_snapshot().iter().all(|(kk, _)| *kk != k));
+    }
+
+    #[test]
+    fn test_profiles_json_shape() {
+        let _serial = lock(&REGISTRY_TESTS);
+        ewma_reset();
+        note_request(key(0x2), 0.5, 0.45);
+        note_request(key(0x1), 0.25, 0.2);
+        let s = profiles_json();
+        assert!(s.starts_with('[') && s.ends_with(']'), "{s}");
+        // deterministic order: sorted by model_hash
+        let a = s.find("0000000000000001").unwrap();
+        let b = s.find("0000000000000002").unwrap();
+        assert!(a < b, "{s}");
+        assert!(s.contains("\"ewma_total_s\":0.5"), "{s}");
+        ewma_reset();
+    }
+}

@@ -45,6 +45,26 @@ pub fn fmt_f(x: f64, decimals: usize) -> String {
     format!("{:.*}", decimals, x)
 }
 
+/// Escape a string for inclusion in a JSON string literal (the tree's
+/// serializers are hand-rolled `format!` calls — this is the one shared
+/// piece that keeps a variant name or error message from breaking the
+/// document). Escapes quotes, backslashes, and control characters.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Index of the largest logit — the predicted class. NaNs (which would
 /// poison a `partial_cmp().unwrap()` chain) never win against a real
 /// value, and an empty slice returns 0.

@@ -59,6 +59,10 @@ pub const KIND_NET_ERROR: u8 = 18;
 pub const KIND_NET_REGISTER: u8 = 19;
 pub const KIND_NET_INFER: u8 = 20;
 pub const KIND_NET_LOGITS: u8 = 21;
+/// Observability probe (DESIGN.md S19): empty request payload, JSON
+/// snapshot reply. Served off the metrics/plan-cache state only — never
+/// touches the HE pipeline.
+pub const KIND_NET_STATUS: u8 = 22;
 
 /// FNV-1a 64-bit over a byte slice (integrity only — tamper *detection*,
 /// not authentication; see the threat model in DESIGN.md S15).

@@ -46,8 +46,8 @@ use crate::ckks::Ciphertext;
 use crate::coordinator::{Coordinator, Metrics};
 use crate::wire::codec::{
     frame_with, unframe, ByteReader, CHECKSUM_LEN, HEADER_LEN, KIND_CIPHERTEXT, KIND_NET_ERROR,
-    KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER, MAGIC,
-    MIN_VERSION, VERSION,
+    KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER,
+    KIND_NET_STATUS, MAGIC, MIN_VERSION, VERSION,
 };
 use crate::wire::format::{CtBundle, EvalKeySet, WireSerialize, MAX_BATCH};
 use crate::wire::server::WireExecutor;
@@ -150,6 +150,12 @@ pub trait NetBackend: Send + Sync + 'static {
         params_hash: Option<u64>,
         batch: usize,
     ) -> Result<InferOutcome>;
+    /// Backend-specific slice of the `NET_STATUS` snapshot (the production
+    /// backend reports its plan-cache contents). Empty string = omit the
+    /// `"backend"` key; mocks inherit this default and compile unchanged.
+    fn status_json(&self) -> String {
+        String::new()
+    }
 }
 
 /// The production backend: key registration goes straight to the
@@ -200,6 +206,10 @@ impl NetBackend for CoordinatorBackend {
             .ok_or_else(|| anyhow!("coordinator returned neither logits nor an error"))?;
         Ok(InferOutcome { variant: resp.variant, ct_logits, queue: resp.queue, exec: resp.exec })
     }
+
+    fn status_json(&self) -> String {
+        self.executor.status_json()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -223,6 +233,27 @@ pub fn error_frame(code: u32, message: &str) -> Vec<u8> {
         w.put_u32(code);
         w.put_str(message);
     })
+}
+
+/// The `NET_STATUS` probe: an empty payload — everything the server
+/// needs it already has.
+pub fn status_frame() -> Vec<u8> {
+    frame_with(KIND_NET_STATUS, |_w| {})
+}
+
+fn parse_status_request(frame: &[u8]) -> Result<()> {
+    let payload = unframe(KIND_NET_STATUS, frame)?;
+    ensure!(payload.is_empty(), "status request carries no payload");
+    Ok(())
+}
+
+/// Extract the JSON document from a `NET_STATUS` reply.
+pub fn parse_status_frame(frame: &[u8]) -> Result<String> {
+    let payload = unframe(KIND_NET_STATUS, frame)?;
+    let mut r = ByteReader::new(payload);
+    let json = r.str()?;
+    r.finish()?;
+    Ok(json)
 }
 
 /// The `NET_INFER` header announcing a streamed upload of `ct_count`
@@ -789,11 +820,38 @@ fn handle_conn(stream: TcpStream, shared: &Shared) {
                     return;
                 }
             }
+            KIND_NET_STATUS => {
+                // Observability probe (DESIGN.md S19): answered straight
+                // off the metrics registers, plan-profile EWMAs, and the
+                // backend's plan-cache view — no HE pipeline involvement,
+                // so it works even while inference is in flight.
+                if let Err(e) = parse_status_request(&frame) {
+                    metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ =
+                        send_error(&mut io, ERR_BAD_FRAME, &format!("status rejected: {e:#}"));
+                    return;
+                }
+                let mut json = format!(
+                    "{{\"metrics\":{},\"profiles\":{}",
+                    metrics.snapshot(),
+                    crate::he_infer::profile::profiles_json()
+                );
+                let backend = shared.backend.status_json();
+                if !backend.is_empty() {
+                    json.push_str(",\"backend\":");
+                    json.push_str(&backend);
+                }
+                json.push('}');
+                let reply = frame_with(KIND_NET_STATUS, |w| w.put_str(&json));
+                if send_bytes(&mut io, &reply).is_err() {
+                    return;
+                }
+            }
             other => {
                 let _ = send_error(
                     &mut io,
                     ERR_PROTOCOL,
-                    &format!("unexpected frame kind {other} (want register or infer)"),
+                    &format!("unexpected frame kind {other} (want register, infer, or status)"),
                 );
                 return;
             }
@@ -987,6 +1045,15 @@ impl Client {
         let reply = self.expect_reply(KIND_NET_LOGITS)?;
         parse_logits_frame(&reply)
     }
+
+    /// Fetch the server's live status snapshot — metrics registers,
+    /// per-plan profile EWMAs, and (on the production backend) the plan
+    /// cache — as one JSON document.
+    pub fn status(&mut self) -> Result<String> {
+        self.send(&status_frame())?;
+        let reply = self.expect_reply(KIND_NET_STATUS)?;
+        parse_status_frame(&reply)
+    }
 }
 
 #[cfg(test)]
@@ -1003,6 +1070,17 @@ mod tests {
         let (code, msg) = parse_error_frame(&error_frame(ERR_OVER_QUOTA, "full")).unwrap();
         assert_eq!(code, ERR_OVER_QUOTA);
         assert_eq!(msg, "full");
+    }
+
+    #[test]
+    fn test_status_frames_roundtrip() {
+        parse_status_request(&status_frame()).unwrap();
+        // a stray payload on the request is a typed protocol fault
+        let bad = frame_with(KIND_NET_STATUS, |w| w.put_u8(1));
+        assert!(parse_status_request(&bad).is_err());
+        let json = "{\"metrics\":{},\"profiles\":[]}";
+        let reply = frame_with(KIND_NET_STATUS, |w| w.put_str(json));
+        assert_eq!(parse_status_frame(&reply).unwrap(), json);
     }
 
     #[test]

@@ -171,12 +171,53 @@ impl WireExecutor {
             if batch > 1 { " with --batch" } else { "" }
         );
         let prepared = PreparedPlan::new(plan, engine)?;
+        // profile EWMAs (DESIGN.md S19) aggregate across tenants under the
+        // same cache key the plan itself shares
+        prepared.set_key(key);
         let session = Arc::new(WireSession { prepared });
         let session = {
             let mut sessions = tenant.sessions.lock().unwrap();
             sessions.entry(skey).or_insert(session).clone()
         };
         Ok(session)
+    }
+
+    /// The `NET_STATUS` backend slice (DESIGN.md S19): the shared plan
+    /// cache, one JSON object per compiled plan, with the cache key's
+    /// model hash resolved back to a variant name where one matches.
+    /// Deliberately **not** per-tenant — the snapshot is unauthenticated,
+    /// so it must never expose tenant identities, per-tenant session
+    /// state, or anything derived from registered key material.
+    pub fn status_json(&self) -> String {
+        let mut entries: Vec<(PlanKey, usize, usize)> = self
+            .plans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, p)| (*k, p.ops.len(), p.waves.len()))
+            .collect();
+        entries.sort_by_key(|(k, ..)| (k.model_hash, k.batch, k.optimize));
+        let variant_of: HashMap<u64, &str> = self
+            .models
+            .iter()
+            .map(|(name, m)| (m.content_hash(), name.as_str()))
+            .collect();
+        let mut out = String::from("{\"plans\":[");
+        for (i, (k, n_ops, n_waves)) in entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"model_hash\":\"{:016x}\",\"variant\":\"{}\",\"batch\":{},\
+                 \"optimize\":{},\"ops\":{n_ops},\"waves\":{n_waves}}}",
+                k.model_hash,
+                crate::util::json_escape(variant_of.get(&k.model_hash).unwrap_or(&"?")),
+                k.batch,
+                k.optimize,
+            ));
+        }
+        out.push_str("]}");
+        out
     }
 }
 
@@ -285,6 +326,25 @@ mod tests {
         let argmax = crate::util::argmax;
         assert_eq!(argmax(&got), argmax(&want));
         assert!(ex.infer_encrypted("missing", "alice", &cts, hash, 1).is_err());
+    }
+
+    #[test]
+    fn test_status_json_lists_compiled_plans_without_tenant_names() {
+        let model = tiny();
+        let ex = executor(&model, 4);
+        assert_eq!(ex.status_json(), "{\"plans\":[]}");
+        let (client, key_set) = keygen(&model, "v", PlanOptions::default(), 17).unwrap();
+        ex.register("alice", key_set).unwrap();
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 / 7.0).sin()).collect();
+        let cts = client.encrypt_clip(&x).unwrap();
+        ex.infer_encrypted("v", "alice", &cts, None, 1).unwrap();
+        let json = ex.status_json();
+        assert!(json.contains("\"variant\":\"v\""), "{json}");
+        assert!(json.contains("\"batch\":1"), "{json}");
+        // S19 threat model: the snapshot is unauthenticated — no tenant
+        // identities or key-derived state may appear
+        assert!(!json.contains("alice"), "{json}");
     }
 
     #[test]

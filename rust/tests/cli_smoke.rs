@@ -148,3 +148,64 @@ fn test_infer_remote_requires_addr() {
         "batch 0 must be rejected"
     );
 }
+
+#[test]
+fn test_inspect_validates_flags_before_any_work() {
+    // format names are pinned before sources are opened
+    let err = run(&args(&["inspect", "--plan-text", "x", "--format", "yaml"]))
+        .expect_err("bad format must be rejected");
+    assert!(format!("{err:#}").contains("expected json|text|dot"), "got: {err:#}");
+    // two plan sources is a named conflict, not last-one-wins
+    let err = run(&args(&["inspect", "--plan-text", "x", "--artifacts"]))
+        .expect_err("two sources must be rejected");
+    assert!(format!("{err:#}").contains("mutually exclusive"), "got: {err:#}");
+    // zero plan sources points at both
+    let err = run(&args(&["inspect"])).expect_err("a source is required");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--plan-text") && msg.contains("--artifacts"), "got: {msg}");
+    // --profile executes real HE inference, so the symbolic source refuses it
+    let err = run(&args(&["inspect", "--plan-text", "x", "--profile", "1"]))
+        .expect_err("--profile without --artifacts must be rejected");
+    assert!(format!("{err:#}").contains("requires --artifacts"), "got: {err:#}");
+    // a missing plan file is an I/O error, not a panic
+    assert!(run(&args(&["inspect", "--plan-text", "no-such-plan.txt"])).is_err());
+}
+
+#[test]
+fn test_inspect_renders_a_plan_text_file_in_every_format() {
+    use lingcn::ama::AmaLayout;
+    use lingcn::graph::Graph;
+    use lingcn::he_infer::{compile, HeStgcn, PlanChain, PlanOptions};
+    use lingcn::stgcn::StgcnModel;
+    // compile a tiny plan symbolically (no CKKS work) and round-trip it
+    // through the `--plan-text` source in all three formats
+    let model = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+    let layout = AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 8).unwrap();
+    let levels = HeStgcn::new(&model, layout).unwrap().levels_needed().unwrap();
+    let plan =
+        compile(&model, layout, &PlanChain::ideal(levels, 33), PlanOptions::default()).unwrap();
+    let dir = std::env::temp_dir().join("lingcn_cli_smoke_inspect");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plan.txt");
+    std::fs::write(&path, plan.to_text()).unwrap();
+    let p = path.to_str().unwrap();
+    for format in ["json", "text", "dot"] {
+        assert_eq!(
+            run(&args(&["inspect", "--plan-text", p, "--format", format, "--cost"])).unwrap(),
+            0,
+            "inspect --format {format} failed"
+        );
+    }
+}
+
+#[test]
+fn test_status_requires_addr_and_validates_flags_first() {
+    let err = run(&args(&["status"])).expect_err("status needs --addr");
+    assert!(format!("{err:#}").contains("--addr"), "got: {err:#}");
+    // flag values are validated before any connection is attempted
+    assert!(run(&args(&["status", "--addr", "127.0.0.1:1", "--timeout-ms", "soon"])).is_err());
+    // an unreachable server is a typed connect error, not a panic
+    let err = run(&args(&["status", "--addr", "127.0.0.1:1", "--timeout-ms", "2000"]))
+        .expect_err("nothing listens on port 1");
+    assert!(format!("{err:#}").contains("connecting to"), "got: {err:#}");
+}

@@ -1,0 +1,464 @@
+//! Observability suite (DESIGN.md S19, ISSUE 8 satellite): the status
+//! snapshot and plan-inspector JSON must parse under a hand-rolled JSON
+//! grammar check (the repo has no serde to lean on), the per-op profiler
+//! must attribute >= 95% of execute wall-clock at one thread, toggling
+//! profiling must be bit-invisible to logits and OpCounts, and a STATUS
+//! frame must be answered while an encrypted inference is in flight —
+//! proving the probe never queues behind the HE pipeline.
+//!
+//! Profiling is a process-global toggle (`set_profiling`), so every test
+//! that flips it serializes on one mutex; the rest of the binary runs
+//! with the default (off).
+
+mod common;
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use lingcn::ama::AmaLayout;
+use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams};
+use lingcn::coordinator::Metrics;
+use lingcn::costmodel::OpCostModel;
+use lingcn::he_infer::{
+    compile, inspect, profile, set_profiling, HePlan, HeStgcn, PlanChain, PlanOptions,
+};
+use lingcn::wire::net::{Client, InferOutcome, NetBackend, NetConfig, NetServer};
+use lingcn::wire::{CtBundle, EvalKeySet};
+
+// ---------------------------------------------------- profiling serialization
+
+static PROFILING: Mutex<()> = Mutex::new(());
+
+fn profiling_lock() -> MutexGuard<'static, ()> {
+    // a panicked holder left the flag in a known state (its tail resets
+    // it); the lock itself is still good
+    PROFILING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------ hand-rolled JSON validator
+
+/// Minimal recursive-descent JSON parser: accepts exactly the RFC 8259
+/// grammar (objects, arrays, strings with escapes, numbers, literals) and
+/// panics with a byte offset on the first violation. This is the
+/// "round-trips and is valid JSON" acceptance check — substring asserts
+/// elsewhere cannot catch a stray comma or an unbalanced brace.
+struct Json<'a> {
+    b: &'a [u8],
+    i: usize,
+    label: &'a str,
+}
+
+impl<'a> Json<'a> {
+    fn fail(&self, what: &str) -> ! {
+        let ctx_end = (self.i + 24).min(self.b.len());
+        panic!(
+            "{}: {} at byte {} (near {:?})",
+            self.label,
+            what,
+            self.i,
+            String::from_utf8_lossy(&self.b[self.i..ctx_end])
+        );
+    }
+
+    fn peek(&self) -> u8 {
+        if self.i >= self.b.len() {
+            self.fail("unexpected end of input");
+        }
+        self.b[self.i]
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) {
+        if self.peek() != c {
+            self.fail(&format!("expected {:?}", c as char));
+        }
+        self.i += 1;
+    }
+
+    fn value(&mut self) {
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            b'-' | b'0'..=b'9' => self.number(),
+            _ => self.fail("expected a JSON value"),
+        }
+    }
+
+    fn object(&mut self) {
+        self.eat(b'{');
+        self.ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.ws();
+            self.string();
+            self.ws();
+            self.eat(b':');
+            self.ws();
+            self.value();
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.fail("expected ',' or '}' in object"),
+            }
+        }
+    }
+
+    fn array(&mut self) {
+        self.eat(b'[');
+        self.ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.ws();
+            self.value();
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.fail("expected ',' or ']' in array"),
+            }
+        }
+    }
+
+    fn string(&mut self) {
+        self.eat(b'"');
+        loop {
+            match self.peek() {
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match self.peek() {
+                        b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' => self.i += 1,
+                        b'u' => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                if !self.peek().is_ascii_hexdigit() {
+                                    self.fail("bad \\u escape");
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => self.fail("bad escape"),
+                    }
+                }
+                0x00..=0x1F => self.fail("raw control char in string"),
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    fn digits(&mut self) {
+        if !self.peek().is_ascii_digit() {
+            self.fail("expected a digit");
+        }
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+    }
+
+    fn number(&mut self) {
+        if self.peek() == b'-' {
+            self.i += 1;
+        }
+        self.digits();
+        if self.i < self.b.len() && self.b[self.i] == b'.' {
+            self.i += 1;
+            self.digits();
+        }
+        if self.i < self.b.len() && matches!(self.b[self.i], b'e' | b'E') {
+            self.i += 1;
+            if matches!(self.peek(), b'+' | b'-') {
+                self.i += 1;
+            }
+            self.digits();
+        }
+    }
+
+    fn literal(&mut self, word: &[u8]) {
+        if self.b.len() < self.i + word.len() || &self.b[self.i..self.i + word.len()] != word {
+            self.fail("bad literal");
+        }
+        self.i += word.len();
+    }
+}
+
+fn assert_valid_json(label: &str, src: &str) {
+    let mut p = Json { b: src.as_bytes(), i: 0, label };
+    p.ws();
+    p.value();
+    p.ws();
+    assert_eq!(p.i, p.b.len(), "{label}: trailing bytes after the JSON document");
+}
+
+// ------------------------------------------------------------------ fixtures
+
+/// A compiled (not executed) tiny plan — enough for the inspector's
+/// symbolic surfaces, debug-fast.
+fn tiny_plan(optimize: bool) -> HePlan {
+    let model = common::tiny_model(7);
+    let layout =
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 8).unwrap();
+    let levels = HeStgcn::new(&model, layout).unwrap().levels_needed().unwrap();
+    let chain = PlanChain::ideal(levels, 33);
+    compile(&model, layout, &chain, PlanOptions { optimize, ..Default::default() }).unwrap()
+}
+
+// --------------------------------------------------------------- JSON shapes
+
+#[test]
+fn test_metrics_snapshot_is_valid_json() {
+    let m = Metrics::default();
+    assert_valid_json("empty snapshot", &m.snapshot());
+    m.net_bytes_out.fetch_add(512, Ordering::Relaxed);
+    m.observe_latency(Duration::from_millis(5));
+    m.observe_latency(Duration::from_millis(40));
+    let s = m.snapshot();
+    assert_valid_json("populated snapshot", &s);
+    assert!(s.contains("\"build\":\"lingcn/"), "snapshot: {s}");
+    assert!(s.contains("\"uptime_s\":"), "snapshot: {s}");
+    assert!(s.contains("\"net_bytes_out\":512"), "snapshot: {s}");
+    assert!(s.contains("\"observed\":2"), "snapshot: {s}");
+}
+
+#[test]
+fn test_inspector_json_is_valid_for_raw_and_optimized_plans() {
+    for optimize in [false, true] {
+        let plan = tiny_plan(optimize);
+        let j = inspect::plan_json(&plan, None, None).unwrap();
+        assert_valid_json("plan_json", &j);
+        let jc = inspect::plan_json(&plan, None, Some(&OpCostModel::reference())).unwrap();
+        assert_valid_json("plan_json+cost", &jc);
+        assert!(jc.contains("\"predicted_s\":"), "cost overlay missing");
+        // the renderers must cover every op and never panic on RotGroup
+        let text = inspect::plan_text(&plan, None, None).unwrap();
+        assert!(text.contains("waves"), "text: {text}");
+        let dot = inspect::plan_dot(&plan).unwrap();
+        for oi in 0..plan.ops.len() {
+            assert!(dot.contains(&format!("op{oi} ")), "dot lost op {oi}");
+        }
+    }
+}
+
+// ------------------------------------------------------- profiler (release)
+
+const RUNS: u64 = 4;
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (ci.sh)")]
+fn test_profile_attributes_wall_clock_and_feeds_ewma() {
+    let _g = profiling_lock();
+    let model = common::tiny_model(3);
+    let sess = common::session_for(&model, 1, 11);
+    let x = common::clip(&model);
+    let input = sess.encrypt_input(&model, &x).unwrap();
+
+    profile::ewma_reset();
+    set_profiling(true);
+    let t0 = Instant::now();
+    for _ in 0..RUNS {
+        sess.infer(&model, &input).unwrap();
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    set_profiling(false);
+
+    let snap = sess.prepared().profile.snapshot(&sess.plan);
+    assert_eq!(snap.runs, RUNS);
+    // acceptance: per-op attribution covers >= 95% of the measured run
+    // total at one thread (the remainder is inter-wave scheduling)
+    let frac = snap.attribution_fraction();
+    assert!(frac >= 0.95, "attribution {frac:.4} below the 95% bar");
+    // the profiler's own run total must agree with wall-clock around the
+    // calls: never above it, and execute dominates the loop body
+    assert!(
+        snap.total_s <= wall_s * 1.02 && snap.total_s >= wall_s * 0.5,
+        "profile total {:.4}s vs wall {:.4}s",
+        snap.total_s,
+        wall_s
+    );
+    assert_eq!(snap.per_wave_s.len(), sess.plan.waves.len());
+    assert_eq!(
+        snap.per_op_hits.iter().sum::<u64>(),
+        snap.per_kind_hits.iter().sum::<u64>(),
+        "per-op and per-kind hit totals must agree"
+    );
+
+    // the EWMA registry saw exactly this plan's key
+    let ew = profile::ewma_snapshot();
+    assert_eq!(ew.len(), 1, "registry: {ew:?}");
+    assert_eq!(ew[0].0.model_hash, sess.plan.model_hash);
+    assert_eq!(ew[0].1.runs, RUNS);
+    let pj = profile::profiles_json();
+    assert_valid_json("profiles_json", &pj);
+    assert!(pj.contains(&format!("{:016x}", sess.plan.model_hash)), "profiles: {pj}");
+
+    // measured overlay renders through the inspector and stays valid JSON
+    let j = inspect::plan_json(
+        &sess.plan,
+        Some(sess.prepared().profile.as_ref()),
+        Some(&OpCostModel::reference()),
+    )
+    .unwrap();
+    assert_valid_json("plan_json+profile", &j);
+    assert!(j.contains("\"measured_s\":"), "profile overlay missing");
+    profile::ewma_reset();
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (ci.sh)")]
+fn test_profiling_toggle_is_bit_invisible() {
+    let _g = profiling_lock();
+    set_profiling(false);
+    let model = common::tiny_model(5);
+    let sess = common::session_for(&model, 1, 23);
+    let x = common::clip(&model);
+    let input = sess.encrypt_input(&model, &x).unwrap();
+
+    // same prepared plan, same ciphertexts: the recorder must be outside
+    // the math, so the decrypted logits agree to the last bit
+    let off = sess.decrypt_logits(&model, &sess.infer(&model, &input).unwrap());
+    set_profiling(true);
+    let on = sess.decrypt_logits(&model, &sess.infer(&model, &input).unwrap());
+    set_profiling(false);
+    assert_eq!(off.len(), on.len());
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: {a} vs {b}");
+    }
+
+    // compiling under the flag produces the identical plan: OpCounts and
+    // the serialized text digest match the profiling-off compile
+    set_profiling(true);
+    let p_on = tiny_plan(true);
+    set_profiling(false);
+    let p_off = tiny_plan(true);
+    assert_eq!(p_on.counts.to_array(), p_off.counts.to_array(), "OpCounts drifted");
+    assert_eq!(p_on.to_text(), p_off.to_text(), "plan text drifted");
+}
+
+// ----------------------------------------- STATUS vs in-flight (mock-backed)
+
+fn tiny_engine() -> CkksEngine {
+    let mut p = CkksParams::toy(2);
+    p.n = 1 << 7;
+    CkksEngine::new(p, &[1, 3], 5).unwrap()
+}
+
+/// Registration records the tenant; inference signals entry and then
+/// blocks on a channel — the sleep-free way to hold a request in flight
+/// while the STATUS probe runs (same shape as net_faults.rs).
+struct GatedBackend {
+    registered: Mutex<HashSet<String>>,
+    entered_tx: Mutex<mpsc::Sender<()>>,
+    release_rx: Mutex<mpsc::Receiver<()>>,
+}
+
+impl NetBackend for GatedBackend {
+    fn register(&self, tenant: &str, _key_set: EvalKeySet) -> anyhow::Result<()> {
+        self.registered.lock().unwrap().insert(tenant.to_string());
+        Ok(())
+    }
+
+    fn is_registered(&self, tenant: &str) -> bool {
+        self.registered.lock().unwrap().contains(tenant)
+    }
+
+    fn infer(
+        &self,
+        _tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        _params_hash: Option<u64>,
+        _batch: usize,
+    ) -> anyhow::Result<InferOutcome> {
+        self.entered_tx.lock().unwrap().send(()).unwrap();
+        self.release_rx.lock().unwrap().recv().unwrap();
+        Ok(InferOutcome {
+            variant: variant.unwrap_or_else(|| "echo".into()),
+            ct_logits: cts.into_iter().next().expect("server never passes zero cts"),
+            queue: Duration::ZERO,
+            exec: Duration::ZERO,
+        })
+    }
+    // status_json deliberately NOT overridden: the default empty string
+    // must make the server omit the "backend" key, not emit bad JSON
+}
+
+#[test]
+fn test_status_answers_while_inference_is_in_flight() {
+    let engine = tiny_engine();
+    let key_set = EvalKeySet::from_engine(&engine, "v");
+    let ct = engine.encrypt(&[0.5, -0.25, 0.125]);
+    let bundle = CtBundle::new(&key_set.params, vec![ct]);
+
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel();
+    let backend = Arc::new(GatedBackend {
+        registered: Mutex::new(HashSet::new()),
+        entered_tx: Mutex::new(entered_tx),
+        release_rx: Mutex::new(release_rx),
+    });
+    let metrics = Arc::new(Metrics::default());
+    let server =
+        NetServer::bind("127.0.0.1:0", backend, metrics.clone(), NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let mut alice =
+        Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    alice.register(&key_set).unwrap();
+    let upload = bundle.clone();
+    let holder = std::thread::spawn(move || alice.infer(Some("v"), &upload).unwrap());
+    // deterministic: alice's request is *inside* the backend now
+    entered_rx.recv().unwrap();
+
+    // an unregistered probe tenant gets the full snapshot while alice's
+    // inference is still blocked — STATUS must not queue behind the
+    // pipeline and must not require registration
+    let mut probe =
+        Client::connect_with(&addr.to_string(), "probe", Duration::from_secs(20)).unwrap();
+    let status = probe.status().unwrap();
+    assert_valid_json("STATUS reply", &status);
+    assert!(status.contains("\"metrics\":"), "status: {status}");
+    assert!(status.contains("\"profiles\":"), "status: {status}");
+    assert!(status.contains("\"uptime_s\":"), "status: {status}");
+    assert!(
+        !status.contains("\"backend\":"),
+        "mock backend publishes no plans; key must be omitted: {status}"
+    );
+
+    // release alice; her echo completes untouched by the probe
+    release_tx.send(()).unwrap();
+    let out = holder.join().unwrap();
+    assert_eq!(out.ct_logits, bundle.cts[0]);
+
+    // a second STATUS after completion still parses
+    let status = probe.status().unwrap();
+    assert_valid_json("STATUS after release", &status);
+    drop(probe);
+    server.shutdown();
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
