@@ -48,6 +48,12 @@ echo "==> cargo test --release (slot-batched differential + end-to-end suites)"
 # profiler acceptance (>= 95% attribution, profiling-toggle bit-identity)
 cargo test --release -q --test batch_equivalence --test coordinator_integration --test wire_roundtrip --test property_suite --test inspect_profile
 
+echo "==> decision-correctness differential suite (release)"
+# ISSUE 9: encrypted argmax/top-k/threshold decisions vs the plaintext
+# reference across sign presets, nl variants and batch sizes, plus the
+# adversarial near-tie margin sweep down to each preset's resolution δ
+cargo test --release -q --test decision_equivalence
+
 echo "==> TCP tier: loopback + fault-injection suites (release)"
 # net_faults is mock-backed (fast); net_roundtrip's release-gated cases
 # run real CKKS over a loopback socket, including the bit-identity
@@ -82,7 +88,8 @@ fi
 
 echo "==> op-count + profiled wall-clock regression gates (bench plan_compile, same as make bench-plan)"
 # benches/plan_compile.rs asserts optimized <= raw on every cost-bearing
-# OpCounts field and strictly fewer key-switch decompositions, then runs
+# OpCounts field (for the logits plan and an S20 decision plan) and
+# strictly fewer key-switch decompositions, then runs
 # the optimized plan under the S19 per-op profiler and writes
 # BENCH_plan.json with the per-pass deltas plus per-wave latency
 # attribution. A profiled per-request total >20% slower than the
@@ -101,7 +108,8 @@ fi
 
 echo "==> kernel wall-clock regression gate (bench he_ops --kernels, same as make bench-kernels)"
 # measures the campaign kernels (NTT fwd/inv, key switch, rescale,
-# rotate_group, cmult + ablation configs) and appends the medians to
+# rotate_group, cmult + the S20 decision kernels sgn_stage/argmax_pair
+# + ablation configs) and appends the medians to
 # rust/BENCH_kernels.json; a gated kernel >20% slower than the committed
 # baseline exits nonzero and fails the build. A missing or
 # shape-mismatched baseline bootstraps with a warning instead — the gate

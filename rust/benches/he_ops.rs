@@ -8,8 +8,9 @@
 //!
 //! * `--kernels` — the kernel-campaign harness (DESIGN.md §Perf-4..6):
 //!   measures NTT forward/inverse, hybrid key switch, rescale, hoisted
-//!   rotation groups, add/pmult/cmult at paper-scale N under five
-//!   configurations — `baseline` (every campaign optimization off: scoped
+//!   rotation groups, add/pmult/cmult, plus the S20 decision-circuit
+//!   kernels (one composite-sign odd stage, one pairwise-tournament
+//!   front end) at paper-scale N under five configurations — `baseline` (every campaign optimization off: scoped
 //!   spawns, eager inner product, fresh allocations), `pool` / `fused` /
 //!   `arena` (exactly one optimization on, so each is individually
 //!   ablatable), and `campaign` (all on, the shipping default). Writes
@@ -33,7 +34,10 @@ use std::time::Duration;
 /// The kernels whose campaign medians are regression-gated (>20% slower
 /// than the committed baseline fails). add/pmult are measured and
 /// reported but not gated: at paper scale they are tens of microseconds,
-/// where scheduler jitter swamps any real regression.
+/// where scheduler jitter swamps any real regression. The S20 decision
+/// kernels (sgn_stage, argmax_pair) are gated: each is several cmults
+/// deep, well above jitter, and they dominate every non-logits
+/// output-mode circuit.
 const GATED: &[&str] = &[
     "ntt_fwd",
     "ntt_inv",
@@ -41,6 +45,8 @@ const GATED: &[&str] = &[
     "rescale",
     "rotate_group",
     "cmult",
+    "sgn_stage",
+    "argmax_pair",
 ];
 
 /// Every measured kernel, in report order.
@@ -53,7 +59,14 @@ const KERNELS: &[&str] = &[
     "add",
     "pmult",
     "cmult",
+    "sgn_stage",
+    "argmax_pair",
 ];
+
+/// The F3 odd-stage coefficients of the S20 composite sign chains
+/// (private to `he_infer::sgn`; duplicated here as bench operands only —
+/// the timing is coefficient-agnostic).
+const F3: [f64; 4] = [2.1875, -2.1875, 1.3125, -0.3125];
 
 /// (name, pooled_spawn, fused_keyswitch, arena) — `baseline` is the
 /// pre-campaign code path; the three middle rows flip exactly one
@@ -167,6 +180,14 @@ fn kernels_mode(args: &[String]) {
     let mut coeff_poly = ct_a.c0.clone();
     coeff_poly.ntt_inverse(&engine.ctx);
     let ntt_poly = ct_a.c0.clone();
+    // S20 decision-circuit operands: the F3 coefficient slot vectors and
+    // a pairwise-tournament comparison mask (live rows interleaved with
+    // zeroed ones, 1/(2B) at B = 4). Encoding happens inside the timed
+    // region, mirroring the real backend's mask thunks.
+    let f3_slots: Vec<Vec<f64>> = F3.iter().map(|&c| vec![c; half]).collect();
+    let cmp_mask: Vec<f64> = (0..half)
+        .map(|i| if i % 2 == 0 { 1.0 / 8.0 } else { 0.0 })
+        .collect();
 
     set_limb_parallelism(threads);
     let budget = Duration::from_millis(budget_ms);
@@ -233,6 +254,45 @@ fn kernels_mode(args: &[String]) {
                 let _ = ev.mul(&ct_a, &ct_b);
             })),
         ));
+        // one F3 odd stage x·q(x²) by Horner in u = x² — the repeated
+        // kernel of every S20 sign chain (5 levels; same op sequence as
+        // DecisionCircuit::odd_stage, plaintexts encoded at the live
+        // scale so the renormalizing pmult and Horner adds line up)
+        row.push((
+            "sgn_stage",
+            med(time_op(1, 10, budget, || {
+                let u = ev.rescale(&ev.mul(&ct_a, &ct_a));
+                let p_scale =
+                    engine.ctx.scale * engine.ctx.moduli[u.nq() - 1] as f64 / u.scale;
+                let top = engine.encoder.encode(&engine.ctx, &f3_slots[3], p_scale, u.nq());
+                let mut acc = ev.rescale(&ev.mul_plain(&u, &top));
+                for i in (0..3).rev() {
+                    let pt =
+                        engine.encoder.encode(&engine.ctx, &f3_slots[i], acc.scale, acc.nq());
+                    acc = ev.add_plain(&acc, &pt);
+                    if i > 0 {
+                        acc = ev.rescale(&ev.mul(&acc, &u));
+                    }
+                }
+                let _ = ev.rescale(&ev.mul(&acc, &ct_a));
+            })),
+        ));
+        // one pairwise-tournament front end: rotate, both masked
+        // normalized differences through a renormalizing pmult + rescale
+        // (DecisionCircuit::pairwise_signs up to the sign chains)
+        row.push((
+            "argmax_pair",
+            med(time_op(1, 10, budget, || {
+                let rot = ev.rotate(enc, &ct_a, 1);
+                let diff = ev.sub(&ct_a, &rot);
+                let diffneg = ev.sub(&rot, &ct_a);
+                let p_scale =
+                    engine.ctx.scale * engine.ctx.moduli[diff.nq() - 1] as f64 / diff.scale;
+                let pt = engine.encoder.encode(&engine.ctx, &cmp_mask, p_scale, diff.nq());
+                let _ = ev.rescale(&ev.mul_plain(&diff, &pt));
+                let _ = ev.rescale(&ev.mul_plain(&diffneg, &pt));
+            })),
+        ));
         println!(
             "  {name:>9}: {}",
             row.iter()
@@ -263,18 +323,30 @@ fn kernels_mode(args: &[String]) {
     let mut regressions: Vec<String> = Vec::new();
     if let (Some(old), true, false) = (old.as_deref(), shape_matches, rebaseline) {
         for &k in GATED {
-            let gate = json_num(old, &format!("gate_{k}_ms"))
-                .unwrap_or_else(|| panic!("baseline {BENCH_FILE} lacks gate_{k}_ms"));
             let got = kernel_ms(campaign, k);
-            if got > gate * GATE_FACTOR {
-                regressions.push(format!(
-                    "{k}: {} ms vs gate {} ms (>{:.0}% regression)",
-                    fmt_f(got, 3),
-                    fmt_f(gate, 3),
-                    (GATE_FACTOR - 1.0) * 100.0
-                ));
+            match json_num(old, &format!("gate_{k}_ms")) {
+                Some(gate) => {
+                    if got > gate * GATE_FACTOR {
+                        regressions.push(format!(
+                            "{k}: {} ms vs gate {} ms (>{:.0}% regression)",
+                            fmt_f(got, 3),
+                            fmt_f(gate, 3),
+                            (GATE_FACTOR - 1.0) * 100.0
+                        ));
+                    }
+                    gates.push((k, gate));
+                }
+                None => {
+                    // a baseline written before this kernel joined GATED
+                    // (e.g. pre-S20 files lack the decision kernels):
+                    // bootstrap that one gate from this run, keep the rest
+                    println!(
+                        "WARNING: {BENCH_FILE} predates gate_{k}_ms — that gate \
+                         bootstraps from this run"
+                    );
+                    gates.push((k, got));
+                }
             }
-            gates.push((k, gate));
         }
     } else {
         if rebaseline {

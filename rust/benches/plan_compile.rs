@@ -3,8 +3,9 @@
 //! any cost-bearing op than the raw trace — on every counted field — and
 //! strictly less rotation key-switch decomposition work on the
 //! GCNConv/BSGS fan-outs. A violation aborts the bench (ci.sh runs this
-//! as the op-count regression gate). Emits `BENCH_plan.json` with the
-//! per-pass before/after `OpCounts` deltas.
+//! as the op-count regression gate). The gate covers both plan families:
+//! the logits plan and an S20 decision plan (argmax/fast). Emits
+//! `BENCH_plan.json` with the per-pass before/after `OpCounts` deltas.
 //!
 //! Also the S19 **profiled wall-clock gate**: runs the optimized plan
 //! with per-op profiling on, emits per-wave latency attribution into
@@ -100,6 +101,39 @@ fn main() {
     );
     assert!(!plan.groups.is_empty(), "rotation fans must be grouped");
     assert_eq!(plan.levels_needed, raw.levels_needed, "levels must not grow");
+
+    // ---- the same gate over an S20 decision plan (argmax/fast): the
+    // optimizer must not spend more of any cost-bearing op on the sign
+    // tournament either, and the output mode must survive optimization.
+    // Compile-only — the decision chain is deeper than the engine above,
+    // so this gate runs on an ideal chain sized by the static accounting.
+    {
+        use lingcn::he_infer::{OutputMode, SgnPreset};
+        let mut probe = HeStgcn::new(&model, layout).unwrap();
+        probe.output_mode = OutputMode::Argmax;
+        probe.sgn_preset = SgnPreset::Fast;
+        let dchain = PlanChain::ideal(probe.levels_needed().unwrap(), 33);
+        let dopts = PlanOptions { output_mode: OutputMode::Argmax, ..Default::default() };
+        let draw =
+            compile(&model, layout, &dchain, PlanOptions { optimize: false, ..dopts }).unwrap();
+        let dopt = compile(&model, layout, &dchain, dopts).unwrap();
+        for ((name, o), (_, r)) in
+            dopt.counts.cost_fields().iter().zip(draw.counts.cost_fields())
+        {
+            assert!(
+                *o <= r,
+                "OP-COUNT REGRESSION (decision plan): optimized {name} = {o} exceeds raw {r}"
+            );
+        }
+        assert_eq!(dopt.levels_needed, draw.levels_needed, "decision levels must not grow");
+        assert_eq!(dopt.output_mode, OutputMode::Argmax, "mode must survive optimization");
+        println!(
+            "decision plan (argmax/fast): {} ops ({} raw), depth {}",
+            dopt.ops.len(),
+            draw.ops.len(),
+            dopt.levels_needed
+        );
+    }
 
     // ---- per-request costs
     let x: Vec<f64> = (0..model.v() * model.c_in * model.t)

@@ -9,12 +9,13 @@
 //! | `plan` | print the HE parameter plan (paper Table 6) |
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
-//! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17) |
-//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M] [--status-json]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive; `--status-json` prints the DESIGN.md S19 machine-readable snapshot after the run summary (plaintext/he tiers) |
-//! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; writes the local secret key file and the server-shippable eval-key bundle |
-//! | `encrypt --key F --input X.lgt --out R.cts [--batch B]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip) |
+//! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17); `--output-mode logits\|argmax\|topk:K\|threshold:CLASS[:CUTOFF]` appends the composite-sign decision circuit (DESIGN.md S20) with `--sgn-preset fast\|balanced\|precise` depth/precision and logit bound `--logit-bound B` |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M] [--status-json] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive; `--output-mode` compiles the serving plans for a decision mode (DESIGN.md S20) and refuses requests for any other mode; `--status-json` prints the DESIGN.md S19 machine-readable snapshot after the run summary (plaintext/he tiers) |
+//! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; `--output-mode` grows the chain and Galois set to cover the decision circuit too; writes the local secret key file and the server-shippable eval-key bundle |
+//! | `encrypt --key F --input X.lgt --out R.cts [--batch B] [--output-mode M]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip; `--output-mode` stamps the requested decision mode into the bundle, DESIGN.md S20) |
 //! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
-//! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits, all over one TCP connection (DESIGN.md S18) |
+//! | `decrypt-decision --key F --in RESP.ct [--output-mode M] [--batch B] [--request R.cts]` | client-side: open a decision-mode response (DESIGN.md S20) and print the decision per clip; the mode comes from `--output-mode` or the request bundle (`--request`), which cross-check when both are given |
+//! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits (or the decision, under `--output-mode`), all over one TCP connection (DESIGN.md S18/S20) |
 //! | `inspect [--plan-text F \| --artifacts [--nl K]] [--format json\|text\|dot] [--cost] [--profile N] [--batch B] [--no-opt] [--threads T]` | dump a compiled `HePlan` as a queryable graph (DESIGN.md S19): per-op kind/level/scale/wave, per-wave widths and critical path, per-pass optimizer accounting; `--cost` overlays reference cost-model predictions; `--profile N` (needs `--artifacts`) runs N profiled encrypted iterations first and overlays measured per-op latencies |
 //! | `status --addr H:P [--tenant T] [--timeout-ms MS]` | fetch a live server's JSON status snapshot over TCP (DESIGN.md S19): metrics counters + latency histogram, per-plan profile EWMAs, plan-cache contents |
 //!
@@ -33,6 +34,14 @@
 //! ```text
 //! lingcn serve --tier he-wire --listen 127.0.0.1:7070     # terminal 1
 //! lingcn infer-remote --addr 127.0.0.1:7070 --nl 2        # terminal 2
+//! ```
+//!
+//! Encrypted decisions (DESIGN.md S20): pass the same `--output-mode` to
+//! both sides and only the decision — not the logits — comes back:
+//!
+//! ```text
+//! lingcn serve --tier he-wire --listen 127.0.0.1:7070 --output-mode argmax   # terminal 1
+//! lingcn infer-remote --addr 127.0.0.1:7070 --nl 2 --output-mode argmax     # terminal 2
 //! ```
 //!
 //! `plan`, `calibrate` and `predict` are self-contained; `infer`,
@@ -58,6 +67,49 @@ fn arg_value(args: &[String], key: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Parse the shared decision flags (DESIGN.md S20): `--output-mode
+/// logits|argmax|topk:K|threshold:CLASS[:CUTOFF]`, `--sgn-preset
+/// fast|balanced|precise`, `--logit-bound B`. Defaults mirror
+/// [`PlanOptions::default`]; every verb validates these before touching
+/// artifacts, keys, or sockets so a typo fails fast and clean.
+fn decision_flags(
+    args: &[String],
+) -> Result<(crate::he_infer::OutputMode, crate::he_infer::SgnPreset, f64)> {
+    let defaults = crate::he_infer::PlanOptions::default();
+    let mode = match arg_value(args, "--output-mode") {
+        Some(s) => crate::he_infer::OutputMode::parse(&s)?,
+        None => defaults.output_mode,
+    };
+    let preset = match arg_value(args, "--sgn-preset") {
+        Some(s) => crate::he_infer::SgnPreset::parse(&s)?,
+        None => defaults.sgn_preset,
+    };
+    let bound: f64 = match arg_value(args, "--logit-bound") {
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--logit-bound {s:?} is not a number"))?,
+        None => defaults.logit_bound(),
+    };
+    anyhow::ensure!(
+        bound.is_finite() && bound > 0.0,
+        "--logit-bound must be a positive finite number, got {bound}"
+    );
+    Ok((mode, preset, bound))
+}
+
+/// Fold the decision flags into `opts` (shared by the key-generating and
+/// plan-compiling verbs).
+fn apply_decision_flags(
+    opts: &mut crate::he_infer::PlanOptions,
+    mode: crate::he_infer::OutputMode,
+    preset: crate::he_infer::SgnPreset,
+    bound: f64,
+) {
+    opts.output_mode = mode;
+    opts.sgn_preset = preset;
+    opts.set_logit_bound(bound);
+}
+
 /// Dispatch one invocation. Returns the process exit code on success
 /// (0 for a completed subcommand, [`USAGE_EXIT`] for an unknown one, with
 /// usage printed to stderr); runtime failures surface as `Err`.
@@ -71,12 +123,13 @@ pub fn run(args: &[String]) -> Result<i32> {
         Some("keygen") => cmd_keygen(args).map(|()| 0),
         Some("encrypt") => cmd_encrypt(args).map(|()| 0),
         Some("decrypt-logits") => cmd_decrypt_logits(args).map(|()| 0),
+        Some("decrypt-decision") => cmd_decrypt_decision(args).map(|()| 0),
         Some("infer-remote") => cmd_infer_remote(args).map(|()| 0),
         Some("inspect") => cmd_inspect(args).map(|()| 0),
         Some("status") => cmd_status(args).map(|()| 0),
         _ => {
             eprintln!(
-                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits|infer-remote|inspect|status> [options]"
+                "usage: lingcn <plan|calibrate|predict|infer|serve|keygen|encrypt|decrypt-logits|decrypt-decision|infer-remote|inspect|status> [options]"
             );
             Ok(USAGE_EXIT)
         }
@@ -164,6 +217,12 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         batch == 1 || encrypted,
         "--batch only applies to --encrypted (slot-packed ciphertext batching)"
     );
+    let (mode, preset, bound) = decision_flags(args)?;
+    anyhow::ensure!(
+        matches!(mode, crate::he_infer::OutputMode::Logits) || encrypted,
+        "--output-mode only applies to --encrypted (the decision circuit \
+         runs on ciphertexts, DESIGN.md S20)"
+    );
     let dir = Path::new("artifacts");
     let model = crate::stgcn::StgcnModel::load(
         &dir.join(format!("model_nl{nl}.lgt")),
@@ -177,12 +236,17 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             n: 1 << 11,
             q0_bits: 50,
             scale_bits: 33,
-            levels: 2 * model.layers.len() + 2 + nl,
+            // decision modes grow the chain by the sign circuit's depth
+            levels: 2 * model.layers.len()
+                + 2
+                + nl
+                + crate::he_infer::sgn::decision_levels(mode, preset, model.num_classes()),
             special_bits: 55,
             allow_insecure: true,
         };
         crate::ckks::set_limb_parallelism(limb_threads);
-        let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+        let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+        apply_decision_flags(&mut opts, mode, preset, bound);
         let sess =
             crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
         // demo batch: the example clip slot-packed B times (a deployment
@@ -190,18 +254,34 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
         let input = sess.encrypt_input_batch(&model, &clips)?;
         let out = sess.infer_parallel(&input, threads)?;
-        let per_clip = sess.decrypt_logits_batch(&model, &out);
-        let wall = t0.elapsed();
-        for (b, logits) in per_clip.iter().enumerate() {
-            let arg = crate::util::argmax(logits);
+        if matches!(mode, crate::he_infer::OutputMode::Logits) {
+            let per_clip = sess.decrypt_logits_batch(&model, &out);
+            let wall = t0.elapsed();
+            for (b, logits) in per_clip.iter().enumerate() {
+                let arg = crate::util::argmax(logits);
+                println!(
+                    "mode=encrypted nl={nl} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}"
+                );
+            }
             println!(
-                "mode=encrypted nl={nl} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}"
+                "batch={batch} latency={wall:?} ({:.2} clips/s)",
+                batch as f64 / wall.as_secs_f64()
+            );
+        } else {
+            let per_clip = sess.decrypt_decision_batch(&model, &out);
+            let wall = t0.elapsed();
+            for (b, decision) in per_clip.iter().enumerate() {
+                println!(
+                    "mode=encrypted nl={nl} clip={b}/{batch} output_mode={mode} \
+                     preset={} decision={decision}",
+                    preset.name()
+                );
+            }
+            println!(
+                "batch={batch} latency={wall:?} ({:.2} clips/s)",
+                batch as f64 / wall.as_secs_f64()
             );
         }
-        println!(
-            "batch={batch} latency={wall:?} ({:.2} clips/s)",
-            batch as f64 / wall.as_secs_f64()
-        );
     } else {
         let logits = model.forward(x)?;
         let arg = crate::util::argmax(&logits);
@@ -276,6 +356,7 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     let nl: usize = arg_value(args, "--nl").unwrap_or_else(|| "2".into()).parse()?;
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let (mode, preset, bound) = decision_flags(args)?;
     let out_dir = std::path::PathBuf::from(
         arg_value(args, "--out-dir").unwrap_or_else(|| "wire".into()),
     );
@@ -290,7 +371,11 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     // (the optimizer never adds or drops a distinct step), kept for
     // symmetry with the serving flags.
     let optimize = !args.iter().any(|a| a == "--no-opt");
-    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    // --output-mode M: the chain gains the decision circuit's levels and
+    // the Galois set its tournament rotations (DESIGN.md S20), so this
+    // tenant's requests can ask for encrypted decisions
+    let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    apply_decision_flags(&mut opts, mode, preset, bound);
     let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
     std::fs::create_dir_all(&out_dir)?;
     use crate::wire::WireSerialize;
@@ -301,8 +386,8 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     write_secret_file(&client_path, &client_bytes)?;
     std::fs::write(&eval_path, &eval_bytes)?;
     println!(
-        "variant={variant} galois_keys={} client_key={} ({} bytes, SECRET — keep local) \
-         eval_keys={} ({} bytes, ship to server)",
+        "variant={variant} output_mode={mode} galois_keys={} client_key={} ({} bytes, \
+         SECRET — keep local) eval_keys={} ({} bytes, ship to server)",
         key_set.keys.galois.len(),
         client_path.display(),
         client_bytes.len(),
@@ -367,6 +452,13 @@ fn cmd_encrypt(args: &[String]) -> Result<()> {
     let out = arg_value(args, "--out").unwrap_or_else(|| "wire/request.cts".into());
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    // --output-mode M stamps the requested decision mode into the bundle
+    // (DESIGN.md S20); the serving tier refuses any mode its plans were
+    // not compiled for
+    let mode = match arg_value(args, "--output-mode") {
+        Some(s) => crate::he_infer::OutputMode::parse(&s)?,
+        None => crate::he_infer::OutputMode::Logits,
+    };
     let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
     // mix per-invocation entropy: two encrypts from the same persisted
     // RNG state (concurrent runs, a restored backup) would otherwise
@@ -389,17 +481,19 @@ fn cmd_encrypt(args: &[String]) -> Result<()> {
         client.encrypt_request_batch(&clips)?
     } else {
         client.encrypt_request(x)?
-    };
+    }
+    .with_mode(mode);
     // persist the advanced RNG state too (defense in depth)
     write_secret_file(Path::new(&key_path), &client.to_bytes())?;
     let bytes = bundle.to_bytes();
     ensure_parent_dir(Path::new(&out))?;
     std::fs::write(Path::new(&out), &bytes)?;
     println!(
-        "variant={} ciphertexts={} batch={} wrote {out} ({} bytes)",
+        "variant={} ciphertexts={} batch={} output_mode={} wrote {out} ({} bytes)",
         client.variant,
         bundle.cts.len(),
         bundle.batch,
+        bundle.mode,
         bytes.len()
     );
     Ok(())
@@ -452,6 +546,60 @@ fn cmd_decrypt_logits(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `decrypt-logits`' decision-mode sibling (DESIGN.md S20): open a
+/// decision-mode response ciphertext and print the per-clip decision.
+/// The mode comes from `--output-mode` or the request bundle
+/// (`--request`, which carries it since wire v3) — when both are given
+/// they must agree, like `--batch`.
+fn cmd_decrypt_decision(args: &[String]) -> Result<()> {
+    use crate::wire::WireSerialize;
+    let key_path = arg_value(args, "--key")
+        .ok_or_else(|| anyhow::anyhow!("decrypt-decision requires --key <client key file>"))?;
+    let in_path = arg_value(args, "--in").unwrap_or_else(|| "wire/response.ct".into());
+    let mut batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
+    anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let mut mode = match arg_value(args, "--output-mode") {
+        Some(s) => Some(crate::he_infer::OutputMode::parse(&s)?),
+        None => None,
+    };
+    if let Some(req_path) = arg_value(args, "--request") {
+        let bundle = crate::wire::CtBundle::from_bytes(&std::fs::read(Path::new(&req_path))?)?;
+        if args.iter().any(|a| a == "--batch") {
+            anyhow::ensure!(
+                batch == bundle.batch,
+                "--batch {batch} disagrees with the request bundle's slot-batch \
+                 size {} ({req_path})",
+                bundle.batch
+            );
+        }
+        batch = bundle.batch;
+        match mode {
+            Some(m) => anyhow::ensure!(
+                m == bundle.mode,
+                "--output-mode {m} disagrees with the request bundle's mode {} ({req_path})",
+                bundle.mode
+            ),
+            None => mode = Some(bundle.mode),
+        }
+    }
+    let mode = mode.ok_or_else(|| {
+        anyhow::anyhow!(
+            "decrypt-decision needs the response's output mode: pass \
+             --output-mode MODE or --request <request.cts> (the bundle \
+             carries the mode it asked for)"
+        )
+    })?;
+    let client = crate::wire::ClientKeys::from_bytes(&std::fs::read(Path::new(&key_path))?)?;
+    let ct = crate::ckks::Ciphertext::from_bytes(&std::fs::read(Path::new(&in_path))?)?;
+    for (b, decision) in client.decrypt_decision_batch(&ct, batch, mode)?.iter().enumerate() {
+        println!(
+            "variant={} clip={b}/{batch} output_mode={mode} decision={decision}",
+            client.variant
+        );
+    }
+    Ok(())
+}
+
 /// Shared `--tier he-wire` executor flags, parsed and validated before
 /// any artifact or socket work so flag errors stay fast and clean.
 struct WireServeFlags {
@@ -460,6 +608,9 @@ struct WireServeFlags {
     limb_threads: usize,
     capacity: usize,
     optimize: bool,
+    mode: crate::he_infer::OutputMode,
+    preset: crate::he_infer::SgnPreset,
+    bound: f64,
 }
 
 fn wire_serve_flags(args: &[String]) -> Result<WireServeFlags> {
@@ -470,12 +621,16 @@ fn wire_serve_flags(args: &[String]) -> Result<WireServeFlags> {
         "--batch does not apply to --tier he-wire: the slot-batch size \
          travels in the request bundle (use `encrypt --batch B`)"
     );
+    let (mode, preset, bound) = decision_flags(args)?;
     Ok(WireServeFlags {
         workers: arg_value(args, "--workers").unwrap_or_else(|| "2".into()).parse()?,
         threads: arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?,
         limb_threads: arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?,
         capacity: arg_value(args, "--registry-capacity").unwrap_or_else(|| "64".into()).parse()?,
         optimize: !args.iter().any(|a| a == "--no-opt"),
+        mode,
+        preset,
+        bound,
     })
 }
 
@@ -541,7 +696,8 @@ fn find_unique_file(dir: &Path, prefix: &str, suffix: &str) -> Result<std::path:
 /// and ciphertexts — no secret key, no plaintext clip.
 fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
     use crate::wire::WireSerialize;
-    let WireServeFlags { workers, threads, limb_threads, capacity, optimize } = flags;
+    let WireServeFlags { workers, threads, limb_threads, capacity, optimize, mode, preset, bound } =
+        flags;
     let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "cli-tenant".into());
     // --dir D fills in the conventional names (keygen's eval_nl*.keys,
     // encrypt's request.cts); explicit flags override file-by-file
@@ -591,6 +747,9 @@ fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
     // tenant keys cover the same rotation set either way (the optimizer
     // never adds or drops a distinct step), so --no-opt is safe here
     executor.set_optimize(optimize);
+    // --output-mode M: the serving plans append the decision circuit and
+    // any request for a different mode is refused typed (DESIGN.md S20)
+    executor.set_output_mode(mode, preset, bound);
     let key_set = crate::wire::EvalKeySet::from_bytes(&std::fs::read(eval_keys)?)?;
     let variant = key_set.variant.clone();
     let tenant_params = key_set.params.clone();
@@ -612,8 +771,11 @@ fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
     let t0 = std::time::Instant::now();
     let hash = Some(bundle.params_hash);
     let batch = bundle.batch;
-    let resp =
-        coord.infer_blocking_encrypted(tenant, Some(variant), bundle.cts, hash, batch, None)?;
+    // the bundle's stamped mode travels with the request; the executor
+    // refuses it typed if the serving plans were compiled for another
+    let req_mode = bundle.mode;
+    let resp = coord
+        .infer_blocking_encrypted(tenant, Some(variant), bundle.cts, hash, batch, req_mode, None)?;
     if let Some(err) = resp.error {
         coord.shutdown();
         anyhow::bail!("encrypted request failed: {err}");
@@ -623,7 +785,8 @@ fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
     ensure_parent_dir(response)?;
     std::fs::write(response, &bytes)?;
     println!(
-        "served variant={} queue={:?} exec={:?} wall={:?} → wrote {} ({} bytes)",
+        "served variant={} output_mode={req_mode} queue={:?} exec={:?} wall={:?} → wrote {} \
+         ({} bytes)",
         resp.variant,
         resp.queue,
         resp.exec,
@@ -640,7 +803,8 @@ fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
 /// and serve until killed. Tenants register their own eval keys over the
 /// socket, so no `--eval-keys`/`--tenant` here.
 fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> Result<()> {
-    let WireServeFlags { workers, threads, limb_threads, capacity, optimize } = flags;
+    let WireServeFlags { workers, threads, limb_threads, capacity, optimize, mode, preset, bound } =
+        flags;
     // net knobs, validated before artifact loading
     let read_timeout_ms: u64 =
         arg_value(args, "--read-timeout-ms").unwrap_or_else(|| "30000".into()).parse()?;
@@ -662,6 +826,7 @@ fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> 
         metrics.clone(),
     )?;
     executor.set_optimize(optimize);
+    executor.set_output_mode(mode, preset, bound);
     let executor = std::sync::Arc::new(executor);
     println!("variants:");
     for v in router.variants() {
@@ -690,8 +855,9 @@ fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> 
     };
     let server = crate::wire::net::NetServer::bind(addr, backend, metrics.clone(), cfg)?;
     println!(
-        "listening on {} ({workers} workers, {threads} plan-exec threads; \
-         tenants register eval keys over the socket; ctrl-c to stop)",
+        "listening on {} ({workers} workers, {threads} plan-exec threads, \
+         output_mode={mode}; tenants register eval keys over the socket; \
+         ctrl-c to stop)",
         server.local_addr()
     );
     loop {
@@ -715,12 +881,16 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
     let input =
         arg_value(args, "--input").unwrap_or_else(|| "artifacts/example_input.lgt".into());
     let optimize = !args.iter().any(|a| a == "--no-opt");
+    // validate the decision flags before keygen/socket work; the same
+    // mode must be passed to the server's `serve --output-mode`
+    let (mode, preset, bound) = decision_flags(args)?;
     let variant = format!("lingcn-nl{nl}");
     let model = crate::stgcn::StgcnModel::load(
         &Path::new("artifacts").join(format!("model_nl{nl}.lgt")),
         crate::graph::Graph::ntu_rgbd(),
     )?;
-    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    apply_decision_flags(&mut opts, mode, preset, bound);
     let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
     let ex = crate::util::tensorio::TensorFile::load(Path::new(&input))?;
     let x = &ex.get("x")?.data;
@@ -740,15 +910,31 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
         client.encrypt_request_batch(&clips)?
     } else {
         client.encrypt_request(x)?
-    };
+    }
+    .with_mode(mode);
     let reply = conn.infer(Some(&variant), &bundle)?;
     let wall = t0.elapsed();
-    for (b, logits) in client.decrypt_logits_batch(&reply.ct_logits, batch)?.iter().enumerate() {
-        let arg = crate::util::argmax(logits);
-        println!(
-            "variant={} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}",
-            reply.variant
-        );
+    if matches!(mode, crate::he_infer::OutputMode::Logits) {
+        for (b, logits) in
+            client.decrypt_logits_batch(&reply.ct_logits, batch)?.iter().enumerate()
+        {
+            let arg = crate::util::argmax(logits);
+            println!(
+                "variant={} clip={b}/{batch} predicted_class={arg}\nlogits={logits:?}",
+                reply.variant
+            );
+        }
+    } else {
+        // decision mode: only the decision comes back — the raw logits
+        // never leave the server's decision circuit (DESIGN.md S20)
+        for (b, decision) in
+            client.decrypt_decision_batch(&reply.ct_logits, batch, mode)?.iter().enumerate()
+        {
+            println!(
+                "variant={} clip={b}/{batch} output_mode={mode} decision={decision}",
+                reply.variant
+            );
+        }
     }
     println!(
         "remote={addr} register={t_registered:?} queue={:?} exec={:?} wall={wall:?} \
@@ -807,6 +993,7 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     let threads: usize = arg_value(args, "--threads").unwrap_or_else(|| "1".into()).parse()?;
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let optimize = !args.iter().any(|a| a == "--no-opt");
+    let (mode, preset, bound) = decision_flags(args)?;
     let dir = Path::new("artifacts");
     let model = crate::stgcn::StgcnModel::load(
         &dir.join(format!("model_nl{nl}.lgt")),
@@ -816,11 +1003,15 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         n: 1 << 11,
         q0_bits: 50,
         scale_bits: 33,
-        levels: 2 * model.layers.len() + 2 + nl,
+        levels: 2 * model.layers.len()
+            + 2
+            + nl
+            + crate::he_infer::sgn::decision_levels(mode, preset, model.num_classes()),
         special_bits: 55,
         allow_insecure: true,
     };
-    let opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
+    apply_decision_flags(&mut opts, mode, preset, bound);
     let sess = crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
     if profile_runs > 0 {
         let ex = crate::util::tensorio::TensorFile::load(&dir.join("example_input.lgt"))?;
@@ -876,6 +1067,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let batch: usize = arg_value(args, "--batch").unwrap_or_else(|| "1".into()).parse()?;
     let optimize = !args.iter().any(|a| a == "--no-opt");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
+    let (mode, preset, bound) = decision_flags(args)?;
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
     // limb fan-out composes multiplicatively with the plan-executor pool
@@ -890,6 +1082,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "plaintext" => {
             anyhow::ensure!(batch <= 1, "--batch is a slot-packing knob of --tier he");
             anyhow::ensure!(optimize, "--no-opt is a HePlan knob of --tier he");
+            anyhow::ensure!(
+                matches!(mode, crate::he_infer::OutputMode::Logits),
+                "--output-mode is a decision-circuit knob of --tier he|he-wire \
+                 (DESIGN.md S20)"
+            );
             let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
             (router, std::sync::Arc::new(exec))
         }
@@ -901,6 +1098,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 batch,
             )?;
             exec.set_optimize(optimize);
+            exec.set_output_mode(mode, preset, bound);
             exec.set_metrics(metrics.clone());
             (router, std::sync::Arc::new(exec))
         }

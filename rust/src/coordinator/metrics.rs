@@ -61,6 +61,15 @@ pub struct Metrics {
     /// quota, malformed frames) — connection-level rejects are counted in
     /// `net_conns_rejected` instead.
     pub net_requests_rejected: AtomicU64,
+    /// Composite sign-polynomial stages evaluated by decision-mode
+    /// requests (he_infer::sgn; DESIGN.md S20).
+    pub sign_stages: AtomicU64,
+    /// Requests served under `--output-mode argmax`.
+    pub decisions_argmax: AtomicU64,
+    /// Requests served under `--output-mode topk:K`.
+    pub decisions_topk: AtomicU64,
+    /// Requests served under `--output-mode threshold:...`.
+    pub decisions_threshold: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -93,6 +102,10 @@ impl Default for Metrics {
             net_bytes_in: AtomicU64::new(0),
             net_bytes_out: AtomicU64::new(0),
             net_requests_rejected: AtomicU64::new(0),
+            sign_stages: AtomicU64::new(0),
+            decisions_argmax: AtomicU64::new(0),
+            decisions_topk: AtomicU64::new(0),
+            decisions_threshold: AtomicU64::new(0),
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
         }
@@ -185,7 +198,8 @@ impl Metrics {
             "submitted={} completed={} failed={} degraded={} plan_cache={}h/{}m \
              key_registry={}h/{}m/{}e slot_batch={}j/{}r fill={:.2} occ={:.2} \
              opt={}ops/{}rots net_conns={}a/{}r/{}live net_io={}in/{}out \
-             net_req_rej={} mean={:?} p50≤{:?} p99≤{:?}",
+             net_req_rej={} decisions={}am/{}tk/{}th sign_stages={} \
+             mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -207,6 +221,10 @@ impl Metrics {
             self.net_bytes_in.load(Ordering::Relaxed),
             self.net_bytes_out.load(Ordering::Relaxed),
             self.net_requests_rejected.load(Ordering::Relaxed),
+            self.decisions_argmax.load(Ordering::Relaxed),
+            self.decisions_topk.load(Ordering::Relaxed),
+            self.decisions_threshold.load(Ordering::Relaxed),
+            self.sign_stages.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
@@ -234,7 +252,9 @@ impl Metrics {
              \"slots_capacity\":{},\"opt_ops_removed\":{},\"opt_rots_grouped\":{},\
              \"net_conns_accepted\":{},\"net_conns_rejected\":{},\
              \"net_conns_active\":{},\"net_bytes_in\":{},\"net_bytes_out\":{},\
-             \"net_requests_rejected\":{}}}",
+             \"net_requests_rejected\":{},\"sign_stages\":{},\
+             \"decisions_argmax\":{},\"decisions_topk\":{},\
+             \"decisions_threshold\":{}}}",
             c(&self.submitted),
             c(&self.completed),
             c(&self.failed),
@@ -256,6 +276,10 @@ impl Metrics {
             c(&self.net_bytes_in),
             c(&self.net_bytes_out),
             c(&self.net_requests_rejected),
+            c(&self.sign_stages),
+            c(&self.decisions_argmax),
+            c(&self.decisions_topk),
+            c(&self.decisions_threshold),
         ));
         out.push_str(",\"latency\":{\"buckets\":[");
         for (i, b) in self.latency_buckets.iter().enumerate() {
@@ -369,6 +393,26 @@ mod tests {
         assert_eq!(s.matches('{').count(), s.matches('}').count(), "{s}");
         assert_eq!(s.matches('[').count(), 1, "{s}");
         assert_eq!(s.matches(']').count(), 1, "{s}");
+    }
+
+    #[test]
+    fn test_decision_counters_surface_in_summary_and_snapshot() {
+        let m = Metrics::default();
+        m.decisions_argmax.fetch_add(4, Ordering::Relaxed);
+        m.decisions_topk.fetch_add(2, Ordering::Relaxed);
+        m.decisions_threshold.fetch_add(1, Ordering::Relaxed);
+        m.sign_stages.fetch_add(12, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("decisions=4am/2tk/1th"), "summary: {s}");
+        assert!(s.contains("sign_stages=12"), "summary: {s}");
+        let j = m.snapshot();
+        assert!(j.contains("\"sign_stages\":12"), "{j}");
+        assert!(j.contains("\"decisions_argmax\":4"), "{j}");
+        assert!(j.contains("\"decisions_topk\":2"), "{j}");
+        assert!(j.contains("\"decisions_threshold\":1"), "{j}");
+        // the scalar counters keep the snapshot's single-array shape
+        assert_eq!(j.matches('[').count(), 1, "{j}");
+        assert_eq!(j.matches(']').count(), 1, "{j}");
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::batcher::{Batcher, Pending};
 use super::metrics::Metrics;
 use super::router::Router;
 use crate::ckks::Ciphertext;
+use crate::he_infer::OutputMode;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,9 +53,14 @@ pub trait InferenceExecutor: Send + Sync + 'static {
     /// ciphertexts error instead of decoding as silent garbage. `batch`
     /// is the bundle's claimed slot-batch size (client-side packing);
     /// the wire tier validates it at ingress — a forged value errors,
-    /// never panics or mis-slices logits. Only the wire tier implements
-    /// this; every other tier rejects so an encrypted request can never
-    /// silently fall through to a tier that would need plaintext.
+    /// never panics or mis-slices logits. `mode` is the output mode the
+    /// client requested (`CtBundle::mode`; DESIGN.md S20) — the wire tier
+    /// rejects a mode its registered plan was not compiled for rather
+    /// than silently answering with a different shape. Only the wire tier
+    /// implements this; every other tier rejects so an encrypted request
+    /// can never silently fall through to a tier that would need
+    /// plaintext.
+    #[allow(clippy::too_many_arguments)]
     fn infer_encrypted(
         &self,
         _variant: &str,
@@ -62,6 +68,7 @@ pub trait InferenceExecutor: Send + Sync + 'static {
         _cts: &[Ciphertext],
         _params_hash: Option<u64>,
         _batch: usize,
+        _mode: OutputMode,
     ) -> Result<Ciphertext> {
         anyhow::bail!(
             "this executor tier does not accept encrypted-wire requests \
@@ -120,6 +127,9 @@ pub struct EncryptedRequest {
     /// distinct clips the tenant packed into the ciphertexts' block
     /// copies. Validated at the executor's ingress.
     pub batch: usize,
+    /// Output mode the client requested (`CtBundle::mode`). The wire
+    /// executor rejects a mode its plan was not compiled for.
+    pub mode: OutputMode,
     pub latency_budget_s: Option<f64>,
     pub resp: SyncSender<EncryptedResponse>,
 }
@@ -154,6 +164,7 @@ enum Job {
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
         resp: SyncSender<EncryptedResponse>,
     },
 }
@@ -284,6 +295,7 @@ impl Coordinator {
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
         latency_budget_s: Option<f64>,
     ) -> Result<EncryptedResponse> {
         let (tx, rx) = mpsc::sync_channel(1);
@@ -293,6 +305,7 @@ impl Coordinator {
             cts,
             params_hash,
             batch,
+            mode,
             latency_budget_s,
             resp: tx,
         })?;
@@ -380,6 +393,7 @@ fn leader_loop(
                                 cts: req.cts,
                                 params_hash: req.params_hash,
                                 batch: req.batch,
+                                mode: req.mode,
                                 resp: req.resp,
                             },
                         )
@@ -565,9 +579,9 @@ fn worker_loop(
                     });
                     let _ = resp.send(out);
                 }
-                Job::Encrypted { tenant, cts, params_hash, batch: req_batch, resp } => {
-                    let result =
-                        executor.infer_encrypted(&variant, &tenant, &cts, params_hash, req_batch);
+                Job::Encrypted { tenant, cts, params_hash, batch: req_batch, mode, resp } => {
+                    let result = executor
+                        .infer_encrypted(&variant, &tenant, &cts, params_hash, req_batch, mode);
                     let exec = t0.elapsed();
                     // client-side slot batching: every served bundle is
                     // one job with `req_batch` filled copies out of the
@@ -715,9 +729,11 @@ mod tests {
                 cts: &[Ciphertext],
                 _params_hash: Option<u64>,
                 batch: usize,
+                mode: OutputMode,
             ) -> Result<Ciphertext> {
                 anyhow::ensure!(tenant == "alice", "unknown tenant");
                 anyhow::ensure!(batch == 1, "unexpected batch");
+                anyhow::ensure!(mode == OutputMode::Logits, "unexpected mode");
                 Ok(cts[0].clone())
             }
         }
@@ -737,6 +753,7 @@ mod tests {
                 vec![mock_ct(7)],
                 None,
                 1,
+                OutputMode::Logits,
                 None,
             )
             .unwrap();
@@ -745,7 +762,15 @@ mod tests {
         assert_eq!(r.ct_logits.unwrap().c0.limbs[0][0], 7);
         // unknown tenant surfaces as an error response, not a hang
         let r2 = c
-            .infer_blocking_encrypted("bob".into(), None, vec![mock_ct(1)], None, 1, None)
+            .infer_blocking_encrypted(
+                "bob".into(),
+                None,
+                vec![mock_ct(1)],
+                None,
+                1,
+                OutputMode::Logits,
+                None,
+            )
             .unwrap();
         assert!(r2.error.is_some());
         // plaintext clip on this tier errors through the same pipeline
@@ -762,7 +787,15 @@ mod tests {
             Duration::from_millis(1),
         );
         let r4 = c2
-            .infer_blocking_encrypted("alice".into(), None, vec![mock_ct(2)], None, 1, None)
+            .infer_blocking_encrypted(
+                "alice".into(),
+                None,
+                vec![mock_ct(2)],
+                None,
+                1,
+                OutputMode::Logits,
+                None,
+            )
             .unwrap();
         assert!(r4.error.unwrap().contains("does not accept encrypted"));
         c2.shutdown();

@@ -29,6 +29,7 @@
 //!   the legacy replicated path.
 
 use super::backend::HeBackend;
+use super::sgn::{self, DecisionCircuit, OutputMode, SgnPreset};
 use crate::ama::AmaLayout;
 use crate::stgcn::{Activation, StgcnLayer, StgcnModel};
 use anyhow::{bail, ensure, Result};
@@ -48,6 +49,15 @@ pub struct HeStgcn<'m> {
     /// channel-diagonal tap to its block-closed two-rotation form and
     /// restricts every mask to the first `batch` copies.
     pub batch: usize,
+    /// What the forward pass returns: raw logits (default) or an
+    /// encrypted decision circuit appended after `pool_fc`
+    /// (DESIGN.md S20).
+    pub output_mode: OutputMode,
+    /// Composite-sign precision preset the decision circuits evaluate.
+    pub sgn_preset: SgnPreset,
+    /// Logit bound B for decision normalization (`|logit| ≤ B` is the
+    /// caller's contract; the decision resolution is δ·2B).
+    pub logit_bound: f64,
 }
 
 /// Cyclically rotate a plaintext slot vector right by `k` (mask
@@ -81,17 +91,29 @@ impl<'m> HeStgcn<'m> {
             use_bsgs: true,
             fuse_activations: true,
             batch: 1,
+            output_mode: OutputMode::Logits,
+            sgn_preset: SgnPreset::Fast,
+            logit_bound: sgn::DEFAULT_LOGIT_BOUND,
         })
     }
 
     /// Rotation steps whose Galois keys the CKKS engine must hold
     /// (layout over-approximation; compiled plans report the exact set).
+    /// Decision modes add the tournament's right rotations.
     pub fn required_rotations(&self) -> Vec<usize> {
-        if self.block_closed() {
+        let mut steps = if self.block_closed() {
             self.layout.rotation_steps_batched(self.model.k)
         } else {
             self.layout.rotation_steps(self.model.k)
-        }
+        };
+        steps.extend(sgn::decision_rotations(
+            self.output_mode,
+            &self.layout,
+            self.model.num_classes(),
+        ));
+        steps.sort_unstable();
+        steps.dedup();
+        steps
     }
 
     /// Whether the walk runs in the block-closed (batched) form.
@@ -110,11 +132,23 @@ impl<'m> HeStgcn<'m> {
         }
     }
 
-    /// Multiplicative depth this engine consumes (must be ≤ params levels).
+    /// Multiplicative depth this engine consumes (must be ≤ params
+    /// levels): the network's own budget plus the statically accounted
+    /// decision-circuit levels of the output mode. Also validates the
+    /// (mode, preset, classes) combination so infeasible shapes fail
+    /// typed before any HE work.
     pub fn levels_needed(&self) -> Result<usize> {
         let act_cost = if self.fuse_activations { 1 } else { 2 };
         let nl = self.model.effective_nonlinear_layers()?;
-        Ok(2 * self.model.layers.len() + 2 + act_cost * nl)
+        Ok(2 * self.model.layers.len() + 2 + act_cost * nl + self.decision_levels()?)
+    }
+
+    /// Levels the output mode's decision circuit consumes after the
+    /// logits (0 for `Logits`), validating static feasibility.
+    pub fn decision_levels(&self) -> Result<usize> {
+        let classes = self.model.num_classes();
+        sgn::check_mode(self.output_mode, self.sgn_preset, classes)?;
+        Ok(sgn::decision_levels(self.output_mode, self.sgn_preset, classes))
     }
 
     /// The fused pre-scale α for a node's activation (1.0 when no fusion
@@ -156,7 +190,19 @@ impl<'m> HeStgcn<'m> {
             cts = self.activation(be, &layer.act2, &cts)?;
             c_cur = layer.c_out;
         }
-        self.pool_fc(be, &cts, c_cur)
+        let logits = self.pool_fc(be, &cts, c_cur)?;
+        if matches!(self.output_mode, OutputMode::Logits) {
+            return Ok(logits);
+        }
+        let circuit = DecisionCircuit {
+            layout: self.layout,
+            mb: self.mask_copies(),
+            classes: self.model.num_classes(),
+            preset: self.sgn_preset,
+            bound: self.logit_bound,
+            mode: self.output_mode,
+        };
+        circuit.apply(be, &logits)
     }
 
     /// GCNConv: hoisted channel-diagonal rotations per input node, then per
@@ -599,6 +645,49 @@ mod tests {
         let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
         let out = he.forward(&be, &input).unwrap();
         assert_eq!(be.level(&out), 0, "must land exactly at level 0");
+    }
+
+    #[test]
+    fn test_counting_forward_with_decision_modes_consumes_exact_levels() {
+        use crate::he_infer::sgn::{OutputMode, SgnPreset};
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        for (mode, preset) in [
+            (OutputMode::Argmax, SgnPreset::Fast),
+            (OutputMode::TopK(1), SgnPreset::Balanced),
+            (OutputMode::threshold(1, 0.25), SgnPreset::Precise),
+        ] {
+            let mut he = HeStgcn::new(&m, layout).unwrap();
+            he.output_mode = mode;
+            he.sgn_preset = preset;
+            let need = he.levels_needed().unwrap();
+            assert!(need > 10, "decision modes must deepen the plan ({mode})");
+            let be = CountingBackend::new(need, 33);
+            let input: Vec<_> = (0..m.v()).map(|_| be.fresh()).collect();
+            let out = he.forward(&be, &input).unwrap();
+            assert_eq!(be.level(&out), 0, "{mode} must land exactly at level 0");
+        }
+    }
+
+    #[test]
+    fn test_decision_rotations_are_keyed() {
+        use crate::he_infer::sgn::OutputMode;
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let mut he = HeStgcn::new(&m, layout).unwrap();
+        let base: std::collections::BTreeSet<usize> =
+            he.required_rotations().into_iter().collect();
+        he.output_mode = OutputMode::Argmax;
+        let with: std::collections::BTreeSet<usize> =
+            he.required_rotations().into_iter().collect();
+        assert!(with.is_superset(&base));
+        for d in 1..m.num_classes() {
+            assert!(
+                with.contains(&(layout.slots - d * layout.t)),
+                "tournament right rotation {} missing",
+                layout.slots - d * layout.t
+            );
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@
 use super::backend::HeBackend;
 use super::plan::{compile, HeOp, HePlan, PlanChain, PlanOptions};
 use super::profile::{self, PlanProfile, RequestSample};
+use super::sgn::{self, OutputMode, SgnPreset};
 use crate::ama::{pack_clip, pack_clip_batch, AmaLayout};
 use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, EvalEngine, Evaluator, Plaintext};
 use crate::coordinator::{InferenceExecutor, Metrics};
@@ -421,6 +422,13 @@ pub struct PlanKey {
     /// Whether the optimizer pipeline ran (optimized and raw plans are
     /// different op lists; DESIGN.md S17).
     pub optimize: bool,
+    /// Output mode the plan's decision circuit computes (DESIGN.md S20) —
+    /// a `Logits` plan and an `Argmax` plan are different op lists.
+    pub output_mode: OutputMode,
+    /// Sign preset of the decision circuit (depth and masks differ).
+    pub sgn_preset: SgnPreset,
+    /// Logit bound B as raw f64 bits (the normalization masks bake it in).
+    pub logit_bound_bits: u64,
 }
 
 impl PlanKey {
@@ -434,6 +442,9 @@ impl PlanKey {
             fuse_activations: opts.fuse_activations,
             batch: opts.batch,
             optimize: opts.optimize,
+            output_mode: opts.output_mode,
+            sgn_preset: opts.sgn_preset,
+            logit_bound_bits: opts.logit_bound_bits,
         }
     }
 }
@@ -497,7 +508,10 @@ pub fn plan_for(
             if p.chain == *chain
                 && p.layout == layout
                 && p.batch == opts.batch
-                && p.optimized == opts.optimize =>
+                && p.optimized == opts.optimize
+                && p.output_mode == opts.output_mode
+                && p.sgn_preset == opts.sgn_preset
+                && p.logit_bound.to_bits() == opts.logit_bound_bits =>
         {
             Ok((p, true))
         }
@@ -556,6 +570,9 @@ pub fn session_geometry(model: &StgcnModel, opts: PlanOptions) -> Result<(AmaLay
     let mut probe = super::HeStgcn::new(model, layout)?;
     probe.use_bsgs = opts.use_bsgs;
     probe.fuse_activations = opts.fuse_activations;
+    probe.output_mode = opts.output_mode;
+    probe.sgn_preset = opts.sgn_preset;
+    probe.logit_bound = opts.logit_bound();
     let levels = probe.levels_needed()?;
     Ok((layout, params_for(model, levels)))
 }
@@ -782,6 +799,42 @@ impl HeExecutor {
         self.metrics = Some(metrics);
     }
 
+    /// Select the server-side output mode (DESIGN.md S20): what the
+    /// decision circuit computes from the logits before responding. Call
+    /// before the first request — like the optimizer flag, the mode triple
+    /// is part of the plan-cache identity, so flipping it later just
+    /// compiles a second family of plans.
+    pub fn set_output_mode(&mut self, mode: OutputMode, preset: SgnPreset, bound: f64) {
+        self.opts.output_mode = mode;
+        self.opts.sgn_preset = preset;
+        self.opts.set_logit_bound(bound);
+    }
+
+    /// Count one decision-mode request: the per-mode request counter and
+    /// the composite-stage evaluations its circuit performed (`Logits`
+    /// requests touch neither).
+    fn count_decision(&self, session: &HeSession) {
+        let Some(m) = &self.metrics else { return };
+        let mode = self.opts.output_mode;
+        let stages =
+            sgn::sign_stage_count(mode, self.opts.sgn_preset, session.model.num_classes());
+        if stages > 0 {
+            m.sign_stages.fetch_add(stages, Ordering::Relaxed);
+        }
+        match mode {
+            OutputMode::Logits => {}
+            OutputMode::Argmax => {
+                m.decisions_argmax.fetch_add(1, Ordering::Relaxed);
+            }
+            OutputMode::TopK(_) => {
+                m.decisions_topk.fetch_add(1, Ordering::Relaxed);
+            }
+            OutputMode::Threshold { .. } => {
+                m.decisions_threshold.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
     fn count_cache(&self, session: &HeSession, hit: bool) {
         let c = &session.engine.eval.counters;
         if hit {
@@ -841,12 +894,14 @@ impl InferenceExecutor for HeExecutor {
     fn infer(&self, variant: &str, clip: &[f64]) -> Result<Vec<f64>> {
         let (session, hit) = self.session(variant)?;
         self.count_cache(&session, hit);
+        self.count_decision(&session);
         session.infer_trusted(clip, self.threads)
     }
 
     fn infer_batch(&self, variant: &str, clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
         let (session, hit) = self.session(variant)?;
         self.count_cache(&session, hit);
+        self.count_decision(&session);
         let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
         session.infer_trusted_batch(&refs, self.threads)
     }
@@ -908,6 +963,30 @@ mod tests {
     fn clip(model: &StgcnModel) -> Vec<f64> {
         let n = model.v() * model.c_in * model.t;
         (0..n).map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0).collect()
+    }
+
+    #[test]
+    fn test_plan_cache_keys_on_output_mode() {
+        let model = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let logits_opts = PlanOptions::default();
+        let dec_opts = PlanOptions { output_mode: OutputMode::Argmax, ..Default::default() };
+        assert_ne!(
+            PlanKey::new(&model, &layout, logits_opts),
+            PlanKey::new(&model, &layout, dec_opts)
+        );
+        // a chain deep enough for the decision plan serves both compiles
+        let mut probe = super::super::HeStgcn::new(&model, layout).unwrap();
+        probe.output_mode = OutputMode::Argmax;
+        let chain = PlanChain::ideal(probe.levels_needed().unwrap(), 33);
+        let (p, _) = plan_for(None, &model, layout, &chain, logits_opts).unwrap();
+        // a cached logits plan must be stale for a decision request...
+        let (p2, cached) = plan_for(Some(p), &model, layout, &chain, dec_opts).unwrap();
+        assert!(!cached, "logits plan must not serve a decision request");
+        assert_eq!(p2.output_mode, OutputMode::Argmax);
+        // ...and the recompiled decision plan is then a hit
+        let (_, cached2) = plan_for(Some(p2), &model, layout, &chain, dec_opts).unwrap();
+        assert!(cached2);
     }
 
     #[test]

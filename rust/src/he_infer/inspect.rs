@@ -96,12 +96,15 @@ pub fn plan_json(
     let ins = inspect(plan, profile, cost)?;
     let mut out = String::with_capacity(plan.ops.len() * 96 + 1024);
     out.push_str(&format!(
-        "{{\"model_hash\":\"{:016x}\",\"batch\":{},\"optimized\":{},\"levels_needed\":{},\
+        "{{\"model_hash\":\"{:016x}\",\"batch\":{},\"optimized\":{},\
+         \"output_mode\":\"{}\",\"sgn_preset\":\"{}\",\"levels_needed\":{},\
          \"n_inputs\":{},\"n_regs\":{},\"output\":{},\"slots\":{},\"n_masks\":{},\
          \"n_groups\":{},\"n_ops\":{},\"n_waves\":{}",
         plan.model_hash,
         plan.batch,
         plan.optimized,
+        crate::util::json_escape(&plan.output_mode.to_string()),
+        plan.sgn_preset.name(),
         plan.levels_needed,
         plan.n_inputs,
         plan.n_regs,
@@ -257,11 +260,13 @@ pub fn plan_text(
     let ins = inspect(plan, profile, cost)?;
     let mut out = String::new();
     out.push_str(&format!(
-        "plan model_hash={:016x} batch={} optimized={} levels={} ops={} waves={} \
-         masks={} groups={} regs={} (inputs {})\n",
+        "plan model_hash={:016x} batch={} optimized={} mode={} preset={} levels={} \
+         ops={} waves={} masks={} groups={} regs={} (inputs {})\n",
         plan.model_hash,
         plan.batch,
         plan.optimized,
+        plan.output_mode,
+        plan.sgn_preset.name(),
         plan.levels_needed,
         plan.ops.len(),
         plan.waves.len(),
@@ -409,7 +414,10 @@ pub fn plan_dot(plan: &HePlan) -> Result<String> {
             out.push_str(&format!("  {} -> op{oi};\n", src_node(b)));
         }
     }
-    out.push_str("  out [shape=diamond,label=\"logits\"];\n");
+    out.push_str(&format!(
+        "  out [shape=diamond,label=\"{}\"];\n",
+        plan.output_mode.name()
+    ));
     out.push_str(&format!("  {} -> out;\n}}\n", src_node(plan.output)));
     Ok(out)
 }
@@ -463,6 +471,7 @@ mod tests {
         let plan = tiny_plan(true);
         let text = plan_text(&plan, None, None).unwrap();
         assert!(text.contains("plan model_hash="), "{text}");
+        assert!(text.contains("mode=logits preset=fast"), "{text}");
         assert!(text.contains("rotg") || text.contains("rot"), "{text}");
         let dot = plan_dot(&plan).unwrap();
         assert!(dot.starts_with("digraph heplan {"));

@@ -17,6 +17,7 @@ pub mod level_plan;
 pub mod opt;
 pub mod plan;
 pub mod profile;
+pub mod sgn;
 
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
 pub use engine::HeStgcn;
@@ -26,6 +27,7 @@ pub use exec::{
 pub use level_plan::{HePlanParams, Method, VariantShape};
 pub use plan::{compile, HeOp, HePlan, OpState, PassStat, PlanChain, PlanOptions};
 pub use profile::{set_profiling, PlanProfile};
+pub use sgn::{decide, Decision, DecisionCircuit, OutputMode, SgnPreset};
 
 use crate::ama::{encrypt_clip, encrypt_clip_batch, AmaLayout};
 use crate::ckks::{CkksEngine, CkksParams};
@@ -196,6 +198,29 @@ impl PrivateInferenceSession {
         let slots = self.engine.decrypt(ct);
         (0..self.plan.batch)
             .map(|b| self.plan.extract_logits_clip(&slots, b))
+            .collect()
+    }
+
+    /// Client side: decrypt and read the decision of a decision-mode
+    /// plan's response (clip 0; `decrypt-logits`' `decrypt-decision`
+    /// sibling). On a `Logits` plan this passes the raw scores through.
+    pub fn decrypt_decision(
+        &self,
+        model: &StgcnModel,
+        ct: &crate::ckks::Ciphertext,
+    ) -> Decision {
+        sgn::decide(&self.decrypt_logits(model, ct), self.plan.output_mode)
+    }
+
+    /// Client side: per-clip decisions of a slot-batched response.
+    pub fn decrypt_decision_batch(
+        &self,
+        model: &StgcnModel,
+        ct: &crate::ckks::Ciphertext,
+    ) -> Vec<Decision> {
+        self.decrypt_logits_batch(model, ct)
+            .into_iter()
+            .map(|v| sgn::decide(&v, self.plan.output_mode))
             .collect()
     }
 }

@@ -21,6 +21,7 @@
 
 use super::backend::{HeBackend, MaskThunk};
 use super::engine::HeStgcn;
+use super::sgn::{self, OutputMode, SgnPreset};
 use crate::ama::AmaLayout;
 use crate::ckks::{CkksContext, OpCounters, OpCounts};
 use crate::stgcn::StgcnModel;
@@ -223,6 +224,16 @@ pub struct HePlan {
     /// 1 = the legacy replicated layout; >1 = block-closed masks/taps,
     /// restricted to the first `batch` copies.
     pub batch: usize,
+    /// What the plan computes from the logits before responding
+    /// (DESIGN.md S20): `Logits` is the legacy full-score path; the
+    /// decision modes bake the sign-based decision circuit into the op
+    /// list, so the output register holds indicators, not scores.
+    pub output_mode: OutputMode,
+    /// Sign preset the decision circuit was compiled with (part of plan
+    /// identity even for `Logits` plans, where it is inert).
+    pub sgn_preset: SgnPreset,
+    /// Logit bound B the decision normalization assumed (`|logit| ≤ B`).
+    pub logit_bound: f64,
     /// Whether the optimizer pipeline (`opt::optimize`) produced this
     /// plan. Part of the plan-cache identity (`PlanKey`): optimized and
     /// raw plans execute the same math but different op lists.
@@ -254,6 +265,27 @@ pub struct PlanOptions {
     /// work per counted op; `--no-opt` / `false` keeps the raw trace
     /// (the op-for-op interpreter-equivalence reference).
     pub optimize: bool,
+    /// What the server computes from the logits (DESIGN.md S20). The
+    /// decision modes append the composite-sign decision circuit to the
+    /// compiled walk and grow `levels_needed` accordingly.
+    pub output_mode: OutputMode,
+    /// Depth/precision preset for decision-mode sign chains.
+    pub sgn_preset: SgnPreset,
+    /// Logit bound B for decision normalization, stored as raw f64 bits
+    /// so `PlanOptions` (and `PlanKey`) stay `Eq + Hash`.
+    pub logit_bound_bits: u64,
+}
+
+impl PlanOptions {
+    /// The decision circuits' logit bound B as a float.
+    pub fn logit_bound(&self) -> f64 {
+        f64::from_bits(self.logit_bound_bits)
+    }
+
+    /// Set the logit bound from a float (see [`PlanOptions::logit_bound`]).
+    pub fn set_logit_bound(&mut self, b: f64) {
+        self.logit_bound_bits = b.to_bits();
+    }
 }
 
 impl Default for PlanOptions {
@@ -263,6 +295,9 @@ impl Default for PlanOptions {
             fuse_activations: true,
             batch: 1,
             optimize: true,
+            output_mode: OutputMode::Logits,
+            sgn_preset: SgnPreset::Fast,
+            logit_bound_bits: sgn::DEFAULT_LOGIT_BOUND.to_bits(),
         }
     }
 }
@@ -286,16 +321,33 @@ pub fn compile(
     he.use_bsgs = opts.use_bsgs;
     he.fuse_activations = opts.fuse_activations;
     he.batch = opts.batch;
+    he.output_mode = opts.output_mode;
+    he.sgn_preset = opts.sgn_preset;
+    he.logit_bound = opts.logit_bound();
+    // infeasible (mode, preset, classes) shapes are rejected typed inside
+    // levels_needed (via sgn::check_mode), before any chain comparison
     let levels_needed = he.levels_needed()?;
-    ensure!(
-        chain.top_level() >= levels_needed,
-        "chain depth {} below the plan's required depth {levels_needed}",
-        chain.top_level()
-    );
+    if chain.top_level() < levels_needed {
+        if matches!(opts.output_mode, OutputMode::Logits) {
+            bail!(
+                "chain depth {} below the plan's required depth {levels_needed}",
+                chain.top_level()
+            );
+        }
+        bail!(
+            "insufficient levels for output mode {}: the {} decision circuit adds {} \
+             level(s) after the logits, requiring a chain of depth {levels_needed}, but \
+             the chain only has {}",
+            opts.output_mode,
+            opts.sgn_preset.name(),
+            he.decision_levels()?,
+            chain.top_level()
+        );
+    }
     let builder = PlanBuilder::new(chain.clone(), layout.slots);
     let inputs: Vec<PlanCt> = (0..model.v()).map(|_| builder.fresh_input()).collect();
     let out = he.forward(&builder, &inputs)?;
-    let plan = builder.finish(model, layout, levels_needed, opts.batch, out)?;
+    let plan = builder.finish(model, layout, levels_needed, opts, out)?;
     if opts.optimize {
         super::opt::optimize(&plan)
     } else {
@@ -341,6 +393,21 @@ impl HePlan {
         (0..self.num_classes)
             .map(|m| slots[base + m * self.layout.t])
             .collect()
+    }
+
+    /// Read clip 0's decision out of a decrypted slot vector — the
+    /// decision-plan sibling of [`HePlan::extract_logits`]. On a `Logits`
+    /// plan this passes the raw scores through.
+    pub fn extract_decision(&self, slots: &[f64]) -> sgn::Decision {
+        self.extract_decision_clip(slots, 0)
+    }
+
+    /// Read clip `clip`'s decision (see [`HePlan::extract_decision`]):
+    /// decision plans put per-class indicators in the logits' slots, so
+    /// this reads the same slots and interprets them under the plan's
+    /// [`OutputMode`].
+    pub fn extract_decision_clip(&self, slots: &[f64], clip: usize) -> sgn::Decision {
+        sgn::decide(&self.extract_logits_clip(slots, clip), self.output_mode)
     }
 
     /// Static plan validation: SSA discipline, schedule safety (every op
@@ -585,15 +652,14 @@ impl HePlan {
 
     /// Serialize to a line-based text format (f64s as exact bit patterns).
     /// The wavefront schedule is recomputed on load, not stored. Format
-    /// v3 (DESIGN.md S17): the meta line carries the optimize flag,
-    /// `group`/`pass` lines carry the optimizer's rotation groups and
-    /// per-pass deltas, and the `end` line carries an FNV-1a checksum of
-    /// every preceding line so any corruption — including bit flips
-    /// inside mask payloads that would otherwise still parse — is
-    /// rejected on load.
+    /// v4 (DESIGN.md S20): v3's layout (meta optimize flag, `group`/`pass`
+    /// lines, FNV-1a checksummed `end` line) plus a `decision` line
+    /// carrying the output mode triple, sign preset and logit bound —
+    /// parsed only at v4, defaulted to `Logits` when absent so
+    /// hand-trimmed v4 texts still load.
     pub fn to_text(&self) -> String {
         let mut s = String::new();
-        s.push_str("heplan v3\n");
+        s.push_str("heplan v4\n");
         s.push_str(&format!(
             "layout {} {} {}\n",
             self.layout.t, self.layout.c_max, self.layout.slots
@@ -613,6 +679,14 @@ impl HePlan {
             self.batch,
             self.optimized as u8,
             self.model_hash
+        ));
+        s.push_str(&format!(
+            "decision {} {} {:016x} {} {:016x}\n",
+            self.output_mode.tag(),
+            self.output_mode.aux(),
+            self.output_mode.cutoff_bits(),
+            self.sgn_preset.tag(),
+            self.logit_bound.to_bits()
         ));
         s.push_str("counts");
         for v in self.counts.to_array() {
@@ -663,7 +737,9 @@ impl HePlan {
     /// plan texts parse with implicit `batch = 1` / `optimized = false`
     /// and their shorter counts arity (the rotation-path counters S17
     /// added are reconstructed by replay and cross-checked against the
-    /// stored prefix), mirroring the wire codec's version window.
+    /// stored prefix), and v3 (pre-decision) texts with implicit
+    /// `output_mode = Logits` — mirroring the wire codec's version
+    /// window.
     pub fn from_text(text: &str) -> Result<HePlan> {
         fn f64_bits(tok: &str) -> Result<f64> {
             Ok(f64::from_bits(u64::from_str_radix(tok, 16).context("bad f64 bits")?))
@@ -674,8 +750,12 @@ impl HePlan {
             Some("heplan v1") => 1usize,
             Some("heplan v2") => 2,
             Some("heplan v3") => 3,
+            Some("heplan v4") => 4,
             _ => bail!("bad plan header"),
         };
+        // the meta line's arity froze at v3 (v4 adds the separate
+        // `decision` line instead of widening meta)
+        let meta_v = version.min(3);
         // running checksum over every line before `end` (v3 verifies it)
         fn eat(h: &mut u64, line: &str) {
             *h = crate::util::fnv1a_fold(*h, line.bytes().chain(std::iter::once(b'\n')));
@@ -685,6 +765,7 @@ impl HePlan {
         let mut layout: Option<AmaLayout> = None;
         let mut chain: Option<PlanChain> = None;
         let mut meta: Option<(usize, usize, u32, usize, usize, usize, bool, u64)> = None;
+        let mut decision: Option<(OutputMode, SgnPreset, f64)> = None;
         let mut count_vals: Option<Vec<u64>> = None;
         let mut opt_passes = Vec::new();
         let mut masks = Vec::new();
@@ -717,7 +798,7 @@ impl HePlan {
                     chain = Some(PlanChain { delta, moduli });
                 }
                 Some("meta") => {
-                    ensure!(toks.len() == 6 + version, "bad meta line");
+                    ensure!(toks.len() == 6 + meta_v, "bad meta line");
                     let batch = if version >= 2 { toks[6].parse()? } else { 1 };
                     let optimized = if version >= 3 {
                         match toks[7] {
@@ -736,7 +817,26 @@ impl HePlan {
                         toks[5].parse()?,
                         batch,
                         optimized,
-                        u64::from_str_radix(toks[5 + version], 16)?,
+                        u64::from_str_radix(toks[5 + meta_v], 16)?,
+                    ));
+                }
+                Some("decision") => {
+                    ensure!(version >= 4, "decision lines are a v4 feature");
+                    ensure!(toks.len() == 6, "bad decision line");
+                    let tag: u8 = toks[1].parse()?;
+                    let aux: u32 = toks[2].parse()?;
+                    let cutoff_bits =
+                        u64::from_str_radix(toks[3], 16).context("bad cutoff bits")?;
+                    let preset_tag: u8 = toks[4].parse()?;
+                    let bound = f64_bits(toks[5])?;
+                    ensure!(
+                        bound.is_finite() && bound > 0.0,
+                        "decision logit bound must be a positive finite number"
+                    );
+                    decision = Some((
+                        OutputMode::from_wire(tag, aux, cutoff_bits)?,
+                        SgnPreset::from_tag(preset_tag)?,
+                        bound,
                     ));
                 }
                 Some("counts") => {
@@ -827,6 +927,14 @@ impl HePlan {
         ensure!(saw_end, "plan truncated (no end marker)");
         let (n_inputs, n_regs, output, levels_needed, num_classes, batch, optimized, model_hash) =
             meta.ok_or_else(|| anyhow!("plan missing meta line"))?;
+        let (output_mode, sgn_preset, logit_bound) = decision.unwrap_or((
+            OutputMode::Logits,
+            SgnPreset::Fast,
+            sgn::DEFAULT_LOGIT_BOUND,
+        ));
+        // a forged decision line that parses must still describe a shape
+        // the evaluator accepts (typed, never a downstream panic)
+        sgn::check_mode(output_mode, sgn_preset, num_classes)?;
         // bound the register space before ANY n_regs-sized allocation
         // (schedule_waves/replay build vec![_; n_regs]): a forged meta
         // line must error, never over-allocate or capacity-panic —
@@ -862,6 +970,9 @@ impl HePlan {
             levels_needed,
             num_classes,
             batch,
+            output_mode,
+            sgn_preset,
+            logit_bound,
             optimized,
             opt_passes,
             model_hash,
@@ -1047,7 +1158,7 @@ impl PlanBuilder {
         model: &StgcnModel,
         layout: AmaLayout,
         levels_needed: usize,
-        batch: usize,
+        opts: PlanOptions,
         out: PlanCt,
     ) -> Result<HePlan> {
         let st = self.state.into_inner();
@@ -1069,7 +1180,10 @@ impl PlanBuilder {
             output: out.reg,
             levels_needed,
             num_classes: model.num_classes(),
-            batch,
+            batch: opts.batch,
+            output_mode: opts.output_mode,
+            sgn_preset: opts.sgn_preset,
+            logit_bound: opts.logit_bound(),
             optimized: false,
             opt_passes: Vec::new(),
             model_hash: model.content_hash(),
@@ -1323,7 +1437,7 @@ mod tests {
         // truncation
         assert!(HePlan::from_text(&text[..text.len() / 2]).is_err());
         // header damage
-        assert!(HePlan::from_text(&text.replace("heplan v3", "heplan v9")).is_err());
+        assert!(HePlan::from_text(&text.replace("heplan v4", "heplan v9")).is_err());
         // the v3 checksum catches payload corruption that still parses:
         // flip one hex digit inside a mask value line
         let pos = text.find("mask ").unwrap() + 10;
@@ -1334,6 +1448,118 @@ mod tests {
         // trailing garbage after the end marker
         let trailing = format!("{text}op rot 0 1 9\n");
         assert!(HePlan::from_text(&trailing).is_err());
+    }
+
+    fn decision_opts(mode: OutputMode, preset: SgnPreset) -> PlanOptions {
+        PlanOptions { output_mode: mode, sgn_preset: preset, ..Default::default() }
+    }
+
+    fn decision_chain(mode: OutputMode, preset: SgnPreset) -> PlanChain {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let mut he = HeStgcn::new(&m, layout).unwrap();
+        he.output_mode = mode;
+        he.sgn_preset = preset;
+        PlanChain::ideal(he.levels_needed().unwrap(), 33)
+    }
+
+    #[test]
+    fn test_decision_plan_compiles_validates_and_roundtrips() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        for (mode, preset) in [
+            (OutputMode::Argmax, SgnPreset::Fast),
+            (OutputMode::TopK(1), SgnPreset::Balanced),
+            (OutputMode::threshold(1, 0.25), SgnPreset::Precise),
+        ] {
+            let chain = decision_chain(mode, preset);
+            let plan =
+                compile(&m, layout, &chain, decision_opts(mode, preset)).unwrap();
+            plan.validate().unwrap();
+            assert_eq!(plan.output_mode, mode);
+            assert_eq!(plan.sgn_preset, preset);
+            assert_eq!(plan.logit_bound, sgn::DEFAULT_LOGIT_BOUND);
+            // the decision circuit's depth is on top of the logits depth
+            let logits_depth =
+                HeStgcn::new(&m, layout).unwrap().levels_needed().unwrap();
+            assert_eq!(
+                plan.levels_needed,
+                logits_depth + sgn::decision_levels(mode, preset, m.num_classes())
+            );
+            // lossless v4 text roundtrip carries the decision line
+            let back = HePlan::from_text(&plan.to_text()).unwrap();
+            assert_eq!(plan, back);
+        }
+    }
+
+    #[test]
+    fn test_decision_chain_too_shallow_fails_typed() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        // deep enough for the logits, one level short for the decision
+        let logits_depth = HeStgcn::new(&m, layout).unwrap().levels_needed().unwrap();
+        let chain = PlanChain::ideal(logits_depth, 33);
+        let err = compile(
+            &m,
+            layout,
+            &chain,
+            decision_opts(OutputMode::Argmax, SgnPreset::Fast),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("insufficient levels for output mode argmax"),
+            "untyped error: {err}"
+        );
+        // the error names the required chain length
+        let need = decision_chain(OutputMode::Argmax, SgnPreset::Fast).top_level();
+        assert!(err.contains(&need.to_string()), "error must name {need}: {err}");
+    }
+
+    #[test]
+    fn test_infeasible_decision_mode_fails_typed_at_compile() {
+        // Fast's ε cannot resolve top-k ranks over tiny()'s 3 classes;
+        // the rejection happens before any chain-depth comparison
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let chain = PlanChain::ideal(60, 33);
+        let err = compile(
+            &m,
+            layout,
+            &chain,
+            decision_opts(OutputMode::TopK(1), SgnPreset::Fast),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("cannot resolve top-k"), "untyped error: {err}");
+    }
+
+    #[test]
+    fn test_forged_decision_line_rejected_on_load() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let chain = decision_chain(OutputMode::Argmax, SgnPreset::Fast);
+        let plan = compile(
+            &m,
+            layout,
+            &chain,
+            decision_opts(OutputMode::Argmax, SgnPreset::Fast),
+        )
+        .unwrap();
+        let text = plan.to_text();
+        let line = text.lines().find(|l| l.starts_with("decision ")).unwrap();
+        // forged mode tag / preset tag / non-positive bound / short line:
+        // typed errors, caught at the line itself (before the checksum)
+        let bound = format!("{:016x}", 4f64.to_bits());
+        for forged in [
+            format!("decision 9 0 0000000000000000 0 {bound}"),
+            format!("decision 1 0 0000000000000000 7 {bound}"),
+            "decision 1 0 0000000000000000 0 0000000000000000".to_string(),
+            "decision 1 0".to_string(),
+        ] {
+            let bad = text.replace(line, &forged);
+            assert!(HePlan::from_text(&bad).is_err(), "{forged:?} must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,897 @@
+//! Composite sign-polynomial evaluation and encrypted decision circuits
+//! (DESIGN.md S20).
+//!
+//! CKKS can only evaluate polynomials, so `sgn(x)` is approximated by a
+//! *composition* of low-degree odd minimax polynomials (Cheon et al.'s
+//! f-family): each stage maps [−1, 1] → [−1, 1] while pushing values away
+//! from 0 toward ±1, so k cheap stages reach an accuracy a single
+//! polynomial of the same total degree cannot. Three depth/precision
+//! presets are exposed ([`SgnPreset`]); each documents the accuracy ε and
+//! the *resolution* δ — the half-margin (after normalizing logits by
+//! 1/(2·B)) below which the sign output is undefined.
+//!
+//! On top of the evaluator sit three decision circuits over a logits
+//! ciphertext (logit for class m at slot `m·T`, clip b at block copy b —
+//! the exact layout `HeStgcn::pool_fc` produces):
+//!
+//! * **argmax** — pairwise tournament: for every offset d the rotation
+//!   `d·T` aligns class m+d under class m, one Sub gives both signed
+//!   differences (the reverse comparison is the swapped Sub — oddness
+//!   makes negation free), a masked PMult normalizes by 1/(2·B) *and*
+//!   zeroes every slot that is not a valid comparison row, and the sign
+//!   chain (with the ×0.5 folded into its last stage — also free) yields
+//!   ±½ at valid rows and exactly 0 elsewhere (the composition is odd, so
+//!   0 stays 0). A plaintext bias completes each factor to
+//!   (1 ± sgn)/2 ∈ {0, 1} at comparison rows and 1 at rows whose
+//!   comparison falls off the class range; a log-depth product tree then
+//!   leaves indicator ≈ 1 at the winning class's slot and ≈ 0 elsewhere.
+//! * **top-k** — the same comparison chains summed instead of multiplied
+//!   give each class its *rank* (number of classes beating it); a second
+//!   normalization + sign chain tests `rank < k`.
+//! * **threshold(c, τ)** — one chain on `(logit_c − τ)/(2·B)`.
+//!
+//! Every circuit consumes a statically known number of levels
+//! ([`decision_levels`]); `plan::compile` folds that into the plan's
+//! `levels_needed` and fails typed when the modulus chain is too short.
+//!
+//! **Caller contract:** logits must satisfy `|logit| ≤ B`
+//! (`logit_bound`); the evaluator's stages are only contractive on
+//! [−1, 1], so an out-of-bound logit can diverge. The absolute logit
+//! margin required for a guaranteed-correct decision is `δ · 2B`.
+
+use super::backend::HeBackend;
+use crate::ama::AmaLayout;
+use anyhow::{bail, ensure, Result};
+
+/// Default logit bound B: decisions assume `|logit| ≤ B`.
+pub const DEFAULT_LOGIT_BOUND: f64 = 4.0;
+
+// ------------------------------------------------------------- the stages
+
+/// One stage of the composite sign approximation.
+#[derive(Clone, Copy, Debug)]
+pub enum SgnStage {
+    /// Plaintext gain `g·x` — one level. Re-widens the certified input
+    /// band after a polynomial stage has contracted it toward ±1.
+    Gain(f64),
+    /// Odd polynomial `x·q(x²)` with `q` given by ascending coefficients —
+    /// evaluated by Horner in `u = x²`, costing `coeffs.len() + 1` levels
+    /// (square, top-coefficient PMult, len−2 ct·ct Horner steps, final
+    /// ·x).
+    Odd(&'static [f64]),
+}
+
+/// f₃(x) = (35x − 35x³ + 21x⁵ − 5x⁷)/16 as q(u) coefficients.
+const F3: &[f64] = &[2.1875, -2.1875, 1.3125, -0.3125];
+/// f₂(x) = (15x − 10x³ + 3x⁵)/8 as q(u) coefficients.
+const F2: &[f64] = &[1.875, -1.25, 0.375];
+
+const FAST_STAGES: &[SgnStage] = &[SgnStage::Gain(1.4), SgnStage::Odd(F3), SgnStage::Odd(F3)];
+const BALANCED_STAGES: &[SgnStage] = &[
+    SgnStage::Gain(1.5),
+    SgnStage::Odd(F3),
+    SgnStage::Gain(1.4),
+    SgnStage::Odd(F3),
+    SgnStage::Odd(F3),
+];
+const PRECISE_STAGES: &[SgnStage] = &[
+    SgnStage::Gain(1.5),
+    SgnStage::Odd(F3),
+    SgnStage::Gain(1.5),
+    SgnStage::Odd(F3),
+    SgnStage::Gain(1.3),
+    SgnStage::Odd(F3),
+    SgnStage::Odd(F2),
+];
+
+/// Depth/precision presets for the composite sign evaluator. For inputs
+/// with `|x| ≥ δ` (on the normalized [−1, 1] scale) the output is within
+/// ε of sgn(x); below δ the output is somewhere in [−1, 1] and the
+/// decision is undefined (documented failure behavior, exercised by the
+/// differential suite's near-tie sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SgnPreset {
+    /// 11 levels, ε = 2⁻⁵, δ = 0.25.
+    Fast,
+    /// 17 levels, ε = 2⁻⁷, δ = 0.10.
+    Balanced,
+    /// 22 levels, ε = 2⁻⁹, δ = 0.045.
+    Precise,
+}
+
+impl SgnPreset {
+    pub fn stages(self) -> &'static [SgnStage] {
+        match self {
+            SgnPreset::Fast => FAST_STAGES,
+            SgnPreset::Balanced => BALANCED_STAGES,
+            SgnPreset::Precise => PRECISE_STAGES,
+        }
+    }
+
+    /// Multiplicative depth of one full sign chain (statically accounted;
+    /// the property suite pins this against `replay_states()`).
+    pub fn levels(self) -> usize {
+        self.stages()
+            .iter()
+            .map(|s| match s {
+                SgnStage::Gain(_) => 1,
+                SgnStage::Odd(c) => c.len() + 1,
+            })
+            .sum()
+    }
+
+    /// Accuracy bound: |sgn_poly(x) − sgn(x)| ≤ ε for |x| ≥ δ.
+    pub fn eps(self) -> f64 {
+        match self {
+            SgnPreset::Fast => 1.0 / 32.0,
+            SgnPreset::Balanced => 1.0 / 128.0,
+            SgnPreset::Precise => 1.0 / 512.0,
+        }
+    }
+
+    /// Resolution: the smallest normalized |x| the preset certifies.
+    pub fn delta(self) -> f64 {
+        match self {
+            SgnPreset::Fast => 0.25,
+            SgnPreset::Balanced => 0.10,
+            SgnPreset::Precise => 0.045,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SgnPreset::Fast => "fast",
+            SgnPreset::Balanced => "balanced",
+            SgnPreset::Precise => "precise",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SgnPreset> {
+        match s {
+            "fast" => Ok(SgnPreset::Fast),
+            "balanced" => Ok(SgnPreset::Balanced),
+            "precise" => Ok(SgnPreset::Precise),
+            _ => bail!("unknown sign preset {s:?} (expected fast|balanced|precise)"),
+        }
+    }
+
+    /// Wire/plan-text tag (stable across releases).
+    pub fn tag(self) -> u8 {
+        match self {
+            SgnPreset::Fast => 0,
+            SgnPreset::Balanced => 1,
+            SgnPreset::Precise => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<SgnPreset> {
+        match t {
+            0 => Ok(SgnPreset::Fast),
+            1 => Ok(SgnPreset::Balanced),
+            2 => Ok(SgnPreset::Precise),
+            _ => bail!("unknown sign preset tag {t}"),
+        }
+    }
+
+    /// Plaintext reference evaluation of the composite chain — the
+    /// differential/property suites' ground truth for the polynomial
+    /// itself (not for sgn, which it only approximates).
+    pub fn eval_plain(self, x: f64) -> f64 {
+        let mut v = x;
+        for st in self.stages() {
+            v = match *st {
+                SgnStage::Gain(g) => g * v,
+                SgnStage::Odd(coeffs) => {
+                    let u = v * v;
+                    let top = coeffs.len() - 1;
+                    let mut acc = coeffs[top];
+                    for i in (0..top).rev() {
+                        acc = acc * u + coeffs[i];
+                    }
+                    acc * v
+                }
+            };
+        }
+        v
+    }
+}
+
+// ------------------------------------------------------------ output mode
+
+/// What the server computes from the logits ciphertext before responding.
+/// `Logits` is the legacy full-leakage mode; the other three return only
+/// per-class indicator slots in {≈0, ≈1}, shrinking what the client
+/// learns to the decision itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OutputMode {
+    /// Raw class scores (legacy behavior, default).
+    Logits,
+    /// Indicator ≈ 1 at the winning class's slot, ≈ 0 elsewhere.
+    Argmax,
+    /// Indicator ≈ 1 at each of the k highest-scoring classes' slots.
+    TopK(u32),
+    /// Indicator ≈ 1 at slot `class` iff its logit exceeds the cutoff
+    /// (stored as f64 bits so the mode stays `Eq + Hash` for plan keys).
+    Threshold { class: u32, cutoff_bits: u64 },
+}
+
+impl OutputMode {
+    pub fn threshold(class: u32, cutoff: f64) -> OutputMode {
+        OutputMode::Threshold { class, cutoff_bits: cutoff.to_bits() }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OutputMode::Logits => "logits",
+            OutputMode::Argmax => "argmax",
+            OutputMode::TopK(_) => "topk",
+            OutputMode::Threshold { .. } => "threshold",
+        }
+    }
+
+    /// Wire tag (stable across releases).
+    pub fn tag(self) -> u8 {
+        match self {
+            OutputMode::Logits => 0,
+            OutputMode::Argmax => 1,
+            OutputMode::TopK(_) => 2,
+            OutputMode::Threshold { .. } => 3,
+        }
+    }
+
+    /// Mode argument carried next to the tag: k for top-k, the class for
+    /// threshold, 0 otherwise.
+    pub fn aux(self) -> u32 {
+        match self {
+            OutputMode::TopK(k) => k,
+            OutputMode::Threshold { class, .. } => class,
+            _ => 0,
+        }
+    }
+
+    /// Threshold cutoff as raw f64 bits (0 for the other modes).
+    pub fn cutoff_bits(self) -> u64 {
+        match self {
+            OutputMode::Threshold { cutoff_bits, .. } => cutoff_bits,
+            _ => 0,
+        }
+    }
+
+    /// Rebuild from the (tag, aux, cutoff_bits) wire triple, rejecting
+    /// forged tags and non-finite cutoffs typed (never panics — the
+    /// hostile-frame fuzz relies on this).
+    pub fn from_wire(tag: u8, aux: u32, cutoff_bits: u64) -> Result<OutputMode> {
+        match tag {
+            0 => Ok(OutputMode::Logits),
+            1 => Ok(OutputMode::Argmax),
+            2 => Ok(OutputMode::TopK(aux)),
+            3 => {
+                ensure!(
+                    f64::from_bits(cutoff_bits).is_finite(),
+                    "threshold cutoff is not a finite number"
+                );
+                Ok(OutputMode::Threshold { class: aux, cutoff_bits })
+            }
+            _ => bail!("unknown output-mode tag {tag}"),
+        }
+    }
+
+    /// Parse the CLI syntax: `logits` | `argmax` | `topk:K` |
+    /// `threshold:CLASS[:CUTOFF]` (cutoff defaults to 0).
+    pub fn parse(s: &str) -> Result<OutputMode> {
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or("");
+        let mode = match head {
+            "logits" => OutputMode::Logits,
+            "argmax" => OutputMode::Argmax,
+            "topk" => {
+                let k = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--output-mode topk needs a count: topk:K"))?;
+                let k: u32 = k.parse().map_err(|_| {
+                    anyhow::anyhow!("--output-mode topk count {k:?} is not a number")
+                })?;
+                OutputMode::TopK(k)
+            }
+            "threshold" => {
+                let c = parts.next().ok_or_else(|| {
+                    anyhow::anyhow!("--output-mode threshold needs a class: threshold:CLASS[:CUTOFF]")
+                })?;
+                let class: u32 = c.parse().map_err(|_| {
+                    anyhow::anyhow!("--output-mode threshold class {c:?} is not a number")
+                })?;
+                let cutoff = match parts.next() {
+                    Some(v) => {
+                        let cut: f64 = v.parse().map_err(|_| {
+                            anyhow::anyhow!("--output-mode threshold cutoff {v:?} is not a number")
+                        })?;
+                        ensure!(cut.is_finite(), "threshold cutoff must be finite");
+                        cut
+                    }
+                    None => 0.0,
+                };
+                OutputMode::threshold(class, cutoff)
+            }
+            _ => bail!(
+                "unknown output mode {s:?} (expected logits|argmax|topk:K|threshold:CLASS[:CUTOFF])"
+            ),
+        };
+        ensure!(parts.next().is_none(), "trailing fields in output mode {s:?}");
+        Ok(mode)
+    }
+}
+
+impl std::fmt::Display for OutputMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            OutputMode::Logits => write!(f, "logits"),
+            OutputMode::Argmax => write!(f, "argmax"),
+            OutputMode::TopK(k) => write!(f, "topk:{k}"),
+            OutputMode::Threshold { class, cutoff_bits } => {
+                write!(f, "threshold:{class}:{}", f64::from_bits(cutoff_bits))
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- static accounting
+
+fn tree_rounds(n: usize) -> usize {
+    // ceil(log2(n)): rounds of a binary product tree over n factors
+    let mut rounds = 0;
+    let mut m = n;
+    while m > 1 {
+        m = (m + 1) / 2;
+        rounds += 1;
+    }
+    rounds
+}
+
+/// Levels the decision circuit consumes *after* the logits (0 for
+/// `Logits`). Matches the executed circuit exactly — the counting-backend
+/// unit tests and `replay_states()` both pin it.
+pub fn decision_levels(mode: OutputMode, preset: SgnPreset, classes: usize) -> usize {
+    let l = preset.levels();
+    match mode {
+        OutputMode::Logits => 0,
+        // normalize PMult + sign chain + product tree over 2(C−1) factors
+        OutputMode::Argmax => 1 + l + tree_rounds(2 * classes.saturating_sub(1)),
+        // normalize + rank chains, then normalize + membership chain
+        OutputMode::TopK(_) => 2 + 2 * l,
+        OutputMode::Threshold { .. } => 1 + l,
+    }
+}
+
+/// Number of composite-stage evaluations one request performs (the
+/// coordinator's `sign_stages` metric): chains × stages-per-chain.
+pub fn sign_stage_count(mode: OutputMode, preset: SgnPreset, classes: usize) -> u64 {
+    let chains = match mode {
+        OutputMode::Logits => 0,
+        OutputMode::Argmax => 2 * classes.saturating_sub(1),
+        OutputMode::TopK(_) => 2 * classes.saturating_sub(1) + 1,
+        OutputMode::Threshold { .. } => 1,
+    };
+    (chains * preset.stages().len()) as u64
+}
+
+/// Static feasibility of (mode, preset, classes): rejects shapes whose
+/// accumulated stage error ε could flip the decision even with a clean
+/// margin, and plain out-of-range arguments. Called by
+/// `HeStgcn::levels_needed`, so `plan::compile` fails typed up front.
+pub fn check_mode(mode: OutputMode, preset: SgnPreset, classes: usize) -> Result<()> {
+    match mode {
+        OutputMode::Logits => Ok(()),
+        OutputMode::Argmax => {
+            ensure!(classes >= 2, "argmax output mode needs at least 2 classes, got {classes}");
+            let eps = preset.eps();
+            ensure!(
+                (classes as f64 - 1.0) * eps < 0.5,
+                "sign preset {} (ε = {eps}) cannot separate an argmax over {classes} \
+                 classes: the winner's indicator may drop below 1/2",
+                preset.name()
+            );
+            Ok(())
+        }
+        OutputMode::TopK(k) => {
+            ensure!(
+                k >= 1 && (k as usize) < classes,
+                "topk k must satisfy 1 <= k < classes ({classes}), got {k}"
+            );
+            // the rank test compares (k − 1/2 − rank)/ρ against 0: rank
+            // noise up to (C−1)·ε eats into the static 1/2 separation, and
+            // the quotient must clear the preset's resolution δ
+            let eps = preset.eps();
+            let rho = classes as f64 - 0.5;
+            let margin = (0.5 - (classes as f64 - 1.0) * eps) / rho;
+            ensure!(
+                margin >= preset.delta(),
+                "sign preset {} (ε = {eps}, δ = {}) cannot resolve top-k ranks over \
+                 {classes} classes (rank margin {margin:.4} < δ); use a more precise preset",
+                preset.name(),
+                preset.delta()
+            );
+            Ok(())
+        }
+        OutputMode::Threshold { class, .. } => {
+            ensure!(
+                (class as usize) < classes,
+                "threshold class {class} out of range (model has {classes} classes)"
+            );
+            Ok(())
+        }
+    }
+}
+
+/// Extra rotation steps the decision circuit needs beyond the network's
+/// (the tournament's right rotations `slots − d·T`; the left `d·T` steps
+/// are already in every layout's step set, but are included for
+/// robustness — keygen dedups).
+pub fn decision_rotations(mode: OutputMode, layout: &AmaLayout, classes: usize) -> Vec<usize> {
+    match mode {
+        OutputMode::Logits | OutputMode::Threshold { .. } => Vec::new(),
+        OutputMode::Argmax | OutputMode::TopK(_) => (1..classes)
+            .flat_map(|d| [d * layout.t, layout.slots - d * layout.t])
+            .filter(|&k| k > 0 && k < layout.slots)
+            .collect(),
+    }
+}
+
+// -------------------------------------------------------- the HE circuits
+
+/// The compiled decision circuit appended after `pool_fc`: all geometry
+/// and policy resolved, generic over the backend (real CKKS, counting,
+/// plan builder — the same trio as the network itself).
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionCircuit {
+    pub layout: AmaLayout,
+    /// Copies each mask is replicated into (`HeStgcn::mask_copies`).
+    pub mb: usize,
+    pub classes: usize,
+    pub preset: SgnPreset,
+    /// Logit bound B: inputs are normalized by 1/(2·B).
+    pub bound: f64,
+    pub mode: OutputMode,
+}
+
+impl DecisionCircuit {
+    /// Evaluate the circuit on the logits ciphertext. Consumes exactly
+    /// [`decision_levels`] levels; indicator for class m lands at slot
+    /// `m·T` (clip b's at `b·block + m·T`), i.e. the same slots as the
+    /// logits it replaces.
+    pub fn apply<B: HeBackend>(&self, be: &B, logits: &B::Ct) -> Result<B::Ct> {
+        check_mode(self.mode, self.preset, self.classes)?;
+        ensure!(
+            self.bound.is_finite() && self.bound > 0.0,
+            "logit bound must be a positive finite number, got {}",
+            self.bound
+        );
+        match self.mode {
+            OutputMode::Logits => Ok(logits.clone()),
+            OutputMode::Argmax => Ok(self.argmax(be, logits)),
+            OutputMode::TopK(k) => Ok(self.topk(be, logits, k as usize)),
+            OutputMode::Threshold { class, cutoff_bits } => {
+                Ok(self.threshold(be, logits, class as usize, f64::from_bits(cutoff_bits)))
+            }
+        }
+    }
+
+    /// Plaintext constant multiplication through a batch-restricted mask:
+    /// one level, renormalizing the scale to Δ.
+    fn pmult_const<B: HeBackend>(&self, be: &B, x: &B::Ct, v: f64) -> B::Ct {
+        let (layout, mb) = (self.layout, self.mb);
+        let thunk = move || layout.mask_batch(|_, _| v, mb);
+        let p_scale = be.delta() * be.q_at(be.level(x)) / be.scale(x);
+        be.rescale(&be.mul_plain(x, &thunk, p_scale))
+    }
+
+    /// One odd stage `x·q(x²)` by Horner in u = x²; `fs` folds the free
+    /// output scaling (±1/2 of the decision biasing) into the
+    /// coefficients of the chain's final stage.
+    fn odd_stage<B: HeBackend>(&self, be: &B, x: &B::Ct, coeffs: &'static [f64], fs: f64) -> B::Ct {
+        let (layout, mb) = (self.layout, self.mb);
+        let u = be.rescale(&be.mul(x, x));
+        let top = coeffs.len() - 1;
+        let c_top = coeffs[top] * fs;
+        let thunk_top = move || layout.mask_batch(|_, _| c_top, mb);
+        let p_scale = be.delta() * be.q_at(be.level(&u)) / be.scale(&u);
+        let mut acc = be.rescale(&be.mul_plain(&u, &thunk_top, p_scale));
+        for i in (0..top).rev() {
+            let c = coeffs[i] * fs;
+            let thunk = move || layout.mask_batch(|_, _| c, mb);
+            acc = be.add_plain(&acc, &thunk);
+            if i > 0 {
+                acc = be.rescale(&be.mul(&acc, &u));
+            }
+        }
+        be.rescale(&be.mul(&acc, x))
+    }
+
+    /// The full composite chain; `final_scale` is folded into the last
+    /// stage's coefficients (a half-scaled sign for free). Exactly
+    /// `preset.levels()` levels; maps 0 to exactly 0 (every stage is odd).
+    fn eval_stages<B: HeBackend>(&self, be: &B, x: &B::Ct, final_scale: f64) -> B::Ct {
+        let stages = self.preset.stages();
+        let mut cur = x.clone();
+        for (si, st) in stages.iter().enumerate() {
+            let fs = if si + 1 == stages.len() { final_scale } else { 1.0 };
+            cur = match *st {
+                SgnStage::Gain(g) => self.pmult_const(be, &cur, g * fs),
+                SgnStage::Odd(coeffs) => self.odd_stage(be, &cur, coeffs, fs),
+            };
+        }
+        cur
+    }
+
+    /// The shared tournament front end: for offset d, the normalized
+    /// masked differences `(logit_m − logit_{m+d})/(2B)` at comparison
+    /// rows (m + d < classes), zero everywhere else — and its negation
+    /// (the swapped Sub, free). Both then run half-scaled sign chains.
+    fn pairwise_signs<B: HeBackend>(
+        &self,
+        be: &B,
+        l0: &B::Ct,
+        d: usize,
+        final_scale: f64,
+    ) -> (B::Ct, B::Ct) {
+        let (layout, mb, classes) = (self.layout, self.mb, self.classes);
+        let t = layout.t;
+        let rot = be.rotate(l0, d * t);
+        let diff = be.sub(l0, &rot);
+        let diffneg = be.sub(&rot, l0);
+        let inv = 1.0 / (2.0 * self.bound);
+        let vthunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o + d < classes { inv } else { 0.0 }, mb)
+        };
+        let p_scale = be.delta() * be.q_at(be.level(&diff)) / be.scale(&diff);
+        let nd = be.rescale(&be.mul_plain(&diff, &vthunk, p_scale));
+        let ndneg = be.rescale(&be.mul_plain(&diffneg, &vthunk, p_scale));
+        let s = self.eval_stages(be, &nd, final_scale);
+        let sneg = self.eval_stages(be, &ndneg, final_scale);
+        (s, sneg)
+    }
+
+    /// Log-depth product over the tournament factors. Every round costs
+    /// exactly one level for every surviving factor — an odd leftover is
+    /// dropped through an all-ones PMult so the accounting stays uniform.
+    fn product_tree<B: HeBackend>(&self, be: &B, mut factors: Vec<B::Ct>) -> B::Ct {
+        let (layout, mb) = (self.layout, self.mb);
+        while factors.len() > 1 {
+            let mut next = Vec::with_capacity((factors.len() + 1) / 2);
+            let mut i = 0;
+            while i + 1 < factors.len() {
+                next.push(be.rescale(&be.mul(&factors[i], &factors[i + 1])));
+                i += 2;
+            }
+            if i < factors.len() {
+                let x = &factors[i];
+                let thunk = move || layout.mask_batch(|_, _| 1.0, mb);
+                let p_scale = be.delta() * be.q_at(be.level(x)) / be.scale(x);
+                next.push(be.rescale(&be.mul_plain(x, &thunk, p_scale)));
+            }
+            factors = next;
+        }
+        factors.pop().expect("product tree needs at least one factor")
+    }
+
+    fn argmax<B: HeBackend>(&self, be: &B, l0: &B::Ct) -> B::Ct {
+        let (layout, mb, classes) = (self.layout, self.mb, self.classes);
+        let (t, slots) = (layout.t, layout.slots);
+        let mut factors: Vec<B::Ct> = Vec::with_capacity(2 * (classes - 1));
+        for d in 1..classes {
+            let (s, sneg) = self.pairwise_signs(be, l0, d, 0.5);
+            // factor for "m beats m+d": (1 + sgn)/2 at comparison rows,
+            // 1 at class rows whose +d partner is out of range, 0 at
+            // every non-class slot (where s is already exactly 0)
+            let bias_d = move || {
+                layout.mask_batch(
+                    |o, tt| {
+                        if tt != 0 || o >= classes {
+                            0.0
+                        } else if o + d < classes {
+                            0.5
+                        } else {
+                            1.0
+                        }
+                    },
+                    mb,
+                )
+            };
+            factors.push(be.add_plain(&s, &bias_d));
+            // factor for "m beats m−d": the reverse chain's output lives
+            // at row m−d; rotate it right by d·T onto row m. The slots
+            // rotated into rows m < d carry the *previous* block's rows
+            // ≥ c_max − d, where sneg is identically zero (its mask only
+            // passes rows < classes − d ≤ c_max − d), so no garbage leaks.
+            let r = be.rotate(&sneg, slots - d * t);
+            let bias_e = move || {
+                layout.mask_batch(
+                    |o, tt| {
+                        if tt != 0 || o >= classes {
+                            0.0
+                        } else if o >= d {
+                            0.5
+                        } else {
+                            1.0
+                        }
+                    },
+                    mb,
+                )
+            };
+            factors.push(be.add_plain(&r, &bias_e));
+        }
+        self.product_tree(be, factors)
+    }
+
+    fn topk<B: HeBackend>(&self, be: &B, l0: &B::Ct, k: usize) -> B::Ct {
+        let (layout, mb, classes) = (self.layout, self.mb, self.classes);
+        let (t, slots) = (layout.t, layout.slots);
+        // rank_m = #{classes that beat m}: each comparison contributes
+        // (1 − sgn)/2 ∈ {0, 1}; the −1/2 scaling is folded into the
+        // chains, the +1/2 into plaintext biases restricted to the rows
+        // whose comparison exists (so out-of-range pairs contribute 0)
+        let mut addends: Vec<B::Ct> = Vec::with_capacity(2 * (classes - 1));
+        for d in 1..classes {
+            let (s, sneg) = self.pairwise_signs(be, l0, d, -0.5);
+            let bias_d = move || {
+                layout.mask_batch(
+                    |o, tt| if tt == 0 && o + d < classes { 0.5 } else { 0.0 },
+                    mb,
+                )
+            };
+            addends.push(be.add_plain(&s, &bias_d));
+            let r = be.rotate(&sneg, slots - d * t);
+            let bias_e = move || {
+                layout.mask_batch(
+                    |o, tt| if tt == 0 && o < classes && o >= d { 0.5 } else { 0.0 },
+                    mb,
+                )
+            };
+            addends.push(be.add_plain(&r, &bias_e));
+        }
+        let mut rank = addends[0].clone();
+        for a in &addends[1..] {
+            rank = be.add(&rank, a);
+        }
+        // membership test rank < k, as sgn((k − 1/2 − rank)/ρ) with
+        // ρ = C − 1/2 keeping the normalized input inside [−1, 1] even
+        // after rank noise (static feasibility checked in check_mode)
+        let rho = classes as f64 - 0.5;
+        let neg_inv = -1.0 / rho;
+        let nthunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o < classes { neg_inv } else { 0.0 }, mb)
+        };
+        let p_scale = be.delta() * be.q_at(be.level(&rank)) / be.scale(&rank);
+        let x2 = be.rescale(&be.mul_plain(&rank, &nthunk, p_scale));
+        let off = (k as f64 - 0.5) / rho;
+        let othunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o < classes { off } else { 0.0 }, mb)
+        };
+        let x2 = be.add_plain(&x2, &othunk);
+        let s2 = self.eval_stages(be, &x2, 0.5);
+        let bias = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o < classes { 0.5 } else { 0.0 }, mb)
+        };
+        be.add_plain(&s2, &bias)
+    }
+
+    fn threshold<B: HeBackend>(&self, be: &B, l0: &B::Ct, class: usize, cutoff: f64) -> B::Ct {
+        let (layout, mb) = (self.layout, self.mb);
+        let inv = 1.0 / (2.0 * self.bound);
+        let vthunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o == class { inv } else { 0.0 }, mb)
+        };
+        let p_scale = be.delta() * be.q_at(be.level(l0)) / be.scale(l0);
+        let nd = be.rescale(&be.mul_plain(l0, &vthunk, p_scale));
+        let shift = -cutoff * inv;
+        let sthunk = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o == class { shift } else { 0.0 }, mb)
+        };
+        let nd = be.add_plain(&nd, &sthunk);
+        let s = self.eval_stages(be, &nd, 0.5);
+        let bias = move || {
+            layout.mask_batch(|o, tt| if tt == 0 && o == class { 0.5 } else { 0.0 }, mb)
+        };
+        be.add_plain(&s, &bias)
+    }
+}
+
+// --------------------------------------------------- reading the decision
+
+/// A decrypted decision. `Logits` passes the raw scores through so every
+/// mode funnels into one client-side type.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    Logits(Vec<f64>),
+    Argmax(usize),
+    /// Classes whose membership indicator exceeded 1/2, ascending.
+    TopK(Vec<usize>),
+    Threshold(bool),
+}
+
+impl std::fmt::Display for Decision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Decision::Logits(v) => write!(f, "logits {v:?}"),
+            Decision::Argmax(c) => write!(f, "class {c}"),
+            Decision::TopK(cs) => write!(f, "classes {cs:?}"),
+            Decision::Threshold(b) => write!(f, "{}", if *b { "above" } else { "below" }),
+        }
+    }
+}
+
+/// Read a decision out of the decrypted indicator slots (the per-class
+/// values `HePlan::extract_logits*` returns — decision plans put the
+/// indicators in the logits' slots).
+pub fn decide(values: &[f64], mode: OutputMode) -> Decision {
+    match mode {
+        OutputMode::Logits => Decision::Logits(values.to_vec()),
+        OutputMode::Argmax => Decision::Argmax(crate::util::argmax(values)),
+        OutputMode::TopK(_) => Decision::TopK(
+            values
+                .iter()
+                .enumerate()
+                .filter(|&(_, &v)| v > 0.5)
+                .map(|(i, _)| i)
+                .collect(),
+        ),
+        OutputMode::Threshold { class, .. } => {
+            Decision::Threshold(values.get(class as usize).is_some_and(|&v| v > 0.5))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::he_infer::backend::CountingBackend;
+
+    #[test]
+    fn test_preset_levels_are_the_documented_budget() {
+        assert_eq!(SgnPreset::Fast.levels(), 11);
+        assert_eq!(SgnPreset::Balanced.levels(), 17);
+        assert_eq!(SgnPreset::Precise.levels(), 22);
+    }
+
+    #[test]
+    fn test_plaintext_accuracy_within_eps_beyond_delta() {
+        for preset in [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise] {
+            let (eps, delta) = (preset.eps(), preset.delta());
+            let n = 4000;
+            for i in 0..=n {
+                let x = delta + (1.0 - delta) * i as f64 / n as f64;
+                let err = (preset.eval_plain(x) - 1.0).abs();
+                assert!(
+                    err <= eps,
+                    "{}: |sgn_poly({x}) − 1| = {err:.3e} > ε = {eps:.3e}",
+                    preset.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_plaintext_odd_symmetry_and_zero_fixed() {
+        for preset in [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise] {
+            assert_eq!(preset.eval_plain(0.0), 0.0, "{}: 0 must map to 0", preset.name());
+            for i in 1..200 {
+                let x = i as f64 / 200.0;
+                // exact bitwise symmetry: every stage is an odd function
+                // of x built from sign-symmetric f64 ops
+                assert_eq!(
+                    preset.eval_plain(-x),
+                    -preset.eval_plain(x),
+                    "{}: odd symmetry broken at {x}",
+                    preset.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn test_plaintext_stays_bounded_on_unit_interval() {
+        // the product tree and rank sums rely on |sgn_poly| ≤ 1 on [−1,1]
+        for preset in [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise] {
+            for i in 0..=4000 {
+                let x = -1.0 + 2.0 * i as f64 / 4000.0;
+                let v = preset.eval_plain(x).abs();
+                assert!(v <= 1.0 + 1e-9, "{}: |sgn_poly({x})| = {v}", preset.name());
+            }
+        }
+    }
+
+    fn circuit(mode: OutputMode, preset: SgnPreset, classes: usize) -> DecisionCircuit {
+        let layout = crate::ama::AmaLayout::new(8, 4, 256).unwrap();
+        DecisionCircuit {
+            layout,
+            mb: layout.copies(),
+            classes,
+            preset,
+            bound: DEFAULT_LOGIT_BOUND,
+            mode,
+        }
+    }
+
+    #[test]
+    fn test_counting_circuit_consumes_exact_levels() {
+        for preset in [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise] {
+            for classes in [2usize, 3, 4] {
+                for mode in [
+                    OutputMode::Argmax,
+                    OutputMode::TopK(1),
+                    OutputMode::threshold(0, 0.25),
+                ] {
+                    if check_mode(mode, preset, classes).is_err() {
+                        continue; // statically infeasible combos are rejected, not run
+                    }
+                    let need = decision_levels(mode, preset, classes);
+                    let be = CountingBackend::new(need, 33);
+                    let out = circuit(mode, preset, classes).apply(&be, &be.fresh()).unwrap();
+                    assert_eq!(
+                        be.level(&out),
+                        0,
+                        "{mode} × {} × C={classes} must land exactly at level 0",
+                        preset.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn test_check_mode_rejects_infeasible_shapes() {
+        // Fast's ε = 2⁻⁵ cannot resolve top-k ranks at 3 classes
+        assert!(check_mode(OutputMode::TopK(1), SgnPreset::Fast, 3).is_err());
+        assert!(check_mode(OutputMode::TopK(1), SgnPreset::Balanced, 3).is_ok());
+        assert!(check_mode(OutputMode::Argmax, SgnPreset::Fast, 1).is_err());
+        assert!(check_mode(OutputMode::TopK(0), SgnPreset::Precise, 3).is_err());
+        assert!(check_mode(OutputMode::TopK(3), SgnPreset::Precise, 3).is_err());
+        assert!(check_mode(OutputMode::threshold(3, 0.0), SgnPreset::Fast, 3).is_err());
+        assert!(check_mode(OutputMode::threshold(2, 0.0), SgnPreset::Fast, 3).is_ok());
+    }
+
+    #[test]
+    fn test_output_mode_parse_and_display_roundtrip() {
+        for s in ["logits", "argmax", "topk:2", "threshold:1:0.25"] {
+            let m = OutputMode::parse(s).unwrap();
+            assert_eq!(m.to_string(), s);
+            assert_eq!(OutputMode::from_wire(m.tag(), m.aux(), m.cutoff_bits()).unwrap(), m);
+        }
+        assert_eq!(
+            OutputMode::parse("threshold:1").unwrap(),
+            OutputMode::threshold(1, 0.0)
+        );
+        for bad in ["", "argmin", "topk", "topk:x", "threshold", "threshold:a", "argmax:1"] {
+            assert!(OutputMode::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // forged wire fields decode to typed errors, never panics
+        assert!(OutputMode::from_wire(9, 0, 0).is_err());
+        assert!(OutputMode::from_wire(3, 0, f64::NAN.to_bits()).is_err());
+    }
+
+    #[test]
+    fn test_decide_reads_indicator_slots() {
+        assert_eq!(decide(&[0.02, 0.97, 0.01], OutputMode::Argmax), Decision::Argmax(1));
+        assert_eq!(
+            decide(&[0.93, 0.04, 0.99], OutputMode::TopK(2)),
+            Decision::TopK(vec![0, 2])
+        );
+        assert_eq!(
+            decide(&[0.1, 0.9], OutputMode::threshold(1, 0.0)),
+            Decision::Threshold(true)
+        );
+        assert_eq!(
+            decide(&[0.1, 0.2], OutputMode::threshold(1, 0.0)),
+            Decision::Threshold(false)
+        );
+        let v = vec![1.0, -2.0];
+        assert_eq!(decide(&v, OutputMode::Logits), Decision::Logits(v.clone()));
+    }
+
+    #[test]
+    fn test_sign_stage_count_matches_chain_structure() {
+        assert_eq!(sign_stage_count(OutputMode::Logits, SgnPreset::Fast, 3), 0);
+        assert_eq!(sign_stage_count(OutputMode::Argmax, SgnPreset::Fast, 3), 4 * 3);
+        assert_eq!(sign_stage_count(OutputMode::TopK(1), SgnPreset::Balanced, 3), 5 * 5);
+        assert_eq!(sign_stage_count(OutputMode::threshold(0, 0.0), SgnPreset::Precise, 3), 7);
+    }
+}

@@ -19,7 +19,9 @@ use crate::ckks::keys::{keygen_public, keygen_secret};
 use crate::ckks::{
     build_eval_keys, encrypt, Ciphertext, CkksContext, CkksParams, Encoder, PublicKey, SecretKey,
 };
-use crate::he_infer::{compile, session_geometry, PlanChain, PlanOptions};
+use crate::he_infer::{
+    compile, decide, session_geometry, Decision, OutputMode, PlanChain, PlanOptions,
+};
 use crate::stgcn::StgcnModel;
 use crate::util::Rng;
 use anyhow::{ensure, Context, Result};
@@ -283,6 +285,31 @@ impl ClientKeys {
             })
             .collect())
     }
+
+    /// `decrypt_logits`' decision sibling (DESIGN.md S20): decrypt a
+    /// decision-mode response and read the typed decision. `mode` is the
+    /// output mode the request bundle carried (the server echoes it in
+    /// the `NET_DECISION` frame); the decision circuit keeps the logits'
+    /// slot layout, so the same extractor reads the indicator values and
+    /// [`decide`] maps them to the decision. On a `Logits` mode this
+    /// passes the raw scores through.
+    pub fn decrypt_decision(&self, ct: &Ciphertext, mode: OutputMode) -> Result<Decision> {
+        Ok(self.decrypt_decision_batch(ct, 1, mode)?.remove(0))
+    }
+
+    /// Per-clip decisions of a slot-batched decision-mode response.
+    pub fn decrypt_decision_batch(
+        &self,
+        ct: &Ciphertext,
+        batch: usize,
+        mode: OutputMode,
+    ) -> Result<Vec<Decision>> {
+        Ok(self
+            .decrypt_logits_batch(ct, batch)?
+            .into_iter()
+            .map(|v| decide(&v, mode))
+            .collect())
+    }
 }
 
 impl WireSerialize for ClientKeys {
@@ -487,6 +514,26 @@ mod tests {
         let model = tiny();
         let (client, _) = keygen(&model, "v", PlanOptions::default(), 1).unwrap();
         assert!(client.encrypt_clip(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn test_decision_opts_grow_the_keygen_chain() {
+        // keygen derives the chain from session_geometry, which accounts
+        // the decision circuit's levels — argmax keys get a deeper chain
+        // than logits keys for the same model, without any keygen change
+        let model = tiny();
+        let (_, p_logits) = session_geometry(&model, PlanOptions::default()).unwrap();
+        let opts = PlanOptions {
+            output_mode: OutputMode::Argmax,
+            ..PlanOptions::default()
+        };
+        let (_, p_argmax) = session_geometry(&model, opts).unwrap();
+        assert!(
+            p_argmax.levels > p_logits.levels,
+            "argmax chain {} must be deeper than logits chain {}",
+            p_argmax.levels,
+            p_logits.levels
+        );
     }
 
     #[test]

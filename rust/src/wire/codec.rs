@@ -25,12 +25,13 @@ use anyhow::{bail, ensure, Result};
 /// Frame magic: "LinGcn WiRe".
 pub const MAGIC: [u8; 4] = *b"LGWR";
 /// Wire format version written by this build. v2: `CtBundle` carries a
-/// slot-batch size (DESIGN.md S16).
-pub const VERSION: u16 = 2;
+/// slot-batch size (DESIGN.md S16). v3: `CtBundle` carries the requested
+/// output mode (DESIGN.md S20).
+pub const VERSION: u16 = 3;
 /// Oldest version still readable. Only the `CtBundle` payload changed in
-/// v2, so v1 frames of every *other* kind (client key files, eval-key
-/// bundles, ciphertexts, params) stay readable — a pre-batching tenant's
-/// persisted secret key must not become undecodable on upgrade.
+/// v2 and v3, so v1 frames of every *other* kind (client key files,
+/// eval-key bundles, ciphertexts, params) stay readable — a pre-batching
+/// tenant's persisted secret key must not become undecodable on upgrade.
 pub const MIN_VERSION: u16 = 1;
 
 /// Fixed frame header size (magic + version + kind + reserved + length).
@@ -63,6 +64,10 @@ pub const KIND_NET_LOGITS: u8 = 21;
 /// snapshot reply. Served off the metrics/plan-cache state only — never
 /// touches the HE pipeline.
 pub const KIND_NET_STATUS: u8 = 22;
+/// Decision-mode response (DESIGN.md S20): same ciphertext payload shape
+/// as `KIND_NET_LOGITS` plus the output-mode triple the plan evaluated,
+/// so a client can't silently misread an argmax indicator as raw scores.
+pub const KIND_NET_DECISION: u8 = 23;
 
 /// FNV-1a 64-bit over a byte slice (integrity only — tamper *detection*,
 /// not authentication; see the threat model in DESIGN.md S15).
@@ -126,12 +131,13 @@ pub fn unframe(expected_kind: u8, bytes: &[u8]) -> Result<&[u8]> {
         "unsupported wire version {version}"
     );
     let kind = bytes[6];
-    // the one payload that changed shape in v2: old bundles would
-    // mis-parse the batch field as the ciphertext count
+    // the one payload whose shape changed in v2 (slot-batch field) and
+    // again in v3 (output-mode triple): old bundles would mis-parse the
+    // new fields as the ciphertext count
     ensure!(
-        !(version < 2 && kind == KIND_CT_BUNDLE),
-        "v1 ciphertext bundles are not readable by the batched (v2) \
-         format — re-encrypt the request"
+        !(version < 3 && kind == KIND_CT_BUNDLE),
+        "pre-v3 ciphertext bundles are not readable by the decision-mode \
+         (v3) format — re-encrypt the request"
     );
     ensure!(
         kind == expected_kind,
@@ -366,15 +372,20 @@ mod tests {
     #[test]
     fn test_version_window() {
         let payload = b"legacy".to_vec();
-        // v1 frames stay readable for kinds whose payload never changed
+        // v1/v2 frames stay readable for kinds whose payload never changed
         let v1 = frame_v(1, KIND_CLIENT_KEYS, &payload);
         assert_eq!(unframe(KIND_CLIENT_KEYS, &v1).unwrap(), payload.as_slice());
-        // ...but not for the bundle kind, whose payload grew a field
-        let v1_bundle = frame_v(1, KIND_CT_BUNDLE, &payload);
-        assert!(unframe(KIND_CT_BUNDLE, &v1_bundle).is_err());
+        let v2 = frame_v(2, KIND_CLIENT_KEYS, &payload);
+        assert_eq!(unframe(KIND_CLIENT_KEYS, &v2).unwrap(), payload.as_slice());
+        // ...but not for the bundle kind, whose payload grew a field in
+        // v2 (slot batch) and again in v3 (output mode)
+        for old in [1u16, 2] {
+            let bundle = frame_v(old, KIND_CT_BUNDLE, &payload);
+            assert!(unframe(KIND_CT_BUNDLE, &bundle).is_err(), "v{old} bundle");
+        }
         // versions outside the window are rejected either side
         assert!(unframe(KIND_CLIENT_KEYS, &frame_v(0, KIND_CLIENT_KEYS, &payload)).is_err());
-        assert!(unframe(KIND_CLIENT_KEYS, &frame_v(3, KIND_CLIENT_KEYS, &payload)).is_err());
+        assert!(unframe(KIND_CLIENT_KEYS, &frame_v(4, KIND_CLIENT_KEYS, &payload)).is_err());
     }
 
     #[test]

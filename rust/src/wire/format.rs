@@ -12,6 +12,7 @@ use super::codec::{
 use crate::ckks::keys::KskDigit;
 use crate::ckks::poly::RnsPoly;
 use crate::ckks::{Ciphertext, CkksParams, EvalEngine, EvalKeys, KeySwitchKey, PublicKey};
+use crate::he_infer::OutputMode;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -121,6 +122,24 @@ fn read_params_payload(r: &mut ByteReader) -> Result<CkksParams> {
         special_bits,
         allow_insecure,
     })
+}
+
+/// Serialize an output mode as its (tag, aux, cutoff_bits) wire triple —
+/// the one encoding shared by `CtBundle`, the `NET_INFER` header, and the
+/// `NET_DECISION` response (DESIGN.md S20).
+pub(crate) fn write_output_mode(w: &mut ByteWriter, mode: OutputMode) {
+    w.put_u8(mode.tag());
+    w.put_u32(mode.aux());
+    w.put_u64(mode.cutoff_bits());
+}
+
+/// Parse an output-mode triple, rejecting forged tags and non-finite
+/// threshold cutoffs typed (`OutputMode::from_wire` never panics).
+pub(crate) fn read_output_mode(r: &mut ByteReader) -> Result<OutputMode> {
+    let tag = r.u8()?;
+    let aux = r.u32()?;
+    let cutoff_bits = r.u64()?;
+    OutputMode::from_wire(tag, aux, cutoff_bits)
 }
 
 /// Content hash of a parameter set — stamped into ciphertext bundles so a
@@ -364,6 +383,10 @@ pub struct CtBundle {
     /// Distinct clips slot-packed into the block copies (1 = the legacy
     /// replicated single-clip layout).
     pub batch: usize,
+    /// Output mode the client is requesting for this inference (v3;
+    /// DESIGN.md S20). The serving side rejects a mode the registered
+    /// plan was not compiled for — it never silently substitutes.
+    pub mode: OutputMode,
     pub cts: Vec<Ciphertext>,
 }
 
@@ -377,8 +400,16 @@ impl CtBundle {
         CtBundle {
             params_hash: params_hash(params),
             batch,
+            mode: OutputMode::Logits,
             cts,
         }
+    }
+
+    /// Stamp the requested output mode (builder-style; defaults to
+    /// `Logits`, the pre-v3 behavior).
+    pub fn with_mode(mut self, mode: OutputMode) -> Self {
+        self.mode = mode;
+        self
     }
 
     /// Reject a bundle encrypted under a different parameter set.
@@ -397,6 +428,7 @@ impl WireSerialize for CtBundle {
     fn write_payload(&self, w: &mut ByteWriter) {
         w.put_u64(self.params_hash);
         w.put_u32(self.batch as u32);
+        write_output_mode(w, self.mode);
         w.put_u32(self.cts.len() as u32);
         for ct in &self.cts {
             ct.write_payload(w);
@@ -410,6 +442,7 @@ impl WireSerialize for CtBundle {
             (1..=MAX_BATCH).contains(&batch),
             "wire ciphertext bundle: bad slot-batch size {batch}"
         );
+        let mode = read_output_mode(r)?;
         let count = r.u32()? as usize;
         ensure!(
             (1..=4096).contains(&count),
@@ -418,7 +451,7 @@ impl WireSerialize for CtBundle {
         let cts = (0..count)
             .map(|_| Ciphertext::read_payload(r))
             .collect::<Result<Vec<_>>>()?;
-        Ok(CtBundle { params_hash, batch, cts })
+        Ok(CtBundle { params_hash, batch, mode, cts })
     }
 }
 
@@ -520,6 +553,44 @@ mod tests {
                 "batch {bad_batch} must be rejected at ingress"
             );
         }
+    }
+
+    #[test]
+    fn test_ct_bundle_mode_roundtrip_and_forged_mode_rejected() {
+        let e = tiny_engine();
+        let cts = vec![e.encrypt(&[1.0])];
+        for mode in [
+            OutputMode::Logits,
+            OutputMode::Argmax,
+            OutputMode::TopK(2),
+            OutputMode::Threshold { class: 1, cutoff_bits: 0.25f64.to_bits() },
+        ] {
+            let bundle = CtBundle::new(&e.ctx.params, cts.clone()).with_mode(mode);
+            let back = CtBundle::from_bytes(&bundle.to_bytes()).unwrap();
+            assert_eq!(back.mode, mode);
+            assert_eq!(bundle, back);
+        }
+        // a forged mode tag or a non-finite threshold cutoff is rejected
+        // at the reader, typed, before any ciphertext is parsed
+        let forge = |mode_tag: u8, cutoff_bits: u64| {
+            let good = CtBundle::new(&e.ctx.params, cts.clone());
+            let bytes = frame_with(KIND_CT_BUNDLE, |w| {
+                w.put_u64(good.params_hash);
+                w.put_u32(1);
+                w.put_u8(mode_tag);
+                w.put_u32(0);
+                w.put_u64(cutoff_bits);
+                w.put_u32(good.cts.len() as u32);
+                for ct in &good.cts {
+                    ct.write_payload(w);
+                }
+            });
+            CtBundle::from_bytes(&bytes)
+        };
+        let err = forge(9, 0).unwrap_err().to_string();
+        assert!(err.contains("unknown output-mode tag 9"), "got: {err}");
+        let err = forge(3, f64::NAN.to_bits()).unwrap_err().to_string();
+        assert!(err.contains("not a finite number"), "got: {err}");
     }
 
     #[test]

@@ -44,12 +44,15 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::ckks::Ciphertext;
 use crate::coordinator::{Coordinator, Metrics};
+use crate::he_infer::OutputMode;
 use crate::wire::codec::{
-    frame_with, unframe, ByteReader, CHECKSUM_LEN, HEADER_LEN, KIND_CIPHERTEXT, KIND_NET_ERROR,
-    KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER,
-    KIND_NET_STATUS, MAGIC, MIN_VERSION, VERSION,
+    frame_with, unframe, ByteReader, CHECKSUM_LEN, HEADER_LEN, KIND_CIPHERTEXT,
+    KIND_NET_DECISION, KIND_NET_ERROR, KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS,
+    KIND_NET_OK, KIND_NET_REGISTER, KIND_NET_STATUS, MAGIC, MIN_VERSION, VERSION,
 };
-use crate::wire::format::{CtBundle, EvalKeySet, WireSerialize, MAX_BATCH};
+use crate::wire::format::{
+    read_output_mode, write_output_mode, CtBundle, EvalKeySet, WireSerialize, MAX_BATCH,
+};
 use crate::wire::server::WireExecutor;
 
 /// Protocol revision carried in the hello frame; bumped independently of
@@ -67,6 +70,11 @@ pub const ERR_OVER_QUOTA: u32 = 5;
 pub const ERR_REJECTED: u32 = 6;
 pub const ERR_TIMEOUT: u32 = 7;
 pub const ERR_INTERNAL: u32 = 8;
+/// The request asked for an output mode the server's plans were not
+/// compiled for (DESIGN.md S20). Refused at the `NET_INFER` header —
+/// announced ciphertext frames are drained so the connection stays in
+/// sync — and never silently served with a different output shape.
+pub const ERR_MODE_MISMATCH: u32 = 9;
 
 /// Stable text token for an error code (part of the wire contract: the
 /// fault suites assert on these substrings).
@@ -80,6 +88,7 @@ pub fn err_name(code: u32) -> &'static str {
         ERR_REJECTED => "rejected",
         ERR_TIMEOUT => "timeout",
         ERR_INTERNAL => "internal",
+        ERR_MODE_MISMATCH => "mode-mismatch",
         _ => "unknown",
     }
 }
@@ -142,6 +151,7 @@ pub trait NetBackend: Send + Sync + 'static {
     /// `NET_INFER` header so an unknown tenant is refused *before* the
     /// server ingests its ciphertexts.
     fn is_registered(&self, tenant: &str) -> bool;
+    #[allow(clippy::too_many_arguments)]
     fn infer(
         &self,
         tenant: &str,
@@ -149,7 +159,15 @@ pub trait NetBackend: Send + Sync + 'static {
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
     ) -> Result<InferOutcome>;
+    /// The output mode this backend's plans are compiled to answer with
+    /// (DESIGN.md S20). Consulted at the `NET_INFER` header so a request
+    /// for any other mode is refused *before* ciphertext ingest. Default:
+    /// logits — mocks inherit it and compile unchanged.
+    fn output_mode(&self) -> OutputMode {
+        OutputMode::Logits
+    }
     /// Backend-specific slice of the `NET_STATUS` snapshot (the production
     /// backend reports its plan-cache contents). Empty string = omit the
     /// `"backend"` key; mocks inherit this default and compile unchanged.
@@ -189,6 +207,7 @@ impl NetBackend for CoordinatorBackend {
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
     ) -> Result<InferOutcome> {
         let resp = self.coordinator.infer_blocking_encrypted(
             tenant.to_string(),
@@ -196,6 +215,7 @@ impl NetBackend for CoordinatorBackend {
             cts,
             params_hash,
             batch,
+            mode,
             None,
         )?;
         if let Some(e) = resp.error {
@@ -205,6 +225,10 @@ impl NetBackend for CoordinatorBackend {
             .ct_logits
             .ok_or_else(|| anyhow!("coordinator returned neither logits nor an error"))?;
         Ok(InferOutcome { variant: resp.variant, ct_logits, queue: resp.queue, exec: resp.exec })
+    }
+
+    fn output_mode(&self) -> OutputMode {
+        self.executor.output_mode()
     }
 
     fn status_json(&self) -> String {
@@ -257,11 +281,14 @@ pub fn parse_status_frame(frame: &[u8]) -> Result<String> {
 }
 
 /// The `NET_INFER` header announcing a streamed upload of `ct_count`
-/// ciphertext frames.
+/// ciphertext frames. `mode` is the output mode the client requests
+/// (DESIGN.md S20) — checked against the server's compiled plans at
+/// admission, before any ciphertext is ingested.
 pub fn infer_header_frame(
     variant: Option<&str>,
     params_hash: Option<u64>,
     batch: usize,
+    mode: OutputMode,
     ct_count: usize,
 ) -> Vec<u8> {
     frame_with(KIND_NET_INFER, |w| {
@@ -269,6 +296,7 @@ pub fn infer_header_frame(
         w.put_u8(params_hash.is_some() as u8);
         w.put_u64(params_hash.unwrap_or(0));
         w.put_u64(batch as u64);
+        write_output_mode(w, mode);
         w.put_u32(ct_count as u32);
     })
 }
@@ -327,6 +355,7 @@ struct InferHeader {
     variant: Option<String>,
     params_hash: Option<u64>,
     batch: usize,
+    mode: OutputMode,
     ct_count: usize,
 }
 
@@ -337,6 +366,8 @@ fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
     let has_hash = r.flag()?;
     let hash = r.u64()?;
     let batch = r.u64()? as usize;
+    // a forged mode tag errors typed here, before the count is even read
+    let mode = read_output_mode(&mut r)?;
     let ct_count = r.u32()? as usize;
     r.finish()?;
     ensure!(
@@ -351,6 +382,7 @@ fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
         variant: if variant.is_empty() { None } else { Some(variant) },
         params_hash: has_hash.then_some(hash),
         batch,
+        mode,
         ct_count,
     })
 }
@@ -373,6 +405,35 @@ fn parse_logits_frame(frame: &[u8]) -> Result<InferOutcome> {
     let ct_logits = Ciphertext::read_payload(&mut r)?;
     r.finish()?;
     Ok(InferOutcome { variant, ct_logits, queue, exec })
+}
+
+/// Decision-mode response (DESIGN.md S20): the logits-frame payload
+/// prefixed with the output-mode triple the plan evaluated, so the reply
+/// is self-describing — a client can never misread an argmax indicator
+/// ciphertext as raw class scores.
+fn decision_frame(out: &InferOutcome, mode: OutputMode) -> Vec<u8> {
+    frame_with(KIND_NET_DECISION, |w| {
+        write_output_mode(w, mode);
+        w.put_str(&out.variant);
+        w.put_u64(out.queue.as_micros() as u64);
+        w.put_u64(out.exec.as_micros() as u64);
+        out.ct_logits.write_payload(w);
+    })
+}
+
+/// Parse a `NET_DECISION` reply. Public for the client and the
+/// hostile-frame fuzz suite: forged mode tags, non-finite cutoffs, and
+/// truncated payloads all error typed — never panic.
+pub fn parse_decision_frame(frame: &[u8]) -> Result<(OutputMode, InferOutcome)> {
+    let payload = unframe(KIND_NET_DECISION, frame)?;
+    let mut r = ByteReader::new(payload);
+    let mode = read_output_mode(&mut r)?;
+    let variant = r.str()?;
+    let queue = Duration::from_micros(r.u64()?);
+    let exec = Duration::from_micros(r.u64()?);
+    let ct_logits = Ciphertext::read_payload(&mut r)?;
+    r.finish()?;
+    Ok((mode, InferOutcome { variant, ct_logits, queue, exec }))
 }
 
 // ---------------------------------------------------------------------------
@@ -887,6 +948,20 @@ fn serve_infer(
             format!("tenant {tenant} has no registered eval keys (send a register frame first)"),
         ));
     }
+    if reject.is_none() && hdr.mode != shared.backend.output_mode() {
+        // a mode the serving plans were not compiled for is refused here,
+        // typed, with the announced frames drained below — never silently
+        // answered with a different output shape
+        reject = Some((
+            ERR_MODE_MISMATCH,
+            format!(
+                "request asked for output mode {} but this server's plans are \
+                 compiled for {}",
+                hdr.mode,
+                shared.backend.output_mode()
+            ),
+        ));
+    }
     let slot = if reject.is_none() {
         match TenantSlot::acquire(&shared.inflight, tenant, shared.cfg.max_inflight_per_tenant) {
             Some(slot) => Some(slot),
@@ -950,10 +1025,18 @@ fn serve_infer(
         }
     }
 
-    let outcome = shared.backend.infer(tenant, hdr.variant, cts, hdr.params_hash, hdr.batch);
+    let outcome =
+        shared.backend.infer(tenant, hdr.variant, cts, hdr.params_hash, hdr.batch, hdr.mode);
     drop(slot); // release the in-flight quota before writing the reply
     match outcome {
-        Ok(out) => send_bytes(io, &logits_frame(&out)).is_ok(),
+        Ok(out) => {
+            let reply = if matches!(hdr.mode, OutputMode::Logits) {
+                logits_frame(&out)
+            } else {
+                decision_frame(&out, hdr.mode)
+            };
+            send_bytes(io, &reply).is_ok()
+        }
         Err(e) => {
             metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
             send_error(io, ERR_REJECTED, &format!("{e:#}")).is_ok()
@@ -1031,19 +1114,35 @@ impl Client {
 
     /// Upload a request bundle (streamed: header frame, then one codec
     /// frame per ciphertext — byte-identical to `Ciphertext::to_bytes`)
-    /// and block for the encrypted logits.
+    /// and block for the encrypted result. The bundle's `mode` selects
+    /// the expected reply: raw logits arrive as a `NET_LOGITS` frame,
+    /// decision modes as a `NET_DECISION` frame whose echoed mode must
+    /// match the request — a server answering a different mode is a typed
+    /// error, not a silently misread ciphertext.
     pub fn infer(&mut self, variant: Option<&str>, bundle: &CtBundle) -> Result<InferOutcome> {
         self.send(&infer_header_frame(
             variant,
             Some(bundle.params_hash),
             bundle.batch,
+            bundle.mode,
             bundle.cts.len(),
         ))?;
         for ct in &bundle.cts {
             self.send(&ct.to_bytes())?;
         }
-        let reply = self.expect_reply(KIND_NET_LOGITS)?;
-        parse_logits_frame(&reply)
+        if matches!(bundle.mode, OutputMode::Logits) {
+            let reply = self.expect_reply(KIND_NET_LOGITS)?;
+            parse_logits_frame(&reply)
+        } else {
+            let reply = self.expect_reply(KIND_NET_DECISION)?;
+            let (mode, out) = parse_decision_frame(&reply)?;
+            ensure!(
+                mode == bundle.mode,
+                "server answered output mode {mode}, request asked for {}",
+                bundle.mode
+            );
+            Ok(out)
+        }
     }
 
     /// Fetch the server's live status snapshot — metrics registers,
@@ -1095,19 +1194,35 @@ mod tests {
 
     #[test]
     fn test_infer_header_roundtrip_and_bounds() {
-        let f = infer_header_frame(Some("lingcn-nl2"), Some(7), 2, 3);
+        let f = infer_header_frame(Some("lingcn-nl2"), Some(7), 2, OutputMode::Argmax, 3);
         let h = parse_infer_header(&f, 16).unwrap();
         assert_eq!(h.variant.as_deref(), Some("lingcn-nl2"));
         assert_eq!(h.params_hash, Some(7));
         assert_eq!(h.batch, 2);
+        assert_eq!(h.mode, OutputMode::Argmax);
         assert_eq!(h.ct_count, 3);
         // empty variant string travels as None; absent hash as None
-        let h = parse_infer_header(&infer_header_frame(None, None, 1, 1), 16).unwrap();
+        let lo = OutputMode::Logits;
+        let h = parse_infer_header(&infer_header_frame(None, None, 1, lo, 1), 16).unwrap();
         assert!(h.variant.is_none() && h.params_hash.is_none());
+        assert_eq!(h.mode, OutputMode::Logits);
         // count over the server budget is rejected at the header
-        assert!(parse_infer_header(&infer_header_frame(None, None, 1, 17), 16).is_err());
-        assert!(parse_infer_header(&infer_header_frame(None, None, 0, 1), 16).is_err());
-        assert!(parse_infer_header(&infer_header_frame(None, None, 1, 0), 16).is_err());
+        assert!(parse_infer_header(&infer_header_frame(None, None, 1, lo, 17), 16).is_err());
+        assert!(parse_infer_header(&infer_header_frame(None, None, 0, lo, 1), 16).is_err());
+        assert!(parse_infer_header(&infer_header_frame(None, None, 1, lo, 0), 16).is_err());
+        // a forged mode tag in the header errors typed, never panics
+        let forged = frame_with(KIND_NET_INFER, |w| {
+            w.put_str("");
+            w.put_u8(0);
+            w.put_u64(0);
+            w.put_u64(1);
+            w.put_u8(42); // no such mode tag
+            w.put_u32(0);
+            w.put_u64(0);
+            w.put_u32(1);
+        });
+        let err = parse_infer_header(&forged, 16).unwrap_err().to_string();
+        assert!(err.contains("unknown output-mode tag 42"), "{err}");
     }
 
     #[test]
@@ -1121,6 +1236,7 @@ mod tests {
             (ERR_REJECTED, "rejected"),
             (ERR_TIMEOUT, "timeout"),
             (ERR_INTERNAL, "internal"),
+            (ERR_MODE_MISMATCH, "mode-mismatch"),
         ] {
             assert_eq!(err_name(code), name);
         }
@@ -1219,5 +1335,39 @@ mod tests {
             w.put_u8(0xAB);
         });
         assert!(parse_logits_frame(&f).is_err());
+    }
+
+    #[test]
+    fn test_decision_frame_rejects_forged_and_truncated_payloads() {
+        // forged mode tag ahead of an otherwise plausible payload
+        let forged_tag = frame_with(KIND_NET_DECISION, |w| {
+            w.put_u8(9);
+            w.put_u32(0);
+            w.put_u64(0);
+            w.put_str("v");
+            w.put_u64(1);
+            w.put_u64(2);
+        });
+        let err = parse_decision_frame(&forged_tag).unwrap_err().to_string();
+        assert!(err.contains("unknown output-mode tag 9"), "{err}");
+        // a NaN threshold cutoff is refused before the ciphertext parse
+        let nan_cutoff = frame_with(KIND_NET_DECISION, |w| {
+            w.put_u8(3);
+            w.put_u32(1);
+            w.put_u64(f64::NAN.to_bits());
+            w.put_str("v");
+        });
+        assert!(parse_decision_frame(&nan_cutoff).is_err());
+        // garbage where the ciphertext should be is a decode error
+        let garbage_ct = frame_with(KIND_NET_DECISION, |w| {
+            w.put_u8(1);
+            w.put_u32(0);
+            w.put_u64(0);
+            w.put_str("v");
+            w.put_u64(1);
+            w.put_u64(2);
+            w.put_u8(0xAB);
+        });
+        assert!(parse_decision_frame(&garbage_ct).is_err());
     }
 }

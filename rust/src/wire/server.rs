@@ -10,7 +10,9 @@ use super::format::EvalKeySet;
 use crate::ckks::{Ciphertext, EvalEngine};
 use crate::coordinator::{InferenceExecutor, KeyRegistry, Metrics};
 use crate::he_infer::exec::{cached_slot_capacity, plan_for, record_opt_metrics, PlanKey};
-use crate::he_infer::{session_geometry, HePlan, PlanChain, PlanOptions, PreparedPlan};
+use crate::he_infer::{
+    sgn, session_geometry, HePlan, OutputMode, PlanChain, PlanOptions, PreparedPlan, SgnPreset,
+};
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::HashMap;
@@ -95,6 +97,24 @@ impl WireExecutor {
     /// keep working; the flag only selects which plan family serves.
     pub fn set_optimize(&mut self, optimize: bool) {
         self.opts.optimize = optimize;
+    }
+
+    /// Select the decision circuit the serving plans are compiled with
+    /// (DESIGN.md S20). Like [`WireExecutor::set_optimize`], call before
+    /// serving traffic. Unlike the optimizer flag, this **does** change
+    /// `required_rotations` and the chain depth, so tenants must keygen
+    /// against the same mode — requests asking for any other mode are
+    /// rejected at ingress, never silently answered with a different
+    /// output shape.
+    pub fn set_output_mode(&mut self, mode: OutputMode, preset: SgnPreset, bound: f64) {
+        self.opts.output_mode = mode;
+        self.opts.sgn_preset = preset;
+        self.opts.set_logit_bound(bound);
+    }
+
+    /// The output mode this executor's plans are compiled to answer with.
+    pub fn output_mode(&self) -> OutputMode {
+        self.opts.output_mode
     }
 
     /// Register (or replace) a tenant's evaluation keys. Fails — before
@@ -247,7 +267,18 @@ impl InferenceExecutor for WireExecutor {
         cts: &[Ciphertext],
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
     ) -> Result<Ciphertext> {
+        // the requested mode must be the one the serving plans were
+        // compiled for: a silent substitution would hand the client a
+        // ciphertext whose slots mean something else than it asked for
+        ensure!(
+            mode == self.opts.output_mode,
+            "output mode mismatch: request asked for {mode} but this tier's \
+             serving plans are compiled for {} — re-send with the served \
+             mode or restart the server with --output-mode {mode}",
+            self.opts.output_mode
+        );
         let entry = self
             .registry
             .get(tenant)
@@ -273,7 +304,22 @@ impl InferenceExecutor for WireExecutor {
                 .all(|ct| ct.c0.is_reduced(&entry.engine.ctx) && ct.c1.is_reduced(&entry.engine.ctx)),
             "request ciphertext residues are not reduced modulo the chain"
         );
-        session.prepared.execute(&entry.engine, cts, self.threads)
+        let ct = session.prepared.execute(&entry.engine, cts, self.threads)?;
+        // decision accounting mirrors HeExecutor: sign-stage volume plus
+        // one per-mode request count (DESIGN.md S20)
+        if !matches!(mode, OutputMode::Logits) {
+            if let (Some(m), Some(model)) = (&self.metrics, self.models.get(variant)) {
+                let stages = sgn::sign_stage_count(mode, self.opts.sgn_preset, model.num_classes());
+                m.sign_stages.fetch_add(stages, Ordering::Relaxed);
+                let field = match mode {
+                    OutputMode::Argmax => &m.decisions_argmax,
+                    OutputMode::TopK(_) => &m.decisions_topk,
+                    _ => &m.decisions_threshold,
+                };
+                field.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(ct)
     }
 }
 
@@ -299,7 +345,7 @@ mod tests {
         let ex = executor(&model, 4);
         assert!(ex.infer("v", &[0.0]).is_err(), "plaintext path must be closed");
         assert!(
-            ex.infer_encrypted("v", "nobody", &[], None, 1).is_err(),
+            ex.infer_encrypted("v", "nobody", &[], None, 1, OutputMode::Logits).is_err(),
             "unregistered tenant must be rejected"
         );
     }
@@ -320,12 +366,16 @@ mod tests {
         let cts = client.encrypt_clip(&x).unwrap();
         let hash = Some(crate::wire::params_hash(&client.params));
         // a wrong stamp is rejected before any HE work
-        assert!(ex.infer_encrypted("v", "alice", &cts, Some(0xdead), 1).is_err());
-        let ct = ex.infer_encrypted("v", "alice", &cts, hash, 1).unwrap();
+        assert!(ex
+            .infer_encrypted("v", "alice", &cts, Some(0xdead), 1, OutputMode::Logits)
+            .is_err());
+        let ct = ex.infer_encrypted("v", "alice", &cts, hash, 1, OutputMode::Logits).unwrap();
         let got = client.decrypt_logits(&ct).unwrap();
         let argmax = crate::util::argmax;
         assert_eq!(argmax(&got), argmax(&want));
-        assert!(ex.infer_encrypted("missing", "alice", &cts, hash, 1).is_err());
+        assert!(ex
+            .infer_encrypted("missing", "alice", &cts, hash, 1, OutputMode::Logits)
+            .is_err());
     }
 
     #[test]
@@ -338,7 +388,7 @@ mod tests {
         let n = model.v() * model.c_in * model.t;
         let x: Vec<f64> = (0..n).map(|i| (i as f64 / 7.0).sin()).collect();
         let cts = client.encrypt_clip(&x).unwrap();
-        ex.infer_encrypted("v", "alice", &cts, None, 1).unwrap();
+        ex.infer_encrypted("v", "alice", &cts, None, 1, OutputMode::Logits).unwrap();
         let json = ex.status_json();
         assert!(json.contains("\"variant\":\"v\""), "{json}");
         assert!(json.contains("\"batch\":1"), "{json}");
@@ -360,14 +410,40 @@ mod tests {
         let hash = Some(crate::wire::params_hash(&client.params));
         // batch = 0 and batch > copies() both error cleanly at ingress
         for forged in [0usize, copies + 1, usize::MAX] {
-            let err = ex.infer_encrypted("v", "alice", &cts, hash, forged).unwrap_err();
+            let err = ex
+                .infer_encrypted("v", "alice", &cts, hash, forged, OutputMode::Logits)
+                .unwrap_err();
             let msg = format!("{err:#}");
             assert!(msg.contains("ingress") || msg.contains("outside 1..="), "{msg}");
         }
         // a *plausible* forged batch (> 1 but within copies) on keys cut
         // for the single-clip plan is refused by rotation coverage — it
         // never executes, so it can never mis-slice logits
-        let err = ex.infer_encrypted("v", "alice", &cts, hash, 2).unwrap_err();
+        let err = ex
+            .infer_encrypted("v", "alice", &cts, hash, 2, OutputMode::Logits)
+            .unwrap_err();
         assert!(format!("{err:#}").contains("do not cover"), "{err:#}");
+    }
+
+    #[test]
+    fn test_output_mode_mismatch_rejected_before_any_he_work() {
+        let model = tiny();
+        let mut ex = executor(&model, 4);
+        assert_eq!(ex.output_mode(), OutputMode::Logits);
+        // the mode check fires before the registry lookup — no tenant, no
+        // keys, no HE work, yet the error is the typed mode mismatch
+        let err = ex
+            .infer_encrypted("v", "alice", &[], None, 1, OutputMode::Argmax)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("output mode mismatch"), "{msg}");
+        assert!(msg.contains("compiled for logits"), "{msg}");
+        // flipping the served mode flips which requests are refused
+        ex.set_output_mode(OutputMode::Argmax, SgnPreset::Fast, 4.0);
+        assert_eq!(ex.output_mode(), OutputMode::Argmax);
+        let err = ex
+            .infer_encrypted("v", "alice", &[], None, 1, OutputMode::Logits)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("output mode mismatch"), "{err:#}");
     }
 }

@@ -199,6 +199,73 @@ fn test_inspect_renders_a_plan_text_file_in_every_format() {
 }
 
 #[test]
+fn test_output_mode_flags_validated_before_any_work() {
+    // every verb that grows the decision flags (ISSUE 9) fails fast on
+    // nonsense values — before artifacts, key files, or sockets
+    for verb in [
+        vec!["infer", "--nl", "2", "--encrypted"],
+        vec!["keygen", "--nl", "2"],
+        vec!["inspect", "--artifacts"],
+        vec!["infer-remote", "--addr", "127.0.0.1:1"],
+        vec!["serve", "--tier", "he", "--requests", "1"],
+        vec!["serve", "--tier", "he-wire", "--listen", "127.0.0.1:0"],
+    ] {
+        for (flag, bad, want) in [
+            ("--output-mode", "argmin", "unknown output mode"),
+            ("--output-mode", "topk:x", "not a number"),
+            ("--output-mode", "threshold", "needs a class"),
+            ("--sgn-preset", "turbo", "unknown sign preset"),
+            ("--logit-bound", "-1", "positive finite"),
+            ("--logit-bound", "nope", "not a number"),
+        ] {
+            let mut a = verb.clone();
+            a.extend([flag, bad]);
+            let err = run(&args(&a))
+                .expect_err(&format!("{verb:?} must reject {flag} {bad}"));
+            assert!(
+                format!("{err:#}").contains(want),
+                "{verb:?} {flag} {bad}: wanted {want:?}, got {err:#}"
+            );
+        }
+    }
+    // `encrypt` only takes the mode (it stamps the bundle), but still
+    // validates it before reading the key file
+    let err = run(&args(&["encrypt", "--key", "no-such.key", "--output-mode", "argmin"]))
+        .expect_err("encrypt must reject a bad mode");
+    assert!(format!("{err:#}").contains("unknown output mode"), "got: {err:#}");
+}
+
+#[test]
+fn test_output_mode_rejected_on_plaintext_paths() {
+    // the decision circuit runs on ciphertexts: plaintext infer and the
+    // plaintext serving tier name the misuse instead of ignoring it
+    let err = run(&args(&["infer", "--nl", "2", "--output-mode", "argmax"]))
+        .expect_err("plaintext infer must reject --output-mode");
+    assert!(format!("{err:#}").contains("--encrypted"), "got: {err:#}");
+    let err = run(&args(&[
+        "serve", "--tier", "plaintext", "--output-mode", "argmax", "--requests", "1",
+    ]))
+    .expect_err("plaintext tier must reject --output-mode");
+    assert!(format!("{err:#}").contains("--tier he"), "got: {err:#}");
+}
+
+#[test]
+fn test_decrypt_decision_needs_a_mode_source() {
+    // without --output-mode or --request there is no way to know how to
+    // read the indicator slots: a named error pointing at both, before
+    // any key/ciphertext file is opened
+    let err = run(&args(&["decrypt-decision", "--key", "no-such.key"]))
+        .expect_err("decrypt-decision needs a mode source");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--output-mode") && msg.contains("--request"),
+        "must point at both mode sources, got: {msg}"
+    );
+    // a bad mode string fails fast here too
+    assert!(run(&args(&["decrypt-decision", "--key", "k", "--output-mode", "argmin"])).is_err());
+}
+
+#[test]
 fn test_status_requires_addr_and_validates_flags_first() {
     let err = run(&args(&["status"])).expect_err("status needs --addr");
     assert!(format!("{err:#}").contains("--addr"), "got: {err:#}");

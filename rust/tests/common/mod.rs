@@ -12,7 +12,7 @@
 use lingcn::ama::AmaLayout;
 use lingcn::ckks::CkksParams;
 use lingcn::graph::Graph;
-use lingcn::he_infer::{HeStgcn, PlanOptions, PrivateInferenceSession};
+use lingcn::he_infer::{HeStgcn, PlanOptions, PrivateInferenceSession, SgnPreset};
 use lingcn::linearize::LinearizationPlan;
 use lingcn::stgcn::StgcnModel;
 
@@ -90,6 +90,47 @@ pub fn clip_seeded(model: &StgcnModel, seed: usize) -> Vec<f64> {
 /// The historical fixed clip (`clip_seeded` at seed 0).
 pub fn clip(model: &StgcnModel) -> Vec<f64> {
     clip_seeded(model, 0)
+}
+
+/// A clip whose plaintext decision the sign presets can certify, with
+/// the margins the decision suites assert against (ISSUE 9).
+pub struct MarginClip {
+    pub clip: Vec<f64>,
+    pub logits: Vec<f64>,
+    /// Top-2 logit gap — the argmax certification margin.
+    pub margin: f64,
+    /// Logit bound B covering this clip's scores with 25% headroom.
+    pub bound: f64,
+}
+
+/// Scan `seeds` deterministic clips and return the one with the widest
+/// *relative* top-2 logit margin. The sign presets only certify inputs
+/// with |x| ≥ δ after normalizing by 1/(2B), so decision suites must
+/// feed clips whose margin clears δ·2B — this picks the best candidate
+/// deterministically instead of hoping seed 0 qualifies.
+pub fn widest_margin_clip(model: &StgcnModel, seeds: usize) -> MarginClip {
+    let mut best: Option<MarginClip> = None;
+    for s in 0..seeds {
+        let clip = clip_seeded(model, s);
+        let logits = model.forward(&clip).unwrap();
+        let mut srt = logits.clone();
+        srt.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let margin = srt[0] - srt[1];
+        let peak = logits.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        let bound = (peak * 1.25).max(1e-3);
+        if best.as_ref().map_or(true, |b| margin / bound > b.margin / b.bound) {
+            best = Some(MarginClip { clip, logits, margin, bound });
+        }
+    }
+    best.expect("widest_margin_clip needs seeds >= 1")
+}
+
+/// The loosest (cheapest) sign preset whose resolution certifies a
+/// top-2 `margin` at logit bound `bound` (margin ≥ δ·2B), if any.
+pub fn certifying_preset(margin: f64, bound: f64) -> Option<SgnPreset> {
+    [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise]
+        .into_iter()
+        .find(|p| margin >= p.delta() * 2.0 * bound)
 }
 
 /// Two encrypted runs of the same math agree to CKKS noise: relative to

@@ -27,10 +27,16 @@
 
 mod common;
 
-use common::{clip_seeded, probe_levels, session_for_opts, variants};
+use common::{
+    certifying_preset, clip_seeded, probe_levels, session_for_opts, toy_params, variants,
+    widest_margin_clip,
+};
 use lingcn::ama::AmaLayout;
 use lingcn::ckks::OpCounts;
-use lingcn::he_infer::{compile, HePlan, PlanChain, PlanOptions};
+use lingcn::he_infer::{
+    compile, HePlan, HeStgcn, OutputMode, PlanChain, PlanOptions, PrivateInferenceSession,
+    SgnPreset,
+};
 use lingcn::stgcn::StgcnModel;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
@@ -163,6 +169,113 @@ fn golden_reference_logits() {
             }
             check_fixture(&format!("{name}_b{batch}.logits"), &s);
         }
+    }
+}
+
+/// The decision-mode combo matrix the golden fixtures pin: one combo per
+/// output mode, each at a different preset (ISSUE 9).
+fn decision_combos() -> Vec<(&'static str, OutputMode, SgnPreset)> {
+    vec![
+        ("argmax", OutputMode::Argmax, SgnPreset::Fast),
+        ("topk1", OutputMode::TopK(1), SgnPreset::Balanced),
+        ("thr1", OutputMode::threshold(1, 0.25), SgnPreset::Precise),
+    ]
+}
+
+fn compile_decision_pair(
+    model: &StgcnModel,
+    mode: OutputMode,
+    preset: SgnPreset,
+) -> (HePlan, HePlan) {
+    let layout = AmaLayout::new(8, 4, 256).unwrap();
+    let mut he = HeStgcn::new(model, layout).unwrap();
+    he.output_mode = mode;
+    he.sgn_preset = preset;
+    let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+    let opts = |optimize| PlanOptions {
+        optimize,
+        output_mode: mode,
+        sgn_preset: preset,
+        ..Default::default()
+    };
+    let raw = compile(model, layout, &chain, opts(false)).unwrap();
+    let opt = compile(model, layout, &chain, opts(true)).unwrap();
+    (raw, opt)
+}
+
+/// Symbolic golden for decision plans: per (variant × output mode) the
+/// raw/optimized OpCounts and the plan-text digest — any drift in what
+/// the sign chains, tournament, or product tree compile to fails here.
+/// Runs in debug and release.
+#[test]
+fn golden_decision_opcounts_and_plan_digests() {
+    for (name, model) in variants(1) {
+        for (tag, mode, preset) in decision_combos() {
+            let (raw, opt) = compile_decision_pair(&model, mode, preset);
+            let mut s = String::new();
+            writeln!(s, "case {name} mode {mode} preset {}", preset.name()).unwrap();
+            s.push_str(&counts_digest("raw", &raw.counts));
+            s.push_str(&counts_digest("opt", &opt.counts));
+            writeln!(s, "raw.ops {}", raw.ops.len()).unwrap();
+            writeln!(s, "opt.ops {}", opt.ops.len()).unwrap();
+            writeln!(s, "levels {}", opt.levels_needed).unwrap();
+            writeln!(s, "raw.text_digest {:016x}", fnv1a(raw.to_text().as_bytes())).unwrap();
+            writeln!(s, "opt.text_digest {:016x}", fnv1a(opt.to_text().as_bytes())).unwrap();
+            check_fixture(&format!("{name}_{tag}.counts"), &s);
+        }
+    }
+}
+
+/// Real-CKKS golden for decisions: the argmax indicator slots of each
+/// variant's widest-margin clip, bit pattern for bit pattern, plus the
+/// decoded decision — and a live cross-check against the plaintext
+/// argmax (the fixture pins the bits; the assert pins the semantics).
+/// Release-gated; run by ci.sh.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (ci.sh)")]
+fn golden_decision_patterns() {
+    for (name, model) in variants(1) {
+        let picked = widest_margin_clip(&model, 64);
+        let preset = certifying_preset(picked.margin, picked.bound)
+            .expect("no preset certifies the golden fixture's margin");
+        let mut opts = PlanOptions {
+            output_mode: OutputMode::Argmax,
+            sgn_preset: preset,
+            ..Default::default()
+        };
+        opts.set_logit_bound(picked.bound);
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let mut he = HeStgcn::new(&model, layout).unwrap();
+        he.output_mode = opts.output_mode;
+        he.sgn_preset = opts.sgn_preset;
+        let levels = he.levels_needed().unwrap();
+        let sess = PrivateInferenceSession::new_with_options(
+            &model,
+            toy_params(1 << 9, levels),
+            2024,
+            opts,
+        )
+        .unwrap();
+        let input = sess.encrypt_input(&model, &picked.clip).unwrap();
+        let out = sess.infer(&model, &input).unwrap();
+        let indicators = sess.decrypt_logits(&model, &out);
+        let decision = sess.decrypt_decision(&model, &out);
+        assert_eq!(
+            decision,
+            lingcn::he_infer::Decision::Argmax(lingcn::util::argmax(&picked.logits)),
+            "{name}: golden decision diverged from the plaintext argmax"
+        );
+
+        let mut s = String::new();
+        writeln!(s, "case {name} mode argmax preset {}", preset.name()).unwrap();
+        write!(s, "indicators").unwrap();
+        for v in &indicators {
+            write!(s, " {:016x}", v.to_bits()).unwrap();
+        }
+        writeln!(s).unwrap();
+        writeln!(s, "decision {decision}").unwrap();
+        writeln!(s, "plain_argmax {}", lingcn::util::argmax(&picked.logits)).unwrap();
+        check_fixture(&format!("{name}_argmax.decision"), &s);
     }
 }
 

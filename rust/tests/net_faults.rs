@@ -21,13 +21,14 @@ use std::time::Duration;
 
 use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams};
 use lingcn::coordinator::Metrics;
+use lingcn::he_infer::OutputMode;
 use lingcn::wire::codec::{
-    frame_with, KIND_NET_ERROR, KIND_NET_HELLO, KIND_NET_LOGITS, KIND_NET_OK, KIND_NET_REGISTER,
-    MAGIC, VERSION,
+    frame_with, KIND_NET_DECISION, KIND_NET_ERROR, KIND_NET_HELLO, KIND_NET_LOGITS, KIND_NET_OK,
+    KIND_NET_REGISTER, MAGIC, VERSION,
 };
 use lingcn::wire::net::{
-    err_name, hello_frame, infer_header_frame, ok_frame, parse_error_frame, read_frame_budget,
-    Client, InferOutcome, NetBackend, NetConfig, NetServer,
+    err_name, hello_frame, infer_header_frame, ok_frame, parse_decision_frame, parse_error_frame,
+    read_frame_budget, Client, InferOutcome, NetBackend, NetConfig, NetServer,
 };
 use lingcn::wire::{CtBundle, EvalKeySet, WireSerialize};
 
@@ -78,6 +79,7 @@ impl NetBackend for EchoBackend {
         cts: Vec<Ciphertext>,
         _params_hash: Option<u64>,
         _batch: usize,
+        _mode: OutputMode,
     ) -> anyhow::Result<InferOutcome> {
         self.infer_calls.fetch_add(1, Ordering::Relaxed);
         Ok(InferOutcome {
@@ -114,10 +116,45 @@ impl NetBackend for GatedBackend {
         cts: Vec<Ciphertext>,
         params_hash: Option<u64>,
         batch: usize,
+        mode: OutputMode,
     ) -> anyhow::Result<InferOutcome> {
         self.entered_tx.lock().unwrap().send(()).unwrap();
         self.release_rx.lock().unwrap().recv().unwrap();
-        self.echo.infer(tenant, variant, cts, params_hash, batch)
+        self.echo.infer(tenant, variant, cts, params_hash, batch, mode)
+    }
+}
+
+/// Echo backend whose serving plans are "compiled" for a non-logits
+/// output mode — exercises the decision-reply path and the admission
+/// check that refuses any *other* requested mode (DESIGN.md S20).
+struct DecisionBackend {
+    echo: EchoBackend,
+    mode: OutputMode,
+}
+
+impl NetBackend for DecisionBackend {
+    fn register(&self, tenant: &str, key_set: EvalKeySet) -> anyhow::Result<()> {
+        self.echo.register(tenant, key_set)
+    }
+
+    fn is_registered(&self, tenant: &str) -> bool {
+        self.echo.is_registered(tenant)
+    }
+
+    fn infer(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+    ) -> anyhow::Result<InferOutcome> {
+        self.echo.infer(tenant, variant, cts, params_hash, batch, mode)
+    }
+
+    fn output_mode(&self) -> OutputMode {
+        self.mode
     }
 }
 
@@ -182,7 +219,7 @@ fn test_mid_upload_disconnect_leaves_server_serving() {
     // a registered tenant starts a 3-ciphertext upload and vanishes after 1
     healthy_roundtrip(addr, "alice", &fx);
     let mut s = raw_session(addr, "alice");
-    s.write_all(&infer_header_frame(Some("v"), None, 1, 3)).unwrap();
+    s.write_all(&infer_header_frame(Some("v"), None, 1, OutputMode::Logits, 3)).unwrap();
     s.write_all(&fx.bundle.cts[0].to_bytes()).unwrap();
     s.shutdown(Shutdown::Both).unwrap();
     drop(s);
@@ -229,7 +266,7 @@ fn test_bit_flipped_frames_get_typed_bad_frame_error() {
     // a flipped payload byte in a streamed ciphertext frame fails the
     // checksum in the validator and is reported per-frame
     let mut s = raw_session(addr, "alice");
-    s.write_all(&infer_header_frame(Some("v"), None, 1, 1)).unwrap();
+    s.write_all(&infer_header_frame(Some("v"), None, 1, OutputMode::Logits, 1)).unwrap();
     let mut ct_bytes = fx.bundle.cts[0].to_bytes();
     ct_bytes[20] ^= 0x40; // payload region: header is bytes 0..16
     s.write_all(&ct_bytes).unwrap();
@@ -446,7 +483,7 @@ fn test_protocol_violations_get_typed_errors() {
     // announced ciphertext count, delivered something else
     healthy_roundtrip(addr, "alice", &fx);
     let mut s = raw_session(addr, "alice");
-    s.write_all(&infer_header_frame(Some("v"), None, 1, 2)).unwrap();
+    s.write_all(&infer_header_frame(Some("v"), None, 1, OutputMode::Logits, 2)).unwrap();
     s.write_all(&fx.bundle.cts[0].to_bytes()).unwrap();
     s.write_all(&ok_frame("not a ciphertext")).unwrap();
     expect_error(&mut s, "protocol");
@@ -456,6 +493,90 @@ fn test_protocol_violations_get_typed_errors() {
     server.shutdown();
     assert!(metrics.net_conns_rejected.load(Ordering::Relaxed) >= 4);
     assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_mode_mismatch_rejected_then_recovers_on_same_connection() {
+    let fx = fixture();
+    let backend = Arc::new(EchoBackend::default());
+    let (server, metrics) = spawn(backend.clone(), NetConfig::default());
+    let addr = server.local_addr();
+    let mut c = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    c.register(&fx.key_set).unwrap();
+    // this tier's plans are compiled for logits: an argmax request is
+    // refused at the header with a typed error — after the announced
+    // upload is drained, so the connection stays in sync
+    let argmax = fx.bundle.clone().with_mode(OutputMode::Argmax);
+    let err = c.infer(Some("v"), &argmax).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("mode-mismatch"), "want typed mode-mismatch, got: {msg}");
+    assert!(msg.contains("compiled for logits"), "message should name the served mode: {msg}");
+    // same connection, served mode: the request now succeeds
+    let out = c.infer(Some("v"), &fx.bundle).unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0]);
+    // the mismatch was refused at admission — it never reached the backend
+    assert_eq!(backend.infer_calls.load(Ordering::Relaxed), 1);
+    drop(c);
+    server.shutdown();
+    assert_eq!(metrics.net_requests_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn test_decision_replies_served_and_hostile_decision_frames_error_typed() {
+    let fx = fixture();
+    let backend =
+        Arc::new(DecisionBackend { echo: EchoBackend::default(), mode: OutputMode::Argmax });
+    let (server, metrics) = spawn(backend, NetConfig::default());
+    let addr = server.local_addr();
+    let mut c = Client::connect_with(&addr.to_string(), "alice", Duration::from_secs(20)).unwrap();
+    c.register(&fx.key_set).unwrap();
+    // an argmax request against the argmax tier comes back as a
+    // NET_DECISION frame whose echoed mode the client verifies
+    let argmax = fx.bundle.clone().with_mode(OutputMode::Argmax);
+    let out = c.infer(Some("v"), &argmax).unwrap();
+    assert_eq!(out.ct_logits, fx.bundle.cts[0], "decision reply must carry the ciphertext");
+    // ...and a logits request against the same tier is refused typed
+    let err = c.infer(Some("v"), &fx.bundle).unwrap_err();
+    assert!(format!("{err:#}").contains("mode-mismatch"), "got: {err:#}");
+    drop(c);
+    server.shutdown();
+    assert_eq!(metrics.net_requests_rejected.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+
+    // hostile decision frames, byte-for-byte: a well-formed reply...
+    let good = frame_with(KIND_NET_DECISION, |w| {
+        w.put_u8(1); // argmax mode tag
+        w.put_u32(0);
+        w.put_u64(0);
+        w.put_str("v");
+        w.put_u64(0);
+        w.put_u64(0);
+        fx.bundle.cts[0].write_payload(w);
+    });
+    parse_decision_frame(&good).unwrap();
+    // ...truncated anywhere errors typed — never panics
+    for cut in [0usize, 8, 16, 17, 22, 30, good.len() / 2, good.len() - 1] {
+        assert!(parse_decision_frame(&good[..cut]).is_err(), "truncated at {cut} must error");
+    }
+    // ...any flipped bit fails the frame checksum (or the header checks)
+    for i in (0..good.len()).step_by(97) {
+        let mut bad = good.clone();
+        bad[i] ^= 0x10;
+        assert!(parse_decision_frame(&bad).is_err(), "bit-flip at byte {i} must error");
+    }
+    // ...and a forged mode tag is named in the error
+    let forged = frame_with(KIND_NET_DECISION, |w| {
+        w.put_u8(77); // no such mode tag
+        w.put_u32(0);
+        w.put_u64(0);
+        w.put_str("v");
+        w.put_u64(0);
+        w.put_u64(0);
+        fx.bundle.cts[0].write_payload(w);
+    });
+    let err = parse_decision_frame(&forged).unwrap_err().to_string();
+    assert!(err.contains("unknown output-mode tag 77"), "got: {err}");
 }
 
 #[test]

@@ -17,12 +17,12 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use common::{assert_close, clip_seeded, tiny_model, variants};
+use common::{assert_close, certifying_preset, clip_seeded, tiny_model, variants, widest_margin_clip};
 use lingcn::ckks::Ciphertext;
 use lingcn::coordinator::{
     Coordinator, InferenceExecutor, KeyRegistry, Metrics, ModelVariant, Router,
 };
-use lingcn::he_infer::PlanOptions;
+use lingcn::he_infer::{Decision, OutputMode, PlanOptions};
 use lingcn::stgcn::StgcnModel;
 use lingcn::wire::net::Client;
 use lingcn::wire::{keygen, CoordinatorBackend, CtBundle, NetConfig, NetServer, WireExecutor};
@@ -84,6 +84,7 @@ fn reference_ct(
         &bundle.cts,
         Some(bundle.params_hash),
         bundle.batch,
+        bundle.mode,
     )
     .expect("in-process reference inference")
 }
@@ -186,6 +187,72 @@ fn test_loopback_sweep_seeds_variants_batches() {
         assert_eq!(metrics.completed.load(Ordering::Relaxed), served, "seed {seed}");
         assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
     }
+}
+
+/// The decision path end-to-end over a real socket (DESIGN.md S20): a
+/// server whose plans are compiled for argmax answers with a
+/// `NET_DECISION` frame, the client verifies the echoed mode, and the
+/// decrypted decision matches the plaintext winner.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS decision circuit: run in release (ci.sh)")]
+fn test_loopback_argmax_decision_matches_plaintext() {
+    let model = tiny_model(6);
+    let picked = widest_margin_clip(&model, 64);
+    let preset = certifying_preset(picked.margin, picked.bound)
+        .expect("no sign preset certifies the widest-margin fixture clip");
+    let mode = OutputMode::Argmax;
+
+    // the serving stack, compiled for argmax at the fixture's bound
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(16, Some(metrics.clone())));
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let menu = vec![ModelVariant { name: "v".into(), nl: 0, latency_s: 1.0, accuracy: 0.9 }];
+    let mut executor = WireExecutor::new(models, 2, registry);
+    executor.set_metrics(metrics.clone());
+    executor.set_output_mode(mode, preset, picked.bound);
+    let executor = Arc::new(executor);
+    let dyn_exec: Arc<dyn InferenceExecutor> = executor.clone();
+    let coord = Coordinator::start_with_metrics(
+        Router::new(menu),
+        dyn_exec,
+        metrics.clone(),
+        2,
+        8,
+        Duration::from_millis(2),
+    );
+    let backend = Arc::new(CoordinatorBackend::new(executor, coord));
+    let server = NetServer::bind("127.0.0.1:0", backend, metrics.clone(), NetConfig::default())
+        .expect("binding 127.0.0.1:0 must succeed");
+    let addr = server.local_addr().to_string();
+
+    // client keys compiled with the *same* decision options
+    let mut opts =
+        PlanOptions { output_mode: mode, sgn_preset: preset, ..Default::default() };
+    opts.set_logit_bound(picked.bound);
+    let (keys, key_set) = keygen(&model, "v", opts, 77).unwrap();
+    let bundle = keys.encrypt_request(&picked.clip).unwrap().with_mode(mode);
+
+    let mut conn = Client::connect_with(&addr, "alice", Duration::from_secs(600)).unwrap();
+    conn.register(&key_set).unwrap();
+    let out = conn.infer(Some("v"), &bundle).unwrap();
+    assert_eq!(out.variant, "v");
+    let got = keys.decrypt_decision(&out.ct_logits, mode).unwrap();
+    assert_eq!(
+        got,
+        Decision::Argmax(lingcn::util::argmax(&picked.logits)),
+        "encrypted argmax over TCP must match the plaintext winner \
+         (margin {:.3}, bound {:.3}, preset {})",
+        picked.margin,
+        picked.bound,
+        preset.name()
+    );
+    drop(conn);
+    server.shutdown();
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+    assert!(metrics.sign_stages.load(Ordering::Relaxed) > 0, "sign-stage metric must tick");
+    assert_eq!(metrics.decisions_argmax.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
 }
 
 /// The concurrency differential: three tenants with ragged batch sizes

@@ -1,24 +1,28 @@
 //! Plan-text fuzz corpus (ISSUE 5 satellite; DESIGN.md S17): malformed,
-//! truncated and bit-flipped v1/v2/v3 plan texts through
+//! truncated and bit-flipped v1–v4 plan texts through
 //! `HePlan::from_text` must **error** — never panic, never over-allocate
 //! from an unvalidated length field — mirroring the wire codec's
 //! corruption-corpus style (`wire_roundtrip.rs`).
 //!
-//! v3 texts carry an FNV-1a checksum on the `end` line, so even payload
+//! v3+ texts carry an FNV-1a checksum on the `end` line, so even payload
 //! corruption that would still parse structurally (a flipped hex digit
 //! inside a mask value) is rejected. v1/v2 (no checksum) reject through
-//! structural and replay validation.
+//! structural and replay validation. v4 (ISSUE 9) adds the `decision`
+//! line; forged decision lines that survive the checksum must still
+//! reject typed through tag validation and `sgn::check_mode`.
 
 mod common;
 
 use common::{probe_levels, variants};
 use lingcn::ama::AmaLayout;
 use lingcn::ckks::OpCounts;
-use lingcn::he_infer::{compile, HePlan, PlanChain, PlanOptions};
+use lingcn::he_infer::{compile, HePlan, HeStgcn, OutputMode, PlanChain, PlanOptions};
 use lingcn::util::Rng;
 
 /// The corpus seeds: a raw single-clip plan, an optimized plan (groups +
-/// pass lines), and an optimized batched plan (wrap rotations).
+/// pass lines), an optimized batched plan (wrap rotations), and an
+/// argmax decision plan (sign chains + product tree, `decision` line
+/// with a non-default mode).
 fn corpus() -> Vec<(String, String)> {
     let (_, model) = variants(1).remove(0);
     let layout = AmaLayout::new(8, 4, 256).unwrap();
@@ -33,23 +37,42 @@ fn corpus() -> Vec<(String, String)> {
     let opt = compile(&model, layout, &chain, PlanOptions::default()).unwrap();
     let batched = compile(&model, layout, &chain, PlanOptions { batch: 4, ..Default::default() })
         .unwrap();
+    let decision = {
+        let mut he = HeStgcn::new(&model, layout).unwrap();
+        he.output_mode = OutputMode::Argmax;
+        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
+        compile(
+            &model,
+            layout,
+            &chain,
+            PlanOptions { output_mode: OutputMode::Argmax, ..Default::default() },
+        )
+        .unwrap()
+    };
     vec![
         ("raw".into(), raw.to_text()),
         ("optimized".into(), opt.to_text()),
         ("batched".into(), batched.to_text()),
+        ("decision".into(), decision.to_text()),
     ]
 }
 
-/// Downgrade a v3 text of a *raw batch-1* plan to v1/v2 (drops meta
-/// tokens, truncates the counts arity, strips the checksum) — these must
-/// still parse, pinning the version window.
+/// Downgrade a v4 text into the version window: strips the `decision`
+/// line (a v4 feature); for v1/v2 additionally drops meta tokens,
+/// truncates the counts arity and bares the `end` line; v3 keeps the
+/// full arity and re-checksums. Downgraded *logits* plans must parse
+/// losslessly, pinning the window.
 fn downgrade(text: &str, version: usize) -> String {
     let old_arity = OpCounts::field_names().len() - 3;
-    text.lines()
-        .map(|line| {
-            let out = if line == "heplan v3" {
-                format!("heplan v{version}")
-            } else if let Some(rest) = line.strip_prefix("meta ") {
+    let mut body = String::new();
+    for line in text.lines() {
+        if line.starts_with("decision ") || line.starts_with("end") {
+            continue; // decision is v4-only; end is re-appended below
+        }
+        let out = if line == "heplan v4" {
+            format!("heplan v{version}")
+        } else if version < 3 {
+            if let Some(rest) = line.strip_prefix("meta ") {
                 let toks: Vec<&str> = rest.split_whitespace().collect();
                 let mut kept: Vec<&str> = toks[..5 + version - 1].to_vec();
                 kept.push(toks[7]);
@@ -57,14 +80,21 @@ fn downgrade(text: &str, version: usize) -> String {
             } else if let Some(rest) = line.strip_prefix("counts ") {
                 let toks: Vec<&str> = rest.split_whitespace().collect();
                 format!("counts {}", toks[..old_arity].join(" "))
-            } else if line.starts_with("end ") {
-                "end".to_string()
             } else {
                 line.to_string()
-            };
-            out + "\n"
-        })
-        .collect()
+            }
+        } else {
+            line.to_string()
+        };
+        body.push_str(&out);
+        body.push('\n');
+    }
+    if version >= 3 {
+        let sum = lingcn::util::fnv1a_bytes(body.as_bytes());
+        format!("{body}end {sum:016x}\n")
+    } else {
+        format!("{body}end\n")
+    }
 }
 
 #[test]
@@ -73,19 +103,37 @@ fn fuzz_version_window_baseline_roundtrips() {
         let plan = HePlan::from_text(&text).unwrap_or_else(|e| panic!("{name}: {e}"));
         assert_eq!(plan.to_text(), text, "{name}: canonical reserialization");
     }
-    // raw plans downgrade losslessly into the old-version window: the
-    // parse of the downgraded text equals the parse of the v3 original
+    // raw logits plans downgrade losslessly into the old-version window:
+    // the parse of the downgraded text equals the parse of the v4
+    // original (the absent decision line defaults to Logits)
     let (_, raw_text) = corpus().remove(0);
     let raw_plan = HePlan::from_text(&raw_text).unwrap();
     assert!(!raw_plan.optimized && raw_plan.batch == 1);
-    for version in [1usize, 2] {
+    for version in [1usize, 2, 3] {
         let back = HePlan::from_text(&downgrade(&raw_text, version))
             .unwrap_or_else(|e| panic!("v{version}: {e}"));
         assert_eq!(back, raw_plan, "v{version} window must be lossless");
     }
+    // an optimized logits plan survives the v3 downgrade too (groups,
+    // pass lines and checksum are all v3 features)
+    let (_, opt_text) = corpus().remove(1);
+    let opt_plan = HePlan::from_text(&opt_text).unwrap();
+    assert_eq!(
+        HePlan::from_text(&downgrade(&opt_text, 3)).unwrap(),
+        opt_plan,
+        "v3 window must be lossless for optimized plans"
+    );
+    // hand-trimming the decision line off a *decision* plan is the
+    // documented lossy path: it loads, but as a Logits plan
+    let (_, dec_text) = corpus().remove(3);
+    let dec_plan = HePlan::from_text(&dec_text).unwrap();
+    assert_eq!(dec_plan.output_mode, OutputMode::Argmax);
+    let trimmed = HePlan::from_text(&downgrade(&dec_text, 3)).unwrap();
+    assert_eq!(trimmed.output_mode, OutputMode::Logits);
+    assert_ne!(trimmed, dec_plan);
     // an old header with the newer (longer) meta line is malformed
-    let mixed = raw_text.replace("heplan v3", "heplan v1");
-    assert!(HePlan::from_text(&mixed).is_err(), "v1 header + v3 meta arity");
+    let mixed = raw_text.replace("heplan v4", "heplan v1");
+    assert!(HePlan::from_text(&mixed).is_err(), "v1 header + v4 meta arity");
 }
 
 #[test]
@@ -209,16 +257,67 @@ fn fuzz_hostile_length_fields_never_overallocate() {
 }
 
 #[test]
-fn fuzz_old_versions_reject_v3_features() {
+fn fuzz_old_versions_reject_new_features() {
     let (_, opt_text) = corpus().remove(1);
-    // group/pass/rotg lines under a v1/v2 header must error
+    // group/pass/rotg/decision lines under a v1/v2 header must error
     for version in ["heplan v1", "heplan v2"] {
-        let degraded = opt_text.replace("heplan v3", version);
+        let degraded = opt_text.replace("heplan v4", version);
         assert!(
             HePlan::from_text(&degraded).is_err(),
-            "{version} must reject v3 structures"
+            "{version} must reject v3+ structures"
         );
     }
+    // a v3 header must reject the v4 decision line
+    let degraded = opt_text.replace("heplan v4", "heplan v3");
+    let err = HePlan::from_text(&degraded).unwrap_err().to_string();
+    assert!(err.contains("decision lines are a v4 feature"), "untyped error: {err}");
     // unknown future version
-    assert!(HePlan::from_text(&opt_text.replace("heplan v3", "heplan v4")).is_err());
+    assert!(HePlan::from_text(&opt_text.replace("heplan v4", "heplan v5")).is_err());
+}
+
+/// Forged `decision` lines that *survive the checksum* (the line is
+/// replaced and the text re-checksummed, so parsing reaches the decision
+/// logic itself) must reject typed: tag validation, finiteness/bound
+/// checks, arity — and static feasibility via `sgn::check_mode`, so a
+/// plan text can never smuggle in a decision shape the evaluator would
+/// choke on.
+#[test]
+fn fuzz_forged_decision_lines_error_typed() {
+    let (_, text) = corpus().remove(3);
+    assert!(text.lines().any(|l| l.starts_with("decision ")), "corpus lost its decision line");
+    let bound = format!("{:016x}", 4f64.to_bits());
+    let cases = [
+        (format!("decision 9 0 0000000000000000 0 {bound}"), "unknown output-mode tag"),
+        (format!("decision 1 0 0000000000000000 7 {bound}"), "unknown sign preset tag"),
+        // +inf cutoff bits on a threshold mode
+        (format!("decision 3 0 7ff0000000000000 0 {bound}"), "not a finite number"),
+        // zero logit bound
+        (
+            "decision 1 0 0000000000000000 0 0000000000000000".to_string(),
+            "positive finite",
+        ),
+        // TopK(1) under Fast is statically infeasible at 3 classes —
+        // rejected by check_mode, not by any tag/arity check
+        (format!("decision 2 1 0000000000000000 0 {bound}"), "cannot resolve top-k"),
+        ("decision 1 0".to_string(), "bad decision line"),
+        (format!("decision 1 0 zz 0 {bound}"), "bad cutoff bits"),
+    ];
+    for (forged, what) in cases {
+        let body: String = text
+            .lines()
+            .filter(|l| !l.starts_with("end "))
+            .map(|l| {
+                let out =
+                    if l.starts_with("decision ") { forged.clone() } else { l.to_string() };
+                out + "\n"
+            })
+            .collect();
+        let sum = lingcn::util::fnv1a_bytes(body.as_bytes());
+        let full = format!("{body}end {sum:016x}\n");
+        let err = HePlan::from_text(&full)
+            .err()
+            .unwrap_or_else(|| panic!("forged decision line ({what}) must error"));
+        let msg = format!("{err:?}");
+        assert!(msg.contains(what), "forged decision line: wanted {what:?} in {msg:?}");
+    }
 }

@@ -10,7 +10,10 @@ use lingcn::ckks::{CkksEngine, CkksParams};
 use lingcn::coordinator::{Batcher, Pending, Router};
 use lingcn::graph::Graph;
 use lingcn::he_infer::opt::{cse_pass, dce_pass, group_pass, optimize};
-use lingcn::he_infer::{compile, HeOp, HePlan, HeStgcn, PlanChain, PlanOptions, PreparedPlan};
+use lingcn::he_infer::{
+    compile, sgn, HeOp, HePlan, HeStgcn, OutputMode, PlanChain, PlanOptions, PreparedPlan,
+    SgnPreset,
+};
 use lingcn::linearize::LinearizationPlan;
 use lingcn::stgcn::StgcnModel;
 use lingcn::util::Rng;
@@ -203,6 +206,7 @@ fn random_raw_plan(rng: &mut Rng) -> (HePlan, bool) {
         fuse_activations: rng.gen_range_u64(0, 2) == 1,
         batch: [1usize, 2, 8][rng.gen_range_u64(0, 3) as usize],
         optimize: false,
+        ..Default::default()
     };
     let he = {
         let mut he = HeStgcn::new(&model, layout).unwrap();
@@ -377,6 +381,144 @@ fn prop_optimized_plans_decrypt_bit_identical() {
                 "seed {seed} threads {threads}: optimized plan changed decrypted bits"
             );
         }
+    }
+}
+
+/// Sign presets (randomized sweep, ISSUE 9): beyond the resolution δ the
+/// composite chain is within its documented ε of sgn(x); below δ it
+/// stays inside [−1, 1] (undefined but bounded); oddness is bitwise.
+#[test]
+fn prop_sign_preset_accuracy_and_oddness() {
+    let mut rng = Rng::seed_from_u64(99);
+    for preset in [SgnPreset::Fast, SgnPreset::Balanced, SgnPreset::Precise] {
+        let (eps, delta) = (preset.eps(), preset.delta());
+        for case in 0..2000 {
+            let x = rng.gen_range_f64(delta, 1.0);
+            let err = (preset.eval_plain(x) - 1.0).abs();
+            assert!(
+                err <= eps,
+                "{} case {case}: |sgn_poly({x}) − 1| = {err:.3e} > ε = {eps:.3e}",
+                preset.name()
+            );
+            assert_eq!(
+                preset.eval_plain(-x),
+                -preset.eval_plain(x),
+                "{}: odd symmetry broken at {x}",
+                preset.name()
+            );
+            let y = rng.gen_range_f64(-delta, delta);
+            let v = preset.eval_plain(y).abs();
+            assert!(
+                v <= 1.0 + 1e-9,
+                "{}: uncertified input {y} escaped [−1, 1]: {v}",
+                preset.name()
+            );
+        }
+    }
+}
+
+/// Decision plans: the static level accounting (`sgn::decision_levels`)
+/// equals the compile-measured depth growth over the logits plan for
+/// every feasible (mode, preset) combo, and the optimizer preserves
+/// validity, the rotation-key set, and never adds ops.
+#[test]
+fn prop_decision_plans_depth_accounting_and_optimizer_safety() {
+    for seed in [5u64, 6, 7] {
+        let model = tiny_model(seed);
+        let classes = model.num_classes();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let logits_depth = HeStgcn::new(&model, layout).unwrap().levels_needed().unwrap();
+        for (mode, preset) in [
+            (OutputMode::Argmax, SgnPreset::Fast),
+            (OutputMode::Argmax, SgnPreset::Precise),
+            (OutputMode::TopK(1), SgnPreset::Balanced),
+            (OutputMode::TopK(2), SgnPreset::Precise),
+            (OutputMode::threshold(1, 0.5), SgnPreset::Fast),
+        ] {
+            let mut he = HeStgcn::new(&model, layout).unwrap();
+            he.output_mode = mode;
+            he.sgn_preset = preset;
+            let need = he.levels_needed().unwrap();
+            assert_eq!(
+                need,
+                logits_depth + sgn::decision_levels(mode, preset, classes),
+                "seed {seed} {mode} {}: static accounting diverged from probe",
+                preset.name()
+            );
+            let chain = PlanChain::ideal(need, 33);
+            let opts = PlanOptions {
+                output_mode: mode,
+                sgn_preset: preset,
+                optimize: false,
+                ..Default::default()
+            };
+            let plan = compile(&model, layout, &chain, opts).unwrap();
+            plan.validate().unwrap();
+            let opt = optimize(&plan).unwrap();
+            opt.validate().unwrap();
+            assert_eq!(
+                plan.required_rotations(),
+                opt.required_rotations(),
+                "seed {seed} {mode}: optimizer changed the rotation-key set"
+            );
+            assert!(
+                opt.ops.len() <= plan.ops.len(),
+                "seed {seed} {mode}: optimizer added ops ({} > {})",
+                opt.ops.len(),
+                plan.ops.len()
+            );
+            assert_eq!(opt.output_mode, mode, "optimizer must carry the decision header");
+        }
+    }
+}
+
+/// Real CKKS: the optimizer must not change the decrypted bits of a
+/// decision plan either — the same bit-identity contract the logits
+/// plans get, over the argmax tournament's masks and product tree.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS: run in release (make test-batch)")]
+fn prop_optimized_decision_plans_decrypt_bit_identical() {
+    let model = tiny_model(11);
+    let (mode, preset) = (OutputMode::Argmax, SgnPreset::Fast);
+    let mut probe = HeStgcn::new(
+        &model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    probe.output_mode = mode;
+    probe.sgn_preset = preset;
+    let levels = probe.levels_needed().unwrap();
+    let params = toy_params(1 << 11, levels);
+    let ctx = params.build().unwrap();
+    let layout =
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), ctx.slots()).unwrap();
+    let chain = PlanChain::from_ctx(&ctx);
+    let opts = PlanOptions {
+        output_mode: mode,
+        sgn_preset: preset,
+        optimize: false,
+        ..Default::default()
+    };
+    let raw = Arc::new(compile(&model, layout, &chain, opts).unwrap());
+    let opt = Arc::new(optimize(&raw).unwrap());
+    assert_eq!(raw.required_rotations(), opt.required_rotations());
+
+    let engine = CkksEngine::new(params, &raw.required_rotations(), 11).unwrap();
+    let prepared_raw = PreparedPlan::new(raw.clone(), &engine).unwrap();
+    let prepared_opt = PreparedPlan::new(opt.clone(), &engine).unwrap();
+    let x = clip(&model);
+    let input =
+        lingcn::ama::encrypt_clip(&engine, &layout, &x, model.v(), model.c_in, levels + 1)
+            .unwrap()
+            .cts;
+    for threads in [1usize, 3] {
+        let a = prepared_raw.execute(&engine, &input, threads).unwrap();
+        let b = prepared_opt.execute(&engine, &input, threads).unwrap();
+        assert_eq!(
+            engine.decrypt(&a),
+            engine.decrypt(&b),
+            "threads {threads}: optimized decision plan changed decrypted bits"
+        );
     }
 }
 

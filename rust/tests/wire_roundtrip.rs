@@ -17,7 +17,7 @@ use common::{clip, tiny_model};
 use lingcn::ckks::{Ciphertext, CkksEngine, CkksParams, PublicKey};
 use lingcn::coordinator::{Coordinator, KeyRegistry, Metrics, Router};
 use lingcn::graph::Graph;
-use lingcn::he_infer::{session_geometry, PlanOptions, PrivateInferenceSession};
+use lingcn::he_infer::{session_geometry, OutputMode, PlanOptions, PrivateInferenceSession};
 use lingcn::stgcn::StgcnModel;
 use lingcn::wire::{keygen, CtBundle, EvalKeySet, WireExecutor, WireSerialize};
 use std::collections::HashMap;
@@ -166,6 +166,7 @@ fn test_wire_roundtrip_bit_identical_to_private_session() {
         &request.cts,
         Some(request.params_hash),
         request.batch,
+        OutputMode::Logits,
     )
     .unwrap();
     let ct_logits = Ciphertext::from_bytes(&ct_logits.to_bytes()).unwrap();
@@ -207,6 +208,7 @@ fn test_wire_batched_bundle_roundtrips_per_clip() {
         &request.cts,
         Some(request.params_hash),
         request.batch,
+        OutputMode::Logits,
     )
     .unwrap();
     let per_clip = client.decrypt_logits_batch(&ct_logits, batch).unwrap();
@@ -223,6 +225,7 @@ fn test_wire_batched_bundle_roundtrips_per_clip() {
             &single_req.cts,
             Some(single_req.params_hash),
             1,
+            OutputMode::Logits,
         )
         .unwrap();
         let want = client.decrypt_logits(&single_ct).unwrap();
@@ -273,6 +276,7 @@ fn test_forged_batch_field_errors_at_ingress() {
                     &parsed.cts,
                     Some(parsed.params_hash),
                     parsed.batch,
+                    OutputMode::Logits,
                 )
                 .unwrap_err();
                 let msg = format!("{err:#}");
@@ -298,7 +302,7 @@ fn test_wrong_tenant_keys_are_rejected_cleanly() {
     server.register("bob", wrong_keys).unwrap();
     let cts = client.encrypt_clip(&clip(&other)).unwrap();
     let err = lingcn::coordinator::InferenceExecutor::infer_encrypted(
-        &server, "v", "bob", &cts, None, 1,
+        &server, "v", "bob", &cts, None, 1, OutputMode::Logits,
     )
     .unwrap_err();
     let msg = format!("{err:#}");
@@ -355,6 +359,7 @@ fn test_multi_tenant_coordinator_flow_with_registry_metrics() {
                 cts,
                 hash,
                 1,
+                OutputMode::Logits,
                 None,
             )
             .unwrap();
@@ -376,6 +381,7 @@ fn test_multi_tenant_coordinator_flow_with_registry_metrics() {
             cts,
             None,
             1,
+            OutputMode::Logits,
             None,
         )
         .unwrap();
