@@ -55,11 +55,15 @@ echo "==> decision-correctness differential suite (release)"
 cargo test --release -q --test decision_equivalence
 
 echo "==> TCP tier: loopback + fault-injection suites (release)"
-# net_faults is mock-backed (fast); net_roundtrip's release-gated cases
-# run real CKKS over a loopback socket, including the bit-identity
-# acceptance (socket logits == in-process logits). A hung socket must
-# fail loudly, not wedge CI: give each suite a hard timeout where the
-# coreutils timeout binary exists.
+# net_faults is mock-backed (fast) and includes the S21 refresh fault
+# corpus (disconnect mid-round, stale/forged REFRESH_RESP, round-budget
+# exhaustion — every fault leaving the server serving); net_roundtrip's
+# release-gated cases run real CKKS over a loopback socket, including
+# the bit-identity acceptance (socket logits == in-process logits) and
+# the S21 acceptance (Precise argmax on the refresh-capped chain,
+# >= 1 real masked round trip, decision == plaintext winner). A hung
+# socket must fail loudly, not wedge CI: give each suite a hard timeout
+# where the coreutils timeout binary exists.
 run_timed() {
     if command -v timeout >/dev/null; then
         timeout --signal=KILL "$1" "${@:2}"
@@ -88,8 +92,10 @@ fi
 
 echo "==> op-count + profiled wall-clock regression gates (bench plan_compile, same as make bench-plan)"
 # benches/plan_compile.rs asserts optimized <= raw on every cost-bearing
-# OpCounts field (for the logits plan and an S20 decision plan) and
-# strictly fewer key-switch decompositions, then runs
+# OpCounts field (for the logits plan and an S20 decision plan),
+# strictly fewer key-switch decompositions, and — on refresh-compiled
+# plans (S21) — that the scheduled refresh-round count equals the
+# planner's static prediction, raw and optimized alike; then runs
 # the optimized plan under the S19 per-op profiler and writes
 # BENCH_plan.json with the per-pass deltas plus per-wave latency
 # attribution. A profiled per-request total >20% slower than the

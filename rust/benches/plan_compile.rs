@@ -133,6 +133,45 @@ fn main() {
             draw.ops.len(),
             dopt.levels_needed
         );
+
+        // ---- the S21 refresh-round gate: compile the same decision plan
+        // on chains it overflows; the scheduled cut points must equal the
+        // planner's closed-form prediction (`⌊depth/top_level⌋`), raw and
+        // optimized alike — the optimizer can never smuggle in silent
+        // extra round trips, and never drop one the depth requires.
+        let depth = dopt.levels_needed;
+        for top in [depth - 1, depth / 2, depth / 3].into_iter().filter(|&t| t >= 1) {
+            let short = PlanChain::ideal(top, 33);
+            let ropts = PlanOptions {
+                output_mode: OutputMode::Argmax,
+                allow_refresh: true,
+                max_refresh_rounds: 64,
+                ..Default::default()
+            };
+            let rraw =
+                compile(&model, layout, &short, PlanOptions { optimize: false, ..ropts })
+                    .unwrap();
+            let ropt = compile(&model, layout, &short, ropts).unwrap();
+            assert!(ropt.has_refresh(), "chain of depth {top} must engage refresh");
+            assert_eq!(
+                ropt.refresh_rounds(),
+                ropt.predicted_refresh_rounds(),
+                "REFRESH-ROUND REGRESSION: optimized plan on a depth-{top} chain \
+                 schedules {} round(s); the planner predicted {}",
+                ropt.refresh_rounds(),
+                ropt.predicted_refresh_rounds()
+            );
+            assert_eq!(
+                rraw.refresh_rounds(),
+                ropt.refresh_rounds(),
+                "optimization moved the refresh-round count on a depth-{top} chain"
+            );
+            println!(
+                "refresh plan (argmax, depth-{top} chain): {} round(s), {} cut point(s)",
+                ropt.refresh_rounds(),
+                ropt.counts.refresh
+            );
+        }
     }
 
     // ---- per-request costs

@@ -182,6 +182,12 @@ define_op_counters!(
     ks_decomp_limbs_sq,
     /// Hoisted rotation groups executed (0 on unoptimized plans).
     rot_group,
+    /// Client-aided refresh cut points (`HeOp::Refresh`, DESIGN.md S21):
+    /// level resets bought with a masked round trip instead of chain
+    /// budget. Not HE work on the server — costed separately as round
+    /// latency, so excluded from `cost_fields`. **Append-only list**: the
+    /// plan-text version window stores arity prefixes of this array.
+    refresh,
 );
 
 impl OpCounts {

@@ -9,13 +9,13 @@
 //! | `plan` | print the HE parameter plan (paper Table 6) |
 //! | `calibrate [--quick]` | measure CKKS op costs and print the fitted model |
 //! | `predict [--calibrate]` | predict paper-scale latencies for all variants |
-//! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17); `--output-mode logits\|argmax\|topk:K\|threshold:CLASS[:CUTOFF]` appends the composite-sign decision circuit (DESIGN.md S20) with `--sgn-preset fast\|balanced\|precise` depth/precision and logit bound `--logit-bound B` |
-//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M] [--status-json] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive; `--output-mode` compiles the serving plans for a decision mode (DESIGN.md S20) and refuses requests for any other mode; `--status-json` prints the DESIGN.md S19 machine-readable snapshot after the run summary (plaintext/he tiers) |
-//! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; `--output-mode` grows the chain and Galois set to cover the decision circuit too; writes the local secret key file and the server-shippable eval-key bundle |
+//! | `infer --nl K [--encrypted] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--output-mode M] [--sgn-preset P] [--logit-bound B] [--allow-refresh[:R]]` | run one synthetic clip through a trained artifact; encrypted mode executes the compiled `HePlan` (`--threads` wavefront pool, `--limb-threads` per-limb NTT fan-out); `--batch B` slot-packs B clips into one ciphertext set (DESIGN.md S16); `--no-opt` skips the IR optimizer passes (DESIGN.md S17); `--output-mode logits\|argmax\|topk:K\|threshold:CLASS[:CUTOFF]` appends the composite-sign decision circuit (DESIGN.md S20) with `--sgn-preset fast\|balanced\|precise` depth/precision and logit bound `--logit-bound B`; `--allow-refresh[:R]` caps the chain and serves the overflow depth through in-process refresh rounds (DESIGN.md S21) |
+//! | `serve [--tier plaintext\|he\|he-wire] [--batch B] [--no-opt] [--threads N] [--limb-threads N] [--workers N] [--requests M] [--status-json] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | run the serving coordinator; `--tier he` serves real CKKS inference through cached compiled `HePlan`s (trusted single-process demo; `--batch B` coalesces up to B same-variant requests into one slot-batched ciphertext job; `--no-opt` serves raw unoptimized plans), `--tier he-wire` serves **only ciphertexts** against registered tenant eval keys, either over TCP (`--listen ADDR`, DESIGN.md S18) or as a file-driven roundtrip (`--dir D` / explicit `--eval-keys`/`--request`/`--response`) — the two modes are mutually exclusive; `--output-mode` compiles the serving plans for a decision mode (DESIGN.md S20) and refuses requests for any other mode; `--status-json` prints the DESIGN.md S19 machine-readable snapshot after the run summary (plaintext/he tiers); `--allow-refresh[:R]` (he/he-wire `--listen`) compiles serving plans on the refresh-capped chain and runs up to R interactive refresh rounds per request (DESIGN.md S21) |
+//! | `keygen --nl K [--batch B] [--no-opt] [--seed S] [--out-dir D] [--output-mode M] [--sgn-preset P] [--logit-bound B] [--allow-refresh[:R]]` | client-side: generate a key pair for variant nl K; `--batch B` also covers the block-closed batch plan's rotations; `--output-mode` grows the chain and Galois set to cover the decision circuit too; `--allow-refresh[:R]` keys against the refresh-capped chain (must match the server's flag, DESIGN.md S21); writes the local secret key file and the server-shippable eval-key bundle |
 //! | `encrypt --key F --input X.lgt --out R.cts [--batch B] [--output-mode M]` | client-side: encrypt a clip into a ciphertext request bundle (`--batch B` slot-packs B copies of the clip; `--output-mode` stamps the requested decision mode into the bundle, DESIGN.md S20) |
 //! | `decrypt-logits --key F --in RESP.ct [--batch B] [--request R.cts]` | client-side: open the server's logits ciphertext and print the class scores (per clip when batched; `--request` cross-checks B against the request bundle) |
 //! | `decrypt-decision --key F --in RESP.ct [--output-mode M] [--batch B] [--request R.cts]` | client-side: open a decision-mode response (DESIGN.md S20) and print the decision per clip; the mode comes from `--output-mode` or the request bundle (`--request`), which cross-check when both are given |
-//! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS] [--output-mode M] [--sgn-preset P] [--logit-bound B]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits (or the decision, under `--output-mode`), all over one TCP connection (DESIGN.md S18/S20) |
+//! | `infer-remote --addr H:P [--nl K] [--batch B] [--tenant T] [--seed S] [--timeout-ms MS] [--output-mode M] [--sgn-preset P] [--logit-bound B] [--allow-refresh[:R]]` | client-side, against a `serve --tier he-wire --listen` server: keygen → register eval keys → encrypt → streamed upload → decrypt logits (or the decision, under `--output-mode`), all over one TCP connection (DESIGN.md S18/S20); `--allow-refresh[:R]` opens an interactive session that answers up to R server refresh rounds mid-inference (DESIGN.md S21) |
 //! | `inspect [--plan-text F \| --artifacts [--nl K]] [--format json\|text\|dot] [--cost] [--profile N] [--batch B] [--no-opt] [--threads T]` | dump a compiled `HePlan` as a queryable graph (DESIGN.md S19): per-op kind/level/scale/wave, per-wave widths and critical path, per-pass optimizer accounting; `--cost` overlays reference cost-model predictions; `--profile N` (needs `--artifacts`) runs N profiled encrypted iterations first and overlays measured per-op latencies |
 //! | `status --addr H:P [--tenant T] [--timeout-ms MS]` | fetch a live server's JSON status snapshot over TCP (DESIGN.md S19): metrics counters + latency histogram, per-plan profile EWMAs, plan-cache contents |
 //!
@@ -42,6 +42,18 @@
 //! ```text
 //! lingcn serve --tier he-wire --listen 127.0.0.1:7070 --output-mode argmax   # terminal 1
 //! lingcn infer-remote --addr 127.0.0.1:7070 --nl 2 --output-mode argmax     # terminal 2
+//! ```
+//!
+//! Interactive refresh (DESIGN.md S21): deep variants whose chain would
+//! not fit compile onto the capped chain with refresh cut points; both
+//! sides pass `--allow-refresh[:MAX_ROUNDS]` and the client re-encrypts
+//! masked intermediates mid-inference on the same connection:
+//!
+//! ```text
+//! lingcn serve --tier he-wire --listen 127.0.0.1:7070 \
+//!              --output-mode argmax --sgn-preset precise --allow-refresh   # terminal 1
+//! lingcn infer-remote --addr 127.0.0.1:7070 --nl 2 \
+//!              --output-mode argmax --sgn-preset precise --allow-refresh   # terminal 2
 //! ```
 //!
 //! `plan`, `calibrate` and `predict` are self-contained; `infer`,
@@ -108,6 +120,40 @@ fn apply_decision_flags(
     opts.output_mode = mode;
     opts.sgn_preset = preset;
     opts.set_logit_bound(bound);
+}
+
+/// Round budget when `--allow-refresh` is passed without an explicit
+/// `:MAX_ROUNDS` suffix — generous for every shipped variant (the
+/// deepest Precise-preset plan predicts 3 rounds on the capped chain)
+/// while still bounding a runaway session.
+const DEFAULT_REFRESH_ROUNDS: u32 = 4;
+
+/// Parse `--allow-refresh[:MAX_ROUNDS]` (DESIGN.md S21): opt the plan
+/// compiler into interactive refresh cut points — the chain caps at
+/// [`crate::he_infer::REFRESH_CHAIN_CAP`] and depth past it round-trips
+/// through the key holder — with an optional per-request round budget
+/// (default [`DEFAULT_REFRESH_ROUNDS`]). Returns `None` when the flag is
+/// absent. Client and server must agree on the flag: it changes the
+/// serving chain geometry, so keys generated without it do not match a
+/// refresh-compiled plan.
+fn refresh_flag(args: &[String]) -> Result<Option<u32>> {
+    for a in args {
+        if a == "--allow-refresh" {
+            return Ok(Some(DEFAULT_REFRESH_ROUNDS));
+        }
+        if let Some(n) = a.strip_prefix("--allow-refresh:") {
+            let rounds: u32 = n.parse().map_err(|_| {
+                anyhow::anyhow!("--allow-refresh:{n}: MAX_ROUNDS is not a positive integer")
+            })?;
+            anyhow::ensure!(
+                rounds >= 1,
+                "--allow-refresh:0 permits no rounds — drop the flag to \
+                 compile monolithically instead"
+            );
+            return Ok(Some(rounds));
+        }
+    }
+    Ok(None)
 }
 
 /// Dispatch one invocation. Returns the process exit code on success
@@ -223,6 +269,12 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         "--output-mode only applies to --encrypted (the decision circuit \
          runs on ciphertexts, DESIGN.md S20)"
     );
+    let refresh = refresh_flag(args)?;
+    anyhow::ensure!(
+        refresh.is_none() || encrypted,
+        "--allow-refresh only applies to --encrypted (refresh cut points \
+         are a ciphertext-chain construct, DESIGN.md S21)"
+    );
     let dir = Path::new("artifacts");
     let model = crate::stgcn::StgcnModel::load(
         &dir.join(format!("model_nl{nl}.lgt")),
@@ -232,28 +284,44 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     let x = &ex.get("x")?.data;
     let t0 = std::time::Instant::now();
     if encrypted {
+        // decision modes grow the chain by the sign circuit's depth
+        let levels_full = 2 * model.layers.len()
+            + 2
+            + nl
+            + crate::he_infer::sgn::decision_levels(mode, preset, model.num_classes());
         let params = crate::ckks::CkksParams {
             n: 1 << 11,
             q0_bits: 50,
             scale_bits: 33,
-            // decision modes grow the chain by the sign circuit's depth
-            levels: 2 * model.layers.len()
-                + 2
-                + nl
-                + crate::he_infer::sgn::decision_levels(mode, preset, model.num_classes()),
+            // --allow-refresh caps the chain and round-trips the depth
+            // past it through the (here: in-process) key holder, matching
+            // the geometry session_geometry derives for keygen/serving
+            levels: match refresh {
+                Some(_) => levels_full.min(crate::he_infer::REFRESH_CHAIN_CAP),
+                None => levels_full,
+            },
             special_bits: 55,
             allow_insecure: true,
         };
         crate::ckks::set_limb_parallelism(limb_threads);
         let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
         apply_decision_flags(&mut opts, mode, preset, bound);
+        if let Some(rounds) = refresh {
+            opts.allow_refresh = true;
+            opts.max_refresh_rounds = rounds;
+        }
         let sess =
             crate::he_infer::PrivateInferenceSession::new_with_options(&model, params, 7, opts)?;
         // demo batch: the example clip slot-packed B times (a deployment
         // packs B *distinct* client clips)
         let clips: Vec<&[f64]> = (0..batch).map(|_| x.as_slice()).collect();
         let input = sess.encrypt_input_batch(&model, &clips)?;
-        let out = sess.infer_parallel(&input, threads)?;
+        let (out, refresh_stats) = if refresh.is_some() {
+            let (out, stats) = sess.infer_parallel_refresh(&input, threads)?;
+            (out, Some(stats))
+        } else {
+            (sess.infer_parallel(&input, threads)?, None)
+        };
         if matches!(mode, crate::he_infer::OutputMode::Logits) {
             let per_clip = sess.decrypt_logits_batch(&model, &out);
             let wall = t0.elapsed();
@@ -280,6 +348,13 @@ fn cmd_infer(args: &[String]) -> Result<()> {
             println!(
                 "batch={batch} latency={wall:?} ({:.2} clips/s)",
                 batch as f64 / wall.as_secs_f64()
+            );
+        }
+        if let Some(s) = refresh_stats {
+            println!(
+                "refresh_rounds={} masked_cts={} refresh_wait={}us (trusted \
+                 in-process refresh, DESIGN.md S21)",
+                s.rounds, s.cts, s.wait_us
             );
         }
     } else {
@@ -376,6 +451,15 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     // tenant's requests can ask for encrypted decisions
     let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
     apply_decision_flags(&mut opts, mode, preset, bound);
+    // --allow-refresh[:R]: key against the refresh-capped chain
+    // (DESIGN.md S21) — the serving side must pass the same flag, and
+    // requests must open an interactive session (`infer-remote
+    // --allow-refresh`) for plans that carry cut points
+    let refresh = refresh_flag(args)?;
+    if let Some(rounds) = refresh {
+        opts.allow_refresh = true;
+        opts.max_refresh_rounds = rounds;
+    }
     let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
     std::fs::create_dir_all(&out_dir)?;
     use crate::wire::WireSerialize;
@@ -385,6 +469,13 @@ fn cmd_keygen(args: &[String]) -> Result<()> {
     let eval_bytes = key_set.to_bytes();
     write_secret_file(&client_path, &client_bytes)?;
     std::fs::write(&eval_path, &eval_bytes)?;
+    if let Some(rounds) = refresh {
+        println!(
+            "refresh=enabled max_rounds={rounds} (chain capped at {} levels; \
+             serve and infer-remote must pass --allow-refresh too)",
+            crate::he_infer::REFRESH_CHAIN_CAP
+        );
+    }
     println!(
         "variant={variant} output_mode={mode} galois_keys={} client_key={} ({} bytes, \
          SECRET — keep local) eval_keys={} ({} bytes, ship to server)",
@@ -611,6 +702,9 @@ struct WireServeFlags {
     mode: crate::he_infer::OutputMode,
     preset: crate::he_infer::SgnPreset,
     bound: f64,
+    /// `--allow-refresh[:MAX_ROUNDS]` (DESIGN.md S21): compile serving
+    /// plans with refresh cut points and cap each session's round budget.
+    refresh: Option<u32>,
 }
 
 fn wire_serve_flags(args: &[String]) -> Result<WireServeFlags> {
@@ -631,6 +725,7 @@ fn wire_serve_flags(args: &[String]) -> Result<WireServeFlags> {
         mode,
         preset,
         bound,
+        refresh: refresh_flag(args)?,
     })
 }
 
@@ -696,8 +791,25 @@ fn find_unique_file(dir: &Path, prefix: &str, suffix: &str) -> Result<std::path:
 /// and ciphertexts — no secret key, no plaintext clip.
 fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
     use crate::wire::WireSerialize;
-    let WireServeFlags { workers, threads, limb_threads, capacity, optimize, mode, preset, bound } =
-        flags;
+    let WireServeFlags {
+        workers,
+        threads,
+        limb_threads,
+        capacity,
+        optimize,
+        mode,
+        preset,
+        bound,
+        refresh,
+    } = flags;
+    // refresh rounds need a live client on the other end of a socket; the
+    // offline file roundtrip has nobody to re-encrypt the cut points
+    anyhow::ensure!(
+        refresh.is_none(),
+        "--allow-refresh needs the interactive TCP tier (--listen): the \
+         file-driven roundtrip cannot round-trip refresh cut points \
+         (DESIGN.md S21)"
+    );
     let tenant = arg_value(args, "--tenant").unwrap_or_else(|| "cli-tenant".into());
     // --dir D fills in the conventional names (keygen's eval_nl*.keys,
     // encrypt's request.cts); explicit flags override file-by-file
@@ -803,8 +915,17 @@ fn cmd_serve_wire_files(args: &[String], flags: WireServeFlags) -> Result<()> {
 /// and serve until killed. Tenants register their own eval keys over the
 /// socket, so no `--eval-keys`/`--tenant` here.
 fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> Result<()> {
-    let WireServeFlags { workers, threads, limb_threads, capacity, optimize, mode, preset, bound } =
-        flags;
+    let WireServeFlags {
+        workers,
+        threads,
+        limb_threads,
+        capacity,
+        optimize,
+        mode,
+        preset,
+        bound,
+        refresh,
+    } = flags;
     // net knobs, validated before artifact loading
     let read_timeout_ms: u64 =
         arg_value(args, "--read-timeout-ms").unwrap_or_else(|| "30000".into()).parse()?;
@@ -827,6 +948,11 @@ fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> 
     )?;
     executor.set_optimize(optimize);
     executor.set_output_mode(mode, preset, bound);
+    // --allow-refresh[:R]: serving plans compile on the refresh-capped
+    // chain and requests must open an interactive session (DESIGN.md S21)
+    if let Some(rounds) = refresh {
+        executor.set_refresh(true, rounds);
+    }
     let executor = std::sync::Arc::new(executor);
     println!("variants:");
     for v in router.variants() {
@@ -846,19 +972,28 @@ fn cmd_serve_wire_listen(args: &[String], addr: &str, flags: WireServeFlags) -> 
     );
     let backend =
         std::sync::Arc::new(crate::wire::net::CoordinatorBackend::new(executor, coord));
-    let cfg = crate::wire::net::NetConfig {
+    let mut cfg = crate::wire::net::NetConfig {
         read_timeout: std::time::Duration::from_millis(read_timeout_ms),
         write_timeout: std::time::Duration::from_millis(write_timeout_ms),
         max_conns_per_tenant: max_conns,
         max_inflight_per_tenant: max_inflight,
         ..Default::default()
     };
+    // the net tier clamps every session's announced round budget to the
+    // flag's value — a client asking for more silently gets the ceiling
+    if let Some(rounds) = refresh {
+        cfg.max_refresh_rounds = rounds;
+    }
     let server = crate::wire::net::NetServer::bind(addr, backend, metrics.clone(), cfg)?;
     println!(
         "listening on {} ({workers} workers, {threads} plan-exec threads, \
-         output_mode={mode}; tenants register eval keys over the socket; \
+         output_mode={mode}{}; tenants register eval keys over the socket; \
          ctrl-c to stop)",
-        server.local_addr()
+        server.local_addr(),
+        match refresh {
+            Some(rounds) => format!(", refresh=on max_rounds={rounds}"),
+            None => String::new(),
+        }
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(60));
@@ -884,6 +1019,9 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
     // validate the decision flags before keygen/socket work; the same
     // mode must be passed to the server's `serve --output-mode`
     let (mode, preset, bound) = decision_flags(args)?;
+    // --allow-refresh[:R] must match the server's flag too: it changes
+    // the chain the keys are generated against (DESIGN.md S21)
+    let refresh = refresh_flag(args)?;
     let variant = format!("lingcn-nl{nl}");
     let model = crate::stgcn::StgcnModel::load(
         &Path::new("artifacts").join(format!("model_nl{nl}.lgt")),
@@ -891,6 +1029,10 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
     )?;
     let mut opts = crate::he_infer::PlanOptions { batch, optimize, ..Default::default() };
     apply_decision_flags(&mut opts, mode, preset, bound);
+    if let Some(rounds) = refresh {
+        opts.allow_refresh = true;
+        opts.max_refresh_rounds = rounds;
+    }
     let (client, key_set) = keygen_from_args(args, &model, &variant, opts)?;
     let ex = crate::util::tensorio::TensorFile::load(Path::new(&input))?;
     let x = &ex.get("x")?.data;
@@ -912,7 +1054,13 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
         client.encrypt_request(x)?
     }
     .with_mode(mode);
-    let reply = conn.infer(Some(&variant), &bundle)?;
+    // interactive session: the client answers the server's refresh
+    // rounds (decrypt masked cut points, re-encrypt at the chain top)
+    // before the final response arrives on the same connection
+    let (reply, rounds_served) = match refresh {
+        Some(rounds) => conn.infer_with_refresh(Some(&variant), &bundle, &client, rounds)?,
+        None => (conn.infer(Some(&variant), &bundle)?, 0),
+    };
     let wall = t0.elapsed();
     if matches!(mode, crate::he_infer::OutputMode::Logits) {
         for (b, logits) in
@@ -935,6 +1083,9 @@ fn cmd_infer_remote(args: &[String]) -> Result<()> {
                 reply.variant
             );
         }
+    }
+    if refresh.is_some() {
+        println!("refresh_rounds={rounds_served} (client re-encrypted the masked cut points)");
     }
     println!(
         "remote={addr} register={t_registered:?} queue={:?} exec={:?} wall={wall:?} \
@@ -1068,6 +1219,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let optimize = !args.iter().any(|a| a == "--no-opt");
     anyhow::ensure!(batch >= 1, "--batch must be at least 1");
     let (mode, preset, bound) = decision_flags(args)?;
+    let refresh = refresh_flag(args)?;
     let limb_threads: usize =
         arg_value(args, "--limb-threads").unwrap_or_else(|| "1".into()).parse()?;
     // limb fan-out composes multiplicatively with the plan-executor pool
@@ -1087,6 +1239,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 "--output-mode is a decision-circuit knob of --tier he|he-wire \
                  (DESIGN.md S20)"
             );
+            anyhow::ensure!(
+                refresh.is_none(),
+                "--allow-refresh is a ciphertext-chain knob of --tier \
+                 he|he-wire (DESIGN.md S21)"
+            );
             let (router, exec) = crate::coordinator::from_artifacts(Path::new("artifacts"), &cost)?;
             (router, std::sync::Arc::new(exec))
         }
@@ -1099,6 +1256,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             )?;
             exec.set_optimize(optimize);
             exec.set_output_mode(mode, preset, bound);
+            // trusted tier: refresh rounds resolve in-process through
+            // LocalRefresh (the executor holds the keys), so this is the
+            // single-machine demo of the capped-chain geometry
+            if let Some(rounds) = refresh {
+                exec.set_refresh(true, rounds);
+            }
             exec.set_metrics(metrics.clone());
             (router, std::sync::Arc::new(exec))
         }

@@ -70,6 +70,13 @@ pub struct Metrics {
     pub decisions_topk: AtomicU64,
     /// Requests served under `--output-mode threshold:...`.
     pub decisions_threshold: AtomicU64,
+    /// Client-aided refresh round trips completed across all
+    /// refresh-bearing executions (he_infer::exec; DESIGN.md S21).
+    pub refresh_rounds: AtomicU64,
+    /// Microseconds spent waiting on refresh sources (client decrypt +
+    /// re-encrypt plus, on the wire tier, the network), summed over
+    /// rounds.
+    pub refresh_wait_us: AtomicU64,
     /// log2-spaced latency histogram, bucket i covers [2^(i-10), 2^(i-9)) s.
     latency_buckets: [AtomicU64; BUCKET_COUNT],
     latency_sum_us: AtomicU64,
@@ -106,6 +113,8 @@ impl Default for Metrics {
             decisions_argmax: AtomicU64::new(0),
             decisions_topk: AtomicU64::new(0),
             decisions_threshold: AtomicU64::new(0),
+            refresh_rounds: AtomicU64::new(0),
+            refresh_wait_us: AtomicU64::new(0),
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
         }
@@ -199,7 +208,7 @@ impl Metrics {
              key_registry={}h/{}m/{}e slot_batch={}j/{}r fill={:.2} occ={:.2} \
              opt={}ops/{}rots net_conns={}a/{}r/{}live net_io={}in/{}out \
              net_req_rej={} decisions={}am/{}tk/{}th sign_stages={} \
-             mean={:?} p50≤{:?} p99≤{:?}",
+             refresh={}rounds/{}us mean={:?} p50≤{:?} p99≤{:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
@@ -225,6 +234,8 @@ impl Metrics {
             self.decisions_topk.load(Ordering::Relaxed),
             self.decisions_threshold.load(Ordering::Relaxed),
             self.sign_stages.load(Ordering::Relaxed),
+            self.refresh_rounds.load(Ordering::Relaxed),
+            self.refresh_wait_us.load(Ordering::Relaxed),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
@@ -254,7 +265,8 @@ impl Metrics {
              \"net_conns_active\":{},\"net_bytes_in\":{},\"net_bytes_out\":{},\
              \"net_requests_rejected\":{},\"sign_stages\":{},\
              \"decisions_argmax\":{},\"decisions_topk\":{},\
-             \"decisions_threshold\":{}}}",
+             \"decisions_threshold\":{},\"refresh_rounds\":{},\
+             \"refresh_wait_us\":{}}}",
             c(&self.submitted),
             c(&self.completed),
             c(&self.failed),
@@ -280,6 +292,8 @@ impl Metrics {
             c(&self.decisions_argmax),
             c(&self.decisions_topk),
             c(&self.decisions_threshold),
+            c(&self.refresh_rounds),
+            c(&self.refresh_wait_us),
         ));
         out.push_str(",\"latency\":{\"buckets\":[");
         for (i, b) in self.latency_buckets.iter().enumerate() {
@@ -411,6 +425,20 @@ mod tests {
         assert!(j.contains("\"decisions_topk\":2"), "{j}");
         assert!(j.contains("\"decisions_threshold\":1"), "{j}");
         // the scalar counters keep the snapshot's single-array shape
+        assert_eq!(j.matches('[').count(), 1, "{j}");
+        assert_eq!(j.matches(']').count(), 1, "{j}");
+    }
+
+    #[test]
+    fn test_refresh_counters_surface_in_summary_and_snapshot() {
+        let m = Metrics::default();
+        m.refresh_rounds.fetch_add(3, Ordering::Relaxed);
+        m.refresh_wait_us.fetch_add(1500, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("refresh=3rounds/1500us"), "summary: {s}");
+        let j = m.snapshot();
+        assert!(j.contains("\"refresh_rounds\":3"), "{j}");
+        assert!(j.contains("\"refresh_wait_us\":1500"), "{j}");
         assert_eq!(j.matches('[').count(), 1, "{j}");
         assert_eq!(j.matches(']').count(), 1, "{j}");
     }

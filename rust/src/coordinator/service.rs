@@ -12,7 +12,7 @@ use super::batcher::{Batcher, Pending};
 use super::metrics::Metrics;
 use super::router::Router;
 use crate::ckks::Ciphertext;
-use crate::he_infer::OutputMode;
+use crate::he_infer::{OutputMode, RefreshSource};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -75,6 +75,30 @@ pub trait InferenceExecutor: Send + Sync + 'static {
              (serve with --tier he-wire)"
         )
     }
+
+    /// [`infer_encrypted`] for requests that negotiated client-aided
+    /// refresh rounds (DESIGN.md S21): `source` is the transport's bridge
+    /// back to the client's decrypt + re-encrypt, `max_rounds` the cap the
+    /// client offered. Default: drop the bridge and serve through
+    /// [`infer_encrypted`] — tiers without refresh support keep their
+    /// semantics, and a refresh-bearing plan then rejects typed at
+    /// execution rather than stalling a round trip nobody will answer.
+    ///
+    /// [`infer_encrypted`]: InferenceExecutor::infer_encrypted
+    #[allow(clippy::too_many_arguments)]
+    fn infer_encrypted_with_refresh(
+        &self,
+        variant: &str,
+        tenant: &str,
+        cts: &[Ciphertext],
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+    ) -> Result<Ciphertext> {
+        let _ = rounds;
+        self.infer_encrypted(variant, tenant, cts, params_hash, batch, mode)
+    }
 }
 
 /// Plaintext executor over loaded STGCN models (one per variant).
@@ -130,6 +154,10 @@ pub struct EncryptedRequest {
     /// Output mode the client requested (`CtBundle::mode`). The wire
     /// executor rejects a mode its plan was not compiled for.
     pub mode: OutputMode,
+    /// Refresh bridge for this request's round trips (DESIGN.md S21):
+    /// `Some` when the client negotiated `--allow-refresh`, `None`
+    /// otherwise (refresh-bearing plans then reject typed).
+    pub rounds: Option<Arc<dyn RefreshSource>>,
     pub latency_budget_s: Option<f64>,
     pub resp: SyncSender<EncryptedResponse>,
 }
@@ -165,6 +193,7 @@ enum Job {
         params_hash: Option<u64>,
         batch: usize,
         mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
         resp: SyncSender<EncryptedResponse>,
     },
 }
@@ -298,6 +327,34 @@ impl Coordinator {
         mode: OutputMode,
         latency_budget_s: Option<f64>,
     ) -> Result<EncryptedResponse> {
+        self.infer_blocking_encrypted_rounds(
+            tenant,
+            variant,
+            cts,
+            params_hash,
+            batch,
+            mode,
+            None,
+            latency_budget_s,
+        )
+    }
+
+    /// [`Coordinator::infer_blocking_encrypted`] with a refresh bridge:
+    /// the wire tier hands the per-request `NetRefreshBridge` in here so
+    /// refresh-bearing plans can round-trip to the client mid-execution
+    /// (DESIGN.md S21).
+    #[allow(clippy::too_many_arguments)]
+    pub fn infer_blocking_encrypted_rounds(
+        &self,
+        tenant: String,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+        latency_budget_s: Option<f64>,
+    ) -> Result<EncryptedResponse> {
         let (tx, rx) = mpsc::sync_channel(1);
         self.submit_encrypted(EncryptedRequest {
             tenant,
@@ -306,6 +363,7 @@ impl Coordinator {
             params_hash,
             batch,
             mode,
+            rounds,
             latency_budget_s,
             resp: tx,
         })?;
@@ -394,6 +452,7 @@ fn leader_loop(
                                 params_hash: req.params_hash,
                                 batch: req.batch,
                                 mode: req.mode,
+                                rounds: req.rounds,
                                 resp: req.resp,
                             },
                         )
@@ -579,9 +638,12 @@ fn worker_loop(
                     });
                     let _ = resp.send(out);
                 }
-                Job::Encrypted { tenant, cts, params_hash, batch: req_batch, mode, resp } => {
-                    let result = executor
-                        .infer_encrypted(&variant, &tenant, &cts, params_hash, req_batch, mode);
+                Job::Encrypted {
+                    tenant, cts, params_hash, batch: req_batch, mode, rounds, resp,
+                } => {
+                    let result = executor.infer_encrypted_with_refresh(
+                        &variant, &tenant, &cts, params_hash, req_batch, mode, rounds,
+                    );
                     let exec = t0.elapsed();
                     // client-side slot batching: every served bundle is
                     // one job with `req_batch` filled copies out of the

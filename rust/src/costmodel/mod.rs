@@ -48,7 +48,16 @@ pub struct OpCostModel {
     pub add_a: f64,
     /// seconds per (N·log2 N·limbs)
     pub rescale_a: f64,
+    /// Flat seconds per client-aided refresh round (DESIGN.md S21):
+    /// loopback/LAN round trip plus the client's decrypt + re-encrypt.
+    /// Not fitted from the HE-op grid — a round is network-bound, so a
+    /// nominal constant is used and the serving metrics report measured
+    /// round latency alongside it.
+    pub refresh_s: f64,
 }
+
+/// Nominal per-round refresh latency (see [`OpCostModel::refresh_s`]).
+pub const DEFAULT_REFRESH_ROUND_S: f64 = 0.05;
 
 /// Latency prediction broken down the way the paper's Table 7 reports it.
 #[derive(Clone, Copy, Debug, Default)]
@@ -93,6 +102,7 @@ impl OpCostModel {
             rescale_a: lsq(points
                 .iter()
                 .map(|p| (nlog(p) * p.limbs as f64, p.rescale_s))),
+            refresh_s: DEFAULT_REFRESH_ROUND_S,
         }
     }
 
@@ -126,6 +136,7 @@ impl OpCostModel {
             pmult_a: 8.5e-9,
             add_a: 6.9e-9,
             rescale_a: 7.5e-9,
+            refresh_s: DEFAULT_REFRESH_ROUND_S,
         }
     }
 

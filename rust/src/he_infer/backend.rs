@@ -49,6 +49,27 @@ pub trait HeBackend {
         ks.iter().map(|&k| self.rotate(a, k)).collect()
     }
 
+    /// Whether the backend can serve a [`HeOp::Refresh`] cut point
+    /// (DESIGN.md S21): a level reset back to the chain top at scale Δ,
+    /// served by a client round trip today or an in-circuit bootstrap
+    /// later. Backends that return `false` (the default, including the
+    /// real non-interactive [`CkksBackend`]) require inputs deep enough
+    /// for the whole walk; the recording `PlanBuilder` opts in when the
+    /// plan options allow refresh.
+    ///
+    /// [`HeOp::Refresh`]: super::plan::HeOp::Refresh
+    fn supports_refresh(&self) -> bool {
+        false
+    }
+
+    /// Serve one refresh: return `a`'s plaintext as a fresh top-level
+    /// ciphertext at scale Δ. Only called when
+    /// [`HeBackend::supports_refresh`] is true — the default is
+    /// unreachable by construction (callers check first and fail typed).
+    fn refresh(&self, _a: &Self::Ct) -> Self::Ct {
+        unreachable!("backend does not support refresh (supports_refresh() is false)")
+    }
+
     fn op_counts(&self) -> OpCounts;
     fn reset_counts(&self);
 }

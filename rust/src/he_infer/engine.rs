@@ -175,8 +175,10 @@ impl<'m> HeStgcn<'m> {
             self.layout.copies()
         );
         let need = self.levels_needed()?;
+        // a refresh-capable backend buys missing depth with level resets
+        // at chain exhaustion (DESIGN.md S21), so shallow inputs are fine
         ensure!(
-            be.level(&input[0]) >= need,
+            be.level(&input[0]) >= need || be.supports_refresh(),
             "input level {} below required depth {need}",
             be.level(&input[0])
         );

@@ -31,7 +31,7 @@ use crate::ama::{pack_clip, pack_clip_batch, AmaLayout};
 use crate::ckks::{Ciphertext, CkksEngine, CkksParams, Encoder, EvalEngine, Evaluator, Plaintext};
 use crate::coordinator::{InferenceExecutor, Metrics};
 use crate::stgcn::StgcnModel;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier, Mutex, OnceLock};
@@ -82,6 +82,18 @@ pub fn execute_with_backend<B: HeBackend>(
             }
             continue;
         }
+        // the interactive op second: only refresh-capable backends (the
+        // plan builder, a future in-circuit bootstrap) can replay it
+        if let HeOp::Refresh { src, dst } = *op {
+            ensure!(
+                be.supports_refresh(),
+                "op {i}: plan contains refresh cut points but the backend is \
+                 non-interactive (recompile with a deeper chain, or execute \
+                 the prepared plan with a RefreshSource)"
+            );
+            regs[dst as usize] = Some(be.refresh(get(src)?));
+            continue;
+        }
         let out = match *op {
             HeOp::Rotate { src, k, .. } => be.rotate(get(src)?, k as usize),
             HeOp::MulPlain { src, mask, .. } => {
@@ -98,7 +110,7 @@ pub fn execute_with_backend<B: HeBackend>(
             HeOp::Sub { a, b, .. } => be.sub(get(a)?, get(b)?),
             HeOp::Mul { a, b, .. } => be.mul(get(a)?, get(b)?),
             HeOp::Rescale { src, .. } => be.rescale(get(src)?),
-            HeOp::RotGroup { .. } => unreachable!("handled above"),
+            HeOp::RotGroup { .. } | HeOp::Refresh { .. } => unreachable!("handled above"),
         };
         regs[op.dst() as usize] = Some(out);
     }
@@ -198,6 +210,11 @@ impl PreparedPlan {
             HeOp::Sub { a, b, dst } => set(dst, eval.sub(get(a)?, get(b)?))?,
             HeOp::Mul { a, b, dst } => set(dst, eval.mul(get(a)?, get(b)?))?,
             HeOp::Rescale { src, dst } => set(dst, eval.rescale(get(src)?))?,
+            HeOp::Refresh { .. } => bail!(
+                "refresh cut point reached the non-interactive executor \
+                 (serve this plan through execute_with_refresh with a \
+                 RefreshSource)"
+            ),
         }
         Ok(())
     }
@@ -227,21 +244,8 @@ impl PreparedPlan {
         out
     }
 
-    /// Execute the plan on real ciphertexts. `threads > 1` fans each
-    /// wavefront's ops out over the persistent worker pool shared with
-    /// `par_limbs` (`util::pool`; DESIGN.md §Perf-4). With
-    /// `util::pool::set_pooled_spawn(false)` — the `--kernels` ablation
-    /// baseline — it falls back to the pre-campaign scoped pool (one OS
-    /// thread per worker for the whole request, waves separated by a
-    /// standing barrier). Results are identical either way: waves are the
-    /// only ordering the dataflow needs, and both paths complete a wave
-    /// before starting the next.
-    pub fn execute(
-        &self,
-        engine: &EvalEngine,
-        inputs: &[Ciphertext],
-        threads: usize,
-    ) -> Result<Ciphertext> {
+    /// The shared input-geometry gate of both execution paths.
+    fn check_inputs(&self, engine: &EvalEngine, inputs: &[Ciphertext]) -> Result<()> {
         let plan = &self.plan;
         ensure!(
             inputs.len() == plan.n_inputs,
@@ -276,6 +280,32 @@ impl PreparedPlan {
             "input ciphertexts do not match the engine's ring degree N={}",
             engine.ctx.n
         );
+        Ok(())
+    }
+
+    /// Execute the plan on real ciphertexts. `threads > 1` fans each
+    /// wavefront's ops out over the persistent worker pool shared with
+    /// `par_limbs` (`util::pool`; DESIGN.md §Perf-4). With
+    /// `util::pool::set_pooled_spawn(false)` — the `--kernels` ablation
+    /// baseline — it falls back to the pre-campaign scoped pool (one OS
+    /// thread per worker for the whole request, waves separated by a
+    /// standing barrier). Results are identical either way: waves are the
+    /// only ordering the dataflow needs, and both paths complete a wave
+    /// before starting the next.
+    pub fn execute(
+        &self,
+        engine: &EvalEngine,
+        inputs: &[Ciphertext],
+        threads: usize,
+    ) -> Result<Ciphertext> {
+        let plan = &self.plan;
+        ensure!(
+            !plan.has_refresh(),
+            "plan contains {} refresh cut point(s): serve it through \
+             execute_with_refresh with a RefreshSource",
+            plan.counts.refresh
+        );
+        self.check_inputs(engine, inputs)?;
         let regs: Vec<OnceLock<Ciphertext>> =
             (0..plan.n_regs).map(|_| OnceLock::new()).collect();
         for (i, ct) in inputs.iter().enumerate() {
@@ -404,6 +434,250 @@ impl PreparedPlan {
             .cloned()
             .ok_or_else(|| anyhow!("plan produced no output"))
     }
+
+    /// Execute a refresh-bearing plan (DESIGN.md S21). The scheduler here
+    /// is free-running rather than wave-locked: every op whose sources
+    /// are ready executes immediately, refresh cut points are parked, and
+    /// when no further progress is possible the parked set is flushed as
+    /// **one** masked round trip through `source`. That makes the runtime
+    /// round count equal [`HePlan::refresh_rounds`] (the refresh-chain
+    /// depth) even when branch skew spreads one logical round across
+    /// several waves. Ops run sequentially — on this path the round-trip
+    /// latency dominates, so the worker pool stays on the non-interactive
+    /// [`PreparedPlan::execute`].
+    ///
+    /// Masking: each outgoing ciphertext is blinded with a fresh uniform
+    /// per-slot offset in `[-MASK_BOUND, MASK_BOUND)` added under the
+    /// encryption, so `source` only ever sees `m + r`; the offset is
+    /// subtracted from the returned top-level ciphertext. Plans without
+    /// refresh ops fall through to [`PreparedPlan::execute`] untouched.
+    pub fn execute_with_refresh(
+        &self,
+        engine: &EvalEngine,
+        inputs: &[Ciphertext],
+        threads: usize,
+        source: &dyn RefreshSource,
+        mask_rng: &mut crate::util::Rng,
+    ) -> Result<(Ciphertext, RefreshStats)> {
+        let plan = &self.plan;
+        if !plan.has_refresh() {
+            return Ok((self.execute(engine, inputs, threads)?, RefreshStats::default()));
+        }
+        self.check_inputs(engine, inputs)?;
+        let n_ops = plan.ops.len();
+        // dataflow bookkeeping: how many distinct not-yet-written source
+        // registers each op waits on, and who to wake when one lands
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); plan.n_regs];
+        let mut dep_count: Vec<u32> = vec![0; n_ops];
+        for (oi, op) in plan.ops.iter().enumerate() {
+            let (s0, s1) = op.sources();
+            let mut srcs = [Some(s0), s1];
+            if s1 == Some(s0) {
+                srcs[1] = None;
+            }
+            for s in srcs.into_iter().flatten() {
+                if (s as usize) < plan.n_inputs {
+                    continue;
+                }
+                consumers[s as usize].push(oi as u32);
+                dep_count[oi] += 1;
+            }
+        }
+        let regs: Vec<OnceLock<Ciphertext>> =
+            (0..plan.n_regs).map(|_| OnceLock::new()).collect();
+        for (i, ct) in inputs.iter().enumerate() {
+            let _ = regs[i].set(ct.clone());
+        }
+        fn mark(reg: u32, consumers: &[Vec<u32>], dep_count: &mut [u32], ready: &mut Vec<u32>) {
+            for &oi in &consumers[reg as usize] {
+                dep_count[oi as usize] -= 1;
+                if dep_count[oi as usize] == 0 {
+                    ready.push(oi);
+                }
+            }
+        }
+        let mut ready: Vec<u32> = dep_count
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c == 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let mut pending: Vec<u32> = Vec::new();
+        let mut stats = RefreshStats::default();
+        let (eval, enc) = (&engine.eval, &engine.encoder);
+        let top = plan.chain.top_level();
+        let slots = engine.ctx.slots();
+        let sample = profile::profiling_enabled().then(RequestSample::default);
+        let t_start = sample.as_ref().map(|_| std::time::Instant::now());
+        let mut done = 0usize;
+        while done < n_ops {
+            while let Some(oi) = ready.pop() {
+                let op = plan.ops[oi as usize];
+                if matches!(op, HeOp::Refresh { .. }) {
+                    pending.push(oi);
+                    continue;
+                }
+                self.run_op(oi, &regs, eval, enc, sample.as_ref())?;
+                match op {
+                    HeOp::RotGroup { group, .. } => {
+                        let spec = plan
+                            .groups
+                            .get(group as usize)
+                            .ok_or_else(|| anyhow!("rotation group {group} out of range"))?;
+                        for &(_, dst) in spec {
+                            mark(dst, &consumers, &mut dep_count, &mut ready);
+                        }
+                    }
+                    _ => mark(op.dst(), &consumers, &mut dep_count, &mut ready),
+                }
+                done += 1;
+            }
+            if done == n_ops {
+                break;
+            }
+            ensure!(
+                !pending.is_empty(),
+                "interactive executor stalled with {} op(s) unreachable \
+                 (corrupt schedule)",
+                n_ops - done
+            );
+            // ---- one refresh round: mask, round-trip, unmask ----
+            let round = stats.rounds;
+            let mut offsets: Vec<Vec<f64>> = Vec::with_capacity(pending.len());
+            let mut masked: Vec<Ciphertext> = Vec::with_capacity(pending.len());
+            for &oi in &pending {
+                let HeOp::Refresh { src, .. } = plan.ops[oi as usize] else {
+                    unreachable!("pending holds only refresh ops")
+                };
+                let ct = regs[src as usize].get().ok_or_else(|| {
+                    anyhow!("refresh source register {src} not ready (schedule violation)")
+                })?;
+                ensure!(
+                    ct.level() == 0,
+                    "refresh cut point at level {} (the compiler only cuts at \
+                     chain exhaustion)",
+                    ct.level()
+                );
+                let r: Vec<f64> = (0..slots)
+                    .map(|_| mask_rng.gen_range_f64(-MASK_BOUND, MASK_BOUND))
+                    .collect();
+                let pt = enc.encode(&engine.ctx, &r, ct.scale, ct.nq());
+                masked.push(eval.add_plain(ct, &pt));
+                offsets.push(r);
+            }
+            let t0 = std::time::Instant::now();
+            let fresh = source.refresh(&masked, round)?;
+            stats.wait_us += t0.elapsed().as_micros() as u64;
+            stats.rounds += 1;
+            ensure!(
+                fresh.len() == masked.len(),
+                "refresh round {round} returned {} ciphertext(s), expected {}",
+                fresh.len(),
+                masked.len()
+            );
+            for ((&oi, r), ct) in pending.iter().zip(&offsets).zip(fresh) {
+                let HeOp::Refresh { dst, .. } = plan.ops[oi as usize] else {
+                    unreachable!("pending holds only refresh ops")
+                };
+                // the round trip must hand back a fresh top-level
+                // encryption at the base scale on the session's ring —
+                // anything else is a protocol violation, not a panic
+                ensure!(
+                    ct.level() == top,
+                    "refresh round {round}: returned ciphertext at level {}, \
+                     expected the chain top level {top}",
+                    ct.level()
+                );
+                ensure!(
+                    (ct.scale - plan.chain.delta).abs() / plan.chain.delta < 1e-9,
+                    "refresh round {round}: returned ciphertext at scale {}, \
+                     expected the base scale Δ",
+                    ct.scale
+                );
+                ensure!(
+                    ct.c0
+                        .limbs
+                        .iter()
+                        .chain(ct.c1.limbs.iter())
+                        .all(|l| l.len() == engine.ctx.n),
+                    "refresh round {round}: returned ciphertext does not match \
+                     the engine's ring degree N={}",
+                    engine.ctx.n
+                );
+                let neg: Vec<f64> = r.iter().map(|v| -v).collect();
+                let pt = enc.encode(&engine.ctx, &neg, ct.scale, ct.nq());
+                let out = eval.add_plain(&ct, &pt);
+                regs[dst as usize]
+                    .set(out)
+                    .map_err(|_| anyhow!("register {dst} written twice"))?;
+                mark(dst, &consumers, &mut dep_count, &mut ready);
+                done += 1;
+                stats.cts += 1;
+            }
+            pending.clear();
+        }
+        if let (Some(sample), Some(t0)) = (&sample, t_start) {
+            self.profile
+                .record_run(t0.elapsed().as_nanos() as u64, sample, self.key.get());
+        }
+        let out = regs[plan.output as usize]
+            .get()
+            .cloned()
+            .ok_or_else(|| anyhow!("plan produced no output"))?;
+        Ok((out, stats))
+    }
+}
+
+/// What one execution's refresh protocol actually did — mirrored into the
+/// coordinator metrics by the serving tiers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefreshStats {
+    /// Round trips performed (equals [`HePlan::refresh_rounds`]).
+    pub rounds: usize,
+    /// Masked ciphertexts exchanged across all rounds.
+    pub cts: usize,
+    /// Wall-clock microseconds spent waiting on the refresh source.
+    pub wait_us: u64,
+}
+
+/// Per-slot mask amplitude for refresh round trips. A level-0 ciphertext
+/// at scale Δ=2³³ under the 50-bit base modulus leaves `q₀/(2Δ) ≈ 2¹⁶` of
+/// plaintext headroom; 2¹³ keeps `m + r` a factor ~8 inside it while
+/// drowning the network's unit-scale intermediates. This is *statistical*
+/// masking — hiding quality degrades as |m| approaches the bound — which
+/// DESIGN.md S21 discusses against the exact mod-q alternative.
+pub const MASK_BOUND: f64 = 8192.0;
+
+/// The client half of a refresh round trip (DESIGN.md S21): takes masked
+/// level-0 ciphertexts, returns fresh encryptions of the same slot values
+/// at (top, Δ). The executor masks/unmasks around this call, so an
+/// implementation only ever sees blinded intermediates. Implementations:
+/// [`LocalRefresh`] (trusted in-process), `wire::NetRefreshBridge` (the
+/// real client over TCP), and — by design — a future in-circuit CKKS
+/// bootstrap, which has the same signature with no protocol at all.
+pub trait RefreshSource: Send + Sync {
+    /// Re-encrypt each ciphertext at top level, base scale Δ, preserving
+    /// slot values. `round` is the 0-based round index of this execution.
+    fn refresh(&self, masked: &[Ciphertext], round: usize) -> Result<Vec<Ciphertext>>;
+}
+
+/// Trusted in-process refresh: decrypt + re-encrypt on a full engine.
+/// The demo `serve --tier he` / `infer --encrypted` realization, and the
+/// reference the differential tests compare the wire protocol against.
+pub struct LocalRefresh<'e> {
+    pub engine: &'e CkksEngine,
+}
+
+impl RefreshSource for LocalRefresh<'_> {
+    fn refresh(&self, masked: &[Ciphertext], _round: usize) -> Result<Vec<Ciphertext>> {
+        Ok(masked
+            .iter()
+            .map(|ct| {
+                let slots = self.engine.decrypt(ct);
+                self.engine.encrypt_at(&slots, self.engine.ctx.max_level() + 1)
+            })
+            .collect())
+    }
 }
 
 // --------------------------------------------------------- serving tier
@@ -429,6 +703,14 @@ pub struct PlanKey {
     pub sgn_preset: SgnPreset,
     /// Logit bound B as raw f64 bits (the normalization masks bake it in).
     pub logit_bound_bits: u64,
+    /// Whether the compiler may insert refresh cut points (DESIGN.md S21).
+    /// A refresh-bearing plan runs on a capped chain and needs an
+    /// interactive executor — a different artifact from the same model
+    /// compiled monolithically.
+    pub allow_refresh: bool,
+    /// The negotiated round cap the plan was compiled under (part of the
+    /// identity because compile *rejects* plans that exceed it).
+    pub max_refresh_rounds: u32,
 }
 
 impl PlanKey {
@@ -445,6 +727,8 @@ impl PlanKey {
             output_mode: opts.output_mode,
             sgn_preset: opts.sgn_preset,
             logit_bound_bits: opts.logit_bound_bits,
+            allow_refresh: opts.allow_refresh,
+            max_refresh_rounds: opts.max_refresh_rounds,
         }
     }
 }
@@ -472,6 +756,11 @@ pub struct HeSession {
     /// Compiled-but-unprepared plans kept from the build (the single-clip
     /// plan of a batching session, compiled anyway for the key union).
     spare_plans: Mutex<HashMap<usize, Arc<HePlan>>>,
+    /// Mask randomness for refresh round trips (DESIGN.md S21); seeded
+    /// from the session seed so trusted-tier runs stay reproducible.
+    mask_rng: Mutex<crate::util::Rng>,
+    /// Stats of the most recent refresh-bearing execution.
+    last_refresh: Mutex<RefreshStats>,
 }
 
 /// Toy-scale CKKS parameters sized to the model's AMA block (serving-demo
@@ -511,7 +800,13 @@ pub fn plan_for(
                 && p.optimized == opts.optimize
                 && p.output_mode == opts.output_mode
                 && p.sgn_preset == opts.sgn_preset
-                && p.logit_bound.to_bits() == opts.logit_bound_bits =>
+                && p.logit_bound.to_bits() == opts.logit_bound_bits
+                // refresh staleness: the cached plan must have cut points
+                // exactly when this request's (chain, opts) would produce
+                // them, and must fit under the request's round cap
+                && p.has_refresh() == (opts.allow_refresh && chain.top_level() < p.levels_needed)
+                && (!p.has_refresh()
+                    || p.predicted_refresh_rounds() <= opts.max_refresh_rounds as usize) =>
         {
             Ok((p, true))
         }
@@ -574,6 +869,13 @@ pub fn session_geometry(model: &StgcnModel, opts: PlanOptions) -> Result<(AmaLay
     probe.sgn_preset = opts.sgn_preset;
     probe.logit_bound = opts.logit_bound();
     let levels = probe.levels_needed()?;
+    // refresh sessions run on a capped chain: rounds buy back the depth
+    // the shorter modulus chain no longer carries (DESIGN.md S21)
+    let levels = if opts.allow_refresh {
+        levels.min(super::plan::REFRESH_CHAIN_CAP)
+    } else {
+        levels
+    };
     Ok((layout, params_for(model, levels)))
 }
 
@@ -634,6 +936,8 @@ impl HeSession {
                 opts,
                 ragged: Mutex::new(HashMap::new()),
                 spare_plans: Mutex::new(spare),
+                mask_rng: Mutex::new(crate::util::Rng::seed_from_u64(seed ^ 0x5265_6672_6573_68)),
+                last_refresh: Mutex::new(RefreshStats::default()),
             },
             plan,
             was_cached,
@@ -731,15 +1035,33 @@ impl HeSession {
         } else {
             pack_clip_batch(&self.layout, clips, v, c)?
         };
+        // input geometry comes from the plan's chain, never recomputed
+        // from levels_needed — on a refresh-capped chain the two differ
         let cts: Vec<Ciphertext> = packed
             .iter()
-            .map(|p| self.engine.encrypt_at(p, plan.levels_needed + 1))
+            .map(|p| self.engine.encrypt_at(p, plan.input_limbs()))
             .collect();
-        let out = prepared.execute(&self.engine, &cts, threads)?;
+        let out = if plan.has_refresh() {
+            let source = LocalRefresh { engine: &self.engine };
+            let mut rng = self.mask_rng.lock().unwrap();
+            let (out, stats) =
+                prepared.execute_with_refresh(&self.engine, &cts, threads, &source, &mut rng)?;
+            *self.last_refresh.lock().unwrap() = stats;
+            out
+        } else {
+            prepared.execute(&self.engine, &cts, threads)?
+        };
         let slots = self.engine.decrypt(&out);
         Ok((0..clips.len())
             .map(|b| plan.extract_logits_clip(&slots, b))
             .collect())
+    }
+
+    /// The refresh protocol stats of the most recent refresh-bearing
+    /// execution on this session (zeroes before the first one). The
+    /// trusted tier surfaces these into the coordinator metrics.
+    pub fn last_refresh_stats(&self) -> RefreshStats {
+        *self.last_refresh.lock().unwrap()
     }
 }
 
@@ -808,6 +1130,27 @@ impl HeExecutor {
         self.opts.output_mode = mode;
         self.opts.sgn_preset = preset;
         self.opts.set_logit_bound(bound);
+    }
+
+    /// Allow the compiler to insert client-aided refresh cut points
+    /// (DESIGN.md S21; the CLI's `--allow-refresh[:MAX_ROUNDS]`). Call
+    /// before the first request: the pair is part of the plan-cache
+    /// identity and of the session's chain geometry.
+    pub fn set_refresh(&mut self, allow: bool, max_rounds: u32) {
+        self.opts.allow_refresh = allow;
+        self.opts.max_refresh_rounds = max_rounds;
+    }
+
+    /// Mirror one refresh-bearing execution's protocol stats into the
+    /// coordinator metrics (no-op on monolithic plans).
+    fn count_refresh(&self, session: &HeSession) {
+        let Some(m) = &self.metrics else { return };
+        if !session.prepared.plan.has_refresh() {
+            return;
+        }
+        let stats = session.last_refresh_stats();
+        m.refresh_rounds.fetch_add(stats.rounds as u64, Ordering::Relaxed);
+        m.refresh_wait_us.fetch_add(stats.wait_us, Ordering::Relaxed);
     }
 
     /// Count one decision-mode request: the per-mode request counter and
@@ -895,7 +1238,9 @@ impl InferenceExecutor for HeExecutor {
         let (session, hit) = self.session(variant)?;
         self.count_cache(&session, hit);
         self.count_decision(&session);
-        session.infer_trusted(clip, self.threads)
+        let out = session.infer_trusted(clip, self.threads)?;
+        self.count_refresh(&session);
+        Ok(out)
     }
 
     fn infer_batch(&self, variant: &str, clips: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
@@ -903,7 +1248,9 @@ impl InferenceExecutor for HeExecutor {
         self.count_cache(&session, hit);
         self.count_decision(&session);
         let refs: Vec<&[f64]> = clips.iter().map(|c| c.as_slice()).collect();
-        session.infer_trusted_batch(&refs, self.threads)
+        let out = session.infer_trusted_batch(&refs, self.threads)?;
+        self.count_refresh(&session);
+        Ok(out)
     }
 
     /// The per-variant slot capacity the coordinator's batcher sizes jobs
@@ -978,7 +1325,7 @@ mod tests {
         // a chain deep enough for the decision plan serves both compiles
         let mut probe = super::super::HeStgcn::new(&model, layout).unwrap();
         probe.output_mode = OutputMode::Argmax;
-        let chain = PlanChain::ideal(probe.levels_needed().unwrap(), 33);
+        let chain = PlanChain::ideal_for(probe.levels_needed().unwrap(), 33, &dec_opts);
         let (p, _) = plan_for(None, &model, layout, &chain, logits_opts).unwrap();
         // a cached logits plan must be stale for a decision request...
         let (p2, cached) = plan_for(Some(p), &model, layout, &chain, dec_opts).unwrap();
@@ -987,6 +1334,100 @@ mod tests {
         // ...and the recompiled decision plan is then a hit
         let (_, cached2) = plan_for(Some(p2), &model, layout, &chain, dec_opts).unwrap();
         assert!(cached2);
+    }
+
+    #[test]
+    fn test_refresh_execution_matches_plaintext_reference() {
+        let model = tiny();
+        let x = clip(&model);
+        let want = model.forward(&x).unwrap();
+        let opts = PlanOptions {
+            allow_refresh: true,
+            max_refresh_rounds: 4,
+            ..Default::default()
+        };
+        let (layout, _) = session_geometry(&model, opts).unwrap();
+        let probe = super::super::HeStgcn::new(&model, layout).unwrap();
+        let levels = probe.levels_needed().unwrap();
+        // a chain one level short of the plan's depth: refresh must engage
+        // with exactly one round
+        let params = params_for(&model, levels - 1);
+        let ctx = params.build().unwrap();
+        let chain = PlanChain::from_ctx(&ctx);
+        let plan = Arc::new(compile(&model, layout, &chain, opts).unwrap());
+        assert!(plan.has_refresh());
+        assert_eq!(plan.refresh_rounds(), 1);
+        let engine = CkksEngine::new(params, &plan.required_rotations(), 7).unwrap();
+        let prepared = PreparedPlan::new(plan.clone(), &engine).unwrap();
+        let packed = pack_clip(&layout, &x, model.v(), model.c_in).unwrap();
+        let cts: Vec<Ciphertext> = packed
+            .iter()
+            .map(|p| engine.encrypt_at(p, plan.input_limbs()))
+            .collect();
+        // the non-interactive path refuses a refresh-bearing plan, typed
+        let err = prepared.execute(&engine, &cts, 1).unwrap_err().to_string();
+        assert!(err.contains("refresh cut point"), "got: {err}");
+        // ...and the interactive path completes it through a local source
+        let source = LocalRefresh { engine: &engine };
+        let mut rng = crate::util::Rng::seed_from_u64(99);
+        let (out, stats) = prepared
+            .execute_with_refresh(&engine, &cts, 1, &source, &mut rng)
+            .unwrap();
+        assert_eq!(stats.rounds, 1, "runtime rounds must match the static count");
+        assert!(stats.cts >= 1);
+        let slots = engine.decrypt(&out);
+        let got = plan.extract_logits_clip(&slots, 0);
+        let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() / max_mag < 2e-2,
+                "logit {i}: refreshed {g} vs plaintext {w}"
+            );
+        }
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&got), argmax(&want));
+    }
+
+    #[test]
+    fn test_session_serves_refresh_plan_via_local_source() {
+        let model = tiny();
+        let x = clip(&model);
+        let want = model.forward(&x).unwrap();
+        // Precise-preset argmax previously failed compile on the capped
+        // chain ("insufficient levels for output mode argmax") — the
+        // ISSUE's acceptance scenario, here on the trusted tier
+        let mut opts = PlanOptions {
+            allow_refresh: true,
+            max_refresh_rounds: 8,
+            output_mode: OutputMode::Argmax,
+            sgn_preset: SgnPreset::Precise,
+            ..Default::default()
+        };
+        opts.set_logit_bound(4.0);
+        let (session, plan, _) = HeSession::new(model, opts, 7, None).unwrap();
+        assert!(
+            plan.has_refresh(),
+            "Precise argmax must overflow the capped chain and engage refresh"
+        );
+        let got = session.infer_trusted(&x, 1).unwrap();
+        let stats = session.last_refresh_stats();
+        assert_eq!(stats.rounds, plan.refresh_rounds());
+        assert!(stats.rounds >= 1);
+        let argmax = |v: &[f64]| {
+            v.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        // argmax plans return the one-hot indicator as logits
+        assert_eq!(argmax(&got), argmax(&want));
     }
 
     #[test]

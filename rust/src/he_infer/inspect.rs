@@ -70,6 +70,9 @@ fn predict_op_s(cost: &OpCostModel, plan: &HePlan, op: HeOp, state: &OpState) ->
         // the replayed state is the *output* level; the rescale itself
         // ran over the input's one-extra limb
         HeOp::Rescale { .. } => cost.rescale_a * nlog * (limbs + 1.0),
+        // a client round trip, not server HE work: the flat fitted
+        // per-round latency (network + client decrypt/re-encrypt)
+        HeOp::Refresh { .. } => cost.refresh_s,
     }
 }
 
@@ -435,8 +438,26 @@ mod tests {
         let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
         let layout = AmaLayout::new(8, 4, 256).unwrap();
         let he = HeStgcn::new(&m, layout).unwrap();
-        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
-        compile(&m, layout, &chain, PlanOptions { optimize, ..Default::default() }).unwrap()
+        let opts = PlanOptions { optimize, ..Default::default() };
+        let chain = PlanChain::ideal_for(he.levels_needed().unwrap(), 33, &opts);
+        compile(&m, layout, &chain, opts).unwrap()
+    }
+
+    #[test]
+    fn test_refresh_plan_renders_in_all_formats() {
+        let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let opts = PlanOptions { allow_refresh: true, max_refresh_rounds: 4, ..Default::default() };
+        let chain = PlanChain::ideal(he.levels_needed().unwrap() - 1, 33);
+        let plan = compile(&m, layout, &chain, opts).unwrap();
+        assert!(plan.has_refresh());
+        let text = plan_text(&plan, None, None).unwrap();
+        assert!(text.contains("refresh"), "{text}");
+        let json = plan_json(&plan, None, Some(&OpCostModel::reference())).unwrap();
+        assert!(json.contains("\"kind\":\"refresh\""), "refresh ops must render");
+        let dot = plan_dot(&plan).unwrap();
+        assert!(dot.contains("refresh"), "refresh nodes must render in dot");
     }
 
     #[test]

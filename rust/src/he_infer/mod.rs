@@ -22,10 +22,13 @@ pub mod sgn;
 pub use backend::{CkksBackend, CountCt, CountingBackend, HeBackend};
 pub use engine::HeStgcn;
 pub use exec::{
-    execute_with_backend, session_geometry, HeExecutor, HeSession, PlanKey, PreparedPlan,
+    execute_with_backend, session_geometry, HeExecutor, HeSession, LocalRefresh, PlanKey,
+    PreparedPlan, RefreshSource, RefreshStats, MASK_BOUND,
 };
 pub use level_plan::{HePlanParams, Method, VariantShape};
-pub use plan::{compile, HeOp, HePlan, OpState, PassStat, PlanChain, PlanOptions};
+pub use plan::{
+    compile, HeOp, HePlan, OpState, PassStat, PlanChain, PlanOptions, REFRESH_CHAIN_CAP,
+};
 pub use profile::{set_profiling, PlanProfile};
 pub use sgn::{decide, Decision, DecisionCircuit, OutputMode, SgnPreset};
 
@@ -117,7 +120,7 @@ impl PrivateInferenceSession {
             x,
             model.v(),
             model.c_in,
-            self.levels + 1,
+            self.plan.input_limbs(),
         )?
         .cts)
     }
@@ -144,7 +147,7 @@ impl PrivateInferenceSession {
             clips,
             model.v(),
             model.c_in,
-            self.levels + 1,
+            self.plan.input_limbs(),
         )?
         .cts)
     }
@@ -166,6 +169,27 @@ impl PrivateInferenceSession {
         threads: usize,
     ) -> Result<crate::ckks::Ciphertext> {
         self.prepared.execute(&self.engine, input, threads)
+    }
+
+    /// Compiled execution of a refresh-bearing plan (DESIGN.md S21) with
+    /// the session itself playing the client: every cut point round-trips
+    /// through a trusted in-process [`LocalRefresh`] decrypt/re-encrypt —
+    /// the single-process sibling of the wire tier's interactive rounds,
+    /// and the reference path the differential suite compares it against.
+    /// Refresh-free plans fall through to the plain executor with zeroed
+    /// stats.
+    pub fn infer_parallel_refresh(
+        &self,
+        input: &[crate::ckks::Ciphertext],
+        threads: usize,
+    ) -> Result<(crate::ckks::Ciphertext, RefreshStats)> {
+        let source = LocalRefresh { engine: &self.engine };
+        // the refresher holds the secret key here, so mask secrecy is
+        // moot — but the executor runs one protocol for every source, so
+        // it still masks; a fixed seed keeps demo runs reproducible
+        let mut rng = crate::util::Rng::seed_from_u64(0x6d61_736b_5f64_656d);
+        self.prepared
+            .execute_with_refresh(&self.engine, input, threads, &source, &mut rng)
     }
 
     /// The original interpreted walk (re-derives masks/scales per request)

@@ -77,6 +77,7 @@ fn remap_sources(op: HeOp, rename: &[u32]) -> HeOp {
         HeOp::Mul { a, b, dst } => HeOp::Mul { a: r(a), b: r(b), dst },
         HeOp::Rescale { src, dst } => HeOp::Rescale { src: r(src), dst },
         HeOp::RotGroup { src, group } => HeOp::RotGroup { src: r(src), group },
+        HeOp::Refresh { src, dst } => HeOp::Refresh { src: r(src), dst },
     }
 }
 
@@ -91,6 +92,11 @@ enum Key {
     Sub(u32, u32),
     Mul(u32, u32),
     Rescale(u32),
+    /// Refreshing the same register twice is pure duplication: both round
+    /// trips would return re-encryptions of the same plaintext, so CSE
+    /// collapsing them *is* the refresh-count minimization (DESIGN.md
+    /// S21) — fewer ciphertexts per round, never an extra round.
+    Refresh(u32),
 }
 
 /// Common-subexpression elimination over the SSA trace. Duplicate ops are
@@ -126,6 +132,7 @@ pub fn cse_pass(plan: &HePlan) -> Result<HePlan> {
                     HeOp::Sub { a, b, .. } => Key::Sub(a, b),
                     HeOp::Mul { a, b, .. } => Key::Mul(a, b),
                     HeOp::Rescale { src, .. } => Key::Rescale(src),
+                    HeOp::Refresh { src, .. } => Key::Refresh(src),
                     HeOp::RotGroup { .. } => unreachable!(),
                 };
                 let dst = op.dst();
@@ -325,6 +332,7 @@ fn compact(p: &mut HePlan) -> Result<()> {
                 HeOp::Mul { a, b, dst } => HeOp::Mul { a: m(a)?, b: m(b)?, dst: m(dst)? },
                 HeOp::Rescale { src, dst } => HeOp::Rescale { src: m(src)?, dst: m(dst)? },
                 HeOp::RotGroup { src, group } => HeOp::RotGroup { src: m(src)?, group },
+                HeOp::Refresh { src, dst } => HeOp::Refresh { src: m(src)?, dst: m(dst)? },
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -350,9 +358,9 @@ mod tests {
         let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
         let layout = AmaLayout::new(8, 4, 256).unwrap();
         let he = HeStgcn::new(&m, layout).unwrap();
-        let chain = PlanChain::ideal(he.levels_needed().unwrap(), 33);
-        compile(&m, layout, &chain, PlanOptions { batch, optimize: false, ..Default::default() })
-            .unwrap()
+        let opts = PlanOptions { batch, optimize: false, ..Default::default() };
+        let chain = PlanChain::ideal_for(he.levels_needed().unwrap(), 33, &opts);
+        compile(&m, layout, &chain, opts).unwrap()
     }
 
     #[test]
@@ -445,6 +453,59 @@ mod tests {
         after.validate().unwrap();
         assert_eq!(after.counts, raw.counts);
         assert_eq!(after.ops.len(), raw.ops.len());
+    }
+
+    fn raw_refresh_plan() -> HePlan {
+        let m = StgcnModel::synthetic(Graph::ring(5), 8, 2, 3, &[4, 4], 3, 9);
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let opts = PlanOptions {
+            optimize: false,
+            allow_refresh: true,
+            max_refresh_rounds: 4,
+            ..Default::default()
+        };
+        let chain = PlanChain::ideal(he.levels_needed().unwrap() - 1, 33);
+        compile(&m, layout, &chain, opts).unwrap()
+    }
+
+    #[test]
+    fn test_optimizer_preserves_refresh_round_prediction() {
+        let raw = raw_refresh_plan();
+        assert!(raw.has_refresh());
+        let opt = optimize(&raw).unwrap();
+        opt.validate().unwrap();
+        // the bench-gated invariant: no silent extra rounds, and the
+        // optimizer never grows the per-round ciphertext payload
+        assert_eq!(opt.refresh_rounds(), opt.predicted_refresh_rounds());
+        assert_eq!(opt.refresh_rounds(), raw.refresh_rounds());
+        assert!(opt.counts.refresh <= raw.counts.refresh);
+        assert_eq!(opt.levels_needed, raw.levels_needed);
+    }
+
+    #[test]
+    fn test_cse_collapses_duplicate_refresh() {
+        let raw = raw_refresh_plan();
+        let (idx, src) = raw
+            .ops
+            .iter()
+            .enumerate()
+            .find_map(|(i, op)| match *op {
+                HeOp::Refresh { src, .. } => Some((i, src)),
+                _ => None,
+            })
+            .expect("refresh plan has refresh ops");
+        // a second refresh of the same register, feeding a dead tail
+        let mut forged = raw.clone();
+        let dup = forged.n_regs as u32;
+        forged.n_regs += 1;
+        forged.ops.insert(idx + 1, HeOp::Refresh { src, dst: dup });
+        forged.refresh().unwrap();
+        forged.validate().unwrap();
+        assert_eq!(forged.counts.refresh, raw.counts.refresh + 1);
+        let after = dce_pass(&cse_pass(&forged).unwrap()).unwrap();
+        after.validate().unwrap();
+        assert_eq!(after.counts.refresh, raw.counts.refresh, "duplicate must collapse");
     }
 
     #[test]

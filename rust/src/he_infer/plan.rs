@@ -45,6 +45,14 @@ pub struct PlanChain {
     pub moduli: Vec<f64>,
 }
 
+/// Chain-length cap applied when a plan may refresh (DESIGN.md S21): a
+/// refresh-capable session never provisions a modulus chain deeper than
+/// this — depth past the cap is bought with client round trips instead of
+/// ring growth. Every chain-geometry decision under `allow_refresh` goes
+/// through [`PlanChain::ideal_for`] / `exec::session_geometry`, which both
+/// apply this one constant.
+pub const REFRESH_CHAIN_CAP: usize = 12;
+
 impl PlanChain {
     /// Idealized chain where every prime is exactly Δ — the chain the
     /// symbolic [`CountingBackend`](super::backend::CountingBackend)
@@ -55,6 +63,21 @@ impl PlanChain {
             delta,
             moduli: vec![delta; levels + 1],
         }
+    }
+
+    /// The idealized chain a plan with options `opts` compiles against:
+    /// full depth normally, capped at [`REFRESH_CHAIN_CAP`] when the plan
+    /// may buy depth with refresh rounds. The single source of truth for
+    /// every test-helper / bench chain (satellite of ISSUE 10: the
+    /// `ideal` call sites in `exec.rs`, `opt.rs` and `inspect.rs` route
+    /// through here so they cannot desync from the serving geometry).
+    pub fn ideal_for(levels_needed: usize, scale_bits: u32, opts: &PlanOptions) -> Self {
+        let levels = if opts.allow_refresh {
+            levels_needed.min(REFRESH_CHAIN_CAP)
+        } else {
+            levels_needed
+        };
+        Self::ideal(levels, scale_bits)
     }
 
     /// The real chain of a built CKKS context.
@@ -108,6 +131,15 @@ pub enum HeOp {
     /// rotations. The only multi-destination op; `PlanBuilder` never
     /// records it, `opt::group_pass` creates it.
     RotGroup { src: u32, group: u32 },
+    /// Client-aided level refresh (DESIGN.md S21): `dst` is `src`'s
+    /// plaintext re-encrypted fresh at the chain top at scale Δ. The only
+    /// op with a client-interactive side effect — the executor pauses the
+    /// wavefront, additively masks `src`, round-trips it to the key owner
+    /// (or an in-circuit bootstrap standing behind the same
+    /// `RefreshSource` interface), and unmasks the returned ciphertext.
+    /// Only legal at level 0: refreshing earlier wastes chain budget, and
+    /// the bench gate pins the round count to the static prediction.
+    Refresh { src: u32, dst: u32 },
 }
 
 impl HeOp {
@@ -123,7 +155,8 @@ impl HeOp {
             | HeOp::Add { dst, .. }
             | HeOp::Sub { dst, .. }
             | HeOp::Mul { dst, .. }
-            | HeOp::Rescale { dst, .. } => dst,
+            | HeOp::Rescale { dst, .. }
+            | HeOp::Refresh { dst, .. } => dst,
             HeOp::RotGroup { .. } => {
                 panic!("RotGroup has one dst per group element; read HePlan::groups")
             }
@@ -137,6 +170,7 @@ impl HeOp {
             | HeOp::MulPlain { src, .. }
             | HeOp::AddPlain { src, .. }
             | HeOp::Rescale { src, .. }
+            | HeOp::Refresh { src, .. }
             | HeOp::RotGroup { src, .. } => (src, None),
             HeOp::Add { a, b, .. } | HeOp::Sub { a, b, .. } | HeOp::Mul { a, b, .. } => {
                 (a, Some(b))
@@ -147,8 +181,8 @@ impl HeOp {
     /// Stable kind names, indexed by [`HeOp::kind_index`] — the same
     /// mnemonics as the plan text format, the attribution keys the
     /// inspector and profiler group by.
-    pub const KIND_NAMES: [&'static str; 8] =
-        ["rot", "pmul", "padd", "add", "sub", "mul", "rescale", "rotg"];
+    pub const KIND_NAMES: [&'static str; 9] =
+        ["rot", "pmul", "padd", "add", "sub", "mul", "rescale", "rotg", "refresh"];
 
     /// Dense index into [`HeOp::KIND_NAMES`].
     pub fn kind_index(&self) -> usize {
@@ -161,6 +195,7 @@ impl HeOp {
             HeOp::Mul { .. } => 5,
             HeOp::Rescale { .. } => 6,
             HeOp::RotGroup { .. } => 7,
+            HeOp::Refresh { .. } => 8,
         }
     }
 
@@ -274,6 +309,16 @@ pub struct PlanOptions {
     /// Logit bound B for decision normalization, stored as raw f64 bits
     /// so `PlanOptions` (and `PlanKey`) stay `Eq + Hash`.
     pub logit_bound_bits: u64,
+    /// Allow [`HeOp::Refresh`] cut points (DESIGN.md S21): when the chain
+    /// is shorter than `levels_needed` the planner inserts client-aided
+    /// refresh rounds at chain exhaustion instead of failing typed, and
+    /// session geometry caps the chain at
+    /// [`REFRESH_CHAIN_CAP`].
+    pub allow_refresh: bool,
+    /// Upper bound on refresh rounds a plan may schedule (only meaningful
+    /// with `allow_refresh`); compile fails typed when the static round
+    /// prediction exceeds it.
+    pub max_refresh_rounds: u32,
 }
 
 impl PlanOptions {
@@ -298,6 +343,8 @@ impl Default for PlanOptions {
             output_mode: OutputMode::Logits,
             sgn_preset: SgnPreset::Fast,
             logit_bound_bits: sgn::DEFAULT_LOGIT_BOUND.to_bits(),
+            allow_refresh: false,
+            max_refresh_rounds: 0,
         }
     }
 }
@@ -327,7 +374,11 @@ pub fn compile(
     // infeasible (mode, preset, classes) shapes are rejected typed inside
     // levels_needed (via sgn::check_mode), before any chain comparison
     let levels_needed = he.levels_needed()?;
-    if chain.top_level() < levels_needed {
+    // refresh is only engaged when the chain actually falls short — a
+    // deep-enough chain compiles the classic zero-round plan even with
+    // the option on, so allow_refresh is free to be a blanket default
+    let refresh = opts.allow_refresh && chain.top_level() < levels_needed;
+    if chain.top_level() < levels_needed && !refresh {
         if matches!(opts.output_mode, OutputMode::Logits) {
             bail!(
                 "chain depth {} below the plan's required depth {levels_needed}",
@@ -344,7 +395,25 @@ pub fn compile(
             chain.top_level()
         );
     }
-    let builder = PlanBuilder::new(chain.clone(), layout.slots);
+    if refresh {
+        ensure!(
+            chain.top_level() >= 1,
+            "refresh-capable plans need a chain of depth >= 1"
+        );
+        // exact static prediction: a fresh (or refreshed) ciphertext at
+        // level L covers L rescales before the cut-point rescale lands on
+        // level 0 and forces a round trip, so each round buys L depth
+        // units (see HePlan::predicted_refresh_rounds)
+        let rounds = levels_needed / chain.top_level();
+        ensure!(
+            rounds <= opts.max_refresh_rounds as usize,
+            "plan needs {rounds} refresh round(s) for depth {levels_needed} on a \
+             depth-{} chain, exceeding the negotiated cap {}",
+            chain.top_level(),
+            opts.max_refresh_rounds
+        );
+    }
+    let builder = PlanBuilder::new_with_refresh(chain.clone(), layout.slots, refresh);
     let inputs: Vec<PlanCt> = (0..model.v()).map(|_| builder.fresh_input()).collect();
     let out = he.forward(&builder, &inputs)?;
     let plan = builder.finish(model, layout, levels_needed, opts, out)?;
@@ -356,6 +425,67 @@ pub fn compile(
 }
 
 impl HePlan {
+    /// Limb count a plan input encrypts at — the chain length, **not**
+    /// `levels_needed + 1`: with refresh the two decouple (a depth-22
+    /// plan on a capped depth-12 chain encrypts at 13 limbs). Every
+    /// encrypt site (trusted sessions, wire clients, the CLI) routes
+    /// through this one helper so input geometry cannot desync from the
+    /// compiled chain (ISSUE 10 satellite).
+    pub fn input_limbs(&self) -> usize {
+        self.chain.moduli.len()
+    }
+
+    /// Whether the plan contains client-interactive refresh cut points.
+    pub fn has_refresh(&self) -> bool {
+        self.counts.refresh > 0
+    }
+
+    /// Refresh round trips one execution performs: the longest chain of
+    /// [`HeOp::Refresh`] ops through the dataflow. The interactive
+    /// executor runs every op that is ready, parks refresh ops until no
+    /// other progress is possible, then flushes all parked cut points as
+    /// **one** masked-ciphertext exchange — so refreshes at the same
+    /// chain depth share a round even when branch skew puts them in
+    /// different waves.
+    pub fn refresh_rounds(&self) -> usize {
+        let mut rdepth = vec![0usize; self.n_regs];
+        let mut rounds = 0;
+        for op in &self.ops {
+            let (s0, s1) = op.sources();
+            let d = rdepth[s0 as usize].max(s1.map_or(0, |b| rdepth[b as usize]));
+            match *op {
+                HeOp::Refresh { dst, .. } => {
+                    rounds = rounds.max(d + 1);
+                    rdepth[dst as usize] = d + 1;
+                }
+                HeOp::RotGroup { group, .. } => {
+                    if let Some(spec) = self.groups.get(group as usize) {
+                        for &(_, dst) in spec {
+                            rdepth[dst as usize] = d;
+                        }
+                    }
+                }
+                _ => rdepth[op.dst() as usize] = d,
+            }
+        }
+        rounds
+    }
+
+    /// The planner's static round prediction for this plan's (depth,
+    /// chain) pair: a fresh (or refreshed) ciphertext at top level L
+    /// covers L rescales before the cut-point rescale lands on level 0,
+    /// so a depth-D walk refreshes `⌊D/L⌋` times (the final round is
+    /// trailing — and harmless — exactly when L divides D).
+    /// `benches/plan_compile.rs` gates [`HePlan::refresh_rounds`] against
+    /// this, so the optimizer can never smuggle in silent extra rounds.
+    pub fn predicted_refresh_rounds(&self) -> usize {
+        if self.chain.top_level() >= self.levels_needed {
+            0
+        } else {
+            self.levels_needed / self.chain.top_level()
+        }
+    }
+
     /// Rotation steps whose Galois keys an executing engine must hold —
     /// exactly the steps the plan uses (was `HeStgcn::required_rotations`,
     /// which over-approximated from the layout). Optimization never
@@ -446,11 +576,23 @@ impl HePlan {
             self.layout.copies()
         );
         let top = self.chain.top_level();
-        ensure!(top >= self.levels_needed, "chain shorter than plan depth");
+        // a refresh-free plan must fit the chain; refresh plans buy the
+        // missing depth with round trips, so only per-segment exhaustion
+        // (rescale below level 0) is checked, by the replay itself
+        let interactive = self.ops.iter().any(|op| matches!(op, HeOp::Refresh { .. }));
+        ensure!(
+            top >= self.levels_needed || interactive,
+            "chain shorter than plan depth"
+        );
 
         // --- linear replay: SSA + levels + scales + recount
         let mut level: Vec<Option<usize>> = vec![None; self.n_regs];
         let mut scale: Vec<f64> = vec![0.0; self.n_regs];
+        // consumed multiplicative depth per register: `top - level` on a
+        // refresh-free plan, but refresh resets the level without
+        // resetting the depth already spent — the declared
+        // `levels_needed` is checked against this, not against levels
+        let mut consumed: Vec<usize> = vec![0; self.n_regs];
         for r in 0..self.n_inputs {
             level[r] = Some(top);
             scale[r] = self.chain.delta;
@@ -485,6 +627,7 @@ impl HePlan {
                     .ok_or_else(|| anyhow!("op {i}: rotation group {group} out of range"))?;
                 ensure!(!groups_seen[gi], "op {i}: rotation group {group} referenced twice");
                 groups_seen[gi] = true;
+                let c0 = consumed[s0 as usize];
                 ensure!(
                     spec.len() >= 2,
                     "op {i}: rotation group {group} holds {} step(s); singletons \
@@ -504,6 +647,7 @@ impl HePlan {
                     ensure!(level[d].is_none(), "op {i}: register {d} written twice");
                     level[d] = Some(l0);
                     scale[d] = sc0;
+                    consumed[d] = c0;
                     bump(&recount.rot, &recount.rot_limbs, l0);
                     bump_sq(&recount.rot_limbs_sq, l0);
                 }
@@ -569,7 +713,25 @@ impl HePlan {
                     bump(&recount.rescale, &recount.rescale_limbs, l0);
                     (l0 - 1, sc0 / self.chain.moduli[l0])
                 }
+                HeOp::Refresh { .. } => {
+                    ensure!(l0 == 0, "op {i}: refresh above level 0 wastes chain budget");
+                    recount.refresh.fetch_add(1, Ordering::Relaxed);
+                    (top, self.chain.delta)
+                }
                 HeOp::RotGroup { .. } => unreachable!("handled above"),
+            };
+            // depth bookkeeping: each rescale spends one unit of the
+            // walk's multiplicative budget; joins take the deeper operand
+            // (min level == max consumed on refresh-free plans)
+            let out_consumed = match *op {
+                HeOp::Rescale { .. } => consumed[s0 as usize] + 1,
+                HeOp::Add { b, .. } | HeOp::Sub { b, .. } | HeOp::Mul { b, .. } => {
+                    consumed[s0 as usize].max(consumed[b as usize])
+                }
+                // a refresh resets the level without spending budget: the
+                // depth units were spent by the rescales that exhausted
+                // the chain before it
+                _ => consumed[s0 as usize],
             };
             let d = op.dst() as usize;
             ensure!(d < self.n_regs, "op {i}: dst out of range");
@@ -577,18 +739,21 @@ impl HePlan {
             ensure!(level[d].is_none(), "op {i}: register {d} written twice");
             level[d] = Some(out_level);
             scale[d] = out_scale;
+            consumed[d] = out_consumed;
             states.push(OpState { level: out_level, scale: out_scale });
         }
         ensure!(
             groups_seen.iter().all(|&s| s),
             "rotation group never referenced by a RotGroup op"
         );
-        let out_level =
-            level[self.output as usize].ok_or_else(|| anyhow!("output register never written"))?;
         ensure!(
-            top - out_level == self.levels_needed,
+            level[self.output as usize].is_some(),
+            "output register never written"
+        );
+        ensure!(
+            consumed[self.output as usize] == self.levels_needed,
             "plan consumed {} levels, declared {}",
-            top - out_level,
+            consumed[self.output as usize],
             self.levels_needed
         );
         Ok((recount.snapshot(), states))
@@ -656,10 +821,20 @@ impl HePlan {
     /// lines, FNV-1a checksummed `end` line) plus a `decision` line
     /// carrying the output mode triple, sign preset and logit bound —
     /// parsed only at v4, defaulted to `Logits` when absent so
-    /// hand-trimmed v4 texts still load.
+    /// hand-trimmed v4 texts still load. Format v5 (DESIGN.md S21) adds
+    /// `op refresh src dst` lines and the trailing `refresh` counter in
+    /// the counts arity; the writer is version-adaptive — plans without
+    /// refresh ops still serialize as byte-identical v4, so only
+    /// interactive plans opt into the new version.
     pub fn to_text(&self) -> String {
+        let version: usize = if self.ops.iter().any(|op| matches!(op, HeOp::Refresh { .. })) {
+            5
+        } else {
+            4
+        };
+        let arity = stored_counts_arity(version);
         let mut s = String::new();
-        s.push_str("heplan v4\n");
+        s.push_str(&format!("heplan v{version}\n"));
         s.push_str(&format!(
             "layout {} {} {}\n",
             self.layout.t, self.layout.c_max, self.layout.slots
@@ -689,13 +864,19 @@ impl HePlan {
             self.logit_bound.to_bits()
         ));
         s.push_str("counts");
-        for v in self.counts.to_array() {
+        for v in self.counts.to_array().iter().take(arity) {
             s.push_str(&format!(" {v}"));
         }
         s.push('\n');
         for p in &self.opt_passes {
             s.push_str(&format!("pass {}", p.name));
-            for v in p.before.to_array().iter().chain(p.after.to_array().iter()) {
+            for v in p
+                .before
+                .to_array()
+                .iter()
+                .take(arity)
+                .chain(p.after.to_array().iter().take(arity))
+            {
                 s.push_str(&format!(" {v}"));
             }
             s.push('\n');
@@ -724,6 +905,7 @@ impl HePlan {
                 HeOp::Mul { a, b, dst } => format!("op mul {a} {b} {dst}"),
                 HeOp::Rescale { src, dst } => format!("op rescale {src} {dst}"),
                 HeOp::RotGroup { src, group } => format!("op rotg {src} {group}"),
+                HeOp::Refresh { src, dst } => format!("op refresh {src} {dst}"),
             };
             s.push_str(&line);
             s.push('\n');
@@ -751,6 +933,7 @@ impl HePlan {
             Some("heplan v2") => 2,
             Some("heplan v3") => 3,
             Some("heplan v4") => 4,
+            Some("heplan v5") => 5,
             _ => bail!("bad plan header"),
         };
         // the meta line's arity froze at v3 (v4 adds the separate
@@ -848,18 +1031,24 @@ impl HePlan {
                 }
                 Some("pass") => {
                     ensure!(version >= 3, "pass lines are a v3 feature");
-                    let arity = OpCounts::field_names().len();
+                    let arity = stored_counts_arity(version);
                     ensure!(toks.len() == 2 + 2 * arity, "bad pass line");
                     let vals = toks[2..]
                         .iter()
                         .map(|t| t.parse::<u64>().map_err(anyhow::Error::from))
                         .collect::<Result<Vec<u64>>>()?;
+                    // pre-v5 texts predate the refresh counter: pad the
+                    // stored halves with zeros to the current full arity
+                    let full = OpCounts::field_names().len();
+                    let widen = |half: &[u64]| -> Result<OpCounts> {
+                        let mut v = half.to_vec();
+                        v.resize(full, 0);
+                        OpCounts::from_array(&v).ok_or_else(|| anyhow!("pass counts arity"))
+                    };
                     opt_passes.push(PassStat {
                         name: toks[1].to_string(),
-                        before: OpCounts::from_array(&vals[..arity])
-                            .ok_or_else(|| anyhow!("pass counts arity"))?,
-                        after: OpCounts::from_array(&vals[arity..])
-                            .ok_or_else(|| anyhow!("pass counts arity"))?,
+                        before: widen(&vals[..arity])?,
+                        after: widen(&vals[arity..])?,
                     });
                 }
                 Some("mask") => {
@@ -902,6 +1091,10 @@ impl HePlan {
                         "rotg" => {
                             ensure!(version >= 3, "rotg ops are a v3 feature");
                             HeOp::RotGroup { src: p(2)?, group: p(3)? }
+                        }
+                        "refresh" => {
+                            ensure!(version >= 5, "refresh ops are a v5 feature");
+                            HeOp::Refresh { src: p(2)?, dst: p(3)? }
                         }
                         other => bail!("unknown op kind {other}"),
                     };
@@ -978,13 +1171,13 @@ impl HePlan {
             model_hash,
             counts: OpCounts::default(),
         };
-        // counts: v3 stores the full arity; v1/v2 predate the S17
-        // rotation-path counters, so replay reconstructs the full set and
-        // the stored prefix is cross-checked against it
+        // counts: v5 stores the full arity; v3/v4 predate the refresh
+        // counter and v1/v2 also predate the S17 rotation-path counters,
+        // so replay reconstructs the full set and the stored prefix is
+        // cross-checked against it
         let actual = plan.replay()?;
         let vals = count_vals.ok_or_else(|| anyhow!("plan missing counts"))?;
-        let arity = OpCounts::field_names().len();
-        let stored_arity = if version >= 3 { arity } else { arity - 3 };
+        let stored_arity = stored_counts_arity(version);
         ensure!(vals.len() == stored_arity, "counts arity mismatch");
         ensure!(
             vals[..] == actual.to_array()[..stored_arity],
@@ -1002,6 +1195,19 @@ impl HePlan {
 /// one ciphertext per graph node, so anything past this is a forged meta
 /// line, rejected before it can size an allocation.
 const MAX_PLAN_INPUTS: usize = 1 << 20;
+
+/// Counts-array arity a given plan-text version stores: v5 the full set,
+/// v3/v4 everything before the `refresh` counter, v1/v2 additionally
+/// without the three S17 rotation-path counters. The writer truncates and
+/// the reader pads/cross-checks with the same tiering.
+fn stored_counts_arity(version: usize) -> usize {
+    let full = OpCounts::field_names().len();
+    match version {
+        v if v >= 5 => full,
+        v if v >= 3 => full - 1,
+        _ => full - 4,
+    }
+}
 
 /// FNV-1a over a byte stream (plan-text checksum; same constants as the
 /// reader's incremental fold — both delegate to `util`).
@@ -1057,12 +1263,15 @@ pub(crate) fn schedule_waves(
 // --------------------------------------------------------------- builder
 
 /// Symbolic ciphertext flowing through the recording walk: a register id
-/// plus the statically tracked (level, scale).
+/// plus the statically tracked (level, scale) and the multiplicative
+/// depth consumed so far (`top - level` until a refresh resets the level
+/// without resetting the spend).
 #[derive(Clone, Copy, Debug)]
 pub struct PlanCt {
     reg: u32,
     level: usize,
     scale: f64,
+    depth: usize,
 }
 
 struct BuilderState {
@@ -1084,15 +1293,25 @@ struct BuilderState {
 pub struct PlanBuilder {
     chain: PlanChain,
     slots: usize,
+    /// Intercept chain exhaustion (DESIGN.md S21): a rescale that lands
+    /// on level 0 records a [`HeOp::Refresh`] cut point right after it,
+    /// resetting the recorded walk to (top, Δ).
+    allow_refresh: bool,
     state: RefCell<BuilderState>,
     counters: OpCounters,
 }
 
 impl PlanBuilder {
     pub fn new(chain: PlanChain, slots: usize) -> Self {
+        Self::new_with_refresh(chain, slots, false)
+    }
+
+    /// [`PlanBuilder::new`] with the refresh interception toggled.
+    pub fn new_with_refresh(chain: PlanChain, slots: usize, allow_refresh: bool) -> Self {
         PlanBuilder {
             chain,
             slots,
+            allow_refresh,
             state: RefCell::new(BuilderState {
                 ops: Vec::new(),
                 masks: Vec::new(),
@@ -1118,6 +1337,7 @@ impl PlanBuilder {
             reg,
             level: self.chain.top_level(),
             scale: self.chain.delta,
+            depth: 0,
         }
     }
 
@@ -1163,9 +1383,9 @@ impl PlanBuilder {
     ) -> Result<HePlan> {
         let st = self.state.into_inner();
         ensure!(
-            self.chain.top_level() - out.level == levels_needed,
+            out.depth == levels_needed,
             "recorded walk consumed {} levels, expected {levels_needed}",
-            self.chain.top_level() - out.level
+            out.depth
         );
         let waves = schedule_waves(&st.ops, &[], st.next_reg as usize, st.n_inputs)?;
         let plan = HePlan {
@@ -1225,7 +1445,7 @@ impl HeBackend for PlanBuilder {
         let dst = Self::alloc(&mut st);
         st.ops.push(HeOp::Add { a: a.reg, b: b.reg, dst });
         self.bump(&self.counters.add, &self.counters.add_limbs, level);
-        PlanCt { reg: dst, level, scale: a.scale }
+        PlanCt { reg: dst, level, scale: a.scale, depth: a.depth.max(b.depth) }
     }
 
     fn sub(&self, a: &PlanCt, b: &PlanCt) -> PlanCt {
@@ -1240,7 +1460,7 @@ impl HeBackend for PlanBuilder {
         let dst = Self::alloc(&mut st);
         st.ops.push(HeOp::Sub { a: a.reg, b: b.reg, dst });
         self.bump(&self.counters.add, &self.counters.add_limbs, level);
-        PlanCt { reg: dst, level, scale: a.scale }
+        PlanCt { reg: dst, level, scale: a.scale, depth: a.depth.max(b.depth) }
     }
 
     fn add_plain(&self, a: &PlanCt, mask: MaskThunk) -> PlanCt {
@@ -1262,6 +1482,7 @@ impl HeBackend for PlanBuilder {
             reg: dst,
             level: a.level,
             scale: a.scale * p_scale,
+            depth: a.depth,
         }
     }
 
@@ -1276,6 +1497,7 @@ impl HeBackend for PlanBuilder {
             reg: dst,
             level,
             scale: a.scale * b.scale,
+            depth: a.depth.max(b.depth),
         }
     }
 
@@ -1302,10 +1524,44 @@ impl HeBackend for PlanBuilder {
         let dst = Self::alloc(&mut st);
         st.ops.push(HeOp::Rescale { src: a.reg, dst });
         self.bump(&self.counters.rescale, &self.counters.rescale_limbs, a.level);
-        PlanCt {
+        let out = PlanCt {
             reg: dst,
             level: a.level - 1,
             scale: a.scale / self.chain.moduli[a.level],
+            depth: a.depth + 1,
+        };
+        if out.level > 0 || !self.allow_refresh {
+            return out;
+        }
+        // chain exhaustion is the refresh cut point (DESIGN.md S21): the
+        // rescale that lands on level 0 leaves no room for the walk's
+        // next multiplication (a level-0 product would overflow the lone
+        // base modulus), so a round trip resets the ciphertext to
+        // (top, Δ) right here. The caller keeps walking from the
+        // refreshed state, so every downstream p_scale it computes sees
+        // the true (level, scale).
+        drop(st);
+        self.refresh(&out)
+    }
+
+    fn supports_refresh(&self) -> bool {
+        self.allow_refresh
+    }
+
+    /// Record a pure level reset: level-0 ciphertext in, (top, Δ) out,
+    /// no depth spent — exactly the signature an in-circuit CKKS
+    /// bootstrap would have, which is what lets one slot in behind
+    /// [`HeOp::Refresh`] unchanged.
+    fn refresh(&self, a: &PlanCt) -> PlanCt {
+        let mut st = self.state.borrow_mut();
+        let dst = Self::alloc(&mut st);
+        st.ops.push(HeOp::Refresh { src: a.reg, dst });
+        self.counters.refresh.fetch_add(1, Ordering::Relaxed);
+        PlanCt {
+            reg: dst,
+            level: self.chain.top_level(),
+            scale: self.chain.delta,
+            depth: a.depth,
         }
     }
 
@@ -1560,6 +1816,75 @@ mod tests {
             let bad = text.replace(line, &forged);
             assert!(HePlan::from_text(&bad).is_err(), "{forged:?} must be rejected");
         }
+    }
+
+    fn refresh_opts(max_rounds: u32) -> PlanOptions {
+        PlanOptions {
+            allow_refresh: true,
+            max_refresh_rounds: max_rounds,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn test_refresh_plan_compiles_on_short_chain() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let levels = he.levels_needed().unwrap();
+        let chain = PlanChain::ideal(levels - 1, 33);
+        // the same chain still fails without the option on
+        assert!(compile(&m, layout, &chain, PlanOptions::default()).is_err());
+        let plan = compile(&m, layout, &chain, refresh_opts(4)).unwrap();
+        plan.validate().unwrap();
+        assert!(plan.has_refresh());
+        assert_eq!(plan.levels_needed, levels);
+        assert_eq!(plan.input_limbs(), chain.moduli.len());
+        // the planner inserted exactly the statically predicted rounds
+        assert_eq!(plan.predicted_refresh_rounds(), 1);
+        assert_eq!(plan.refresh_rounds(), 1);
+        // refresh plans serialize as v5 and roundtrip losslessly
+        let text = plan.to_text();
+        assert!(text.starts_with("heplan v5\n"), "{}", text.lines().next().unwrap());
+        let back = HePlan::from_text(&text).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn test_refresh_round_cap_enforced_typed() {
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let he = HeStgcn::new(&m, layout).unwrap();
+        let levels = he.levels_needed().unwrap();
+        let chain = PlanChain::ideal(levels - 1, 33);
+        let err = compile(&m, layout, &chain, refresh_opts(0)).unwrap_err().to_string();
+        assert!(err.contains("refresh round"), "untyped error: {err}");
+        assert!(err.contains("exceeding the negotiated cap"), "untyped error: {err}");
+    }
+
+    #[test]
+    fn test_refresh_not_engaged_on_deep_chain() {
+        // a deep-enough chain compiles the classic zero-round plan even
+        // with the option on — bit-identical to the refresh-free plan
+        let plain = tiny_plan();
+        let m = tiny();
+        let layout = AmaLayout::new(8, 4, 256).unwrap();
+        let with_opt = compile(&m, layout, &plain.chain, refresh_opts(4)).unwrap();
+        assert!(!with_opt.has_refresh());
+        assert_eq!(plain, with_opt);
+        // and the writer keeps zero-round plans at v4
+        assert!(with_opt.to_text().starts_with("heplan v4\n"));
+    }
+
+    #[test]
+    fn test_ideal_for_caps_chain_only_under_refresh() {
+        let plain = PlanChain::ideal_for(22, 33, &PlanOptions::default());
+        assert_eq!(plain.top_level(), 22);
+        let capped = PlanChain::ideal_for(22, 33, &refresh_opts(4));
+        assert_eq!(capped.top_level(), REFRESH_CHAIN_CAP);
+        // shallow plans are never padded up to the cap
+        let shallow = PlanChain::ideal_for(7, 33, &refresh_opts(4));
+        assert_eq!(shallow.top_level(), 7);
     }
 
     #[test]

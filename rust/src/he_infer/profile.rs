@@ -269,6 +269,11 @@ mod tests {
             fuse_activations: true,
             batch: 1,
             optimize: true,
+            output_mode: crate::he_infer::OutputMode::Logits,
+            sgn_preset: crate::he_infer::SgnPreset::Balanced,
+            logit_bound_bits: 4.0f64.to_bits(),
+            allow_refresh: false,
+            max_refresh_rounds: 0,
         }
     }
 

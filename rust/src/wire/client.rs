@@ -72,6 +72,14 @@ impl VariantSpec {
     pub fn copies(&self) -> usize {
         AmaLayout { t: self.t, c_max: self.c_max, slots: self.slots }.copies()
     }
+
+    /// Limbs a fresh encryption carries — the full chain, `levels + 1`
+    /// (the client-side published value of `HePlan::input_limbs`). Both
+    /// request inputs and refreshed intermediates (DESIGN.md S21)
+    /// re-enter the chain here.
+    pub fn input_limbs(&self) -> usize {
+        self.levels + 1
+    }
 }
 
 /// Client-side key material and crypto operations. Holds the secret key;
@@ -187,7 +195,7 @@ impl ClientKeys {
 
     /// Shared encode-then-encrypt step of the single and batched paths.
     fn encrypt_packed(&self, packed: Vec<Vec<f64>>) -> Result<Vec<Ciphertext>> {
-        let nq = self.spec.levels + 1;
+        let nq = self.spec.input_limbs();
         let mut rng = self.rng.lock().unwrap();
         Ok(packed
             .into_iter()
@@ -284,6 +292,40 @@ impl ClientKeys {
                     .collect()
             })
             .collect())
+    }
+
+    /// The client side of one interactive refresh round (DESIGN.md S21):
+    /// validate the masked ciphertext against this client's chain,
+    /// decrypt and decode it **at its own scale**, then re-encode at the
+    /// chain's base scale and re-encrypt at the chain top
+    /// ([`VariantSpec::input_limbs`]). The server's additive mask rides
+    /// through both halves untouched, so this function only ever sees
+    /// `m + r` — never the bare intermediate `m`. Draws from the same
+    /// session RNG as clip encryption (the stale-key-file replay caveat
+    /// of [`ClientKeys::encrypt_clip`] applies here too).
+    pub fn refresh_ct(&self, ct: &Ciphertext) -> Result<Ciphertext> {
+        ensure!(
+            ct.c0.nq >= 1
+                && ct.c0.nq <= self.ctx.moduli.len()
+                && ct.c1.nq == ct.c0.nq
+                && ct.c0.limbs.iter().chain(ct.c1.limbs.iter()).all(|l| l.len() == self.ctx.n),
+            "refresh ciphertext does not match the client's parameter chain"
+        );
+        ensure!(
+            ct.c0.is_reduced(&self.ctx) && ct.c1.is_reduced(&self.ctx),
+            "refresh ciphertext residues are not reduced modulo the chain"
+        );
+        ensure!(
+            ct.scale.is_finite() && ct.scale > 0.0,
+            "refresh ciphertext scale must be finite and positive"
+        );
+        let pt = encrypt::decrypt(&self.ctx, &self.sk, ct);
+        let slots = self.encoder.decode(&self.ctx, &pt);
+        let fresh = self
+            .encoder
+            .encode(&self.ctx, &slots, self.ctx.scale, self.spec.input_limbs());
+        let mut rng = self.rng.lock().unwrap();
+        Ok(encrypt::encrypt(&self.ctx, &self.pk, &fresh, &mut *rng))
     }
 
     /// `decrypt_logits`' decision sibling (DESIGN.md S20): decrypt a
@@ -534,6 +576,26 @@ mod tests {
             p_argmax.levels,
             p_logits.levels
         );
+    }
+
+    #[test]
+    fn test_refresh_ct_preserves_values_and_lands_at_the_chain_top() {
+        let model = tiny();
+        let (client, _) = keygen(&model, "v", PlanOptions::default(), 5).unwrap();
+        let n = model.v() * model.c_in * model.t;
+        let x: Vec<f64> = (0..n).map(|i| ((i * 13 % 37) as f64 - 18.0) / 40.0).collect();
+        let cts = client.encrypt_clip(&x).unwrap();
+        let fresh = client.refresh_ct(&cts[0]).unwrap();
+        // back at the full chain, base scale
+        assert_eq!(fresh.c0.nq, client.spec.input_limbs());
+        // same slot contents through the shared logits extractor
+        let a = client.decrypt_logits(&cts[0]).unwrap();
+        let b = client.decrypt_logits(&fresh).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        // fresh randomness: the re-encryption is not a byte replay
+        assert_ne!(fresh, cts[0]);
     }
 
     #[test]

@@ -68,6 +68,18 @@ pub const KIND_NET_STATUS: u8 = 22;
 /// as `KIND_NET_LOGITS` plus the output-mode triple the plan evaluated,
 /// so a client can't silently misread an argmax indicator as raw scores.
 pub const KIND_NET_DECISION: u8 = 23;
+/// Mid-inference refresh request, server → client (DESIGN.md S21): the
+/// session token, the 0-based round index, and the masked level-0
+/// ciphertexts the client must decrypt and re-encrypt at top level.
+/// Arrives on the *same* connection as the in-flight `KIND_NET_INFER`,
+/// between that request and its response — the first stateful exchange in
+/// the protocol.
+pub const KIND_NET_REFRESH_REQ: u8 = 24;
+/// The client's answer to `KIND_NET_REFRESH_REQ`: the echoed session
+/// token + round index and the fresh top-level ciphertexts, in request
+/// order. A token/round mismatch or malformed geometry is rejected typed
+/// (`NET_ERROR`), never panics the handler.
+pub const KIND_NET_REFRESH_RESP: u8 = 25;
 
 /// FNV-1a 64-bit over a byte slice (integrity only — tamper *detection*,
 /// not authentication; see the threat model in DESIGN.md S15).

@@ -546,6 +546,7 @@ mod tests {
             let forged = CtBundle {
                 params_hash: bundle.params_hash,
                 batch: bad_batch,
+                mode: OutputMode::Logits,
                 cts: cts.clone(),
             };
             assert!(

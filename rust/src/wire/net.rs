@@ -36,7 +36,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -44,11 +44,13 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::ckks::Ciphertext;
 use crate::coordinator::{Coordinator, Metrics};
-use crate::he_infer::OutputMode;
+use crate::he_infer::{OutputMode, RefreshSource};
+use crate::wire::client::ClientKeys;
 use crate::wire::codec::{
     frame_with, unframe, ByteReader, CHECKSUM_LEN, HEADER_LEN, KIND_CIPHERTEXT,
     KIND_NET_DECISION, KIND_NET_ERROR, KIND_NET_HELLO, KIND_NET_INFER, KIND_NET_LOGITS,
-    KIND_NET_OK, KIND_NET_REGISTER, KIND_NET_STATUS, MAGIC, MIN_VERSION, VERSION,
+    KIND_NET_OK, KIND_NET_REFRESH_REQ, KIND_NET_REFRESH_RESP, KIND_NET_REGISTER,
+    KIND_NET_STATUS, MAGIC, MIN_VERSION, VERSION,
 };
 use crate::wire::format::{
     read_output_mode, write_output_mode, CtBundle, EvalKeySet, WireSerialize, MAX_BATCH,
@@ -116,6 +118,16 @@ pub struct NetConfig {
     /// Per-tenant cap on requests simultaneously inside the coordinator
     /// (checked at the `NET_INFER` header, before ciphertext ingest).
     pub max_inflight_per_tenant: usize,
+    /// Server-side ceiling on interactive refresh rounds per request
+    /// (DESIGN.md S21). The effective session budget is the client's
+    /// announced `max_rounds` clamped to this; `0` leaves the client's
+    /// announcement unclamped.
+    pub max_refresh_rounds: u32,
+    /// Per-tenant cap on refresh rounds simultaneously in flight across
+    /// all of the tenant's connections (checked at each round, server
+    /// side; an over-quota round fails that inference typed without
+    /// desyncing its socket).
+    pub max_rounds_inflight_per_tenant: usize,
 }
 
 impl Default for NetConfig {
@@ -128,6 +140,8 @@ impl Default for NetConfig {
             max_request_cts: 4096, // mirrors CtBundle's own count bound
             max_conns_per_tenant: 64,
             max_inflight_per_tenant: 32,
+            max_refresh_rounds: 16,
+            max_rounds_inflight_per_tenant: 8,
         }
     }
 }
@@ -161,6 +175,27 @@ pub trait NetBackend: Send + Sync + 'static {
         batch: usize,
         mode: OutputMode,
     ) -> Result<InferOutcome>;
+    /// [`NetBackend::infer`] with an interactive refresh bridge
+    /// (DESIGN.md S21): requests that announced a refresh budget hand the
+    /// per-connection [`RefreshSource`] in here so refresh-bearing plans
+    /// can round-trip level-0 intermediates to the client mid-execution.
+    /// Default: ignore the bridge and serve non-interactively — mocks
+    /// inherit it and compile unchanged (a refresh-bearing plan then
+    /// fails typed inside the executor, never silently).
+    #[allow(clippy::too_many_arguments)]
+    fn infer_rounds(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+    ) -> Result<InferOutcome> {
+        let _ = rounds;
+        self.infer(tenant, variant, cts, params_hash, batch, mode)
+    }
     /// The output mode this backend's plans are compiled to answer with
     /// (DESIGN.md S20). Consulted at the `NET_INFER` header so a request
     /// for any other mode is refused *before* ciphertext ingest. Default:
@@ -209,13 +244,27 @@ impl NetBackend for CoordinatorBackend {
         batch: usize,
         mode: OutputMode,
     ) -> Result<InferOutcome> {
-        let resp = self.coordinator.infer_blocking_encrypted(
+        self.infer_rounds(tenant, variant, cts, params_hash, batch, mode, None)
+    }
+
+    fn infer_rounds(
+        &self,
+        tenant: &str,
+        variant: Option<String>,
+        cts: Vec<Ciphertext>,
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+    ) -> Result<InferOutcome> {
+        let resp = self.coordinator.infer_blocking_encrypted_rounds(
             tenant.to_string(),
             variant,
             cts,
             params_hash,
             batch,
             mode,
+            rounds,
             None,
         )?;
         if let Some(e) = resp.error {
@@ -283,13 +332,32 @@ pub fn parse_status_frame(frame: &[u8]) -> Result<String> {
 /// The `NET_INFER` header announcing a streamed upload of `ct_count`
 /// ciphertext frames. `mode` is the output mode the client requests
 /// (DESIGN.md S20) — checked against the server's compiled plans at
-/// admission, before any ciphertext is ingested.
+/// admission, before any ciphertext is ingested. Announces no refresh
+/// budget (`max_rounds = 0`): the server must answer without interactive
+/// rounds or fail typed.
 pub fn infer_header_frame(
     variant: Option<&str>,
     params_hash: Option<u64>,
     batch: usize,
     mode: OutputMode,
     ct_count: usize,
+) -> Vec<u8> {
+    infer_header_frame_rounds(variant, params_hash, batch, mode, ct_count, 0)
+}
+
+/// [`infer_header_frame`] with an interactive refresh budget
+/// (DESIGN.md S21): `max_rounds > 0` tells the server this client will
+/// answer up to that many `REFRESH_REQ` round trips mid-inference. The
+/// budget travels as a trailing field the parser treats as optional, so
+/// pre-S21 headers keep parsing (as `max_rounds = 0`) without a codec
+/// version bump.
+pub fn infer_header_frame_rounds(
+    variant: Option<&str>,
+    params_hash: Option<u64>,
+    batch: usize,
+    mode: OutputMode,
+    ct_count: usize,
+    max_rounds: u32,
 ) -> Vec<u8> {
     frame_with(KIND_NET_INFER, |w| {
         w.put_str(variant.unwrap_or(""));
@@ -298,6 +366,7 @@ pub fn infer_header_frame(
         w.put_u64(batch as u64);
         write_output_mode(w, mode);
         w.put_u32(ct_count as u32);
+        w.put_u32(max_rounds);
     })
 }
 
@@ -357,6 +426,9 @@ struct InferHeader {
     batch: usize,
     mode: OutputMode,
     ct_count: usize,
+    /// Interactive refresh rounds the client is willing to answer
+    /// (DESIGN.md S21); `0` = the request must be served non-interactively.
+    max_rounds: u32,
 }
 
 fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
@@ -369,6 +441,9 @@ fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
     // a forged mode tag errors typed here, before the count is even read
     let mode = read_output_mode(&mut r)?;
     let ct_count = r.u32()? as usize;
+    // tolerant trailing field: pre-S21 headers end at the count and parse
+    // as "no refresh budget" — anything after the budget is still a fault
+    let max_rounds = if r.remaining() > 0 { r.u32()? } else { 0 };
     r.finish()?;
     ensure!(
         (1..=MAX_BATCH).contains(&batch),
@@ -384,7 +459,132 @@ fn parse_infer_header(frame: &[u8], max_cts: usize) -> Result<InferHeader> {
         batch,
         mode,
         ct_count,
+        max_rounds,
     })
+}
+
+// ---------------------------------------------------------------------------
+// interactive refresh rounds (DESIGN.md S21)
+// ---------------------------------------------------------------------------
+
+/// Shared payload shape of the two refresh frames: `{token, round, n,
+/// ciphertext × n}`. The token correlates every round of one inference;
+/// the round index orders them — a response echoing either one wrong is
+/// a stale/replayed round and fails the inference typed.
+fn refresh_frame(kind: u8, token: u64, round: u32, cts: &[Ciphertext]) -> Vec<u8> {
+    frame_with(kind, |w| {
+        w.put_u64(token);
+        w.put_u32(round);
+        w.put_u32(cts.len() as u32);
+        for ct in cts {
+            ct.write_payload(w);
+        }
+    })
+}
+
+fn parse_refresh(kind: u8, frame: &[u8], max_cts: usize) -> Result<(u64, u32, Vec<Ciphertext>)> {
+    let payload = unframe(kind, frame)?;
+    let mut r = ByteReader::new(payload);
+    let token = r.u64()?;
+    let round = r.u32()?;
+    let n = r.u32()? as usize;
+    ensure!(
+        n >= 1 && n <= max_cts,
+        "refresh frame: ciphertext count {n} outside 1..={max_cts}"
+    );
+    let mut cts = Vec::with_capacity(n);
+    for i in 0..n {
+        // forged limb/shape/scale geometry errors typed inside the
+        // ciphertext validator — it can never panic the handler
+        cts.push(
+            Ciphertext::read_payload(&mut r)
+                .with_context(|| format!("refresh ciphertext {i}/{n}"))?,
+        );
+    }
+    r.finish()?;
+    Ok((token, round, cts))
+}
+
+/// Server → client: one mid-inference refresh round carrying the masked
+/// level-0 intermediates (DESIGN.md S21 — the executor masked them
+/// before they reached the wire).
+pub fn refresh_req_frame(token: u64, round: u32, cts: &[Ciphertext]) -> Vec<u8> {
+    refresh_frame(KIND_NET_REFRESH_REQ, token, round, cts)
+}
+
+/// Parse a `REFRESH_REQ` frame into `(token, round, masked cts)`.
+pub fn parse_refresh_req(frame: &[u8], max_cts: usize) -> Result<(u64, u32, Vec<Ciphertext>)> {
+    parse_refresh(KIND_NET_REFRESH_REQ, frame, max_cts)
+}
+
+/// Client → server: the answer to a `REFRESH_REQ` — the same
+/// ciphertexts decrypted and re-encrypted at the chain top, echoing the
+/// round's token and index.
+pub fn refresh_resp_frame(token: u64, round: u32, cts: &[Ciphertext]) -> Vec<u8> {
+    refresh_frame(KIND_NET_REFRESH_RESP, token, round, cts)
+}
+
+/// Parse a `REFRESH_RESP` frame into `(token, round, fresh cts)`. Public
+/// for the fault corpus: a forged response must error typed, never panic
+/// the handler thread.
+pub fn parse_refresh_resp(frame: &[u8], max_cts: usize) -> Result<(u64, u32, Vec<Ciphertext>)> {
+    parse_refresh(KIND_NET_REFRESH_RESP, frame, max_cts)
+}
+
+/// Session-token scrambler (splitmix64 finalizer). Tokens correlate the
+/// `REFRESH_REQ`/`REFRESH_RESP` pairs of one inference; they are
+/// sequence-unique per server, not secret — both directions ride the
+/// same socket either way.
+fn session_token(n: u64) -> u64 {
+    let mut z = n.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One refresh round-trip request from the executor's worker thread to
+/// the connection handler: the masked level-0 ciphertexts plus the reply
+/// channel the handler answers on.
+struct RoundRequest {
+    round: usize,
+    masked: Vec<Ciphertext>,
+    reply: mpsc::Sender<Result<Vec<Ciphertext>>>,
+}
+
+/// The wire tier's [`RefreshSource`] (DESIGN.md S21): each refresh call
+/// crosses an mpsc pair to the connection handler thread, which owns the
+/// socket and round-trips the batch to the client as one
+/// `REFRESH_REQ`/`REFRESH_RESP` exchange. Transport only — the additive
+/// mask is applied and removed inside the executor, so this bridge (and
+/// the wire below it) only ever carries masked ciphertexts. Dropping the
+/// handler's receiver fails every later round fast instead of hanging
+/// the executor. The same interface an in-circuit CKKS bootstrap would
+/// implement locally — swapping it in changes nothing above this line.
+struct NetRefreshBridge {
+    /// Mutex for `Sync` (rounds are sequential by construction — the
+    /// interactive executor flushes one round at a time).
+    tx: Mutex<mpsc::Sender<RoundRequest>>,
+    /// Effective round budget: the client's announced `max_rounds`
+    /// clamped by [`NetConfig::max_refresh_rounds`].
+    max_rounds: u32,
+}
+
+impl RefreshSource for NetRefreshBridge {
+    fn refresh(&self, masked: &[Ciphertext], round: usize) -> Result<Vec<Ciphertext>> {
+        ensure!(
+            (round as u64) < u64::from(self.max_rounds),
+            "refresh round {round} exceeds the session budget of {} round(s) \
+             (raise --allow-refresh)",
+            self.max_rounds
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        lock(&self.tx)
+            .send(RoundRequest { round, masked: masked.to_vec(), reply: reply_tx })
+            .map_err(|_| anyhow!("refresh round {round}: the connection handler is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("refresh round {round}: connection closed mid-round"))?
+    }
 }
 
 fn logits_frame(out: &InferOutcome) -> Vec<u8> {
@@ -502,7 +702,12 @@ fn read_frame(
         return Err(ReadFail::Hostile("frame reserved byte damaged".into()));
     }
     let kind = header[6];
-    let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    // fixed-width destructure, no slice conversion: the socket read path
+    // must hold zero unwraps reachable from hostile bytes (S21 audit)
+    let len = u64::from_le_bytes([
+        header[8], header[9], header[10], header[11], header[12], header[13], header[14],
+        header[15],
+    ]);
     let max = max_for(kind);
     if len > max {
         return Err(ReadFail::TooLarge { kind, len, max });
@@ -623,10 +828,16 @@ struct Shared {
     conns: Mutex<HashMap<String, usize>>,
     /// Per-tenant requests inside the backend (request-stage admission).
     inflight: Mutex<HashMap<String, usize>>,
+    /// Per-tenant refresh rounds currently on the wire (round-stage
+    /// admission; DESIGN.md S21).
+    rounds_inflight: Mutex<HashMap<String, usize>>,
     /// Stream clones for forced shutdown of blocked handler threads.
     live: Mutex<HashMap<u64, TcpStream>>,
     handlers: Mutex<Vec<JoinHandle<()>>>,
     next_conn_id: AtomicU64,
+    /// Refresh session-token sequence (scrambled through
+    /// [`session_token`] per interactive request).
+    next_token: AtomicU64,
 }
 
 /// Thread-per-connection TCP server. [`NetServer::bind`] returning is the
@@ -654,9 +865,11 @@ impl NetServer {
             stop: AtomicBool::new(false),
             conns: Mutex::new(HashMap::new()),
             inflight: Mutex::new(HashMap::new()),
+            rounds_inflight: Mutex::new(HashMap::new()),
             live: Mutex::new(HashMap::new()),
             handlers: Mutex::new(Vec::new()),
             next_conn_id: AtomicU64::new(0),
+            next_token: AtomicU64::new(0),
         });
         let accept = {
             let shared = shared.clone();
@@ -1025,15 +1238,170 @@ fn serve_infer(
         }
     }
 
+    // non-interactive requests take the straight-line path: one backend
+    // call, one reply frame
+    if hdr.max_rounds == 0 {
+        let outcome =
+            shared.backend.infer(tenant, hdr.variant, cts, hdr.params_hash, hdr.batch, hdr.mode);
+        drop(slot); // release the in-flight quota before writing the reply
+        return finish_infer(io, metrics, hdr.mode, outcome);
+    }
+
+    // Interactive path (DESIGN.md S21): the backend call moves to a worker
+    // thread holding a NetRefreshBridge, while this handler thread stays
+    // on the socket servicing each refresh round — REFRESH_REQ out,
+    // REFRESH_RESP in — until the bridge drops, which is the completion
+    // signal either way (success or a failed round unwinding the
+    // executor). The protocol is stateful across frames from here on:
+    // every round is correlated by the session token + round index.
+    let max_rounds = if shared.cfg.max_refresh_rounds == 0 {
+        hdr.max_rounds
+    } else {
+        hdr.max_rounds.min(shared.cfg.max_refresh_rounds)
+    };
+    let token = session_token(shared.next_token.fetch_add(1, Ordering::Relaxed));
+    let (tx, rx) = mpsc::channel();
+    let src: Arc<dyn RefreshSource> =
+        Arc::new(NetRefreshBridge { tx: Mutex::new(tx), max_rounds });
+    let worker = {
+        let backend = shared.backend.clone();
+        let tenant = tenant.to_string();
+        let variant = hdr.variant.clone();
+        let (params_hash, batch, mode) = (hdr.params_hash, hdr.batch, hdr.mode);
+        std::thread::spawn(move || {
+            backend.infer_rounds(&tenant, variant, cts, params_hash, batch, mode, Some(src))
+        })
+    };
+    let mut in_sync = true;
+    let mut served = 0u64;
+    let mut waited_us = 0u64;
+    while let Ok(req) = rx.recv() {
+        // per-tenant round quota: an over-quota round fails this
+        // inference typed (the executor unwinds) without desyncing the
+        // socket — no REFRESH_REQ was sent for it
+        let round_slot = TenantSlot::acquire(
+            &shared.rounds_inflight,
+            tenant,
+            shared.cfg.max_rounds_inflight_per_tenant,
+        );
+        if round_slot.is_none() {
+            metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = req.reply.send(Err(anyhow!(
+                "tenant {tenant} is at its in-flight refresh-round quota ({})",
+                shared.cfg.max_rounds_inflight_per_tenant
+            )));
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        if send_bytes(io, &refresh_req_frame(token, req.round as u32, &req.masked)).is_err() {
+            let _ = req
+                .reply
+                .send(Err(anyhow!("refresh round {}: writing to the client failed", req.round)));
+            in_sync = false;
+            break;
+        }
+        let resp = match read_frame(io, max_for) {
+            Ok((KIND_NET_REFRESH_RESP, frame)) => frame,
+            Ok((kind, _)) => {
+                let _ = send_error(
+                    io,
+                    ERR_PROTOCOL,
+                    &format!("expected a refresh response frame, got kind {kind}"),
+                );
+                let _ = req.reply.send(Err(anyhow!(
+                    "refresh round {}: client answered frame kind {kind}",
+                    req.round
+                )));
+                in_sync = false;
+                break;
+            }
+            Err(fail) => {
+                fault_reply(io, &fail);
+                let _ = req.reply.send(Err(anyhow!(
+                    "refresh round {}: client connection failed mid-round",
+                    req.round
+                )));
+                in_sync = false;
+                break;
+            }
+        };
+        match parse_refresh_resp(&resp, req.masked.len()) {
+            Ok((tok, rnd, fresh))
+                if tok == token
+                    && rnd as usize == req.round
+                    && fresh.len() == req.masked.len() =>
+            {
+                served += 1;
+                waited_us += t0.elapsed().as_micros() as u64;
+                let _ = req.reply.send(Ok(fresh));
+            }
+            Ok((tok, rnd, _)) => {
+                // stale or replayed round correlation: typed refusal, and
+                // frame sync is unknowable — close after the worker settles
+                metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = send_error(
+                    io,
+                    ERR_PROTOCOL,
+                    &format!(
+                        "refresh response correlation mismatch: got token {tok:#018x} \
+                         round {rnd}, want token {token:#018x} round {}",
+                        req.round
+                    ),
+                );
+                let _ = req.reply.send(Err(anyhow!(
+                    "refresh round {}: stale or replayed response (token/round mismatch)",
+                    req.round
+                )));
+                in_sync = false;
+                break;
+            }
+            Err(e) => {
+                metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+                let _ =
+                    send_error(io, ERR_BAD_FRAME, &format!("refresh response rejected: {e:#}"));
+                let _ = req.reply.send(Err(anyhow!(
+                    "refresh round {}: malformed response",
+                    req.round
+                )));
+                in_sync = false;
+                break;
+            }
+        }
+    }
+    // dropping the receiver here fails any later bridge round fast —
+    // the executor unwinds instead of hanging on a dead socket
+    drop(rx);
+    metrics.refresh_rounds.fetch_add(served, Ordering::Relaxed);
+    metrics.refresh_wait_us.fetch_add(waited_us, Ordering::Relaxed);
     let outcome =
-        shared.backend.infer(tenant, hdr.variant, cts, hdr.params_hash, hdr.batch, hdr.mode);
+        worker.join().unwrap_or_else(|_| Err(anyhow!("inference worker thread panicked")));
     drop(slot); // release the in-flight quota before writing the reply
+    if !in_sync {
+        // the typed error (where one was possible) already went out;
+        // frame sync is gone, so the connection must close — the server
+        // itself keeps serving every other connection
+        if outcome.is_err() {
+            metrics.net_requests_rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        return false;
+    }
+    finish_infer(io, metrics, hdr.mode, outcome)
+}
+
+/// Terminal step of both `serve_infer` paths: one logits/decision reply
+/// on success, one typed `rejected` on failure.
+fn finish_infer(
+    io: &mut MeteredStream,
+    metrics: &Arc<Metrics>,
+    mode: OutputMode,
+    outcome: Result<InferOutcome>,
+) -> bool {
     match outcome {
         Ok(out) => {
-            let reply = if matches!(hdr.mode, OutputMode::Logits) {
+            let reply = if matches!(mode, OutputMode::Logits) {
                 logits_frame(&out)
             } else {
-                decision_frame(&out, hdr.mode)
+                decision_frame(&out, mode)
             };
             send_bytes(io, &reply).is_ok()
         }
@@ -1145,6 +1513,89 @@ impl Client {
         }
     }
 
+    /// [`Client::infer`] with an interactive refresh budget
+    /// (DESIGN.md S21): announce up to `max_rounds` refresh rounds and
+    /// service each one the server asks for — decrypt the masked
+    /// level-0 intermediates with `keys` and re-encrypt them at the top
+    /// of the chain — before the final logits/decision frame arrives.
+    /// Returns the outcome plus the number of rounds actually served.
+    /// The server's rounds must arrive in order under one session token;
+    /// anything else is a typed error, and a round beyond the announced
+    /// budget is refused client-side too.
+    pub fn infer_with_refresh(
+        &mut self,
+        variant: Option<&str>,
+        bundle: &CtBundle,
+        keys: &ClientKeys,
+        max_rounds: u32,
+    ) -> Result<(InferOutcome, usize)> {
+        self.send(&infer_header_frame_rounds(
+            variant,
+            Some(bundle.params_hash),
+            bundle.batch,
+            bundle.mode,
+            bundle.cts.len(),
+            max_rounds,
+        ))?;
+        for ct in &bundle.cts {
+            self.send(&ct.to_bytes())?;
+        }
+        let mut rounds = 0usize;
+        let mut token: Option<u64> = None;
+        loop {
+            let (kind, frame) = read_frame_budget(&mut self.io, self.max_frame)?;
+            self.bytes_in += frame.len() as u64;
+            match kind {
+                KIND_NET_ERROR => {
+                    let (code, message) = parse_error_frame(&frame)?;
+                    bail!("server error [{}]: {message}", err_name(code));
+                }
+                KIND_NET_REFRESH_REQ => {
+                    ensure!(
+                        rounds < max_rounds as usize,
+                        "server asked for refresh round {rounds} beyond the announced \
+                         budget of {max_rounds}"
+                    );
+                    let (tok, rnd, masked) = parse_refresh_req(&frame, MAX_BATCH)?;
+                    match token {
+                        None => token = Some(tok),
+                        Some(t) => ensure!(
+                            t == tok,
+                            "server switched session token mid-inference \
+                             ({t:#018x} -> {tok:#018x})"
+                        ),
+                    }
+                    ensure!(
+                        rnd as usize == rounds,
+                        "server sent refresh round {rnd}, expected {rounds}"
+                    );
+                    let fresh: Vec<Ciphertext> =
+                        masked.iter().map(|ct| keys.refresh_ct(ct)).collect::<Result<_>>()?;
+                    self.send(&refresh_resp_frame(tok, rnd, &fresh))?;
+                    rounds += 1;
+                }
+                KIND_NET_LOGITS => {
+                    ensure!(
+                        matches!(bundle.mode, OutputMode::Logits),
+                        "server answered raw logits, request asked for {}",
+                        bundle.mode
+                    );
+                    return Ok((parse_logits_frame(&frame)?, rounds));
+                }
+                KIND_NET_DECISION => {
+                    let (mode, out) = parse_decision_frame(&frame)?;
+                    ensure!(
+                        mode == bundle.mode,
+                        "server answered output mode {mode}, request asked for {}",
+                        bundle.mode
+                    );
+                    return Ok((out, rounds));
+                }
+                other => bail!("unexpected frame kind {other} during interactive inference"),
+            }
+        }
+    }
+
     /// Fetch the server's live status snapshot — metrics registers,
     /// per-plan profile EWMAs, and (on the production backend) the plan
     /// cache — as one JSON document.
@@ -1223,6 +1674,100 @@ mod tests {
         });
         let err = parse_infer_header(&forged, 16).unwrap_err().to_string();
         assert!(err.contains("unknown output-mode tag 42"), "{err}");
+    }
+
+    #[test]
+    fn test_infer_header_refresh_budget_is_tolerant_trailing_field() {
+        // the plain header announces no budget
+        let f = infer_header_frame(Some("v"), None, 1, OutputMode::Logits, 2);
+        assert_eq!(parse_infer_header(&f, 16).unwrap().max_rounds, 0);
+        // the rounds variant carries it
+        let f = infer_header_frame_rounds(Some("v"), None, 1, OutputMode::Logits, 2, 5);
+        let h = parse_infer_header(&f, 16).unwrap();
+        assert_eq!(h.max_rounds, 5);
+        assert_eq!(h.ct_count, 2);
+        // a pre-S21 header that ends at the count still parses (budget 0)
+        let legacy = frame_with(KIND_NET_INFER, |w| {
+            w.put_str("v");
+            w.put_u8(0);
+            w.put_u64(0);
+            w.put_u64(1);
+            w.put_u8(0); // logits tag
+            w.put_u32(0);
+            w.put_u64(0);
+            w.put_u32(1);
+        });
+        assert_eq!(parse_infer_header(&legacy, 16).unwrap().max_rounds, 0);
+        // bytes after the budget are still a typed fault
+        let trailing = frame_with(KIND_NET_INFER, |w| {
+            w.put_str("v");
+            w.put_u8(0);
+            w.put_u64(0);
+            w.put_u64(1);
+            w.put_u8(0);
+            w.put_u32(0);
+            w.put_u64(0);
+            w.put_u32(1);
+            w.put_u32(3);
+            w.put_u8(0xAB);
+        });
+        assert!(parse_infer_header(&trailing, 16).is_err());
+    }
+
+    #[test]
+    fn test_refresh_frames_reject_forged_payloads_typed() {
+        // count outside 1..=max is refused before any ciphertext parse
+        let empty = frame_with(KIND_NET_REFRESH_RESP, |w| {
+            w.put_u64(7);
+            w.put_u32(0);
+            w.put_u32(0);
+        });
+        let err = parse_refresh_resp(&empty, 8).unwrap_err().to_string();
+        assert!(err.contains("outside 1..=8"), "{err}");
+        let over = frame_with(KIND_NET_REFRESH_RESP, |w| {
+            w.put_u64(7);
+            w.put_u32(0);
+            w.put_u32(9);
+        });
+        assert!(parse_refresh_resp(&over, 8).is_err());
+        // garbage where a ciphertext should be is a decode error, never a
+        // panic — the forged-REFRESH_RESP contract of the handler thread
+        let garbage = frame_with(KIND_NET_REFRESH_RESP, |w| {
+            w.put_u64(7);
+            w.put_u32(0);
+            w.put_u32(1);
+            w.put_u8(0xAB);
+        });
+        assert!(parse_refresh_resp(&garbage, 8).is_err());
+        // a req frame is not a resp frame: kind is part of the contract
+        let req_shaped = frame_with(KIND_NET_REFRESH_REQ, |w| {
+            w.put_u64(7);
+            w.put_u32(0);
+            w.put_u32(1);
+            w.put_u8(0xAB);
+        });
+        assert!(parse_refresh_resp(&req_shaped, 8).is_err());
+    }
+
+    #[test]
+    fn test_session_tokens_differ_per_request() {
+        let a = session_token(0);
+        let b = session_token(1);
+        assert_ne!(a, b);
+        assert_ne!(session_token(2), b);
+    }
+
+    #[test]
+    fn test_net_refresh_bridge_budget_and_disconnect_are_typed() {
+        let (tx, rx) = mpsc::channel();
+        let bridge = NetRefreshBridge { tx: Mutex::new(tx), max_rounds: 1 };
+        // a round past the budget is refused before touching the channel
+        let err = bridge.refresh(&[], 1).unwrap_err().to_string();
+        assert!(err.contains("exceeds the session budget of 1 round(s)"), "{err}");
+        // a dropped handler receiver fails the round fast, typed
+        drop(rx);
+        let err = bridge.refresh(&[], 0).unwrap_err().to_string();
+        assert!(err.contains("connection handler is gone"), "{err}");
     }
 
     #[test]

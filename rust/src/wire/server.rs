@@ -11,7 +11,8 @@ use crate::ckks::{Ciphertext, EvalEngine};
 use crate::coordinator::{InferenceExecutor, KeyRegistry, Metrics};
 use crate::he_infer::exec::{cached_slot_capacity, plan_for, record_opt_metrics, PlanKey};
 use crate::he_infer::{
-    sgn, session_geometry, HePlan, OutputMode, PlanChain, PlanOptions, PreparedPlan, SgnPreset,
+    sgn, session_geometry, HePlan, OutputMode, PlanChain, PlanOptions, PreparedPlan,
+    RefreshSource, SgnPreset,
 };
 use crate::stgcn::StgcnModel;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -67,6 +68,11 @@ pub struct WireExecutor {
     /// the occupancy denominator the coordinator's slot metrics use.
     capacities: Mutex<HashMap<String, usize>>,
     metrics: Option<Arc<Metrics>>,
+    /// Randomness for the additive refresh masks (DESIGN.md S21). Seeded
+    /// from the wall clock at construction so a restarted server never
+    /// replays a mask sequence; every interactive request advances the
+    /// shared state under the lock.
+    mask_rng: Mutex<crate::util::Rng>,
 }
 
 impl WireExecutor {
@@ -75,6 +81,10 @@ impl WireExecutor {
         threads: usize,
         registry: Arc<KeyRegistry<TenantKeys>>,
     ) -> Self {
+        let clock_seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x6d61_736b_5f72_6e67);
         WireExecutor {
             threads: threads.max(1),
             opts: PlanOptions::default(),
@@ -83,6 +93,7 @@ impl WireExecutor {
             plans: Mutex::new(HashMap::new()),
             capacities: Mutex::new(HashMap::new()),
             metrics: None,
+            mask_rng: Mutex::new(crate::util::Rng::seed_from_u64(clock_seed)),
         }
     }
 
@@ -115,6 +126,16 @@ impl WireExecutor {
     /// The output mode this executor's plans are compiled to answer with.
     pub fn output_mode(&self) -> OutputMode {
         self.opts.output_mode
+    }
+
+    /// Allow the planner to cut refresh points where the modulus chain
+    /// would be exhausted (DESIGN.md S21). Like
+    /// [`WireExecutor::set_output_mode`], call before serving traffic —
+    /// refresh-compiled plans cap the chain at `REFRESH_CHAIN_CAP`
+    /// levels, so tenants must keygen against the same flag.
+    pub fn set_refresh(&mut self, allow: bool, max_rounds: u32) {
+        self.opts.allow_refresh = allow;
+        self.opts.max_refresh_rounds = max_rounds;
     }
 
     /// Register (or replace) a tenant's evaluation keys. Fails — before
@@ -269,6 +290,40 @@ impl InferenceExecutor for WireExecutor {
         batch: usize,
         mode: OutputMode,
     ) -> Result<Ciphertext> {
+        self.infer_encrypted_inner(variant, tenant, cts, params_hash, batch, mode, None)
+    }
+
+    fn infer_encrypted_with_refresh(
+        &self,
+        variant: &str,
+        tenant: &str,
+        cts: &[Ciphertext],
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+    ) -> Result<Ciphertext> {
+        self.infer_encrypted_inner(variant, tenant, cts, params_hash, batch, mode, rounds)
+    }
+}
+
+impl WireExecutor {
+    /// Shared body of the two encrypted entry points: ingress checks,
+    /// session lookup, residue scan, then plan execution — interactive
+    /// through the request's [`RefreshSource`] when the serving plan
+    /// carries refresh cut points (DESIGN.md S21), straight-line
+    /// otherwise.
+    #[allow(clippy::too_many_arguments)]
+    fn infer_encrypted_inner(
+        &self,
+        variant: &str,
+        tenant: &str,
+        cts: &[Ciphertext],
+        params_hash: Option<u64>,
+        batch: usize,
+        mode: OutputMode,
+        rounds: Option<Arc<dyn RefreshSource>>,
+    ) -> Result<Ciphertext> {
         // the requested mode must be the one the serving plans were
         // compiled for: a silent substitution would hand the client a
         // ciphertext whose slots mean something else than it asked for
@@ -304,7 +359,33 @@ impl InferenceExecutor for WireExecutor {
                 .all(|ct| ct.c0.is_reduced(&entry.engine.ctx) && ct.c1.is_reduced(&entry.engine.ctx)),
             "request ciphertext residues are not reduced modulo the chain"
         );
-        let ct = session.prepared.execute(&entry.engine, cts, self.threads)?;
+        let ct = if session.prepared.plan.has_refresh() {
+            let src = rounds.ok_or_else(|| {
+                anyhow!(
+                    "variant {variant}'s serving plan carries {} refresh cut \
+                     point(s) but the request did not open an interactive \
+                     session (resend with --allow-refresh)",
+                    session.prepared.plan.counts.refresh
+                )
+            })?;
+            // fork the mask stream instead of holding the lock across the
+            // round trips — interactive requests must not serialize on
+            // each other's client latency
+            let mut rng = {
+                let mut shared = self.mask_rng.lock().unwrap();
+                crate::util::Rng::seed_from_u64(shared.next_u64())
+            };
+            let (ct, _stats) = session.prepared.execute_with_refresh(
+                &entry.engine,
+                cts,
+                self.threads,
+                src.as_ref(),
+                &mut rng,
+            )?;
+            ct
+        } else {
+            session.prepared.execute(&entry.engine, cts, self.threads)?
+        };
         // decision accounting mirrors HeExecutor: sign-stage volume plus
         // one per-mode request count (DESIGN.md S20)
         if !matches!(mode, OutputMode::Logits) {

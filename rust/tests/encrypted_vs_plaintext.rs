@@ -109,3 +109,62 @@ fn test_unfused_baseline_matches_plaintext() {
     // CryptoGCN-style unfused activations: more levels, same numerics
     run_case(&tiny_model(5), false, 2e-2);
 }
+
+/// The refresh differential (ISSUE 10 satellite; DESIGN.md S21): the same
+/// deep variant served monolithically on its full chain and
+/// refresh-compiled on a chain two levels short must *both* track the
+/// plaintext reference and agree on the decision — proving the masked
+/// round trips buy depth without buying error.
+#[test]
+fn test_refresh_compiled_deep_variant_matches_plaintext() {
+    use lingcn::he_infer::PlanOptions;
+
+    let model = tiny_model(6);
+    let probe = HeStgcn::new(
+        &model,
+        AmaLayout::new(model.t, model.c_max().max(model.num_classes()), 1 << 10).unwrap(),
+    )
+    .unwrap();
+    let levels = probe.levels_needed().unwrap();
+    let n_in = model.v() * model.c_in * model.t;
+    let x: Vec<f64> = (0..n_in)
+        .map(|i| ((i * 37 % 101) as f64 - 50.0) / 80.0)
+        .collect();
+    let want = model.forward(&x).unwrap();
+
+    // the monolithic run at full depth — the refresh run's encrypted peer
+    let full = PrivateInferenceSession::new(&model, toy_params(levels), 2024).unwrap();
+    let input = full.encrypt_input(&model, &x).unwrap();
+    let mono = full.decrypt_logits(&model, &full.infer_parallel(&input, 1).unwrap());
+
+    // the refresh run: a chain two levels short of the plan's depth, the
+    // deficit bought back with masked client round trips
+    let opts =
+        PlanOptions { allow_refresh: true, max_refresh_rounds: 4, ..Default::default() };
+    let short =
+        PrivateInferenceSession::new_with_options(&model, toy_params(levels - 2), 2024, opts)
+            .unwrap();
+    assert!(short.plan.has_refresh(), "the short chain must engage refresh");
+    let input = short.encrypt_input(&model, &x).unwrap();
+    let (ct, stats) = short.infer_parallel_refresh(&input, 1).unwrap();
+    assert!(stats.rounds >= 1, "the deficit must cost at least one round");
+    assert_eq!(stats.rounds, short.plan.refresh_rounds());
+    let got = short.decrypt_logits(&model, &ct);
+
+    let max_mag = want.iter().fold(0.0f64, |m, v| m.max(v.abs())).max(1e-3);
+    let argmax = |v: &[f64]| {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() / max_mag < 2e-2,
+            "logit {i}: refreshed {g} vs plaintext {w}"
+        );
+    }
+    assert_eq!(argmax(&got), argmax(&want), "refreshed argmax must match plaintext");
+    assert_eq!(argmax(&got), argmax(&mono), "refreshed argmax must match the monolithic run");
+}

@@ -22,7 +22,7 @@ use lingcn::ckks::Ciphertext;
 use lingcn::coordinator::{
     Coordinator, InferenceExecutor, KeyRegistry, Metrics, ModelVariant, Router,
 };
-use lingcn::he_infer::{Decision, OutputMode, PlanOptions};
+use lingcn::he_infer::{Decision, OutputMode, PlanOptions, SgnPreset};
 use lingcn::stgcn::StgcnModel;
 use lingcn::wire::net::Client;
 use lingcn::wire::{keygen, CoordinatorBackend, CtBundle, NetConfig, NetServer, WireExecutor};
@@ -250,6 +250,101 @@ fn test_loopback_argmax_decision_matches_plaintext() {
     drop(conn);
     server.shutdown();
     assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+    assert!(metrics.sign_stages.load(Ordering::Relaxed) > 0, "sign-stage metric must tick");
+    assert_eq!(metrics.decisions_argmax.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);
+}
+
+/// The ISSUE's acceptance scenario on the wire tier (DESIGN.md S21): a
+/// Precise-preset argmax plan that cannot fit the refresh-capped chain
+/// monolithically — exactly the shape that used to die at compile with
+/// "insufficient levels for output mode argmax" — compiles under
+/// `--allow-refresh`, executes end-to-end over loopback TCP with at
+/// least one *real* refresh round (server masks the cut point, client
+/// decrypts and re-encrypts at top level), and the decrypted decision
+/// matches the plaintext winner. The trusted-tier sibling is
+/// `test_session_serves_refresh_plan_via_local_source` in
+/// `he_infer::exec`.
+#[test]
+#[cfg_attr(debug_assertions, ignore = "real CKKS refresh rounds: run in release (ci.sh)")]
+fn test_loopback_refresh_rounds_argmax_matches_plaintext() {
+    let model = tiny_model(6);
+    let picked = widest_margin_clip(&model, 64);
+    // Precise is the deepest preset; any certifiable fixture clip is
+    // comfortably inside its error envelope
+    assert!(
+        certifying_preset(picked.margin, picked.bound).is_some(),
+        "no sign preset certifies the widest-margin fixture clip"
+    );
+    let preset = SgnPreset::Precise;
+    let mode = OutputMode::Argmax;
+
+    // the serving stack, compiled for Precise argmax with refresh on
+    let metrics = Arc::new(Metrics::default());
+    let registry = Arc::new(KeyRegistry::with_metrics(16, Some(metrics.clone())));
+    let mut models = HashMap::new();
+    models.insert("v".to_string(), model.clone());
+    let menu = vec![ModelVariant { name: "v".into(), nl: 0, latency_s: 1.0, accuracy: 0.9 }];
+    let mut executor = WireExecutor::new(models, 2, registry);
+    executor.set_metrics(metrics.clone());
+    executor.set_output_mode(mode, preset, picked.bound);
+    executor.set_refresh(true, 8);
+    let executor = Arc::new(executor);
+    let dyn_exec: Arc<dyn InferenceExecutor> = executor.clone();
+    let coord = Coordinator::start_with_metrics(
+        Router::new(menu),
+        dyn_exec,
+        metrics.clone(),
+        2,
+        8,
+        Duration::from_millis(2),
+    );
+    let backend = Arc::new(CoordinatorBackend::new(executor, coord));
+    let server = NetServer::bind("127.0.0.1:0", backend, metrics.clone(), NetConfig::default())
+        .expect("binding 127.0.0.1:0 must succeed");
+    let addr = server.local_addr().to_string();
+
+    // client keys compiled with the *same* refresh + decision options:
+    // keygen routes through session_geometry, so the chain comes out
+    // capped at REFRESH_CHAIN_CAP just like the server's
+    let mut opts = PlanOptions {
+        output_mode: mode,
+        sgn_preset: preset,
+        allow_refresh: true,
+        max_refresh_rounds: 8,
+        ..Default::default()
+    };
+    opts.set_logit_bound(picked.bound);
+    let (keys, key_set) = keygen(&model, "v", opts, 77).unwrap();
+    let bundle = keys.encrypt_request(&picked.clip).unwrap().with_mode(mode);
+
+    let mut conn = Client::connect_with(&addr, "alice", Duration::from_secs(600)).unwrap();
+    conn.register(&key_set).unwrap();
+    let (out, rounds_served) = conn.infer_with_refresh(Some("v"), &bundle, &keys, 8).unwrap();
+    assert_eq!(out.variant, "v");
+    assert!(
+        rounds_served >= 1,
+        "Precise argmax on the capped chain must need at least one refresh round"
+    );
+    let got = keys.decrypt_decision(&out.ct_logits, mode).unwrap();
+    assert_eq!(
+        got,
+        Decision::Argmax(lingcn::util::argmax(&picked.logits)),
+        "refreshed encrypted argmax over TCP must match the plaintext winner \
+         (margin {:.3}, bound {:.3}, {} round(s))",
+        picked.margin,
+        picked.bound,
+        rounds_served
+    );
+    drop(conn);
+    server.shutdown();
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        metrics.refresh_rounds.load(Ordering::Relaxed),
+        rounds_served as u64,
+        "the wire tier's round metric must match what the client served"
+    );
+    assert!(metrics.refresh_wait_us.load(Ordering::Relaxed) > 0);
     assert!(metrics.sign_stages.load(Ordering::Relaxed) > 0, "sign-stage metric must tick");
     assert_eq!(metrics.decisions_argmax.load(Ordering::Relaxed), 1);
     assert_eq!(metrics.net_conns_active.load(Ordering::Relaxed), 0);

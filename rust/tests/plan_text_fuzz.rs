@@ -1,5 +1,5 @@
 //! Plan-text fuzz corpus (ISSUE 5 satellite; DESIGN.md S17): malformed,
-//! truncated and bit-flipped v1–v4 plan texts through
+//! truncated and bit-flipped v1–v5 plan texts through
 //! `HePlan::from_text` must **error** — never panic, never over-allocate
 //! from an unvalidated length field — mirroring the wire codec's
 //! corruption-corpus style (`wire_roundtrip.rs`).
@@ -9,7 +9,10 @@
 //! inside a mask value) is rejected. v1/v2 (no checksum) reject through
 //! structural and replay validation. v4 (ISSUE 9) adds the `decision`
 //! line; forged decision lines that survive the checksum must still
-//! reject typed through tag validation and `sgn::check_mode`.
+//! reject typed through tag validation and `sgn::check_mode`. v5
+//! (DESIGN.md S21) adds `op refresh` lines and the trailing `refresh`
+//! counts counter — both version-gated, so a v4 header smuggling either
+//! must error typed.
 
 mod common;
 
@@ -20,9 +23,10 @@ use lingcn::he_infer::{compile, HePlan, HeStgcn, OutputMode, PlanChain, PlanOpti
 use lingcn::util::Rng;
 
 /// The corpus seeds: a raw single-clip plan, an optimized plan (groups +
-/// pass lines), an optimized batched plan (wrap rotations), and an
-/// argmax decision plan (sign chains + product tree, `decision` line
-/// with a non-default mode).
+/// pass lines), an optimized batched plan (wrap rotations), an argmax
+/// decision plan (sign chains + product tree, `decision` line with a
+/// non-default mode), and a refresh plan (v5 text: `op refresh` lines +
+/// the trailing `refresh` counts counter).
 fn corpus() -> Vec<(String, String)> {
     let (_, model) = variants(1).remove(0);
     let layout = AmaLayout::new(8, 4, 256).unwrap();
@@ -49,21 +53,36 @@ fn corpus() -> Vec<(String, String)> {
         )
         .unwrap()
     };
+    let refresh = {
+        // a chain one level short of the plan's depth: compile schedules
+        // exactly one client-aided cut point, so the text is v5
+        let short = PlanChain::ideal(probe_levels(&model, 256) - 1, 33);
+        compile(
+            &model,
+            layout,
+            &short,
+            PlanOptions { allow_refresh: true, max_refresh_rounds: 4, ..Default::default() },
+        )
+        .unwrap()
+    };
     vec![
         ("raw".into(), raw.to_text()),
         ("optimized".into(), opt.to_text()),
         ("batched".into(), batched.to_text()),
         ("decision".into(), decision.to_text()),
+        ("refresh".into(), refresh.to_text()),
     ]
 }
 
 /// Downgrade a v4 text into the version window: strips the `decision`
 /// line (a v4 feature); for v1/v2 additionally drops meta tokens,
 /// truncates the counts arity and bares the `end` line; v3 keeps the
-/// full arity and re-checksums. Downgraded *logits* plans must parse
-/// losslessly, pinning the window.
+/// v4 arity (full minus the v5 `refresh` counter) and re-checksums.
+/// Downgraded *logits* plans must parse losslessly, pinning the window.
 fn downgrade(text: &str, version: usize) -> String {
-    let old_arity = OpCounts::field_names().len() - 3;
+    // v1/v2 predate the three S17 rotation-path counters *and* the v5
+    // refresh counter — mirror plan.rs's stored_counts_arity tiering
+    let old_arity = OpCounts::field_names().len() - 4;
     let mut body = String::new();
     for line in text.lines() {
         if line.starts_with("decision ") || line.starts_with("end") {
@@ -271,8 +290,46 @@ fn fuzz_old_versions_reject_new_features() {
     let degraded = opt_text.replace("heplan v4", "heplan v3");
     let err = HePlan::from_text(&degraded).unwrap_err().to_string();
     assert!(err.contains("decision lines are a v4 feature"), "untyped error: {err}");
-    // unknown future version
+    // a bare relabel to v5 must still die: the v4 counts arity lacks the
+    // refresh counter v5 stores (and the checksum covers the header)
     assert!(HePlan::from_text(&opt_text.replace("heplan v4", "heplan v5")).is_err());
+    // unknown future version
+    assert!(HePlan::from_text(&opt_text.replace("heplan v4", "heplan v6")).is_err());
+}
+
+/// The v5 gate (DESIGN.md S21): a refresh plan's text declares v5 and
+/// roundtrips; the same op list smuggled under a v4 header — pass lines
+/// dropped and the counts arity trimmed so the text is otherwise
+/// well-formed, re-checksummed so the parse reaches the op line itself —
+/// must reject typed on the `op refresh` line, never load a plan the
+/// straight-line executor would then trip over.
+#[test]
+fn fuzz_refresh_ops_are_version_gated() {
+    let (_, rtext) = corpus().remove(4);
+    assert!(rtext.starts_with("heplan v5\n"), "refresh corpus must serialize as v5");
+    let plan = HePlan::from_text(&rtext).unwrap();
+    assert!(plan.has_refresh());
+    assert_eq!(plan.refresh_rounds(), plan.predicted_refresh_rounds());
+
+    let mut body = String::new();
+    for line in rtext.lines() {
+        if line.starts_with("end") || line.starts_with("pass ") {
+            continue;
+        }
+        if line == "heplan v5" {
+            body.push_str("heplan v4");
+        } else if let Some(rest) = line.strip_prefix("counts ") {
+            let toks: Vec<&str> = rest.split_whitespace().collect();
+            body.push_str(&format!("counts {}", toks[..toks.len() - 1].join(" ")));
+        } else {
+            body.push_str(line);
+        }
+        body.push('\n');
+    }
+    let sum = lingcn::util::fnv1a_bytes(body.as_bytes());
+    let smuggled = format!("{body}end {sum:016x}\n");
+    let err = HePlan::from_text(&smuggled).unwrap_err().to_string();
+    assert!(err.contains("refresh ops are a v5 feature"), "untyped error: {err}");
 }
 
 /// Forged `decision` lines that *survive the checksum* (the line is
